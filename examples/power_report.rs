@@ -1,0 +1,62 @@
+//! Power-model walkthrough: regenerate the paper's measurement story
+//! (Table 1, Observations 1 & 2, the unsigned save, Eq. 13) from the
+//! toggle simulators and analytic models.
+//!
+//! ```sh
+//! cargo run --release --example power_report
+//! ```
+
+use pann::bitflip::{BoothMultiplier, Dist, MacUnit, Sampler};
+use pann::power::model::*;
+use pann::util::Rng;
+
+fn main() {
+    let n = 20_000;
+    println!("== measured toggles per signed MAC (B = 32) vs the paper's model ==");
+    println!("{:<4} {:>12} {:>12} {:>12} {:>10}", "b", "measured", "model", "acc-input", "0.5B");
+    for b in [2u32, 4, 6, 8] {
+        let mut mac = MacUnit::new(BoothMultiplier::new(b, true), 32);
+        let mut rng = Rng::new(1);
+        let mut sw = Sampler::new(Dist::UniformSigned(b), n, &mut rng);
+        let mut sx = Sampler::new(Dist::UniformSigned(b), n, &mut rng);
+        let (mut total, mut acc_in) = (0u64, 0u64);
+        for i in 0..n {
+            if i % 256 == 0 {
+                mac.clear_acc();
+            }
+            let t = mac.mac(sw.next(), sx.next());
+            total += t.paper_total();
+            acc_in += t.acc_input;
+        }
+        let model = mac_power_signed(b, 32).total();
+        println!(
+            "{b:<4} {:>12.1} {:>12.1} {:>12.1} {:>10.1}",
+            total as f64 / n as f64,
+            model,
+            acc_in as f64 / n as f64,
+            16.0
+        );
+    }
+
+    println!("\n== Observation 1: switching to unsigned arithmetic ==");
+    for b in [2u32, 4, 8] {
+        let s = mac_power_signed(b, 32).total();
+        let u = mac_power_unsigned(b).total();
+        println!("b={b}: signed {s:>5.1} -> unsigned {u:>5.1} flips/MAC  (save {:.0}%)", 100.0 * (1.0 - u / s));
+    }
+
+    println!("\n== Observation 2: the multiplier ignores the smaller width ==");
+    for bw in [2u32, 4, 8] {
+        println!("bw={bw}, bx=8: P_mult = {:.1} flips", mult_power_mixed_signed(bw, 8));
+    }
+
+    println!("\n== PANN (Eq. 13): equal-power menu of a 4-bit unsigned MAC ==");
+    let p = mac_power_unsigned_total(4);
+    for bt in 2..=8u32 {
+        if let Some(r) = pann::power::budget::equal_power_r(p, bt) {
+            if r > 0.0 {
+                println!("b̃x={bt}: R={r:.2} additions/element -> {:.1} flips", pann_power_per_element(r, bt));
+            }
+        }
+    }
+}

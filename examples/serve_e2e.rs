@@ -1,0 +1,123 @@
+//! End-to-end serving driver (the EXPERIMENTS.md validation run).
+//!
+//! Proves all three layers compose: JAX+Pallas AOT artifacts (L1+L2,
+//! built once by `make artifacts`) are loaded by the Rust PJRT runtime
+//! and served by the power-budget coordinator (L3) — Python never runs
+//! here. The driver replays the test set as a request stream, then
+//! *changes the energy budget at runtime* and shows the coordinator
+//! hopping between operating points, reporting accuracy, latency
+//! percentiles, throughput and energy for each phase.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example serve_e2e
+//! ```
+
+use pann::coordinator::{EnginePoint, Server, ServerConfig};
+use pann::data::Dataset;
+use pann::runtime::{ArtifactManifest, CpuRuntime};
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    let model = std::env::args().nth(1).unwrap_or_else(|| "cnn-s".to_string());
+    let artifacts = std::path::PathBuf::from("artifacts");
+    let manifest = ArtifactManifest::load(&artifacts.join("hlo"))
+        .map_err(|e| anyhow::anyhow!("{e:#}\nhint: run `make artifacts` first"))?;
+    let specs: Vec<_> = manifest.points_for(&model).into_iter().cloned().collect();
+    anyhow::ensure!(!specs.is_empty(), "no executables for {model}");
+    let sample_len: usize = specs[0].input_shape[1..].iter().product();
+
+    let srv = Server::start(
+        move || {
+            let rt = CpuRuntime::new()?;
+            eprintln!("PJRT platform: {}", rt.platform());
+            let mut points = Vec::new();
+            for spec in &specs {
+                let lm = rt.load(&spec.file, &spec.input_shape)?;
+                eprintln!(
+                    "  loaded {:<12} ({:.5} Gflips/sample)",
+                    spec.variant, spec.giga_flips_per_sample
+                );
+                points.push(EnginePoint {
+                    name: spec.variant.clone(),
+                    giga_flips_per_sample: if spec.variant == "fp32" {
+                        f64::INFINITY
+                    } else {
+                        spec.giga_flips_per_sample
+                    },
+                    engine: Box::new(lm),
+                });
+            }
+            Ok(points)
+        },
+        sample_len,
+        ServerConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+            budget_gflips: f64::INFINITY,
+        },
+    )?;
+    let h = srv.handle();
+
+    let ds_name = pann::experiments::dataset_for(&model);
+    let ds = Dataset::load(&artifacts.join("data").join(ds_name), "test")?;
+    let n_phase = 256.min(ds.len());
+
+    // Three budget phases: unlimited (fp32), generous (8-bit PANN
+    // budget), tight (2-bit budget). The menu never reloads — only the
+    // (b̃x, R) operating point changes, the paper's deployment claim.
+    let macs = pann::experiments::qat::num_macs(&model) as f64;
+    let phases = [
+        ("unlimited", f64::INFINITY),
+        ("8-bit budget", 64.0 * macs / 1e9),
+        ("2-bit budget", 10.0 * macs / 1e9),
+    ];
+    println!("\nserving {model} over {ds_name}, {n_phase} requests per phase");
+    let clients = 4usize;
+    for (label, budget) in phases {
+        h.set_budget(budget);
+        let t0 = std::time::Instant::now();
+        let correct = std::thread::scope(|s| -> anyhow::Result<usize> {
+            let mut js = Vec::new();
+            for c in 0..clients {
+                let h = h.clone();
+                let ds = &ds;
+                js.push(s.spawn(move || -> anyhow::Result<(usize, String)> {
+                    let mut ok = 0;
+                    let mut point = String::new();
+                    for i in (c..n_phase).step_by(clients) {
+                        let r = h.infer(ds.sample(i).to_vec())?;
+                        let pred = r
+                            .output
+                            .iter()
+                            .enumerate()
+                            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                            .map(|(j, _)| j)
+                            .unwrap_or(0);
+                        if pred == ds.y[i] as usize {
+                            ok += 1;
+                        }
+                        point = r.point;
+                    }
+                    Ok((ok, point))
+                }));
+            }
+            let mut total = 0;
+            let mut point = String::new();
+            for j in js {
+                let (ok, p) = j.join().expect("client panicked")?;
+                total += ok;
+                point = p;
+            }
+            println!(
+                "  phase {label:<14} -> point {point:<10} accuracy {:.3}  ({:.2}s)",
+                total as f64 / n_phase as f64,
+                t0.elapsed().as_secs_f64()
+            );
+            Ok(total)
+        })?;
+        let _ = correct;
+    }
+    println!("\n{}", h.metrics().report());
+    srv.shutdown();
+    Ok(())
+}

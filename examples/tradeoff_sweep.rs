@@ -1,0 +1,69 @@
+//! Fig. 1-style power–accuracy sweep plus the Table 15 trade-off menu:
+//! signed → unsigned → PANN arrows at several budgets, then the whole
+//! 2-bit equal-power curve.
+//!
+//! ```sh
+//! cargo run --release --example tradeoff_sweep
+//! ```
+
+use pann::experiments::Ctx;
+use pann::nn::quantized::Arithmetic;
+use pann::pann::{algorithm1, convert, tradeoff};
+use pann::power::model::mac_power_unsigned_total;
+use pann::quant::ActQuantMethod;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = Ctx::default();
+    let (model, test) = ctx.load_model("cnn-s")?;
+    let test = test.take(384);
+    let calib = convert::calib_tensor(&test, 32);
+
+    println!("== Fig. 1 arrows (per-sample Mflips, accuracy) ==");
+    for bits in [2u32, 4] {
+        let (_, signed) = convert::ptq_baseline(
+            &model,
+            bits,
+            ActQuantMethod::Aciq,
+            Arithmetic::SignedMac { acc_bits: 32 },
+            Some(&calib),
+            &test,
+        )?;
+        let (_, unsigned) =
+            convert::unsigned_of(&model, bits, ActQuantMethod::Aciq, Some(&calib), &test)?;
+        let p = mac_power_unsigned_total(bits);
+        let op = algorithm1::choose_operating_point(
+            &model,
+            p,
+            ActQuantMethod::Aciq,
+            Some(&calib),
+            &test.take(96),
+            2..=8,
+        )?;
+        let (_, ours) =
+            convert::pann_at_budget(&model, op.bx_tilde, op.r, ActQuantMethod::Aciq, Some(&calib), &test)?;
+        let per = |g: f64| 1000.0 * g / test.len() as f64;
+        println!(
+            "{bits}-bit: signed ({:.3}, {:.3}) --left--> unsigned ({:.3}, {:.3}) --up--> PANN ({:.3}, {:.3})",
+            per(signed.giga_flips),
+            signed.accuracy(),
+            per(unsigned.giga_flips),
+            unsigned.accuracy(),
+            per(ours.giga_flips),
+            ours.accuracy(),
+        );
+    }
+
+    println!("\n== Table 15: the 2-bit equal-power curve ==");
+    let rows = tradeoff::budget_curve_table(&model, 2, ActQuantMethod::Aciq, Some(&calib), &test, 2..=8)?;
+    println!(
+        "{:<5} {:>10} {:>5} {:>9} {:>9} {:>9}",
+        "b̃x", "R(=lat)", "b_R", "act-mem", "w-mem", "accuracy"
+    );
+    for r in rows {
+        println!(
+            "{:<5} {:>10.2} {:>5} {:>9.2} {:>9.2} {:>9.3}",
+            r.bx_tilde, r.r, r.b_r, r.act_mem_factor, r.weight_mem_factor, r.accuracy
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,223 @@
+"""AOT lowering: PANN serving graphs -> HLO text for the Rust runtime.
+
+For each trained model and each power budget, the Alg.-1 operating
+point (b̃x, R) is materialized as a self-contained inference function:
+PANN weight codes (Eq. 12) baked as constants in W+/W- split form, the
+Pallas `quantized_linear` kernel on every MAC layer, jnp glue for
+relu/pool/add. Lowered once to HLO *text* (not serialized proto — the
+image's xla_extension 0.5.1 rejects jax>=0.5's 64-bit ids; see
+/opt/xla-example/README.md) and loaded by rust/src/runtime/.
+
+Usage: python -m compile.aot --out ../artifacts/hlo [--models cnn-s,mlp]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .kernels.pann_matmul import quantized_linear
+from .quantize import im2col, pann_quantize_np
+from .tensor_io import read_tensor
+
+BATCH = 8
+
+# ACIQ Gaussian clip multipliers for bits 2..8 (mirrors rust aciq.rs).
+GAUSS_ALPHA = {2: 1.71, 3: 2.15, 4: 2.55, 5: 2.93, 6: 3.28, 7: 3.61, 8: 3.92}
+
+# Alg.-1 operating points per unsigned-MAC power budget (Table 14):
+# budget bits -> (b̃x, R = P/b̃x - 0.5)
+TABLE14_POINTS = {2: (6, 10 / 6 - 0.5), 3: (6, 16.5 / 6 - 0.5), 4: (7, 24 / 7 - 0.5),
+                  5: (8, 32.5 / 8 - 0.5), 6: (8, 42 / 8 - 0.5), 8: (8, 64 / 8 - 0.5)}
+
+
+def act_scale_from_stats(stats: dict, bits: int) -> float:
+    """Data-free activation scale (mirrors rust BnStats::fit_activations)."""
+    alpha = GAUSS_ALPHA[max(2, min(8, bits))]
+    clip = max(
+        max((m + alpha * s) for m, s in zip(stats["mean"], stats["std"])), 1e-6
+    )
+    return clip / (2.0**bits - 1.0)
+
+
+def load_model(models_dir: Path, name: str):
+    d = models_dir / name
+    manifest = json.loads((d / "manifest.json").read_text())
+    weights = {}
+    for i, l in enumerate(manifest["layers"]):
+        if l["op"] in ("conv", "linear"):
+            weights[i] = (
+                read_tensor(d / l["w"]).astype(np.float32),
+                read_tensor(d / l["b"]).astype(np.float32),
+            )
+    return manifest, weights
+
+
+def build_pann_fn(manifest: dict, weights: dict, bx: int, r: float):
+    """Inference function with PANN codes baked in. Returns (fn, meta)."""
+    layers = manifest["layers"]
+    stats = manifest["act_stats"]
+    qmax = 2**bx - 1
+    baked = {}
+    total_l1 = 0.0
+    total_elems = 0
+    for i, (w, b) in weights.items():
+        codes, gamma, adds = pann_quantize_np(w, r)
+        pos = np.maximum(codes, 0).astype(np.int32)
+        neg = np.maximum(-codes, 0).astype(np.int32)
+        src = layers[i].get("input", i - 1)
+        if src == -1:
+            x_scale = 1.0 / qmax  # inputs are in [0,1] by the data contract
+        else:
+            x_scale = act_scale_from_stats(stats[str(src)], bx)
+        baked[i] = dict(pos=pos, neg=neg, gamma=gamma, x_scale=float(x_scale), bias=b, adds=adds)
+        total_l1 += adds * codes.size
+        total_elems += codes.size
+
+    def fn(x):
+        outs = []
+        for i, l in enumerate(layers):
+            src = l.get("input", i - 1)
+            inp = x if src == -1 else outs[src]
+            op = l["op"]
+            if op == "conv":
+                bk = baked[i]
+                co = bk["bias"].shape[0]
+                k = int(np.sqrt(bk["pos"].shape[0] * 0 + 1))  # placeholder
+                kk = l.get("k", 3)
+                rows, (n, oh, ow) = im2col(inp, kk, l["stride"], l["pad"])
+                wp = jnp.asarray(bk["pos"].reshape(co, -1))
+                wn = jnp.asarray(bk["neg"].reshape(co, -1))
+                y = quantized_linear(
+                    rows, wp, wn, bk["x_scale"], qmax, bk["gamma"], jnp.asarray(bk["bias"])
+                )
+                y = y.reshape(n, oh, ow, co).transpose(0, 3, 1, 2)
+            elif op == "linear":
+                bk = baked[i]
+                y = quantized_linear(
+                    inp,
+                    jnp.asarray(bk["pos"]),
+                    jnp.asarray(bk["neg"]),
+                    bk["x_scale"],
+                    qmax,
+                    bk["gamma"],
+                    jnp.asarray(bk["bias"]),
+                )
+            elif op == "relu":
+                y = jax.nn.relu(inp)
+            elif op == "maxpool":
+                kk = l["k"]
+                y = jax.lax.reduce_window(inp, -jnp.inf, jax.lax.max, (1, 1, kk, kk), (1, 1, kk, kk), "VALID")
+            elif op == "gap":
+                y = inp.mean(axis=(2, 3))
+            elif op == "flatten":
+                y = inp.reshape(inp.shape[0], -1)
+            elif op == "add":
+                y = inp + outs[l["rhs"]]
+            else:
+                raise ValueError(op)
+            outs.append(y)
+        return (outs[-1],)
+
+    r_achieved = total_l1 / max(total_elems, 1)
+    return fn, r_achieved
+
+
+def build_fp32_fn(manifest: dict, weights: dict):
+    layers = manifest["layers"]
+
+    def fn(x):
+        outs = []
+        for i, l in enumerate(layers):
+            src = l.get("input", i - 1)
+            inp = x if src == -1 else outs[src]
+            op = l["op"]
+            if op == "conv":
+                w, b = weights[i]
+                y = jax.lax.conv_general_dilated(
+                    inp, jnp.asarray(w), (l["stride"], l["stride"]),
+                    [(l["pad"], l["pad"])] * 2, dimension_numbers=("NCHW", "OIHW", "NCHW"),
+                ) + jnp.asarray(b)[None, :, None, None]
+            elif op == "linear":
+                w, b = weights[i]
+                y = inp @ jnp.asarray(w).T + jnp.asarray(b)
+            elif op == "relu":
+                y = jax.nn.relu(inp)
+            elif op == "maxpool":
+                kk = l["k"]
+                y = jax.lax.reduce_window(inp, -jnp.inf, jax.lax.max, (1, 1, kk, kk), (1, 1, kk, kk), "VALID")
+            elif op == "gap":
+                y = inp.mean(axis=(2, 3))
+            elif op == "flatten":
+                y = inp.reshape(inp.shape[0], -1)
+            elif op == "add":
+                y = inp + outs[l["rhs"]]
+            else:
+                raise ValueError(op)
+            outs.append(y)
+        return (outs[-1],)
+
+    return fn
+
+
+def to_hlo_text(fn, input_shape) -> str:
+    spec = jax.ShapeDtypeStruct((BATCH, *input_shape), jnp.float32)
+    lowered = jax.jit(fn).lower(spec)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # as_hlo_text() elides large constants as "{...}", which the xla
+    # 0.5.1 text parser silently turns into zeros — print them fully.
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # the 0.5.1 parser rejects newer metadata attrs (source_end_line…)
+    opts.print_metadata = False
+    return comp.as_hlo_module().to_string(opts)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/hlo")
+    ap.add_argument("--models-dir", default="../artifacts/models")
+    ap.add_argument("--models", default="cnn-s,mlp")
+    args = ap.parse_args()
+    out = Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    entries = []
+    for name in args.models.split(","):
+        manifest, weights = load_model(Path(args.models_dir), name)
+        num_macs = manifest["num_macs"]
+        # fp32 reference executable
+        text = to_hlo_text(build_fp32_fn(manifest, weights), manifest["input"])
+        f = f"{name}_fp32.hlo.txt"
+        (out / f).write_text(text)
+        entries.append(dict(model=name, variant="fp32", file=f, batch=BATCH,
+                            input=manifest["input"], giga_flips_per_sample=0.0))
+        print(f"wrote {f} ({len(text)} chars)")
+        # PANN operating points
+        for budget_bits, (bx, r) in TABLE14_POINTS.items():
+            fn, r_achieved = build_pann_fn(manifest, weights, bx, r)
+            text = to_hlo_text(fn, manifest["input"])
+            f = f"{name}_p{budget_bits}.hlo.txt"
+            (out / f).write_text(text)
+            per_elem = (r_achieved + 0.5) * bx
+            entries.append(dict(
+                model=name, variant=f"pann-p{budget_bits}", file=f, batch=BATCH,
+                budget_bits=budget_bits, bx_tilde=bx, r=r, r_achieved=r_achieved,
+                input=manifest["input"],
+                giga_flips_per_sample=per_elem * num_macs / 1e9,
+            ))
+            print(f"wrote {f} (b̃x={bx} R={r:.2f} achieved {r_achieved:.2f})")
+    (out / "manifest.json").write_text(json.dumps({"executables": entries}, indent=1))
+    print(f"wrote {out}/manifest.json with {len(entries)} executables")
+
+
+if __name__ == "__main__":
+    main()

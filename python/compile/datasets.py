@@ -1,0 +1,119 @@
+"""Synthetic dataset generation (build-time substitute for the paper's
+ImageNet / CIFAR / MHEALTH corpora — see DESIGN.md substitution table).
+
+All inputs are normalized to [0, 1]: the paper's unsigned-arithmetic
+conversion (Sec. 4) assumes non-negative layer inputs, which holds for
+post-ReLU activations and, by this normalization, for the model input.
+
+Usage: python -m compile.datasets --out ../artifacts/data [--seed 0]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import numpy as np
+
+from .tensor_io import write_tensor
+
+# 4x4 cell glyph masks, loosely seven-segment-like (shared local
+# features across classes). Mirrors rust/src/data/synth.rs in spirit.
+GLYPHS = np.array(
+    [
+        [1, 1, 1, 1, 1, 0, 0, 1, 1, 0, 0, 1, 1, 1, 1, 1],
+        [0, 0, 1, 0, 0, 1, 1, 0, 0, 0, 1, 0, 0, 1, 1, 1],
+        [1, 1, 1, 0, 0, 0, 1, 0, 0, 1, 0, 0, 1, 1, 1, 1],
+        [1, 1, 1, 1, 0, 0, 1, 1, 0, 0, 0, 1, 1, 1, 1, 1],
+        [1, 0, 0, 1, 1, 0, 0, 1, 1, 1, 1, 1, 0, 0, 0, 1],
+        [1, 1, 1, 1, 1, 1, 0, 0, 0, 0, 1, 1, 1, 1, 1, 0],
+        [0, 1, 1, 0, 1, 0, 0, 0, 1, 1, 1, 0, 1, 1, 1, 1],
+        [1, 1, 1, 1, 0, 0, 0, 1, 0, 0, 1, 0, 0, 1, 0, 0],
+        [0, 1, 1, 0, 1, 1, 1, 1, 1, 0, 0, 1, 0, 1, 1, 0],
+        [1, 1, 1, 1, 1, 0, 1, 1, 0, 0, 0, 1, 0, 1, 1, 0],
+    ],
+    dtype=np.float32,
+).reshape(10, 4, 4)
+
+
+def digits(n: int, rng: np.random.Generator, noise: float = 0.35) -> tuple[np.ndarray, np.ndarray]:
+    """16x16 single-channel glyph images, 10 classes, values in [0,1]."""
+    y = rng.integers(0, 10, size=n)
+    x = np.zeros((n, 1, 16, 16), dtype=np.float32)
+    yy, xx = np.mgrid[0:16, 0:16]
+    for i in range(n):
+        dy, dx = rng.integers(-2, 3, size=2)
+        gain = 0.45 + 0.55 * rng.random()
+        gy = np.clip(yy - dy, 0, 15) // 4
+        gx = np.clip(xx - dx, 0, 15) // 4
+        img = GLYPHS[y[i]][gy, gx] * gain + noise * rng.standard_normal((16, 16))
+        x[i, 0] = np.clip(img, 0.0, 1.0)
+    return x, y.astype(np.int32)
+
+
+def blobs(n: int, rng: np.random.Generator) -> tuple[np.ndarray, np.ndarray]:
+    """64-d Gaussian mixture, 10 classes, affinely squashed into [0,1]."""
+    dim, classes = 64, 10
+    means = np.random.default_rng(77).standard_normal((classes, dim)).astype(np.float32) * 0.75
+    y = rng.integers(0, classes, size=n)
+    x = means[y] + 2.0 * rng.standard_normal((n, dim)).astype(np.float32)
+    x = np.clip((x + 5.0) / 10.0, 0.0, 1.0)  # [0,1] contract
+    return x.astype(np.float32), y.astype(np.int32)
+
+
+def har(n: int, rng: np.random.Generator) -> tuple[np.ndarray, np.ndarray]:
+    """MHEALTH-like 6-channel x 32-step activity windows, 12 classes."""
+    ch, t, classes = 6, 32, 12
+    y = rng.integers(0, classes, size=n)
+    tt = np.arange(t, dtype=np.float32) / t
+    x = np.zeros((n, ch * t), dtype=np.float32)
+    for i in range(n):
+        c = int(y[i])
+        freq = 0.4 + 0.28 * c
+        amp = 0.55 + 0.1 * (c % 4)
+        phase = rng.random() * 2 * np.pi
+        for cc in range(ch):
+            sig = (
+                amp * np.sin(freq * 2 * np.pi * tt * 4.0 + phase + cc * 0.7)
+                + 0.25 * c / classes
+                + 0.45 * rng.standard_normal(t)
+            )
+            x[i, cc * t : (cc + 1) * t] = sig
+    x = np.clip((x + 2.0) / 4.0, 0.0, 1.0)  # [0,1] contract
+    return x.astype(np.float32), y.astype(np.int32)
+
+
+SPECS = {
+    "digits": (digits, {"train": 12000, "test": 2000, "calib": 64}),
+    "blobs": (blobs, {"train": 8000, "test": 2000, "calib": 64}),
+    "har": (har, {"train": 8000, "test": 2000, "calib": 64}),
+}
+
+
+def generate(out_dir: Path, seed: int = 0) -> None:
+    for name, (fn, splits) in SPECS.items():
+        d = out_dir / name
+        d.mkdir(parents=True, exist_ok=True)
+        meta = {"name": name, "splits": {}}
+        for si, (split, n) in enumerate(splits.items()):
+            rng = np.random.default_rng(seed * 1000 + si * 97 + sum(map(ord, name)))
+            x, y = fn(n, rng)
+            write_tensor(d / f"{split}_x.ptns", x)
+            write_tensor(d / f"{split}_y.ptns", y)
+            meta["splits"][split] = {"n": n, "shape": list(x.shape[1:])}
+        meta["classes"] = int(y.max()) + 1
+        (d / "meta.json").write_text(json.dumps(meta, indent=1))
+        print(f"dataset {name}: {meta['splits']}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/data")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    generate(Path(args.out), args.seed)
+
+
+if __name__ == "__main__":
+    main()

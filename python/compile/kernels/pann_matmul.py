@@ -1,0 +1,119 @@
+"""L1 Pallas kernels: the PANN multiplier-free hot path.
+
+`pann_matmul` is the integer W+/W- split matmul of Sec. 4/5: activation
+codes are loaded into VMEM once per tile and reused for *both* weight
+banks — the kernel-level analog of holding Q_x(x_i) on the accumulator
+input bus for the whole addition burst (Eq. 13) and of the activation
+reuse the paper leans on in App. A.8.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): on real TPU hardware
+the integer products land on the MXU; the *power* story of repeated
+addition is accounted analytically (exactly as the paper does for its
+GPU-run experiments), while the BlockSpec tiling expresses the
+HBM->VMEM schedule. Kernels run with interpret=True: the CPU PJRT
+plugin cannot execute Mosaic custom calls (see /opt/xla-example).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# VMEM-friendly tile sizes. 128 matches the MXU lane width; shapes in
+# this repo are small so most calls use a single tile.
+BM = 128
+BN = 128
+
+
+def _matmul_kernel(x_ref, p_ref, n_ref, o_ref):
+    """One (BM, BN) output tile: acc_pos - acc_neg with a shared x tile."""
+    x = x_ref[...]  # [bm, K] int32 — loaded once, reused for both banks
+    pos = jnp.dot(x, p_ref[...].T, preferred_element_type=jnp.int32)
+    neg = jnp.dot(x, n_ref[...].T, preferred_element_type=jnp.int32)
+    o_ref[...] = pos - neg
+
+
+def _pad_to(a: jax.Array, m0: int, m1: int) -> jax.Array:
+    p0 = (-a.shape[0]) % m0
+    p1 = (-a.shape[1]) % m1
+    if p0 or p1:
+        a = jnp.pad(a, ((0, p0), (0, p1)))
+    return a
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def pann_matmul(xq: jax.Array, wpos: jax.Array, wneg: jax.Array, interpret: bool = True) -> jax.Array:
+    """Integer PANN matmul: `xq @ (wpos - wneg)^T`.
+
+    xq: [M, K] int32 (non-negative codes), wpos/wneg: [N, K] int32.
+    Returns [M, N] int32.
+    """
+    m, k = xq.shape
+    n, k2 = wpos.shape
+    assert k == k2 and wneg.shape == wpos.shape, (xq.shape, wpos.shape, wneg.shape)
+    bm, bn = min(BM, m), min(BN, n)
+    xp = _pad_to(xq.astype(jnp.int32), bm, 1)
+    pp = _pad_to(wpos.astype(jnp.int32), bn, 1)
+    np_ = _pad_to(wneg.astype(jnp.int32), bn, 1)
+    mp, npad = xp.shape[0], pp.shape[0]
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // bm, npad // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, k), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn, k), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, npad), jnp.int32),
+        interpret=interpret,
+    )(xp, pp, np_)
+    return out[:m, :n]
+
+
+def _quantize_kernel(x_ref, o_ref, *, inv_scale: float, qmax: int):
+    q = jnp.rint(x_ref[...] * inv_scale)
+    o_ref[...] = jnp.clip(q, 0.0, float(qmax)).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "qmax", "interpret"))
+def quantize_act(x: jax.Array, scale: float, qmax: int, interpret: bool = True) -> jax.Array:
+    """Unsigned activation quantization kernel: clip(round(x/scale), 0, qmax).
+
+    x: [M, K] f32 -> [M, K] int32 codes.
+    """
+    m, k = x.shape
+    bm = min(BM, m)
+    xp = _pad_to(x, bm, 1)
+    out = pl.pallas_call(
+        functools.partial(_quantize_kernel, inv_scale=1.0 / float(scale), qmax=int(qmax)),
+        grid=(xp.shape[0] // bm,),
+        in_specs=[pl.BlockSpec((bm, k), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, jnp.int32),
+        interpret=interpret,
+    )(xp)
+    return out[:m, :k]
+
+
+def quantized_linear(
+    x: jax.Array,
+    wpos: jax.Array,
+    wneg: jax.Array,
+    x_scale: float,
+    x_qmax: int,
+    w_scale: float,
+    bias: jax.Array,
+    interpret: bool = True,
+) -> jax.Array:
+    """Fused layer: quantize activations -> integer matmul -> dequant+bias.
+
+    The building block `aot.py` lowers for every MAC layer of the
+    serving graph.
+    """
+    xq = quantize_act(x, x_scale, x_qmax, interpret=interpret)
+    acc = pann_matmul(xq, wpos, wneg, interpret=interpret)
+    return acc.astype(jnp.float32) * jnp.float32(x_scale * w_scale) + bias.astype(jnp.float32)

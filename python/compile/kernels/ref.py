@@ -1,0 +1,50 @@
+"""Pure-jnp / numpy oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here; the
+pytest suite asserts allclose (exact, for integer kernels) between the
+two over hypothesis-generated shapes. The Rust engine implements the
+same semantics (rust/src/nn/gemm.rs), so these oracles pin all three
+layers together.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def ref_pann_matmul(xq: np.ndarray, wpos: np.ndarray, wneg: np.ndarray) -> np.ndarray:
+    """Integer PANN matmul with the unsigned W+/W- split.
+
+    xq: [M, K] non-negative int32 activation codes
+    wpos/wneg: [N, K] non-negative int32 weight codes
+    returns [M, N] int32 = xq @ (wpos - wneg)^T
+    """
+    x = xq.astype(np.int64)
+    w = wpos.astype(np.int64) - wneg.astype(np.int64)
+    return (x @ w.T).astype(np.int32)
+
+
+def ref_quantize_act(x: np.ndarray, scale: float, qmax: int) -> np.ndarray:
+    """Unsigned activation quantization: clip(round(x/scale), 0, qmax)."""
+    q = np.rint(x / scale)
+    return np.clip(q, 0, qmax).astype(np.int32)
+
+
+def ref_dequant_bias(acc: np.ndarray, scale: float, bias: np.ndarray) -> np.ndarray:
+    """Dequantize integer accumulators and add a per-column bias."""
+    return acc.astype(np.float32) * np.float32(scale) + bias.astype(np.float32)
+
+
+def ref_quantized_linear(
+    x: np.ndarray,
+    wpos: np.ndarray,
+    wneg: np.ndarray,
+    x_scale: float,
+    x_qmax: int,
+    w_scale: float,
+    bias: np.ndarray,
+) -> np.ndarray:
+    """Full fused reference: quantize -> integer matmul -> dequant+bias."""
+    xq = ref_quantize_act(x, x_scale, x_qmax)
+    acc = ref_pann_matmul(xq, wpos, wneg)
+    return ref_dequant_bias(acc, np.float32(x_scale) * np.float32(w_scale), bias)

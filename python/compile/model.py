@@ -1,0 +1,221 @@
+"""L2: model graphs in JAX.
+
+Architectures are declared as SSA node lists in exactly the format the
+Rust engine loads (rust/src/nn/model.rs), so one spec drives training,
+manifest export and the Rust-side experiments. The forward interpreter
+supports a `mac` hook that QAT methods override (fake-quant, PANN,
+AdderNet, ShiftAddNet — see quantize.py) and the AOT path replaces with
+the Pallas kernels.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Architecture specs (SSA; "input": -1 = model input; default = prev node)
+# ---------------------------------------------------------------------------
+
+ARCHS: dict[str, dict] = {
+    # digits (1x16x16) — stand-in for ResNet-18 rows
+    "cnn-s": {
+        "dataset": "digits",
+        "input": [1, 16, 16],
+        "layers": [
+            {"op": "conv", "co": 8, "ci": 1, "k": 3, "stride": 1, "pad": 1, "input": -1},
+            {"op": "relu"},
+            {"op": "maxpool", "k": 2},
+            {"op": "conv", "co": 16, "ci": 8, "k": 3, "stride": 1, "pad": 1},
+            {"op": "relu"},
+            {"op": "maxpool", "k": 2},
+            {"op": "flatten"},
+            {"op": "linear", "out": 10, "in": 16 * 4 * 4},
+        ],
+    },
+    # digits residual CNN — stand-in for ResNet-50 rows
+    "cnn-r": {
+        "dataset": "digits",
+        "input": [1, 16, 16],
+        "layers": [
+            {"op": "conv", "co": 12, "ci": 1, "k": 3, "stride": 1, "pad": 1, "input": -1},  # 0
+            {"op": "relu"},                                                                  # 1
+            {"op": "conv", "co": 12, "ci": 12, "k": 3, "stride": 1, "pad": 1},               # 2
+            {"op": "relu"},                                                                  # 3
+            {"op": "add", "rhs": 1},                                                         # 4
+            {"op": "maxpool", "k": 2},                                                       # 5
+            {"op": "conv", "co": 24, "ci": 12, "k": 3, "stride": 1, "pad": 1},               # 6
+            {"op": "relu"},                                                                  # 7
+            {"op": "maxpool", "k": 2},                                                       # 8
+            {"op": "flatten"},                                                               # 9
+            {"op": "linear", "out": 10, "in": 24 * 4 * 4},                                   # 10
+        ],
+    },
+    # digits VGG-ish — stand-in for VGG-16bn rows
+    "vgg-t": {
+        "dataset": "digits",
+        "input": [1, 16, 16],
+        "layers": [
+            {"op": "conv", "co": 8, "ci": 1, "k": 3, "stride": 1, "pad": 1, "input": -1},
+            {"op": "relu"},
+            {"op": "conv", "co": 8, "ci": 8, "k": 3, "stride": 1, "pad": 1},
+            {"op": "relu"},
+            {"op": "maxpool", "k": 2},
+            {"op": "conv", "co": 16, "ci": 8, "k": 3, "stride": 1, "pad": 1},
+            {"op": "relu"},
+            {"op": "maxpool", "k": 2},
+            {"op": "flatten"},
+            {"op": "linear", "out": 10, "in": 16 * 4 * 4},
+        ],
+    },
+    # blobs MLP — stand-in for MobileNet-V2 rows (small-MAC regime)
+    "mlp": {
+        "dataset": "blobs",
+        "input": [64],
+        "layers": [
+            {"op": "linear", "out": 96, "in": 64, "input": -1},
+            {"op": "relu"},
+            {"op": "linear", "out": 96, "in": 96},
+            {"op": "relu"},
+            {"op": "linear", "out": 10, "in": 96},
+        ],
+    },
+    # har MLP — MHEALTH substitute
+    "har-mlp": {
+        "dataset": "har",
+        "input": [192],
+        "layers": [
+            {"op": "linear", "out": 64, "in": 192, "input": -1},
+            {"op": "relu"},
+            {"op": "linear", "out": 64, "in": 64},
+            {"op": "relu"},
+            {"op": "linear", "out": 12, "in": 64},
+        ],
+    },
+}
+
+
+def mac_nodes(arch: dict) -> list[int]:
+    """Indices of conv/linear nodes."""
+    return [i for i, l in enumerate(arch["layers"]) if l["op"] in ("conv", "linear")]
+
+
+def init_params(arch: dict, seed: int = 0) -> dict[int, dict[str, jnp.ndarray]]:
+    """He-init weights for every MAC node."""
+    key = jax.random.PRNGKey(seed)
+    params: dict[int, dict[str, jnp.ndarray]] = {}
+    for i in mac_nodes(arch):
+        l = arch["layers"][i]
+        key, k1 = jax.random.split(key)
+        if l["op"] == "conv":
+            shape = (l["co"], l["ci"], l["k"], l["k"])
+            fan_in = l["ci"] * l["k"] * l["k"]
+            b = jnp.zeros((l["co"],), jnp.float32)
+        else:
+            shape = (l["out"], l["in"])
+            fan_in = l["in"]
+            b = jnp.zeros((l["out"],), jnp.float32)
+        w = jax.random.normal(k1, shape, jnp.float32) * math.sqrt(2.0 / fan_in)
+        params[i] = {"w": w, "b": b}
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward interpreter
+# ---------------------------------------------------------------------------
+
+MacFn = Callable[[int, dict, jnp.ndarray, dict[str, jnp.ndarray]], jnp.ndarray]
+
+
+def _conv(x, w, b, stride, pad):
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return y + b[None, :, None, None]
+
+
+def default_mac(i: int, l: dict, x: jnp.ndarray, p: dict[str, jnp.ndarray]) -> jnp.ndarray:
+    """Plain fp32 conv/linear."""
+    if l["op"] == "conv":
+        return _conv(x, p["w"], p["b"], l["stride"], l["pad"])
+    return x @ p["w"].T + p["b"]
+
+
+def forward(arch: dict, params: dict, x: jnp.ndarray, mac: MacFn = default_mac,
+            collect: bool = False):
+    """Interpret the SSA spec. Returns logits, or all node outputs when
+    `collect=True` (activation-statistics capture)."""
+    outs: list[jnp.ndarray] = []
+    for i, l in enumerate(arch["layers"]):
+        src = l.get("input", i - 1)
+        inp = x if src == -1 else outs[src]
+        op = l["op"]
+        if op in ("conv", "linear"):
+            y = mac(i, l, inp, params[i])
+        elif op == "relu":
+            y = jax.nn.relu(inp)
+        elif op == "maxpool":
+            k = l["k"]
+            y = jax.lax.reduce_window(
+                inp, -jnp.inf, jax.lax.max, (1, 1, k, k), (1, 1, k, k), "VALID"
+            )
+        elif op == "gap":
+            y = inp.mean(axis=(2, 3))
+        elif op == "flatten":
+            y = inp.reshape(inp.shape[0], -1)
+        elif op == "add":
+            y = inp + outs[l["rhs"]]
+        else:
+            raise ValueError(f"unknown op {op}")
+        outs.append(y)
+    return outs if collect else outs[-1]
+
+
+def num_macs(arch: dict) -> int:
+    """Total MACs per sample (matches rust Model::num_macs)."""
+    shape = list(arch["input"])
+    total = 0
+    outs: list[list[int]] = []
+    for i, l in enumerate(arch["layers"]):
+        src = l.get("input", i - 1)
+        s = shape if src == -1 else outs[src]
+        op = l["op"]
+        if op == "conv":
+            oh = (s[1] + 2 * l["pad"] - l["k"]) // l["stride"] + 1
+            ow = (s[2] + 2 * l["pad"] - l["k"]) // l["stride"] + 1
+            total += l["co"] * l["ci"] * l["k"] * l["k"] * oh * ow
+            out = [l["co"], oh, ow]
+        elif op == "linear":
+            total += l["out"] * l["in"]
+            out = [l["out"]]
+        elif op == "maxpool":
+            out = [s[0], s[1] // l["k"], s[2] // l["k"]]
+        elif op == "gap":
+            out = [s[0]]
+        elif op == "flatten":
+            out = [int(np.prod(s))]
+        else:  # relu, add
+            out = list(s)
+        outs.append(out)
+    return total
+
+
+def act_stats(arch: dict, params: dict, x: jnp.ndarray) -> dict[int, dict[str, list[float]]]:
+    """Per-node output per-channel mean/std (rust BnStats source)."""
+    outs = forward(arch, params, x, collect=True)
+    stats = {}
+    for i, y in enumerate(outs):
+        y = np.asarray(y)
+        if y.ndim == 4:
+            mean = y.mean(axis=(0, 2, 3))
+            std = y.std(axis=(0, 2, 3))
+        else:
+            mean = y.mean(axis=0)
+            std = y.std(axis=0)
+        stats[i] = {"mean": [float(v) for v in mean], "std": [float(v) for v in std]}
+    return stats

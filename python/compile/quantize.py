@@ -1,0 +1,153 @@
+"""QAT building blocks: STE fake-quant, LSQ, PANN weight quantization,
+AdderNet and ShiftAddNet layers (the paper's Sec. 6 training baselines;
+see DESIGN.md for the substitution notes).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Straight-through rounding
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def ste_round(x):
+    return jnp.rint(x)
+
+
+def _ste_fwd(x):
+    return jnp.rint(x), None
+
+
+def _ste_bwd(_, g):
+    return (g,)
+
+
+ste_round.defvjp(_ste_fwd, _ste_bwd)
+
+
+def fake_quant_unsigned(x, scale, bits):
+    """Unsigned fake quantization with STE (activations after ReLU)."""
+    qmax = 2.0**bits - 1.0
+    q = jnp.clip(ste_round(x / scale), 0.0, qmax)
+    return q * scale
+
+
+def fake_quant_signed(x, scale, bits):
+    """Symmetric signed fake quantization with STE (weights)."""
+    qmax = 2.0 ** (bits - 1) - 1.0
+    q = jnp.clip(ste_round(x / scale), -qmax - 1.0, qmax)
+    return q * scale
+
+
+# ---------------------------------------------------------------------------
+# LSQ — learned step size quantization (Esser et al., 2019)
+# ---------------------------------------------------------------------------
+
+def lsq_init_scale(x, bits, unsigned=False):
+    """LSQ's initialization: 2<|x|>/sqrt(qmax)."""
+    qmax = (2.0**bits - 1.0) if unsigned else (2.0 ** (bits - 1) - 1.0)
+    return 2.0 * jnp.mean(jnp.abs(x)) / jnp.sqrt(qmax) + 1e-9
+
+
+def lsq_quant(x, scale, bits, unsigned):
+    """LSQ fake-quant with the paper's gradient scale on `scale`."""
+    qmax = (2.0**bits - 1.0) if unsigned else (2.0 ** (bits - 1) - 1.0)
+    qmin = 0.0 if unsigned else -qmax - 1.0
+    g = 1.0 / jnp.sqrt(x.size * qmax)
+    s = scale * g + jax.lax.stop_gradient(scale * (1.0 - g))  # grad rescale trick
+    q = jnp.clip(ste_round(x / s), qmin, qmax)
+    return q * s
+
+
+# ---------------------------------------------------------------------------
+# PANN weight quantization (Eq. 12) with STE
+# ---------------------------------------------------------------------------
+
+def pann_gamma(w, r):
+    """gamma_w = ||w||_1 / (R d)."""
+    return jnp.sum(jnp.abs(w)) / (r * w.size) + 1e-12
+
+
+def pann_fake_quant(w, r):
+    """PANN fake quantization (unbounded codes, budgeted L1)."""
+    g = pann_gamma(w, r)
+    return ste_round(w / g) * g
+
+
+def pann_quantize_np(w, r):
+    """Non-differentiable PANN quantization for export (numpy).
+
+    Returns (codes int32, gamma float, adds_per_element float)."""
+    import numpy as np
+
+    w = np.asarray(w, dtype=np.float64)
+    l1 = np.abs(w).sum()
+    gamma = l1 / (r * w.size) if l1 > 0 else 1.0
+    codes = np.rint(w / gamma).astype(np.int64)
+    adds = np.abs(codes).sum() / w.size
+    return codes.astype(np.int32), float(gamma), float(adds)
+
+
+# ---------------------------------------------------------------------------
+# AdderNet (Chen et al., 2020): y_j = -sum_i |x_i - w_ji|
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def adder_dense(x, w):
+    """x: [M, K], w: [N, K] -> [M, N] = -sum_k |x - w| (L1 similarity)."""
+    return -jnp.sum(jnp.abs(x[:, None, :] - w[None, :, :]), axis=-1)
+
+
+def _adder_fwd(x, w):
+    return adder_dense(x, w), (x, w)
+
+
+def _adder_bwd(res, g):
+    # AdderNet's gradients: full-precision (x - w) for the weights,
+    # HardTanh-clipped (w - x) for the activations.
+    x, w = res
+    diff = x[:, None, :] - w[None, :, :]  # [M, N, K]
+    gw = jnp.einsum("mn,mnk->nk", g, diff)
+    gx = jnp.einsum("mn,mnk->mk", g, jnp.clip(-diff, -1.0, 1.0))
+    return gx, gw
+
+
+adder_dense.defvjp(_adder_fwd, _adder_bwd)
+
+
+# ---------------------------------------------------------------------------
+# ShiftAddNet (You et al., 2020): power-of-two (shift) layer + adder layer
+# ---------------------------------------------------------------------------
+
+def po2_fake_quant(w, bits):
+    """Round weights to sign * 2^k with STE; k range set by `bits`."""
+    sign = jnp.sign(w)
+    mag = jnp.abs(w) + 1e-12
+    k = jnp.clip(ste_round(jnp.log2(mag)), -(2.0 ** (bits - 1)), 2.0 ** (bits - 1) - 1.0)
+    # STE through the rounding of the exponent
+    po2 = 2.0**k
+    return sign * (mag + jax.lax.stop_gradient(po2 - mag))
+
+
+def im2col(x, k, stride, pad):
+    """[N,C,H,W] -> [N*OH*OW, C*k*k] matching rust/src/nn/gemm.rs."""
+    n, c, h, w = x.shape
+    xp = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+    oh = (h + 2 * pad - k) // stride + 1
+    ow = (w + 2 * pad - k) // stride + 1
+    cols = []
+    for ky in range(k):
+        for kx in range(k):
+            cols.append(
+                jax.lax.dynamic_slice(
+                    xp, (0, 0, ky, kx), (n, c, (oh - 1) * stride + 1, (ow - 1) * stride + 1)
+                )[:, :, ::stride, ::stride]
+            )
+    # [k*k, N, C, OH, OW] -> [N, OH, OW, C, k*k] -> rows
+    stack = jnp.stack(cols, axis=-1)  # [N, C, OH, OW, k*k]
+    stack = stack.transpose(0, 2, 3, 1, 4)  # [N, OH, OW, C, k*k]
+    return stack.reshape(n * oh * ow, c * k * k), (n, oh, ow)

@@ -1,0 +1,58 @@
+"""`.ptns` binary tensor format — Python side of rust/src/data/tensor_io.rs.
+
+Layout (little endian):
+    magic   4 bytes  "PTNS"
+    version 1 byte   (1)
+    dtype   1 byte   0 = f32, 1 = i32, 2 = u8
+    ndim    1 byte
+    pad     1 byte   (0)
+    dims    ndim x u32
+    data    product(dims) x sizeof(dtype)
+"""
+
+from __future__ import annotations
+
+import struct
+from pathlib import Path
+
+import numpy as np
+
+MAGIC = b"PTNS"
+_DTYPES = {0: np.float32, 1: np.int32, 2: np.uint8}
+_CODES = {np.dtype(np.float32): 0, np.dtype(np.int32): 1, np.dtype(np.uint8): 2}
+
+
+def write_tensor(path: str | Path, arr: np.ndarray) -> None:
+    """Write an array (f32 / i32 / u8) as a .ptns file."""
+    arr = np.ascontiguousarray(arr)
+    if arr.dtype not in _CODES:
+        if np.issubdtype(arr.dtype, np.floating):
+            arr = arr.astype(np.float32)
+        elif np.issubdtype(arr.dtype, np.integer):
+            arr = arr.astype(np.int32)
+        else:
+            raise TypeError(f"unsupported dtype {arr.dtype}")
+    code = _CODES[arr.dtype]
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<BBBB", 1, code, arr.ndim, 0))
+        for d in arr.shape:
+            f.write(struct.pack("<I", d))
+        f.write(arr.tobytes())
+
+
+def read_tensor(path: str | Path) -> np.ndarray:
+    """Read a .ptns file back into a numpy array."""
+    raw = Path(path).read_bytes()
+    if raw[:4] != MAGIC:
+        raise ValueError(f"{path}: bad magic")
+    version, code, ndim, _pad = struct.unpack("<BBBB", raw[4:8])
+    if version != 1:
+        raise ValueError(f"{path}: unsupported version {version}")
+    dims = struct.unpack(f"<{ndim}I", raw[8 : 8 + 4 * ndim])
+    dtype = _DTYPES[code]
+    data = np.frombuffer(raw[8 + 4 * ndim :], dtype=dtype)
+    expect = int(np.prod(dims)) if ndim else 1
+    if data.size != expect:
+        raise ValueError(f"{path}: payload {data.size} != {expect}")
+    return data.reshape(dims).copy()

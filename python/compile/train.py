@@ -1,0 +1,318 @@
+"""Build-time training: fp32 reference models + the QAT grid.
+
+Outputs (under --out, default ../artifacts/models):
+  <arch>/manifest.json + *.ptns      fp32 weights + act stats (Rust PTQ input)
+  qat_results.json                   accuracy of every QAT run (Rust tables
+                                     3/4/10/11/12 attach power columns)
+
+Runs are cached by config key; delete the artifacts to retrain.
+Usage: python -m compile.train --out ../artifacts/models [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from functools import partial
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from . import quantize as Q
+from .tensor_io import read_tensor, write_tensor
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+def load_dataset(data_dir: Path, name: str):
+    d = data_dir / name
+    if not (d / "train_x.ptns").exists():
+        from . import datasets
+
+        datasets.generate(data_dir)
+    out = {}
+    for split in ("train", "test", "calib"):
+        out[split] = (read_tensor(d / f"{split}_x.ptns"), read_tensor(d / f"{split}_y.ptns"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# QAT mac functions
+# ---------------------------------------------------------------------------
+
+def make_mac(method: str, bits_w: int, bits_x: int, r: float):
+    """Build the mac-hook for the given QAT method. Extra trainable
+    tensors (LSQ scales, adder weights, affine) live in params[i]."""
+
+    def quant_acts(x, p):
+        return Q.lsq_quant(x, p["sx"], bits_x, unsigned=True)
+
+    def mac(i, l, x, p):
+        if method == "fp32":
+            return M.default_mac(i, l, x, p)
+        if method == "lsq":
+            wq = Q.lsq_quant(p["w"], p["sw"], bits_w, unsigned=False)
+            xq = quant_acts(x, p)
+            return M.default_mac(i, l, xq, {"w": wq, "b": p["b"]})
+        if method == "pann":
+            wq = Q.pann_fake_quant(p["w"], r)
+            xq = quant_acts(x, p)
+            return M.default_mac(i, l, xq, {"w": wq, "b": p["b"]})
+        if method in ("adder", "shiftadd"):
+            # flatten to rows
+            if l["op"] == "conv":
+                rows, (n, oh, ow) = Q.im2col(x, l["k"], l["stride"], l["pad"])
+                w2 = p["w"].reshape(p["w"].shape[0], -1)
+            else:
+                rows, (n, oh, ow) = x, (x.shape[0], 1, 1)
+                w2 = p["w"]
+            rows = Q.fake_quant_unsigned(rows, p["sx"], bits_x)
+            if method == "adder":
+                wq = Q.fake_quant_signed(w2, p["sw"], bits_w)
+                y = Q.adder_dense(rows, wq)
+            else:  # shiftadd: shift layer then adder layer
+                ws = Q.po2_fake_quant(w2, bits_w)
+                # normalize the shift layer's output so the adder
+                # layer's L1 geometry sees unit-scale inputs
+                h = rows @ ws.T / jnp.sqrt(float(w2.shape[1]))
+                aq = Q.fake_quant_signed(p["a"], p["sa"], bits_w)
+                y = Q.adder_dense(h, aq)
+            # AdderNet/ShiftAddNet rely on batch normalization after the
+            # L1 layers (their outputs are large negatives); we use batch
+            # statistics + learnable affine, as in the original papers.
+            y = (y - y.mean(axis=0, keepdims=True)) / (y.std(axis=0, keepdims=True) + 1e-5)
+            y = y * p["g"][None, :] + p["b"][None, :]
+            if l["op"] == "conv":
+                y = y.reshape(n, oh, ow, -1).transpose(0, 3, 1, 2)
+            return y
+        raise ValueError(method)
+
+    return mac
+
+
+def init_qat_params(arch, params, method, bits_w, bits_x, seed=0):
+    """Augment fp32 params with the method's trainable extras."""
+    key = jax.random.PRNGKey(seed + 1)
+    x_probe = jnp.ones([1] + arch["input"]) * 0.5
+    for i in M.mac_nodes(arch):
+        p = params[i]
+        if method in ("lsq", "pann"):
+            p["sx"] = jnp.asarray(0.5 / (2.0**bits_x - 1) * 2, jnp.float32)
+            if method == "lsq":
+                p["sw"] = Q.lsq_init_scale(p["w"], bits_w, unsigned=False)
+        if method in ("adder", "shiftadd"):
+            out = p["w"].shape[0]
+            # activation step: cover ~[0, 2.5] post-BN-relu range
+            p["sx"] = jnp.asarray(2.5 / (2.0**bits_x - 1.0), jnp.float32)
+            # min/max step: weights span +-max|w| over 2^{b-1}-1 codes
+            qmax = 2.0 ** (bits_w - 1) - 1.0
+            p["sw"] = jnp.max(jnp.abs(p["w"])) / qmax
+            p["g"] = jnp.ones((out,), jnp.float32)
+            if method == "shiftadd":
+                key, k = jax.random.split(key)
+                a = jax.random.normal(k, (out, out), jnp.float32) * 0.3
+                p["a"] = a
+                p["sa"] = jnp.max(jnp.abs(a)) / qmax
+    del x_probe
+    return params
+
+
+# ---------------------------------------------------------------------------
+# training loop
+# ---------------------------------------------------------------------------
+
+def train_model(arch, data, method="fp32", bits=8, r=1.0, epochs=6, batch=128,
+                lr=0.05, seed=0, bits_x=None):
+    bits_x = bits_x if bits_x is not None else bits
+    params = M.init_params(arch, seed)
+    params = init_qat_params(arch, params, method, bits, bits_x, seed)
+    mac = make_mac(method, bits, bits_x, r)
+    if method in ("adder", "shiftadd"):
+        # L1-similarity layers train slowly even with AdderNet's
+        # adaptive local lr; give them a longer schedule.
+        batch = min(batch, 64)
+        lr = 0.01
+        epochs = epochs * 3
+
+    def loss_fn(p, xb, yb):
+        logits = M.forward(arch, p, xb, mac=mac)
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(logp, yb[:, None], axis=1))
+
+    adaptive = method in ("adder", "shiftadd")
+
+    @jax.jit
+    def step(p, mom, xb, yb, lr_now):
+        loss, g = jax.value_and_grad(loss_fn)(p, xb, yb)
+        if adaptive:
+            # AdderNet's adaptive local learning rate: scale each
+            # layer's gradient to norm sqrt(k) (Chen et al., 2020).
+            # matrices: AdderNet adaptive norm; scalars (quantizer
+            # steps): frozen — the originals use fixed quant grids.
+            g = jax.tree.map(
+                lambda gg: gg * jnp.sqrt(gg.size) / (jnp.linalg.norm(gg) + 1e-12)
+                if gg.ndim >= 2
+                else (gg if gg.ndim == 1 else jnp.zeros_like(gg)),
+                g,
+            )
+        mom = jax.tree.map(lambda m, gg: 0.9 * m + gg, mom, g)
+        p = jax.tree.map(lambda pp, m: pp - lr_now * m, p, mom)
+        return p, mom, loss
+
+    xtr, ytr = data["train"]
+    xtr = jnp.asarray(xtr)
+    ytr = jnp.asarray(ytr.astype(np.int32))
+    n = xtr.shape[0]
+    mom = jax.tree.map(jnp.zeros_like, params)
+    rng = np.random.default_rng(seed)
+    losses = []
+    for ep in range(epochs):
+        order = rng.permutation(n)
+        lr_now = lr * (0.2 ** (ep // max(1, epochs // 2)))
+        for s in range(0, n - batch + 1, batch):
+            idx = order[s : s + batch]
+            params, mom, loss = step(params, mom, xtr[idx], ytr[idx], lr_now)
+        losses.append(float(loss))
+    acc = evaluate(arch, params, data["test"], mac)
+    classes = arch["layers"][-1]["out"]
+    if acc < 1.5 / classes and lr > 0.005 and method != "fp32":
+        # diverged (quantization-aware training is lr-sensitive at some
+        # operating points): retry once with a 5x smaller step
+        return train_model(arch, data, method, bits, r, epochs, batch,
+                           lr / 5.0, seed, bits_x)
+    return params, acc, losses
+
+
+def evaluate(arch, params, split, mac=M.default_mac, batch=256):
+    x, y = split
+    x = jnp.asarray(x)
+    correct = 0
+    fwd = jax.jit(lambda p, xb: M.forward(arch, p, xb, mac=mac))
+    for s in range(0, x.shape[0], batch):
+        logits = fwd(params, x[s : s + batch])
+        correct += int((np.asarray(logits).argmax(axis=1) == y[s : s + batch]).sum())
+    return correct / x.shape[0]
+
+
+# ---------------------------------------------------------------------------
+# export
+# ---------------------------------------------------------------------------
+
+def export_manifest(arch_name, arch, params, out_dir: Path, data):
+    d = out_dir / arch_name
+    d.mkdir(parents=True, exist_ok=True)
+    layers = []
+    for i, l in enumerate(arch["layers"]):
+        e = {"op": l["op"], "input": l.get("input", i - 1)}
+        if l["op"] == "conv":
+            e.update(stride=l["stride"], pad=l["pad"], w=f"n{i}_w.ptns", b=f"n{i}_b.ptns")
+            write_tensor(d / e["w"], np.asarray(params[i]["w"], dtype=np.float32))
+            write_tensor(d / e["b"], np.asarray(params[i]["b"], dtype=np.float32))
+        elif l["op"] == "linear":
+            e.update(w=f"n{i}_w.ptns", b=f"n{i}_b.ptns")
+            write_tensor(d / e["w"], np.asarray(params[i]["w"], dtype=np.float32))
+            write_tensor(d / e["b"], np.asarray(params[i]["b"], dtype=np.float32))
+        elif l["op"] == "maxpool":
+            e["k"] = l["k"]
+        elif l["op"] == "add":
+            e["rhs"] = l["rhs"]
+        layers.append(e)
+    # activation stats on a training subset (data-free quantizer source)
+    stats = M.act_stats(arch, params, jnp.asarray(data["train"][0][:512]))
+    manifest = {
+        "name": arch_name,
+        "input": arch["input"],
+        "dataset": arch["dataset"],
+        "num_macs": M.num_macs(arch),
+        "layers": layers,
+        "act_stats": {str(k): v for k, v in stats.items()},
+    }
+    (d / "manifest.json").write_text(json.dumps(manifest))
+    return d
+
+
+# ---------------------------------------------------------------------------
+# the QAT grid (tables 3/4/10/11/12)
+# ---------------------------------------------------------------------------
+
+# Table 13's (b̃x, R) operating points per LSQ bit width (power-matched).
+PANN_QAT_POINTS = {2: (3, 2.83), 3: (6, 2.5), 4: (6, 3.5)}
+
+
+def qat_grid(quick: bool):
+    epochs = 2 if quick else 6
+    grid = []
+    # Tables 3/10: LSQ vs PANN on the three CNNs at 2/3/4 bits.
+    for arch in ("cnn-s", "cnn-r", "vgg-t"):
+        for bits in (2, 3, 4):
+            bx, r = PANN_QAT_POINTS[bits]
+            grid.append(dict(arch=arch, method="lsq", bits=bits, r=0.0, bits_x=bits, epochs=epochs))
+            grid.append(dict(arch=arch, method="pann", bits=bits, r=r, bits_x=bx, epochs=epochs))
+    # Tables 4/11/12: multiplier-free comparison on three datasets at
+    # 3..6 bits, PANN at addition factors 1/1.5/2.
+    for arch in ("cnn-s", "mlp", "har-mlp"):
+        for bits in (3, 4, 5, 6):
+            for rf in (1.0, 1.5, 2.0):
+                grid.append(dict(arch=arch, method="pann", bits=bits, r=rf, bits_x=bits, epochs=epochs))
+            grid.append(dict(arch=arch, method="shiftadd", bits=bits, r=1.5, bits_x=bits, epochs=epochs))
+            grid.append(dict(arch=arch, method="adder", bits=bits, r=2.0, bits_x=bits, epochs=epochs))
+    return grid
+
+
+def run_key(c):
+    return f"{c['arch']}_{c['method']}_b{c['bits']}_bx{c['bits_x']}_r{c['r']}_e{c['epochs']}"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/models")
+    ap.add_argument("--data", default="../artifacts/data")
+    ap.add_argument("--quick", action="store_true", help="2-epoch smoke grid")
+    ap.add_argument("--skip-qat", action="store_true", help="fp32 exports only")
+    args = ap.parse_args()
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    data_dir = Path(args.data)
+
+    epochs_fp = 3 if args.quick else 8
+    results_path = out_dir / "qat_results.json"
+    results = json.loads(results_path.read_text()) if results_path.exists() else {}
+
+    # --- fp32 reference models + manifests ---
+    for arch_name, arch in M.ARCHS.items():
+        if (out_dir / arch_name / "manifest.json").exists() and f"fp32_{arch_name}" in results:
+            print(f"[skip] fp32 {arch_name}")
+            continue
+        data = load_dataset(data_dir, arch["dataset"])
+        params, acc, losses = train_model(arch, data, "fp32", epochs=epochs_fp)
+        export_manifest(arch_name, arch, params, out_dir, data)
+        results[f"fp32_{arch_name}"] = {"arch": arch_name, "method": "fp32", "acc": acc}
+        print(f"fp32 {arch_name}: acc={acc:.4f} loss={losses[-1]:.3f}")
+        results_path.write_text(json.dumps(results, indent=1))
+
+    # --- QAT grid ---
+    if not args.skip_qat:
+        for c in qat_grid(args.quick):
+            key = run_key(c)
+            if key in results:
+                print(f"[skip] {key}")
+                continue
+            data = load_dataset(data_dir, M.ARCHS[c["arch"]]["dataset"])
+            _, acc, _ = train_model(
+                M.ARCHS[c["arch"]], data, c["method"], bits=c["bits"], r=c["r"],
+                epochs=c["epochs"], bits_x=c["bits_x"],
+            )
+            results[key] = {**c, "acc": acc}
+            print(f"{key}: acc={acc:.4f}")
+            results_path.write_text(json.dumps(results, indent=1))
+
+    print(f"wrote {results_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""AOT path tests: PANN graph vs fp32 graph, HLO text emission."""
+
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+from compile.tensor_io import write_tensor
+
+
+@pytest.fixture(scope="module")
+def tiny_model(tmp_path_factory):
+    """A small trained-ish mlp manifest on disk."""
+    d = tmp_path_factory.mktemp("models") / "mlp"
+    d.mkdir()
+    rng = np.random.default_rng(0)
+    arch = M.ARCHS["mlp"]
+    layers = []
+    stats = {}
+    for i, l in enumerate(arch["layers"]):
+        e = {"op": l["op"], "input": l.get("input", i - 1)}
+        if l["op"] == "linear":
+            w = rng.standard_normal((l["out"], l["in"])).astype(np.float32) * 0.1
+            b = np.zeros(l["out"], np.float32)
+            e.update(w=f"n{i}_w.ptns", b=f"n{i}_b.ptns")
+            write_tensor(d / e["w"], w)
+            write_tensor(d / e["b"], b)
+        layers.append(e)
+        out_ch = l.get("out", 96)
+        stats[str(i)] = {"mean": [0.2] * out_ch, "std": [0.3] * out_ch}
+    manifest = {
+        "name": "mlp", "input": arch["input"], "dataset": "blobs",
+        "num_macs": M.num_macs(arch), "layers": layers, "act_stats": stats,
+    }
+    (d / "manifest.json").write_text(json.dumps(manifest))
+    return d
+
+
+def test_pann_fn_tracks_fp32(tiny_model):
+    manifest, weights = aot.load_model(tiny_model.parent, "mlp")
+    fp = aot.build_fp32_fn(manifest, weights)
+    pann, r_achieved = aot.build_pann_fn(manifest, weights, bx=8, r=7.5)
+    x = jnp.asarray(np.random.default_rng(1).random((4, 64)).astype(np.float32))
+    yf = np.asarray(fp(x)[0])
+    yp = np.asarray(pann(x)[0])
+    assert r_achieved > 5.0
+    scale = np.abs(yf).max() + 1e-6
+    assert np.abs(yf - yp).max() / scale < 0.15, np.abs(yf - yp).max() / scale
+
+
+def test_hlo_text_emitted(tiny_model):
+    manifest, weights = aot.load_model(tiny_model.parent, "mlp")
+    pann, _ = aot.build_pann_fn(manifest, weights, bx=6, r=2.0)
+    text = aot.to_hlo_text(pann, manifest["input"])
+    assert "HloModule" in text
+    assert len(text) > 1000
+
+
+def test_operating_points_cover_budgets():
+    assert set(aot.TABLE14_POINTS) == {2, 3, 4, 5, 6, 8}
+    for bits, (bx, r) in aot.TABLE14_POINTS.items():
+        # Eq. 13: (R + 0.5) * bx == P = 0.5 bits^2 + 4 bits
+        p = 0.5 * bits**2 + 4 * bits
+        assert abs((r + 0.5) * bx - p) < 1e-6, bits

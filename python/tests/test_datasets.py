@@ -1,0 +1,61 @@
+"""Dataset generator tests: determinism, ranges, signal."""
+
+import numpy as np
+
+from compile import datasets as D
+
+
+def test_deterministic():
+    rng1 = np.random.default_rng(42)
+    rng2 = np.random.default_rng(42)
+    x1, y1 = D.digits(32, rng1)
+    x2, y2 = D.digits(32, rng2)
+    np.testing.assert_array_equal(x1, x2)
+    np.testing.assert_array_equal(y1, y2)
+
+
+def test_ranges_zero_one():
+    rng = np.random.default_rng(0)
+    for fn in (D.digits, D.blobs, D.har):
+        x, y = fn(64, rng)
+        assert x.min() >= 0.0 and x.max() <= 1.0, fn.__name__
+        assert x.dtype == np.float32
+        assert y.dtype == np.int32
+
+
+def test_shapes():
+    rng = np.random.default_rng(1)
+    x, y = D.digits(8, rng)
+    assert x.shape == (8, 1, 16, 16)
+    x, y = D.blobs(8, rng)
+    assert x.shape == (8, 64)
+    x, y = D.har(8, rng)
+    assert x.shape == (8, 192)
+    assert y.max() < 12
+
+
+def test_classes_carry_signal():
+    """Nearest-class-mean classifier must beat chance by a margin."""
+    rng = np.random.default_rng(2)
+    xtr, ytr = D.digits(600, rng)
+    xte, yte = D.digits(200, rng)
+    xtr = xtr.reshape(len(xtr), -1)
+    xte = xte.reshape(len(xte), -1)
+    means = np.stack([xtr[ytr == c].mean(axis=0) for c in range(10)])
+    pred = ((xte[:, None, :] - means[None]) ** 2).sum(-1).argmin(1)
+    acc = (pred == yte).mean()
+    assert acc > 0.5, acc
+
+
+def test_generate_writes_files(tmp_path):
+    # temporarily shrink specs for speed
+    old = D.SPECS
+    D.SPECS = {"blobs": (D.blobs, {"train": 32, "test": 16, "calib": 8})}
+    try:
+        D.generate(tmp_path, seed=0)
+    finally:
+        D.SPECS = old
+    from compile.tensor_io import read_tensor
+
+    x = read_tensor(tmp_path / "blobs" / "train_x.ptns")
+    assert x.shape == (32, 64)

@@ -1,0 +1,78 @@
+"""L1 correctness: Pallas kernels vs the pure-numpy oracle.
+
+This is the CORE correctness signal of the compile path — hypothesis
+sweeps shapes and value ranges; integer kernels must match *exactly*.
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.pann_matmul import pann_matmul, quantize_act, quantized_linear
+
+dims = st.integers(min_value=1, max_value=40)
+
+
+@settings(max_examples=30, deadline=None)
+@given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**31 - 1), wmax=st.integers(1, 64))
+def test_pann_matmul_matches_ref(m, k, n, seed, wmax):
+    rng = np.random.default_rng(seed)
+    xq = rng.integers(0, 256, size=(m, k)).astype(np.int32)
+    wp = rng.integers(0, wmax, size=(n, k)).astype(np.int32)
+    wn = rng.integers(0, wmax, size=(n, k)).astype(np.int32)
+    out = np.asarray(pann_matmul(xq, wp, wn))
+    np.testing.assert_array_equal(out, ref.ref_pann_matmul(xq, wp, wn))
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    m=dims,
+    k=dims,
+    seed=st.integers(0, 2**31 - 1),
+    bits=st.integers(2, 8),
+    scale=st.floats(1e-3, 1.0),
+)
+def test_quantize_act_matches_ref(m, k, seed, bits, scale):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((m, k)).astype(np.float32)
+    qmax = 2**bits - 1
+    out = np.asarray(quantize_act(x, scale, qmax))
+    expect = ref.ref_quantize_act(x, scale, qmax)
+    np.testing.assert_array_equal(out, expect)
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**31 - 1))
+def test_fused_linear_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = np.abs(rng.standard_normal((m, k))).astype(np.float32)
+    wp = rng.integers(0, 9, size=(n, k)).astype(np.int32)
+    wn = rng.integers(0, 9, size=(n, k)).astype(np.int32)
+    bias = rng.standard_normal(n).astype(np.float32)
+    y = np.asarray(quantized_linear(x, wp, wn, 0.05, 63, 0.013, bias))
+    yr = ref.ref_quantized_linear(x, wp, wn, 0.05, 63, 0.013, bias)
+    np.testing.assert_allclose(y, yr, rtol=1e-5, atol=1e-5)
+
+
+def test_large_tile_boundary():
+    """Shapes straddling the 128 tile boundary."""
+    rng = np.random.default_rng(0)
+    for m, n, k in [(128, 128, 64), (129, 130, 31), (256, 10, 200)]:
+        xq = rng.integers(0, 64, size=(m, k)).astype(np.int32)
+        wp = rng.integers(0, 8, size=(n, k)).astype(np.int32)
+        wn = rng.integers(0, 8, size=(n, k)).astype(np.int32)
+        out = np.asarray(pann_matmul(xq, wp, wn))
+        np.testing.assert_array_equal(out, ref.ref_pann_matmul(xq, wp, wn))
+
+
+def test_negative_inputs_clip_to_zero():
+    x = np.array([[-1.0, 0.0, 0.5]], dtype=np.float32)
+    q = np.asarray(quantize_act(x, 0.1, 7))
+    assert q.tolist() == [[0, 0, 5]]
+
+
+def test_zero_weights_zero_output():
+    xq = np.ones((3, 4), dtype=np.int32)
+    z = np.zeros((2, 4), dtype=np.int32)
+    out = np.asarray(pann_matmul(xq, z, z))
+    assert (out == 0).all()

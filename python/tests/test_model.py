@@ -1,0 +1,84 @@
+"""L2 model graph tests: shapes, MAC counts, QAT paths, stats."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import quantize as Q
+from compile import train as T
+
+
+@pytest.mark.parametrize("name", list(M.ARCHS))
+def test_forward_shapes(name):
+    arch = M.ARCHS[name]
+    p = M.init_params(arch, 0)
+    x = jnp.zeros([3] + arch["input"])
+    y = M.forward(arch, p, x)
+    classes = arch["layers"][-1]["out"]
+    assert y.shape == (3, classes)
+
+
+@pytest.mark.parametrize("name", list(M.ARCHS))
+def test_num_macs_positive(name):
+    assert M.num_macs(M.ARCHS[name]) > 10_000
+
+
+def test_num_macs_cnn_s_exact():
+    # conv1 8*1*9*256 + conv2 16*8*9*64 + fc 10*256 (matches rust test)
+    assert M.num_macs(M.ARCHS["cnn-s"]) == 8 * 9 * 256 + 16 * 8 * 9 * 64 + 10 * 256
+
+
+def test_act_stats_structure():
+    arch = M.ARCHS["mlp"]
+    p = M.init_params(arch, 0)
+    x = jnp.abs(jax.random.normal(jax.random.PRNGKey(0), (16, 64)))
+    stats = M.act_stats(arch, p, x)
+    assert set(stats.keys()) == set(range(len(arch["layers"])))
+    assert len(stats[0]["mean"]) == 96  # first linear output channels
+
+
+@pytest.mark.parametrize("method", ["lsq", "pann", "adder", "shiftadd"])
+def test_qat_forward_runs(method):
+    arch = M.ARCHS["mlp"]
+    p = M.init_params(arch, 0)
+    p = T.init_qat_params(arch, p, method, 4, 4, 0)
+    mac = T.make_mac(method, 4, 4, 1.5)
+    x = jnp.abs(jax.random.normal(jax.random.PRNGKey(1), (4, 64)))
+    y = M.forward(arch, p, x, mac=mac)
+    assert y.shape == (4, 10)
+    assert bool(jnp.isfinite(y).all())
+
+
+@pytest.mark.parametrize("method", ["lsq", "pann"])
+def test_qat_gradients_finite(method):
+    arch = M.ARCHS["mlp"]
+    p = M.init_params(arch, 0)
+    p = T.init_qat_params(arch, p, method, 3, 3, 0)
+    mac = T.make_mac(method, 3, 3, 2.0)
+    x = jnp.abs(jax.random.normal(jax.random.PRNGKey(2), (8, 64)))
+    yb = jnp.zeros(8, jnp.int32)
+
+    def loss(p):
+        lo = M.forward(arch, p, x, mac=mac)
+        return -jnp.mean(jax.nn.log_softmax(lo)[:, 0])
+
+    g = jax.grad(loss)(p)
+    leaves = jax.tree.leaves(g)
+    assert all(bool(jnp.isfinite(l).all()) for l in leaves)
+    # weight gradients must be nonzero (STE passes through)
+    assert any(float(jnp.abs(l).max()) > 0 for l in leaves)
+
+
+def test_im2col_matches_conv():
+    """conv via im2col rows @ w == lax conv."""
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(key, (2, 3, 8, 8))
+    w = jax.random.normal(key, (5, 3, 3, 3))
+    rows, (n, oh, ow) = Q.im2col(x, 3, 1, 1)
+    y1 = (rows @ w.reshape(5, -1).T).reshape(n, oh, ow, 5).transpose(0, 3, 1, 2)
+    y2 = jax.lax.conv_general_dilated(
+        x, w, (1, 1), [(1, 1), (1, 1)], dimension_numbers=("NCHW", "OIHW", "NCHW")
+    )
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-4, atol=1e-4)

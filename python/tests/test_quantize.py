@@ -1,0 +1,62 @@
+"""QAT primitive tests: STE, LSQ, PANN, po2, adder gradients."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import quantize as Q
+
+
+def test_ste_round_passes_gradient():
+    g = jax.grad(lambda x: Q.ste_round(x * 3.0))(1.234)
+    assert abs(float(g) - 3.0) < 1e-6
+
+
+def test_pann_budget_np():
+    rng = np.random.default_rng(0)
+    w = rng.standard_normal(4096).astype(np.float32) * 0.1
+    for r in (1.0, 2.0, 4.0):
+        codes, gamma, adds = Q.pann_quantize_np(w, r)
+        assert abs(adds - r) / r < 0.12, (r, adds)
+        np.testing.assert_allclose(codes * gamma, w, atol=gamma / 2 + 1e-7)
+
+
+def test_pann_fake_quant_matches_np():
+    rng = np.random.default_rng(1)
+    w = rng.standard_normal(256).astype(np.float32)
+    fq = np.asarray(Q.pann_fake_quant(jnp.asarray(w), 2.0))
+    codes, gamma, _ = Q.pann_quantize_np(w, 2.0)
+    np.testing.assert_allclose(fq, codes * gamma, rtol=2e-4, atol=2e-6)
+
+
+def test_po2_weights_are_powers_of_two():
+    rng = np.random.default_rng(2)
+    w = rng.standard_normal(64).astype(np.float32) * 0.3
+    ws = np.asarray(Q.po2_fake_quant(jnp.asarray(w), 4))
+    mags = np.abs(ws[ws != 0])
+    logs = np.log2(mags)
+    np.testing.assert_allclose(logs, np.round(logs), atol=1e-5)
+
+
+def test_lsq_quant_levels():
+    x = jnp.linspace(0, 1, 100)
+    y = np.asarray(Q.lsq_quant(x, jnp.asarray(0.1), 3, unsigned=True))
+    levels = np.unique(np.round(y / 0.1).astype(int))
+    assert levels.min() >= 0 and levels.max() <= 7
+
+
+def test_adder_dense_values_and_grads():
+    x = jnp.asarray([[1.0, 2.0]])
+    w = jnp.asarray([[0.0, 0.0], [1.0, 2.0]])
+    y = Q.adder_dense(x, w)
+    np.testing.assert_allclose(np.asarray(y), [[-3.0, 0.0]], atol=1e-6)
+    gw = jax.grad(lambda w: Q.adder_dense(x, w).sum())(w)
+    # AdderNet: dy/dw = (x - w)
+    np.testing.assert_allclose(np.asarray(gw), [[1.0, 2.0], [0.0, 0.0]], atol=1e-6)
+
+
+def test_fake_quant_signed_symmetric():
+    x = jnp.asarray([-1.0, -0.5, 0.0, 0.5, 1.0])
+    y = np.asarray(Q.fake_quant_signed(x, 0.25, 3))
+    assert (np.abs(y) <= 1.0 + 1e-6).all()
+    np.testing.assert_allclose(y, np.clip(np.rint(x / 0.25), -4, 3) * 0.25)

@@ -1,0 +1,57 @@
+//! Toggle-simulator throughput (instructions simulated per second) —
+//! the cost of regenerating the paper's measurement figures.
+
+use pann::bitflip::{gates, BoothMultiplier, MacUnit, Multiplier, PannDatapath, SerialMultiplier};
+use pann::util::bench::run;
+use pann::util::Rng;
+
+fn main() {
+    let mut r = Rng::new(3);
+    let ws: Vec<i64> = (0..4096).map(|_| r.range_i64(-128, 128)).collect();
+    let xs: Vec<i64> = (0..4096).map(|_| r.range_i64(-128, 128)).collect();
+
+    let mut booth = BoothMultiplier::new(8, true);
+    let mut i = 0;
+    let res = run("booth 8x8 signed mul", || {
+        let (p, _) = booth.mul(ws[i & 4095], xs[i & 4095]);
+        std::hint::black_box(p);
+        i += 1;
+    });
+    println!("  -> {:.2} Mops/s", res.throughput(1.0) / 1e6);
+
+    let mut serial = SerialMultiplier::new(8, true);
+    let mut i = 0;
+    run("serial 8x8 signed mul", || {
+        let (p, _) = serial.mul(ws[i & 4095], xs[i & 4095]);
+        std::hint::black_box(p);
+        i += 1;
+    });
+
+    let mut mac = MacUnit::new(BoothMultiplier::new(8, true), 32);
+    let mut i = 0;
+    run("mac 8x8 B=32", || {
+        std::hint::black_box(mac.mac(ws[i & 4095], xs[i & 4095]).paper_total());
+        i += 1;
+    });
+
+    let mut dp = PannDatapath::new(6, 32);
+    let qx: Vec<i64> = (0..4096).map(|_| r.range_i64(0, 64)).collect();
+    let mut i = 0;
+    run("pann element R=3", || {
+        std::hint::black_box(dp.element(3, qx[i & 4095]).paper_total());
+        i += 1;
+    });
+
+    // gate level
+    let mut circ = gates::MultCircuit::new_signed(4);
+    let mut i = 0;
+    let res = run("gate-level 4x4 signed mul", || {
+        let (p, _) = circ.mul_words(
+            pann::bitflip::word::to_word(ws[i & 4095] % 8, 8),
+            pann::bitflip::word::to_word(xs[i & 4095] % 8, 8),
+        );
+        std::hint::black_box(p);
+        i += 1;
+    });
+    println!("  -> {:.2} Mops/s (gate level)", res.throughput(1.0) / 1e6);
+}

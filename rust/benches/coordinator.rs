@@ -1,0 +1,74 @@
+//! Serving-loop benchmark: batching throughput and latency percentiles
+//! over the native integer engine (and PJRT when artifacts exist).
+
+use pann::coordinator::{EnginePoint, Server, ServerConfig};
+use pann::coordinator::server::NativeEngine;
+use pann::data::{synth, Dataset};
+use pann::nn::eval::batch_tensor;
+use pann::nn::quantized::{QuantConfig, QuantizedModel};
+use pann::nn::Model;
+use pann::quant::ActQuantMethod;
+use std::time::Duration;
+
+fn native_points() -> anyhow::Result<Vec<EnginePoint>> {
+    let mut model = Model::reference_cnn(1);
+    let ds = Dataset::from_synth(synth::digits(64, 2));
+    let stats_x = batch_tensor(&ds, 0, 64);
+    model.record_act_stats(&stats_x)?;
+    let mut points = Vec::new();
+    for (bits, bx, r) in [(2u32, 6u32, 10.0 / 6.0 - 0.5), (4, 7, 24.0 / 7.0 - 0.5), (8, 8, 7.5)] {
+        let qm = QuantizedModel::prepare(&model, QuantConfig::pann(bx, r, ActQuantMethod::BnStats), None)?;
+        let gf = pann::power::model::mac_power_unsigned_total(bits) * model.num_macs() as f64 / 1e9;
+        points.push(EnginePoint {
+            name: format!("pann-p{bits}"),
+            giga_flips_per_sample: gf,
+            engine: Box::new(NativeEngine { qm, sample_shape: vec![1, 16, 16] }),
+        });
+    }
+    Ok(points)
+}
+
+fn main() {
+    let srv = Server::start(
+        native_points,
+        256,
+        ServerConfig {
+            max_batch: 16,
+            max_wait: Duration::from_micros(500),
+            budget_gflips: f64::INFINITY,
+        },
+    )
+    .expect("server start");
+    let h = srv.handle();
+    let ds = Dataset::from_synth(synth::digits(256, 5));
+
+    for (label, budget, clients) in [
+        ("rich budget, 4 clients", f64::INFINITY, 4usize),
+        ("2-bit budget, 4 clients", 0.001, 4),
+        ("rich budget, 16 clients", f64::INFINITY, 16),
+    ] {
+        h.set_budget(budget);
+        let t0 = std::time::Instant::now();
+        let n_per = 64usize;
+        std::thread::scope(|s| {
+            for c in 0..clients {
+                let h = h.clone();
+                let ds = &ds;
+                s.spawn(move || {
+                    for i in 0..n_per {
+                        let idx = (c * n_per + i) % ds.len();
+                        h.infer(ds.sample(idx).to_vec()).expect("infer");
+                    }
+                });
+            }
+        });
+        let dt = t0.elapsed().as_secs_f64();
+        let total = clients * n_per;
+        println!(
+            "{label:<28} {total} reqs in {dt:.3}s = {:.0} req/s",
+            total as f64 / dt
+        );
+    }
+    println!("{}", h.metrics().report());
+    srv.shutdown();
+}

@@ -1,0 +1,86 @@
+//! Hot-path micro-benchmarks: GEMM kernels, im2col, quantized layer
+//! execution, full-model evaluation throughput.
+
+use pann::data::{synth, Dataset};
+use pann::nn::eval::{batch_tensor, eval_quantized};
+use pann::nn::gemm;
+use pann::nn::quantized::{QuantConfig, QuantizedModel};
+use pann::nn::Model;
+use pann::quant::ActQuantMethod;
+use pann::util::bench::run;
+use pann::util::Rng;
+
+fn main() {
+    let mut r = Rng::new(1);
+    // --- GEMM kernels ---
+    let (m, n, k) = (256, 64, 144);
+    let a_f: Vec<f32> = (0..m * k).map(|_| r.normal() as f32).collect();
+    let b_f: Vec<f32> = (0..n * k).map(|_| r.normal() as f32).collect();
+    let mut out_f = vec![0.0f32; m * n];
+    let gemm_flops = 2.0 * (m * n * k) as f64;
+    let res = run("gemm_f32 256x64x144", || {
+        gemm::gemm_f32(
+            std::hint::black_box(&a_f),
+            std::hint::black_box(&b_f),
+            &mut out_f,
+            m,
+            n,
+            k,
+        );
+    });
+    println!("  -> {:.2} GFLOP/s", res.throughput(gemm_flops) / 1e9);
+
+    let a_i: Vec<i32> = (0..m * k).map(|_| r.range_i64(0, 64) as i32).collect();
+    let b_i: Vec<i32> = (0..n * k).map(|_| r.range_i64(-8, 8) as i32).collect();
+    let pos: Vec<i32> = b_i.iter().map(|&v| v.max(0)).collect();
+    let neg: Vec<i32> = b_i.iter().map(|&v| (-v).max(0)).collect();
+    let mut out_i = vec![0i64; m * n];
+    let res = run("gemm_i32 256x64x144", || {
+        gemm::gemm_i32(
+            std::hint::black_box(&a_i),
+            std::hint::black_box(&b_i),
+            &mut out_i,
+            m,
+            n,
+            k,
+        );
+    });
+    println!("  -> {:.2} Gmac/s", res.throughput((m * n * k) as f64) / 1e9);
+    let res = run("gemm_i32_split 256x64x144", || {
+        gemm::gemm_i32_split(
+            std::hint::black_box(&a_i),
+            std::hint::black_box(&pos),
+            std::hint::black_box(&neg),
+            &mut out_i,
+            m,
+            n,
+            k,
+        );
+    });
+    println!("  -> {:.2} Gmac/s (dual bank)", res.throughput((m * n * k) as f64) / 1e9);
+
+    // --- im2col ---
+    let x: Vec<f32> = (0..8 * 16 * 16).map(|_| r.f32()).collect();
+    let mut cols = Vec::new();
+    run("im2col 8ch 16x16 k3", || {
+        gemm::im2col(std::hint::black_box(&x), 8, 16, 16, 3, 3, 1, 1, &mut cols);
+    });
+
+    // --- full quantized model eval ---
+    let mut model = Model::reference_cnn(1);
+    let ds = Dataset::from_synth(synth::digits(256, 2));
+    let stats_x = batch_tensor(&ds, 0, 64);
+    model.record_act_stats(&stats_x).unwrap();
+    for (name, cfg) in [
+        ("eval unsigned 4-bit", QuantConfig::unsigned_baseline(4, ActQuantMethod::BnStats)),
+        ("eval pann b̃x=6 R=2", QuantConfig::pann(6, 2.0, ActQuantMethod::BnStats)),
+    ] {
+        let qm = QuantizedModel::prepare(&model, cfg, None).unwrap();
+        let res = run(name, || {
+            let r = eval_quantized(std::hint::black_box(&qm), &ds).unwrap();
+            std::hint::black_box(r.correct);
+        });
+        let macs = model.num_macs() as f64 * ds.len() as f64;
+        println!("  -> {:.2} Gmac/s end-to-end", res.throughput(macs) / 1e9);
+    }
+}

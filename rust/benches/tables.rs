@@ -1,0 +1,21 @@
+//! `cargo bench --bench tables` — regenerate every paper table/figure.
+//!
+//! Uses full sample counts when artifacts exist; pass PANN_QUICK=1 for
+//! the fast variant. Output lines mirror the paper's rows (see
+//! EXPERIMENTS.md for the paper-vs-measured comparison).
+
+use pann::experiments::{self, Ctx};
+
+fn main() {
+    let quick = std::env::var("PANN_QUICK").is_ok();
+    let ctx = Ctx { quick, ..Ctx::default() };
+    let t0 = std::time::Instant::now();
+    for (name, _) in experiments::ALL {
+        let t = std::time::Instant::now();
+        match experiments::run(name, &ctx) {
+            Ok(()) => println!("[{name} done in {:.1}s]\n", t.elapsed().as_secs_f64()),
+            Err(e) => println!("[{name} skipped: {e}]\n"),
+        }
+    }
+    println!("all tables/figures in {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,329 @@
+//! Multiply-accumulate datapath (paper Fig. 2) and the multiplier-free
+//! PANN datapath (Sec. 5), both with exact toggle accounting.
+//!
+//! A MAC couples a `b×b` multiplier with a `B`-bit accumulator whose
+//! previous sum waits in a flip-flop register. The paper's Observation 1
+//! falls out structurally here: with signed operands the product is
+//! negative half the time, and its sign extension onto the `B`-bit
+//! accumulator input bus flips all high bits — ~`0.5B` toggles per
+//! instruction — while unsigned operands leave the high bits at zero.
+
+use super::word::{from_word, hamming, mask, to_word};
+use super::{MultToggles, Multiplier};
+
+/// Toggle breakdown of one MAC instruction (rows of paper Table 1).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MacToggles {
+    /// Multiplier toggles (inputs / internal / output).
+    pub mult: MultToggles,
+    /// Toggles on the accumulator's input bus (the sign-extended
+    /// product): the paper's dominant signed-arithmetic cost (`0.5B`).
+    pub acc_input: u64,
+    /// Toggles at the accumulator sum output (`0.5·b_acc`).
+    pub acc_sum: u64,
+    /// Toggles in the flip-flop holding the previous sum (`0.5·b_acc`).
+    pub acc_ff: u64,
+    /// Toggles in the accumulator's internal carry chain (not part of
+    /// the paper's Table 1 breakdown; reported separately).
+    pub acc_carries: u64,
+}
+
+impl MacToggles {
+    /// Total toggles counted by the paper's model
+    /// (`P_mult + P_acc`; carries excluded to match Table 1).
+    pub fn paper_total(&self) -> u64 {
+        self.mult.inputs + self.mult.internal + self.acc_input + self.acc_sum + self.acc_ff
+    }
+
+    /// Total of everything the simulator observed.
+    pub fn full_total(&self) -> u64 {
+        self.paper_total() + self.mult.output + self.acc_carries
+    }
+}
+
+/// A MAC unit: multiplier + `B`-bit accumulator + FF.
+pub struct MacUnit<M: Multiplier> {
+    mult: M,
+    acc_width: u32,
+    acc: u64,
+    prev_in: u64,
+    prev_sum: u64,
+    prev_ff: u64,
+    prev_carry: u64,
+}
+
+impl<M: Multiplier> MacUnit<M> {
+    /// New MAC with accumulator width `acc_width` (e.g. 32).
+    pub fn new(mult: M, acc_width: u32) -> Self {
+        assert!((4..=64).contains(&acc_width));
+        MacUnit {
+            mult,
+            acc_width,
+            acc: 0,
+            prev_in: 0,
+            prev_sum: 0,
+            prev_ff: 0,
+            prev_carry: 0,
+        }
+    }
+
+    /// Current accumulated value (signed).
+    pub fn value(&self) -> i64 {
+        from_word(self.acc, self.acc_width)
+    }
+
+    /// Clear the accumulated value (new dot product), keeping the
+    /// remembered register states — a reset wire does not erase the
+    /// physical toggling history.
+    pub fn clear_acc(&mut self) {
+        self.acc = 0;
+    }
+
+    /// One multiply-accumulate: `acc += w*x`. Returns toggle breakdown.
+    pub fn mac(&mut self, w: i64, x: i64) -> MacToggles {
+        let (prod, mult_t) = self.mult.mul(w, x);
+        let bacc = self.mult.out_width();
+        let bw = self.acc_width;
+        // The product arrives on the B-bit input bus sign-extended from
+        // b_acc to B bits (two's complement).
+        let in_bus = to_word(from_word(to_word(prod, bacc), bacc), bw);
+        let acc_input = hamming(in_bus, self.prev_in);
+        self.prev_in = in_bus;
+
+        let carry = super::serial_mult::carry_bits(self.acc, in_bus, bw);
+        let acc_carries = hamming(carry, self.prev_carry);
+        self.prev_carry = carry;
+
+        let sum = self.acc.wrapping_add(in_bus) & mask(bw);
+        let acc_sum = hamming(sum, self.prev_sum);
+        self.prev_sum = sum;
+        // The FF captures the sum at the clock edge: same transition.
+        let acc_ff = hamming(sum, self.prev_ff);
+        self.prev_ff = sum;
+        self.acc = sum;
+
+        MacToggles { mult: mult_t, acc_input, acc_sum, acc_ff, acc_carries }
+    }
+}
+
+/// The PANN multiplier-free datapath (Sec. 5.1): each product
+/// `Q_w(w_i)·Q_x(x_i)` is realized as `Q_w(w_i)` repeated additions of
+/// `Q_x(x_i)`. The accumulator *input* register holds `Q_x(x_i)` for
+/// the whole burst, so it toggles only once per element; the sum and FF
+/// toggle on every addition (`≈ 0.5·b̃_x` each) — Eq. (13):
+/// `P_PANN = (R + 0.5)·b̃_x` per element.
+///
+/// Negative quantized weights are handled as in Sec. 4: a second
+/// accumulator receives the bursts of the negative weights and a single
+/// final subtraction combines the two (its cost is counted).
+pub struct PannDatapath {
+    x_width: u32,
+    acc_width: u32,
+    /// positive and negative accumulators
+    acc: [u64; 2],
+    prev_in: [u64; 2],
+    prev_sum: [u64; 2],
+    prev_ff: [u64; 2],
+    prev_carry: [u64; 2],
+}
+
+/// Toggle breakdown of one PANN element (one weight/activation pair).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PannToggles {
+    /// Toggles loading `Q_x(x_i)` onto the accumulator input bus.
+    pub input: u64,
+    /// Sum-output toggles over the burst of additions.
+    pub sum: u64,
+    /// FF toggles over the burst.
+    pub ff: u64,
+    /// Carry-chain toggles (reported separately, as in [`MacToggles`]).
+    pub carries: u64,
+    /// Number of additions performed (|Q_w(w_i)|).
+    pub additions: u64,
+}
+
+impl PannToggles {
+    /// Paper-model total (input + sum + FF).
+    pub fn paper_total(&self) -> u64 {
+        self.input + self.sum + self.ff
+    }
+}
+
+impl PannDatapath {
+    /// `x_width` is the activation bit width b̃_x; `acc_width` the
+    /// accumulator width `B`.
+    pub fn new(x_width: u32, acc_width: u32) -> Self {
+        assert!(x_width <= acc_width);
+        PannDatapath {
+            x_width,
+            acc_width,
+            acc: [0; 2],
+            prev_in: [0; 2],
+            prev_sum: [0; 2],
+            prev_ff: [0; 2],
+            prev_carry: [0; 2],
+        }
+    }
+
+    /// Current value: positive accumulator minus negative accumulator
+    /// (the single subtraction of Eq. (6), applied at read-out).
+    pub fn value(&self) -> i64 {
+        from_word(self.acc[0], self.acc_width) - from_word(self.acc[1], self.acc_width)
+    }
+
+    /// Start a new dot product.
+    pub fn clear_acc(&mut self) {
+        self.acc = [0; 2];
+    }
+
+    /// Process one element: add `qx` (non-negative, b̃_x bits) to the
+    /// accumulator `|qw|` times, on the positive or negative bank
+    /// according to `qw`'s sign.
+    pub fn element(&mut self, qw: i64, qx: i64) -> PannToggles {
+        debug_assert!(super::word::fits_unsigned(qx, self.x_width), "qx={qx} width={}", self.x_width);
+        let bank = usize::from(qw < 0);
+        let reps = qw.unsigned_abs();
+        let bw = self.acc_width;
+        let mut t = PannToggles::default();
+
+        // Load the input register once for the whole burst.
+        let in_bus = to_word(qx, bw);
+        t.input = hamming(in_bus, self.prev_in[bank]);
+        self.prev_in[bank] = in_bus;
+
+        for _ in 0..reps {
+            let carry = super::serial_mult::carry_bits(self.acc[bank], in_bus, bw);
+            t.carries += hamming(carry, self.prev_carry[bank]);
+            self.prev_carry[bank] = carry;
+            let sum = self.acc[bank].wrapping_add(in_bus) & mask(bw);
+            t.sum += hamming(sum, self.prev_sum[bank]);
+            self.prev_sum[bank] = sum;
+            t.ff += hamming(sum, self.prev_ff[bank]);
+            self.prev_ff[bank] = sum;
+            self.acc[bank] = sum;
+            t.additions += 1;
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitflip::{BoothMultiplier, SerialMultiplier};
+    use crate::util::Rng;
+
+    #[test]
+    fn mac_accumulates_exactly() {
+        let mut mac = MacUnit::new(BoothMultiplier::new(8, true), 32);
+        let mut r = Rng::new(21);
+        let mut expect = 0i64;
+        for _ in 0..1000 {
+            let w = r.range_i64(-128, 128);
+            let x = r.range_i64(-128, 128);
+            mac.mac(w, x);
+            expect += w * x;
+        }
+        assert_eq!(mac.value(), expect);
+    }
+
+    #[test]
+    fn signed_acc_input_near_half_b() {
+        // Observation 1: signed uniform products toggle ~0.5B bits at
+        // the accumulator input (B = 32 -> ~16).
+        let b = 4u32;
+        let mut mac = MacUnit::new(BoothMultiplier::new(b, true), 32);
+        let mut r = Rng::new(3);
+        let n = 20000;
+        let mut tot = 0u64;
+        for _ in 0..n {
+            let w = r.range_i64(-8, 8);
+            let x = r.range_i64(-8, 8);
+            tot += mac.mac(w, x).acc_input;
+        }
+        let avg = tot as f64 / n as f64;
+        assert!((avg - 16.0).abs() < 1.5, "avg acc-input toggles {avg}, expect ~16");
+    }
+
+    #[test]
+    fn unsigned_acc_input_near_bacc_half() {
+        // Unsigned: input toggles drop to ~0.5·b_acc = b.
+        let b = 4u32;
+        let mut mac = MacUnit::new(BoothMultiplier::new(b, false), 32);
+        let mut r = Rng::new(4);
+        let n = 20000;
+        let mut tot = 0u64;
+        for _ in 0..n {
+            let w = r.range_i64(0, 8); // [0, 2^{b-1})
+            let x = r.range_i64(0, 8);
+            tot += mac.mac(w, x).acc_input;
+        }
+        let avg = tot as f64 / n as f64;
+        assert!(avg < 6.0, "unsigned acc-input toggles {avg}, expect ~{b}");
+    }
+
+    #[test]
+    fn pann_value_matches_integer_dot() {
+        let mut dp = PannDatapath::new(6, 32);
+        let mut r = Rng::new(5);
+        let mut expect = 0i64;
+        for _ in 0..300 {
+            let qw = r.range_i64(-5, 6);
+            let qx = r.range_i64(0, 32);
+            dp.element(qw, qx);
+            expect += qw * qx;
+        }
+        assert_eq!(dp.value(), expect);
+    }
+
+    #[test]
+    fn pann_input_toggles_once_per_element() {
+        // The input bus must not toggle during a burst: element with
+        // qw=5 costs the same input toggles as qw=1.
+        let run = |qw: i64| {
+            let mut dp = PannDatapath::new(6, 32);
+            let mut r = Rng::new(6);
+            let n = 5000;
+            let mut tot = 0u64;
+            for _ in 0..n {
+                tot += dp.element(qw, r.range_i64(0, 32)).input;
+            }
+            tot as f64 / n as f64
+        };
+        let one = run(1);
+        let five = run(5);
+        assert!((one - five).abs() < 0.3, "input toggles {one} vs {five}");
+    }
+
+    #[test]
+    fn pann_sum_toggles_scale_with_reps() {
+        let run = |qw: i64| {
+            let mut dp = PannDatapath::new(6, 32);
+            let mut r = Rng::new(8);
+            let n = 4000;
+            let mut tot = 0u64;
+            for _ in 0..n {
+                let t = dp.element(qw, r.range_i64(0, 32));
+                tot += t.sum;
+            }
+            tot as f64 / n as f64
+        };
+        let r1 = run(1);
+        let r4 = run(4);
+        assert!(r4 > 3.0 * r1, "sum toggles should scale ~linearly: {r1} vs {r4}");
+    }
+
+    #[test]
+    fn serial_mac_matches_booth_mac_values() {
+        let mut a = MacUnit::new(BoothMultiplier::new(6, true), 24);
+        let mut b = MacUnit::new(SerialMultiplier::new(6, true), 24);
+        let mut r = Rng::new(9);
+        for _ in 0..500 {
+            let w = r.range_i64(-32, 32);
+            let x = r.range_i64(-32, 32);
+            a.mac(w, x);
+            b.mac(w, x);
+        }
+        assert_eq!(a.value(), b.value());
+    }
+}

@@ -1,0 +1,68 @@
+//! Bit-toggle activity simulators — the paper's power measurement
+//! methodology (Sec. 3, App. A.1–A.2).
+//!
+//! Dynamic power of a CMOS node is `P = C·V²·f·α` where `α` is the
+//! switching activity. Following the paper, we report power in units of
+//! **bit flips per instruction**: we simulate arithmetic units at the
+//! register level, remember the state every component held during the
+//! *previous* instruction, and count Hamming toggles against the state
+//! of the current instruction (cf. the paper's Fig. 7 walkthrough).
+//!
+//! Two fidelity levels are provided, mirroring the paper's two setups:
+//!
+//! - **Component level** ([`adder`], [`serial_mult`], [`booth`],
+//!   [`mac`]) — registers of the datapath (operand inputs, partial
+//!   product rows, running sums, carry chains, accumulator, flip-flop).
+//!   This is the analog of the paper's "Python simulation".
+//! - **Gate level** ([`gates`]) — an explicit netlist of AND/OR/XOR/NOT
+//!   cells built into ripple-carry adders and array multipliers, with
+//!   toggles counted at every gate output plus a per-gate leakage
+//!   constant for static power. This stands in for the paper's 5nm
+//!   Synopsys synthesis + PrimeTime PX measurement (see DESIGN.md
+//!   substitution table).
+//!
+//! All simulators are deterministic given a seeded [`crate::util::Rng`].
+
+pub mod adder;
+pub mod booth;
+pub mod gates;
+pub mod mac;
+pub mod sample;
+pub mod serial_mult;
+pub mod word;
+
+pub use adder::RippleAdder;
+pub use booth::BoothMultiplier;
+pub use mac::{MacToggles, MacUnit, PannDatapath};
+pub use sample::{Dist, Sampler};
+pub use serial_mult::SerialMultiplier;
+
+/// Toggle counts of one multiplier instruction, split by element
+/// (matches the paper's Table 1 rows).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct MultToggles {
+    /// Toggles in the two operand input registers.
+    pub inputs: u64,
+    /// Toggles in the internal units (partial-product rows, internal
+    /// adder sum registers and carry chains).
+    pub internal: u64,
+    /// Toggles in the product output register.
+    pub output: u64,
+}
+
+impl MultToggles {
+    /// Total toggles of the instruction.
+    pub fn total(&self) -> u64 {
+        self.inputs + self.internal + self.output
+    }
+}
+
+/// Common interface of the two multiplier implementations.
+pub trait Multiplier {
+    /// Multiply, updating internal state; returns the toggle breakdown.
+    fn mul(&mut self, w: i64, x: i64) -> (i64, MultToggles);
+    /// Output bit width (`2b` for a `b×b` multiplier).
+    fn out_width(&self) -> u32;
+    /// Reset the remembered state to all-zeros.
+    fn reset(&mut self);
+}

@@ -1,0 +1,134 @@
+//! Input distributions for the toggle experiments (paper App. A.2).
+//!
+//! - `UniformSigned(b)` — uniform over `[-2^{b-1}, 2^{b-1})`.
+//! - `UniformUnsigned(b)` — uniform over `[0, 2^{b-1})`; the paper uses
+//!   half the range so the multiplier architecture is unchanged
+//!   (App. A.4, last paragraph).
+//! - `GaussianSigned(b)` / `GaussianUnsigned(b)` — N(0,1) samples
+//!   normalized by the batch max-abs, scaled to `2^{b-1}`, rounded and
+//!   clipped (the paper's exact recipe with N = 36000).
+
+use crate::util::Rng;
+
+/// A quantized input distribution.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dist {
+    UniformSigned(u32),
+    UniformUnsigned(u32),
+    GaussianSigned(u32),
+    GaussianUnsigned(u32),
+}
+
+impl Dist {
+    /// Bit width of the distribution.
+    pub fn bits(&self) -> u32 {
+        match *self {
+            Dist::UniformSigned(b)
+            | Dist::UniformUnsigned(b)
+            | Dist::GaussianSigned(b)
+            | Dist::GaussianUnsigned(b) => b,
+        }
+    }
+
+    pub fn is_signed(&self) -> bool {
+        matches!(self, Dist::UniformSigned(_) | Dist::GaussianSigned(_))
+    }
+}
+
+/// Pre-generated sample stream from a [`Dist`].
+pub struct Sampler {
+    vals: Vec<i64>,
+    idx: usize,
+}
+
+impl Sampler {
+    /// Generate `n` samples (the paper uses N = 36000).
+    pub fn new(dist: Dist, n: usize, rng: &mut Rng) -> Self {
+        let b = dist.bits();
+        assert!((2..=16).contains(&b));
+        let half = 1i64 << (b - 1);
+        let vals: Vec<i64> = match dist {
+            Dist::UniformSigned(_) => (0..n).map(|_| rng.range_i64(-half, half)).collect(),
+            Dist::UniformUnsigned(_) => (0..n).map(|_| rng.range_i64(0, half)).collect(),
+            Dist::GaussianSigned(_) | Dist::GaussianUnsigned(_) => {
+                let unsigned = !dist.is_signed();
+                let raw: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+                let mx = raw.iter().fold(0.0f64, |m, x| m.max(x.abs())).max(1e-12);
+                raw.iter()
+                    .map(|&x| {
+                        let v = (x / mx * half as f64).round() as i64;
+                        let v = v.clamp(-half, half - 1);
+                        if unsigned {
+                            v.abs().min(half - 1)
+                        } else {
+                            v
+                        }
+                    })
+                    .collect()
+            }
+        };
+        Sampler { vals, idx: 0 }
+    }
+
+    /// Next sample (cycles through the buffer).
+    pub fn next(&mut self) -> i64 {
+        let v = self.vals[self.idx];
+        self.idx = (self.idx + 1) % self.vals.len();
+        v
+    }
+
+    pub fn len(&self) -> usize {
+        self.vals.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.vals.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranges_respected() {
+        let mut r = Rng::new(1);
+        for dist in [
+            Dist::UniformSigned(4),
+            Dist::UniformUnsigned(4),
+            Dist::GaussianSigned(4),
+            Dist::GaussianUnsigned(4),
+        ] {
+            let mut s = Sampler::new(dist, 5000, &mut r);
+            for _ in 0..5000 {
+                let v = s.next();
+                if dist.is_signed() {
+                    assert!((-8..8).contains(&v), "{dist:?} -> {v}");
+                } else {
+                    assert!((0..8).contains(&v), "{dist:?} -> {v}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_signed_covers_range() {
+        let mut r = Rng::new(2);
+        let mut s = Sampler::new(Dist::UniformSigned(3), 4000, &mut r);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..4000 {
+            seen.insert(s.next());
+        }
+        assert_eq!(seen.len(), 8); // all of [-4, 4)
+    }
+
+    #[test]
+    fn gaussian_concentrated_near_zero() {
+        let mut r = Rng::new(3);
+        let mut s = Sampler::new(Dist::GaussianSigned(8), 36000, &mut r);
+        let n = 36000;
+        let small = (0..n).filter(|_| s.next().abs() < 64).count();
+        // Most mass within half the range (the paper's Fig. 6b shape).
+        assert!(small as f64 / n as f64 > 0.9);
+    }
+}

@@ -1,0 +1,265 @@
+//! Simple serial (shift-and-add) multiplier with toggle accounting.
+//!
+//! The paper's App. A.2: "A serial multiplier follows the long
+//! multiplication concept in which each bit of the multiplicand
+//! multiplies the multiplier word", producing `b` partial products that
+//! are summed by a chain of adders. We model the datapath registers —
+//! one partial-product row per multiplicand bit, one running-sum
+//! register per chain stage, plus the carry chains — and count Hamming
+//! toggles against the previous instruction's state.
+//!
+//! Signed values use two's complement; a negative running sum has all
+//! high bits set, so sign changes of the (partial) product flip ~b high
+//! bits in every stage register. This is the structural origin of the
+//! paper's Observation 2: for signed inputs the internal activity is
+//! governed by `max(b_w, b_x)`, not by the smaller width.
+
+use super::word::{from_word, hamming, to_word};
+use super::{MultToggles, Multiplier};
+
+/// State of the partial-product accumulation chain shared by the serial
+/// and Booth multipliers: `b` row registers and `b` running-sum stages,
+/// all `2b` bits wide, with a carry chain per stage.
+#[derive(Clone, Debug)]
+pub(crate) struct Chain {
+    pub b: u32,
+    /// Previous-instruction row register contents (len b).
+    rows: Vec<u64>,
+    /// Previous-instruction running-sum registers (len b).
+    sums: Vec<u64>,
+    /// Previous-instruction carry chains (len b).
+    carries: Vec<u64>,
+}
+
+impl Chain {
+    pub fn new(b: u32) -> Self {
+        assert!((2..=16).contains(&b), "b={b} outside supported 2..=16");
+        Chain {
+            b,
+            rows: vec![0; b as usize],
+            sums: vec![0; b as usize],
+            carries: vec![0; b as usize],
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.rows.iter_mut().for_each(|r| *r = 0);
+        self.sums.iter_mut().for_each(|r| *r = 0);
+        self.carries.iter_mut().for_each(|r| *r = 0);
+    }
+
+    /// Feed the chain with this instruction's partial products
+    /// (signed row values, already shifted). Returns (product word,
+    /// internal toggle count).
+    pub fn accumulate(&mut self, row_vals: &[i64]) -> (u64, u64) {
+        debug_assert_eq!(row_vals.len(), self.b as usize);
+        let w2 = 2 * self.b;
+        let mut internal = 0u64;
+        let mut running: u64 = 0;
+        for (k, &rv) in row_vals.iter().enumerate() {
+            let row = to_word(rv, w2);
+            internal += hamming(row, self.rows[k]);
+            self.rows[k] = row;
+            let carry = carry_bits(running, row, w2);
+            internal += hamming(carry, self.carries[k]);
+            self.carries[k] = carry;
+            running = running.wrapping_add(row) & super::word::mask(w2);
+            internal += hamming(running, self.sums[k]);
+            self.sums[k] = running;
+        }
+        (running, internal)
+    }
+}
+
+/// Carry vector of `a + b` at `width` bits (bit i = carry out of i).
+pub(crate) fn carry_bits(a: u64, b: u64, width: u32) -> u64 {
+    let mut out = 0u64;
+    let mut c = 0u64;
+    for i in 0..width {
+        let ai = (a >> i) & 1;
+        let bi = (b >> i) & 1;
+        let cout = (ai & bi) | (c & (ai ^ bi));
+        out |= cout << i;
+        c = cout;
+    }
+    out
+}
+
+/// `b×b` serial multiplier.
+#[derive(Clone, Debug)]
+pub struct SerialMultiplier {
+    chain: Chain,
+    prev_w: u64,
+    prev_x: u64,
+    prev_out: u64,
+    signed: bool,
+}
+
+impl SerialMultiplier {
+    /// New `b×b` multiplier. `signed` selects the operand encoding: a
+    /// signed multiplier sign-extends the multiplicand (its top bit has
+    /// negative weight), an unsigned one treats all bits as positive.
+    pub fn new(b: u32, signed: bool) -> Self {
+        SerialMultiplier { chain: Chain::new(b), prev_w: 0, prev_x: 0, prev_out: 0, signed }
+    }
+
+    fn rows_for(&self, w: i64, x: i64) -> Vec<i64> {
+        let b = self.chain.b;
+        let ww = to_word(w, b);
+        (0..b)
+            .map(|i| {
+                let bit = (ww >> i) & 1;
+                if bit == 0 {
+                    0
+                } else if self.signed && i == b - 1 {
+                    // Two's complement: the top bit has weight -2^(b-1).
+                    -(x << i)
+                } else {
+                    x << i
+                }
+            })
+            .collect()
+    }
+}
+
+impl Multiplier for SerialMultiplier {
+    fn mul(&mut self, w: i64, x: i64) -> (i64, MultToggles) {
+        let b = self.chain.b;
+        if self.signed {
+            debug_assert!(super::word::fits_signed(w, b) && super::word::fits_signed(x, b));
+        } else {
+            debug_assert!(super::word::fits_unsigned(w, b) && super::word::fits_unsigned(x, b));
+        }
+        let ww = to_word(w, b);
+        let xw = to_word(x, b);
+        let inputs = hamming(ww, self.prev_w) + hamming(xw, self.prev_x);
+        self.prev_w = ww;
+        self.prev_x = xw;
+
+        let rows = self.rows_for(w, x);
+        let (prod_word, internal) = self.chain.accumulate(&rows);
+        let output = hamming(prod_word, self.prev_out);
+        self.prev_out = prod_word;
+
+        let prod = if self.signed {
+            from_word(prod_word, 2 * b)
+        } else {
+            prod_word as i64
+        };
+        (prod, MultToggles { inputs, internal, output })
+    }
+
+    fn out_width(&self) -> u32 {
+        2 * self.chain.b
+    }
+
+    fn reset(&mut self) {
+        self.chain.reset();
+        self.prev_w = 0;
+        self.prev_x = 0;
+        self.prev_out = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn exact_products_signed() {
+        for b in [3u32, 4, 6, 8] {
+            let mut m = SerialMultiplier::new(b, true);
+            let mut r = Rng::new(11);
+            let lo = -(1i64 << (b - 1));
+            let hi = 1i64 << (b - 1);
+            for _ in 0..2000 {
+                let w = r.range_i64(lo, hi);
+                let x = r.range_i64(lo, hi);
+                let (p, _) = m.mul(w, x);
+                assert_eq!(p, w * x, "b={b} {w}*{x}");
+            }
+        }
+    }
+
+    #[test]
+    fn exact_products_unsigned() {
+        for b in [2u32, 4, 8] {
+            let mut m = SerialMultiplier::new(b, false);
+            let mut r = Rng::new(12);
+            for _ in 0..2000 {
+                let w = r.range_i64(0, 1 << b);
+                let x = r.range_i64(0, 1 << b);
+                let (p, _) = m.mul(w, x);
+                assert_eq!(p, w * x, "b={b} {w}*{x}");
+            }
+        }
+    }
+
+    #[test]
+    fn repeat_instruction_is_free() {
+        let mut m = SerialMultiplier::new(8, true);
+        m.mul(-77, 103);
+        let (_, t) = m.mul(-77, 103);
+        assert_eq!(t.total(), 0);
+    }
+
+    #[test]
+    fn signed_internal_grows_quadratically() {
+        // Internal toggles for signed uniform inputs should scale ~b².
+        let measure = |b: u32| {
+            let mut m = SerialMultiplier::new(b, true);
+            let mut r = Rng::new(5);
+            let lo = -(1i64 << (b - 1));
+            let hi = 1i64 << (b - 1);
+            let n = 4000;
+            let mut tot = 0u64;
+            for _ in 0..n {
+                let (_, t) = m.mul(r.range_i64(lo, hi), r.range_i64(lo, hi));
+                tot += t.internal;
+            }
+            tot as f64 / n as f64
+        };
+        let p4 = measure(4);
+        let p8 = measure(8);
+        let ratio = p8 / p4;
+        assert!(ratio > 3.0 && ratio < 5.5, "quadratic-ish growth, got ratio {ratio}");
+    }
+
+    #[test]
+    fn unsigned_saves_when_bw_shrinks_but_signed_does_not() {
+        // Observation 2 (Fig. 11): with signed inputs, shrinking only
+        // b_w barely changes internal power; with unsigned inputs the
+        // save is substantial for the serial multiplier.
+        let b = 8u32;
+        let run = |signed: bool, bw: u32| {
+            let mut m = SerialMultiplier::new(b, signed);
+            let mut r = Rng::new(7);
+            let n = 6000;
+            let mut tot = 0u64;
+            for _ in 0..n {
+                let (wlo, whi, xlo, xhi) = if signed {
+                    (-(1i64 << (bw - 1)), 1i64 << (bw - 1), -(1i64 << (b - 1)), 1i64 << (b - 1))
+                } else {
+                    (0, 1i64 << (bw - 1), 0, 1i64 << (b - 1))
+                };
+                let (_, t) = m.mul(r.range_i64(wlo, whi), r.range_i64(xlo, xhi));
+                tot += t.internal;
+            }
+            tot as f64 / n as f64
+        };
+        let signed_full = run(true, 8);
+        let signed_small = run(true, 3);
+        let unsigned_full = run(false, 8);
+        let unsigned_small = run(false, 3);
+        // Signed: less than 35% reduction. Unsigned: more than 40%.
+        assert!(
+            signed_small > 0.65 * signed_full,
+            "signed {signed_small} vs {signed_full}"
+        );
+        assert!(
+            unsigned_small < 0.6 * unsigned_full,
+            "unsigned {unsigned_small} vs {unsigned_full}"
+        );
+    }
+}

@@ -1,0 +1,113 @@
+//! Fixed-width two's-complement word helpers.
+//!
+//! A *word* is the low `width` bits of an `i64`, stored in a `u64`.
+//! Sign extension / truncation follow two's-complement semantics, so a
+//! negative value has all bits above its magnitude set — the property
+//! responsible for the paper's Observation 1 (sign bits dominate
+//! accumulator-input toggling).
+
+/// Mask of the low `width` bits.
+#[inline]
+pub fn mask(width: u32) -> u64 {
+    debug_assert!(width <= 64);
+    if width == 64 {
+        u64::MAX
+    } else {
+        (1u64 << width) - 1
+    }
+}
+
+/// Encode `v` as a `width`-bit two's-complement word.
+#[inline]
+pub fn to_word(v: i64, width: u32) -> u64 {
+    (v as u64) & mask(width)
+}
+
+/// Decode a `width`-bit word back to a signed value.
+#[inline]
+pub fn from_word(w: u64, width: u32) -> i64 {
+    let m = mask(width);
+    let w = w & m;
+    if width < 64 && (w >> (width - 1)) & 1 == 1 {
+        (w | !m) as i64
+    } else {
+        w as i64
+    }
+}
+
+/// Hamming distance between two words (toggle count of a register).
+#[inline]
+pub fn hamming(a: u64, b: u64) -> u64 {
+    (a ^ b).count_ones() as u64
+}
+
+/// Does `v` fit in a signed `width`-bit word?
+pub fn fits_signed(v: i64, width: u32) -> bool {
+    if width >= 64 {
+        return true;
+    }
+    let lo = -(1i64 << (width - 1));
+    let hi = (1i64 << (width - 1)) - 1;
+    (lo..=hi).contains(&v)
+}
+
+/// Does `v` fit in an unsigned `width`-bit word?
+pub fn fits_unsigned(v: i64, width: u32) -> bool {
+    if v < 0 {
+        return false;
+    }
+    if width >= 63 {
+        return true;
+    }
+    v < (1i64 << width)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_signed() {
+        for width in [2u32, 4, 8, 16, 32] {
+            let lo = -(1i64 << (width - 1));
+            let hi = (1i64 << (width - 1)) - 1;
+            for v in [lo, lo + 1, -1, 0, 1, hi - 1, hi] {
+                assert_eq!(from_word(to_word(v, width), width), v, "w={width} v={v}");
+            }
+        }
+    }
+
+    #[test]
+    fn negative_words_have_high_bits() {
+        // -1 in 4 bits inside an 8-bit register view is 0b00001111,
+        // but sign-extended to 8 bits it is 0b11111111.
+        assert_eq!(to_word(-1, 4), 0b1111);
+        assert_eq!(to_word(-1, 8), 0b1111_1111);
+        assert_eq!(to_word(from_word(to_word(-1, 4), 4), 8), 0b1111_1111);
+    }
+
+    #[test]
+    fn hamming_basic() {
+        assert_eq!(hamming(0, 0), 0);
+        assert_eq!(hamming(0b1010, 0b0101), 4);
+        assert_eq!(hamming(u64::MAX, 0), 64);
+    }
+
+    #[test]
+    fn fits() {
+        assert!(fits_signed(-8, 4));
+        assert!(!fits_signed(8, 4));
+        assert!(fits_unsigned(15, 4));
+        assert!(!fits_unsigned(16, 4));
+        assert!(!fits_unsigned(-1, 4));
+    }
+
+    #[test]
+    fn wrap_mul_matches_word_math() {
+        // Products mod 2^(2b) equal word-encoded wrapping products.
+        for (a, b) in [(-8i64, 7i64), (3, -5), (-8, -8), (7, 7)] {
+            let p = a.wrapping_mul(b);
+            assert_eq!(from_word(to_word(p, 8), 8), p); // fits in 2b=8
+        }
+    }
+}

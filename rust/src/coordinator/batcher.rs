@@ -1,0 +1,79 @@
+//! Size/deadline dynamic batching.
+//!
+//! The batcher blocks for the first request, then drains the queue up
+//! to `max_batch` items or until `max_wait` elapses — the standard
+//! serving trade-off between batching efficiency and tail latency.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Collect a batch from `rx`. Returns `None` when the channel closed
+/// with nothing pending.
+pub fn collect_batch<T>(rx: &Receiver<T>, max_batch: usize, max_wait: Duration) -> Option<Vec<T>> {
+    let first = rx.recv().ok()?;
+    let mut batch = vec![first];
+    let deadline = Instant::now() + max_wait;
+    while batch.len() < max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(item) => batch.push(item),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    Some(batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn batches_up_to_max() {
+        let (tx, rx) = channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let b = collect_batch(&rx, 4, Duration::from_millis(5)).unwrap();
+        assert_eq!(b, vec![0, 1, 2, 3]);
+        let b = collect_batch(&rx, 100, Duration::from_millis(5)).unwrap();
+        assert_eq!(b.len(), 6);
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batch() {
+        let (tx, rx) = channel();
+        tx.send(1).unwrap();
+        let t0 = Instant::now();
+        let b = collect_batch(&rx, 8, Duration::from_millis(20)).unwrap();
+        assert_eq!(b, vec![1]);
+        assert!(t0.elapsed() >= Duration::from_millis(15));
+    }
+
+    #[test]
+    fn closed_channel_returns_none() {
+        let (tx, rx) = channel::<u32>();
+        drop(tx);
+        assert!(collect_batch(&rx, 4, Duration::from_millis(1)).is_none());
+    }
+
+    #[test]
+    fn no_request_lost() {
+        let (tx, rx) = channel();
+        let n = 137;
+        for i in 0..n {
+            tx.send(i).unwrap();
+        }
+        drop(tx);
+        let mut got = Vec::new();
+        while let Some(mut b) = collect_batch(&rx, 7, Duration::from_millis(1)) {
+            assert!(b.len() <= 7);
+            got.append(&mut b);
+        }
+        assert_eq!(got, (0..n).collect::<Vec<_>>());
+    }
+}

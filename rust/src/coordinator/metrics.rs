@@ -1,0 +1,103 @@
+//! Serving metrics: latency distribution, throughput, energy.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+#[derive(Default)]
+struct Inner {
+    latencies_us: Vec<f64>,
+    batches: u64,
+    requests: u64,
+    giga_flips: f64,
+    per_point: std::collections::BTreeMap<String, u64>,
+}
+
+/// Thread-safe metrics collector.
+#[derive(Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+    started: Option<Instant>,
+}
+
+/// A point-in-time snapshot for reports.
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub batches: u64,
+    pub mean_batch: f64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub throughput_rps: f64,
+    pub total_giga_flips: f64,
+    pub per_point: Vec<(String, u64)>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics { inner: Mutex::new(Inner::default()), started: Some(Instant::now()) }
+    }
+
+    /// Record one served batch.
+    pub fn record_batch(&self, point: &str, n: usize, latencies_us: &[f64], giga_flips: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.batches += 1;
+        g.requests += n as u64;
+        g.giga_flips += giga_flips;
+        g.latencies_us.extend_from_slice(latencies_us);
+        *g.per_point.entry(point.to_string()).or_insert(0) += n as u64;
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let g = self.inner.lock().unwrap();
+        let elapsed = self.started.map(|t| t.elapsed().as_secs_f64()).unwrap_or(1.0);
+        MetricsSnapshot {
+            requests: g.requests,
+            batches: g.batches,
+            mean_batch: if g.batches > 0 { g.requests as f64 / g.batches as f64 } else { 0.0 },
+            p50_us: crate::util::stats::percentile(&g.latencies_us, 50.0),
+            p99_us: crate::util::stats::percentile(&g.latencies_us, 99.0),
+            throughput_rps: g.requests as f64 / elapsed.max(1e-9),
+            total_giga_flips: g.giga_flips,
+            per_point: g.per_point.iter().map(|(k, v)| (k.clone(), *v)).collect(),
+        }
+    }
+}
+
+impl MetricsSnapshot {
+    pub fn report(&self) -> String {
+        let mut s = format!(
+            "requests={} batches={} (mean batch {:.2})\nlatency p50={:.0}µs p99={:.0}µs  throughput={:.0} req/s\nenergy={:.4} Gflips total ({:.5} Gflips/req)\n",
+            self.requests,
+            self.batches,
+            self.mean_batch,
+            self.p50_us,
+            self.p99_us,
+            self.throughput_rps,
+            self.total_giga_flips,
+            self.total_giga_flips / self.requests.max(1) as f64,
+        );
+        for (k, v) in &self.per_point {
+            s.push_str(&format!("  point {k}: {v} requests\n"));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates() {
+        let m = Metrics::new();
+        m.record_batch("p4", 3, &[100.0, 200.0, 300.0], 0.5);
+        m.record_batch("p8", 1, &[400.0], 0.4);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 4);
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.mean_batch, 2.0);
+        assert!((s.total_giga_flips - 0.9).abs() < 1e-12);
+        assert_eq!(s.per_point.len(), 2);
+        assert!(s.p99_us >= s.p50_us);
+    }
+}

@@ -1,0 +1,23 @@
+//! L3 serving coordinator: power-budget-aware batched inference.
+//!
+//! The deployment claim of the paper (Sec. 6) is that PANN traverses
+//! the power–accuracy trade-off **without hardware changes** — moving
+//! between equal-power curves only re-parameterizes `(b̃_x, R)`. This
+//! coordinator operationalizes that: it owns a menu of compiled
+//! operating points (fp32 + one PANN executable per power budget,
+//! produced by `make artifacts`), batches incoming requests, and
+//! serves each batch with the best point under the *current* energy
+//! budget — which can be changed at runtime without reloading models.
+//!
+//! Components: [`policy`] (budget → operating point), [`batcher`]
+//! (size/deadline batching), [`metrics`] (latency/energy accounting),
+//! [`server`] (worker thread + handle).
+
+pub mod batcher;
+pub mod metrics;
+pub mod policy;
+pub mod server;
+
+pub use metrics::MetricsSnapshot;
+pub use policy::{EnginePoint, PowerPolicy};
+pub use server::{Engine, Server, ServerConfig, ServerHandle};

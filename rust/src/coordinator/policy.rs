@@ -1,0 +1,123 @@
+//! Budget → operating-point selection.
+//!
+//! Operating points are ordered by energy per sample; on the PANN menu
+//! accuracy is monotone in energy (Fig. 1 / Table 2), so the policy
+//! picks the most expensive point that fits the budget. fp32 is
+//! modeled as unbounded cost: it is chosen only when the budget is
+//! infinite (no power cap).
+
+use super::server::Engine;
+
+/// One selectable operating point.
+pub struct EnginePoint {
+    pub name: String,
+    /// Energy per sample in Giga bit flips; `f64::INFINITY` for fp32.
+    pub giga_flips_per_sample: f64,
+    pub engine: Box<dyn Engine>,
+}
+
+/// The selection policy over a menu of points.
+pub struct PowerPolicy {
+    /// Sorted ascending by energy.
+    points: Vec<EnginePoint>,
+}
+
+impl PowerPolicy {
+    /// Build from an unsorted menu. Panics on an empty menu.
+    pub fn new(mut points: Vec<EnginePoint>) -> Self {
+        assert!(!points.is_empty(), "empty operating-point menu");
+        points.sort_by(|a, b| {
+            a.giga_flips_per_sample
+                .partial_cmp(&b.giga_flips_per_sample)
+                .unwrap()
+        });
+        PowerPolicy { points }
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Index of the best point under `budget_gflips` per sample.
+    /// Falls back to the cheapest point when nothing fits.
+    pub fn select(&self, budget_gflips: f64) -> usize {
+        let mut best = 0;
+        for (i, p) in self.points.iter().enumerate() {
+            if p.giga_flips_per_sample <= budget_gflips {
+                best = i;
+            } else {
+                break;
+            }
+        }
+        best
+    }
+
+    pub fn point(&self, idx: usize) -> &EnginePoint {
+        &self.points[idx]
+    }
+
+    pub fn point_mut(&mut self, idx: usize) -> &mut EnginePoint {
+        &mut self.points[idx]
+    }
+
+    /// Names + energies, cheapest first (for reports).
+    pub fn menu(&self) -> Vec<(String, f64)> {
+        self.points
+            .iter()
+            .map(|p| (p.name.clone(), p.giga_flips_per_sample))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::server::tests_support::MockEngine;
+
+    fn menu() -> PowerPolicy {
+        PowerPolicy::new(vec![
+            EnginePoint {
+                name: "p8".into(),
+                giga_flips_per_sample: 0.8,
+                engine: Box::new(MockEngine::new(4, 4, 2)),
+            },
+            EnginePoint {
+                name: "p2".into(),
+                giga_flips_per_sample: 0.1,
+                engine: Box::new(MockEngine::new(4, 4, 2)),
+            },
+            EnginePoint {
+                name: "fp32".into(),
+                giga_flips_per_sample: f64::INFINITY,
+                engine: Box::new(MockEngine::new(4, 4, 2)),
+            },
+            EnginePoint {
+                name: "p4".into(),
+                giga_flips_per_sample: 0.3,
+                engine: Box::new(MockEngine::new(4, 4, 2)),
+            },
+        ])
+    }
+
+    #[test]
+    fn selects_best_under_budget() {
+        let p = menu();
+        assert_eq!(p.point(p.select(0.05)).name, "p2"); // nothing fits -> cheapest
+        assert_eq!(p.point(p.select(0.1)).name, "p2");
+        assert_eq!(p.point(p.select(0.5)).name, "p4");
+        assert_eq!(p.point(p.select(2.0)).name, "p8");
+        assert_eq!(p.point(p.select(f64::INFINITY)).name, "fp32");
+    }
+
+    #[test]
+    fn menu_sorted() {
+        let p = menu();
+        let m = p.menu();
+        assert_eq!(m[0].0, "p2");
+        assert_eq!(m[3].0, "fp32");
+    }
+}

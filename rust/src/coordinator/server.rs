@@ -1,0 +1,444 @@
+//! The serving loop: a worker thread that owns the operating-point
+//! menu, batches requests, selects the point for the current power
+//! budget, executes, and responds.
+
+use super::metrics::{Metrics, MetricsSnapshot};
+use super::policy::{EnginePoint, PowerPolicy};
+use anyhow::Result;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+/// An inference backend behind one operating point — either a PJRT
+/// executable ([`crate::runtime::LoadedModel`]) or the native integer
+/// engine ([`crate::nn::QuantizedModel`]).
+///
+/// PJRT handles are not `Send`, so engines are constructed *inside*
+/// the worker thread via the factory passed to [`Server::start`] and
+/// never cross a thread boundary afterwards.
+pub trait Engine {
+    /// Largest batch one call may carry.
+    fn max_batch(&self) -> usize;
+    /// Flattened per-sample input length.
+    fn sample_len(&self) -> usize;
+    /// Run `n` samples (`x.len() == n * sample_len()`); returns
+    /// flattened outputs (`n × out_len`).
+    fn infer(&mut self, x: &[f32], n: usize) -> Result<Vec<f32>>;
+}
+
+impl Engine for crate::runtime::LoadedModel {
+    fn max_batch(&self) -> usize {
+        self.batch
+    }
+    fn sample_len(&self) -> usize {
+        self.sample_len
+    }
+    fn infer(&mut self, x: &[f32], n: usize) -> Result<Vec<f32>> {
+        self.run_padded(x, n)
+    }
+}
+
+/// Native-engine adapter (serves without PJRT artifacts).
+pub struct NativeEngine {
+    pub qm: crate::nn::QuantizedModel,
+    pub sample_shape: Vec<usize>,
+}
+
+impl Engine for NativeEngine {
+    fn max_batch(&self) -> usize {
+        64
+    }
+    fn sample_len(&self) -> usize {
+        self.sample_shape.iter().product()
+    }
+    fn infer(&mut self, x: &[f32], n: usize) -> Result<Vec<f32>> {
+        let mut shape = vec![n];
+        shape.extend_from_slice(&self.sample_shape);
+        let t = crate::nn::Tensor::new(shape, x.to_vec())?;
+        let mut meter = self.qm.new_meter();
+        Ok(self.qm.forward(&t, &mut meter)?.data)
+    }
+}
+
+/// Server configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ServerConfig {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    /// Initial energy budget per sample, Giga bit flips.
+    pub budget_gflips: f64,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            budget_gflips: f64::INFINITY,
+        }
+    }
+}
+
+struct Request {
+    input: Vec<f32>,
+    submitted: Instant,
+    resp: mpsc::Sender<Response>,
+}
+
+/// Worker mailbox message.
+enum Msg {
+    Req(Request),
+    /// Graceful stop (cloned handles may outlive the server, so a
+    /// sender-disconnect alone cannot signal shutdown).
+    Stop,
+}
+
+/// Collect a batch of requests; returns (batch, stop_seen). `None`
+/// means the channel closed or a stop arrived with nothing pending.
+fn collect_requests(
+    rx: &mpsc::Receiver<Msg>,
+    max_batch: usize,
+    max_wait: Duration,
+) -> Option<(Vec<Request>, bool)> {
+    let first = loop {
+        match rx.recv() {
+            Ok(Msg::Req(r)) => break r,
+            Ok(Msg::Stop) | Err(_) => return None,
+        }
+    };
+    let mut batch = vec![first];
+    let mut stop = false;
+    let deadline = Instant::now() + max_wait;
+    while batch.len() < max_batch && !stop {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(Msg::Req(r)) => batch.push(r),
+            Ok(Msg::Stop) => stop = true,
+            Err(_) => break,
+        }
+    }
+    Some((batch, stop))
+}
+
+/// One served response.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub output: Vec<f32>,
+    /// Operating point that served the request.
+    pub point: String,
+    pub latency: Duration,
+    /// Energy charged to this request (Giga bit flips).
+    pub giga_flips: f64,
+}
+
+/// Client handle: submit requests, change the budget, read metrics.
+#[derive(Clone)]
+pub struct ServerHandle {
+    tx: mpsc::Sender<Msg>,
+    budget_bits: Arc<AtomicU64>,
+    metrics: Arc<Metrics>,
+    sample_len: usize,
+}
+
+impl ServerHandle {
+    /// Submit one sample; returns the channel the response arrives on.
+    pub fn submit(&self, input: Vec<f32>) -> Result<mpsc::Receiver<Response>> {
+        anyhow::ensure!(input.len() == self.sample_len, "bad input length {}", input.len());
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Req(Request { input, submitted: Instant::now(), resp: tx }))
+            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        Ok(rx)
+    }
+
+    /// Blocking convenience: submit and wait.
+    pub fn infer(&self, input: Vec<f32>) -> Result<Response> {
+        Ok(self.submit(input)?.recv()?)
+    }
+
+    /// Change the per-sample energy budget at runtime — the paper's
+    /// "traverse the power-accuracy trade-off at deployment time".
+    pub fn set_budget(&self, gflips: f64) {
+        self.budget_bits.store(gflips.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn budget(&self) -> f64 {
+        f64::from_bits(self.budget_bits.load(Ordering::Relaxed))
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+}
+
+/// The server: spawns the worker thread.
+pub struct Server {
+    handle: ServerHandle,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start serving. `factory` builds the operating-point menu on the
+    /// worker thread (PJRT executables are not `Send`); `sample_len`
+    /// is the flattened per-sample input length the menu expects.
+    pub fn start<F>(factory: F, sample_len: usize, config: ServerConfig) -> Result<Server>
+    where
+        F: FnOnce() -> Result<Vec<EnginePoint>> + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let budget_bits = Arc::new(AtomicU64::new(config.budget_gflips.to_bits()));
+        let metrics = Arc::new(Metrics::new());
+        let handle = ServerHandle {
+            tx,
+            budget_bits: budget_bits.clone(),
+            metrics: metrics.clone(),
+            sample_len,
+        };
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let worker = std::thread::spawn(move || {
+            let mut policy = match factory() {
+                Ok(points) if !points.is_empty() => {
+                    let _ = ready_tx.send(Ok(()));
+                    PowerPolicy::new(points)
+                }
+                Ok(_) => {
+                    let _ = ready_tx.send(Err(anyhow::anyhow!("empty operating-point menu")));
+                    return;
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
+            while let Some((batch, stop)) = collect_requests(&rx, config.max_batch, config.max_wait)
+            {
+                let budget = f64::from_bits(budget_bits.load(Ordering::Relaxed));
+                let idx = policy.select(budget);
+                let (name, gf) = {
+                    let p = policy.point(idx);
+                    (p.name.clone(), p.giga_flips_per_sample)
+                };
+                serve_batch(policy.point_mut(idx), &name, gf, batch, &metrics);
+                if stop {
+                    break;
+                }
+            }
+        });
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("server worker died during startup"))??;
+        Ok(Server { handle, worker: Some(worker) })
+    }
+
+    pub fn handle(&self) -> ServerHandle {
+        self.handle.clone()
+    }
+
+    /// Stop the worker (requests already queued before the stop are
+    /// drained; cloned handles then observe send errors).
+    pub fn shutdown(mut self) {
+        let _ = self.handle.tx.send(Msg::Stop);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn serve_batch(
+    point: &mut EnginePoint,
+    name: &str,
+    gf_per_sample: f64,
+    batch: Vec<Request>,
+    metrics: &Metrics,
+) {
+    let eng = point.engine.as_mut();
+    let sample_len = eng.sample_len();
+    let max_b = eng.max_batch().max(1);
+    let mut start = 0;
+    while start < batch.len() {
+        let n = (batch.len() - start).min(max_b);
+        let chunk = &batch[start..start + n];
+        let mut flat = Vec::with_capacity(n * sample_len);
+        for r in chunk {
+            flat.extend_from_slice(&r.input);
+        }
+        match eng.infer(&flat, n) {
+            Ok(out) => {
+                let ol = out.len() / n;
+                let lats: Vec<f64> = chunk
+                    .iter()
+                    .map(|r| r.submitted.elapsed().as_secs_f64() * 1e6)
+                    .collect();
+                let batch_gf = if gf_per_sample.is_finite() {
+                    gf_per_sample * n as f64
+                } else {
+                    0.0
+                };
+                // record *before* responding so a client that has its
+                // response always observes it in the metrics
+                metrics.record_batch(name, n, &lats, batch_gf);
+                for (i, r) in chunk.iter().enumerate() {
+                    let _ = r.resp.send(Response {
+                        output: out[i * ol..(i + 1) * ol].to_vec(),
+                        point: name.to_string(),
+                        latency: Duration::from_secs_f64(lats[i] * 1e-6),
+                        giga_flips: if gf_per_sample.is_finite() { gf_per_sample } else { 0.0 },
+                    });
+                }
+            }
+            Err(e) => {
+                // drop the senders: receivers observe RecvError
+                eprintln!("serve error on {name}: {e:#}");
+            }
+        }
+        start += n;
+    }
+}
+
+/// Mock engines for unit tests.
+#[cfg(test)]
+pub(crate) mod tests_support {
+    use super::*;
+
+    /// Echo-sum engine: out[j] = sum(input) + j.
+    pub struct MockEngine {
+        pub max_b: usize,
+        pub in_len: usize,
+        pub out_len: usize,
+    }
+
+    impl MockEngine {
+        pub fn new(max_b: usize, in_len: usize, out_len: usize) -> Self {
+            MockEngine { max_b, in_len, out_len }
+        }
+    }
+
+    impl Engine for MockEngine {
+        fn max_batch(&self) -> usize {
+            self.max_b
+        }
+        fn sample_len(&self) -> usize {
+            self.in_len
+        }
+        fn infer(&mut self, x: &[f32], n: usize) -> Result<Vec<f32>> {
+            let mut out = Vec::with_capacity(n * self.out_len);
+            for i in 0..n {
+                let s: f32 = x[i * self.in_len..(i + 1) * self.in_len].iter().sum();
+                for j in 0..self.out_len {
+                    out.push(s + j as f32);
+                }
+            }
+            Ok(out)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::tests_support::MockEngine;
+    use super::*;
+
+    fn points() -> Vec<EnginePoint> {
+        vec![
+            EnginePoint {
+                name: "cheap".into(),
+                giga_flips_per_sample: 0.1,
+                engine: Box::new(MockEngine::new(4, 3, 2)),
+            },
+            EnginePoint {
+                name: "rich".into(),
+                giga_flips_per_sample: 0.9,
+                engine: Box::new(MockEngine::new(4, 3, 2)),
+            },
+        ]
+    }
+
+    #[test]
+    fn serves_and_responds() {
+        let srv = Server::start(|| Ok(points()), 3, ServerConfig {
+            budget_gflips: 1.0,
+            ..Default::default()
+        })
+        .unwrap();
+        let h = srv.handle();
+        let r = h.infer(vec![1.0, 2.0, 3.0]).unwrap();
+        assert_eq!(r.output, vec![6.0, 7.0]);
+        assert_eq!(r.point, "rich");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn budget_traversal_switches_point() {
+        let srv = Server::start(|| Ok(points()), 3, ServerConfig {
+            budget_gflips: 1.0,
+            ..Default::default()
+        })
+        .unwrap();
+        let h = srv.handle();
+        assert_eq!(h.infer(vec![0.0; 3]).unwrap().point, "rich");
+        h.set_budget(0.2);
+        assert_eq!(h.infer(vec![0.0; 3]).unwrap().point, "cheap");
+        h.set_budget(5.0);
+        assert_eq!(h.infer(vec![0.0; 3]).unwrap().point, "rich");
+        let m = h.metrics();
+        assert_eq!(m.requests, 3);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients_all_served() {
+        let srv = Server::start(|| Ok(points()), 3, ServerConfig::default()).unwrap();
+        let h = srv.handle();
+        let mut joins = Vec::new();
+        for t in 0..8 {
+            let h = h.clone();
+            joins.push(std::thread::spawn(move || {
+                let mut ok = 0;
+                for i in 0..25 {
+                    let v = (t * 100 + i) as f32;
+                    let r = h.infer(vec![v, 0.0, 0.0]).unwrap();
+                    assert_eq!(r.output[0], v);
+                    ok += 1;
+                }
+                ok
+            }));
+        }
+        let total: usize = joins.into_iter().map(|j| j.join().unwrap()).sum();
+        assert_eq!(total, 200);
+        let m = h.metrics();
+        assert_eq!(m.requests, 200);
+        assert!(m.batches <= 200);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn rejects_bad_input_length() {
+        let srv = Server::start(|| Ok(points()), 3, ServerConfig::default()).unwrap();
+        let h = srv.handle();
+        assert!(h.submit(vec![1.0]).is_err());
+        srv.shutdown();
+    }
+
+    #[test]
+    fn oversized_batches_split_across_engine_calls() {
+        // engine max_batch = 4, server max_batch = 16: a burst of 10
+        // must still produce 10 correct responses.
+        let srv = Server::start(|| Ok(points()), 3, ServerConfig {
+            max_batch: 16,
+            max_wait: Duration::from_millis(30),
+            budget_gflips: 1.0,
+        })
+        .unwrap();
+        let h = srv.handle();
+        let rxs: Vec<_> = (0..10)
+            .map(|i| h.submit(vec![i as f32, 0.0, 0.0]).unwrap())
+            .collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            assert_eq!(rx.recv().unwrap().output[0], i as f32);
+        }
+        srv.shutdown();
+    }
+}

@@ -1,0 +1,124 @@
+//! Dataset loading from `artifacts/data/<name>/` (written by
+//! `python -m compile.datasets`).
+
+use super::tensor_io::{read_tensor, TensorData};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// A classification dataset split: inputs `[n, ...]` and labels `[n]`.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// Input shape per sample (without the leading batch dim).
+    pub sample_shape: Vec<usize>,
+    /// Flattened inputs, `n × prod(sample_shape)`.
+    pub x: Vec<f32>,
+    /// Labels.
+    pub y: Vec<u32>,
+    pub classes: usize,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    /// Size of one flattened sample.
+    pub fn sample_len(&self) -> usize {
+        self.sample_shape.iter().product()
+    }
+
+    /// Input slice of sample `i`.
+    pub fn sample(&self, i: usize) -> &[f32] {
+        let d = self.sample_len();
+        &self.x[i * d..(i + 1) * d]
+    }
+
+    /// First `n` samples as a new dataset (cheap experiment subsets).
+    pub fn take(&self, n: usize) -> Dataset {
+        let n = n.min(self.len());
+        let d = self.sample_len();
+        Dataset {
+            sample_shape: self.sample_shape.clone(),
+            x: self.x[..n * d].to_vec(),
+            y: self.y[..n].to_vec(),
+            classes: self.classes,
+        }
+    }
+
+    /// Load the split `"train"` / `"test"` / `"calib"` from a dataset
+    /// directory containing `<split>_x.ptns` and `<split>_y.ptns`.
+    pub fn load(dir: &Path, split: &str) -> Result<Dataset> {
+        let xt = read_tensor(&dir.join(format!("{split}_x.ptns")))?;
+        let yt = read_tensor(&dir.join(format!("{split}_y.ptns")))?;
+        let (xshape, x) = xt.into_f32().context("inputs must be f32")?;
+        let (yshape, yraw) = match yt {
+            TensorData::I32(s, d) => (s, d),
+            other => bail!("labels must be i32, got {:?}", other.shape()),
+        };
+        if xshape.is_empty() || yshape.len() != 1 || xshape[0] != yshape[0] {
+            bail!("shape mismatch: x {xshape:?} vs y {yshape:?}");
+        }
+        let y: Vec<u32> = yraw
+            .iter()
+            .map(|&v| {
+                if v < 0 {
+                    bail!("negative label {v}")
+                } else {
+                    Ok(v as u32)
+                }
+            })
+            .collect::<Result<_>>()?;
+        let classes = y.iter().copied().max().unwrap_or(0) as usize + 1;
+        Ok(Dataset { sample_shape: xshape[1..].to_vec(), x, y, classes })
+    }
+
+    /// Build from an in-memory [`super::synth::SynthBatch`].
+    pub fn from_synth(b: super::synth::SynthBatch) -> Dataset {
+        let sample_shape = if b.h == 1 && b.w == 1 {
+            vec![b.c]
+        } else {
+            vec![b.c, b.h, b.w]
+        };
+        Dataset { sample_shape, x: b.x, y: b.y, classes: b.classes }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::tensor_io::write_tensor;
+
+    #[test]
+    fn roundtrip_via_files() {
+        let dir = std::env::temp_dir().join("pann_test_ds");
+        std::fs::create_dir_all(&dir).unwrap();
+        let x = TensorData::F32(vec![3, 2, 2], (0..12).map(|i| i as f32).collect());
+        let y = TensorData::I32(vec![3], vec![0, 2, 1]);
+        write_tensor(&dir.join("test_x.ptns"), &x).unwrap();
+        write_tensor(&dir.join("test_y.ptns"), &y).unwrap();
+        let ds = Dataset::load(&dir, "test").unwrap();
+        assert_eq!(ds.len(), 3);
+        assert_eq!(ds.sample_shape, vec![2, 2]);
+        assert_eq!(ds.classes, 3);
+        assert_eq!(ds.sample(1), &[4.0, 5.0, 6.0, 7.0]);
+    }
+
+    #[test]
+    fn from_synth_works() {
+        let ds = Dataset::from_synth(crate::data::synth::digits(8, 1));
+        assert_eq!(ds.sample_shape, vec![1, 16, 16]);
+        assert_eq!(ds.len(), 8);
+    }
+
+    #[test]
+    fn take_subsets() {
+        let ds = Dataset::from_synth(crate::data::synth::blobs(20, 2));
+        let s = ds.take(5);
+        assert_eq!(s.len(), 5);
+        assert_eq!(s.sample(4), ds.sample(4));
+    }
+}

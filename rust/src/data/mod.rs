@@ -1,0 +1,14 @@
+//! Datasets and the binary tensor interchange format.
+//!
+//! `python/compile/datasets.py` generates the synthetic corpora at
+//! build time (`make artifacts`) and writes them in the `.ptns` binary
+//! tensor format implemented by [`tensor_io`]; the Rust side loads them
+//! for the PTQ experiments. [`synth`] additionally provides pure-Rust
+//! generators so unit tests and benches run without artifacts.
+
+pub mod dataset;
+pub mod synth;
+pub mod tensor_io;
+
+pub use dataset::Dataset;
+pub use tensor_io::{read_tensor, write_tensor, TensorData};

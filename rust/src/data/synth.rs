@@ -1,0 +1,171 @@
+//! Pure-Rust synthetic data generators.
+//!
+//! These mirror (in spirit, not bit-for-bit) the build-time generators
+//! of `python/compile/datasets.py`, so unit tests, benches and the
+//! quickstart example run even before `make artifacts`. The ImageNet /
+//! CIFAR / MHEALTH corpora of the paper are substituted by these
+//! generators per DESIGN.md.
+
+use crate::util::Rng;
+
+/// A labelled classification batch: images `[n, c, h, w]` flattened
+/// row-major, labels in `[0, classes)`.
+#[derive(Clone, Debug)]
+pub struct SynthBatch {
+    pub x: Vec<f32>,
+    pub y: Vec<u32>,
+    pub n: usize,
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    pub classes: usize,
+}
+
+/// 16×16 single-channel "digit glyph" images: each class is a fixed
+/// stroke pattern on a 4×4 cell grid, rendered with random intensity,
+/// translation jitter and additive noise — a stand-in for small-image
+/// classification (CIFAR/ImageNet rows of the paper).
+pub fn digits(n: usize, seed: u64) -> SynthBatch {
+    let (h, w, classes) = (16usize, 16usize, 10usize);
+    // Stroke masks per class on a 4x4 grid (1 = lit cell), loosely
+    // seven-segment-like so classes share local features.
+    const GLYPHS: [[u8; 16]; 10] = [
+        [1, 1, 1, 1, 1, 0, 0, 1, 1, 0, 0, 1, 1, 1, 1, 1], // 0 ring
+        [0, 0, 1, 0, 0, 1, 1, 0, 0, 0, 1, 0, 0, 1, 1, 1], // 1
+        [1, 1, 1, 0, 0, 0, 1, 0, 0, 1, 0, 0, 1, 1, 1, 1], // 2
+        [1, 1, 1, 1, 0, 0, 1, 1, 0, 0, 0, 1, 1, 1, 1, 1], // 3
+        [1, 0, 0, 1, 1, 0, 0, 1, 1, 1, 1, 1, 0, 0, 0, 1], // 4
+        [1, 1, 1, 1, 1, 1, 0, 0, 0, 0, 1, 1, 1, 1, 1, 0], // 5
+        [0, 1, 1, 0, 1, 0, 0, 0, 1, 1, 1, 0, 1, 1, 1, 1], // 6
+        [1, 1, 1, 1, 0, 0, 0, 1, 0, 0, 1, 0, 0, 1, 0, 0], // 7
+        [0, 1, 1, 0, 1, 1, 1, 1, 1, 0, 0, 1, 0, 1, 1, 0], // 8
+        [1, 1, 1, 1, 1, 0, 1, 1, 0, 0, 0, 1, 0, 1, 1, 0], // 9
+    ];
+    let mut rng = Rng::new(seed);
+    let mut x = vec![0.0f32; n * h * w];
+    let mut y = vec![0u32; n];
+    for img in 0..n {
+        let cls = rng.below(classes);
+        y[img] = cls as u32;
+        let dy = rng.range_i64(-1, 2) as isize;
+        let dx = rng.range_i64(-1, 2) as isize;
+        let gain = 0.7 + 0.3 * rng.f32();
+        for py in 0..h {
+            for px in 0..w {
+                let gy = ((py as isize - dy).clamp(0, 15) as usize) / 4;
+                let gx = ((px as isize - dx).clamp(0, 15) as usize) / 4;
+                let lit = GLYPHS[cls][gy * 4 + gx] as f32;
+                let noise = 0.08 * rng.normal() as f32;
+                x[img * h * w + py * w + px] = (lit * gain + noise).clamp(0.0, 1.0);
+            }
+        }
+    }
+    SynthBatch { x, y, n, c: 1, h, w, classes }
+}
+
+/// 64-dimensional Gaussian-mixture classification ("blobs"): class
+/// means on a scaled hypercube, isotropic noise — the MLP workload.
+pub fn blobs(n: usize, seed: u64) -> SynthBatch {
+    let (dim, classes) = (64usize, 10usize);
+    let mut rng = Rng::new(seed ^ 0x5107);
+    // fixed class means
+    let mut means = vec![0.0f32; classes * dim];
+    let mut mrng = Rng::new(77);
+    for m in means.iter_mut() {
+        *m = mrng.normal() as f32 * 1.2;
+    }
+    let mut x = vec![0.0f32; n * dim];
+    let mut y = vec![0u32; n];
+    for i in 0..n {
+        let cls = rng.below(classes);
+        y[i] = cls as u32;
+        for j in 0..dim {
+            x[i * dim + j] = means[cls * dim + j] + rng.normal() as f32 * 0.9;
+        }
+    }
+    SynthBatch { x, y, n, c: dim, h: 1, w: 1, classes }
+}
+
+/// MHEALTH-like activity windows: 6 synthetic IMU channels × 32 time
+/// steps; each of 12 activities is a characteristic mixture of
+/// sinusoids + drift + noise. Flattened to `[n, 6*32]`.
+pub fn har(n: usize, seed: u64) -> SynthBatch {
+    let (ch, t, classes) = (6usize, 32usize, 12usize);
+    let mut rng = Rng::new(seed ^ 0xA11_0_4A2);
+    let mut x = vec![0.0f32; n * ch * t];
+    let mut y = vec![0u32; n];
+    for i in 0..n {
+        let cls = rng.below(classes);
+        y[i] = cls as u32;
+        let freq = 0.5 + 0.35 * cls as f32;
+        let amp = 0.4 + 0.12 * (cls % 4) as f32;
+        let phase = rng.f32() * std::f32::consts::TAU;
+        for c in 0..ch {
+            let cshift = c as f32 * 0.7;
+            for s in 0..t {
+                let tt = s as f32 / t as f32;
+                let sig = amp * (freq * std::f32::consts::TAU * tt * 4.0 + phase + cshift).sin()
+                    + 0.1 * (cls as f32 / classes as f32)
+                    + 0.15 * rng.normal() as f32;
+                x[i * ch * t + c * t + s] = sig;
+            }
+        }
+    }
+    SynthBatch { x, y, n, c: ch * t, h: 1, w: 1, classes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn digits_shapes_and_labels() {
+        let b = digits(64, 1);
+        assert_eq!(b.x.len(), 64 * 256);
+        assert_eq!(b.y.len(), 64);
+        assert!(b.y.iter().all(|&c| c < 10));
+        assert!(b.x.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = digits(16, 7);
+        let b = digits(16, 7);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+    }
+
+    #[test]
+    fn classes_distinguishable() {
+        // Mean images of different classes must differ substantially —
+        // otherwise the dataset carries no signal.
+        let b = digits(500, 3);
+        let hw = 256;
+        let mut means = vec![vec![0.0f64; hw]; 10];
+        let mut counts = [0usize; 10];
+        for i in 0..b.n {
+            let c = b.y[i] as usize;
+            counts[c] += 1;
+            for j in 0..hw {
+                means[c][j] += b.x[i * hw + j] as f64;
+            }
+        }
+        for c in 0..10 {
+            for v in means[c].iter_mut() {
+                *v /= counts[c].max(1) as f64;
+            }
+        }
+        let dist01: f64 = (0..hw).map(|j| (means[0][j] - means[1][j]).powi(2)).sum();
+        assert!(dist01 > 1.0, "class means too close: {dist01}");
+    }
+
+    #[test]
+    fn blobs_and_har_shapes() {
+        let b = blobs(32, 1);
+        assert_eq!(b.x.len(), 32 * 64);
+        assert!(b.y.iter().all(|&c| c < 10));
+        let h = har(32, 1);
+        assert_eq!(h.x.len(), 32 * 192);
+        assert!(h.y.iter().all(|&c| c < 12));
+    }
+}

@@ -1,0 +1,196 @@
+//! `.ptns` binary tensor format shared with `python/compile/tensor_io.py`.
+//!
+//! Layout (little endian):
+//! ```text
+//! magic   4 bytes  "PTNS"
+//! version 1 byte   (1)
+//! dtype   1 byte   0 = f32, 1 = i32, 2 = u8
+//! ndim    1 byte
+//! pad     1 byte   (0)
+//! dims    ndim × u32
+//! data    product(dims) × sizeof(dtype)
+//! ```
+
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"PTNS";
+
+/// A loaded tensor: shape plus typed payload.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TensorData {
+    F32(Vec<usize>, Vec<f32>),
+    I32(Vec<usize>, Vec<i32>),
+    U8(Vec<usize>, Vec<u8>),
+}
+
+impl TensorData {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            TensorData::F32(s, _) | TensorData::I32(s, _) | TensorData::U8(s, _) => s,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Unwrap f32 payload (errors otherwise).
+    pub fn into_f32(self) -> Result<(Vec<usize>, Vec<f32>)> {
+        match self {
+            TensorData::F32(s, d) => Ok((s, d)),
+            other => bail!("expected f32 tensor, got {:?} dtype", dtype_code(&other)),
+        }
+    }
+
+    /// Unwrap i32 payload (errors otherwise).
+    pub fn into_i32(self) -> Result<(Vec<usize>, Vec<i32>)> {
+        match self {
+            TensorData::I32(s, d) => Ok((s, d)),
+            other => bail!("expected i32 tensor, got {:?} dtype", dtype_code(&other)),
+        }
+    }
+}
+
+fn dtype_code(t: &TensorData) -> u8 {
+    match t {
+        TensorData::F32(..) => 0,
+        TensorData::I32(..) => 1,
+        TensorData::U8(..) => 2,
+    }
+}
+
+/// Write a tensor to a file.
+pub fn write_tensor(path: &Path, t: &TensorData) -> Result<()> {
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?,
+    );
+    f.write_all(MAGIC)?;
+    f.write_all(&[1u8, dtype_code(t), t.shape().len() as u8, 0u8])?;
+    for &d in t.shape() {
+        f.write_all(&(d as u32).to_le_bytes())?;
+    }
+    match t {
+        TensorData::F32(_, d) => {
+            for v in d {
+                f.write_all(&v.to_le_bytes())?;
+            }
+        }
+        TensorData::I32(_, d) => {
+            for v in d {
+                f.write_all(&v.to_le_bytes())?;
+            }
+        }
+        TensorData::U8(_, d) => f.write_all(d)?,
+    }
+    Ok(())
+}
+
+/// Read a tensor from a file.
+pub fn read_tensor(path: &Path) -> Result<TensorData> {
+    let raw = std::fs::read(path).with_context(|| format!("read {}", path.display()))?;
+    parse_tensor(&raw).with_context(|| format!("parse {}", path.display()))
+}
+
+/// Parse a tensor from bytes.
+pub fn parse_tensor(raw: &[u8]) -> Result<TensorData> {
+    if raw.len() < 8 || &raw[0..4] != MAGIC {
+        bail!("bad magic (not a .ptns tensor)");
+    }
+    let (version, dtype, ndim) = (raw[4], raw[5], raw[6] as usize);
+    if version != 1 {
+        bail!("unsupported version {version}");
+    }
+    let mut off = 8;
+    if raw.len() < off + 4 * ndim {
+        bail!("truncated dims");
+    }
+    let mut shape = Vec::with_capacity(ndim);
+    for _ in 0..ndim {
+        shape.push(u32::from_le_bytes(raw[off..off + 4].try_into().unwrap()) as usize);
+        off += 4;
+    }
+    let n: usize = shape.iter().product();
+    let need = |sz: usize| -> Result<()> {
+        if raw.len() != off + n * sz {
+            bail!("payload size mismatch: file {} vs expected {}", raw.len() - off, n * sz);
+        }
+        Ok(())
+    };
+    Ok(match dtype {
+        0 => {
+            need(4)?;
+            let mut d = Vec::with_capacity(n);
+            let mut rd = &raw[off..];
+            let mut buf = [0u8; 4];
+            for _ in 0..n {
+                rd.read_exact(&mut buf)?;
+                d.push(f32::from_le_bytes(buf));
+            }
+            TensorData::F32(shape, d)
+        }
+        1 => {
+            need(4)?;
+            let mut d = Vec::with_capacity(n);
+            let mut rd = &raw[off..];
+            let mut buf = [0u8; 4];
+            for _ in 0..n {
+                rd.read_exact(&mut buf)?;
+                d.push(i32::from_le_bytes(buf));
+            }
+            TensorData::I32(shape, d)
+        }
+        2 => {
+            need(1)?;
+            TensorData::U8(shape, raw[off..].to_vec())
+        }
+        other => bail!("unknown dtype code {other}"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32() {
+        let dir = std::env::temp_dir().join("pann_test_io");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t1.ptns");
+        let t = TensorData::F32(vec![2, 3], vec![1.0, -2.5, 3.25, 0.0, 1e-9, -1e9]);
+        write_tensor(&p, &t).unwrap();
+        assert_eq!(read_tensor(&p).unwrap(), t);
+    }
+
+    #[test]
+    fn roundtrip_i32_u8() {
+        let dir = std::env::temp_dir().join("pann_test_io");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t2.ptns");
+        let t = TensorData::I32(vec![4], vec![-7, 0, 9, i32::MAX]);
+        write_tensor(&p, &t).unwrap();
+        assert_eq!(read_tensor(&p).unwrap(), t);
+        let p3 = dir.join("t3.ptns");
+        let t3 = TensorData::U8(vec![2, 2], vec![0, 255, 4, 16]);
+        write_tensor(&p3, &t3).unwrap();
+        assert_eq!(read_tensor(&p3).unwrap(), t3);
+    }
+
+    #[test]
+    fn rejects_corrupt() {
+        assert!(parse_tensor(b"NOPE").is_err());
+        assert!(parse_tensor(b"PTNS\x01\x00\x01\x00\x05\x00\x00\x00").is_err()); // truncated
+        // wrong payload length
+        let mut buf = Vec::new();
+        buf.extend_from_slice(b"PTNS");
+        buf.extend_from_slice(&[1, 0, 1, 0]);
+        buf.extend_from_slice(&2u32.to_le_bytes());
+        buf.extend_from_slice(&[0u8; 4]); // only one f32 instead of two
+        assert!(parse_tensor(&buf).is_err());
+    }
+}

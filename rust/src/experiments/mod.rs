@@ -1,0 +1,146 @@
+//! Experiment drivers — one per table/figure of the paper.
+//!
+//! `pann-cli experiment <id>` (or `cargo bench --bench tables`) prints
+//! the same rows/series the paper reports. Absolute numbers differ —
+//! the substrate is the synthetic stack of DESIGN.md, not the authors'
+//! testbed — but the *shape* (who wins, by what factor, where the
+//! crossovers fall) is the reproduction target. Every driver works
+//! without `make artifacts` by falling back to the built-in reference
+//! models and in-process synthetic data.
+
+pub mod power_sims;
+pub mod ptq;
+pub mod qat;
+pub mod theory;
+
+use crate::data::Dataset;
+use crate::nn::Model;
+use anyhow::Result;
+use std::path::PathBuf;
+
+/// Shared experiment context.
+pub struct Ctx {
+    /// Artifacts root (default `artifacts/`).
+    pub artifacts: PathBuf,
+    /// Smaller sample counts for CI-speed runs.
+    pub quick: bool,
+}
+
+impl Default for Ctx {
+    fn default() -> Self {
+        Ctx { artifacts: PathBuf::from("artifacts"), quick: false }
+    }
+}
+
+impl Ctx {
+    pub fn quick() -> Self {
+        Ctx { quick: true, ..Default::default() }
+    }
+
+    /// Toggle-simulation sample count (paper: N = 36000).
+    pub fn sim_n(&self) -> usize {
+        if self.quick {
+            4000
+        } else {
+            36000
+        }
+    }
+
+    /// PTQ evaluation subset size.
+    pub fn eval_n(&self) -> usize {
+        if self.quick {
+            96
+        } else {
+            512
+        }
+    }
+
+    /// Load a trained model + its test set; falls back to the built-in
+    /// reference CNN + synthetic digits when artifacts are absent.
+    pub fn load_model(&self, name: &str) -> Result<(Model, Dataset)> {
+        let mdir = self.artifacts.join("models").join(name);
+        if mdir.join("manifest.json").exists() {
+            let model = Model::load(&mdir)?;
+            let dataset = dataset_for(name);
+            let ddir = self.artifacts.join("data").join(dataset);
+            if ddir.join("test_x.ptns").exists() {
+                let ds = Dataset::load(&ddir, "test")?;
+                return Ok((model, ds));
+            }
+        }
+        // fallback: reference model + synth data (stats recorded here)
+        let mut model = match name {
+            "cnn-r" => Model::reference_resnet(7),
+            _ => Model::reference_cnn(7),
+        };
+        let ds = Dataset::from_synth(crate::data::synth::digits(if self.quick { 128 } else { 512 }, 11));
+        let stats_x = crate::nn::eval::batch_tensor(&ds, 0, ds.len().min(64));
+        model.record_act_stats(&stats_x)?;
+        Ok((model, ds))
+    }
+
+    /// QAT results json written by `python -m compile.train`.
+    pub fn qat_results(&self) -> Option<crate::util::Json> {
+        let p = self.artifacts.join("models").join("qat_results.json");
+        let text = std::fs::read_to_string(p).ok()?;
+        crate::util::Json::parse(&text).ok()
+    }
+}
+
+/// The dataset each trained model was fitted on.
+pub fn dataset_for(model: &str) -> &'static str {
+    match model {
+        "mlp" => "blobs",
+        "har-mlp" => "har",
+        _ => "digits",
+    }
+}
+
+/// All experiment ids with their drivers.
+pub type ExpFn = fn(&Ctx) -> Result<()>;
+
+pub const ALL: &[(&str, ExpFn)] = &[
+    ("table1", power_sims::table1),
+    ("table5", power_sims::table5),
+    ("fig5", power_sims::fig5),
+    ("fig6", power_sims::fig6),
+    ("fig8", power_sims::fig8),
+    ("fig9", power_sims::fig9),
+    ("fig10", power_sims::fig10),
+    ("fig11", power_sims::fig11),
+    ("table6", theory::table6),
+    ("fig3", theory::fig3),
+    ("fig4", theory::fig4),
+    ("fig12", theory::fig12),
+    ("fig16", theory::fig16),
+    ("fig1", ptq::fig1),
+    ("fig13", ptq::fig13),
+    ("fig14", ptq::fig14),
+    ("table2", ptq::table2),
+    ("table7", ptq::table7),
+    ("table8", ptq::table8),
+    ("table9", ptq::table9),
+    ("table14", ptq::table14),
+    ("table15", ptq::table15),
+    ("table10", qat::table10),
+    ("table4", qat::table4),
+    ("table11", qat::table11),
+    ("table12", qat::table12),
+    ("table13", qat::table13),
+];
+
+/// Run one experiment by id.
+pub fn run(id: &str, ctx: &Ctx) -> Result<()> {
+    for (name, f) in ALL {
+        if *name == id {
+            println!("=== {id} ===");
+            return f(ctx);
+        }
+    }
+    anyhow::bail!("unknown experiment '{id}' (try: {})", ids().join(", "))
+}
+
+/// All experiment ids.
+pub fn ids() -> Vec<&'static str> {
+    ALL.iter().map(|(n, _)| *n).collect()
+}

@@ -1,0 +1,296 @@
+//! Toggle-simulation experiments: Table 1, Table 5, Figs. 5, 6, 8–11.
+
+use super::Ctx;
+use crate::bitflip::{
+    gates, BoothMultiplier, Dist, MacUnit, Multiplier, Sampler, SerialMultiplier,
+};
+use crate::util::Rng;
+use anyhow::Result;
+
+/// Measure average MAC toggles for a distribution pair on a multiplier.
+fn measure_mac<M: Multiplier>(
+    mult: M,
+    acc_bits: u32,
+    dw: Dist,
+    dx: Dist,
+    n: usize,
+    seed: u64,
+) -> (f64, f64, f64, f64, f64) {
+    let mut mac = MacUnit::new(mult, acc_bits);
+    let mut rng = Rng::new(seed);
+    let mut sw = Sampler::new(dw, n, &mut rng);
+    let mut sx = Sampler::new(dx, n, &mut rng);
+    let (mut mi, mut mint, mut ai, mut asum, mut aff) = (0u64, 0u64, 0u64, 0u64, 0u64);
+    for i in 0..n {
+        if i % 256 == 0 {
+            mac.clear_acc(); // dot products of depth 256
+        }
+        let t = mac.mac(sw.next(), sx.next());
+        mi += t.mult.inputs;
+        mint += t.mult.internal;
+        ai += t.acc_input;
+        asum += t.acc_sum;
+        aff += t.acc_ff;
+    }
+    let f = n as f64;
+    (mi as f64 / f, mint as f64 / f, ai as f64 / f, asum as f64 / f, aff as f64 / f)
+}
+
+/// Table 1: average bit flips per signed MAC (B = 32), with the
+/// paper's model values for comparison.
+pub fn table1(ctx: &Ctx) -> Result<()> {
+    let n = ctx.sim_n();
+    println!("{:<4} {:>10} {:>10} {:>10} {:>10} {:>10}   (model: 0.5b+0.5b | 0.5b² | 0.5B | b | b)", "b", "mul-in", "mul-int", "acc-in", "acc-sum", "acc-ff");
+    for b in 2..=8u32 {
+        let (mi, mint, ai, asum, aff) = measure_mac(
+            BoothMultiplier::new(b, true),
+            32,
+            Dist::UniformSigned(b),
+            Dist::UniformSigned(b),
+            n,
+            42,
+        );
+        println!(
+            "{b:<4} {mi:>10.2} {mint:>10.2} {ai:>10.2} {asum:>10.2} {aff:>10.2}   ({:>4.1} | {:>5.1} | {:>4.1} | {:>3.1} | {:>3.1})",
+            b as f64,
+            0.5 * (b * b) as f64,
+            16.0,
+            b as f64,
+            b as f64
+        );
+    }
+    Ok(())
+}
+
+/// Table 5: static vs dynamic power split from the gate-level
+/// simulator (the 5nm-synthesis stand-in).
+pub fn table5(ctx: &Ctx) -> Result<()> {
+    let n = ctx.sim_n().min(3000);
+    println!("{:<18} {:>8} {:>8} {:>8}", "unit", "dyn[%]", "stat[%]", "gates");
+    for b in [2u32, 3, 4, 5, 6, 7, 8] {
+        let (dynamic, stat, gates_n) = gates::measure_mult(b, Dist::UniformSigned(b), n, 7);
+        let tot = dynamic + stat;
+        println!(
+            "{:<18} {:>8.0} {:>8.0} {:>8}",
+            format!("mult {b}-bit"),
+            100.0 * dynamic / tot,
+            100.0 * stat / tot,
+            gates_n
+        );
+    }
+    for b in [4u32, 8, 32] {
+        let (dynamic, stat, gates_n) = gates::measure_adder(b, Dist::UniformSigned(b.min(16)), n, 7);
+        let tot = dynamic + stat;
+        println!(
+            "{:<18} {:>8.0} {:>8.0} {:>8}",
+            format!("adder {b}-bit"),
+            100.0 * dynamic / tot,
+            100.0 * stat / tot,
+            gates_n
+        );
+    }
+    Ok(())
+}
+
+/// Fig. 5: gate-level vs component-level power agreement (scaled to
+/// intersect at b = 4, as the paper scales its 5nm measurements).
+pub fn fig5(ctx: &Ctx) -> Result<()> {
+    let n = ctx.sim_n().min(3000);
+    // component level (python-sim analog)
+    let comp: Vec<(u32, f64)> = (2..=8)
+        .map(|b| {
+            let mut m = BoothMultiplier::new(b, true);
+            let mut rng = Rng::new(3);
+            let mut sw = Sampler::new(Dist::UniformSigned(b), n, &mut rng);
+            let mut sx = Sampler::new(Dist::UniformSigned(b), n, &mut rng);
+            let mut tot = 0u64;
+            for _ in 0..n {
+                let (_, t) = m.mul(sw.next(), sx.next());
+                tot += t.inputs + t.internal;
+            }
+            (b, tot as f64 / n as f64)
+        })
+        .collect();
+    let gate: Vec<(u32, f64)> = (2..=8)
+        .map(|b| {
+            let (d, _, _) = gates::measure_mult(b, Dist::UniformSigned(b), n, 3);
+            (b, d)
+        })
+        .collect();
+    let scale = comp[2].1 / gate[2].1; // intersect at b = 4
+    println!("{:<4} {:>12} {:>14} {:>12}", "b", "component", "gate(scaled)", "model 0.5b²+b");
+    for i in 0..comp.len() {
+        let b = comp[i].0;
+        println!(
+            "{b:<4} {:>12.1} {:>14.1} {:>12.1}",
+            comp[i].1,
+            gate[i].1 * scale,
+            0.5 * (b * b) as f64 + b as f64
+        );
+    }
+    Ok(())
+}
+
+/// Fig. 6a: unsigned/signed multiplier power ratio (≈ 1).
+pub fn fig6(ctx: &Ctx) -> Result<()> {
+    let n = ctx.sim_n();
+    println!("{:<4} {:>14} {:>14} {:>8}", "b", "signed", "unsigned", "ratio");
+    for b in 4..=8u32 {
+        let run = |signed: bool| {
+            let mut m = BoothMultiplier::new(b, signed);
+            let d = if signed { Dist::UniformSigned(b) } else { Dist::UniformUnsigned(b) };
+            let mut rng = Rng::new(5);
+            let mut sw = Sampler::new(d, n, &mut rng);
+            let mut sx = Sampler::new(d, n, &mut rng);
+            let mut tot = 0u64;
+            for _ in 0..n {
+                let (_, t) = m.mul(sw.next(), sx.next());
+                tot += t.inputs + t.internal;
+            }
+            tot as f64 / n as f64
+        };
+        let s = run(true);
+        let u = run(false);
+        println!("{b:<4} {s:>14.1} {u:>14.1} {:>8.2}", u / s);
+    }
+    Ok(())
+}
+
+fn fig89(ctx: &Ctx, unsigned: bool) -> Result<()> {
+    let n = ctx.sim_n();
+    println!(
+        "{:<10} {:>4} {:>10} {:>10} {:>10} {:>10}",
+        "dist", "b", "mult", "acc-in", "acc-sum", "acc-ff"
+    );
+    for gauss in [false, true] {
+        for b in 2..=8u32 {
+            let d = match (gauss, unsigned) {
+                (false, false) => Dist::UniformSigned(b),
+                (false, true) => Dist::UniformUnsigned(b),
+                (true, false) => Dist::GaussianSigned(b),
+                (true, true) => Dist::GaussianUnsigned(b),
+            };
+            let (mi, mint, ai, asum, aff) =
+                measure_mac(BoothMultiplier::new(b, !unsigned), 32, d, d, n, 9);
+            println!(
+                "{:<10} {b:>4} {:>10.1} {ai:>10.2} {asum:>10.2} {aff:>10.2}",
+                if gauss { "gauss" } else { "uniform" },
+                mi + mint
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Fig. 8: signed toggles vs the analytic model.
+pub fn fig8(ctx: &Ctx) -> Result<()> {
+    fig89(ctx, false)
+}
+
+/// Fig. 9: unsigned toggles — the accumulator-input collapse.
+pub fn fig9(ctx: &Ctx) -> Result<()> {
+    fig89(ctx, true)
+}
+
+fn mixed_width(ctx: &Ctx, booth: bool) -> Result<()> {
+    let n = ctx.sim_n();
+    let bx = 8u32;
+    println!("{:<10} {:>4} {:>12} {:>12}", "mode", "bw", "internal", "of bw=8 [%]");
+    for signed in [true, false] {
+        let full = mixed_one(booth, signed, bx, bx, n);
+        for bw in [2u32, 3, 4, 5, 6, 7, 8] {
+            let v = mixed_one(booth, signed, bw, bx, n);
+            println!(
+                "{:<10} {bw:>4} {v:>12.1} {:>12.0}",
+                if signed { "signed" } else { "unsigned" },
+                100.0 * v / full
+            );
+        }
+    }
+    Ok(())
+}
+
+fn mixed_one(booth: bool, signed: bool, bw: u32, bx: u32, n: usize) -> f64 {
+    let mut rng = Rng::new(13);
+    let dw = if signed { Dist::UniformSigned(bw) } else { Dist::UniformUnsigned(bw) };
+    let dx = if signed { Dist::UniformSigned(bx) } else { Dist::UniformUnsigned(bx) };
+    let mut sw = Sampler::new(dw, n, &mut rng);
+    let mut sx = Sampler::new(dx, n, &mut rng);
+    let mut tot = 0u64;
+    if booth {
+        let mut m = BoothMultiplier::new(bx, signed);
+        for _ in 0..n {
+            let (_, t) = m.mul(sw.next(), sx.next());
+            tot += t.internal;
+        }
+    } else {
+        let mut m = SerialMultiplier::new(bx, signed);
+        for _ in 0..n {
+            let (_, t) = m.mul(sw.next(), sx.next());
+            tot += t.internal;
+        }
+    }
+    tot as f64 / n as f64
+}
+
+/// Fig. 10: Booth multiplier, mixed operand widths (Observation 2).
+pub fn fig10(ctx: &Ctx) -> Result<()> {
+    mixed_width(ctx, true)
+}
+
+/// Fig. 11: serial multiplier, mixed operand widths.
+pub fn fig11(ctx: &Ctx) -> Result<()> {
+    mixed_width(ctx, false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_power_sims_run_quick() {
+        let ctx = Ctx::quick();
+        table1(&ctx).unwrap();
+        fig6(&ctx).unwrap();
+        fig10(&ctx).unwrap();
+    }
+
+    #[test]
+    fn observation1_holds_in_sim() {
+        // signed acc-input toggles ~0.5B; unsigned collapse to ~b
+        let (_, _, ai_s, _, _) = measure_mac(
+            BoothMultiplier::new(4, true),
+            32,
+            Dist::UniformSigned(4),
+            Dist::UniformSigned(4),
+            6000,
+            1,
+        );
+        let (_, _, ai_u, _, _) = measure_mac(
+            BoothMultiplier::new(4, false),
+            32,
+            Dist::UniformUnsigned(4),
+            Dist::UniformUnsigned(4),
+            6000,
+            1,
+        );
+        assert!(ai_s > 13.0, "signed acc-in {ai_s}");
+        assert!(ai_u < 6.0, "unsigned acc-in {ai_u}");
+    }
+
+    #[test]
+    fn observation2_holds_in_sim() {
+        // Signed internal power is dominated by the larger width: our
+        // register model retains ~60% of the b_w=8 activity at b_w=2
+        // (the running-sum sign flips stay; Booth recoding quiets the
+        // rows, so the save is larger than the paper's near-zero but
+        // far from the naive b_w/b_x scaling of 25%).
+        let full = mixed_one(true, true, 8, 8, 5000);
+        let small = mixed_one(true, true, 2, 8, 5000);
+        assert!(small / full > 0.45, "ratio {}", small / full);
+        // the serial multiplier holds the observation more tightly
+        let sfull = mixed_one(false, true, 8, 8, 5000);
+        let ssmall = mixed_one(false, true, 3, 8, 5000);
+        assert!(ssmall / sfull > 0.6, "serial ratio {}", ssmall / sfull);
+    }
+}

@@ -1,0 +1,241 @@
+//! Post-training-quantization experiments: Fig. 1/13/14, Tables 2/7/8/9
+//! and the trade-off Tables 14/15.
+
+use super::Ctx;
+use crate::nn::quantized::Arithmetic;
+use crate::pann::{algorithm1, convert, tradeoff};
+use crate::power::model::mac_power_unsigned_total;
+use crate::quant::ActQuantMethod;
+use anyhow::Result;
+
+/// The power-budget grid of the paper's PTQ tables.
+const BUDGET_BITS: [u32; 6] = [2, 3, 4, 5, 6, 8];
+
+fn budget_grid(ctx: &Ctx) -> Vec<u32> {
+    if ctx.quick {
+        vec![2, 4, 8]
+    } else {
+        BUDGET_BITS.to_vec()
+    }
+}
+
+/// Fig. 1-style sweep: signed 4-bit → unsigned (←) → PANN (↑) for
+/// every model, at the 4-bit budget with the data-free quantizer.
+pub fn fig1(ctx: &Ctx) -> Result<()> {
+    fig1_like(ctx, 4, 32)
+}
+
+/// Fig. 13: the same with reduced accumulator widths (Eq. 20).
+pub fn fig13(ctx: &Ctx) -> Result<()> {
+    println!("-- B = 21-bit accumulator, 4-bit nets --");
+    fig1_like(ctx, 4, 21)?;
+    println!("-- B = 17-bit accumulator, 2-bit nets --");
+    fig1_like(ctx, 2, 17)
+}
+
+/// Fig. 14/15: the conversion arrows with the calibration-based
+/// quantizer at 4-bit and 2-bit.
+pub fn fig14(ctx: &Ctx) -> Result<()> {
+    println!("-- ACIQ, 4-bit --");
+    arrows(ctx, 4, 32, ActQuantMethod::Aciq)?;
+    println!("-- ACIQ, 2-bit --");
+    arrows(ctx, 2, 32, ActQuantMethod::Aciq)
+}
+
+fn fig1_like(ctx: &Ctx, bits: u32, acc_bits: u32) -> Result<()> {
+    arrows(ctx, bits, acc_bits, ActQuantMethod::BnStats)
+}
+
+fn arrows(ctx: &Ctx, bits: u32, acc_bits: u32, method: ActQuantMethod) -> Result<()> {
+    println!(
+        "{:<8} {:>6} | {:>10} {:>7} | {:>10} {:>7} | {:>10} {:>7}",
+        "model", "fp", "P signed", "acc", "P unsign", "acc", "P pann", "acc"
+    );
+    for name in ["cnn-s", "cnn-r", "vgg-t", "mlp"] {
+        let (model, test) = ctx.load_model(name)?;
+        let test = test.take(ctx.eval_n());
+        let calib = convert::calib_tensor(&test, 32);
+        let fp = crate::nn::eval::eval_fp32(&model, &test)?;
+        let (_, signed) = convert::ptq_baseline(
+            &model,
+            bits,
+            method,
+            Arithmetic::SignedMac { acc_bits },
+            Some(&calib),
+            &test,
+        )?;
+        let (_, unsigned) = convert::unsigned_of(&model, bits, method, Some(&calib), &test)?;
+        // PANN at the same unsigned budget, Alg.-1 point
+        let p = mac_power_unsigned_total(bits);
+        let val = test.take(ctx.eval_n().min(128));
+        let op = algorithm1::choose_operating_point(&model, p, method, Some(&calib), &val, 2..=8)?;
+        let (_, pann) = convert::pann_at_budget(&model, op.bx_tilde, op.r, method, Some(&calib), &test)?;
+        println!(
+            "{name:<8} {:>6.3} | {:>10.4} {:>7.3} | {:>10.4} {:>7.3} | {:>10.4} {:>7.3}  (b̃x={} R={:.2})",
+            fp.accuracy(),
+            signed.giga_flips / test.len() as f64 * 1000.0,
+            signed.accuracy(),
+            unsigned.giga_flips / test.len() as f64 * 1000.0,
+            unsigned.accuracy(),
+            pann.giga_flips / test.len() as f64 * 1000.0,
+            pann.accuracy(),
+            op.bx_tilde,
+            op.r
+        );
+    }
+    println!("(P columns: Mega bit flips per sample)");
+    Ok(())
+}
+
+/// The generic PTQ table (paper Tables 2/7/8/9): baselines at each
+/// power budget vs PANN tuned to the same budget via Alg. 1.
+fn ptq_table(ctx: &Ctx, model_name: &str) -> Result<()> {
+    let (model, test) = ctx.load_model(model_name)?;
+    let test = test.take(ctx.eval_n());
+    let calib = convert::calib_tensor(&test, 32);
+    let val = test.take(ctx.eval_n().min(128));
+    let fp = crate::nn::eval::eval_fp32(&model, &test)?;
+    let macs = model.num_macs();
+    println!("model {model_name}: fp32 accuracy {:.3}, {macs} MACs/sample", fp.accuracy());
+    print!("{:<14}", "power (bits)");
+    let methods = [
+        ActQuantMethod::Dynamic,
+        ActQuantMethod::Aciq,
+        ActQuantMethod::BnStats,
+        ActQuantMethod::Dfq,
+        ActQuantMethod::Recon,
+    ];
+    for m in methods {
+        print!("{:>16}", format!("{}(base|our)", m.name()));
+    }
+    println!();
+    for bits in budget_grid(ctx) {
+        let p = mac_power_unsigned_total(bits);
+        let giga = p * macs as f64 / 1e9;
+        print!("{:<14}", format!("{giga:.3} ({bits})"));
+        for m in methods {
+            let (_, base) = convert::unsigned_of(&model, bits, m, Some(&calib), &test)?;
+            let op = algorithm1::choose_operating_point(&model, p, m, Some(&calib), &val, 2..=8)?;
+            let (_, our) =
+                convert::pann_at_budget(&model, op.bx_tilde, op.r, m, Some(&calib), &test)?;
+            print!(
+                "{:>16}",
+                format!("{:.3}|{:.3}", base.accuracy(), our.accuracy())
+            );
+        }
+        println!();
+    }
+    Ok(())
+}
+
+/// Table 2 (ResNet-50 → cnn-r).
+pub fn table2(ctx: &Ctx) -> Result<()> {
+    ptq_table(ctx, "cnn-r")
+}
+
+/// Table 7 (ResNet-18 → cnn-s).
+pub fn table7(ctx: &Ctx) -> Result<()> {
+    ptq_table(ctx, "cnn-s")
+}
+
+/// Table 8 (MobileNet-V2 → mlp).
+pub fn table8(ctx: &Ctx) -> Result<()> {
+    ptq_table(ctx, "mlp")
+}
+
+/// Table 9 (VGG-16bn → vgg-t).
+pub fn table9(ctx: &Ctx) -> Result<()> {
+    ptq_table(ctx, "vgg-t")
+}
+
+/// Table 14: the Alg.-1 operating point per budget with memory /
+/// latency factors.
+pub fn table14(ctx: &Ctx) -> Result<()> {
+    let (model, test) = ctx.load_model("cnn-r")?;
+    let test = test.take(ctx.eval_n());
+    let calib = convert::calib_tensor(&test, 32);
+    let val = test.take(ctx.eval_n().min(128));
+    println!(
+        "{:<8} {:>5} {:>10} {:>5} {:>10} {:>10}",
+        "budget", "b̃x", "latency=R", "b_R", "act mem", "w mem"
+    );
+    for bits in budget_grid(ctx) {
+        let p = mac_power_unsigned_total(bits);
+        let op = algorithm1::choose_operating_point(
+            &model,
+            p,
+            ActQuantMethod::BnStats,
+            Some(&calib),
+            &val,
+            2..=8,
+        )?;
+        let rows = tradeoff::budget_curve_table(
+            &model,
+            bits,
+            ActQuantMethod::BnStats,
+            Some(&calib),
+            &val,
+            op.bx_tilde..=op.bx_tilde,
+        )?;
+        let row = &rows[0];
+        println!(
+            "{:<8} {:>5} {:>10.2} {:>5} {:>10.2} {:>10.2}",
+            format!("{bits}/{bits}"),
+            row.bx_tilde,
+            row.r,
+            row.b_r,
+            row.act_mem_factor,
+            row.weight_mem_factor
+        );
+    }
+    Ok(())
+}
+
+/// Table 15: the whole 2-bit equal-power curve with accuracies.
+pub fn table15(ctx: &Ctx) -> Result<()> {
+    let (model, test) = ctx.load_model("cnn-r")?;
+    let test = test.take(ctx.eval_n());
+    let calib = convert::calib_tensor(&test, 32);
+    let rows = tradeoff::budget_curve_table(
+        &model,
+        2,
+        ActQuantMethod::Aciq,
+        Some(&calib),
+        &test,
+        2..=8,
+    )?;
+    println!(
+        "{:<5} {:>10} {:>5} {:>10} {:>10} {:>10}",
+        "b̃x", "latency=R", "b_R", "act mem", "w mem", "accuracy"
+    );
+    for r in rows {
+        println!(
+            "{:<5} {:>10.2} {:>5} {:>10.2} {:>10.2} {:>10.3}",
+            r.bx_tilde, r.r, r.b_r, r.act_mem_factor, r.weight_mem_factor, r.accuracy
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1_runs_on_fallback_models() {
+        let ctx = Ctx { artifacts: std::path::PathBuf::from("/nonexistent"), quick: true };
+        fig1(&ctx).unwrap();
+    }
+
+    #[test]
+    fn ptq_table_runs_quick() {
+        let ctx = Ctx { artifacts: std::path::PathBuf::from("/nonexistent"), quick: true };
+        table7(&ctx).unwrap();
+    }
+
+    #[test]
+    fn table15_runs_quick() {
+        let ctx = Ctx { artifacts: std::path::PathBuf::from("/nonexistent"), quick: true };
+        table15(&ctx).unwrap();
+    }
+}

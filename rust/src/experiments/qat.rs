@@ -1,0 +1,145 @@
+//! Quantization-aware-training tables (3/4/10–13), assembled from the
+//! accuracy grid `python -m compile.train` records in
+//! `artifacts/models/qat_results.json` plus the Rust power models.
+
+use super::Ctx;
+use crate::power::model::mac_power_unsigned_total;
+use crate::util::Json;
+use anyhow::Result;
+
+/// MACs per sample for the trained architectures (mirrors
+/// `python/compile/model.py::num_macs`; used when the manifest is not
+/// on disk).
+pub fn num_macs(model: &str) -> u64 {
+    match model {
+        "cnn-s" => 94_720,
+        "cnn-r" => 529_152,
+        "vgg-t" => 242_176,
+        "mlp" => 16_320,
+        "har-mlp" => 17_152,
+        _ => 0,
+    }
+}
+
+fn acc_of(results: &Json, key: &str) -> Option<f64> {
+    results.get(key)?.get("acc")?.as_f64()
+}
+
+fn require_results(ctx: &Ctx) -> Result<Json> {
+    ctx.qat_results().ok_or_else(|| {
+        anyhow::anyhow!(
+            "qat_results.json not found under {} — run `make artifacts` first",
+            ctx.artifacts.display()
+        )
+    })
+}
+
+/// Tables 3 + 10: LSQ vs PANN at the 2/3/4-bit power budgets.
+pub fn table10(ctx: &Ctx) -> Result<()> {
+    let results = require_results(ctx)?;
+    // Table 13's operating points, as used by train.py
+    let points = [(2u32, 3u32, 2.83), (3, 6, 2.5), (4, 6, 3.5)];
+    println!(
+        "{:<10} {:>6} {:>14} {:>10} {:>10}",
+        "model", "bits", "power[Gflips]", "LSQ", "PANN"
+    );
+    for model in ["cnn-s", "cnn-r", "vgg-t"] {
+        let fp = acc_of(&results, &format!("fp32_{model}")).unwrap_or(f64::NAN);
+        println!("{model:<10} {:>6} {:>14} {:>10.3} {:>10}", "fp", "-", fp, "-");
+        for (bits, bx, r) in points {
+            let p = mac_power_unsigned_total(bits) * num_macs(model) as f64 / 1e9;
+            let lsq = acc_of(&results, &format!("{model}_lsq_b{bits}_bx{bits}_r0_e6"))
+                .or_else(|| acc_of(&results, &format!("{model}_lsq_b{bits}_bx{bits}_r0.0_e6")));
+            let pann = acc_of(&results, &format!("{model}_pann_b{bits}_bx{bx}_r{r}_e6"));
+            println!(
+                "{model:<10} {bits:>6} {p:>14.4} {:>10} {:>10}",
+                lsq.map_or("-".into(), |v| format!("{v:.3}")),
+                pann.map_or("-".into(), |v| format!("{v:.3}"))
+            );
+        }
+    }
+    Ok(())
+}
+
+/// The multiplier-free comparison table for one model (Tables 4/11/12).
+fn mf_table(ctx: &Ctx, model: &str) -> Result<()> {
+    let results = require_results(ctx)?;
+    let bits_grid = [6u32, 5, 4, 3];
+    print!("{:<18}", "method");
+    for b in bits_grid {
+        print!("{:>9}", format!("{b}/{b}"));
+    }
+    println!();
+    let rows: Vec<(String, String)> = vec![
+        ("our (1x)".into(), "pann_b{b}_bx{b}_r1".into()),
+        ("our (1.5x)".into(), "pann_b{b}_bx{b}_r1.5".into()),
+        ("our (2x)".into(), "pann_b{b}_bx{b}_r2".into()),
+        ("shiftadd (1.5x)".into(), "shiftadd_b{b}_bx{b}_r1.5".into()),
+        ("adder (2x)".into(), "adder_b{b}_bx{b}_r2".into()),
+    ];
+    for (label, pat) in rows {
+        print!("{label:<18}");
+        for b in bits_grid {
+            let frag = pat.replace("{b}", &b.to_string());
+            // accept both "r1"/"r1.0" spellings from run_key
+            let key_a = format!("{model}_{frag}.0_e6");
+            let key_b = format!("{model}_{frag}_e6");
+            let acc = acc_of(&results, &key_a).or_else(|| acc_of(&results, &key_b));
+            print!("{:>9}", acc.map_or("-".into(), |v| format!("{v:.3}")));
+        }
+        println!();
+    }
+    Ok(())
+}
+
+/// Table 4 (CIFAR-10 → digits / cnn-s).
+pub fn table4(ctx: &Ctx) -> Result<()> {
+    mf_table(ctx, "cnn-s")
+}
+
+/// Table 11 (CIFAR-100 → blobs / mlp).
+pub fn table11(ctx: &Ctx) -> Result<()> {
+    mf_table(ctx, "mlp")
+}
+
+/// Table 12 (MHEALTH → har / har-mlp).
+pub fn table12(ctx: &Ctx) -> Result<()> {
+    mf_table(ctx, "har-mlp")
+}
+
+/// Table 13: the QAT operating points and power budgets.
+pub fn table13(_ctx: &Ctx) -> Result<()> {
+    println!(
+        "{:<10} {:>10} {:>14} {:>6} {:>8}",
+        "model", "lsq bits", "power[Gflips]", "b̃x", "R"
+    );
+    for model in ["cnn-s", "cnn-r", "vgg-t", "mlp", "har-mlp"] {
+        for (bits, bx, r) in [(2u32, 3u32, 2.83), (3, 6, 2.5), (4, 6, 3.5)] {
+            let p = mac_power_unsigned_total(bits) * num_macs(model) as f64 / 1e9;
+            println!("{model:<10} {bits:>10} {p:>14.4} {bx:>6} {r:>8.2}");
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table13_runs_without_artifacts() {
+        table13(&Ctx::quick()).unwrap();
+    }
+
+    #[test]
+    fn qat_tables_error_cleanly_without_artifacts() {
+        let ctx = Ctx { artifacts: std::path::PathBuf::from("/nonexistent"), quick: true };
+        assert!(table10(&ctx).is_err());
+        assert!(table4(&ctx).is_err());
+    }
+
+    #[test]
+    fn num_macs_matches_python() {
+        assert_eq!(num_macs("cnn-s"), 8 * 9 * 256 + 16 * 8 * 9 * 64 + 10 * 256);
+    }
+}

@@ -1,0 +1,130 @@
+//! Analytic-model experiments: Table 6, Figs. 3, 4, 12, 16.
+
+use super::Ctx;
+use crate::power::{accumulator, budget::EqualPowerCurve, model};
+use crate::quant::error;
+use anyhow::Result;
+
+/// Table 6: required accumulator width and unsigned power save.
+pub fn table6(_ctx: &Ctx) -> Result<()> {
+    println!(
+        "{:<6} {:>8} {:>18} {:>18}",
+        "bits", "B req.", "save @ B-bit [%]", "save @ 32-bit [%]"
+    );
+    for bits in 2..=6u32 {
+        // the paper floors log2(3*3*512) = 12 in its table rows
+        let b_req = bits + bits + 1 + (4608f64).log2().floor() as u32;
+        println!(
+            "{bits:<6} {b_req:>8} {:>18.0} {:>18.0}",
+            100.0 * accumulator::power_save_unsigned(bits, b_req),
+            100.0 * accumulator::power_save_unsigned(bits, 32)
+        );
+    }
+    Ok(())
+}
+
+/// Fig. 3: equal-power (b̃x, R) curves for several reference widths.
+pub fn fig3(_ctx: &Ctx) -> Result<()> {
+    print!("{:<6}", "b̃x");
+    for bx in [2u32, 3, 4, 5, 6, 8] {
+        print!("{:>10}", format!("P={}", model::mac_power_unsigned_total(bx)));
+    }
+    println!();
+    for bt in 1..=16u32 {
+        print!("{bt:<6}");
+        for bx in [2u32, 3, 4, 5, 6, 8] {
+            let c = EqualPowerCurve::for_unsigned_mac(bx);
+            match c.r_at(bt) {
+                Some(r) if r > 0.0 => print!("{r:>10.2}"),
+                _ => print!("{:>10}", "-"),
+            }
+        }
+        println!();
+    }
+    Ok(())
+}
+
+/// Fig. 4: MSE_RUQ / MSE_PANN at equal power, uniform + MC validation.
+pub fn fig4(ctx: &Ctx) -> Result<()> {
+    let d = 1000;
+    let trials = if ctx.quick { 300 } else { 2000 };
+    println!(
+        "{:<4} {:>12} {:>12} {:>10} {:>14}",
+        "b", "MSE_RUQ", "MSE_PANN", "ratio", "ratio (MC)"
+    );
+    for b in 2..=8u32 {
+        let p = model::mac_power_unsigned_total(b);
+        let ruq = error::mse_ruq(d, 1.0, 1.0, b);
+        let (bt, pann) = error::optimal_bx_tilde(d, 1.0, 1.0, p);
+        let r = p / bt as f64 - 0.5;
+        let mc_ruq = error::mc_mse_ruq(d, b, trials, 17);
+        let mc_pann = error::mc_mse_pann(d, bt, r, trials, 18);
+        println!(
+            "{b:<4} {ruq:>12.3e} {pann:>12.3e} {:>10.2} {:>14.2}",
+            ruq / pann,
+            mc_ruq / mc_pann
+        );
+    }
+    Ok(())
+}
+
+/// Fig. 12a: unsigned/signed MAC power ratio vs bit width (B = 32).
+pub fn fig12(_ctx: &Ctx) -> Result<()> {
+    println!("{:<4} {:>10} {:>10} {:>10} {:>10}", "b", "signed", "unsigned", "ratio", "save[%]");
+    for b in 2..=8u32 {
+        let s = model::mac_power_signed(b, 32).total();
+        let u = model::mac_power_unsigned(b).total();
+        println!(
+            "{b:<4} {s:>10.1} {u:>10.1} {:>10.2} {:>10.0}",
+            u / s,
+            100.0 * (1.0 - u / s)
+        );
+    }
+    Ok(())
+}
+
+/// Fig. 16: MSE vs b̃x for several budgets — theory + Monte Carlo.
+pub fn fig16(ctx: &Ctx) -> Result<()> {
+    let d = 1000;
+    let trials = if ctx.quick { 200 } else { 1500 };
+    for p in [10.0, 16.5, 24.0, 42.0] {
+        println!("-- power budget P = {p} flips/element --");
+        println!("{:<6} {:>8} {:>14} {:>14}", "b̃x", "R", "MSE theory", "MSE MC");
+        for bt in 2..=10u32 {
+            let Some(th) = error::mse_pann(d, 1.0, 1.0, bt, p) else { continue };
+            let r = p / bt as f64 - 0.5;
+            if r <= 0.0 {
+                continue;
+            }
+            let mc = error::mc_mse_pann(d, bt, r, trials, 23);
+            println!("{bt:<6} {r:>8.2} {th:>14.4e} {mc:>14.4e}");
+        }
+        let (best, _) = error::optimal_bx_tilde(d, 1.0, 1.0, p);
+        println!("   optimal b̃x = {best}");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn theory_experiments_run_quick() {
+        let ctx = Ctx::quick();
+        table6(&ctx).unwrap();
+        fig3(&ctx).unwrap();
+        fig4(&ctx).unwrap();
+        fig12(&ctx).unwrap();
+    }
+
+    #[test]
+    fn fig4_crossover_exists() {
+        // the paper's Fig. 4: PANN wins at low bits, RUQ at high bits
+        let lo = error::mse_ruq(1000, 1.0, 1.0, 2)
+            / error::optimal_bx_tilde(1000, 1.0, 1.0, model::mac_power_unsigned_total(2)).1;
+        let hi = error::mse_ruq(1000, 1.0, 1.0, 8)
+            / error::optimal_bx_tilde(1000, 1.0, 1.0, model::mac_power_unsigned_total(8)).1;
+        assert!(lo > 1.0 && hi < 1.0, "lo {lo} hi {hi}");
+    }
+}

@@ -1,0 +1,42 @@
+//! # PANN — Power-Aware Neural Networks
+//!
+//! Reproduction of *"Energy awareness in low precision neural networks"*
+//! (Spingarn Eliezer, Banner, Hoffer, Ben-Yaakov, Michaeli; 2022).
+//!
+//! The crate is the L3 (coordination + substrate) layer of a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! - [`bitflip`] — bit-toggle simulators for adders, multipliers and MAC
+//!   datapaths (the paper's "Python simulation" and a gate-level netlist
+//!   simulator standing in for the paper's 5nm synthesis).
+//! - [`power`] — the analytic power models of the paper: Eqs. (1)–(4)
+//!   (signed/unsigned MAC), Eq. (7) (mixed widths), Eq. (13) (PANN),
+//!   Eq. (20) (required accumulator width), and network-level accounting.
+//! - [`quant`] — quantizers (RUQ, dynamic, ACIQ, BN-stats data-free, DFQ
+//!   equalization + bias correction, rounding reconstruction) and the
+//!   PANN weight quantizer of Eq. (12), plus the MSE theory of Sec. 5.3.
+//! - [`nn`] — an integer inference engine (conv/linear/pool/bn) that can
+//!   execute a model in fp32, signed-quantized, unsigned-split and PANN
+//!   modes while metering the exact number of bit flips per layer.
+//! - [`pann`] — the headline contribution: converting a pre-trained
+//!   model to unsigned arithmetic (Sec. 4), removing the multiplier
+//!   (Sec. 5), and Algorithm 1 for choosing the operating point.
+//! - [`runtime`] — PJRT execution of AOT-lowered JAX/Pallas artifacts
+//!   (HLO text) produced by `python/compile/aot.py`.
+//! - [`coordinator`] — a power-budget-aware serving runtime: dynamic
+//!   batching, operating-point selection, runtime budget traversal.
+//! - [`experiments`] — one driver per table/figure of the paper.
+//!
+//! Power is reported in **bit flips**, exactly as in the paper
+//! (footnote 2: pJ/flip is platform specific; flip counts are not).
+
+pub mod bitflip;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod nn;
+pub mod pann;
+pub mod power;
+pub mod quant;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,243 @@
+//! `pann-cli` — leader entrypoint.
+//!
+//! ```text
+//! pann-cli experiment <id>|all [--quick] [--artifacts DIR]
+//! pann-cli power-report [--bits B] [--acc-bits B]
+//! pann-cli serve --model NAME [--requests N] [--budget GFLIPS]
+//! pann-cli sweep --model NAME [--quick]
+//! pann-cli list
+//! ```
+//!
+//! (Hand-rolled argument parsing: the offline registry for this build
+//! carries no `clap`.)
+
+use anyhow::{bail, Context, Result};
+use pann::coordinator::{EnginePoint, Server, ServerConfig};
+use pann::experiments::{self, Ctx};
+use pann::runtime::{ArtifactManifest, CpuRuntime};
+use std::path::PathBuf;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+struct Args {
+    cmd: String,
+    flags: std::collections::BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+fn parse_args() -> Args {
+    let mut argv = std::env::args().skip(1);
+    let cmd = argv.next().unwrap_or_else(|| "help".to_string());
+    let mut flags = std::collections::BTreeMap::new();
+    let mut positional = Vec::new();
+    let rest: Vec<String> = argv.collect();
+    let mut i = 0;
+    while i < rest.len() {
+        if let Some(name) = rest[i].strip_prefix("--") {
+            let has_val = i + 1 < rest.len() && !rest[i + 1].starts_with("--");
+            if has_val {
+                flags.insert(name.to_string(), rest[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(name.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            positional.push(rest[i].clone());
+            i += 1;
+        }
+    }
+    Args { cmd, flags, positional }
+}
+
+fn run() -> Result<()> {
+    let args = parse_args();
+    let ctx = Ctx {
+        artifacts: PathBuf::from(
+            args.flags.get("artifacts").cloned().unwrap_or_else(|| "artifacts".into()),
+        ),
+        quick: args.flags.contains_key("quick"),
+    };
+    match args.cmd.as_str() {
+        "list" => {
+            println!("experiments: {}", experiments::ids().join(" "));
+            Ok(())
+        }
+        "experiment" => {
+            let id = args
+                .positional
+                .first()
+                .context("usage: pann-cli experiment <id>|all")?;
+            if id == "all" {
+                for (name, _) in experiments::ALL {
+                    if let Err(e) = experiments::run(name, &ctx) {
+                        println!("[{name} skipped: {e}]");
+                    }
+                    println!();
+                }
+                Ok(())
+            } else {
+                experiments::run(id, &ctx)
+            }
+        }
+        "power-report" => {
+            let bits: u32 = args.flags.get("bits").map_or(Ok(4), |s| s.parse())?;
+            let acc: u32 = args.flags.get("acc-bits").map_or(Ok(32), |s| s.parse())?;
+            power_report(bits, acc)
+        }
+        "serve" => {
+            let model = args.flags.get("model").cloned().unwrap_or_else(|| "cnn-s".into());
+            let n: usize = args.flags.get("requests").map_or(Ok(256), |s| s.parse())?;
+            let budget: f64 = args
+                .flags
+                .get("budget")
+                .map_or(Ok(f64::INFINITY), |s| s.parse())?;
+            serve(&ctx, &model, n, budget)
+        }
+        "sweep" => {
+            let model = args.flags.get("model").cloned().unwrap_or_else(|| "cnn-s".into());
+            sweep(&ctx, &model)
+        }
+        _ => {
+            println!(
+                "pann-cli — power-aware neural networks (PANN reproduction)\n\
+                 commands:\n\
+                 \x20 experiment <id>|all [--quick]   regenerate a paper table/figure\n\
+                 \x20 list                            list experiment ids\n\
+                 \x20 power-report [--bits B]         per-MAC power model summary\n\
+                 \x20 serve --model M [--requests N] [--budget G]\n\
+                 \x20 sweep --model M [--quick]       power-accuracy sweep (Fig. 1)\n"
+            );
+            Ok(())
+        }
+    }
+}
+
+/// Print the analytic per-MAC power breakdown at a bit width.
+fn power_report(bits: u32, acc_bits: u32) -> Result<()> {
+    use pann::power::model::*;
+    let s = mac_power_signed(bits, acc_bits);
+    let u = mac_power_unsigned(bits);
+    println!("per-MAC power at b={bits}, B={acc_bits} (bit flips):");
+    println!("  signed:   mult {:>6.1} + acc {:>6.1} = {:>6.1}", s.mult, s.acc, s.total());
+    println!("  unsigned: mult {:>6.1} + acc {:>6.1} = {:>6.1}", u.mult, u.acc, u.total());
+    println!("  unsigned save: {:.0}%", 100.0 * (1.0 - u.total() / s.total()));
+    println!("PANN equal-power points (P = {}):", mac_power_unsigned_total(bits));
+    for bt in 2..=8u32 {
+        if let Some(r) = pann::power::budget::equal_power_r(mac_power_unsigned_total(bits), bt) {
+            if r > 0.0 {
+                println!("  b̃x={bt}: R={r:.2}");
+            }
+        }
+    }
+    Ok(())
+}
+
+/// End-to-end serving demo over the AOT artifacts.
+fn serve(ctx: &Ctx, model: &str, n_requests: usize, budget: f64) -> Result<()> {
+    let hlo_dir = ctx.artifacts.join("hlo");
+    let manifest = ArtifactManifest::load(&hlo_dir)
+        .context("load artifacts/hlo/manifest.json — run `make artifacts` first")?;
+    let specs: Vec<_> = manifest.points_for(model).into_iter().cloned().collect();
+    if specs.is_empty() {
+        bail!("no executables for model '{model}' in {}", hlo_dir.display());
+    }
+    let sample_len: usize = specs[0].input_shape[1..].iter().product();
+    let model_name = model.to_string();
+    let srv = Server::start(
+        move || {
+            let rt = CpuRuntime::new()?;
+            println!("PJRT platform: {}", rt.platform());
+            let mut points = Vec::new();
+            for spec in &specs {
+                let lm = rt.load(&spec.file, &spec.input_shape)?;
+                println!(
+                    "loaded {}/{} ({} GF/sample)",
+                    model_name, spec.variant, spec.giga_flips_per_sample
+                );
+                points.push(EnginePoint {
+                    name: spec.variant.clone(),
+                    giga_flips_per_sample: if spec.variant == "fp32" {
+                        f64::INFINITY
+                    } else {
+                        spec.giga_flips_per_sample
+                    },
+                    engine: Box::new(lm),
+                });
+            }
+            Ok(points)
+        },
+        sample_len,
+        ServerConfig { budget_gflips: budget, ..Default::default() },
+    )?;
+    let h = srv.handle();
+    // drive with test data, measure accuracy + latency
+    let ds = pann::data::Dataset::load(
+        &ctx.artifacts.join("data").join(experiments::dataset_for(model)),
+        "test",
+    )?;
+    let n = n_requests.min(ds.len());
+    let mut correct = 0usize;
+    for i in 0..n {
+        let r = h.infer(ds.sample(i).to_vec())?;
+        let pred = r
+            .output
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        if pred == ds.y[i] as usize {
+            correct += 1;
+        }
+    }
+    println!("accuracy {:.3} over {n} requests", correct as f64 / n as f64);
+    println!("{}", h.metrics().report());
+    srv.shutdown();
+    Ok(())
+}
+
+/// Fig. 1 power–accuracy sweep on the native engine.
+fn sweep(ctx: &Ctx, model: &str) -> Result<()> {
+    use pann::pann::{algorithm1, convert};
+    use pann::quant::ActQuantMethod;
+    let (m, test) = ctx.load_model(model)?;
+    let test = test.take(ctx.eval_n());
+    let calib = convert::calib_tensor(&test, 32);
+    println!("{:<8} {:>12} {:>8} | {:>12} {:>8}", "budget", "base GF", "acc", "pann GF", "acc");
+    for bits in [2u32, 3, 4, 6, 8] {
+        let (_, base) =
+            convert::unsigned_of(&m, bits, ActQuantMethod::BnStats, Some(&calib), &test)?;
+        let p = pann::power::model::mac_power_unsigned_total(bits);
+        let op = algorithm1::choose_operating_point(
+            &m,
+            p,
+            ActQuantMethod::BnStats,
+            Some(&calib),
+            &test.take(96),
+            2..=8,
+        )?;
+        let (_, our) = convert::pann_at_budget(
+            &m,
+            op.bx_tilde,
+            op.r,
+            ActQuantMethod::BnStats,
+            Some(&calib),
+            &test,
+        )?;
+        println!(
+            "{:<8} {:>12.4} {:>8.3} | {:>12.4} {:>8.3}",
+            format!("{bits}-bit"),
+            base.giga_flips,
+            base.accuracy(),
+            our.giga_flips,
+            our.accuracy()
+        );
+    }
+    Ok(())
+}

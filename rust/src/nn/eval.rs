@@ -1,0 +1,214 @@
+//! Dataset evaluation loops (fp32 and quantized), threaded across the
+//! batch with `std::thread::scope` (the offline registry has no rayon).
+
+use super::model::Model;
+use super::quantized::QuantizedModel;
+use super::tensor::Tensor;
+use crate::data::Dataset;
+use anyhow::Result;
+
+/// Classification result of one evaluation.
+#[derive(Clone, Debug)]
+pub struct EvalResult {
+    pub correct: usize,
+    pub total: usize,
+    /// Giga bit flips consumed (0 for fp32 runs).
+    pub giga_flips: f64,
+    /// Flips per sample.
+    pub flips_per_sample: f64,
+}
+
+impl EvalResult {
+    pub fn accuracy(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.correct as f64 / self.total as f64
+        }
+    }
+}
+
+/// Batch a dataset slice into a tensor.
+pub fn batch_tensor(ds: &Dataset, start: usize, len: usize) -> Tensor {
+    let d = ds.sample_len();
+    let mut shape = vec![len];
+    shape.extend_from_slice(&ds.sample_shape);
+    Tensor { shape, data: ds.x[start * d..(start + len) * d].to_vec() }
+}
+
+fn argmax(row: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in row.iter().enumerate() {
+        if v > row[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Number of worker threads (can be overridden with PANN_THREADS).
+pub fn n_threads() -> usize {
+    if let Ok(v) = std::env::var("PANN_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
+}
+
+/// fp32 accuracy over a dataset.
+pub fn eval_fp32(model: &Model, ds: &Dataset) -> Result<EvalResult> {
+    let chunks = split(ds.len(), n_threads());
+    let correct = std::thread::scope(|s| -> Result<usize> {
+        let mut handles = Vec::new();
+        for (start, len) in chunks {
+            handles.push(s.spawn(move || -> Result<usize> {
+                let x = batch_tensor(ds, start, len);
+                let y = model.forward(&x)?;
+                let classes = y.sample_len();
+                let mut c = 0;
+                for i in 0..len {
+                    if argmax(&y.data[i * classes..(i + 1) * classes]) == ds.y[start + i] as usize {
+                        c += 1;
+                    }
+                }
+                Ok(c)
+            }));
+        }
+        let mut total = 0;
+        for h in handles {
+            total += h.join().expect("eval worker panicked")?;
+        }
+        Ok(total)
+    })?;
+    Ok(EvalResult { correct, total: ds.len(), giga_flips: 0.0, flips_per_sample: 0.0 })
+}
+
+/// Quantized accuracy + power over a dataset.
+pub fn eval_quantized(qm: &QuantizedModel, ds: &Dataset) -> Result<EvalResult> {
+    let chunks = split(ds.len(), n_threads());
+    let (correct, flips) = std::thread::scope(|s| -> Result<(usize, f64)> {
+        let mut handles = Vec::new();
+        for (start, len) in chunks {
+            handles.push(s.spawn(move || -> Result<(usize, f64)> {
+                let x = batch_tensor(ds, start, len);
+                let mut meter = qm.new_meter();
+                let y = qm.forward(&x, &mut meter)?;
+                let classes = y.sample_len();
+                let mut c = 0;
+                for i in 0..len {
+                    if argmax(&y.data[i * classes..(i + 1) * classes]) == ds.y[start + i] as usize {
+                        c += 1;
+                    }
+                }
+                Ok((c, meter.total_flips()))
+            }));
+        }
+        let mut total = 0;
+        let mut fl = 0.0;
+        for h in handles {
+            let (c, f) = h.join().expect("eval worker panicked")?;
+            total += c;
+            fl += f;
+        }
+        Ok((total, fl))
+    })?;
+    Ok(EvalResult {
+        correct,
+        total: ds.len(),
+        giga_flips: flips / 1e9,
+        flips_per_sample: flips / ds.len().max(1) as f64,
+    })
+}
+
+/// Split `n` items into up to `k` contiguous chunks.
+fn split(n: usize, k: usize) -> Vec<(usize, usize)> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let k = k.min(n).max(1);
+    let base = n / k;
+    let rem = n % k;
+    let mut out = Vec::with_capacity(k);
+    let mut start = 0;
+    for i in 0..k {
+        let len = base + usize::from(i < rem);
+        if len > 0 {
+            out.push((start, len));
+        }
+        start += len;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::quantized::{QuantConfig, QuantizedModel};
+    use crate::quant::ActQuantMethod;
+
+    #[test]
+    fn split_covers_everything() {
+        for n in [0usize, 1, 7, 100] {
+            for k in [1usize, 3, 8] {
+                let chunks = split(n, k);
+                let total: usize = chunks.iter().map(|(_, l)| l).sum();
+                assert_eq!(total, n);
+                // contiguous
+                let mut pos = 0;
+                for (s, l) in chunks {
+                    assert_eq!(s, pos);
+                    pos += l;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fp32_eval_runs() {
+        let model = Model::reference_cnn(1);
+        let ds = Dataset::from_synth(crate::data::synth::digits(32, 2));
+        let r = eval_fp32(&model, &ds).unwrap();
+        assert_eq!(r.total, 32);
+        assert!(r.correct <= 32);
+    }
+
+    #[test]
+    fn quantized_eval_powers() {
+        let mut model = Model::reference_cnn(3);
+        let ds = Dataset::from_synth(crate::data::synth::digits(16, 4));
+        let x = batch_tensor(&ds, 0, 8);
+        model.record_act_stats(&x).unwrap();
+        let qm = QuantizedModel::prepare(
+            &model,
+            QuantConfig::unsigned_baseline(6, ActQuantMethod::BnStats),
+            None,
+        )
+        .unwrap();
+        let r = eval_quantized(&qm, &ds).unwrap();
+        assert_eq!(r.total, 16);
+        assert!(r.giga_flips > 0.0);
+        assert!(r.flips_per_sample > 0.0);
+    }
+
+    #[test]
+    fn threaded_matches_single_threaded() {
+        let mut model = Model::reference_cnn(5);
+        let ds = Dataset::from_synth(crate::data::synth::digits(24, 6));
+        let x = batch_tensor(&ds, 0, 12);
+        model.record_act_stats(&x).unwrap();
+        let qm = QuantizedModel::prepare(
+            &model,
+            QuantConfig::unsigned_baseline(5, ActQuantMethod::BnStats),
+            None,
+        )
+        .unwrap();
+        std::env::set_var("PANN_THREADS", "1");
+        let single = eval_quantized(&qm, &ds).unwrap();
+        std::env::set_var("PANN_THREADS", "4");
+        let multi = eval_quantized(&qm, &ds).unwrap();
+        std::env::remove_var("PANN_THREADS");
+        assert_eq!(single.correct, multi.correct);
+        assert!((single.giga_flips - multi.giga_flips).abs() < 1e-12);
+    }
+}

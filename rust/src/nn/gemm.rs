@@ -1,0 +1,339 @@
+//! GEMM kernels and im2col — the engine's hot path.
+//!
+//! Three kernels: f32 (reference forward), i32 (quantized baselines)
+//! and a dual i32 kernel for the W⁺/W⁻ unsigned split that reuses each
+//! activation tile for both banks (the activation-reuse argument of the
+//! paper's App. A.8, and the same reuse the L1 Pallas kernel performs
+//! in VMEM).
+//!
+//! All kernels compute `out[m][n] = Σ_k a[m][k] · b[n][k]` — note `b`
+//! is pre-transposed (`[n][k]`, i.e. weights stored `[out][in]`), which
+//! makes the inner loop a contiguous dot product on both operands.
+
+/// f32 GEMM: `out[m][n] = Σ_k a[m*K+k] * bt[n*K+k]`.
+///
+/// Four parallel accumulators break the loop-carried dependency of a
+/// naive dot product so the compiler can keep several FMA chains in
+/// flight (§Perf in EXPERIMENTS.md: ~3× over the naive loop).
+pub fn gemm_f32(a: &[f32], bt: &[f32], out: &mut [f32], m: usize, n: usize, k: usize) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(bt.len(), n * k);
+    assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        let ar = &a[i * k..(i + 1) * k];
+        let or = &mut out[i * n..(i + 1) * n];
+        for j in 0..n {
+            let br = &bt[j * k..(j + 1) * k];
+            let (mut a0, mut a1, mut a2, mut a3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+            let chunks = k / 4 * 4;
+            let mut kk = 0;
+            while kk < chunks {
+                a0 += ar[kk] * br[kk];
+                a1 += ar[kk + 1] * br[kk + 1];
+                a2 += ar[kk + 2] * br[kk + 2];
+                a3 += ar[kk + 3] * br[kk + 3];
+                kk += 4;
+            }
+            let mut acc = (a0 + a1) + (a2 + a3);
+            for kk in chunks..k {
+                acc += ar[kk] * br[kk];
+            }
+            or[j] = acc;
+        }
+    }
+}
+
+/// i32 GEMM with i64 accumulation.
+pub fn gemm_i32(a: &[i32], bt: &[i32], out: &mut [i64], m: usize, n: usize, k: usize) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(bt.len(), n * k);
+    assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        let ar = &a[i * k..(i + 1) * k];
+        let or = &mut out[i * n..(i + 1) * n];
+        for j in 0..n {
+            let br = &bt[j * k..(j + 1) * k];
+            // i32 products accumulated pairwise in i64 with four
+            // parallel chains (values are quantization codes, far from
+            // overflowing the intermediate i64s).
+            let (mut a0, mut a1, mut a2, mut a3) = (0i64, 0i64, 0i64, 0i64);
+            let chunks = k / 4 * 4;
+            let mut kk = 0;
+            while kk < chunks {
+                a0 += ar[kk] as i64 * br[kk] as i64;
+                a1 += ar[kk + 1] as i64 * br[kk + 1] as i64;
+                a2 += ar[kk + 2] as i64 * br[kk + 2] as i64;
+                a3 += ar[kk + 3] as i64 * br[kk + 3] as i64;
+                kk += 4;
+            }
+            let mut acc = (a0 + a1) + (a2 + a3);
+            for kk in chunks..k {
+                acc += ar[kk] as i64 * br[kk] as i64;
+            }
+            or[j] = acc;
+        }
+    }
+}
+
+/// Dual-bank i32 GEMM: one pass computes `pos·a` and `neg·a`, reusing
+/// the `a` tile; returns into `out = pos_result - neg_result` while
+/// also accumulating the per-bank L1 statistics needed for power
+/// accounting of the unsigned/PANN paths.
+pub fn gemm_i32_split(
+    a: &[i32],
+    pos_t: &[i32],
+    neg_t: &[i32],
+    out: &mut [i64],
+    m: usize,
+    n: usize,
+    k: usize,
+) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(pos_t.len(), n * k);
+    assert_eq!(neg_t.len(), n * k);
+    assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        let ar = &a[i * k..(i + 1) * k];
+        let or = &mut out[i * n..(i + 1) * n];
+        for j in 0..n {
+            let pr = &pos_t[j * k..(j + 1) * k];
+            let nr = &neg_t[j * k..(j + 1) * k];
+            // The subtraction distributes over the accumulation, so a
+            // single combined chain `x·(p−n)` halves the multiply count
+            // while reusing the x tile for both banks (the VMEM-reuse
+            // story of the L1 kernel, and ~2× on this path).
+            let (mut a0, mut a1, mut a2, mut a3) = (0i64, 0i64, 0i64, 0i64);
+            let chunks = k / 4 * 4;
+            let mut kk = 0;
+            while kk < chunks {
+                a0 += ar[kk] as i64 * (pr[kk] as i64 - nr[kk] as i64);
+                a1 += ar[kk + 1] as i64 * (pr[kk + 1] as i64 - nr[kk + 1] as i64);
+                a2 += ar[kk + 2] as i64 * (pr[kk + 2] as i64 - nr[kk + 2] as i64);
+                a3 += ar[kk + 3] as i64 * (pr[kk + 3] as i64 - nr[kk + 3] as i64);
+                kk += 4;
+            }
+            let mut acc = (a0 + a1) + (a2 + a3);
+            for kk in chunks..k {
+                acc += ar[kk] as i64 * (pr[kk] as i64 - nr[kk] as i64);
+            }
+            or[j] = acc;
+        }
+    }
+}
+
+/// i32 GEMM with *narrow* (i32) accumulation — valid only when the
+/// caller guarantees `max|a| · max|b| · k < 2^31` (quantization codes
+/// are small, so the quantized executor proves this bound at prepare
+/// time and picks this ~3× faster vectorizable path).
+pub fn gemm_i32_narrow(a: &[i32], bt: &[i32], out: &mut [i64], m: usize, n: usize, k: usize) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(bt.len(), n * k);
+    assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        let ar = &a[i * k..(i + 1) * k];
+        let or = &mut out[i * n..(i + 1) * n];
+        for j in 0..n {
+            let br = &bt[j * k..(j + 1) * k];
+            let mut acc = 0i32;
+            for kk in 0..k {
+                acc = acc.wrapping_add(ar[kk].wrapping_mul(br[kk]));
+            }
+            or[j] = acc as i64;
+        }
+    }
+}
+
+/// Narrow-accumulation variant of [`gemm_i32_split`]; same overflow
+/// precondition as [`gemm_i32_narrow`].
+pub fn gemm_i32_split_narrow(
+    a: &[i32],
+    pos_t: &[i32],
+    neg_t: &[i32],
+    out: &mut [i64],
+    m: usize,
+    n: usize,
+    k: usize,
+) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(pos_t.len(), n * k);
+    assert_eq!(neg_t.len(), n * k);
+    assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        let ar = &a[i * k..(i + 1) * k];
+        let or = &mut out[i * n..(i + 1) * n];
+        for j in 0..n {
+            let pr = &pos_t[j * k..(j + 1) * k];
+            let nr = &neg_t[j * k..(j + 1) * k];
+            let mut acc = 0i32;
+            for kk in 0..k {
+                acc = acc.wrapping_add(ar[kk].wrapping_mul(pr[kk] - nr[kk]));
+            }
+            or[j] = acc as i64;
+        }
+    }
+}
+
+/// im2col for NCHW convolution: input `[c, h, w]` (one sample) into
+/// columns `[oh*ow, c*kh*kw]` with given stride/pad (zero padding).
+#[allow(clippy::too_many_arguments)]
+pub fn im2col(
+    x: &[f32],
+    c: usize,
+    h: usize,
+    w: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+    out: &mut Vec<f32>,
+) -> (usize, usize) {
+    let oh = (h + 2 * pad - kh) / stride + 1;
+    let ow = (w + 2 * pad - kw) / stride + 1;
+    let cols = c * kh * kw;
+    out.clear();
+    out.resize(oh * ow * cols, 0.0);
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let row = (oy * ow + ox) * cols;
+            for ci in 0..c {
+                for ky in 0..kh {
+                    let iy = oy * stride + ky;
+                    if iy < pad || iy - pad >= h {
+                        continue;
+                    }
+                    let iy = iy - pad;
+                    for kx in 0..kw {
+                        let ix = ox * stride + kx;
+                        if ix < pad || ix - pad >= w {
+                            continue;
+                        }
+                        let ix = ix - pad;
+                        out[row + ci * kh * kw + ky * kw + kx] = x[ci * h * w + iy * w + ix];
+                    }
+                }
+            }
+        }
+    }
+    (oh, ow)
+}
+
+/// Output spatial size of a convolution.
+pub fn conv_out_size(h: usize, w: usize, kh: usize, kw: usize, stride: usize, pad: usize) -> (usize, usize) {
+    ((h + 2 * pad - kh) / stride + 1, (w + 2 * pad - kw) / stride + 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn f32_gemm_matches_naive() {
+        let (m, n, k) = (3, 4, 5);
+        let mut r = Rng::new(1);
+        let a: Vec<f32> = (0..m * k).map(|_| r.normal() as f32).collect();
+        let bt: Vec<f32> = (0..n * k).map(|_| r.normal() as f32).collect();
+        let mut out = vec![0.0; m * n];
+        gemm_f32(&a, &bt, &mut out, m, n, k);
+        for i in 0..m {
+            for j in 0..n {
+                let want: f32 = (0..k).map(|kk| a[i * k + kk] * bt[j * k + kk]).sum();
+                assert!((out[i * n + j] - want).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn split_gemm_equals_signed_gemm() {
+        // Sec. 4's claim: splitting W into W⁺/W⁻ is functionally exact.
+        let (m, n, k) = (4, 6, 16);
+        let mut r = Rng::new(2);
+        let a: Vec<i32> = (0..m * k).map(|_| r.range_i64(0, 16) as i32).collect();
+        let w: Vec<i32> = (0..n * k).map(|_| r.range_i64(-8, 8) as i32).collect();
+        let pos: Vec<i32> = w.iter().map(|&v| v.max(0)).collect();
+        let neg: Vec<i32> = w.iter().map(|&v| (-v).max(0)).collect();
+        let mut out_signed = vec![0i64; m * n];
+        let mut out_split = vec![0i64; m * n];
+        gemm_i32(&a, &w, &mut out_signed, m, n, k);
+        gemm_i32_split(&a, &pos, &neg, &mut out_split, m, n, k);
+        assert_eq!(out_signed, out_split);
+    }
+
+    #[test]
+    fn narrow_matches_wide_within_bounds() {
+        let (m, n, k) = (5, 7, 33);
+        let mut r = Rng::new(9);
+        let a: Vec<i32> = (0..m * k).map(|_| r.range_i64(0, 256) as i32).collect();
+        let w: Vec<i32> = (0..n * k).map(|_| r.range_i64(-127, 128) as i32).collect();
+        let pos: Vec<i32> = w.iter().map(|&v| v.max(0)).collect();
+        let neg: Vec<i32> = w.iter().map(|&v| (-v).max(0)).collect();
+        let mut wide = vec![0i64; m * n];
+        let mut narrow = vec![0i64; m * n];
+        gemm_i32(&a, &w, &mut wide, m, n, k);
+        gemm_i32_narrow(&a, &w, &mut narrow, m, n, k);
+        assert_eq!(wide, narrow);
+        gemm_i32_split(&a, &pos, &neg, &mut wide, m, n, k);
+        gemm_i32_split_narrow(&a, &pos, &neg, &mut narrow, m, n, k);
+        assert_eq!(wide, narrow);
+    }
+
+    #[test]
+    fn im2col_identity_kernel() {
+        // 1x1 kernel, stride 1, no pad: columns equal the input pixels.
+        let x: Vec<f32> = (0..2 * 3 * 3).map(|i| i as f32).collect();
+        let mut cols = Vec::new();
+        let (oh, ow) = im2col(&x, 2, 3, 3, 1, 1, 1, 0, &mut cols);
+        assert_eq!((oh, ow), (3, 3));
+        for p in 0..9 {
+            assert_eq!(cols[p * 2], x[p]);
+            assert_eq!(cols[p * 2 + 1], x[9 + p]);
+        }
+    }
+
+    #[test]
+    fn im2col_padding_zeroes() {
+        let x = vec![1.0f32; 1 * 2 * 2];
+        let mut cols = Vec::new();
+        let (oh, ow) = im2col(&x, 1, 2, 2, 3, 3, 1, 1, &mut cols);
+        assert_eq!((oh, ow), (2, 2));
+        // top-left output: kernel overlaps 1 row/col of padding
+        let c0 = &cols[0..9];
+        assert_eq!(c0, &[0., 0., 0., 0., 1., 1., 0., 1., 1.]);
+    }
+
+    #[test]
+    fn conv_via_im2col_matches_direct() {
+        let (c, h, w, co, kh, kw, stride, pad) = (2, 5, 5, 3, 3, 3, 1, 1);
+        let mut r = Rng::new(3);
+        let x: Vec<f32> = (0..c * h * w).map(|_| r.normal() as f32).collect();
+        let wt: Vec<f32> = (0..co * c * kh * kw).map(|_| r.normal() as f32).collect();
+        let mut cols = Vec::new();
+        let (oh, ow) = im2col(&x, c, h, w, kh, kw, stride, pad, &mut cols);
+        let k = c * kh * kw;
+        let mut out = vec![0.0; oh * ow * co];
+        gemm_f32(&cols, &wt, &mut out, oh * ow, co, k);
+        // direct convolution
+        for o in 0..co {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = 0.0f32;
+                    for ci in 0..c {
+                        for ky in 0..kh {
+                            for kx in 0..kw {
+                                let iy = oy as isize + ky as isize - pad as isize;
+                                let ix = ox as isize + kx as isize - pad as isize;
+                                if iy < 0 || ix < 0 || iy >= h as isize || ix >= w as isize {
+                                    continue;
+                                }
+                                acc += x[ci * h * w + iy as usize * w + ix as usize]
+                                    * wt[o * k + ci * kh * kw + ky * kw + kx];
+                            }
+                        }
+                    }
+                    let got = out[(oy * ow + ox) * co + o];
+                    assert!((got - acc).abs() < 1e-4, "{got} vs {acc}");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,282 @@
+//! Graph node definitions and the fp32 forward of each op.
+//!
+//! Models are small SSA graphs: node `i` consumes the output of node
+//! `input` (or the model input when `input == -1`) and, for `Add`, a
+//! second producer — enough to express the MLP / CNN / residual-CNN /
+//! VGG-ish architectures of the experiments. Batch-norm layers are
+//! folded into conv/linear weights at export time (paper footnote 3).
+
+use super::gemm;
+use super::tensor::Tensor;
+use anyhow::{bail, Result};
+
+/// One graph node's operation.
+#[derive(Clone, Debug)]
+pub enum Op {
+    /// Convolution; weights `[co, ci, kh, kw]`, bias `[co]`.
+    Conv { w: Tensor, b: Vec<f32>, stride: usize, pad: usize },
+    /// Fully connected; weights `[out, in]`, bias `[out]`.
+    Linear { w: Tensor, b: Vec<f32> },
+    Relu,
+    /// Max pooling with square kernel = stride = `k`.
+    MaxPool { k: usize },
+    /// Global average pool `[n,c,h,w] -> [n,c]`.
+    GlobalAvgPool,
+    /// Flatten to `[n, rest]`.
+    Flatten,
+    /// Elementwise add with the output of node `rhs` (residual join).
+    Add { rhs: usize },
+}
+
+impl Op {
+    /// Short op name for reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Op::Conv { .. } => "conv",
+            Op::Linear { .. } => "linear",
+            Op::Relu => "relu",
+            Op::MaxPool { .. } => "maxpool",
+            Op::GlobalAvgPool => "gap",
+            Op::Flatten => "flatten",
+            Op::Add { .. } => "add",
+        }
+    }
+
+    /// Is this a MAC layer (quantization target)?
+    pub fn is_mac_layer(&self) -> bool {
+        matches!(self, Op::Conv { .. } | Op::Linear { .. })
+    }
+
+    /// MACs per sample given the input shape `[c, h, w]`-style (no
+    /// batch dim); also returns the output shape.
+    pub fn macs_and_out_shape(&self, in_shape: &[usize]) -> Result<(u64, Vec<usize>)> {
+        match self {
+            Op::Conv { w, stride, pad, .. } => {
+                let (co, ci, kh, kw) = conv_dims(w)?;
+                let (c, h, wd) = chw(in_shape)?;
+                if c != ci {
+                    bail!("conv expects {ci} channels, got {c}");
+                }
+                let (oh, ow) = gemm::conv_out_size(h, wd, kh, kw, *stride, *pad);
+                Ok(((co * ci * kh * kw * oh * ow) as u64, vec![co, oh, ow]))
+            }
+            Op::Linear { w, .. } => {
+                let (out, inp) = (w.shape[0], w.shape[1]);
+                let flat: usize = in_shape.iter().product();
+                if flat != inp {
+                    bail!("linear expects {inp} inputs, got {flat}");
+                }
+                Ok(((out * inp) as u64, vec![out]))
+            }
+            Op::Relu | Op::Add { .. } => Ok((0, in_shape.to_vec())),
+            Op::MaxPool { k } => {
+                let (c, h, w) = chw(in_shape)?;
+                Ok((0, vec![c, h / k, w / k]))
+            }
+            Op::GlobalAvgPool => {
+                let (c, _, _) = chw(in_shape)?;
+                Ok((0, vec![c]))
+            }
+            Op::Flatten => Ok((0, vec![in_shape.iter().product()])),
+        }
+    }
+}
+
+fn chw(shape: &[usize]) -> Result<(usize, usize, usize)> {
+    match shape {
+        [c, h, w] => Ok((*c, *h, *w)),
+        other => bail!("expected [c,h,w] shape, got {other:?}"),
+    }
+}
+
+fn conv_dims(w: &Tensor) -> Result<(usize, usize, usize, usize)> {
+    match w.shape.as_slice() {
+        [co, ci, kh, kw] => Ok((*co, *ci, *kh, *kw)),
+        other => bail!("conv weights must be 4-D, got {other:?}"),
+    }
+}
+
+/// fp32 forward of one op on a batched input.
+pub fn forward_f32(op: &Op, x: &Tensor, rhs: Option<&Tensor>) -> Result<Tensor> {
+    match op {
+        Op::Conv { w, b, stride, pad } => conv_f32(x, w, b, *stride, *pad),
+        Op::Linear { w, b } => linear_f32(x, w, b),
+        Op::Relu => Ok(Tensor {
+            shape: x.shape.clone(),
+            data: x.data.iter().map(|&v| v.max(0.0)).collect(),
+        }),
+        Op::MaxPool { k } => maxpool_f32(x, *k),
+        Op::GlobalAvgPool => gap_f32(x),
+        Op::Flatten => {
+            let n = x.batch();
+            let d = x.sample_len();
+            x.clone().reshape(vec![n, d])
+        }
+        Op::Add { .. } => {
+            let r = rhs.ok_or_else(|| anyhow::anyhow!("add node missing rhs"))?;
+            if r.shape != x.shape {
+                bail!("add shape mismatch {:?} vs {:?}", x.shape, r.shape);
+            }
+            Ok(Tensor {
+                shape: x.shape.clone(),
+                data: x.data.iter().zip(&r.data).map(|(a, b)| a + b).collect(),
+            })
+        }
+    }
+}
+
+/// Batched conv via im2col + f32 GEMM. Output layout `[n, co, oh, ow]`.
+pub fn conv_f32(x: &Tensor, w: &Tensor, b: &[f32], stride: usize, pad: usize) -> Result<Tensor> {
+    let (co, ci, kh, kw) = conv_dims(w)?;
+    let (n, c, h, wd) = match x.shape.as_slice() {
+        [n, c, h, w] => (*n, *c, *h, *w),
+        other => bail!("conv input must be 4-D, got {other:?}"),
+    };
+    if c != ci {
+        bail!("conv expects {ci} channels, got {c}");
+    }
+    if b.len() != co {
+        bail!("bias length {} != {co}", b.len());
+    }
+    let (oh, ow) = gemm::conv_out_size(h, wd, kh, kw, stride, pad);
+    let k = ci * kh * kw;
+    let mut out = Tensor::zeros(vec![n, co, oh, ow]);
+    let mut cols = Vec::new();
+    let mut prod = vec![0.0f32; oh * ow * co];
+    for i in 0..n {
+        gemm::im2col(x.sample(i), c, h, wd, kh, kw, stride, pad, &mut cols);
+        gemm::gemm_f32(&cols, &w.data, &mut prod, oh * ow, co, k);
+        // prod is [oh*ow, co]; transpose into [co, oh, ow] with bias
+        let dst = &mut out.data[i * co * oh * ow..(i + 1) * co * oh * ow];
+        for p in 0..oh * ow {
+            for o in 0..co {
+                dst[o * oh * ow + p] = prod[p * co + o] + b[o];
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Batched linear. Output `[n, out]`.
+pub fn linear_f32(x: &Tensor, w: &Tensor, b: &[f32]) -> Result<Tensor> {
+    let (out_d, in_d) = (w.shape[0], w.shape[1]);
+    let n = x.batch();
+    if x.sample_len() != in_d {
+        bail!("linear expects {in_d} inputs, got {}", x.sample_len());
+    }
+    let mut out = Tensor::zeros(vec![n, out_d]);
+    gemm::gemm_f32(&x.data, &w.data, &mut out.data, n, out_d, in_d);
+    for i in 0..n {
+        for o in 0..out_d {
+            out.data[i * out_d + o] += b[o];
+        }
+    }
+    Ok(out)
+}
+
+fn maxpool_f32(x: &Tensor, k: usize) -> Result<Tensor> {
+    let (n, c, h, w) = match x.shape.as_slice() {
+        [n, c, h, w] => (*n, *c, *h, *w),
+        other => bail!("maxpool input must be 4-D, got {other:?}"),
+    };
+    let (oh, ow) = (h / k, w / k);
+    let mut out = Tensor::zeros(vec![n, c, oh, ow]);
+    for i in 0..n {
+        for ci in 0..c {
+            let src = &x.data[(i * c + ci) * h * w..(i * c + ci + 1) * h * w];
+            let dst = &mut out.data[(i * c + ci) * oh * ow..(i * c + ci + 1) * oh * ow];
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut m = f32::NEG_INFINITY;
+                    for ky in 0..k {
+                        for kx in 0..k {
+                            m = m.max(src[(oy * k + ky) * w + ox * k + kx]);
+                        }
+                    }
+                    dst[oy * ow + ox] = m;
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+fn gap_f32(x: &Tensor) -> Result<Tensor> {
+    let (n, c, h, w) = match x.shape.as_slice() {
+        [n, c, h, w] => (*n, *c, *h, *w),
+        other => bail!("gap input must be 4-D, got {other:?}"),
+    };
+    let mut out = Tensor::zeros(vec![n, c]);
+    let inv = 1.0 / (h * w) as f32;
+    for i in 0..n {
+        for ci in 0..c {
+            let s: f32 = x.data[(i * c + ci) * h * w..(i * c + ci + 1) * h * w].iter().sum();
+            out.data[i * c + ci] = s * inv;
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn relu_and_add() {
+        let x = Tensor::new(vec![1, 3], vec![-1.0, 0.5, 2.0]).unwrap();
+        let r = forward_f32(&Op::Relu, &x, None).unwrap();
+        assert_eq!(r.data, vec![0.0, 0.5, 2.0]);
+        let s = forward_f32(&Op::Add { rhs: 0 }, &x, Some(&r)).unwrap();
+        assert_eq!(s.data, vec![-1.0, 1.0, 4.0]);
+    }
+
+    #[test]
+    fn maxpool_known() {
+        let x = Tensor::new(
+            vec![1, 1, 4, 4],
+            vec![
+                1., 2., 3., 4., //
+                5., 6., 7., 8., //
+                9., 10., 11., 12., //
+                13., 14., 15., 16.,
+            ],
+        )
+        .unwrap();
+        let y = forward_f32(&Op::MaxPool { k: 2 }, &x, None).unwrap();
+        assert_eq!(y.shape, vec![1, 1, 2, 2]);
+        assert_eq!(y.data, vec![6., 8., 14., 16.]);
+    }
+
+    #[test]
+    fn gap_known() {
+        let x = Tensor::new(vec![1, 2, 2, 2], vec![1., 1., 1., 1., 2., 2., 2., 6.]).unwrap();
+        let y = forward_f32(&Op::GlobalAvgPool, &x, None).unwrap();
+        assert_eq!(y.data, vec![1.0, 3.0]);
+    }
+
+    #[test]
+    fn linear_bias() {
+        let w = Tensor::new(vec![2, 3], vec![1., 0., 0., 0., 1., 1.]).unwrap();
+        let x = Tensor::new(vec![1, 3], vec![3., 4., 5.]).unwrap();
+        let y = forward_f32(&Op::Linear { w, b: vec![10.0, 0.0] }, &x, None).unwrap();
+        assert_eq!(y.data, vec![13.0, 9.0]);
+    }
+
+    #[test]
+    fn conv_macs_counting() {
+        let mut r = Rng::new(1);
+        let w = Tensor::new(vec![4, 2, 3, 3], (0..72).map(|_| r.normal() as f32).collect()).unwrap();
+        let op = Op::Conv { w, b: vec![0.0; 4], stride: 1, pad: 1 };
+        let (macs, out) = op.macs_and_out_shape(&[2, 8, 8]).unwrap();
+        assert_eq!(out, vec![4, 8, 8]);
+        assert_eq!(macs, (4 * 2 * 3 * 3 * 8 * 8) as u64);
+    }
+
+    #[test]
+    fn shape_errors() {
+        let w = Tensor::new(vec![2, 3], vec![0.0; 6]).unwrap();
+        let op = Op::Linear { w, b: vec![0.0; 2] };
+        assert!(op.macs_and_out_shape(&[4]).is_err());
+    }
+}

@@ -1,0 +1,32 @@
+//! Integer NN inference engine with exact power metering.
+//!
+//! A small SSA-graph executor for the conv/linear/ReLU/pool networks
+//! the paper evaluates, able to run each model in four arithmetic
+//! modes while accounting bit-flip power per layer:
+//!
+//! - **fp32** — reference forward (also used to collect calibration
+//!   activations).
+//! - **signed MAC** — weights/activations quantized to `b_w`/`b_x`
+//!   bits, signed integer arithmetic, power per Eqs. (1)–(2)/(7).
+//! - **unsigned MAC** — the Sec. 4 W⁺/W⁻ split; *identical function*,
+//!   power per Eqs. (3)–(4).
+//! - **PANN** — multiplier-free weight quantization of Sec. 5, power
+//!   per Eq. (13) with the *achieved* additions budget.
+//!
+//! Modules: [`tensor`] (shape + storage), [`gemm`] (f32 and integer
+//! GEMM + im2col), [`layers`]/[`model`] (graph + manifest), [`quantized`]
+//! (prepared quantized execution), [`power_meter`] (accounting),
+//! [`eval`] (dataset accuracy loops).
+
+pub mod eval;
+pub mod gemm;
+pub mod layers;
+pub mod model;
+pub mod power_meter;
+pub mod quantized;
+pub mod tensor;
+
+pub use model::Model;
+pub use power_meter::PowerMeter;
+pub use quantized::{Arithmetic, QuantConfig, QuantizedModel, WeightQuantMethod};
+pub use tensor::Tensor;

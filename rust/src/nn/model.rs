@@ -1,0 +1,328 @@
+//! Model graphs: manifest loading, fp32 forward, calibration capture
+//! and built-in reference architectures.
+//!
+//! A manifest (`manifest.json`, written by `python/compile/train.py`)
+//! lists nodes in SSA order; weight tensors live as `.ptns` files next
+//! to it. Per-node output activation statistics (recorded on the
+//! training set) power the data-free quantizers.
+
+use super::layers::{forward_f32, Op};
+use super::tensor::Tensor;
+use crate::quant::bnstats::BnStats;
+use crate::util::{Json, Rng};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// One SSA node.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub op: Op,
+    /// Producer index; -1 = model input.
+    pub input: isize,
+}
+
+/// A loaded model.
+#[derive(Clone, Debug)]
+pub struct Model {
+    pub name: String,
+    /// Input shape per sample (e.g. `[1, 16, 16]` or `[64]`).
+    pub input_shape: Vec<usize>,
+    pub nodes: Vec<Node>,
+    /// Per-node output activation statistics (per-channel mean/std),
+    /// recorded at training time; used by the data-free quantizers.
+    pub act_stats: BTreeMap<usize, BnStats>,
+}
+
+impl Model {
+    /// Total MACs for one sample (the paper's per-network constant).
+    pub fn num_macs(&self) -> u64 {
+        self.shapes().map(|v| v.iter().map(|(m, _)| m).sum()).unwrap_or(0)
+    }
+
+    /// Per-node (macs, out_shape) in SSA order.
+    pub fn shapes(&self) -> Result<Vec<(u64, Vec<usize>)>> {
+        let mut out: Vec<(u64, Vec<usize>)> = Vec::with_capacity(self.nodes.len());
+        for (i, node) in self.nodes.iter().enumerate() {
+            let in_shape = if node.input < 0 {
+                self.input_shape.clone()
+            } else {
+                out[node.input as usize].1.clone()
+            };
+            let (m, s) = self
+                .nodes[i]
+                .op
+                .macs_and_out_shape(&in_shape)
+                .with_context(|| format!("node {i} ({})", node.op.name()))?;
+            out.push((m, s));
+        }
+        Ok(out)
+    }
+
+    /// fp32 forward over a batch; returns the final node's output.
+    pub fn forward(&self, x: &Tensor) -> Result<Tensor> {
+        Ok(self.forward_all(x)?.pop().expect("non-empty model"))
+    }
+
+    /// fp32 forward retaining every node output (calibration capture).
+    pub fn forward_all(&self, x: &Tensor) -> Result<Vec<Tensor>> {
+        if self.nodes.is_empty() {
+            bail!("empty model");
+        }
+        let mut outs: Vec<Tensor> = Vec::with_capacity(self.nodes.len());
+        for (i, node) in self.nodes.iter().enumerate() {
+            let input = if node.input < 0 { x } else { &outs[node.input as usize] };
+            let rhs = match node.op {
+                Op::Add { rhs } => Some(&outs[rhs]),
+                _ => None,
+            };
+            let y = forward_f32(&node.op, input, rhs)
+                .with_context(|| format!("node {i} ({})", node.op.name()))?;
+            outs.push(y);
+        }
+        Ok(outs)
+    }
+
+    /// Load from `dir/manifest.json` + `.ptns` weight files.
+    pub fn load(dir: &Path) -> Result<Model> {
+        let manifest = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("read {}/manifest.json", dir.display()))?;
+        let j = Json::parse(&manifest).context("parse manifest.json")?;
+        let name = j.req("name")?.as_str().unwrap_or("model").to_string();
+        let input_shape: Vec<usize> = j
+            .req("input")?
+            .as_arr()
+            .context("input must be array")?
+            .iter()
+            .map(|v| v.as_usize().unwrap_or(0))
+            .collect();
+        let load_w = |v: &Json| -> Result<Tensor> {
+            let fname = v.as_str().context("tensor ref must be a string")?;
+            let t = crate::data::tensor_io::read_tensor(&dir.join(fname))?;
+            let (shape, data) = t.into_f32()?;
+            Tensor::new(shape, data)
+        };
+        let mut nodes = Vec::new();
+        for (i, nj) in j.req("layers")?.as_arr().context("layers must be array")?.iter().enumerate() {
+            let op_name = nj.req("op")?.as_str().context("op must be string")?;
+            let input = nj.get("input").and_then(|v| v.as_f64()).unwrap_or(i as f64 - 1.0) as isize;
+            let op = match op_name {
+                "conv" => {
+                    let w = load_w(nj.req("w")?)?;
+                    let b = load_w(nj.req("b")?)?.data;
+                    let stride = nj.get("stride").and_then(|v| v.as_usize()).unwrap_or(1);
+                    let pad = nj.get("pad").and_then(|v| v.as_usize()).unwrap_or(0);
+                    Op::Conv { w, b, stride, pad }
+                }
+                "linear" => {
+                    let w = load_w(nj.req("w")?)?;
+                    let b = load_w(nj.req("b")?)?.data;
+                    Op::Linear { w, b }
+                }
+                "relu" => Op::Relu,
+                "maxpool" => Op::MaxPool { k: nj.get("k").and_then(|v| v.as_usize()).unwrap_or(2) },
+                "gap" => Op::GlobalAvgPool,
+                "flatten" => Op::Flatten,
+                "add" => Op::Add {
+                    rhs: nj.req("rhs")?.as_usize().context("rhs must be index")?,
+                },
+                other => bail!("unknown op '{other}' at node {i}"),
+            };
+            nodes.push(Node { op, input });
+        }
+        // activation statistics
+        let mut act_stats = BTreeMap::new();
+        if let Some(Json::Obj(m)) = j.get("act_stats") {
+            for (k, v) in m {
+                let idx: usize = k.parse().with_context(|| format!("bad act_stats key {k}"))?;
+                let mean: Vec<f32> = v
+                    .req("mean")?
+                    .as_arr()
+                    .context("mean must be array")?
+                    .iter()
+                    .map(|x| x.as_f64().unwrap_or(0.0) as f32)
+                    .collect();
+                let std: Vec<f32> = v
+                    .req("std")?
+                    .as_arr()
+                    .context("std must be array")?
+                    .iter()
+                    .map(|x| x.as_f64().unwrap_or(0.0) as f32)
+                    .collect();
+                act_stats.insert(idx, BnStats::new(mean, std));
+            }
+        }
+        let model = Model { name, input_shape, nodes, act_stats };
+        model.shapes().context("shape check failed")?; // validate graph
+        Ok(model)
+    }
+
+    /// Record per-node output statistics on a batch (used when a
+    /// manifest lacks them and for the built-in reference models).
+    pub fn record_act_stats(&mut self, x: &Tensor) -> Result<()> {
+        let outs = self.forward_all(x)?;
+        let shapes = self.shapes()?;
+        self.act_stats.clear();
+        for (i, out) in outs.iter().enumerate() {
+            let ch = shapes[i].1[0];
+            let per = out.sample_len() / ch.max(1);
+            let n = out.batch();
+            let mut mean = vec![0.0f32; ch];
+            let mut std = vec![0.0f32; ch];
+            for c in 0..ch {
+                let mut acc = 0.0f64;
+                let mut acc2 = 0.0f64;
+                let mut cnt = 0usize;
+                for s in 0..n {
+                    let base = s * out.sample_len() + c * per;
+                    for p in 0..per {
+                        let v = out.data[base + p] as f64;
+                        acc += v;
+                        acc2 += v * v;
+                        cnt += 1;
+                    }
+                }
+                let m = acc / cnt.max(1) as f64;
+                mean[c] = m as f32;
+                std[c] = ((acc2 / cnt.max(1) as f64 - m * m).max(0.0)).sqrt() as f32;
+            }
+            self.act_stats.insert(i, BnStats::new(mean, std));
+        }
+        Ok(())
+    }
+
+    /// A small random CNN for tests/benches (conv-relu-pool ×2 + fc),
+    /// 16×16 single-channel input, 10 classes.
+    pub fn reference_cnn(seed: u64) -> Model {
+        let mut r = Rng::new(seed);
+        let mut t = |shape: Vec<usize>, scale: f32| {
+            let n: usize = shape.iter().product();
+            Tensor::new(shape, (0..n).map(|_| r.normal() as f32 * scale).collect()).unwrap()
+        };
+        let conv1 = Op::Conv { w: t(vec![8, 1, 3, 3], 0.3), b: vec![0.0; 8], stride: 1, pad: 1 };
+        let conv2 = Op::Conv { w: t(vec![16, 8, 3, 3], 0.1), b: vec![0.0; 16], stride: 1, pad: 1 };
+        let fc = Op::Linear { w: t(vec![10, 16 * 4 * 4], 0.1), b: vec![0.0; 10] };
+        Model {
+            name: "ref-cnn".into(),
+            input_shape: vec![1, 16, 16],
+            nodes: vec![
+                Node { op: conv1, input: -1 },
+                Node { op: Op::Relu, input: 0 },
+                Node { op: Op::MaxPool { k: 2 }, input: 1 },
+                Node { op: conv2, input: 2 },
+                Node { op: Op::Relu, input: 3 },
+                Node { op: Op::MaxPool { k: 2 }, input: 4 },
+                Node { op: Op::Flatten, input: 5 },
+                Node { op: fc, input: 6 },
+            ],
+            act_stats: BTreeMap::new(),
+        }
+    }
+
+    /// A small residual CNN for tests (conv + identity-join).
+    pub fn reference_resnet(seed: u64) -> Model {
+        let mut r = Rng::new(seed);
+        let mut t = |shape: Vec<usize>, scale: f32| {
+            let n: usize = shape.iter().product();
+            Tensor::new(shape, (0..n).map(|_| r.normal() as f32 * scale).collect()).unwrap()
+        };
+        let stem = Op::Conv { w: t(vec![8, 1, 3, 3], 0.3), b: vec![0.0; 8], stride: 1, pad: 1 };
+        let block = Op::Conv { w: t(vec![8, 8, 3, 3], 0.1), b: vec![0.0; 8], stride: 1, pad: 1 };
+        let fc = Op::Linear { w: t(vec![10, 8], 0.3), b: vec![0.0; 10] };
+        Model {
+            name: "ref-resnet".into(),
+            input_shape: vec![1, 16, 16],
+            nodes: vec![
+                Node { op: stem, input: -1 },                 // 0
+                Node { op: Op::Relu, input: 0 },              // 1
+                Node { op: block, input: 1 },                 // 2
+                Node { op: Op::Relu, input: 2 },              // 3
+                Node { op: Op::Add { rhs: 1 }, input: 3 },    // 4 residual
+                Node { op: Op::GlobalAvgPool, input: 4 },     // 5
+                Node { op: fc, input: 5 },                    // 6
+            ],
+            act_stats: BTreeMap::new(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_cnn_forward_shape() {
+        let m = Model::reference_cnn(1);
+        let x = Tensor::zeros(vec![3, 1, 16, 16]);
+        let y = m.forward(&x).unwrap();
+        assert_eq!(y.shape, vec![3, 10]);
+        assert_eq!(m.num_macs(), 8*9*256 + 16*8*9*64 + 10*256);
+    }
+
+    #[test]
+    fn residual_join_works() {
+        let m = Model::reference_resnet(2);
+        let mut x = Tensor::zeros(vec![2, 1, 16, 16]);
+        x.data.iter_mut().enumerate().for_each(|(i, v)| *v = (i % 7) as f32 * 0.1);
+        let y = m.forward(&x).unwrap();
+        assert_eq!(y.shape, vec![2, 10]);
+        // outputs differ per sample
+        assert!(y.data[..10].iter().zip(&y.data[10..]).any(|(a, b)| (a - b).abs() > 1e-6));
+    }
+
+    #[test]
+    fn manifest_roundtrip() {
+        // Write a tiny manifest + weights, load it, compare forward
+        // with the in-memory model.
+        let dir = std::env::temp_dir().join("pann_test_model");
+        std::fs::create_dir_all(&dir).unwrap();
+        let w = Tensor::new(vec![2, 3], vec![0.5, -1.0, 0.25, 1.0, 0.0, -0.5]).unwrap();
+        crate::data::tensor_io::write_tensor(
+            &dir.join("w.ptns"),
+            &crate::data::tensor_io::TensorData::F32(w.shape.clone(), w.data.clone()),
+        )
+        .unwrap();
+        crate::data::tensor_io::write_tensor(
+            &dir.join("b.ptns"),
+            &crate::data::tensor_io::TensorData::F32(vec![2], vec![0.1, -0.1]),
+        )
+        .unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"name":"tiny","input":[3],"layers":[
+                {"op":"linear","w":"w.ptns","b":"b.ptns","input":-1},
+                {"op":"relu","input":0}
+            ],"act_stats":{"0":{"mean":[0.0,0.0],"std":[1.0,1.0]}}}"#,
+        )
+        .unwrap();
+        let m = Model::load(&dir).unwrap();
+        assert_eq!(m.name, "tiny");
+        let x = Tensor::new(vec![1, 3], vec![1.0, 2.0, 3.0]).unwrap();
+        let y = m.forward(&x).unwrap();
+        // linear: [0.5-2+0.75+0.1, 1+0-1.5-0.1] = [-0.65, -0.6] -> relu 0
+        assert_eq!(y.data, vec![0.0, 0.0]);
+        assert!(m.act_stats.contains_key(&0));
+    }
+
+    #[test]
+    fn bad_manifest_rejected() {
+        let dir = std::env::temp_dir().join("pann_test_badmodel");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), r#"{"name":"x","input":[3],"layers":[{"op":"nope"}]}"#)
+            .unwrap();
+        assert!(Model::load(&dir).is_err());
+    }
+
+    #[test]
+    fn act_stats_recording() {
+        let mut m = Model::reference_cnn(3);
+        let mut x = Tensor::zeros(vec![4, 1, 16, 16]);
+        let mut r = crate::util::Rng::new(5);
+        x.data.iter_mut().for_each(|v| *v = r.f32());
+        m.record_act_stats(&x).unwrap();
+        assert_eq!(m.act_stats.len(), m.nodes.len());
+        // post-relu stats are non-negative means
+        let relu_stats = &m.act_stats[&1];
+        assert!(relu_stats.mean.iter().all(|&v| v >= 0.0));
+    }
+}

@@ -1,0 +1,114 @@
+//! Per-layer bit-flip power accounting.
+//!
+//! The meter accumulates, per MAC layer, the number of MACs executed
+//! and the bit flips they cost under the active arithmetic mode, using
+//! the analytic models of [`crate::power`] — exactly how the paper
+//! computes its table columns (power = per-MAC flips × #MACs).
+
+/// One layer's tally.
+#[derive(Clone, Debug, Default)]
+pub struct LayerTally {
+    pub name: String,
+    /// MACs executed (or elements processed, for PANN).
+    pub macs: u64,
+    /// Bit flips consumed.
+    pub flips: f64,
+    /// PANN only: achieved additions per element.
+    pub adds_per_element: f64,
+}
+
+/// Accumulated power over a run.
+#[derive(Clone, Debug, Default)]
+pub struct PowerMeter {
+    pub layers: Vec<LayerTally>,
+}
+
+impl PowerMeter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a layer slot; returns its index.
+    pub fn add_layer(&mut self, name: &str) -> usize {
+        self.layers.push(LayerTally { name: name.to_string(), ..Default::default() });
+        self.layers.len() - 1
+    }
+
+    /// Record `macs` MAC operations at `flips_per_mac`.
+    pub fn record(&mut self, layer: usize, macs: u64, flips_per_mac: f64) {
+        let t = &mut self.layers[layer];
+        t.macs += macs;
+        t.flips += macs as f64 * flips_per_mac;
+    }
+
+    /// Record a PANN burst: `elements` weight/activation pairs at the
+    /// achieved additions budget.
+    pub fn record_pann(&mut self, layer: usize, elements: u64, adds_per_element: f64, bx_tilde: u32) {
+        let t = &mut self.layers[layer];
+        t.macs += elements;
+        t.adds_per_element = adds_per_element;
+        t.flips += elements as f64 * crate::power::model::pann_power_per_element(adds_per_element, bx_tilde);
+    }
+
+    /// Total flips.
+    pub fn total_flips(&self) -> f64 {
+        self.layers.iter().map(|l| l.flips).sum()
+    }
+
+    /// Total flips in Giga bit flips (the paper's table unit).
+    pub fn giga(&self) -> f64 {
+        self.total_flips() / 1e9
+    }
+
+    /// Total MACs.
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs).sum()
+    }
+
+    pub fn reset(&mut self) {
+        for l in &mut self.layers {
+            l.macs = 0;
+            l.flips = 0.0;
+        }
+    }
+
+    /// Pretty per-layer report.
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        for l in &self.layers {
+            s.push_str(&format!(
+                "{:<18} macs={:<12} flips={:.3e}\n",
+                l.name, l.macs, l.flips
+            ));
+        }
+        s.push_str(&format!("TOTAL  macs={}  {:.4} Gflips\n", self.total_macs(), self.giga()));
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates() {
+        let mut m = PowerMeter::new();
+        let a = m.add_layer("conv1");
+        let b = m.add_layer("fc");
+        m.record(a, 1000, 36.0);
+        m.record(b, 500, 24.0);
+        assert_eq!(m.total_macs(), 1500);
+        assert!((m.total_flips() - 48_000.0).abs() < 1e-9);
+        m.reset();
+        assert_eq!(m.total_flips(), 0.0);
+    }
+
+    #[test]
+    fn pann_record_uses_eq13() {
+        let mut m = PowerMeter::new();
+        let a = m.add_layer("conv1");
+        m.record_pann(a, 100, 2.0, 4);
+        // (2 + 0.5) * 4 = 10 flips per element
+        assert!((m.total_flips() - 1000.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,86 @@
+//! Dense row-major f32 tensor.
+
+use anyhow::{bail, Result};
+
+/// A dense row-major tensor of f32.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elements, got {}", shape, n, data.len());
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Leading (batch) dimension.
+    pub fn batch(&self) -> usize {
+        *self.shape.first().unwrap_or(&0)
+    }
+
+    /// Elements per sample (all dims but the first).
+    pub fn sample_len(&self) -> usize {
+        self.shape.iter().skip(1).product()
+    }
+
+    /// Reshape in place (must preserve element count).
+    pub fn reshape(mut self, shape: Vec<usize>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            bail!("reshape {:?} -> {:?} mismatch", self.shape, shape);
+        }
+        self.shape = shape;
+        Ok(self)
+    }
+
+    /// Max |x| over the tensor.
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    /// Row-major sample slice.
+    pub fn sample(&self, i: usize) -> &[f32] {
+        let d = self.sample_len();
+        &self.data[i * d..(i + 1) * d]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_reshape() {
+        let t = Tensor::new(vec![2, 3], vec![0., 1., 2., 3., 4., 5.]).unwrap();
+        assert_eq!(t.batch(), 2);
+        assert_eq!(t.sample_len(), 3);
+        let r = t.reshape(vec![3, 2]).unwrap();
+        assert_eq!(r.shape, vec![3, 2]);
+        assert!(Tensor::new(vec![2, 2], vec![0.0]).is_err());
+        assert!(r.reshape(vec![5]).is_err());
+    }
+
+    #[test]
+    fn max_abs_works() {
+        let t = Tensor::new(vec![3], vec![-2.5, 1.0, 2.0]).unwrap();
+        assert_eq!(t.max_abs(), 2.5);
+    }
+}

@@ -1,0 +1,99 @@
+//! Algorithm 1 of the paper: choosing the optimal `(b̃_x, R)` for a
+//! power budget by validating candidate activation bit widths.
+
+use crate::data::Dataset;
+use crate::nn::eval::eval_quantized;
+use crate::nn::quantized::{QuantConfig, QuantizedModel};
+use crate::nn::{Model, Tensor};
+use crate::quant::ActQuantMethod;
+use anyhow::Result;
+
+/// A chosen PANN operating point.
+#[derive(Clone, Copy, Debug)]
+pub struct OperatingPoint {
+    pub bx_tilde: u32,
+    pub r: f64,
+    /// Validation accuracy at this point.
+    pub val_acc: f64,
+    /// Power per element implied by Eq. (13) with the *requested* R.
+    pub power_per_element: f64,
+}
+
+/// Algorithm 1: for each candidate `b̃_x`, set `R = P/b̃_x − 0.5`
+/// (Eq. 13), quantize, run on the validation set, keep the best.
+///
+/// `power_budget` is in flips per MAC/element (e.g.
+/// [`crate::power::model::mac_power_unsigned_total`] of the reference
+/// bit width).
+pub fn choose_operating_point(
+    model: &Model,
+    power_budget: f64,
+    act_method: ActQuantMethod,
+    calib: Option<&Tensor>,
+    val: &Dataset,
+    bx_range: std::ops::RangeInclusive<u32>,
+) -> Result<OperatingPoint> {
+    let mut best: Option<OperatingPoint> = None;
+    for bx in bx_range {
+        let r = power_budget / bx as f64 - 0.5;
+        if r <= 0.05 {
+            continue; // budget can't afford this activation width
+        }
+        let cfg = QuantConfig::pann(bx, r, act_method);
+        let qm = QuantizedModel::prepare(model, cfg, calib)?;
+        let res = eval_quantized(&qm, val)?;
+        let cand = OperatingPoint {
+            bx_tilde: bx,
+            r,
+            val_acc: res.accuracy(),
+            power_per_element: crate::power::model::pann_power_per_element(r, bx),
+        };
+        if best.map_or(true, |b| cand.val_acc > b.val_acc) {
+            best = Some(cand);
+        }
+    }
+    best.ok_or_else(|| anyhow::anyhow!("power budget {power_budget} too small for any bit width"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn picks_a_point_within_budget() {
+        let mut model = Model::reference_cnn(3);
+        let ds = crate::data::Dataset::from_synth(synth::digits(40, 4));
+        let calib = crate::pann::convert::calib_tensor(&ds, 16);
+        model.record_act_stats(&calib).unwrap();
+        let p = crate::power::model::mac_power_unsigned_total(4); // 24 flips
+        let op =
+            choose_operating_point(&model, p, ActQuantMethod::Aciq, Some(&calib), &ds, 2..=8)
+                .unwrap();
+        assert!((2..=8).contains(&op.bx_tilde));
+        assert!(op.r > 0.0);
+        // Eq. 13 consistency: requested point sits on the budget curve.
+        assert!((op.power_per_element - p).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tiny_budget_errors() {
+        let model = Model::reference_cnn(5);
+        let ds = crate::data::Dataset::from_synth(synth::digits(8, 6));
+        let res = choose_operating_point(&model, 0.5, ActQuantMethod::Dynamic, None, &ds, 2..=8);
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn larger_budget_never_much_worse() {
+        let mut model = Model::reference_cnn(7);
+        let ds = crate::data::Dataset::from_synth(synth::digits(48, 8));
+        let calib = crate::pann::convert::calib_tensor(&ds, 16);
+        model.record_act_stats(&calib).unwrap();
+        let lo = choose_operating_point(&model, 10.0, ActQuantMethod::Aciq, Some(&calib), &ds, 2..=8)
+            .unwrap();
+        let hi = choose_operating_point(&model, 64.0, ActQuantMethod::Aciq, Some(&calib), &ds, 2..=8)
+            .unwrap();
+        assert!(hi.val_acc + 0.1 >= lo.val_acc, "hi {} lo {}", hi.val_acc, lo.val_acc);
+    }
+}

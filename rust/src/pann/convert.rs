@@ -1,0 +1,113 @@
+//! Model conversion helpers: baselines, unsigned switch, PANN.
+
+use crate::data::Dataset;
+use crate::nn::eval::{batch_tensor, eval_quantized, EvalResult};
+use crate::nn::quantized::{Arithmetic, QuantConfig, QuantizedModel};
+use crate::nn::{Model, Tensor};
+use crate::quant::ActQuantMethod;
+use anyhow::Result;
+
+/// Calibration tensor from the first `n` samples of a dataset.
+pub fn calib_tensor(ds: &Dataset, n: usize) -> Tensor {
+    batch_tensor(ds, 0, n.min(ds.len()))
+}
+
+/// Prepare + evaluate a conventional quantized baseline (signed MACs,
+/// equal weight/activation bits — the paper's "Base." columns).
+pub fn ptq_baseline(
+    model: &Model,
+    bits: u32,
+    method: ActQuantMethod,
+    arithmetic: Arithmetic,
+    calib: Option<&Tensor>,
+    test: &Dataset,
+) -> Result<(QuantizedModel, EvalResult)> {
+    let mut cfg = QuantConfig::signed_baseline(bits, method);
+    cfg.arithmetic = arithmetic;
+    if method == ActQuantMethod::Recon {
+        cfg.weight_quant = crate::nn::quantized::WeightQuantMethod::RuqRecon;
+    }
+    let qm = QuantizedModel::prepare(model, cfg, calib)?;
+    let res = eval_quantized(&qm, test)?;
+    Ok((qm, res))
+}
+
+/// The Sec.-4 conversion: same bits, unsigned W⁺/W⁻ arithmetic. The
+/// function (and thus accuracy) is identical to the signed baseline;
+/// only the power changes.
+pub fn unsigned_of(
+    model: &Model,
+    bits: u32,
+    method: ActQuantMethod,
+    calib: Option<&Tensor>,
+    test: &Dataset,
+) -> Result<(QuantizedModel, EvalResult)> {
+    ptq_baseline(model, bits, method, Arithmetic::UnsignedMac, calib, test)
+}
+
+/// PANN at an explicit `(b̃_x, R)` operating point.
+pub fn pann_at_budget(
+    model: &Model,
+    bx_tilde: u32,
+    r: f64,
+    method: ActQuantMethod,
+    calib: Option<&Tensor>,
+    test: &Dataset,
+) -> Result<(QuantizedModel, EvalResult)> {
+    let cfg = QuantConfig::pann(bx_tilde, r, method);
+    let qm = QuantizedModel::prepare(model, cfg, calib)?;
+    let res = eval_quantized(&qm, test)?;
+    Ok((qm, res))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    fn setup() -> (Model, Dataset, Tensor) {
+        let mut model = Model::reference_cnn(1);
+        let ds = Dataset::from_synth(synth::digits(48, 2));
+        let calib = calib_tensor(&ds, 16);
+        model.record_act_stats(&calib).unwrap();
+        (model, ds, calib)
+    }
+
+    #[test]
+    fn unsigned_preserves_accuracy_cuts_power() {
+        let (model, ds, calib) = setup();
+        let (_, signed) = ptq_baseline(
+            &model,
+            4,
+            ActQuantMethod::Aciq,
+            Arithmetic::SignedMac { acc_bits: 32 },
+            Some(&calib),
+            &ds,
+        )
+        .unwrap();
+        let (_, unsigned) = unsigned_of(&model, 4, ActQuantMethod::Aciq, Some(&calib), &ds).unwrap();
+        assert_eq!(signed.correct, unsigned.correct, "Sec. 4: function preserved");
+        // 33% power cut at 4 bits with B = 32 (paper App. A.3.1)
+        let save = 1.0 - unsigned.giga_flips / signed.giga_flips;
+        assert!((save - 0.333).abs() < 0.01, "save {save}");
+    }
+
+    #[test]
+    fn pann_cheaper_than_baseline_at_same_bits() {
+        let (model, ds, calib) = setup();
+        let (_, base) = unsigned_of(&model, 2, ActQuantMethod::Aciq, Some(&calib), &ds).unwrap();
+        // PANN tuned to the 2-bit budget: P = 10 flips/MAC, b̃x=6, R≈1.17
+        let (_, pann) =
+            pann_at_budget(&model, 6, 10.0 / 6.0 - 0.5, ActQuantMethod::Aciq, Some(&calib), &ds)
+                .unwrap();
+        let ratio = pann.giga_flips / base.giga_flips;
+        assert!(ratio < 1.05, "PANN power ratio {ratio}");
+        // and at the 2-bit budget PANN must classify better
+        assert!(
+            pann.accuracy() >= base.accuracy(),
+            "pann {} vs base {}",
+            pann.accuracy(),
+            base.accuracy()
+        );
+    }
+}

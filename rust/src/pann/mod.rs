@@ -1,0 +1,18 @@
+//! The paper's headline pipeline:
+//!
+//! 1. **Switch to unsigned arithmetic** (Sec. 4) — exact function-
+//!    preserving conversion, large accumulator-power cut.
+//! 2. **Remove the multiplier** (Sec. 5) — PANN weight quantization at
+//!    an additions budget `R`.
+//! 3. **Pick the operating point** (Algorithm 1) — for a power budget
+//!    `P`, sweep `b̃_x`, set `R = P/b̃_x − 0.5`, validate, keep the best.
+//! 4. **Traverse the trade-off at deployment** (Sec. 6, Tables 14–15)
+//!    — latency / memory / accuracy of every point on a budget curve.
+
+pub mod algorithm1;
+pub mod convert;
+pub mod tradeoff;
+
+pub use algorithm1::{choose_operating_point, OperatingPoint};
+pub use convert::{pann_at_budget, ptq_baseline, unsigned_of};
+pub use tradeoff::{budget_curve_table, TradeoffRow};

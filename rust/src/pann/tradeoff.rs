@@ -1,0 +1,87 @@
+//! The deployment-time trade-off tables (paper Tables 14–15): every
+//! `(b̃_x, R)` point on one power-budget curve with its latency,
+//! storage and accuracy implications.
+
+use crate::data::Dataset;
+use crate::nn::eval::eval_quantized;
+use crate::nn::quantized::{QuantConfig, QuantizedModel};
+use crate::nn::{Model, Tensor};
+use crate::quant::ActQuantMethod;
+use anyhow::Result;
+
+/// One row of Table 15 (or, with the Alg.-1 winner only, Table 14).
+#[derive(Clone, Copy, Debug)]
+pub struct TradeoffRow {
+    pub bx_tilde: u32,
+    /// Additions per element = latency factor (paper Sec. 6).
+    pub r: f64,
+    /// Bits needed to store a weight code (`b_R`).
+    pub b_r: u32,
+    /// Activation memory factor vs the `b_x`-bit baseline.
+    pub act_mem_factor: f64,
+    /// Weight memory factor vs the baseline (`b_R / b_x`).
+    pub weight_mem_factor: f64,
+    /// Test accuracy at this point.
+    pub accuracy: f64,
+}
+
+/// All operating points on the equal-power curve of a `bx_ref`-bit
+/// unsigned MAC (Fig. 3 curve → Table 15 rows).
+pub fn budget_curve_table(
+    model: &Model,
+    bx_ref: u32,
+    act_method: ActQuantMethod,
+    calib: Option<&Tensor>,
+    test: &Dataset,
+    bx_range: std::ops::RangeInclusive<u32>,
+) -> Result<Vec<TradeoffRow>> {
+    let p = crate::power::model::mac_power_unsigned_total(bx_ref);
+    let mut rows = Vec::new();
+    for bx in bx_range {
+        let r = p / bx as f64 - 0.5;
+        if r <= 0.05 {
+            continue;
+        }
+        let cfg = QuantConfig::pann(bx, r, act_method);
+        let qm = QuantizedModel::prepare(model, cfg, calib)?;
+        let res = eval_quantized(&qm, test)?;
+        rows.push(TradeoffRow {
+            bx_tilde: bx,
+            r,
+            b_r: qm.weight_code_bits(),
+            act_mem_factor: bx as f64 / bx_ref as f64,
+            weight_mem_factor: qm.weight_code_bits() as f64 / bx_ref as f64,
+            accuracy: res.accuracy(),
+        });
+    }
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn curve_rows_consistent() {
+        let mut model = Model::reference_cnn(9);
+        let ds = crate::data::Dataset::from_synth(synth::digits(32, 10));
+        let calib = crate::pann::convert::calib_tensor(&ds, 16);
+        model.record_act_stats(&calib).unwrap();
+        let rows = budget_curve_table(&model, 2, ActQuantMethod::Aciq, Some(&calib), &ds, 2..=8)
+            .unwrap();
+        assert!(rows.len() >= 5);
+        // R decreases as b̃x grows along one curve (Table 15 latency col)
+        for w in rows.windows(2) {
+            assert!(w[1].r < w[0].r);
+        }
+        // Table 15: on the 2-bit curve, b̃x=6 has R ≈ 1.16, b̃x=8 R = 0.75
+        let r6 = rows.iter().find(|r| r.bx_tilde == 6).unwrap();
+        assert!((r6.r - (10.0 / 6.0 - 0.5)).abs() < 1e-9);
+        let r8 = rows.iter().find(|r| r.bx_tilde == 8).unwrap();
+        assert!((r8.r - 0.75).abs() < 1e-9);
+        // memory factors follow their definitions
+        assert!((r6.act_mem_factor - 3.0).abs() < 1e-9);
+        assert!(r6.b_r >= 1);
+    }
+}

@@ -1,0 +1,62 @@
+//! Accumulator sizing (paper Eq. (20), Table 6).
+//!
+//! `B = b_x + b_w + 1 + log2(k²·C_in)` — the width that provably never
+//! overflows a `k×k` convolution with `C_in` input channels. The table
+//! also reports the relative power saved by switching to unsigned
+//! arithmetic at each accumulator width.
+
+use super::model::{mac_power_signed, mac_power_unsigned};
+
+/// Eq. (20): required accumulator bit width for a `k×k` convolution
+/// with `c_in` input channels and operand widths `b_x`, `b_w`.
+pub fn required_acc_width(b_x: u32, b_w: u32, k: u32, c_in: u32) -> u32 {
+    let terms = (k * k * c_in) as f64;
+    b_x + b_w + 1 + terms.log2().ceil() as u32
+}
+
+/// Fractional power saved by switching a `b`-bit MAC from signed to
+/// unsigned arithmetic at accumulator width `acc_bits` (Table 6 rows).
+pub fn power_save_unsigned(b: u32, acc_bits: u32) -> f64 {
+    let s = mac_power_signed(b, acc_bits).total();
+    let u = mac_power_unsigned(b).total();
+    1.0 - u / s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table6_required_widths() {
+        // Largest ResNet layer: 3x3x512 -> k²C_in = 4608, log2≈12.17→13.
+        // Paper Table 6: 2-bit -> 17, 3-bit -> 19, 4-bit -> 21, 6-bit -> 25.
+        assert_eq!(required_acc_width(2, 2, 3, 512), 18); // paper rounds log2 down: 17
+        // The paper's row values use floor(log2)=12; we expose ceil for
+        // a safe bound. Check the floor-consistent values explicitly:
+        let floor_b = |bx: u32, bw: u32| bx + bw + 1 + (4608f64).log2().floor() as u32;
+        assert_eq!(floor_b(2, 2), 17);
+        assert_eq!(floor_b(3, 3), 19);
+        assert_eq!(floor_b(4, 4), 21);
+        assert_eq!(floor_b(5, 5), 23);
+        assert_eq!(floor_b(6, 6), 25);
+    }
+
+    #[test]
+    fn table6_power_saves() {
+        // Table 6, last rows: power save for B-bit and 32-bit acc.
+        // 2-bit @ B=17: 39%;  @32: 58%. 4-bit @ B=21: 21%; @32: 33%.
+        assert!((power_save_unsigned(2, 17) - 0.39).abs() < 0.015);
+        assert!((power_save_unsigned(2, 32) - 0.58).abs() < 0.015);
+        assert!((power_save_unsigned(4, 21) - 0.21).abs() < 0.015);
+        assert!((power_save_unsigned(4, 32) - 0.33).abs() < 0.015);
+        assert!((power_save_unsigned(6, 25) - 0.13).abs() < 0.015);
+        assert!((power_save_unsigned(6, 32) - 0.19).abs() < 0.015);
+    }
+
+    #[test]
+    fn monotone_in_acc_width() {
+        for b in 2..=8 {
+            assert!(power_save_unsigned(b, 32) > power_save_unsigned(b, 16));
+        }
+    }
+}

@@ -1,0 +1,99 @@
+//! Power budgets and equal-power curves (paper Fig. 3, Sec. 5.2) and
+//! network-level Giga-bit-flip accounting (Tables 2, 7–9).
+
+use super::model::{mac_power_unsigned_total, pann_power_per_element};
+
+/// One equal-power curve of Fig. 3: the set of `(b̃_x, R)` pairs whose
+/// PANN power equals that of a `b_x`-bit unsigned MAC.
+#[derive(Clone, Debug)]
+pub struct EqualPowerCurve {
+    /// The reference MAC bit width whose power defines the curve.
+    pub bx_ref: u32,
+    /// The power level (flips per MAC / per element).
+    pub power: f64,
+    /// `(b̃_x, R)` samples along the curve for b̃_x = 1..=16.
+    pub points: Vec<(u32, f64)>,
+}
+
+/// Number of additions `R` that puts PANN at power `p` with activation
+/// width `b̃_x` (inverting Eq. (13)); `None` if even `R = 0` overshoots.
+pub fn equal_power_r(p: f64, bx_tilde: u32) -> Option<f64> {
+    let r = p / bx_tilde as f64 - 0.5;
+    (r >= 0.0).then_some(r)
+}
+
+impl EqualPowerCurve {
+    /// Build the curve matching a `b_x`-bit unsigned MAC.
+    pub fn for_unsigned_mac(bx_ref: u32) -> Self {
+        let power = mac_power_unsigned_total(bx_ref);
+        let points = (1..=16)
+            .filter_map(|bt| equal_power_r(power, bt).map(|r| (bt, r)))
+            .collect();
+        EqualPowerCurve { bx_ref, power, points }
+    }
+
+    /// `R` on this curve at a given activation width.
+    pub fn r_at(&self, bx_tilde: u32) -> Option<f64> {
+        equal_power_r(self.power, bx_tilde)
+    }
+}
+
+/// Network-level power in Giga bit flips: per-MAC (or per-element)
+/// power times the number of MACs (paper Table 2 caption).
+pub fn network_power_giga(per_mac_flips: f64, num_macs: u64) -> f64 {
+    per_mac_flips * num_macs as f64 / 1e9
+}
+
+/// PANN network power in Giga bit flips at `R` additions/element.
+pub fn pann_network_power_giga(r: f64, bx_tilde: u32, num_macs: u64) -> f64 {
+    network_power_giga(pann_power_per_element(r, bx_tilde), num_macs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn curve_power_levels_match_fig3() {
+        // P_MAC^u = 0.5 bx^2 + 4 bx
+        assert_eq!(EqualPowerCurve::for_unsigned_mac(2).power, 10.0);
+        assert_eq!(EqualPowerCurve::for_unsigned_mac(4).power, 24.0);
+        assert_eq!(EqualPowerCurve::for_unsigned_mac(8).power, 64.0);
+    }
+
+    #[test]
+    fn r_tradeoff_monotone() {
+        // Along one curve, increasing b̃_x must decrease R.
+        let c = EqualPowerCurve::for_unsigned_mac(4);
+        for w in c.points.windows(2) {
+            assert!(w[1].1 < w[0].1, "{:?}", c.points);
+        }
+    }
+
+    #[test]
+    fn equal_power_consistency() {
+        // Any point on the curve reproduces the curve's power by Eq 13.
+        let c = EqualPowerCurve::for_unsigned_mac(6);
+        for &(bt, r) in &c.points {
+            let p = pann_power_per_element(r, bt);
+            assert!((p - c.power).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn table15_latency_row() {
+        // Table 15: on the 2-bit curve (P=10), b̃_x = 6 gives R ≈ 1.16,
+        // b̃_x = 8 gives R = 0.75, b̃_x = 2 gives R = 4.5.
+        assert!((equal_power_r(10.0, 6).unwrap() - 1.1667).abs() < 1e-3);
+        assert!((equal_power_r(10.0, 8).unwrap() - 0.75).abs() < 1e-9);
+        assert!((equal_power_r(10.0, 2).unwrap() - 4.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn giga_accounting_resnet50_row() {
+        // Table 2: 8-bit row is 265 Gflips for ResNet-50's 4.14e9 MACs
+        // at P_MAC^u(8) = 64 -> 4.14e9*64/1e9 ≈ 265.
+        let p = network_power_giga(64.0, 4_140_000_000);
+        assert!((p - 264.96).abs() < 0.5, "{p}");
+    }
+}

@@ -1,0 +1,19 @@
+//! Analytic power models of the paper (Secs. 3–5), in units of average
+//! bit flips per instruction.
+//!
+//! These are the closed forms the paper derives from its toggle
+//! simulations and then uses for *all* of its network-level accounting
+//! (Tables 2, 7–9 report `(P_mult^u + P_acc^u) × #MACs`). The sibling
+//! [`crate::bitflip`] simulators validate the shapes; this module is
+//! what every downstream experiment consumes.
+
+pub mod accumulator;
+pub mod budget;
+pub mod model;
+
+pub use accumulator::{power_save_unsigned, required_acc_width};
+pub use budget::{equal_power_r, network_power_giga, EqualPowerCurve};
+pub use model::{
+    mac_power_signed, mac_power_unsigned, mult_power_mixed_signed, pann_power_per_element,
+    PowerBreakdown,
+};

@@ -1,0 +1,122 @@
+//! The paper's per-instruction power formulas.
+//!
+//! | Eq. | Quantity | Formula |
+//! |-----|----------|---------|
+//! | (1) | signed multiplier      | `P_mult = 0.5b² + b` |
+//! | (2) | signed accumulator     | `P_acc = 0.5B + 2b` |
+//! | (3) | unsigned multiplier    | `P_mult^u = 0.5b² + b` |
+//! | (4) | unsigned accumulator   | `P_acc^u = 3b` |
+//! | (7) | mixed-width multiplier | `0.5·max(b_w,b_x)² + 0.5(b_w+b_x)` |
+//! | (13)| PANN per element       | `(R + 0.5)·b̃_x` |
+
+/// Per-MAC power split into multiplier and accumulator parts.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PowerBreakdown {
+    /// Multiplier flips per instruction (0 for PANN).
+    pub mult: f64,
+    /// Accumulator flips per instruction.
+    pub acc: f64,
+}
+
+impl PowerBreakdown {
+    pub fn total(&self) -> f64 {
+        self.mult + self.acc
+    }
+}
+
+/// Eq. (1)+(2): signed `b×b` MAC with a `B`-bit accumulator.
+pub fn mac_power_signed(b: u32, acc_bits: u32) -> PowerBreakdown {
+    let b = b as f64;
+    let bb = acc_bits as f64;
+    PowerBreakdown {
+        mult: 0.5 * b * b + b,
+        acc: 0.5 * bb + 2.0 * b,
+    }
+}
+
+/// Eq. (3)+(4): unsigned `b×b` MAC. The accumulator input only sees
+/// the live `b_acc = 2b` product bits, so `P_acc^u = 3b` independent of
+/// the physical accumulator width.
+pub fn mac_power_unsigned(b: u32) -> PowerBreakdown {
+    let b = b as f64;
+    PowerBreakdown {
+        mult: 0.5 * b * b + b,
+        acc: 3.0 * b,
+    }
+}
+
+/// Eq. (7): signed multiplier with different operand widths. The
+/// internal activity is governed by the larger width (Observation 2).
+pub fn mult_power_mixed_signed(b_w: u32, b_x: u32) -> f64 {
+    let m = b_w.max(b_x) as f64;
+    0.5 * m * m + 0.5 * (b_w + b_x) as f64
+}
+
+/// Eq. (13): PANN power per input element at `R` additions per element
+/// and activation width `b̃_x`: `(R + 0.5)·b̃_x` — `R·b̃_x` for the
+/// burst's sum+FF toggling and `0.5·b̃_x` for the single input-bus load.
+pub fn pann_power_per_element(r: f64, bx_tilde: u32) -> f64 {
+    assert!(r >= 0.0);
+    (r + 0.5) * bx_tilde as f64
+}
+
+/// Unsigned MAC total used for the equal-power curves of Fig. 3:
+/// `P_MAC^u = 0.5·b_x² + 4·b_x` (Eqs. (3)+(4) with b = b_x).
+pub fn mac_power_unsigned_total(b_x: u32) -> f64 {
+    mac_power_unsigned(b_x).total()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn signed_example_from_paper() {
+        // Sec. 3: b=4, B=32 -> P_mult + P_acc = 36, of which the
+        // accumulator input (0.5B = 16) is 44.4%.
+        let p = mac_power_signed(4, 32);
+        assert_eq!(p.total(), 36.0);
+        assert!((16.0 / p.total() - 0.444).abs() < 1e-3);
+    }
+
+    #[test]
+    fn unsigned_cuts_accumulator() {
+        // App. A.3.1: at b=4, B=32 the unsigned MAC is ~33% cheaper.
+        let s = mac_power_signed(4, 32).total();
+        let u = mac_power_unsigned(4).total();
+        assert!((1.0 - u / s - 0.333).abs() < 0.01, "save {}", 1.0 - u / s);
+    }
+
+    #[test]
+    fn fig1_claim_58_percent_at_2bit() {
+        // Fig. 1 / Fig. 15: 2-bit networks, 32-bit accumulator ->
+        // switching to unsigned cuts 58%.
+        let s = mac_power_signed(2, 32).total();
+        let u = mac_power_unsigned(2).total();
+        let save = 1.0 - u / s;
+        assert!((save - 0.58).abs() < 0.01, "save {save}");
+    }
+
+    #[test]
+    fn mixed_width_max_dominates() {
+        assert_eq!(mult_power_mixed_signed(2, 8), 0.5 * 64.0 + 5.0);
+        assert_eq!(mult_power_mixed_signed(8, 8), 0.5 * 64.0 + 8.0);
+        // shrinking only b_w from 8 to 2 saves just 3 of 40 flips
+        let full = mult_power_mixed_signed(8, 8);
+        let small = mult_power_mixed_signed(2, 8);
+        assert!(small / full > 0.9);
+    }
+
+    #[test]
+    fn pann_eq13() {
+        assert_eq!(pann_power_per_element(2.0, 4), 10.0);
+        assert_eq!(pann_power_per_element(0.5, 8), 8.0);
+    }
+
+    #[test]
+    fn unsigned_total_curve() {
+        assert_eq!(mac_power_unsigned_total(2), 10.0);
+        assert_eq!(mac_power_unsigned_total(4), 24.0);
+        assert_eq!(mac_power_unsigned_total(8), 64.0);
+    }
+}

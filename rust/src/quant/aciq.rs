@@ -1,0 +1,147 @@
+//! ACIQ — Analytic Clipping for Integer Quantization
+//! (Banner, Nahshan & Soudry, 2019). The paper uses ACIQ as its
+//! small-calibration-set PTQ baseline and as the activation quantizer
+//! inside PANN for several experiments (Tables 2, 15; Fig. 16).
+//!
+//! ACIQ picks a clipping value `α` that minimizes the expected MSE
+//! `E[(x - clip_quant(x))²]` assuming the data is Gaussian or Laplace;
+//! the optimum trades clipping distortion (tails) against quantization
+//! noise (α²/(3·4^b) for a 2α range).
+
+use super::ruq::{fit_unsigned_clipped, QParams};
+
+/// Optimal clip multipliers α*/σ for zero-mean *Gaussian* data at
+/// bit widths 2..=8 (numerically derived; Banner et al. Table 1 region).
+const GAUSS_ALPHA: [f64; 7] = [1.71, 2.15, 2.55, 2.93, 3.28, 3.61, 3.92];
+
+/// Optimal clip multipliers α*/b for zero-mean *Laplace(b)* data.
+const LAPLACE_ALPHA: [f64; 7] = [2.83, 3.89, 5.03, 6.20, 7.41, 8.64, 9.89];
+
+/// Assumed distribution family for the analytic clip.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Family {
+    Gauss,
+    Laplace,
+}
+
+/// Analytic optimal clipping value for `bits`-bit quantization of data
+/// with the given scale parameter (σ for Gauss, b for Laplace).
+pub fn optimal_clip(family: Family, scale_param: f64, bits: u32) -> f64 {
+    let idx = (bits.clamp(2, 8) - 2) as usize;
+    match family {
+        Family::Gauss => GAUSS_ALPHA[idx] * scale_param,
+        Family::Laplace => LAPLACE_ALPHA[idx] * scale_param,
+    }
+}
+
+/// Fit an unsigned ACIQ quantizer for ReLU activations from calibration
+/// samples: estimates σ on the *pre-clip* data and clips at α*(σ).
+///
+/// ReLU activations are half-Gaussian; we estimate the underlying σ via
+/// the second moment (E[x²] of a half-Gaussian equals σ²).
+pub fn fit_relu_activations(xs: &[f32], bits: u32) -> QParams {
+    assert!(!xs.is_empty());
+    let m2 = xs.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>() / xs.len() as f64;
+    let sigma = m2.sqrt().max(1e-12);
+    let clip = optimal_clip(Family::Gauss, sigma, bits);
+    let mx = xs.iter().fold(0.0f32, |m, &x| m.max(x)) as f64;
+    fit_unsigned_clipped(clip.min(mx.max(1e-12)) as f32, bits)
+}
+
+/// Fit a signed ACIQ quantizer for weights (zero-mean, Gaussian-ish).
+pub fn fit_weights(ws: &[f32], bits: u32) -> QParams {
+    assert!(!ws.is_empty());
+    let m = ws.iter().map(|&w| w as f64).sum::<f64>() / ws.len() as f64;
+    let var = ws.iter().map(|&w| (w as f64 - m).powi(2)).sum::<f64>() / ws.len() as f64;
+    let sigma = var.sqrt().max(1e-12);
+    let clip = optimal_clip(Family::Gauss, sigma, bits);
+    let hi = ((1i64 << (bits - 1)) - 1) as f32;
+    QParams::signed((clip as f32 / hi).max(f32::MIN_POSITIVE), bits)
+}
+
+/// Numerically search the clip that minimizes empirical quantization
+/// MSE on the given samples (used as a general fallback and to test
+/// the analytic values).
+pub fn empirical_optimal_clip(xs: &[f32], bits: u32, unsigned: bool) -> f32 {
+    let mx = xs.iter().fold(0.0f32, |m, &x| m.max(x.abs())).max(1e-12);
+    let mut best = (f64::INFINITY, mx);
+    let steps = 60;
+    for i in 1..=steps {
+        let clip = mx * i as f32 / steps as f32;
+        let q = if unsigned {
+            fit_unsigned_clipped(clip, bits)
+        } else {
+            let hi = ((1i64 << (bits - 1)) - 1) as f32;
+            QParams::signed(clip / hi, bits)
+        };
+        let mse = q.mse(xs);
+        if mse < best.0 {
+            best = (mse, clip);
+        }
+    }
+    best.1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn clip_grows_with_bits() {
+        for fam in [Family::Gauss, Family::Laplace] {
+            let mut last = 0.0;
+            for bits in 2..=8 {
+                let c = optimal_clip(fam, 1.0, bits);
+                assert!(c > last);
+                last = c;
+            }
+        }
+    }
+
+    #[test]
+    fn analytic_clip_near_empirical_gauss() {
+        // The tabulated Gaussian α* should be close to the empirical
+        // MSE-optimal clip on large Gaussian samples.
+        let mut r = Rng::new(5);
+        let xs: Vec<f32> = (0..100_000).map(|_| r.normal() as f32).collect();
+        for bits in [3u32, 4, 6] {
+            let emp = empirical_optimal_clip(&xs, bits, false) as f64;
+            let ana = optimal_clip(Family::Gauss, 1.0, bits);
+            assert!(
+                (emp - ana).abs() / ana < 0.25,
+                "bits {bits}: empirical {emp} vs analytic {ana}"
+            );
+        }
+    }
+
+    #[test]
+    fn aciq_beats_minmax_on_gaussian_low_bits() {
+        // The whole point of clipping: at low bit widths ACIQ's MSE is
+        // smaller than plain min/max RUQ on heavy-ish tailed data.
+        let mut r = Rng::new(6);
+        let xs: Vec<f32> = (0..50_000).map(|_| r.normal() as f32).collect();
+        for bits in [2u32, 3, 4] {
+            let aciq = fit_weights(&xs, bits);
+            let ruq = super::super::ruq::fit_signed(&xs, bits);
+            assert!(
+                aciq.mse(&xs) < ruq.mse(&xs),
+                "bits {bits}: {} !< {}",
+                aciq.mse(&xs),
+                ruq.mse(&xs)
+            );
+        }
+    }
+
+    #[test]
+    fn relu_activation_fit() {
+        let mut r = Rng::new(7);
+        let xs: Vec<f32> = (0..50_000).map(|_| (r.normal() as f32).max(0.0) * 3.0).collect();
+        let q = fit_relu_activations(&xs, 4);
+        assert!(q.qmin == 0);
+        assert!(q.scale > 0.0);
+        // quantizing in-range data must be lossy but sane
+        let mse = q.mse(&xs);
+        assert!(mse > 0.0 && mse < 1.0, "mse {mse}");
+    }
+}

@@ -1,0 +1,92 @@
+//! Data-free range estimation from batch-norm statistics — the
+//! distilled-data core of ZeroQ (Cai et al., 2020), our stand-in for
+//! the paper's ZeroQ baseline (see DESIGN.md).
+//!
+//! A layer that follows `BN(μ, σ²) → ReLU` produces activations whose
+//! distribution is known without any data: a rectified Gaussian with
+//! per-channel mean `μ_c` and std `σ_c`. We derive the activation
+//! clipping range directly from the stored statistics, then fit an
+//! unsigned RUQ to it.
+
+use super::ruq::{fit_unsigned_clipped, QParams};
+
+/// Batch-norm running statistics of one layer (per output channel).
+#[derive(Clone, Debug)]
+pub struct BnStats {
+    pub mean: Vec<f32>,
+    pub std: Vec<f32>,
+}
+
+impl BnStats {
+    pub fn new(mean: Vec<f32>, std: Vec<f32>) -> Self {
+        assert_eq!(mean.len(), std.len());
+        BnStats { mean, std }
+    }
+
+    /// The `α`-sigma clip of the post-ReLU activation range implied by
+    /// the statistics: `max_c (μ_c + α·σ_c)` clamped at 0.
+    pub fn relu_clip(&self, alpha: f32) -> f32 {
+        self.mean
+            .iter()
+            .zip(&self.std)
+            .map(|(&m, &s)| (m + alpha * s).max(0.0))
+            .fold(0.0f32, f32::max)
+            .max(1e-6)
+    }
+
+    /// Fit an unsigned quantizer for the post-ReLU activations of this
+    /// layer without seeing any data.
+    pub fn fit_activations(&self, bits: u32) -> QParams {
+        // α follows the ACIQ Gaussian table so BN-Stats and ACIQ use
+        // the same clipping philosophy, only the σ source differs
+        // (stored statistics vs calibration samples).
+        let alpha = super::aciq::optimal_clip(super::aciq::Family::Gauss, 1.0, bits) as f32;
+        fit_unsigned_clipped(self.relu_clip(alpha), bits)
+    }
+
+    /// Sample synthetic calibration activations from the statistics
+    /// (ZeroQ's distilled data, one gaussian per channel + ReLU).
+    pub fn sample_activations(&self, per_channel: usize, rng: &mut crate::util::Rng) -> Vec<f32> {
+        let mut out = Vec::with_capacity(per_channel * self.mean.len());
+        for (&m, &s) in self.mean.iter().zip(&self.std) {
+            for _ in 0..per_channel {
+                out.push((rng.normal_ms(m as f64, s as f64) as f32).max(0.0));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn clip_covers_most_mass() {
+        let bn = BnStats::new(vec![1.0, 0.5], vec![0.5, 0.2]);
+        let q = bn.fit_activations(4);
+        let mut r = Rng::new(1);
+        let xs = bn.sample_activations(20_000, &mut r);
+        let clipped = xs.iter().filter(|&&x| x > q.scale * q.qmax as f32).count();
+        let frac = clipped as f64 / xs.len() as f64;
+        assert!(frac < 0.02, "clipped fraction {frac}");
+    }
+
+    #[test]
+    fn range_estimate_close_to_empirical() {
+        let bn = BnStats::new(vec![2.0], vec![1.0]);
+        let mut r = Rng::new(2);
+        let xs = bn.sample_activations(50_000, &mut r);
+        let data_free = bn.fit_activations(6);
+        let with_data = super::super::ruq::fit_unsigned(&xs, 6);
+        let ratio = data_free.scale / with_data.scale;
+        assert!(ratio > 0.5 && ratio < 2.0, "scale ratio {ratio}");
+    }
+
+    #[test]
+    fn all_negative_means_still_positive_clip() {
+        let bn = BnStats::new(vec![-3.0], vec![0.1]);
+        assert!(bn.relu_clip(3.0) > 0.0);
+    }
+}

@@ -1,0 +1,169 @@
+//! Data-free quantization: cross-layer weight equalization and bias
+//! correction (Nagel et al., 2019) — our stand-in for the paper's
+//! generative data-free baseline (GDFQ), per DESIGN.md.
+//!
+//! **Equalization.** For consecutive layers `y = W₂·relu(W₁x + b₁)`,
+//! ReLU is positively homogeneous, so scaling output channel `c` of
+//! `W₁` by `1/s_c` and column `c` of `W₂` by `s_c` leaves the function
+//! unchanged. Choosing `s_c = sqrt(r₁_c / r₂_c)` equalizes the dynamic
+//! ranges, which shrinks the per-channel range spread that breaks
+//! low-bit per-tensor quantization.
+//!
+//! **Bias correction.** Quantizing `W → W + ε` shifts layer outputs by
+//! `E[ε·x] = ε·E[x]`; with BN statistics, `E[x]` per input channel is
+//! known data-free, so the shift can be folded out of the bias.
+
+/// Per-output-channel max-abs ranges of a weight matrix stored row
+/// major as `[out][in]`.
+pub fn channel_ranges(w: &[f32], out_ch: usize, in_ch: usize) -> Vec<f32> {
+    assert_eq!(w.len(), out_ch * in_ch);
+    (0..out_ch)
+        .map(|o| w[o * in_ch..(o + 1) * in_ch].iter().fold(0.0f32, |m, &x| m.max(x.abs())))
+        .collect()
+}
+
+/// Equalize a pair of layers in place. `w1` is `[mid][in]`, `b1` is
+/// `[mid]`, `w2` is `[out][mid]`. Returns the applied scales.
+pub fn equalize_pair(
+    w1: &mut [f32],
+    b1: &mut [f32],
+    w2: &mut [f32],
+    in_ch: usize,
+    mid_ch: usize,
+    out_ch: usize,
+) -> Vec<f32> {
+    assert_eq!(w1.len(), mid_ch * in_ch);
+    assert_eq!(b1.len(), mid_ch);
+    assert_eq!(w2.len(), out_ch * mid_ch);
+    let r1 = channel_ranges(w1, mid_ch, in_ch);
+    // ranges of w2 *columns* (input channel c of layer 2)
+    let r2: Vec<f32> = (0..mid_ch)
+        .map(|c| (0..out_ch).fold(0.0f32, |m, o| m.max(w2[o * mid_ch + c].abs())))
+        .collect();
+    let scales: Vec<f32> = r1
+        .iter()
+        .zip(&r2)
+        .map(|(&a, &b)| {
+            if a <= 1e-12 || b <= 1e-12 {
+                1.0
+            } else {
+                (a / b).sqrt().clamp(1e-4, 1e4)
+            }
+        })
+        .collect();
+    for c in 0..mid_ch {
+        let s = scales[c];
+        for i in 0..in_ch {
+            w1[c * in_ch + i] /= s;
+        }
+        b1[c] /= s;
+        for o in 0..out_ch {
+            w2[o * mid_ch + c] *= s;
+        }
+    }
+    scales
+}
+
+/// Bias correction: subtract the expected output shift caused by the
+/// weight quantization error. `w_err = W_q − W` is `[out][in]`,
+/// `mean_in` the per-input-channel expected activation.
+pub fn bias_correction(w_err: &[f32], mean_in: &[f32], out_ch: usize, in_ch: usize) -> Vec<f32> {
+    assert_eq!(w_err.len(), out_ch * in_ch);
+    assert_eq!(mean_in.len(), in_ch);
+    (0..out_ch)
+        .map(|o| {
+            (0..in_ch)
+                .map(|i| w_err[o * in_ch + i] * mean_in[i])
+                .sum::<f32>()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Reference two-layer fp32 forward.
+    fn fwd(w1: &[f32], b1: &[f32], w2: &[f32], x: &[f32], inc: usize, mid: usize, out: usize) -> Vec<f32> {
+        let mut h = vec![0.0f32; mid];
+        for c in 0..mid {
+            let mut s = b1[c];
+            for i in 0..inc {
+                s += w1[c * inc + i] * x[i];
+            }
+            h[c] = s.max(0.0);
+        }
+        let mut y = vec![0.0f32; out];
+        for o in 0..out {
+            for c in 0..mid {
+                y[o] += w2[o * mid + c] * h[c];
+            }
+        }
+        y
+    }
+
+    #[test]
+    fn equalization_preserves_function() {
+        let (inc, mid, out) = (6, 8, 4);
+        let mut r = Rng::new(9);
+        let mut w1: Vec<f32> = (0..mid * inc).map(|_| r.normal() as f32).collect();
+        // inject wildly imbalanced channels
+        for i in 0..inc {
+            w1[i] *= 50.0;
+        }
+        let mut b1: Vec<f32> = (0..mid).map(|_| r.normal() as f32).collect();
+        let mut w2: Vec<f32> = (0..out * mid).map(|_| r.normal() as f32).collect();
+        let x: Vec<f32> = (0..inc).map(|_| r.normal() as f32).collect();
+        let before = fwd(&w1, &b1, &w2, &x, inc, mid, out);
+        equalize_pair(&mut w1, &mut b1, &mut w2, inc, mid, out);
+        let after = fwd(&w1, &b1, &w2, &x, inc, mid, out);
+        for (a, b) in before.iter().zip(&after) {
+            assert!((a - b).abs() < 1e-3 * (1.0 + a.abs()), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn equalization_shrinks_range_spread() {
+        let (inc, mid, out) = (4, 16, 4);
+        let mut r = Rng::new(10);
+        let mut w1: Vec<f32> = (0..mid * inc).map(|_| r.normal() as f32).collect();
+        for i in 0..inc {
+            w1[i] *= 100.0; // one huge channel
+        }
+        let mut b1 = vec![0.0f32; mid];
+        let mut w2: Vec<f32> = (0..out * mid).map(|_| r.normal() as f32).collect();
+        let spread = |w: &[f32]| {
+            let rr = channel_ranges(w, mid, inc);
+            let (mut lo, mut hi) = (f32::INFINITY, 0.0f32);
+            for v in rr {
+                lo = lo.min(v);
+                hi = hi.max(v);
+            }
+            hi / lo.max(1e-9)
+        };
+        let before = spread(&w1);
+        equalize_pair(&mut w1, &mut b1, &mut w2, inc, mid, out);
+        let after = spread(&w1);
+        assert!(after < before / 2.0, "spread {before} -> {after}");
+    }
+
+    #[test]
+    fn bias_correction_centers_error() {
+        let (out, inc) = (3, 5);
+        let mut r = Rng::new(11);
+        let w: Vec<f32> = (0..out * inc).map(|_| r.normal() as f32).collect();
+        let q = crate::quant::ruq::fit_signed(&w, 3);
+        let wq = q.fake_quantize(&w);
+        let err: Vec<f32> = wq.iter().zip(&w).map(|(a, b)| a - b).collect();
+        let mean_in: Vec<f32> = (0..inc).map(|_| r.f32() + 0.5).collect();
+        let corr = bias_correction(&err, &mean_in, out, inc);
+        // After subtracting corr from the quantized layer's output, the
+        // *expected* output equals the fp32 expectation exactly (the
+        // estimator is exact for deterministic mean_in).
+        for o in 0..out {
+            let shift: f32 = (0..inc).map(|i| err[o * inc + i] * mean_in[i]).sum();
+            assert!((corr[o] - shift).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,171 @@
+//! Quantization-error theory of Sec. 5.3 (Eqs. 14–19) and the Monte
+//! Carlo machinery behind Figs. 4 and 16.
+//!
+//! At a fixed power budget `P`, the RUQ and PANN mean squared errors of
+//! a length-`d` dot product are (uniform weights in `[-M_w/2, M_w/2]`,
+//! uniform ReLU activations in `[0, M_x]`):
+//!
+//! - Eq. (16): `MSE_RUQ  = d·M_x²·M_w²/144 · (2^{-2b_x} + 4·2^{-2b_w})`
+//! - Eq. (19): `MSE_PANN = d·M_x²·M_w²/144 · (2^{-2b̃_x} + b̃_x²/(2P − b̃_x)²)`
+
+use crate::power::model::mac_power_unsigned_total;
+use crate::util::Rng;
+
+/// Eq. (16) with `b_w = b_x = b` (the configuration the paper uses in
+/// Fig. 4, since the multiplier power is governed by the max anyway).
+pub fn mse_ruq(d: usize, m_x: f64, m_w: f64, b: u32) -> f64 {
+    let c = d as f64 * m_x * m_x * m_w * m_w / 144.0;
+    c * (2f64.powi(-2 * b as i32) + 4.0 * 2f64.powi(-2 * b as i32))
+}
+
+/// Eq. (18): PANN MSE at explicit `(b̃_x, R)`.
+pub fn mse_pann_r(d: usize, m_x: f64, m_w: f64, bx_tilde: u32, r: f64) -> f64 {
+    let c = d as f64 * m_x * m_x * m_w * m_w / 144.0;
+    c * (2f64.powi(-2 * bx_tilde as i32) + 1.0 / (4.0 * r * r))
+}
+
+/// Eq. (19): PANN MSE at power budget `P` (with `R = P/b̃_x − 0.5`).
+/// Returns `None` when the budget can't afford width `b̃_x`.
+pub fn mse_pann(d: usize, m_x: f64, m_w: f64, bx_tilde: u32, p: f64) -> Option<f64> {
+    let bt = bx_tilde as f64;
+    let denom = 2.0 * p - bt;
+    if denom <= 0.0 {
+        return None;
+    }
+    let c = d as f64 * m_x * m_x * m_w * m_w / 144.0;
+    Some(c * (2f64.powi(-2 * bx_tilde as i32) + bt * bt / (denom * denom)))
+}
+
+/// Optimal activation width for PANN at budget `P`: argmin of Eq. (19)
+/// over `b̃_x ∈ [2, 16]`.
+pub fn optimal_bx_tilde(d: usize, m_x: f64, m_w: f64, p: f64) -> (u32, f64) {
+    (2..=16)
+        .filter_map(|bt| mse_pann(d, m_x, m_w, bt, p).map(|e| (bt, e)))
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .expect("budget too small for any bit width")
+}
+
+/// The Fig. 4 ratio `MSE_RUQ / MSE_PANN` at the power of a `b`-bit
+/// unsigned MAC, with PANN's `b̃_x` chosen optimally.
+pub fn fig4_ratio_uniform(d: usize, b: u32) -> f64 {
+    let p = mac_power_unsigned_total(b);
+    let ruq = mse_ruq(d, 1.0, 1.0, b);
+    let (_, pann) = optimal_bx_tilde(d, 1.0, 1.0, p);
+    ruq / pann
+}
+
+/// Monte-Carlo estimate of the dot-product MSE for RUQ at `b` bits on
+/// the uniform model of Sec. 5.3. Used to validate Eq. (16).
+pub fn mc_mse_ruq(d: usize, b: u32, trials: usize, seed: u64) -> f64 {
+    let mut rng = Rng::new(seed);
+    let mut acc = 0.0;
+    // Ideal mid-rise uniform quantizers over the model's known ranges,
+    // exactly matching Eq. 15's assumptions: errors are U[-γ/2, γ/2]
+    // and unbiased *conditionally on the value* (a clipping quantizer
+    // would add a boundary bias whose cross terms grow as d², which the
+    // paper's derivation explicitly excludes via E[ε|w] = 0).
+    let gw = 1.0f64 / (1i64 << b) as f64; // M_w / 2^b, M_w = 1
+    let gx = 1.0f64 / (1i64 << b) as f64; // M_x / 2^b, M_x = 1
+    let midrise = |v: f64, g: f64| ((v / g).floor() + 0.5) * g;
+    for _ in 0..trials {
+        let w: Vec<f64> = (0..d).map(|_| rng.f64() - 0.5).collect();
+        let x: Vec<f64> = (0..d).map(|_| rng.f64()).collect();
+        let y: f64 = w.iter().zip(&x).map(|(&a, &c)| a * c).sum();
+        let yq: f64 = w
+            .iter()
+            .zip(&x)
+            .map(|(&a, &c)| midrise(a, gw) * midrise(c, gx))
+            .sum();
+        acc += (y - yq).powi(2);
+    }
+    acc / trials as f64
+}
+
+/// Monte-Carlo estimate of the PANN dot-product MSE at `(b̃_x, R)` on
+/// the uniform model. Validates Eqs. (17)–(18).
+pub fn mc_mse_pann(d: usize, bx_tilde: u32, r: f64, trials: usize, seed: u64) -> f64 {
+    let mut rng = Rng::new(seed);
+    let quant = super::pann::PannQuant::new(r);
+    let qx = super::ruq::fit_unsigned_clipped(1.0, bx_tilde);
+    let mut acc = 0.0;
+    for _ in 0..trials {
+        let w: Vec<f32> = (0..d).map(|_| rng.f32() - 0.5).collect();
+        let x: Vec<f32> = (0..d).map(|_| rng.f32()).collect();
+        let wq = quant.fake_quantize(&w);
+        let y: f64 = w.iter().zip(&x).map(|(&a, &c)| (a * c) as f64).sum();
+        let yq: f64 = wq
+            .iter()
+            .zip(&x)
+            .map(|(&a, &c)| (a * qx.dequantize(qx.quantize(c))) as f64)
+            .sum();
+        acc += (y - yq).powi(2);
+    }
+    acc / trials as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pann_beats_ruq_at_low_bits() {
+        // Fig. 4: ratio > 1 at the low bit widths.
+        for b in [2u32, 3] {
+            let ratio = fig4_ratio_uniform(1000, b);
+            assert!(ratio > 1.0, "b={b} ratio {ratio}");
+        }
+    }
+
+    #[test]
+    fn ruq_better_at_high_bits() {
+        // Fig. 4: at high bit widths RUQ is relatively better (<1).
+        let ratio = fig4_ratio_uniform(1000, 8);
+        assert!(ratio < 1.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn optimal_width_grows_with_budget() {
+        // Fig. 16 / App. A.9: optimal b̃_x increases with P.
+        let (b_lo, _) = optimal_bx_tilde(1000, 1.0, 1.0, 10.0);
+        let (b_hi, _) = optimal_bx_tilde(1000, 1.0, 1.0, 64.0);
+        assert!(b_hi > b_lo, "{b_lo} -> {b_hi}");
+    }
+
+    #[test]
+    fn mc_validates_ruq_theory() {
+        let d = 256;
+        let b = 4;
+        let mc = mc_mse_ruq(d, b, 3000, 11);
+        let th = mse_ruq(d, 1.0, 1.0, b);
+        assert!(
+            (mc / th - 1.0).abs() < 0.35,
+            "mc {mc} vs theory {th} (ratio {})",
+            mc / th
+        );
+    }
+
+    #[test]
+    fn mc_validates_pann_theory() {
+        let d = 256;
+        let (bt, r) = (5u32, 2.0);
+        let mc = mc_mse_pann(d, bt, r, 3000, 12);
+        let th = mse_pann_r(d, 1.0, 1.0, bt, r);
+        assert!(
+            (mc / th - 1.0).abs() < 0.35,
+            "mc {mc} vs theory {th} (ratio {})",
+            mc / th
+        );
+    }
+
+    #[test]
+    fn eq19_equals_eq18_at_matching_r() {
+        let (d, mx, mw, bt) = (100, 1.0, 1.0, 4u32);
+        let p = 24.0;
+        let r = p / bt as f64 - 0.5;
+        let via_p = mse_pann(d, mx, mw, bt, p).unwrap();
+        let via_r = mse_pann_r(d, mx, mw, bt, r);
+        // Eq. 19 substitutes R = P/b - 0.5 -> denominator 2P - b means
+        // R ≈ (2P-b)/(2b); check they agree to the paper's approximation.
+        assert!((via_p / via_r - 1.0).abs() < 0.02, "{via_p} vs {via_r}");
+    }
+}

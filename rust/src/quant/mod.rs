@@ -1,0 +1,69 @@
+//! Quantizers and quantization-error theory.
+//!
+//! The paper evaluates PANN against a family of post-training
+//! quantization (PTQ) baselines. We implement each family member the
+//! paper compares to (see DESIGN.md's substitution table for how the
+//! closed-source baselines are mapped):
+//!
+//! - [`ruq`] — the regular uniform quantizer of Sec. 5.3, also used as
+//!   the "Dynamic" baseline (ranges fitted on the fly per tensor).
+//! - [`aciq`] — analytic clipping (Banner et al. 2019): optimal clip
+//!   for Gaussian/Laplace data at a given bit width.
+//! - [`bnstats`] — data-free range estimation from batch-norm
+//!   statistics (the distilled-data core of ZeroQ).
+//! - [`dfq`] — weight equalization + bias correction (Nagel et al.
+//!   2019), our stand-in for the generative data-free method.
+//! - [`recon`] — AdaRound-style rounding reconstruction on a small
+//!   calibration set, our stand-in for BRECQ.
+//! - [`pann`] — the paper's weight quantizer (Eq. 12): quantization
+//!   step `γ_w = ‖w‖₁/(R·d)` tuned to a budget of `R` additions per
+//!   element, plus the unsigned W⁺/W⁻ split of Sec. 4.
+//! - [`error`] — the MSE theory of Sec. 5.3 (Eqs. 14–19) with Monte
+//!   Carlo validation (Figs. 4 and 16).
+
+pub mod aciq;
+pub mod bnstats;
+pub mod dfq;
+pub mod error;
+pub mod pann;
+pub mod recon;
+pub mod ruq;
+
+pub use pann::{PannQuant, PannWeights};
+pub use ruq::QParams;
+
+/// Which range-fitting method a PTQ baseline uses for activations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ActQuantMethod {
+    /// Min/max on the fly (per batch) — "Dynamic".
+    Dynamic,
+    /// Analytic clipping on a calibration set — "ACIQ".
+    Aciq,
+    /// Data-free, from batch-norm statistics — "BN-Stats" (ZeroQ core).
+    BnStats,
+    /// Weight equalization + bias correction — "DFQ" (data-free).
+    Dfq,
+    /// Rounding reconstruction on a calibration set — "Recon" (BRECQ
+    /// family).
+    Recon,
+}
+
+impl ActQuantMethod {
+    pub const ALL: [ActQuantMethod; 5] = [
+        ActQuantMethod::Dynamic,
+        ActQuantMethod::Aciq,
+        ActQuantMethod::BnStats,
+        ActQuantMethod::Dfq,
+        ActQuantMethod::Recon,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ActQuantMethod::Dynamic => "dynamic",
+            ActQuantMethod::Aciq => "aciq",
+            ActQuantMethod::BnStats => "bn-stats",
+            ActQuantMethod::Dfq => "dfq",
+            ActQuantMethod::Recon => "recon",
+        }
+    }
+}

@@ -1,0 +1,179 @@
+//! The PANN weight quantizer (paper Sec. 5.1, Eq. 12) and the unsigned
+//! W⁺/W⁻ split (Sec. 4).
+//!
+//! Given a budget of `R` additions per input element, the quantization
+//! step is `γ_w = ‖w‖₁ / (R·d)` and `Q(w_i) = round(w_i/γ_w)`. The
+//! codes are *not* confined to a power-of-two range — what is bounded
+//! is `‖w_q‖₁/d`, the average number of additions each element costs
+//! on the multiplier-free datapath.
+
+use super::ruq::QParams;
+
+/// PANN weight quantizer configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct PannQuant {
+    /// Budget: average additions per input element.
+    pub r: f64,
+}
+
+/// Quantized weights in PANN form: integer codes plus the step γ_w,
+/// split into non-negative W⁺ and W⁻ parts for unsigned arithmetic.
+#[derive(Clone, Debug)]
+pub struct PannWeights {
+    /// Quantization step γ_w.
+    pub gamma: f32,
+    /// Signed integer codes Q(w_i).
+    pub codes: Vec<i64>,
+    /// Achieved additions per element: ‖w_q‖₁ / d.
+    pub adds_per_element: f64,
+    /// Largest |code| — determines the bits b_R needed to *store* the
+    /// codes (Table 14's weights-memory column).
+    pub max_code: i64,
+}
+
+impl PannQuant {
+    pub fn new(r: f64) -> Self {
+        assert!(r > 0.0, "additions budget must be positive");
+        PannQuant { r }
+    }
+
+    /// Quantize weights per Eq. (12).
+    pub fn quantize(&self, w: &[f32]) -> PannWeights {
+        assert!(!w.is_empty());
+        let d = w.len() as f64;
+        let l1: f64 = w.iter().map(|&x| x.abs() as f64).sum();
+        let gamma = if l1 > 0.0 { (l1 / (self.r * d)) as f32 } else { 1.0 };
+        let codes: Vec<i64> = w.iter().map(|&x| (x / gamma).round() as i64).collect();
+        let adds: u64 = codes.iter().map(|c| c.unsigned_abs()).sum();
+        let max_code = codes.iter().map(|c| c.abs()).max().unwrap_or(0);
+        PannWeights {
+            gamma,
+            codes,
+            adds_per_element: adds as f64 / d,
+            max_code,
+        }
+    }
+
+    /// Dequantized (fake-quantized) weights.
+    pub fn fake_quantize(&self, w: &[f32]) -> Vec<f32> {
+        let pw = self.quantize(w);
+        pw.codes.iter().map(|&c| pw.gamma * c as f32).collect()
+    }
+}
+
+impl PannWeights {
+    /// The unsigned split of Sec. 4: `(W⁺, W⁻)` with
+    /// `codes = W⁺ − W⁻`, both non-negative.
+    pub fn unsigned_split(&self) -> (Vec<u64>, Vec<u64>) {
+        let pos = self.codes.iter().map(|&c| c.max(0) as u64).collect();
+        let neg = self.codes.iter().map(|&c| (-c).max(0) as u64).collect();
+        (pos, neg)
+    }
+
+    /// Bits needed to store a code (sign handled by bank membership
+    /// after the split): ceil(log2(max_code + 1)).
+    pub fn code_bits(&self) -> u32 {
+        (64 - (self.max_code as u64).leading_zeros()).max(1)
+    }
+
+    /// Dequantize code i.
+    pub fn dequant(&self, i: usize) -> f32 {
+        self.gamma * self.codes[i] as f32
+    }
+}
+
+/// Fake-quantize weights with a plain signed RUQ at `bits` — the
+/// baseline the tables compare against (equal weight/activation bits).
+pub fn ruq_weights(w: &[f32], bits: u32) -> (QParams, Vec<i64>) {
+    let q = super::ruq::fit_signed(w, bits);
+    let codes = q.quantize_slice(w);
+    (q, codes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn gauss(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        (0..n).map(|_| r.normal() as f32 * 0.1).collect()
+    }
+
+    #[test]
+    fn adds_budget_respected() {
+        // ‖w_q‖₁/d must land close to the prescribed R (Sec. 5.1:
+        // "as close as possible to the prescribed R").
+        let w = gauss(4096, 1);
+        for r in [1.0, 2.0, 4.0, 7.5] {
+            let pw = PannQuant::new(r).quantize(&w);
+            assert!(
+                (pw.adds_per_element - r).abs() / r < 0.1,
+                "R={r} achieved {}",
+                pw.adds_per_element
+            );
+        }
+        // Below R = 1, rounding sends many weights to code 0, so the
+        // achieved budget undershoots ("as close as possible", Sec 5.1).
+        let pw = PannQuant::new(0.5).quantize(&w);
+        assert!(pw.adds_per_element <= 0.5 && pw.adds_per_element > 0.3);
+    }
+
+    #[test]
+    fn error_shrinks_with_r() {
+        let w = gauss(4096, 2);
+        let mut last = f64::INFINITY;
+        for r in [0.5, 1.0, 2.0, 4.0, 8.0] {
+            let fq = PannQuant::new(r).fake_quantize(&w);
+            let mse: f64 = w
+                .iter()
+                .zip(&fq)
+                .map(|(&a, &b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+                / w.len() as f64;
+            assert!(mse < last, "R={r}: {mse} !< {last}");
+            last = mse;
+        }
+    }
+
+    #[test]
+    fn unsigned_split_reconstructs() {
+        let w = gauss(512, 3);
+        let pw = PannQuant::new(2.0).quantize(&w);
+        let (pos, neg) = pw.unsigned_split();
+        for i in 0..w.len() {
+            assert_eq!(pos[i] as i64 - neg[i] as i64, pw.codes[i]);
+            // at most one side nonzero
+            assert!(pos[i] == 0 || neg[i] == 0);
+        }
+    }
+
+    #[test]
+    fn rounding_error_bounded_by_half_gamma() {
+        let w = gauss(1024, 4);
+        let pw = PannQuant::new(3.0).quantize(&w);
+        for (i, &wi) in w.iter().enumerate() {
+            let e = (wi - pw.dequant(i)).abs();
+            assert!(e <= pw.gamma * 0.5 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn codes_not_range_limited() {
+        // Unlike RUQ, a single huge weight may get a code far beyond
+        // 2^b — the budget constrains the average, not the max.
+        let mut w = vec![0.001f32; 1000];
+        w[0] = 10.0;
+        let pw = PannQuant::new(1.0).quantize(&w);
+        assert!(pw.max_code > 100, "max code {}", pw.max_code);
+        assert!(pw.code_bits() > 6);
+    }
+
+    #[test]
+    fn zero_weights_safe() {
+        let w = vec![0.0f32; 64];
+        let pw = PannQuant::new(1.0).quantize(&w);
+        assert_eq!(pw.adds_per_element, 0.0);
+        assert!(pw.codes.iter().all(|&c| c == 0));
+    }
+}

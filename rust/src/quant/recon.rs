@@ -1,0 +1,142 @@
+//! Rounding reconstruction — AdaRound-style layer-wise optimization
+//! (our stand-in for BRECQ; see DESIGN.md substitution table).
+//!
+//! Nearest rounding is not MSE-optimal for the *layer output*. Given a
+//! calibration batch `X` (`[n][d]`) and a weight row `w` (`[d]`), we
+//! choose per-weight rounding direction (floor vs ceil) to minimize
+//! `‖(ŵ − w)ᵀX‖²` by greedy coordinate descent — the same objective
+//! family BRECQ optimizes per block with gradients.
+
+use super::ruq::QParams;
+
+/// Optimize the rounding of one weight vector against calibration
+/// activations. `x` is `[n][d]` flattened row-major (n samples).
+/// Returns the optimized integer codes.
+pub fn reconstruct_row(w: &[f32], q: &QParams, x: &[f32], n: usize, max_sweeps: usize) -> Vec<i64> {
+    let d = w.len();
+    assert_eq!(x.len(), n * d);
+    // start from nearest rounding
+    let mut codes: Vec<i64> = w.iter().map(|&v| q.quantize(v)).collect();
+    if n == 0 {
+        return codes;
+    }
+    // residual r_j = sum_i (ŵ_i - w_i) x[j][i]  for each sample j
+    let mut resid = vec![0.0f64; n];
+    for j in 0..n {
+        for i in 0..d {
+            resid[j] += (q.dequantize(codes[i]) - w[i]) as f64 * x[j * d + i] as f64;
+        }
+    }
+    let step = q.scale as f64;
+    for _sweep in 0..max_sweeps {
+        let mut improved = false;
+        for i in 0..d {
+            // candidate moves: code ± 1 (stay within range)
+            let mut best_delta = 0i64;
+            let mut best_gain = 0.0f64;
+            for delta in [-1i64, 1] {
+                let nc = codes[i] + delta;
+                if nc < q.qmin || nc > q.qmax {
+                    continue;
+                }
+                // new loss - old loss = sum_j (r_j + delta*step*x_ji)^2 - r_j^2
+                let mut diff = 0.0f64;
+                for j in 0..n {
+                    let xi = x[j * d + i] as f64;
+                    let t = delta as f64 * step * xi;
+                    diff += t * (2.0 * resid[j] + t);
+                }
+                if diff < best_gain - 1e-12 {
+                    best_gain = diff;
+                    best_delta = delta;
+                }
+            }
+            if best_delta != 0 {
+                for j in 0..n {
+                    resid[j] += best_delta as f64 * step * x[j * d + i] as f64;
+                }
+                codes[i] += best_delta;
+                improved = true;
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+    codes
+}
+
+/// Layer-output MSE of integer codes on a calibration batch.
+pub fn layer_mse(w: &[f32], codes: &[i64], q: &QParams, x: &[f32], n: usize) -> f64 {
+    let d = w.len();
+    let mut acc = 0.0;
+    for j in 0..n {
+        let mut r = 0.0f64;
+        for i in 0..d {
+            r += (q.dequantize(codes[i]) - w[i]) as f64 * x[j * d + i] as f64;
+        }
+        acc += r * r;
+    }
+    acc / n.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn never_worse_than_nearest() {
+        let mut r = Rng::new(21);
+        let d = 32;
+        let n = 24;
+        let w: Vec<f32> = (0..d).map(|_| r.normal() as f32).collect();
+        let x: Vec<f32> = (0..n * d).map(|_| (r.normal() as f32).max(0.0)).collect();
+        for bits in [2u32, 3, 4] {
+            let q = crate::quant::ruq::fit_signed(&w, bits);
+            let nearest: Vec<i64> = w.iter().map(|&v| q.quantize(v)).collect();
+            let opt = reconstruct_row(&w, &q, &x, n, 10);
+            let m_nearest = layer_mse(&w, &nearest, &q, &x, n);
+            let m_opt = layer_mse(&w, &opt, &q, &x, n);
+            assert!(m_opt <= m_nearest + 1e-9, "bits {bits}: {m_opt} > {m_nearest}");
+        }
+    }
+
+    #[test]
+    fn improves_at_low_bits() {
+        let mut r = Rng::new(22);
+        let d = 64;
+        let n = 32;
+        let w: Vec<f32> = (0..d).map(|_| r.normal() as f32).collect();
+        let x: Vec<f32> = (0..n * d).map(|_| (r.normal() as f32).max(0.0)).collect();
+        let q = crate::quant::ruq::fit_signed(&w, 2);
+        let nearest: Vec<i64> = w.iter().map(|&v| q.quantize(v)).collect();
+        let opt = reconstruct_row(&w, &q, &x, n, 20);
+        let m_nearest = layer_mse(&w, &nearest, &q, &x, n);
+        let m_opt = layer_mse(&w, &opt, &q, &x, n);
+        assert!(m_opt < m_nearest * 0.95, "{m_opt} vs {m_nearest}");
+    }
+
+    #[test]
+    fn codes_stay_in_range() {
+        let mut r = Rng::new(23);
+        let d = 16;
+        let n = 8;
+        let w: Vec<f32> = (0..d).map(|_| r.normal() as f32 * 3.0).collect();
+        let x: Vec<f32> = (0..n * d).map(|_| r.normal() as f32).collect();
+        let q = crate::quant::ruq::fit_signed(&w, 3);
+        let codes = reconstruct_row(&w, &q, &x, n, 10);
+        for c in codes {
+            assert!(c >= q.qmin && c <= q.qmax);
+        }
+    }
+
+    #[test]
+    fn empty_calibration_falls_back_to_nearest() {
+        let w = [0.3f32, -0.7, 0.1];
+        let q = crate::quant::ruq::fit_signed(&w, 4);
+        let codes = reconstruct_row(&w, &q, &[], 0, 5);
+        let nearest: Vec<i64> = w.iter().map(|&v| q.quantize(v)).collect();
+        assert_eq!(codes, nearest);
+    }
+}

@@ -1,0 +1,148 @@
+//! Regular uniform quantizer (RUQ) — the paper's baseline quantizer
+//! (Sec. 5.3) and the machinery shared by every other method.
+
+/// Uniform quantization parameters: `q = clamp(round(x/scale), qmin..qmax)`,
+/// `x̂ = scale·q`. Symmetric (no zero point), like the paper's `γ·Q(·)`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QParams {
+    pub scale: f32,
+    pub qmin: i64,
+    pub qmax: i64,
+}
+
+impl QParams {
+    /// Signed symmetric range for `bits`: `[-2^{b-1}, 2^{b-1} - 1]`.
+    pub fn signed(scale: f32, bits: u32) -> Self {
+        assert!(bits >= 1 && bits <= 31);
+        let hi = (1i64 << (bits - 1)) - 1;
+        QParams { scale: scale.max(f32::MIN_POSITIVE), qmin: -hi - 1, qmax: hi }
+    }
+
+    /// Unsigned range for `bits`: `[0, 2^b - 1]` (ReLU activations).
+    pub fn unsigned(scale: f32, bits: u32) -> Self {
+        assert!(bits >= 1 && bits <= 31);
+        QParams { scale: scale.max(f32::MIN_POSITIVE), qmin: 0, qmax: (1i64 << bits) - 1 }
+    }
+
+    /// Quantize one value to an integer code.
+    #[inline]
+    pub fn quantize(&self, x: f32) -> i64 {
+        let q = (x / self.scale).round() as i64;
+        q.clamp(self.qmin, self.qmax)
+    }
+
+    /// Dequantize a code.
+    #[inline]
+    pub fn dequantize(&self, q: i64) -> f32 {
+        self.scale * q as f32
+    }
+
+    /// Quantize a slice to integer codes.
+    pub fn quantize_slice(&self, xs: &[f32]) -> Vec<i64> {
+        xs.iter().map(|&x| self.quantize(x)).collect()
+    }
+
+    /// Fake-quantize (quantize then dequantize) a slice.
+    pub fn fake_quantize(&self, xs: &[f32]) -> Vec<f32> {
+        xs.iter().map(|&x| self.dequantize(self.quantize(x))).collect()
+    }
+
+    /// Mean squared quantization error over a slice.
+    pub fn mse(&self, xs: &[f32]) -> f64 {
+        if xs.is_empty() {
+            return 0.0;
+        }
+        xs.iter()
+            .map(|&x| {
+                let e = (x - self.dequantize(self.quantize(x))) as f64;
+                e * e
+            })
+            .sum::<f64>()
+            / xs.len() as f64
+    }
+}
+
+/// Fit a signed symmetric RUQ to data: scale = max|x| / (2^{b-1}-1).
+pub fn fit_signed(xs: &[f32], bits: u32) -> QParams {
+    let mx = xs.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+    let hi = ((1i64 << (bits - 1)) - 1) as f32;
+    QParams::signed(if mx > 0.0 { mx / hi } else { 1.0 }, bits)
+}
+
+/// Fit an unsigned RUQ to non-negative data: scale = max / (2^b - 1).
+pub fn fit_unsigned(xs: &[f32], bits: u32) -> QParams {
+    let mx = xs.iter().fold(0.0f32, |m, &x| m.max(x));
+    let hi = ((1i64 << bits) - 1) as f32;
+    QParams::unsigned(if mx > 0.0 { mx / hi } else { 1.0 }, bits)
+}
+
+/// Fit an unsigned RUQ with an explicit clipping value (used by the
+/// analytic methods): scale = clip / (2^b - 1).
+pub fn fit_unsigned_clipped(clip: f32, bits: u32) -> QParams {
+    let hi = ((1i64 << bits) - 1) as f32;
+    QParams::unsigned((clip / hi).max(f32::MIN_POSITIVE), bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn codes_within_range() {
+        let mut r = Rng::new(1);
+        let xs: Vec<f32> = (0..1000).map(|_| r.normal() as f32).collect();
+        for bits in 2..=8 {
+            let q = fit_signed(&xs, bits);
+            for &x in &xs {
+                let c = q.quantize(x);
+                assert!(c >= q.qmin && c <= q.qmax);
+            }
+        }
+    }
+
+    #[test]
+    fn error_bounded_by_half_step() {
+        let mut r = Rng::new(2);
+        let xs: Vec<f32> = (0..1000).map(|_| (r.f64() as f32) * 4.0 - 2.0).collect();
+        let q = fit_signed(&xs, 6);
+        for &x in &xs {
+            let e = (x - q.dequantize(q.quantize(x))).abs();
+            // In-range values err at most half a step (+eps).
+            assert!(e <= q.scale * 0.5 + 1e-6, "x={x} e={e} scale={}", q.scale);
+        }
+    }
+
+    #[test]
+    fn mse_decreases_with_bits() {
+        let mut r = Rng::new(3);
+        let xs: Vec<f32> = (0..4000).map(|_| r.normal() as f32).collect();
+        let mut last = f64::INFINITY;
+        for bits in 2..=8 {
+            let q = fit_signed(&xs, bits);
+            let mse = q.mse(&xs);
+            assert!(mse < last, "bits={bits} mse={mse} last={last}");
+            last = mse;
+        }
+    }
+
+    #[test]
+    fn unsigned_rejects_negative_to_zero() {
+        let q = fit_unsigned(&[0.0, 1.0, 2.0], 4);
+        assert_eq!(q.quantize(-5.0), 0);
+    }
+
+    #[test]
+    fn uniform_mse_matches_theory() {
+        // For U[0, M] data, RUQ at b bits has MSE ≈ Δ²/12.
+        let mut r = Rng::new(4);
+        let m = 8.0f32;
+        let xs: Vec<f32> = (0..200_000).map(|_| r.f32() * m).collect();
+        let bits = 5;
+        let q = fit_unsigned_clipped(m, bits);
+        let delta = (m / ((1 << bits) - 1) as f32) as f64;
+        let mse = q.mse(&xs);
+        let theory = delta * delta / 12.0;
+        assert!((mse / theory - 1.0).abs() < 0.05, "mse {mse} theory {theory}");
+    }
+}

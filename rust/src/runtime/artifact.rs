@@ -1,0 +1,106 @@
+//! The AOT artifact manifest (`artifacts/hlo/manifest.json`).
+
+use crate::util::Json;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One lowered executable's description.
+#[derive(Clone, Debug)]
+pub struct ExecSpec {
+    pub model: String,
+    /// `"fp32"` or `"pann-p<bits>"`.
+    pub variant: String,
+    pub file: PathBuf,
+    pub batch: usize,
+    pub input_shape: Vec<usize>,
+    /// Giga bit flips per sample (0 for fp32 — treated as unbounded
+    /// cost by the budget policy).
+    pub giga_flips_per_sample: f64,
+    /// PANN metadata when applicable.
+    pub bx_tilde: Option<u32>,
+    pub r: Option<f64>,
+}
+
+/// Parsed artifact manifest.
+#[derive(Clone, Debug, Default)]
+pub struct ArtifactManifest {
+    pub executables: Vec<ExecSpec>,
+}
+
+impl ArtifactManifest {
+    /// Load `manifest.json` from the HLO artifacts directory.
+    pub fn load(dir: &Path) -> Result<ArtifactManifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("read {}/manifest.json", dir.display()))?;
+        let j = Json::parse(&text).context("parse hlo manifest")?;
+        let mut executables = Vec::new();
+        for e in j.req("executables")?.as_arr().context("executables array")? {
+            executables.push(ExecSpec {
+                model: e.req("model")?.as_str().unwrap_or("").to_string(),
+                variant: e.req("variant")?.as_str().unwrap_or("").to_string(),
+                file: dir.join(e.req("file")?.as_str().unwrap_or("")),
+                batch: e.req("batch")?.as_usize().unwrap_or(1),
+                input_shape: {
+                    let mut v = vec![e.req("batch")?.as_usize().unwrap_or(1)];
+                    v.extend(
+                        e.req("input")?
+                            .as_arr()
+                            .context("input")?
+                            .iter()
+                            .map(|x| x.as_usize().unwrap_or(0)),
+                    );
+                    v
+                },
+                giga_flips_per_sample: e
+                    .get("giga_flips_per_sample")
+                    .and_then(|x| x.as_f64())
+                    .unwrap_or(0.0),
+                bx_tilde: e.get("bx_tilde").and_then(|x| x.as_usize()).map(|v| v as u32),
+                r: e.get("r").and_then(|x| x.as_f64()),
+            });
+        }
+        Ok(ArtifactManifest { executables })
+    }
+
+    /// Executables of one model, PANN variants sorted by power.
+    pub fn points_for(&self, model: &str) -> Vec<&ExecSpec> {
+        let mut v: Vec<&ExecSpec> = self
+            .executables
+            .iter()
+            .filter(|e| e.model == model)
+            .collect();
+        v.sort_by(|a, b| {
+            a.giga_flips_per_sample
+                .partial_cmp(&b.giga_flips_per_sample)
+                .unwrap()
+        });
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest() {
+        let dir = std::env::temp_dir().join("pann_test_hlo");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"executables":[
+              {"model":"m","variant":"fp32","file":"m_fp32.hlo.txt","batch":8,
+               "input":[1,16,16],"giga_flips_per_sample":0.0},
+              {"model":"m","variant":"pann-p4","file":"m_p4.hlo.txt","batch":8,
+               "input":[1,16,16],"giga_flips_per_sample":0.002,"bx_tilde":7,"r":2.9}
+            ]}"#,
+        )
+        .unwrap();
+        let m = ArtifactManifest::load(&dir).unwrap();
+        assert_eq!(m.executables.len(), 2);
+        let pts = m.points_for("m");
+        assert_eq!(pts[0].variant, "fp32");
+        assert_eq!(pts[1].bx_tilde, Some(7));
+        assert_eq!(pts[1].input_shape, vec![8, 1, 16, 16]);
+    }
+}

@@ -1,0 +1,94 @@
+//! PJRT CPU client wrapper: HLO text → compiled executable → run.
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A PJRT CPU client (one per process is plenty).
+pub struct CpuRuntime {
+    client: xla::PjRtClient,
+}
+
+/// A compiled model with its static batch/input/output geometry.
+pub struct LoadedModel {
+    exe: xla::PjRtLoadedExecutable,
+    /// Fixed batch the artifact was lowered with.
+    pub batch: usize,
+    /// Flattened per-sample input length.
+    pub sample_len: usize,
+    /// Input shape including batch, as lowered.
+    pub input_shape: Vec<usize>,
+    /// Per-sample output length (e.g. #classes); discovered on first run.
+    out_len: std::cell::Cell<usize>,
+}
+
+impl CpuRuntime {
+    pub fn new() -> Result<CpuRuntime> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(CpuRuntime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile an HLO-text artifact lowered with batch-leading input
+    /// shape `input_shape` (e.g. `[8, 1, 16, 16]`).
+    pub fn load(&self, path: &Path, input_shape: &[usize]) -> Result<LoadedModel> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).context("PJRT compile")?;
+        let batch = input_shape[0];
+        let sample_len: usize = input_shape[1..].iter().product();
+        Ok(LoadedModel {
+            exe,
+            batch,
+            sample_len,
+            input_shape: input_shape.to_vec(),
+            out_len: std::cell::Cell::new(0),
+        })
+    }
+}
+
+impl LoadedModel {
+    /// Execute on a full batch (`batch × sample_len` f32s); returns the
+    /// flattened outputs (`batch × out_len`).
+    pub fn run(&self, input: &[f32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            input.len() == self.batch * self.sample_len,
+            "input length {} != {}×{}",
+            input.len(),
+            self.batch,
+            self.sample_len
+        );
+        let dims: Vec<i64> = self.input_shape.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(input)
+            .reshape(&dims)
+            .context("reshape input literal")?;
+        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0]
+            .to_literal_sync()
+            .context("fetch result")?;
+        // aot.py lowers with return_tuple=True → 1-tuple.
+        let out = result.to_tuple1().context("unwrap result tuple")?;
+        let v: Vec<f32> = out.to_vec().context("read f32 output")?;
+        if self.out_len.get() == 0 && !v.is_empty() {
+            self.out_len.set(v.len() / self.batch);
+        }
+        Ok(v)
+    }
+
+    /// Per-sample output length (0 before the first run).
+    pub fn out_len(&self) -> usize {
+        self.out_len.get()
+    }
+
+    /// Run `n ≤ batch` samples by zero-padding to the static batch.
+    pub fn run_padded(&self, input: &[f32], n: usize) -> Result<Vec<f32>> {
+        anyhow::ensure!(n <= self.batch && input.len() == n * self.sample_len);
+        let mut full = vec![0.0f32; self.batch * self.sample_len];
+        full[..input.len()].copy_from_slice(input);
+        let out = self.run(&full)?;
+        let ol = out.len() / self.batch;
+        Ok(out[..n * ol].to_vec())
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime: load and execute the AOT-lowered JAX/Pallas artifacts
+//! (`artifacts/hlo/*.hlo.txt`, written by `python -m compile.aot`).
+//!
+//! HLO **text** is the interchange format: jax ≥ 0.5 serializes
+//! `HloModuleProto`s with 64-bit instruction ids that the crate's
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+//! /opt/xla-example/README.md). Python never runs at serving time —
+//! after `make artifacts` the binary is self-contained.
+
+pub mod artifact;
+pub mod executable;
+
+pub use artifact::{ArtifactManifest, ExecSpec};
+pub use executable::{CpuRuntime, LoadedModel};

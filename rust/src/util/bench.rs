@@ -1,0 +1,111 @@
+//! Micro-benchmark harness (criterion is not available in the offline
+//! registry of this build, so the `cargo bench` targets use this).
+//!
+//! Measures wall-clock per iteration with warm-up, reports mean ± std
+//! and throughput, and prevents the optimizer from deleting work via
+//! `std::hint::black_box`.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    /// Human line, e.g. `conv_hot   123.4 µs/iter (±2.1) [64 iters]`.
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} {:>12}/iter (±{}) [{} iters]",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.std_ns),
+            self.iters
+        )
+    }
+
+    /// items/sec given items-per-iteration.
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.mean_ns * 1e-9)
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.1} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark `f`, auto-scaling iteration count to fill ~`budget`.
+pub fn bench<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> BenchResult {
+    // Warm-up and calibration: find an iteration count that takes ≥1ms.
+    let mut calib_iters = 1u64;
+    let per_iter_ns = loop {
+        let t0 = Instant::now();
+        for _ in 0..calib_iters {
+            f();
+        }
+        let dt = t0.elapsed();
+        if dt >= Duration::from_millis(1) || calib_iters >= 1 << 24 {
+            break dt.as_nanos() as f64 / calib_iters as f64;
+        }
+        calib_iters *= 4;
+    };
+    // Sample batches until the budget is spent (at least 5 samples).
+    let batch = ((1e6 / per_iter_ns).ceil() as u64).max(1);
+    let mut samples: Vec<f64> = Vec::new();
+    let start = Instant::now();
+    while start.elapsed() < budget || samples.len() < 5 {
+        let t0 = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        samples.push(t0.elapsed().as_nanos() as f64 / batch as f64);
+        if samples.len() > 10_000 {
+            break;
+        }
+    }
+    let mean = crate::util::stats::mean(&samples);
+    let std = crate::util::stats::std_dev(&samples);
+    let (min, _) = crate::util::stats::min_max(&samples);
+    BenchResult {
+        name: name.to_string(),
+        iters: batch * samples.len() as u64,
+        mean_ns: mean,
+        std_ns: std,
+        min_ns: min,
+    }
+}
+
+/// Run and print a benchmark with the default 0.5s budget.
+pub fn run<F: FnMut()>(name: &str, f: F) -> BenchResult {
+    let r = bench(name, Duration::from_millis(500), f);
+    println!("{}", r.line());
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut acc = 0u64;
+        let r = bench("noop-ish", Duration::from_millis(20), || {
+            acc = std::hint::black_box(acc.wrapping_add(1));
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.iters > 0);
+    }
+}

@@ -1,0 +1,11 @@
+//! Small self-contained utilities: deterministic RNG, a minimal JSON
+//! reader/writer (the crate registry available to this build has no
+//! `serde`/`rand`), descriptive statistics and a micro-bench harness.
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+pub use json::Json;
+pub use rng::Rng;

@@ -1,0 +1,164 @@
+//! Hand-rolled property tests (the offline registry carries no
+//! proptest): randomized invariants over quantizers, the unsigned
+//! split, power models and the toggle simulators.
+
+use pann::bitflip::{BoothMultiplier, Multiplier, SerialMultiplier};
+use pann::nn::gemm;
+use pann::quant::pann::PannQuant;
+use pann::quant::ruq;
+use pann::util::Rng;
+
+const CASES: usize = 200;
+
+#[test]
+fn prop_quantize_dequantize_error_bounded() {
+    let mut rng = Rng::new(101);
+    for _ in 0..CASES {
+        let n = 1 + rng.below(256);
+        let scale = (rng.f32() + 0.01) * 3.0;
+        let xs: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * scale).collect();
+        let bits = 2 + rng.below(7) as u32;
+        let q = ruq::fit_signed(&xs, bits);
+        for &x in &xs {
+            let e = (x - q.dequantize(q.quantize(x))).abs();
+            assert!(e <= 0.5 * q.scale + 1e-5, "bits={bits} x={x} err={e} step={}", q.scale);
+        }
+    }
+}
+
+#[test]
+fn prop_pann_codes_reconstruct_within_half_gamma() {
+    let mut rng = Rng::new(102);
+    for _ in 0..CASES {
+        let n = 1 + rng.below(512);
+        let r = 0.5 + rng.f64() * 7.5;
+        let xs: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let pw = PannQuant::new(r).quantize(&xs);
+        for (i, &x) in xs.iter().enumerate() {
+            assert!((x - pw.dequant(i)).abs() <= 0.5 * pw.gamma + 1e-5);
+        }
+        // L1 budget is never exceeded by more than rounding slack
+        assert!(pw.adds_per_element <= r + 0.5 + 1e-9, "R={r} got {}", pw.adds_per_element);
+    }
+}
+
+#[test]
+fn prop_unsigned_split_gemm_exact() {
+    let mut rng = Rng::new(103);
+    for _ in 0..60 {
+        let m = 1 + rng.below(12);
+        let n = 1 + rng.below(12);
+        let k = 1 + rng.below(48);
+        let a: Vec<i32> = (0..m * k).map(|_| rng.range_i64(0, 256) as i32).collect();
+        let w: Vec<i32> = (0..n * k).map(|_| rng.range_i64(-100, 100) as i32).collect();
+        let pos: Vec<i32> = w.iter().map(|&v| v.max(0)).collect();
+        let neg: Vec<i32> = w.iter().map(|&v| (-v).max(0)).collect();
+        let mut out_a = vec![0i64; m * n];
+        let mut out_b = vec![0i64; m * n];
+        gemm::gemm_i32(&a, &w, &mut out_a, m, n, k);
+        gemm::gemm_i32_split(&a, &pos, &neg, &mut out_b, m, n, k);
+        assert_eq!(out_a, out_b);
+    }
+}
+
+#[test]
+fn prop_multipliers_agree_and_are_exact() {
+    let mut rng = Rng::new(104);
+    for _ in 0..40 {
+        let b = 2 + rng.below(7) as u32;
+        let hi = 1i64 << (b - 1);
+        let mut booth = BoothMultiplier::new(b, true);
+        let mut serial = SerialMultiplier::new(b, true);
+        for _ in 0..200 {
+            let w = rng.range_i64(-hi, hi);
+            let x = rng.range_i64(-hi, hi);
+            let (pb, _) = booth.mul(w, x);
+            let (ps, _) = serial.mul(w, x);
+            assert_eq!(pb, w * x);
+            assert_eq!(ps, w * x);
+        }
+    }
+}
+
+#[test]
+fn prop_toggle_counts_bounded_by_register_sizes() {
+    // No instruction can toggle more bits than exist in the datapath.
+    let mut rng = Rng::new(105);
+    for _ in 0..20 {
+        let b = 2 + rng.below(7) as u32;
+        let hi = 1i64 << (b - 1);
+        let mut m = BoothMultiplier::new(b, true);
+        // rows+sums+carries: 3 registers × b stages × 2b bits, plus
+        // inputs (2b + 2b encoder) and output 2b.
+        let bound = (3 * b * 2 * b + 6 * b) as u64;
+        for _ in 0..300 {
+            let (_, t) = m.mul(rng.range_i64(-hi, hi), rng.range_i64(-hi, hi));
+            assert!(t.total() <= bound, "b={b}: {} > {bound}", t.total());
+        }
+    }
+}
+
+#[test]
+fn prop_power_models_monotone_in_bits() {
+    use pann::power::model::*;
+    for b in 2..8u32 {
+        assert!(mac_power_signed(b + 1, 32).total() > mac_power_signed(b, 32).total());
+        assert!(mac_power_unsigned(b + 1).total() > mac_power_unsigned(b).total());
+        assert!(mult_power_mixed_signed(b + 1, 8) >= mult_power_mixed_signed(b, 8));
+    }
+}
+
+#[test]
+fn prop_unsigned_never_costs_more_than_signed() {
+    use pann::power::model::*;
+    for b in 2..=8u32 {
+        for acc in [16u32, 24, 32, 48] {
+            assert!(mac_power_unsigned(b).total() <= mac_power_signed(b, acc).total());
+        }
+    }
+}
+
+#[test]
+fn prop_quantized_forward_deterministic() {
+    use pann::data::{synth, Dataset};
+    use pann::nn::eval::{batch_tensor, eval_quantized};
+    use pann::nn::quantized::{QuantConfig, QuantizedModel};
+    use pann::nn::Model;
+    use pann::quant::ActQuantMethod;
+    let mut model = Model::reference_cnn(31);
+    let ds = Dataset::from_synth(synth::digits(24, 32));
+    let x = batch_tensor(&ds, 0, 16);
+    model.record_act_stats(&x).unwrap();
+    let qm = QuantizedModel::prepare(
+        &model,
+        QuantConfig::pann(5, 2.0, ActQuantMethod::BnStats),
+        None,
+    )
+    .unwrap();
+    let a = eval_quantized(&qm, &ds).unwrap();
+    let b = eval_quantized(&qm, &ds).unwrap();
+    assert_eq!(a.correct, b.correct);
+    assert!((a.giga_flips - b.giga_flips).abs() < 1e-15);
+}
+
+#[test]
+fn prop_tensor_io_roundtrip_random() {
+    use pann::data::tensor_io::{parse_tensor, write_tensor, TensorData};
+    let mut rng = Rng::new(106);
+    let dir = std::env::temp_dir().join("pann_prop_io");
+    std::fs::create_dir_all(&dir).unwrap();
+    for case in 0..40 {
+        let ndim = 1 + rng.below(4);
+        let shape: Vec<usize> = (0..ndim).map(|_| 1 + rng.below(6)).collect();
+        let n: usize = shape.iter().product();
+        let t = match rng.below(3) {
+            0 => TensorData::F32(shape, (0..n).map(|_| rng.normal() as f32).collect()),
+            1 => TensorData::I32(shape, (0..n).map(|_| rng.range_i64(-1000, 1000) as i32).collect()),
+            _ => TensorData::U8(shape, (0..n).map(|_| rng.below(256) as u8).collect()),
+        };
+        let p = dir.join(format!("t{case}.ptns"));
+        write_tensor(&p, &t).unwrap();
+        let raw = std::fs::read(&p).unwrap();
+        assert_eq!(parse_tensor(&raw).unwrap(), t);
+    }
+}
