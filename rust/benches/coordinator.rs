@@ -1,73 +1,114 @@
 //! Serving-loop benchmark: batching throughput and latency percentiles
-//! over the native integer engine (and PJRT when artifacts exist).
+//! over the native integer engine — single worker vs worker pool.
 
-use pann::coordinator::{EnginePoint, Server, ServerConfig};
 use pann::coordinator::server::NativeEngine;
+use pann::coordinator::{EnginePoint, PlanEngine, Server, ServerConfig, SharedPoint};
 use pann::data::{synth, Dataset};
 use pann::nn::eval::batch_tensor;
 use pann::nn::quantized::{QuantConfig, QuantizedModel};
 use pann::nn::Model;
 use pann::quant::ActQuantMethod;
+use std::sync::Arc;
 use std::time::Duration;
 
-fn native_points() -> anyhow::Result<Vec<EnginePoint>> {
+fn prepared_models() -> anyhow::Result<Vec<(u32, QuantizedModel)>> {
     let mut model = Model::reference_cnn(1);
     let ds = Dataset::from_synth(synth::digits(64, 2));
     let stats_x = batch_tensor(&ds, 0, 64);
     model.record_act_stats(&stats_x)?;
-    let mut points = Vec::new();
+    let mut out = Vec::new();
     for (bits, bx, r) in [(2u32, 6u32, 10.0 / 6.0 - 0.5), (4, 7, 24.0 / 7.0 - 0.5), (8, 8, 7.5)] {
-        let qm = QuantizedModel::prepare(&model, QuantConfig::pann(bx, r, ActQuantMethod::BnStats), None)?;
-        let gf = pann::power::model::mac_power_unsigned_total(bits) * model.num_macs() as f64 / 1e9;
-        points.push(EnginePoint {
-            name: format!("pann-p{bits}"),
-            giga_flips_per_sample: gf,
-            engine: Box::new(NativeEngine { qm, sample_shape: vec![1, 16, 16] }),
-        });
+        let qm = QuantizedModel::prepare(
+            &model,
+            QuantConfig::pann(bx, r, ActQuantMethod::BnStats),
+            None,
+        )?;
+        out.push((bits, qm));
     }
-    Ok(points)
+    Ok(out)
+}
+
+fn gf_per_sample(bits: u32, qm: &QuantizedModel) -> f64 {
+    pann::power::model::mac_power_unsigned_total(bits) * qm.macs_per_sample as f64 / 1e9
+}
+
+fn drive(h: &pann::coordinator::ServerHandle, ds: &Dataset, label: &str, budget: f64, clients: usize) {
+    h.set_budget(budget);
+    let t0 = std::time::Instant::now();
+    let n_per = 64usize;
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let h = h.clone();
+            s.spawn(move || {
+                for i in 0..n_per {
+                    let idx = (c * n_per + i) % ds.len();
+                    h.infer(ds.sample(idx).to_vec()).expect("infer");
+                }
+            });
+        }
+    });
+    let dt = t0.elapsed().as_secs_f64();
+    let total = clients * n_per;
+    println!(
+        "{label:<34} {total} reqs in {dt:.3}s = {:.0} req/s",
+        total as f64 / dt
+    );
 }
 
 fn main() {
+    let cfg = ServerConfig {
+        max_batch: 16,
+        max_wait: Duration::from_micros(500),
+        budget_gflips: f64::INFINITY,
+    };
+    let ds = Dataset::from_synth(synth::digits(256, 5));
+
+    // --- single worker (the seed architecture) ---
     let srv = Server::start(
-        native_points,
-        256,
-        ServerConfig {
-            max_batch: 16,
-            max_wait: Duration::from_micros(500),
-            budget_gflips: f64::INFINITY,
+        || {
+            Ok(prepared_models()?
+                .into_iter()
+                .map(|(bits, qm)| EnginePoint {
+                    name: format!("pann-p{bits}"),
+                    giga_flips_per_sample: gf_per_sample(bits, &qm),
+                    engine: Box::new(NativeEngine::new(&qm, vec![1, 16, 16])),
+                })
+                .collect())
         },
+        256,
+        cfg,
     )
     .expect("server start");
     let h = srv.handle();
-    let ds = Dataset::from_synth(synth::digits(256, 5));
-
     for (label, budget, clients) in [
-        ("rich budget, 4 clients", f64::INFINITY, 4usize),
-        ("2-bit budget, 4 clients", 0.001, 4),
-        ("rich budget, 16 clients", f64::INFINITY, 16),
+        ("1 worker, rich budget, 4 clients", f64::INFINITY, 4usize),
+        ("1 worker, 2-bit budget, 4 clients", 0.001, 4),
+        ("1 worker, rich budget, 16 clients", f64::INFINITY, 16),
     ] {
-        h.set_budget(budget);
-        let t0 = std::time::Instant::now();
-        let n_per = 64usize;
-        std::thread::scope(|s| {
-            for c in 0..clients {
-                let h = h.clone();
-                let ds = &ds;
-                s.spawn(move || {
-                    for i in 0..n_per {
-                        let idx = (c * n_per + i) % ds.len();
-                        h.infer(ds.sample(idx).to_vec()).expect("infer");
-                    }
-                });
-            }
-        });
-        let dt = t0.elapsed().as_secs_f64();
-        let total = clients * n_per;
-        println!(
-            "{label:<28} {total} reqs in {dt:.3}s = {:.0} req/s",
-            total as f64 / dt
-        );
+        drive(&h, &ds, label, budget, clients);
+    }
+    println!("{}", h.metrics().report());
+    srv.shutdown();
+
+    // --- worker pool over shared execution plans ---
+    let n_workers = pann::nn::eval::n_threads();
+    let points: Vec<SharedPoint> = prepared_models()
+        .expect("prepare")
+        .into_iter()
+        .map(|(bits, qm)| SharedPoint {
+            name: format!("pann-p{bits}"),
+            giga_flips_per_sample: gf_per_sample(bits, &qm),
+            engine: Arc::new(PlanEngine::new(qm.plan(), vec![1, 16, 16])),
+        })
+        .collect();
+    let srv = Server::start_pool(points, 256, cfg, n_workers).expect("pool start");
+    let h = srv.handle();
+    for (label, budget, clients) in [
+        ("pool, rich budget, 4 clients", f64::INFINITY, 4usize),
+        ("pool, 2-bit budget, 4 clients", 0.001, 4),
+        ("pool, rich budget, 16 clients", f64::INFINITY, 16),
+    ] {
+        drive(&h, &ds, &format!("{label} ({n_workers}w)"), budget, clients);
     }
     println!("{}", h.metrics().report());
     srv.shutdown();

@@ -1,18 +1,25 @@
-//! Hot-path micro-benchmarks: GEMM kernels, im2col, quantized layer
-//! execution, full-model evaluation throughput.
+//! Hot-path benchmarks: GEMM kernels (scalar vs blocked vs threaded),
+//! im2col, and batched quantized engine throughput per operating
+//! point, single- vs multi-core.
+//!
+//! Emits `BENCH_engine.json` (ops/sec and GFlips/sample per operating
+//! point, plus every micro-bench) so later PRs can track the perf
+//! trajectory without parsing stdout.
 
 use pann::data::{synth, Dataset};
-use pann::nn::eval::{batch_tensor, eval_quantized};
+use pann::nn::eval::{batch_tensor, n_threads};
 use pann::nn::gemm;
 use pann::nn::quantized::{QuantConfig, QuantizedModel};
-use pann::nn::Model;
+use pann::nn::{Model, Scratch};
 use pann::quant::ActQuantMethod;
-use pann::util::bench::run;
-use pann::util::Rng;
+use pann::util::bench::{run, write_json};
+use pann::util::{Json, Rng};
 
 fn main() {
+    let mut report: Vec<(String, Json)> = Vec::new();
     let mut r = Rng::new(1);
-    // --- GEMM kernels ---
+
+    // --- GEMM kernels, small (one conv layer at batch 1) ---
     let (m, n, k) = (256, 64, 144);
     let a_f: Vec<f32> = (0..m * k).map(|_| r.normal() as f32).collect();
     let b_f: Vec<f32> = (0..n * k).map(|_| r.normal() as f32).collect();
@@ -29,6 +36,7 @@ fn main() {
         );
     });
     println!("  -> {:.2} GFLOP/s", res.throughput(gemm_flops) / 1e9);
+    report.push((res.name.clone(), res.to_json()));
 
     let a_i: Vec<i32> = (0..m * k).map(|_| r.range_i64(0, 64) as i32).collect();
     let b_i: Vec<i32> = (0..n * k).map(|_| r.range_i64(-8, 8) as i32).collect();
@@ -46,6 +54,7 @@ fn main() {
         );
     });
     println!("  -> {:.2} Gmac/s", res.throughput((m * n * k) as f64) / 1e9);
+    report.push((res.name.clone(), res.to_json()));
     let res = run("gemm_i32_split 256x64x144", || {
         gemm::gemm_i32_split(
             std::hint::black_box(&a_i),
@@ -58,29 +67,147 @@ fn main() {
         );
     });
     println!("  -> {:.2} Gmac/s (dual bank)", res.throughput((m * n * k) as f64) / 1e9);
+    report.push((res.name.clone(), res.to_json()));
+
+    // --- GEMM kernels, batched (one conv layer at batch 64) ---
+    let threads = n_threads();
+    let (bm, bn, bk) = (64 * 256, 64, 144);
+    let ba: Vec<i32> = (0..bm * bk).map(|_| r.range_i64(0, 64) as i32).collect();
+    let bw: Vec<i32> = (0..bn * bk).map(|_| r.range_i64(-8, 8) as i32).collect();
+    let bpos: Vec<i32> = bw.iter().map(|&v| v.max(0)).collect();
+    let bneg: Vec<i32> = bw.iter().map(|&v| (-v).max(0)).collect();
+    let mut bout = vec![0i64; bm * bn];
+    let macs = (bm * bn * bk) as f64;
+    let res = run("gemm_i32_split 16384x64x144 scalar", || {
+        gemm::gemm_i32_split(
+            std::hint::black_box(&ba),
+            std::hint::black_box(&bpos),
+            std::hint::black_box(&bneg),
+            &mut bout,
+            bm,
+            bn,
+            bk,
+        );
+    });
+    println!("  -> {:.2} Gmac/s", res.throughput(macs) / 1e9);
+    report.push(("gemm_split_batch64_scalar".into(), res.to_json()));
+    let res1 = run("gemm_i32_split_blocked 16384x64x144 t=1", || {
+        gemm::gemm_i32_split_blocked(
+            std::hint::black_box(&ba),
+            std::hint::black_box(&bpos),
+            std::hint::black_box(&bneg),
+            &mut bout,
+            bm,
+            bn,
+            bk,
+            1,
+        );
+    });
+    println!("  -> {:.2} Gmac/s", res1.throughput(macs) / 1e9);
+    report.push(("gemm_split_batch64_blocked_1t".into(), res1.to_json()));
+    let rest = run(&format!("gemm_i32_split_blocked 16384x64x144 t={threads}"), || {
+        gemm::gemm_i32_split_blocked(
+            std::hint::black_box(&ba),
+            std::hint::black_box(&bpos),
+            std::hint::black_box(&bneg),
+            &mut bout,
+            bm,
+            bn,
+            bk,
+            threads,
+        );
+    });
+    let kernel_speedup = res1.mean_ns / rest.mean_ns;
+    println!(
+        "  -> {:.2} Gmac/s ({kernel_speedup:.2}x over 1 thread)",
+        rest.throughput(macs) / 1e9
+    );
+    report.push(("gemm_split_batch64_blocked_mt".into(), rest.to_json()));
 
     // --- im2col ---
     let x: Vec<f32> = (0..8 * 16 * 16).map(|_| r.f32()).collect();
     let mut cols = Vec::new();
-    run("im2col 8ch 16x16 k3", || {
+    let res = run("im2col 8ch 16x16 k3", || {
         gemm::im2col(std::hint::black_box(&x), 8, 16, 16, 3, 3, 1, 1, &mut cols);
     });
+    report.push((res.name.clone(), res.to_json()));
 
-    // --- full quantized model eval ---
+    // --- batched engine forward, per operating point, 1 vs N cores ---
     let mut model = Model::reference_cnn(1);
     let ds = Dataset::from_synth(synth::digits(256, 2));
     let stats_x = batch_tensor(&ds, 0, 64);
     model.record_act_stats(&stats_x).unwrap();
+    let batch = 64usize;
+    let xb = batch_tensor(&ds, 0, batch);
+    let mut points = Vec::new();
+    for (name, cfg) in [
+        ("unsigned-4bit", QuantConfig::unsigned_baseline(4, ActQuantMethod::BnStats)),
+        ("pann-bx6-r2", QuantConfig::pann(6, 2.0, ActQuantMethod::BnStats)),
+    ] {
+        let qm = QuantizedModel::prepare(&model, cfg, None).unwrap();
+        let plan = qm.plan();
+        let mut scratch = Scratch::for_plan(&plan, batch);
+        // energy per sample at this operating point
+        let mut meter = plan.new_meter();
+        plan.forward_batch(&xb, &mut scratch, &mut meter, 1).unwrap();
+        let gflips_per_sample = meter.giga() / batch as f64;
+
+        let r1 = run(&format!("engine {name} batch{batch} t=1"), || {
+            let mut meter = plan.new_meter();
+            let y = plan
+                .forward_batch(std::hint::black_box(&xb), &mut scratch, &mut meter, 1)
+                .unwrap();
+            std::hint::black_box(y.data.len());
+        });
+        let ops1 = r1.throughput(batch as f64);
+        println!("  -> {ops1:.0} samples/s single-core");
+        let rt = run(&format!("engine {name} batch{batch} t={threads}"), || {
+            let mut meter = plan.new_meter();
+            let y = plan
+                .forward_batch(std::hint::black_box(&xb), &mut scratch, &mut meter, threads)
+                .unwrap();
+            std::hint::black_box(y.data.len());
+        });
+        let opst = rt.throughput(batch as f64);
+        let speedup = opst / ops1;
+        println!("  -> {opst:.0} samples/s on {threads} threads ({speedup:.2}x)");
+        report.push((format!("engine_{name}_1t"), r1.to_json()));
+        report.push((format!("engine_{name}_mt"), rt.to_json()));
+        points.push(Json::obj(vec![
+            ("point", Json::from(name)),
+            ("batch", Json::from(batch)),
+            ("threads", Json::from(threads)),
+            ("ops_per_sec_1t", Json::Num(ops1)),
+            ("ops_per_sec_mt", Json::Num(opst)),
+            ("speedup", Json::Num(speedup)),
+            ("gflips_per_sample", Json::Num(gflips_per_sample)),
+        ]));
+    }
+
+    // --- end-to-end eval loops (outer parallelism, plan API inside) ---
     for (name, cfg) in [
         ("eval unsigned 4-bit", QuantConfig::unsigned_baseline(4, ActQuantMethod::BnStats)),
         ("eval pann b̃x=6 R=2", QuantConfig::pann(6, 2.0, ActQuantMethod::BnStats)),
     ] {
         let qm = QuantizedModel::prepare(&model, cfg, None).unwrap();
         let res = run(name, || {
-            let r = eval_quantized(std::hint::black_box(&qm), &ds).unwrap();
+            let r = pann::nn::eval::eval_quantized(std::hint::black_box(&qm), &ds).unwrap();
             std::hint::black_box(r.correct);
         });
         let macs = model.num_macs() as f64 * ds.len() as f64;
         println!("  -> {:.2} Gmac/s end-to-end", res.throughput(macs) / 1e9);
+        report.push((name.to_string(), res.to_json()));
     }
+
+    let doc = Json::obj(vec![
+        ("schema", Json::from("bench-engine/v1")),
+        ("threads", Json::from(threads)),
+        ("engine_points", Json::Arr(points)),
+        (
+            "cases",
+            Json::Obj(report.into_iter().collect()),
+        ),
+    ]);
+    write_json("BENCH_engine.json", &doc).expect("write BENCH_engine.json");
+    println!("\nwrote BENCH_engine.json");
 }

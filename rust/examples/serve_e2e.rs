@@ -1,0 +1,199 @@
+//! End-to-end serving driver (the EXPERIMENTS.md validation run).
+//!
+//! Two modes, picked automatically:
+//!
+//! - **PJRT** (requires `make artifacts` and a `--features pjrt`
+//!   build): JAX+Pallas AOT artifacts (L1+L2) are loaded by the Rust
+//!   PJRT runtime and served by the single-worker coordinator — PJRT
+//!   executables are not `Send`, so they stay on one thread.
+//! - **Native pool** (default, no artifacts needed): the built-in
+//!   reference CNN is compiled into one immutable `ExecutionPlan` per
+//!   operating point, and a pool of workers serves every point from
+//!   shared `Arc`s with per-worker scratch arenas.
+//!
+//! Either way the driver replays a test set as a request stream, then
+//! *changes the energy budget at runtime* and shows the coordinator
+//! hopping between operating points — the paper's deployment claim.
+//!
+//! ```sh
+//! cargo run --release --example serve_e2e
+//! ```
+
+use pann::coordinator::{EnginePoint, PlanEngine, Server, ServerConfig, SharedPoint};
+use pann::data::Dataset;
+use pann::nn::eval::batch_tensor;
+use pann::nn::quantized::{QuantConfig, QuantizedModel};
+use pann::nn::Model;
+use pann::quant::ActQuantMethod;
+use pann::runtime::{ArtifactManifest, CpuRuntime};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    let model = std::env::args().nth(1).unwrap_or_else(|| "cnn-s".to_string());
+    let artifacts = std::path::PathBuf::from("artifacts");
+    // PJRT needs both the artifacts and a `--features pjrt` build (the
+    // default build has a stub runtime whose constructor errors); any
+    // PJRT-path failure falls back to the native pool.
+    match ArtifactManifest::load(&artifacts.join("hlo")) {
+        Ok(manifest) => match serve_pjrt(&model, &artifacts, manifest) {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                eprintln!("PJRT serving unavailable ({e:#}); serving the native engine pool instead");
+                serve_native_pool()
+            }
+        },
+        Err(e) => {
+            eprintln!("no PJRT artifacts ({e:#}); serving the native engine pool instead");
+            serve_native_pool()
+        }
+    }
+}
+
+/// Single-worker PJRT serving over AOT artifacts.
+fn serve_pjrt(
+    model: &str,
+    artifacts: &std::path::Path,
+    manifest: ArtifactManifest,
+) -> anyhow::Result<()> {
+    let specs: Vec<_> = manifest.points_for(model).into_iter().cloned().collect();
+    anyhow::ensure!(!specs.is_empty(), "no executables for {model}");
+    let sample_len: usize = specs[0].input_shape[1..].iter().product();
+
+    let srv = Server::start(
+        move || {
+            let rt = CpuRuntime::new()?;
+            eprintln!("PJRT platform: {}", rt.platform());
+            let mut points = Vec::new();
+            for spec in &specs {
+                let lm = rt.load(&spec.file, &spec.input_shape)?;
+                eprintln!(
+                    "  loaded {:<12} ({:.5} Gflips/sample)",
+                    spec.variant, spec.giga_flips_per_sample
+                );
+                points.push(EnginePoint {
+                    name: spec.variant.clone(),
+                    giga_flips_per_sample: if spec.variant == "fp32" {
+                        f64::INFINITY
+                    } else {
+                        spec.giga_flips_per_sample
+                    },
+                    engine: Box::new(lm),
+                });
+            }
+            Ok(points)
+        },
+        sample_len,
+        ServerConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+            budget_gflips: f64::INFINITY,
+        },
+    )?;
+
+    let ds_name = pann::experiments::dataset_for(model);
+    let ds = Dataset::load(&artifacts.join("data").join(ds_name), "test")?;
+    let macs = pann::experiments::qat::num_macs(model) as f64;
+    let header = format!("serving {model} over {ds_name} (PJRT, 1 worker)");
+    run_phases(srv, &ds, macs, &header)
+}
+
+/// Worker-pool serving of the built-in reference CNN: one
+/// `Arc<ExecutionPlan>` per operating point, shared by every worker.
+fn serve_native_pool() -> anyhow::Result<()> {
+    let mut model = Model::reference_cnn(5);
+    let ds = Dataset::from_synth(pann::data::synth::digits(512, 6));
+    let stats = batch_tensor(&ds, 0, 64);
+    model.record_act_stats(&stats)?;
+
+    let mut points = Vec::new();
+    for (bits, bx, r) in [(2u32, 6u32, 10.0 / 6.0 - 0.5), (4, 7, 24.0 / 7.0 - 0.5), (8, 8, 7.5)] {
+        let qm = QuantizedModel::prepare(
+            &model,
+            QuantConfig::pann(bx, r, ActQuantMethod::BnStats),
+            None,
+        )?;
+        let gf = pann::power::model::mac_power_unsigned_total(bits) * qm.macs_per_sample as f64 / 1e9;
+        eprintln!("  compiled pann-p{bits} ({gf:.5} Gflips/sample)");
+        points.push(SharedPoint {
+            name: format!("pann-p{bits}"),
+            giga_flips_per_sample: gf,
+            engine: Arc::new(PlanEngine::new(qm.plan(), vec![1, 16, 16])),
+        });
+    }
+    let n_workers = pann::nn::eval::n_threads();
+    let srv = Server::start_pool(
+        points,
+        256,
+        ServerConfig {
+            max_batch: 16,
+            max_wait: Duration::from_millis(1),
+            budget_gflips: f64::INFINITY,
+        },
+        n_workers,
+    )?;
+    let macs = model.num_macs() as f64;
+    let header = format!("serving ref-cnn over synth digits (native pool, {n_workers} workers)");
+    run_phases(srv, &ds, macs, &header)
+}
+
+/// Replay the test set through three budget phases and report.
+fn run_phases(srv: Server, ds: &Dataset, macs: f64, header: &str) -> anyhow::Result<()> {
+    let h = srv.handle();
+    let n_phase = 256.min(ds.len());
+    // Three budget phases: unlimited, generous (8-bit PANN budget),
+    // tight (2-bit budget). The menu never reloads — only the (b̃x, R)
+    // operating point changes, the paper's deployment claim.
+    let phases = [
+        ("unlimited", f64::INFINITY),
+        ("8-bit budget", 64.0 * macs / 1e9),
+        ("2-bit budget", 10.0 * macs / 1e9),
+    ];
+    println!("\n{header}, {n_phase} requests per phase");
+    let clients = 4usize;
+    for (label, budget) in phases {
+        h.set_budget(budget);
+        let t0 = std::time::Instant::now();
+        std::thread::scope(|s| -> anyhow::Result<()> {
+            let mut js = Vec::new();
+            for c in 0..clients {
+                let h = h.clone();
+                js.push(s.spawn(move || -> anyhow::Result<(usize, String)> {
+                    let mut ok = 0;
+                    let mut point = String::new();
+                    for i in (c..n_phase).step_by(clients) {
+                        let r = h.infer(ds.sample(i).to_vec())?;
+                        let pred = r
+                            .output
+                            .iter()
+                            .enumerate()
+                            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                            .map(|(j, _)| j)
+                            .unwrap_or(0);
+                        if pred == ds.y[i] as usize {
+                            ok += 1;
+                        }
+                        point = r.point;
+                    }
+                    Ok((ok, point))
+                }));
+            }
+            let mut total = 0;
+            let mut point = String::new();
+            for j in js {
+                let (ok, p) = j.join().expect("client panicked")?;
+                total += ok;
+                point = p;
+            }
+            println!(
+                "  phase {label:<14} -> point {point:<10} accuracy {:.3}  ({:.2}s)",
+                total as f64 / n_phase as f64,
+                t0.elapsed().as_secs_f64()
+            );
+            Ok(())
+        })?;
+    }
+    println!("\n{}", h.metrics().report());
+    srv.shutdown();
+    Ok(())
+}

@@ -11,7 +11,8 @@
 //!
 //! Components: [`policy`] (budget → operating point), [`batcher`]
 //! (size/deadline batching), [`metrics`] (latency/energy accounting),
-//! [`server`] (worker thread + handle).
+//! [`server`] (single worker for `!Send` PJRT engines, or a worker
+//! *pool* sharing `Arc<ExecutionPlan>`-backed operating points).
 
 pub mod batcher;
 pub mod metrics;
@@ -19,5 +20,7 @@ pub mod policy;
 pub mod server;
 
 pub use metrics::MetricsSnapshot;
-pub use policy::{EnginePoint, PowerPolicy};
-pub use server::{Engine, Server, ServerConfig, ServerHandle};
+pub use policy::{Costed, EnginePoint, PowerPolicy};
+pub use server::{
+    BatchEngine, Engine, NativeEngine, PlanEngine, Server, ServerConfig, ServerHandle, SharedPoint,
+};

@@ -5,10 +5,22 @@
 //! picks the most expensive point that fits the budget. fp32 is
 //! modeled as unbounded cost: it is chosen only when the budget is
 //! infinite (no power cap).
+//!
+//! The policy is generic over the point representation: the
+//! single-worker server selects among [`EnginePoint`]s (boxed, possibly
+//! `!Send` engines such as PJRT executables), the worker pool among
+//! [`super::server::SharedPoint`]s (`Arc`-shared plan-backed engines).
 
 use super::server::Engine;
 
-/// One selectable operating point.
+/// Anything with a name and an energy cost the policy can rank.
+pub trait Costed {
+    fn point_name(&self) -> &str;
+    /// Energy per sample in Giga bit flips; `f64::INFINITY` for fp32.
+    fn cost_gflips(&self) -> f64;
+}
+
+/// One selectable operating point owning a boxed engine.
 pub struct EnginePoint {
     pub name: String,
     /// Energy per sample in Giga bit flips; `f64::INFINITY` for fp32.
@@ -16,21 +28,26 @@ pub struct EnginePoint {
     pub engine: Box<dyn Engine>,
 }
 
-/// The selection policy over a menu of points.
-pub struct PowerPolicy {
-    /// Sorted ascending by energy.
-    points: Vec<EnginePoint>,
+impl Costed for EnginePoint {
+    fn point_name(&self) -> &str {
+        &self.name
+    }
+    fn cost_gflips(&self) -> f64 {
+        self.giga_flips_per_sample
+    }
 }
 
-impl PowerPolicy {
+/// The selection policy over a menu of points.
+pub struct PowerPolicy<P: Costed = EnginePoint> {
+    /// Sorted ascending by energy.
+    points: Vec<P>,
+}
+
+impl<P: Costed> PowerPolicy<P> {
     /// Build from an unsorted menu. Panics on an empty menu.
-    pub fn new(mut points: Vec<EnginePoint>) -> Self {
+    pub fn new(mut points: Vec<P>) -> Self {
         assert!(!points.is_empty(), "empty operating-point menu");
-        points.sort_by(|a, b| {
-            a.giga_flips_per_sample
-                .partial_cmp(&b.giga_flips_per_sample)
-                .unwrap()
-        });
+        points.sort_by(|a, b| a.cost_gflips().partial_cmp(&b.cost_gflips()).unwrap());
         PowerPolicy { points }
     }
 
@@ -47,7 +64,7 @@ impl PowerPolicy {
     pub fn select(&self, budget_gflips: f64) -> usize {
         let mut best = 0;
         for (i, p) in self.points.iter().enumerate() {
-            if p.giga_flips_per_sample <= budget_gflips {
+            if p.cost_gflips() <= budget_gflips {
                 best = i;
             } else {
                 break;
@@ -56,11 +73,11 @@ impl PowerPolicy {
         best
     }
 
-    pub fn point(&self, idx: usize) -> &EnginePoint {
+    pub fn point(&self, idx: usize) -> &P {
         &self.points[idx]
     }
 
-    pub fn point_mut(&mut self, idx: usize) -> &mut EnginePoint {
+    pub fn point_mut(&mut self, idx: usize) -> &mut P {
         &mut self.points[idx]
     }
 
@@ -68,7 +85,7 @@ impl PowerPolicy {
     pub fn menu(&self) -> Vec<(String, f64)> {
         self.points
             .iter()
-            .map(|p| (p.name.clone(), p.giga_flips_per_sample))
+            .map(|p| (p.point_name().to_string(), p.cost_gflips()))
             .collect()
     }
 }

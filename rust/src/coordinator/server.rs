@@ -1,21 +1,32 @@
-//! The serving loop: a worker thread that owns the operating-point
-//! menu, batches requests, selects the point for the current power
-//! budget, executes, and responds.
+//! The serving loop(s).
+//!
+//! Two execution models share one client [`ServerHandle`]:
+//!
+//! - [`Server::start`] — the seed's single worker thread owning a menu
+//!   of boxed [`Engine`]s. Still required for engines that are not
+//!   `Send` (PJRT executables must be constructed *inside* the worker
+//!   via the factory and never cross a thread boundary).
+//! - [`Server::start_pool`] — N workers sharing one request queue and
+//!   one immutable menu of [`SharedPoint`]s. Because a compiled
+//!   [`ExecutionPlan`] is `Send + Sync`, every worker serves every
+//!   operating point through the same `Arc`, with its own reusable
+//!   [`Scratch`] arena — "plan once, execute many, everywhere".
 
 use super::metrics::{Metrics, MetricsSnapshot};
-use super::policy::{EnginePoint, PowerPolicy};
+use super::policy::{Costed, EnginePoint, PowerPolicy};
+use crate::nn::{ExecutionPlan, Scratch, Tensor};
 use anyhow::Result;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// An inference backend behind one operating point — either a PJRT
 /// executable ([`crate::runtime::LoadedModel`]) or the native integer
-/// engine ([`crate::nn::QuantizedModel`]).
+/// engine.
 ///
-/// PJRT handles are not `Send`, so engines are constructed *inside*
-/// the worker thread via the factory passed to [`Server::start`] and
-/// never cross a thread boundary afterwards.
+/// PJRT handles are not `Send`, so these engines are constructed
+/// *inside* the worker thread via the factory passed to
+/// [`Server::start`] and never cross a thread boundary afterwards.
 pub trait Engine {
     /// Largest batch one call may carry.
     fn max_batch(&self) -> usize;
@@ -38,10 +49,82 @@ impl Engine for crate::runtime::LoadedModel {
     }
 }
 
-/// Native-engine adapter (serves without PJRT artifacts).
-pub struct NativeEngine {
-    pub qm: crate::nn::QuantizedModel,
+/// A thread-safe batch engine for the worker pool: stateless `infer`
+/// against shared immutable state, with caller-owned scratch.
+pub trait BatchEngine: Send + Sync {
+    /// Largest batch one call may carry.
+    fn max_batch(&self) -> usize;
+    /// Flattened per-sample input length.
+    fn sample_len(&self) -> usize;
+    /// Run `n` samples using the worker's scratch arena.
+    fn infer_batch(&self, x: &[f32], n: usize, scratch: &mut Scratch) -> Result<Vec<f32>>;
+}
+
+/// One pool operating point: an `Arc`-shared batch engine plus its
+/// energy cost.
+pub struct SharedPoint {
+    pub name: String,
+    /// Energy per sample in Giga bit flips; `f64::INFINITY` for fp32.
+    pub giga_flips_per_sample: f64,
+    pub engine: Arc<dyn BatchEngine>,
+}
+
+impl Costed for SharedPoint {
+    fn point_name(&self) -> &str {
+        &self.name
+    }
+    fn cost_gflips(&self) -> f64 {
+        self.giga_flips_per_sample
+    }
+}
+
+/// Batch engine over a compiled [`ExecutionPlan`] — the native path of
+/// the worker pool. GEMM-internal threading stays at 1: the pool
+/// parallelizes across requests, not inside them.
+pub struct PlanEngine {
+    pub plan: Arc<ExecutionPlan>,
     pub sample_shape: Vec<usize>,
+    pub max_batch: usize,
+}
+
+impl PlanEngine {
+    pub fn new(plan: Arc<ExecutionPlan>, sample_shape: Vec<usize>) -> PlanEngine {
+        PlanEngine { plan, sample_shape, max_batch: 64 }
+    }
+}
+
+impl BatchEngine for PlanEngine {
+    fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+    fn sample_len(&self) -> usize {
+        self.sample_shape.iter().product()
+    }
+    fn infer_batch(&self, x: &[f32], n: usize, scratch: &mut Scratch) -> Result<Vec<f32>> {
+        let mut shape = vec![n];
+        shape.extend_from_slice(&self.sample_shape);
+        let t = Tensor::new(shape, x.to_vec())?;
+        let mut meter = self.plan.new_meter();
+        Ok(self.plan.forward_batch(&t, scratch, &mut meter, 1)?.data)
+    }
+}
+
+/// Native-engine adapter for the single-worker server (serves without
+/// PJRT artifacts). Owns its scratch arena, reused across requests.
+pub struct NativeEngine {
+    plan: Arc<ExecutionPlan>,
+    sample_shape: Vec<usize>,
+    scratch: Scratch,
+}
+
+impl NativeEngine {
+    pub fn new(qm: &crate::nn::QuantizedModel, sample_shape: Vec<usize>) -> NativeEngine {
+        NativeEngine { plan: qm.plan(), sample_shape, scratch: Scratch::new() }
+    }
+
+    pub fn from_plan(plan: Arc<ExecutionPlan>, sample_shape: Vec<usize>) -> NativeEngine {
+        NativeEngine { plan, sample_shape, scratch: Scratch::new() }
+    }
 }
 
 impl Engine for NativeEngine {
@@ -54,9 +137,14 @@ impl Engine for NativeEngine {
     fn infer(&mut self, x: &[f32], n: usize) -> Result<Vec<f32>> {
         let mut shape = vec![n];
         shape.extend_from_slice(&self.sample_shape);
-        let t = crate::nn::Tensor::new(shape, x.to_vec())?;
-        let mut meter = self.qm.new_meter();
-        Ok(self.qm.forward(&t, &mut meter)?.data)
+        let t = Tensor::new(shape, x.to_vec())?;
+        let mut meter = self.plan.new_meter();
+        // single-worker server: the GEMMs may use the full thread budget
+        let threads = crate::nn::eval::n_threads();
+        Ok(self
+            .plan
+            .forward_batch(&t, &mut self.scratch, &mut meter, threads)?
+            .data)
     }
 }
 
@@ -89,7 +177,8 @@ struct Request {
 enum Msg {
     Req(Request),
     /// Graceful stop (cloned handles may outlive the server, so a
-    /// sender-disconnect alone cannot signal shutdown).
+    /// sender-disconnect alone cannot signal shutdown). One `Stop`
+    /// terminates exactly one worker.
     Stop,
 }
 
@@ -174,16 +263,17 @@ impl ServerHandle {
     }
 }
 
-/// The server: spawns the worker thread.
+/// The server: one or more worker threads behind a [`ServerHandle`].
 pub struct Server {
     handle: ServerHandle,
-    worker: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl Server {
-    /// Start serving. `factory` builds the operating-point menu on the
-    /// worker thread (PJRT executables are not `Send`); `sample_len`
-    /// is the flattened per-sample input length the menu expects.
+    /// Start the single-worker server. `factory` builds the
+    /// operating-point menu on the worker thread (PJRT executables are
+    /// not `Send`); `sample_len` is the flattened per-sample input
+    /// length the menu expects.
     pub fn start<F>(factory: F, sample_len: usize, config: ServerConfig) -> Result<Server>
     where
         F: FnOnce() -> Result<Vec<EnginePoint>> + Send + 'static,
@@ -230,33 +320,95 @@ impl Server {
         ready_rx
             .recv()
             .map_err(|_| anyhow::anyhow!("server worker died during startup"))??;
-        Ok(Server { handle, worker: Some(worker) })
+        Ok(Server { handle, workers: vec![worker] })
+    }
+
+    /// Start a pool of `n_workers` threads over one shared menu. All
+    /// workers serve all points; batching, point selection and budget
+    /// traversal behave exactly as in the single-worker server, but
+    /// batches execute concurrently.
+    pub fn start_pool(
+        points: Vec<SharedPoint>,
+        sample_len: usize,
+        config: ServerConfig,
+        n_workers: usize,
+    ) -> Result<Server> {
+        anyhow::ensure!(!points.is_empty(), "empty operating-point menu");
+        let n_workers = n_workers.max(1);
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let rx = Arc::new(Mutex::new(rx));
+        let budget_bits = Arc::new(AtomicU64::new(config.budget_gflips.to_bits()));
+        let metrics = Arc::new(Metrics::new());
+        let policy = Arc::new(PowerPolicy::new(points));
+        let handle = ServerHandle {
+            tx,
+            budget_bits: budget_bits.clone(),
+            metrics: metrics.clone(),
+            sample_len,
+        };
+        let mut workers = Vec::with_capacity(n_workers);
+        for _ in 0..n_workers {
+            let rx = rx.clone();
+            let policy = policy.clone();
+            let metrics = metrics.clone();
+            let budget_bits = budget_bits.clone();
+            workers.push(std::thread::spawn(move || {
+                let mut scratch = Scratch::new();
+                loop {
+                    // hold the queue lock only while batching; execution
+                    // below runs in parallel across workers
+                    let collected = {
+                        let guard = rx.lock().expect("pool queue poisoned");
+                        collect_requests(&guard, config.max_batch, config.max_wait)
+                    };
+                    let Some((batch, stop)) = collected else { break };
+                    let budget = f64::from_bits(budget_bits.load(Ordering::Relaxed));
+                    let point = policy.point(policy.select(budget));
+                    serve_batch_shared(point, batch, &metrics, &mut scratch);
+                    if stop {
+                        break;
+                    }
+                }
+            }));
+        }
+        Ok(Server { handle, workers })
     }
 
     pub fn handle(&self) -> ServerHandle {
         self.handle.clone()
     }
 
-    /// Stop the worker (requests already queued before the stop are
+    /// Number of worker threads.
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Stop all workers (requests already queued before the stops are
     /// drained; cloned handles then observe send errors).
     pub fn shutdown(mut self) {
-        let _ = self.handle.tx.send(Msg::Stop);
-        if let Some(w) = self.worker.take() {
+        for _ in 0..self.workers.len() {
+            let _ = self.handle.tx.send(Msg::Stop);
+        }
+        for w in self.workers.drain(..) {
             let _ = w.join();
         }
     }
 }
 
-fn serve_batch(
-    point: &mut EnginePoint,
+/// Respond to one collected batch, splitting it across engine calls of
+/// at most `max_b` samples. `infer` runs one sub-batch.
+fn respond_batch<F>(
     name: &str,
     gf_per_sample: f64,
+    sample_len: usize,
+    max_b: usize,
     batch: Vec<Request>,
     metrics: &Metrics,
-) {
-    let eng = point.engine.as_mut();
-    let sample_len = eng.sample_len();
-    let max_b = eng.max_batch().max(1);
+    mut infer: F,
+) where
+    F: FnMut(&[f32], usize) -> Result<Vec<f32>>,
+{
+    let max_b = max_b.max(1);
     let mut start = 0;
     while start < batch.len() {
         let n = (batch.len() - start).min(max_b);
@@ -265,7 +417,7 @@ fn serve_batch(
         for r in chunk {
             flat.extend_from_slice(&r.input);
         }
-        match eng.infer(&flat, n) {
+        match infer(&flat, n) {
             Ok(out) => {
                 let ol = out.len() / n;
                 let lats: Vec<f64> = chunk
@@ -298,6 +450,39 @@ fn serve_batch(
     }
 }
 
+fn serve_batch(
+    point: &mut EnginePoint,
+    name: &str,
+    gf_per_sample: f64,
+    batch: Vec<Request>,
+    metrics: &Metrics,
+) {
+    let eng = point.engine.as_mut();
+    let sample_len = eng.sample_len();
+    let max_b = eng.max_batch();
+    respond_batch(name, gf_per_sample, sample_len, max_b, batch, metrics, |x, n| {
+        eng.infer(x, n)
+    });
+}
+
+fn serve_batch_shared(
+    point: &SharedPoint,
+    batch: Vec<Request>,
+    metrics: &Metrics,
+    scratch: &mut Scratch,
+) {
+    let eng = point.engine.as_ref();
+    respond_batch(
+        &point.name,
+        point.giga_flips_per_sample,
+        eng.sample_len(),
+        eng.max_batch(),
+        batch,
+        metrics,
+        |x, n| eng.infer_batch(x, n, scratch),
+    );
+}
+
 /// Mock engines for unit tests.
 #[cfg(test)]
 pub(crate) mod tests_support {
@@ -314,6 +499,17 @@ pub(crate) mod tests_support {
         pub fn new(max_b: usize, in_len: usize, out_len: usize) -> Self {
             MockEngine { max_b, in_len, out_len }
         }
+
+        fn compute(&self, x: &[f32], n: usize) -> Vec<f32> {
+            let mut out = Vec::with_capacity(n * self.out_len);
+            for i in 0..n {
+                let s: f32 = x[i * self.in_len..(i + 1) * self.in_len].iter().sum();
+                for j in 0..self.out_len {
+                    out.push(s + j as f32);
+                }
+            }
+            out
+        }
     }
 
     impl Engine for MockEngine {
@@ -324,14 +520,19 @@ pub(crate) mod tests_support {
             self.in_len
         }
         fn infer(&mut self, x: &[f32], n: usize) -> Result<Vec<f32>> {
-            let mut out = Vec::with_capacity(n * self.out_len);
-            for i in 0..n {
-                let s: f32 = x[i * self.in_len..(i + 1) * self.in_len].iter().sum();
-                for j in 0..self.out_len {
-                    out.push(s + j as f32);
-                }
-            }
-            Ok(out)
+            Ok(self.compute(x, n))
+        }
+    }
+
+    impl BatchEngine for MockEngine {
+        fn max_batch(&self) -> usize {
+            self.max_b
+        }
+        fn sample_len(&self) -> usize {
+            self.in_len
+        }
+        fn infer_batch(&self, x: &[f32], n: usize, _scratch: &mut Scratch) -> Result<Vec<f32>> {
+            Ok(self.compute(x, n))
         }
     }
 }
@@ -352,6 +553,21 @@ mod tests {
                 name: "rich".into(),
                 giga_flips_per_sample: 0.9,
                 engine: Box::new(MockEngine::new(4, 3, 2)),
+            },
+        ]
+    }
+
+    fn shared_points() -> Vec<SharedPoint> {
+        vec![
+            SharedPoint {
+                name: "cheap".into(),
+                giga_flips_per_sample: 0.1,
+                engine: Arc::new(MockEngine::new(4, 3, 2)),
+            },
+            SharedPoint {
+                name: "rich".into(),
+                giga_flips_per_sample: 0.9,
+                engine: Arc::new(MockEngine::new(4, 3, 2)),
             },
         ]
     }
@@ -440,5 +656,70 @@ mod tests {
             assert_eq!(rx.recv().unwrap().output[0], i as f32);
         }
         srv.shutdown();
+    }
+
+    #[test]
+    fn pool_serves_and_responds() {
+        let srv = Server::start_pool(shared_points(), 3, ServerConfig {
+            budget_gflips: 1.0,
+            ..Default::default()
+        }, 4)
+        .unwrap();
+        assert_eq!(srv.n_workers(), 4);
+        let h = srv.handle();
+        let r = h.infer(vec![1.0, 2.0, 3.0]).unwrap();
+        assert_eq!(r.output, vec![6.0, 7.0]);
+        assert_eq!(r.point, "rich");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn pool_budget_traversal_switches_point() {
+        let srv = Server::start_pool(shared_points(), 3, ServerConfig {
+            budget_gflips: 1.0,
+            ..Default::default()
+        }, 3)
+        .unwrap();
+        let h = srv.handle();
+        assert_eq!(h.infer(vec![0.0; 3]).unwrap().point, "rich");
+        h.set_budget(0.2);
+        assert_eq!(h.infer(vec![0.0; 3]).unwrap().point, "cheap");
+        h.set_budget(5.0);
+        assert_eq!(h.infer(vec![0.0; 3]).unwrap().point, "rich");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn pool_concurrent_clients_all_served() {
+        let srv = Server::start_pool(shared_points(), 3, ServerConfig::default(), 4).unwrap();
+        let h = srv.handle();
+        let mut joins = Vec::new();
+        for t in 0..8 {
+            let h = h.clone();
+            joins.push(std::thread::spawn(move || {
+                let mut ok = 0;
+                for i in 0..25 {
+                    let v = (t * 100 + i) as f32;
+                    let r = h.infer(vec![v, 0.0, 0.0]).unwrap();
+                    assert_eq!(r.output[0], v);
+                    ok += 1;
+                }
+                ok
+            }));
+        }
+        let total: usize = joins.into_iter().map(|j| j.join().unwrap()).sum();
+        assert_eq!(total, 200);
+        let m = h.metrics();
+        assert_eq!(m.requests, 200);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn pool_shutdown_stops_every_worker() {
+        let srv = Server::start_pool(shared_points(), 3, ServerConfig::default(), 5).unwrap();
+        let h = srv.handle();
+        let _ = h.infer(vec![0.0; 3]).unwrap();
+        srv.shutdown(); // joins all 5 workers; hangs here if a Stop is lost
+        assert!(h.submit(vec![0.0; 3]).is_err() || h.submit(vec![0.0; 3]).unwrap().recv().is_err());
     }
 }

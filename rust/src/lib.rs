@@ -17,14 +17,21 @@
 //!   PANN weight quantizer of Eq. (12), plus the MSE theory of Sec. 5.3.
 //! - [`nn`] — an integer inference engine (conv/linear/pool/bn) that can
 //!   execute a model in fp32, signed-quantized, unsigned-split and PANN
-//!   modes while metering the exact number of bit flips per layer.
+//!   modes while metering the exact number of bit flips per layer. The
+//!   engine is a plan/exec split: [`nn::plan::ExecutionPlan`] compiles a
+//!   model + config once (weight banks, kernel selection, scratch
+//!   geometry; `Send + Sync`), [`nn::exec`] executes whole batches
+//!   through cache-blocked, row-parallel GEMM kernels with reusable
+//!   per-thread [`nn::Scratch`] arenas.
 //! - [`pann`] — the headline contribution: converting a pre-trained
 //!   model to unsigned arithmetic (Sec. 4), removing the multiplier
 //!   (Sec. 5), and Algorithm 1 for choosing the operating point.
 //! - [`runtime`] — PJRT execution of AOT-lowered JAX/Pallas artifacts
-//!   (HLO text) produced by `python/compile/aot.py`.
+//!   (HLO text) produced by `python/compile/aot.py` (behind the `pjrt`
+//!   feature; the default build uses an API-identical stub).
 //! - [`coordinator`] — a power-budget-aware serving runtime: dynamic
-//!   batching, operating-point selection, runtime budget traversal.
+//!   batching, operating-point selection, runtime budget traversal,
+//!   and a worker pool that serves shared `Arc<ExecutionPlan>` menus.
 //! - [`experiments`] — one driver per table/figure of the paper.
 //!
 //! Power is reported in **bit flips**, exactly as in the paper

@@ -85,15 +85,24 @@ pub fn eval_fp32(model: &Model, ds: &Dataset) -> Result<EvalResult> {
 }
 
 /// Quantized accuracy + power over a dataset.
+///
+/// Parallelism lives *above* the engine here: each worker thread gets
+/// one contiguous dataset chunk, compiles nothing (the shared
+/// [`crate::nn::ExecutionPlan`] is read-only) and runs its chunk as a
+/// single batched forward with a thread-local scratch arena and
+/// `threads = 1` inside the GEMMs (no nested thread explosion).
 pub fn eval_quantized(qm: &QuantizedModel, ds: &Dataset) -> Result<EvalResult> {
+    let plan = qm.plan();
     let chunks = split(ds.len(), n_threads());
     let (correct, flips) = std::thread::scope(|s| -> Result<(usize, f64)> {
         let mut handles = Vec::new();
         for (start, len) in chunks {
+            let plan = &plan;
             handles.push(s.spawn(move || -> Result<(usize, f64)> {
                 let x = batch_tensor(ds, start, len);
-                let mut meter = qm.new_meter();
-                let y = qm.forward(&x, &mut meter)?;
+                let mut scratch = crate::nn::Scratch::for_plan(plan, len);
+                let mut meter = plan.new_meter();
+                let y = plan.forward_batch(&x, &mut scratch, &mut meter, 1)?;
                 let classes = y.sample_len();
                 let mut c = 0;
                 for i in 0..len {

@@ -1,0 +1,304 @@
+//! Execute-time machinery for a compiled [`ExecutionPlan`]: a reusable
+//! per-thread [`Scratch`] arena and the batched integer forward pass.
+//!
+//! The executor runs im2col over the **whole batch** into one slab and
+//! issues a single `m = n·oh·ow` GEMM per conv node (instead of `n`
+//! separate `m = oh·ow` GEMMs), through the cache-blocked, optionally
+//! row-parallel kernels of [`super::gemm`]. All buffers live in the
+//! caller-owned [`Scratch`], so a serving worker allocates once and
+//! reuses across requests — the seed engine freshly `Vec`-allocated
+//! every buffer inside every layer call.
+//!
+//! Bit-exactness: integer addition is associative, so batching,
+//! blocking and row-parallelism all produce bit-identical accumulators
+//! (the narrow kernels combine partial sums with the same wrapping
+//! i32 arithmetic as their scalar references).
+
+use super::gemm;
+use super::layers::Op;
+use super::plan::{ActQ, ExecutionPlan, GemmKernel, PlannedMac};
+use super::power_meter::PowerMeter;
+use super::quantized::Arithmetic;
+use super::tensor::Tensor;
+use crate::quant::ruq;
+use anyhow::{bail, Context, Result};
+
+/// Reusable per-thread scratch buffers for plan execution.
+///
+/// Create one per worker thread (cheap when empty — buffers grow on
+/// first use and are reused afterwards). Not shared between threads;
+/// the *plan* is the shared immutable half.
+#[derive(Default)]
+pub struct Scratch {
+    /// f32 im2col columns of one sample.
+    cols_f: Vec<f32>,
+    /// Quantized activation codes for the whole batch (`m × k`).
+    cols_q: Vec<i32>,
+    /// Integer accumulators for the whole batch (`m × out`).
+    acc: Vec<i64>,
+}
+
+impl Scratch {
+    pub fn new() -> Scratch {
+        Scratch::default()
+    }
+
+    /// Pre-reserve for running `plan` at batch size `n` (optional —
+    /// buffers also grow on demand).
+    pub fn for_plan(plan: &ExecutionPlan, n: usize) -> Scratch {
+        let (cols, acc) = plan.scratch_hint(n);
+        Scratch {
+            cols_f: Vec::with_capacity(plan.max_cols_per_sample),
+            cols_q: Vec::with_capacity(cols),
+            acc: Vec::with_capacity(acc),
+        }
+    }
+
+    /// Bytes currently held (for reports).
+    pub fn bytes(&self) -> usize {
+        self.cols_f.capacity() * 4 + self.cols_q.capacity() * 4 + self.acc.capacity() * 8
+    }
+}
+
+impl ExecutionPlan {
+    /// Quantized forward over a batch, metering power into `meter`.
+    ///
+    /// `threads` bounds the row-parallelism of the GEMM hot path
+    /// (1 = fully single-threaded, for callers that already
+    /// parallelize above the engine, e.g. the dataset eval loops and
+    /// the serving worker pool).
+    pub fn forward_batch(
+        &self,
+        x: &Tensor,
+        scratch: &mut Scratch,
+        meter: &mut PowerMeter,
+        threads: usize,
+    ) -> Result<Tensor> {
+        let mut outs: Vec<Tensor> = Vec::with_capacity(self.model.nodes.len());
+        for (i, node) in self.model.nodes.iter().enumerate() {
+            let input = if node.input < 0 { x } else { &outs[node.input as usize] };
+            let y = match &self.steps[i] {
+                Some(p) => self
+                    .forward_mac(p, input, scratch, meter, threads)
+                    .with_context(|| format!("node {i}"))?,
+                None => {
+                    let rhs = match node.op {
+                        Op::Add { rhs } => Some(&outs[rhs]),
+                        _ => None,
+                    };
+                    super::layers::forward_f32(&node.op, input, rhs)
+                        .with_context(|| format!("node {i}"))?
+                }
+            };
+            outs.push(y);
+        }
+        Ok(outs.pop().expect("non-empty model"))
+    }
+
+    /// One MAC node over the whole batch.
+    fn forward_mac(
+        &self,
+        p: &PlannedMac,
+        x: &Tensor,
+        scratch: &mut Scratch,
+        meter: &mut PowerMeter,
+        threads: usize,
+    ) -> Result<Tensor> {
+        let n = x.batch();
+        // activation quantizer (dynamic fits on the live batch)
+        let qx = match &p.act {
+            ActQ::Fixed(q) => *q,
+            ActQ::Dynamic => ruq::fit_unsigned(&x.data, self.config.bx),
+        };
+        let deq = p.weights.scale * qx.scale;
+        let out = if let Some((ci, kh, kw, stride, pad, co)) = p.conv {
+            let (h, w) = match x.shape.as_slice() {
+                [_, c, h, w] if *c == ci => (*h, *w),
+                other => bail!("conv input shape {other:?}"),
+            };
+            let (oh, ow) = gemm::conv_out_size(h, w, kh, kw, stride, pad);
+            let k = ci * kh * kw;
+            let spatial = oh * ow;
+            let m = n * spatial;
+            // whole-batch im2col + quantization into one slab. Only
+            // growth zero-fills: every element is overwritten below
+            // (im2col sizes cols_f to exactly spatial·k), and the
+            // blocked kernels zero their own accumulators.
+            scratch.cols_q.resize(m * k, 0);
+            for s in 0..n {
+                gemm::im2col(x.sample(s), ci, h, w, kh, kw, stride, pad, &mut scratch.cols_f);
+                let dst = &mut scratch.cols_q[s * spatial * k..(s + 1) * spatial * k];
+                for (d, &v) in dst.iter_mut().zip(scratch.cols_f.iter()) {
+                    *d = qx.quantize(v) as i32;
+                }
+            }
+            scratch.acc.resize(m * co, 0);
+            run_gemm(p, &scratch.cols_q, &mut scratch.acc, m, co, k, threads);
+            // scatter accumulators back to NCHW
+            let mut out = Tensor::zeros(vec![n, co, oh, ow]);
+            for s in 0..n {
+                let acc_s = &scratch.acc[s * spatial * co..(s + 1) * spatial * co];
+                let dst = &mut out.data[s * co * spatial..(s + 1) * co * spatial];
+                for pix in 0..spatial {
+                    for o in 0..co {
+                        dst[o * spatial + pix] = acc_s[pix * co + o] as f32 * deq + p.bias[o];
+                    }
+                }
+            }
+            out
+        } else {
+            let (out_d, k) = p.linear.unwrap();
+            if x.sample_len() != k {
+                bail!("linear input {} != {k}", x.sample_len());
+            }
+            scratch.cols_q.clear();
+            scratch.cols_q.reserve(n * k);
+            scratch
+                .cols_q
+                .extend(x.data.iter().map(|&v| qx.quantize(v) as i32));
+            scratch.acc.resize(n * out_d, 0);
+            run_gemm(p, &scratch.cols_q, &mut scratch.acc, n, out_d, k, threads);
+            let mut out = Tensor::zeros(vec![n, out_d]);
+            for i in 0..n {
+                for o in 0..out_d {
+                    out.data[i * out_d + o] = scratch.acc[i * out_d + o] as f32 * deq + p.bias[o];
+                }
+            }
+            out
+        };
+        // --- power accounting ---
+        // out elements per sample (co·oh·ow for conv, out_d for linear),
+        // each the result of `depth` MACs, times the batch.
+        let macs = out.sample_len() as u64 * p.depth as u64 * n as u64;
+        match self.config.arithmetic {
+            Arithmetic::Pann => {
+                meter.record_pann(p.meter, macs, p.weights.adds_per_element, self.config.bx);
+                if self.config.count_readout_sub {
+                    // one B≈2b̃x-bit subtraction per output element (Eq. 6)
+                    meter.record_readout_sub(p.meter, out.len() as u64, 2 * self.config.bx);
+                }
+            }
+            _ => meter.record(p.meter, macs, p.flips_per_mac),
+        }
+        Ok(out)
+    }
+}
+
+/// Dispatch to the plan-selected blocked kernel.
+fn run_gemm(
+    p: &PlannedMac,
+    xq: &[i32],
+    acc: &mut [i64],
+    m: usize,
+    nd: usize,
+    k: usize,
+    threads: usize,
+) {
+    let w = &p.weights;
+    match p.kernel {
+        GemmKernel::Wide => gemm::gemm_i32_blocked(xq, &w.pos, acc, m, nd, k, threads),
+        GemmKernel::Narrow => gemm::gemm_i32_narrow_blocked(xq, &w.pos, acc, m, nd, k, threads),
+        GemmKernel::SplitWide => {
+            gemm::gemm_i32_split_blocked(xq, &w.pos, &w.neg, acc, m, nd, k, threads)
+        }
+        GemmKernel::SplitNarrow => {
+            gemm::gemm_i32_split_narrow_blocked(xq, &w.pos, &w.neg, acc, m, nd, k, threads)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::quantized::QuantConfig;
+    use crate::nn::Model;
+    use crate::quant::ActQuantMethod;
+    use crate::util::Rng;
+
+    fn test_input(n: usize, seed: u64) -> Tensor {
+        let mut r = Rng::new(seed);
+        let mut x = Tensor::zeros(vec![n, 1, 16, 16]);
+        x.data.iter_mut().for_each(|v| *v = r.f32());
+        x
+    }
+
+    /// The headline invariant: one batched forward == per-sample
+    /// forwards, bit-for-bit, in both logits and metered flips.
+    #[test]
+    fn batched_forward_matches_per_sample() {
+        for (name, cfg) in [
+            ("unsigned6", QuantConfig::unsigned_baseline(6, ActQuantMethod::BnStats)),
+            ("signed8", QuantConfig::signed_baseline(8, ActQuantMethod::BnStats)),
+            ("pann", QuantConfig::pann(6, 2.0, ActQuantMethod::BnStats)),
+        ] {
+            let mut model = Model::reference_cnn(50);
+            let x = test_input(6, 51);
+            model.record_act_stats(&x).unwrap();
+            let plan = ExecutionPlan::compile(&model, cfg, None).unwrap();
+
+            let mut scratch = Scratch::for_plan(&plan, 6);
+            let mut meter_b = plan.new_meter();
+            let batched = plan.forward_batch(&x, &mut scratch, &mut meter_b, 3).unwrap();
+
+            let mut meter_s = plan.new_meter();
+            let classes = batched.sample_len();
+            for s in 0..x.batch() {
+                let xs = Tensor::new(vec![1, 1, 16, 16], x.sample(s).to_vec()).unwrap();
+                let ys = plan.forward_batch(&xs, &mut scratch, &mut meter_s, 1).unwrap();
+                assert_eq!(
+                    ys.data,
+                    &batched.data[s * classes..(s + 1) * classes],
+                    "{name}: sample {s} logits diverge"
+                );
+            }
+            assert_eq!(meter_b.total_macs(), meter_s.total_macs(), "{name}: macs");
+            assert!(
+                (meter_b.total_flips() - meter_s.total_flips()).abs() < 1e-6,
+                "{name}: flips {} vs {}",
+                meter_b.total_flips(),
+                meter_s.total_flips()
+            );
+        }
+    }
+
+    #[test]
+    fn thread_count_does_not_change_results() {
+        let mut model = Model::reference_cnn(52);
+        let x = test_input(8, 53);
+        model.record_act_stats(&x).unwrap();
+        let plan = ExecutionPlan::compile(
+            &model,
+            QuantConfig::unsigned_baseline(5, ActQuantMethod::BnStats),
+            None,
+        )
+        .unwrap();
+        let mut scratch = Scratch::new();
+        let mut m1 = plan.new_meter();
+        let y1 = plan.forward_batch(&x, &mut scratch, &mut m1, 1).unwrap();
+        for t in [2, 3, 7] {
+            let mut mt = plan.new_meter();
+            let yt = plan.forward_batch(&x, &mut scratch, &mut mt, t).unwrap();
+            assert_eq!(y1.data, yt.data, "threads={t}");
+            assert_eq!(m1.total_macs(), mt.total_macs());
+            assert_eq!(m1.total_flips(), mt.total_flips());
+        }
+    }
+
+    #[test]
+    fn residual_model_runs_batched() {
+        let mut model = Model::reference_resnet(54);
+        let x = test_input(4, 55);
+        model.record_act_stats(&x).unwrap();
+        let plan = ExecutionPlan::compile(
+            &model,
+            QuantConfig::unsigned_baseline(5, ActQuantMethod::BnStats),
+            None,
+        )
+        .unwrap();
+        let mut scratch = Scratch::for_plan(&plan, 4);
+        let mut meter = plan.new_meter();
+        let y = plan.forward_batch(&x, &mut scratch, &mut meter, 2).unwrap();
+        assert_eq!(y.shape, vec![4, 10]);
+        assert!(meter.total_flips() > 0.0);
+    }
+}

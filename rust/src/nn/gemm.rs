@@ -173,6 +173,247 @@ pub fn gemm_i32_split_narrow(
     }
 }
 
+// ---------------------------------------------------------------------
+// Cache-blocked, row-parallel kernels.
+//
+// The four scalar kernels above are the bit-exact references; the
+// `*_blocked` variants tile the same arithmetic over m/n/k so the
+// weight panel stays in cache across the batch, and split the m rows
+// over `threads` scoped threads (each thread owns a disjoint slice of
+// `out`, so no synchronization is needed). Integer addition is
+// associative — wrapping i32 included — so any tiling/threading order
+// produces bit-identical results to the scalar reference.
+// ---------------------------------------------------------------------
+
+/// Rows per m tile inside one thread.
+const BLOCK_M: usize = 32;
+/// Columns (output features) per n tile.
+const BLOCK_N: usize = 64;
+/// Depth per k tile (i32 operands: 4 KiB per row tile).
+const BLOCK_K: usize = 1024;
+
+/// Split the `m` rows of `a`/`out` into up to `threads` contiguous
+/// chunks and run `f(a_rows, out_rows, rows)` on each, in parallel.
+fn par_rows<F>(a: &[i32], out: &mut [i64], m: usize, n: usize, k: usize, threads: usize, f: F)
+where
+    F: Fn(&[i32], &mut [i64], usize) + Sync,
+{
+    let t = threads.clamp(1, m.max(1));
+    if t <= 1 {
+        f(a, out, m);
+        return;
+    }
+    let base = m / t;
+    let rem = m % t;
+    std::thread::scope(|s| {
+        let fr = &f;
+        let mut a_rest = a;
+        let mut out_rest = out;
+        for i in 0..t {
+            let rows = base + usize::from(i < rem);
+            if rows == 0 {
+                continue;
+            }
+            let (a_chunk, a_tail) = a_rest.split_at(rows * k);
+            let (o_chunk, o_tail) = std::mem::take(&mut out_rest).split_at_mut(rows * n);
+            a_rest = a_tail;
+            out_rest = o_tail;
+            s.spawn(move || fr(a_chunk, o_chunk, rows));
+        }
+    });
+}
+
+/// Four-chain i64 dot product over equal-length i32 slices.
+#[inline]
+fn dot_i64(ar: &[i32], br: &[i32]) -> i64 {
+    let len = ar.len();
+    let (mut a0, mut a1, mut a2, mut a3) = (0i64, 0i64, 0i64, 0i64);
+    let chunks = len / 4 * 4;
+    let mut kk = 0;
+    while kk < chunks {
+        a0 += ar[kk] as i64 * br[kk] as i64;
+        a1 += ar[kk + 1] as i64 * br[kk + 1] as i64;
+        a2 += ar[kk + 2] as i64 * br[kk + 2] as i64;
+        a3 += ar[kk + 3] as i64 * br[kk + 3] as i64;
+        kk += 4;
+    }
+    let mut acc = (a0 + a1) + (a2 + a3);
+    for kk in chunks..len {
+        acc += ar[kk] as i64 * br[kk] as i64;
+    }
+    acc
+}
+
+/// Four-chain i64 dot against a split (pos − neg) bank.
+#[inline]
+fn dot_i64_split(ar: &[i32], pr: &[i32], nr: &[i32]) -> i64 {
+    let len = ar.len();
+    let (mut a0, mut a1, mut a2, mut a3) = (0i64, 0i64, 0i64, 0i64);
+    let chunks = len / 4 * 4;
+    let mut kk = 0;
+    while kk < chunks {
+        a0 += ar[kk] as i64 * (pr[kk] as i64 - nr[kk] as i64);
+        a1 += ar[kk + 1] as i64 * (pr[kk + 1] as i64 - nr[kk + 1] as i64);
+        a2 += ar[kk + 2] as i64 * (pr[kk + 2] as i64 - nr[kk + 2] as i64);
+        a3 += ar[kk + 3] as i64 * (pr[kk + 3] as i64 - nr[kk + 3] as i64);
+        kk += 4;
+    }
+    let mut acc = (a0 + a1) + (a2 + a3);
+    for kk in chunks..len {
+        acc += ar[kk] as i64 * (pr[kk] as i64 - nr[kk] as i64);
+    }
+    acc
+}
+
+/// Wrapping-i32 dot product (the narrow path's exact arithmetic).
+#[inline]
+fn dot_i32_wrapping(ar: &[i32], br: &[i32]) -> i32 {
+    ar.iter()
+        .zip(br)
+        .fold(0i32, |acc, (&a, &b)| acc.wrapping_add(a.wrapping_mul(b)))
+}
+
+/// Wrapping-i32 dot against a split (pos − neg) bank.
+#[inline]
+fn dot_i32_split_wrapping(ar: &[i32], pr: &[i32], nr: &[i32]) -> i32 {
+    ar.iter()
+        .zip(pr.iter().zip(nr))
+        .fold(0i32, |acc, (&a, (&p, &n))| acc.wrapping_add(a.wrapping_mul(p - n)))
+}
+
+/// Tile loop shared by all blocked variants. `partial` folds one
+/// (i, j, k-tile) contribution into `out[i·n + j]`.
+#[inline]
+fn block_rows<P>(a: &[i32], out: &mut [i64], rows: usize, n: usize, k: usize, partial: P)
+where
+    P: Fn(&[i32], usize, std::ops::Range<usize>, &mut [i64]),
+{
+    out.fill(0);
+    for ib in (0..rows).step_by(BLOCK_M) {
+        let iend = (ib + BLOCK_M).min(rows);
+        for kb in (0..k).step_by(BLOCK_K) {
+            let kend = (kb + BLOCK_K).min(k);
+            for jb in (0..n).step_by(BLOCK_N) {
+                let jend = (jb + BLOCK_N).min(n);
+                for i in ib..iend {
+                    let ar = &a[i * k + kb..i * k + kend];
+                    let or = &mut out[i * n..(i + 1) * n];
+                    partial(ar, kb, jb..jend, or);
+                }
+            }
+        }
+    }
+}
+
+/// Blocked, row-parallel [`gemm_i32`] (i64 accumulation). Bit-exact
+/// with the scalar reference for any `threads`.
+pub fn gemm_i32_blocked(
+    a: &[i32],
+    bt: &[i32],
+    out: &mut [i64],
+    m: usize,
+    n: usize,
+    k: usize,
+    threads: usize,
+) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(bt.len(), n * k);
+    assert_eq!(out.len(), m * n);
+    par_rows(a, out, m, n, k, threads, |ar, or, rows| {
+        block_rows(ar, or, rows, n, k, |arow, kb, js, orow| {
+            let kl = arow.len();
+            for j in js {
+                let br = &bt[j * k + kb..j * k + kb + kl];
+                orow[j] += dot_i64(arow, br);
+            }
+        });
+    });
+}
+
+/// Blocked, row-parallel [`gemm_i32_narrow`]. Partial sums combine
+/// with the same wrapping-i32 arithmetic as the scalar reference, so
+/// results are bit-exact even at the overflow boundary.
+pub fn gemm_i32_narrow_blocked(
+    a: &[i32],
+    bt: &[i32],
+    out: &mut [i64],
+    m: usize,
+    n: usize,
+    k: usize,
+    threads: usize,
+) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(bt.len(), n * k);
+    assert_eq!(out.len(), m * n);
+    par_rows(a, out, m, n, k, threads, |ar, or, rows| {
+        block_rows(ar, or, rows, n, k, |arow, kb, js, orow| {
+            let kl = arow.len();
+            for j in js {
+                let br = &bt[j * k + kb..j * k + kb + kl];
+                let prev = orow[j] as i32;
+                orow[j] = prev.wrapping_add(dot_i32_wrapping(arow, br)) as i64;
+            }
+        });
+    });
+}
+
+/// Blocked, row-parallel [`gemm_i32_split`].
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_i32_split_blocked(
+    a: &[i32],
+    pos_t: &[i32],
+    neg_t: &[i32],
+    out: &mut [i64],
+    m: usize,
+    n: usize,
+    k: usize,
+    threads: usize,
+) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(pos_t.len(), n * k);
+    assert_eq!(neg_t.len(), n * k);
+    assert_eq!(out.len(), m * n);
+    par_rows(a, out, m, n, k, threads, |ar, or, rows| {
+        block_rows(ar, or, rows, n, k, |arow, kb, js, orow| {
+            let kl = arow.len();
+            for j in js {
+                let pr = &pos_t[j * k + kb..j * k + kb + kl];
+                let nr = &neg_t[j * k + kb..j * k + kb + kl];
+                orow[j] += dot_i64_split(arow, pr, nr);
+            }
+        });
+    });
+}
+
+/// Blocked, row-parallel [`gemm_i32_split_narrow`].
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_i32_split_narrow_blocked(
+    a: &[i32],
+    pos_t: &[i32],
+    neg_t: &[i32],
+    out: &mut [i64],
+    m: usize,
+    n: usize,
+    k: usize,
+    threads: usize,
+) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(pos_t.len(), n * k);
+    assert_eq!(neg_t.len(), n * k);
+    assert_eq!(out.len(), m * n);
+    par_rows(a, out, m, n, k, threads, |ar, or, rows| {
+        block_rows(ar, or, rows, n, k, |arow, kb, js, orow| {
+            let kl = arow.len();
+            for j in js {
+                let pr = &pos_t[j * k + kb..j * k + kb + kl];
+                let nr = &neg_t[j * k + kb..j * k + kb + kl];
+                let prev = orow[j] as i32;
+                orow[j] = prev.wrapping_add(dot_i32_split_wrapping(arow, pr, nr)) as i64;
+            }
+        });
+    });
+}
+
 /// im2col for NCHW convolution: input `[c, h, w]` (one sample) into
 /// columns `[oh*ow, c*kh*kw]` with given stride/pad (zero padding).
 #[allow(clippy::too_many_arguments)]
@@ -275,6 +516,25 @@ mod tests {
         gemm_i32_split(&a, &pos, &neg, &mut wide, m, n, k);
         gemm_i32_split_narrow(&a, &pos, &neg, &mut narrow, m, n, k);
         assert_eq!(wide, narrow);
+    }
+
+    // Broad blocked-vs-scalar bit-exactness (all four variants ×
+    // random odd sizes × thread counts) lives in
+    // tests/properties.rs::prop_blocked_threaded_gemm_bit_exact; here
+    // we keep only the wrap-around edge the property test's value
+    // ranges cannot reach.
+    #[test]
+    fn narrow_blocked_wraps_like_scalar() {
+        // Drive the i32 accumulator past wrap-around: the blocked
+        // variant must reproduce the scalar wrapping bit pattern.
+        let (m, n, k) = (2, 3, 2100);
+        let a = vec![1 << 15; m * k];
+        let w = vec![1 << 15; n * k]; // products of 2^30, k of them: wraps
+        let mut want = vec![0i64; m * n];
+        let mut got = vec![0i64; m * n];
+        gemm_i32_narrow(&a, &w, &mut want, m, n, k);
+        gemm_i32_narrow_blocked(&a, &w, &mut got, m, n, k, 2);
+        assert_eq!(want, got);
     }
 
     #[test]

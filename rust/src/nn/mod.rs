@@ -13,20 +13,33 @@
 //! - **PANN** — multiplier-free weight quantization of Sec. 5, power
 //!   per Eq. (13) with the *achieved* additions budget.
 //!
-//! Modules: [`tensor`] (shape + storage), [`gemm`] (f32 and integer
-//! GEMM + im2col), [`layers`]/[`model`] (graph + manifest), [`quantized`]
-//! (prepared quantized execution), [`power_meter`] (accounting),
+//! The quantized engine is a plan/exec split ("plan once, execute
+//! many"): [`plan`] compiles a [`Model`] + [`quantized::QuantConfig`]
+//! into an immutable, `Send + Sync` [`ExecutionPlan`] (weight banks,
+//! per-node kernel selection, scratch geometry); [`exec`] runs whole
+//! batches through the cache-blocked, row-parallel GEMM kernels with a
+//! reusable per-thread [`Scratch`] arena. [`quantized`] keeps the
+//! one-call [`QuantizedModel`] wrapper plus the config vocabulary.
+//!
+//! Modules: [`tensor`] (shape + storage), [`gemm`] (f32/integer GEMM,
+//! blocked + threaded variants, im2col), [`layers`]/[`model`] (graph +
+//! manifest), [`plan`] (compile), [`exec`] (batched execution),
+//! [`quantized`] (config + wrapper), [`power_meter`] (accounting),
 //! [`eval`] (dataset accuracy loops).
 
 pub mod eval;
+pub mod exec;
 pub mod gemm;
 pub mod layers;
 pub mod model;
+pub mod plan;
 pub mod power_meter;
 pub mod quantized;
 pub mod tensor;
 
+pub use exec::Scratch;
 pub use model::Model;
+pub use plan::{ExecutionPlan, GemmKernel};
 pub use power_meter::PowerMeter;
 pub use quantized::{Arithmetic, QuantConfig, QuantizedModel, WeightQuantMethod};
 pub use tensor::Tensor;

@@ -1,0 +1,677 @@
+//! Plan-time compilation: freeze a [`Model`] + [`QuantConfig`] into an
+//! immutable, `Send + Sync` [`ExecutionPlan`].
+//!
+//! Everything that used to be (re)decided inside the forward pass is
+//! decided exactly once here:
+//!
+//! - weights are quantized into their integer banks (RUQ / RUQ+recon /
+//!   PANN, split into W⁺/W⁻ for the unsigned paths),
+//! - activation quantizers are fitted (dynamic, calibrated, or
+//!   data-free from stored statistics) and DFQ equalization + bias
+//!   correction are applied when selected,
+//! - the GEMM kernel for every MAC node is selected (narrow vs wide
+//!   accumulation × split vs unified banks — previously re-proved on
+//!   every `run_gemm` call),
+//! - per-MAC flip costs and scratch-buffer sizes are precomputed.
+//!
+//! The plan owns no mutable state, so one `Arc<ExecutionPlan>` can be
+//! shared by a whole worker pool; per-thread mutable state lives in
+//! [`super::exec::Scratch`].
+
+use super::gemm;
+use super::layers::Op;
+use super::model::Model;
+use super::power_meter::PowerMeter;
+use super::quantized::{Arithmetic, QuantConfig, WeightQuantMethod};
+use super::tensor::Tensor;
+use crate::quant::{aciq, pann::PannQuant, recon, ruq, ActQuantMethod, QParams};
+use anyhow::{bail, Context, Result};
+
+/// Which integer GEMM kernel a MAC node runs — fixed at plan time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GemmKernel {
+    /// Unified bank, i64 accumulation.
+    Wide,
+    /// Unified bank, i32 accumulation (overflow bound proven at plan
+    /// time).
+    Narrow,
+    /// W⁺/W⁻ banks, i64 accumulation.
+    SplitWide,
+    /// W⁺/W⁻ banks, i32 accumulation.
+    SplitNarrow,
+}
+
+/// Activation quantizer of one layer.
+#[derive(Clone, Debug)]
+pub(crate) enum ActQ {
+    /// Frozen parameters (calibrated or data-free).
+    Fixed(QParams),
+    /// Min/max fitted per forward batch ("Dynamic").
+    Dynamic,
+}
+
+/// Weight codes of one layer.
+#[derive(Clone, Debug)]
+pub(crate) struct WeightForm {
+    /// W⁺ codes, `[out][k]` (all of W for the signed path).
+    pub pos: Vec<i32>,
+    /// W⁻ codes (empty for the signed path).
+    pub neg: Vec<i32>,
+    pub scale: f32,
+    /// signed path keeps combined codes in `pos`
+    pub split: bool,
+    /// PANN: achieved ‖w_q‖₁ / (d·out) — additions per element.
+    pub adds_per_element: f64,
+    /// max |code| (storage bits, Table 14).
+    pub max_code: i64,
+}
+
+/// A frozen MAC layer ready for integer execution.
+#[derive(Clone, Debug)]
+pub(crate) struct PlannedMac {
+    /// Graph node index.
+    pub node: usize,
+    /// Meter slot.
+    pub meter: usize,
+    pub weights: WeightForm,
+    pub bias: Vec<f32>,
+    pub act: ActQ,
+    /// conv only: (ci, kh, kw, stride, pad, co)
+    pub conv: Option<(usize, usize, usize, usize, usize, usize)>,
+    /// linear only: (out, in)
+    pub linear: Option<(usize, usize)>,
+    /// MAC-depth per output element (k).
+    pub depth: usize,
+    /// Kernel selected at plan time.
+    pub kernel: GemmKernel,
+    /// Precomputed flips per MAC (non-PANN arithmetic; 0 for PANN,
+    /// whose cost is charged through `record_pann`).
+    pub flips_per_mac: f64,
+}
+
+/// A model compiled under a [`QuantConfig`]: immutable weight banks,
+/// kernel choices and scratch geometry. `Send + Sync` by construction
+/// (plain owned data), so serving holds one `Arc<ExecutionPlan>` per
+/// operating point.
+pub struct ExecutionPlan {
+    pub config: QuantConfig,
+    pub(crate) model: Model,
+    pub(crate) steps: Vec<Option<PlannedMac>>,
+    meter_names: Vec<String>,
+    /// MACs per sample, for power accounting without running.
+    pub macs_per_sample: u64,
+    /// Largest per-sample im2col column buffer any node needs.
+    pub max_cols_per_sample: usize,
+    /// Largest per-sample accumulator buffer any node needs.
+    pub max_acc_per_sample: usize,
+}
+
+impl ExecutionPlan {
+    /// Compile `model` under `config`. `calib` supplies calibration
+    /// inputs for the methods that need them (ACIQ, Recon; Dynamic
+    /// needs none; BN-stats and DFQ use the manifest statistics).
+    pub fn compile(model: &Model, config: QuantConfig, calib: Option<&Tensor>) -> Result<ExecutionPlan> {
+        let mut model = model.clone();
+        if config.act_method == ActQuantMethod::Dfq {
+            apply_dfq_equalization(&mut model)?;
+        }
+        let shapes = model.shapes()?;
+        let calib_outs = match calib {
+            Some(x) => Some(model.forward_all(x).context("calibration forward")?),
+            None => None,
+        };
+
+        let mut steps: Vec<Option<PlannedMac>> = vec![None; model.nodes.len()];
+        let mut meter_names = Vec::new();
+        let mut max_cols = 0usize;
+        let mut max_acc = 0usize;
+        for i in 0..model.nodes.len() {
+            if !model.nodes[i].op.is_mac_layer() {
+                continue;
+            }
+            let input_idx = model.nodes[i].input;
+            // --- activation quantizer for this layer's input ---
+            let act = fit_activation_quantizer(
+                &model,
+                &config,
+                input_idx,
+                calib.map(|c| (c, calib_outs.as_ref().unwrap().as_slice())),
+            )?;
+            // --- weight quantization ---
+            let (w, b, conv, linear, depth, out_ch) = match &model.nodes[i].op {
+                Op::Conv { w, b, stride, pad } => {
+                    let (co, ci, kh, kw) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+                    (
+                        w.clone(),
+                        b.clone(),
+                        Some((ci, kh, kw, *stride, *pad, co)),
+                        None,
+                        ci * kh * kw,
+                        co,
+                    )
+                }
+                Op::Linear { w, b } => {
+                    let (o, k) = (w.shape[0], w.shape[1]);
+                    (w.clone(), b.clone(), None, Some((o, k)), k, o)
+                }
+                _ => unreachable!(),
+            };
+            let weights = quantize_weights(
+                &w.data,
+                out_ch,
+                depth,
+                &config,
+                calib.map(|c| (c, calib_outs.as_ref().unwrap().as_slice())),
+                &model,
+                i,
+            )?;
+            // --- DFQ bias correction ---
+            let mut bias = b;
+            if config.act_method == ActQuantMethod::Dfq {
+                if let Some(corr) = dfq_bias_correction(&model, i, &w.data, &weights, out_ch, depth) {
+                    for (bo, c) in bias.iter_mut().zip(corr) {
+                        *bo -= c;
+                    }
+                }
+            }
+            // --- kernel selection (was re-decided on every run_gemm) ---
+            // Overflow-safety proof for the narrow (i32-accumulate)
+            // path: every |product| ≤ act_qmax · max|code|, and at most
+            // `depth` of them sum up — if that bound stays below 2^30
+            // the i32 accumulator cannot wrap.
+            let act_qmax = ((1i64 << config.bx.min(30)) - 1).max(1);
+            let narrow = act_qmax
+                .saturating_mul(weights.max_code.max(1))
+                .saturating_mul(depth as i64)
+                < (1i64 << 30);
+            let kernel = match (weights.split, narrow) {
+                (true, true) => GemmKernel::SplitNarrow,
+                (true, false) => GemmKernel::SplitWide,
+                (false, true) => GemmKernel::Narrow,
+                (false, false) => GemmKernel::Wide,
+            };
+            // --- scratch geometry (im2col columns `oh·ow·k` and
+            // accumulators `co·oh·ow` per sample; `k` / `out` for
+            // linear) ---
+            let out_elems_per_sample: usize = shapes[i].1.iter().product();
+            let spatial = out_elems_per_sample / out_ch.max(1);
+            max_cols = max_cols.max(spatial * depth);
+            max_acc = max_acc.max(out_elems_per_sample);
+
+            let meter = meter_names.len();
+            meter_names.push(format!("{}{}", model.nodes[i].op.name(), i));
+            steps[i] = Some(PlannedMac {
+                node: i,
+                meter,
+                flips_per_mac: flips_per_mac(&config),
+                weights,
+                bias,
+                act,
+                conv,
+                linear,
+                depth,
+                kernel,
+            });
+        }
+        let macs_per_sample = shapes.iter().map(|(m, _)| m).sum();
+        Ok(ExecutionPlan {
+            config,
+            model,
+            steps,
+            meter_names,
+            macs_per_sample,
+            max_cols_per_sample: max_cols,
+            max_acc_per_sample: max_acc,
+        })
+    }
+
+    /// Create a fresh meter with this plan's layer slots.
+    pub fn new_meter(&self) -> PowerMeter {
+        let mut m = PowerMeter::new();
+        for n in &self.meter_names {
+            m.add_layer(n);
+        }
+        m
+    }
+
+    /// The frozen model graph (non-MAC nodes still execute in f32).
+    pub fn model(&self) -> &Model {
+        &self.model
+    }
+
+    /// Per-sample input shape the plan expects.
+    pub fn input_shape(&self) -> &[usize] {
+        &self.model.input_shape
+    }
+
+    /// Kernel selected for node `i`, if it is a planned MAC node.
+    pub fn kernel_of(&self, node: usize) -> Option<GemmKernel> {
+        self.steps.get(node).and_then(|s| s.as_ref()).map(|p| p.kernel)
+    }
+
+    /// Scratch elements (`cols`, `acc`) needed to run a batch of `n`.
+    pub fn scratch_hint(&self, n: usize) -> (usize, usize) {
+        (self.max_cols_per_sample * n, self.max_acc_per_sample * n)
+    }
+
+    /// Storage bits per weight code (Table 14's `b_R`).
+    pub fn weight_code_bits(&self) -> u32 {
+        self.steps
+            .iter()
+            .flatten()
+            .map(|p| 64 - (p.weights.max_code.unsigned_abs().max(1)).leading_zeros())
+            .max()
+            .unwrap_or(1)
+    }
+
+    /// Mean achieved additions per element across MAC layers,
+    /// MAC-weighted (the effective network R).
+    pub fn achieved_r(&self) -> f64 {
+        let shapes = self.model.shapes().unwrap_or_default();
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for p in self.steps.iter().flatten() {
+            let macs = shapes[p.node].0 as f64;
+            num += macs * p.weights.adds_per_element;
+            den += macs;
+        }
+        if den > 0.0 {
+            num / den
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Flips per MAC under `config`. PANN layers are charged through
+/// [`PowerMeter::record_pann`] with their achieved additions budget
+/// instead, so they return 0 here.
+fn flips_per_mac(config: &QuantConfig) -> f64 {
+    match config.arithmetic {
+        Arithmetic::SignedMac { acc_bits } => {
+            crate::power::model::mult_power_mixed_signed(config.bw, config.bx)
+                + 0.5 * acc_bits as f64
+                + (config.bw + config.bx) as f64
+        }
+        Arithmetic::UnsignedMac => {
+            crate::power::model::mult_power_mixed_signed(config.bw, config.bx)
+                + 1.5 * (config.bw + config.bx) as f64
+        }
+        Arithmetic::Pann => 0.0,
+    }
+}
+
+/// Fit the activation quantizer for the input of a MAC layer.
+fn fit_activation_quantizer(
+    model: &Model,
+    config: &QuantConfig,
+    input_idx: isize,
+    calib: Option<(&Tensor, &[Tensor])>,
+) -> Result<ActQ> {
+    use ActQuantMethod::*;
+    Ok(match config.act_method {
+        Dynamic => ActQ::Dynamic,
+        Aciq | Recon => {
+            let (cx, couts) = calib.context("ACIQ/Recon need a calibration set")?;
+            let data: &[f32] = if input_idx < 0 { &cx.data } else { &couts[input_idx as usize].data };
+            ActQ::Fixed(aciq::fit_relu_activations(data, config.bx))
+        }
+        BnStats | Dfq => {
+            if input_idx < 0 {
+                // model input: ranges are part of the data contract
+                // (inputs normalized to [0, 1] by the datasets).
+                ActQ::Fixed(ruq::fit_unsigned_clipped(1.0, config.bx))
+            } else {
+                let stats = model
+                    .act_stats
+                    .get(&(input_idx as usize))
+                    .context("manifest lacks act_stats for data-free quantization")?;
+                ActQ::Fixed(stats.fit_activations(config.bx))
+            }
+        }
+    })
+}
+
+/// Quantize one layer's weights under the config.
+fn quantize_weights(
+    w: &[f32],
+    out_ch: usize,
+    depth: usize,
+    config: &QuantConfig,
+    calib: Option<(&Tensor, &[Tensor])>,
+    model: &Model,
+    node: usize,
+) -> Result<WeightForm> {
+    let split = !matches!(config.arithmetic, Arithmetic::SignedMac { .. });
+    let mk = |codes: Vec<i64>, scale: f32, adds: f64| -> WeightForm {
+        let max_code = codes.iter().map(|c| c.abs()).max().unwrap_or(0);
+        if split {
+            let pos: Vec<i32> = codes.iter().map(|&c| c.max(0) as i32).collect();
+            let neg: Vec<i32> = codes.iter().map(|&c| (-c).max(0) as i32).collect();
+            WeightForm { pos, neg, scale, split: true, adds_per_element: adds, max_code }
+        } else {
+            WeightForm {
+                pos: codes.iter().map(|&c| c as i32).collect(),
+                neg: Vec::new(),
+                scale,
+                split: false,
+                adds_per_element: adds,
+                max_code,
+            }
+        }
+    };
+    match config.weight_quant {
+        WeightQuantMethod::Ruq => {
+            let q = ruq::fit_signed(w, config.bw);
+            let codes = q.quantize_slice(w);
+            Ok(mk(codes, q.scale, 0.0))
+        }
+        WeightQuantMethod::RuqRecon => {
+            let q = ruq::fit_signed(w, config.bw);
+            let codes = match calib {
+                Some((cx, couts)) => {
+                    let input_idx = model.nodes[node].input;
+                    let xin = if input_idx < 0 { cx } else { &couts[input_idx as usize] };
+                    let rows = recon_rows(&model.nodes[node].op, xin, depth, 48)?;
+                    let nrows = rows.len() / depth;
+                    let mut all = Vec::with_capacity(w.len());
+                    for o in 0..out_ch {
+                        let wrow = &w[o * depth..(o + 1) * depth];
+                        all.extend(recon::reconstruct_row(wrow, &q, &rows, nrows, 6));
+                    }
+                    all
+                }
+                None => q.quantize_slice(w),
+            };
+            Ok(mk(codes, q.scale, 0.0))
+        }
+        WeightQuantMethod::Pann { r } => {
+            let pq = PannQuant::new(r);
+            let pw = pq.quantize(w);
+            Ok(mk(pw.codes.clone(), pw.gamma, pw.adds_per_element))
+        }
+    }
+}
+
+/// Calibration rows (`[n][depth]`) for rounding reconstruction.
+fn recon_rows(op: &Op, xin: &Tensor, depth: usize, max_rows: usize) -> Result<Vec<f32>> {
+    match op {
+        Op::Linear { .. } => {
+            let n = xin.batch().min(max_rows);
+            Ok(xin.data[..n * depth].to_vec())
+        }
+        Op::Conv { w, stride, pad, .. } => {
+            let (ci, kh, kw) = (w.shape[1], w.shape[2], w.shape[3]);
+            let (h, wd) = match xin.shape.as_slice() {
+                [_, _, h, w] => (*h, *w),
+                other => bail!("conv calib input {other:?}"),
+            };
+            let mut cols = Vec::new();
+            let mut rows = Vec::new();
+            let samples = xin.batch().min(4);
+            for s in 0..samples {
+                gemm::im2col(xin.sample(s), ci, h, wd, kh, kw, *stride, *pad, &mut cols);
+                let nrows = cols.len() / depth;
+                // take evenly spaced rows
+                let want = (max_rows / samples).max(1);
+                let step = (nrows / want).max(1);
+                for r in (0..nrows).step_by(step).take(want) {
+                    rows.extend_from_slice(&cols[r * depth..(r + 1) * depth]);
+                }
+            }
+            Ok(rows)
+        }
+        _ => bail!("recon rows on non-mac layer"),
+    }
+}
+
+/// DFQ cross-layer equalization on directly-chained MAC pairs
+/// (conv→[relu/pool]→conv and linear→relu→linear).
+fn apply_dfq_equalization(model: &mut Model) -> Result<()> {
+    let n = model.nodes.len();
+    // find MAC pairs connected through shape-preserving per-channel ops
+    let mut pairs: Vec<(usize, usize)> = Vec::new();
+    for i in 0..n {
+        if !model.nodes[i].op.is_mac_layer() {
+            continue;
+        }
+        // walk forward through relu/maxpool only, following single-consumer chains
+        let mut cur = i;
+        'walk: loop {
+            // find the unique consumer of cur
+            let consumers: Vec<usize> = (0..n)
+                .filter(|&j| {
+                    model.nodes[j].input == cur as isize
+                        || matches!(model.nodes[j].op, Op::Add { rhs } if rhs == cur)
+                })
+                .collect();
+            if consumers.len() != 1 {
+                break 'walk;
+            }
+            let j = consumers[0];
+            match model.nodes[j].op {
+                Op::Relu | Op::MaxPool { .. } => {
+                    cur = j;
+                }
+                Op::Conv { .. } | Op::Linear { .. } => {
+                    pairs.push((i, j));
+                    break 'walk;
+                }
+                _ => break 'walk,
+            }
+        }
+    }
+    for (a, b) in pairs {
+        equalize_nodes(model, a, b)?;
+    }
+    Ok(())
+}
+
+/// Equalize one (producer, consumer) MAC pair in place.
+fn equalize_nodes(model: &mut Model, a: usize, b: usize) -> Result<()> {
+    // Extract producer rows [mid][ka] and consumer columns grouped by
+    // producer channel: consumer weight [out][mid * g] where g = spatial
+    // group size (kh*kw for conv, h*w collapsed for linear-after-conv).
+    let (mid, ka) = match &model.nodes[a].op {
+        Op::Conv { w, .. } => (w.shape[0], w.shape[1] * w.shape[2] * w.shape[3]),
+        Op::Linear { w, .. } => (w.shape[0], w.shape[1]),
+        _ => bail!("not a mac node"),
+    };
+    let (out_b, kb) = match &model.nodes[b].op {
+        Op::Conv { w, .. } => (w.shape[0], w.shape[1] * w.shape[2] * w.shape[3]),
+        Op::Linear { w, .. } => (w.shape[0], w.shape[1]),
+        _ => bail!("not a mac node"),
+    };
+    // consumer input features per producer channel
+    let cin_b = match &model.nodes[b].op {
+        Op::Conv { w, .. } => w.shape[1],
+        Op::Linear { .. } => {
+            if kb % mid != 0 {
+                return Ok(()); // shapes don't group cleanly; skip pair
+            }
+            mid
+        }
+        _ => unreachable!(),
+    };
+    if cin_b != mid {
+        return Ok(()); // channel mismatch (e.g. flatten regrouping failed)
+    }
+    let g = kb / mid;
+    // per-channel ranges
+    let (r1, r2) = {
+        let wa = match &model.nodes[a].op {
+            Op::Conv { w, .. } | Op::Linear { w, .. } => &w.data,
+            _ => unreachable!(),
+        };
+        let wb = match &model.nodes[b].op {
+            Op::Conv { w, .. } | Op::Linear { w, .. } => &w.data,
+            _ => unreachable!(),
+        };
+        let r1: Vec<f32> = (0..mid)
+            .map(|c| wa[c * ka..(c + 1) * ka].iter().fold(0.0f32, |m, &x| m.max(x.abs())))
+            .collect();
+        let r2: Vec<f32> = (0..mid)
+            .map(|c| {
+                let mut m = 0.0f32;
+                for o in 0..out_b {
+                    for gg in 0..g {
+                        m = m.max(wb[o * kb + c * g + gg].abs());
+                    }
+                }
+                m
+            })
+            .collect();
+        (r1, r2)
+    };
+    let scales: Vec<f32> = r1
+        .iter()
+        .zip(&r2)
+        .map(|(&x, &y)| if x <= 1e-12 || y <= 1e-12 { 1.0 } else { (x / y).sqrt().clamp(1e-3, 1e3) })
+        .collect();
+    // apply
+    if let Op::Conv { w, b: bias, .. } | Op::Linear { w, b: bias } = &mut model.nodes[a].op {
+        for c in 0..mid {
+            let s = scales[c];
+            for v in &mut w.data[c * ka..(c + 1) * ka] {
+                *v /= s;
+            }
+            bias[c] /= s;
+        }
+    }
+    if let Op::Conv { w, .. } | Op::Linear { w, .. } = &mut model.nodes[b].op {
+        for o in 0..out_b {
+            for c in 0..mid {
+                let s = scales[c];
+                for gg in 0..g {
+                    w.data[o * kb + c * g + gg] *= s;
+                }
+            }
+        }
+    }
+    // keep act_stats of the producer's chain consistent: scale them too
+    let idxs: Vec<usize> = model.act_stats.keys().copied().collect();
+    for idx in idxs {
+        // only stats of nodes between a and b along the chain carry the
+        // producer's channel dimension; scaling them keeps BN-stats
+        // quantizers correct after equalization.
+        if idx >= a && idx < b {
+            if let Some(st) = model.act_stats.get_mut(&idx) {
+                if st.mean.len() == mid {
+                    for c in 0..mid {
+                        st.mean[c] /= scales[c];
+                        st.std[c] /= scales[c];
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// DFQ bias correction for one layer, from the manifest's activation
+/// statistics of the producer node. Returns the per-output correction
+/// `E[ε·x]` to subtract, or `None` if stats are missing.
+fn dfq_bias_correction(
+    model: &Model,
+    node: usize,
+    w: &[f32],
+    wf: &WeightForm,
+    out_ch: usize,
+    depth: usize,
+) -> Option<Vec<f32>> {
+    let input_idx = model.nodes[node].input;
+    if input_idx < 0 {
+        return None;
+    }
+    let stats = model.act_stats.get(&(input_idx as usize))?;
+    let ch = stats.mean.len();
+    if ch == 0 || depth % ch != 0 {
+        return None;
+    }
+    let g = depth / ch;
+    // expected input per position: post-ReLU mean per channel
+    let mean_in: Vec<f32> = (0..depth).map(|i| stats.mean[i / g].max(0.0)).collect();
+    let mut corr = vec![0.0f32; out_ch];
+    for o in 0..out_ch {
+        let mut acc = 0.0f32;
+        for i in 0..depth {
+            let code = if wf.split {
+                wf.pos[o * depth + i] as i64 - wf.neg[o * depth + i] as i64
+            } else {
+                wf.pos[o * depth + i] as i64
+            };
+            let err = wf.scale * code as f32 - w[o * depth + i];
+            acc += err * mean_in[i];
+        }
+        corr[o] = acc;
+    }
+    Some(corr)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::ActQuantMethod;
+
+    #[test]
+    fn kernel_selection_is_static_and_sane() {
+        let mut model = Model::reference_cnn(40);
+        let x = Tensor::zeros(vec![2, 1, 16, 16]);
+        model.record_act_stats(&x).unwrap();
+        // 4-bit unsigned: small codes, shallow depth -> narrow split path
+        let plan = ExecutionPlan::compile(
+            &model,
+            QuantConfig::unsigned_baseline(4, ActQuantMethod::BnStats),
+            None,
+        )
+        .unwrap();
+        for i in 0..plan.model().nodes.len() {
+            if let Some(k) = plan.kernel_of(i) {
+                assert!(
+                    matches!(k, GemmKernel::SplitNarrow | GemmKernel::SplitWide),
+                    "unsigned arithmetic must pick a split kernel, got {k:?}"
+                );
+            }
+        }
+        // signed path picks a unified kernel
+        let plan = ExecutionPlan::compile(
+            &model,
+            QuantConfig::signed_baseline(4, ActQuantMethod::BnStats),
+            None,
+        )
+        .unwrap();
+        let kernels: Vec<_> = (0..plan.model().nodes.len())
+            .filter_map(|i| plan.kernel_of(i))
+            .collect();
+        assert!(!kernels.is_empty());
+        assert!(kernels
+            .iter()
+            .all(|k| matches!(k, GemmKernel::Narrow | GemmKernel::Wide)));
+    }
+
+    #[test]
+    fn scratch_hint_covers_reference_cnn() {
+        let mut model = Model::reference_cnn(41);
+        let x = Tensor::zeros(vec![2, 1, 16, 16]);
+        model.record_act_stats(&x).unwrap();
+        let plan = ExecutionPlan::compile(
+            &model,
+            QuantConfig::unsigned_baseline(6, ActQuantMethod::BnStats),
+            None,
+        )
+        .unwrap();
+        // conv1: 16x16 spatial, k = 1*3*3 -> 2304 cols; conv2: 8x8, k=72 -> 4608
+        let (cols, acc) = plan.scratch_hint(1);
+        assert!(cols >= 4608, "cols {cols}");
+        // conv1 out 8*16*16 = 2048 accumulators dominate
+        assert!(acc >= 2048, "acc {acc}");
+        let (cols8, _) = plan.scratch_hint(8);
+        assert_eq!(cols8, cols * 8);
+    }
+
+    #[test]
+    fn plan_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<ExecutionPlan>();
+    }
+}

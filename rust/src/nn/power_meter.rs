@@ -50,6 +50,14 @@ impl PowerMeter {
         t.flips += elements as f64 * crate::power::model::pann_power_per_element(adds_per_element, bx_tilde);
     }
 
+    /// Record the per-output readout subtractions of Eq. (6): `subs`
+    /// subtractions, each a `bits`-wide adder pass (~`bits` flips).
+    /// Charged as pure flips — the MAC count is unchanged, matching
+    /// how the paper's tables separate MAC energy from readout.
+    pub fn record_readout_sub(&mut self, layer: usize, subs: u64, bits: u32) {
+        self.layers[layer].flips += subs as f64 * bits as f64;
+    }
+
     /// Total flips.
     pub fn total_flips(&self) -> f64 {
         self.layers.iter().map(|l| l.flips).sum()
@@ -110,5 +118,16 @@ mod tests {
         m.record_pann(a, 100, 2.0, 4);
         // (2 + 0.5) * 4 = 10 flips per element
         assert!((m.total_flips() - 1000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn readout_sub_charges_flips_only() {
+        let mut m = PowerMeter::new();
+        let a = m.add_layer("fc");
+        m.record_pann(a, 100, 2.0, 4);
+        let before = m.total_flips();
+        m.record_readout_sub(a, 50, 8);
+        assert_eq!(m.total_macs(), 100, "readout subs must not count as MACs");
+        assert!((m.total_flips() - before - 400.0).abs() < 1e-9);
     }
 }

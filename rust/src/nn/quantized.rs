@@ -1,21 +1,30 @@
 //! Quantized model execution with bit-flip power metering.
 //!
-//! [`QuantizedModel::prepare`] freezes a [`Model`] under a
-//! [`QuantConfig`]: weights are quantized once (RUQ / RUQ+reconstruction
-//! / PANN), activation quantizers are fitted (dynamically, from
-//! calibration data, or data-free from stored statistics), and DFQ's
-//! cross-layer equalization + bias correction are applied when selected.
-//! The forward pass then runs genuine integer arithmetic (i32 codes,
-//! i64 accumulation) through the GEMM kernels and meters power with the
-//! paper's per-MAC models.
+//! This module owns the *configuration* vocabulary ([`QuantConfig`],
+//! [`WeightQuantMethod`], [`Arithmetic`]) and the [`QuantizedModel`]
+//! convenience wrapper. The heavy lifting is split plan/exec:
+//!
+//! - [`super::plan::ExecutionPlan`] compiles a [`Model`] + config into
+//!   an immutable, shareable plan (quantized weight banks, kernel
+//!   selection, scratch geometry) — "plan once";
+//! - [`super::exec`] runs batches through the blocked integer GEMM
+//!   kernels with a reusable [`super::exec::Scratch`] arena —
+//!   "execute many".
+//!
+//! `QuantizedModel` keeps the seed's one-call API for experiments and
+//! tests: `prepare` compiles a plan, `forward` runs one batch with the
+//! full thread budget. Serving-path callers should hold the
+//! [`Arc<ExecutionPlan>`] from [`QuantizedModel::plan`] and drive
+//! `forward_batch` with their own scratch.
 
-use super::gemm;
-use super::layers::Op;
+use super::exec::Scratch;
 use super::model::Model;
+use super::plan::ExecutionPlan;
 use super::power_meter::PowerMeter;
 use super::tensor::Tensor;
-use crate::quant::{aciq, pann::PannQuant, recon, ruq, ActQuantMethod, QParams};
-use anyhow::{bail, Context, Result};
+use crate::quant::ActQuantMethod;
+use anyhow::Result;
+use std::sync::Arc;
 
 /// How weights are quantized.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -89,618 +98,58 @@ impl QuantConfig {
     }
 }
 
-/// Activation quantizer of one layer.
-#[derive(Clone, Debug)]
-enum ActQ {
-    /// Frozen parameters (calibrated or data-free).
-    Fixed(QParams),
-    /// Min/max fitted per forward batch ("Dynamic").
-    Dynamic,
-}
-
-/// Weight codes of one layer.
-#[derive(Clone, Debug)]
-struct WeightForm {
-    /// W⁺ codes, `[out][k]` (all of W for the signed path).
-    pos: Vec<i32>,
-    /// W⁻ codes (empty for the signed path).
-    neg: Vec<i32>,
-    scale: f32,
-    /// signed path keeps combined codes in `pos`
-    split: bool,
-    /// PANN: achieved ‖w_q‖₁ / (d·out) — additions per element.
-    adds_per_element: f64,
-    /// max |code| (storage bits, Table 14).
-    max_code: i64,
-}
-
-/// A frozen MAC layer ready for integer execution.
-#[derive(Clone, Debug)]
-struct PreparedMac {
-    /// Graph node index.
-    node: usize,
-    /// Meter slot.
-    meter: usize,
-    weights: WeightForm,
-    bias: Vec<f32>,
-    act: ActQ,
-    /// conv only: (ci, kh, kw, stride, pad, co)
-    conv: Option<(usize, usize, usize, usize, usize, usize)>,
-    /// linear only: (out, in)
-    linear: Option<(usize, usize)>,
-    /// MAC-depth per output element (k).
-    depth: usize,
-}
-
-/// A model frozen under a [`QuantConfig`].
+/// A model frozen under a [`QuantConfig`] — thin handle over a shared
+/// [`ExecutionPlan`].
 pub struct QuantizedModel {
     pub config: QuantConfig,
-    model: Model,
-    prepared: Vec<Option<PreparedMac>>,
-    meter_names: Vec<String>,
+    plan: Arc<ExecutionPlan>,
     /// MACs per sample, for power accounting without running.
     pub macs_per_sample: u64,
 }
 
 impl QuantizedModel {
     /// Freeze `model` under `config`. `calib` supplies calibration
-    /// inputs for the methods that need them (ACIQ, Recon, Dynamic
+    /// inputs for the methods that need them (ACIQ, Recon; Dynamic
     /// needs none; BN-stats and DFQ use the manifest statistics).
     pub fn prepare(model: &Model, config: QuantConfig, calib: Option<&Tensor>) -> Result<QuantizedModel> {
-        let mut model = model.clone();
-        if config.act_method == ActQuantMethod::Dfq {
-            apply_dfq_equalization(&mut model)?;
-        }
-        let shapes = model.shapes()?;
-        let calib_outs = match calib {
-            Some(x) => Some(model.forward_all(x).context("calibration forward")?),
-            None => None,
-        };
+        let plan = Arc::new(ExecutionPlan::compile(model, config, calib)?);
+        let macs_per_sample = plan.macs_per_sample;
+        Ok(QuantizedModel { config, plan, macs_per_sample })
+    }
 
-        let mut prepared: Vec<Option<PreparedMac>> = vec![None; model.nodes.len()];
-        let mut meter_names = Vec::new();
-        for i in 0..model.nodes.len() {
-            if !model.nodes[i].op.is_mac_layer() {
-                continue;
-            }
-            let input_idx = model.nodes[i].input;
-            // --- activation quantizer for this layer's input ---
-            let act = fit_activation_quantizer(
-                &model,
-                &config,
-                input_idx,
-                calib.map(|c| (c, calib_outs.as_ref().unwrap().as_slice())),
-            )?;
-            // --- weight quantization ---
-            let (w, b, conv, linear, depth, out_ch) = match &model.nodes[i].op {
-                Op::Conv { w, b, stride, pad } => {
-                    let (co, ci, kh, kw) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
-                    (
-                        w.clone(),
-                        b.clone(),
-                        Some((ci, kh, kw, *stride, *pad, co)),
-                        None,
-                        ci * kh * kw,
-                        co,
-                    )
-                }
-                Op::Linear { w, b } => {
-                    let (o, k) = (w.shape[0], w.shape[1]);
-                    (w.clone(), b.clone(), None, Some((o, k)), k, o)
-                }
-                _ => unreachable!(),
-            };
-            let weights = quantize_weights(
-                &w.data,
-                out_ch,
-                depth,
-                &config,
-                calib.map(|c| (c, calib_outs.as_ref().unwrap().as_slice())),
-                &model,
-                i,
-            )?;
-            // --- DFQ bias correction ---
-            let mut bias = b;
-            if config.act_method == ActQuantMethod::Dfq {
-                if let Some(corr) = dfq_bias_correction(&model, i, &w.data, &weights, out_ch, depth) {
-                    for (bo, c) in bias.iter_mut().zip(corr) {
-                        *bo -= c;
-                    }
-                }
-            }
-            let meter = meter_names.len();
-            meter_names.push(format!("{}{}", model.nodes[i].op.name(), i));
-            prepared[i] = Some(PreparedMac {
-                node: i,
-                meter,
-                weights,
-                bias,
-                act,
-                conv,
-                linear,
-                depth,
-            });
-        }
-        let macs_per_sample = shapes.iter().map(|(m, _)| m).sum();
-        Ok(QuantizedModel { config, model, prepared, meter_names, macs_per_sample })
+    /// The shared compiled plan (`Send + Sync`): serving and eval
+    /// loops clone this and drive `forward_batch` with per-thread
+    /// scratch.
+    pub fn plan(&self) -> Arc<ExecutionPlan> {
+        self.plan.clone()
     }
 
     /// Create a fresh meter with this model's layer slots.
     pub fn new_meter(&self) -> PowerMeter {
-        let mut m = PowerMeter::new();
-        for n in &self.meter_names {
-            m.add_layer(n);
-        }
-        m
+        self.plan.new_meter()
     }
 
     /// Quantized forward over a batch, metering power into `meter`.
+    ///
+    /// One-shot convenience: allocates scratch for this call and uses
+    /// the full `PANN_THREADS` budget. Loops should use
+    /// [`ExecutionPlan::forward_batch`] with a reusable scratch.
     pub fn forward(&self, x: &Tensor, meter: &mut PowerMeter) -> Result<Tensor> {
-        let mut outs: Vec<Tensor> = Vec::with_capacity(self.model.nodes.len());
-        for (i, node) in self.model.nodes.iter().enumerate() {
-            let input = if node.input < 0 { x } else { &outs[node.input as usize] };
-            let y = match &self.prepared[i] {
-                Some(p) => self.forward_mac(p, input, meter)?,
-                None => {
-                    let rhs = match node.op {
-                        Op::Add { rhs } => Some(&outs[rhs]),
-                        _ => None,
-                    };
-                    super::layers::forward_f32(&node.op, input, rhs)
-                        .with_context(|| format!("node {i}"))?
-                }
-            };
-            outs.push(y);
-        }
-        Ok(outs.pop().expect("non-empty model"))
-    }
-
-    /// Flips per MAC under this config (for a layer whose achieved
-    /// PANN budget is `adds`).
-    fn flips_per_mac(&self, adds: f64) -> f64 {
-        let c = &self.config;
-        match c.arithmetic {
-            Arithmetic::SignedMac { acc_bits } => {
-                crate::power::model::mult_power_mixed_signed(c.bw, c.bx)
-                    + 0.5 * acc_bits as f64
-                    + (c.bw + c.bx) as f64
-            }
-            Arithmetic::UnsignedMac => {
-                crate::power::model::mult_power_mixed_signed(c.bw, c.bx)
-                    + 1.5 * (c.bw + c.bx) as f64
-            }
-            Arithmetic::Pann => crate::power::model::pann_power_per_element(adds, c.bx),
-        }
-    }
-
-    fn forward_mac(&self, p: &PreparedMac, x: &Tensor, meter: &mut PowerMeter) -> Result<Tensor> {
-        let n = x.batch();
-        // activation quantizer (dynamic fits on the live tensor)
-        let qx = match &p.act {
-            ActQ::Fixed(q) => *q,
-            ActQ::Dynamic => ruq::fit_unsigned(&x.data, self.config.bx),
-        };
-        let wscale = p.weights.scale;
-        let deq = wscale * qx.scale;
-        let out = if let Some((ci, kh, kw, stride, pad, co)) = p.conv {
-            let (h, w) = match x.shape.as_slice() {
-                [_, c, h, w] if *c == ci => (*h, *w),
-                other => bail!("conv input shape {other:?}"),
-            };
-            let (oh, ow) = gemm::conv_out_size(h, w, kh, kw, stride, pad);
-            let k = ci * kh * kw;
-            let mut cols_f = Vec::new();
-            let mut cols_q = vec![0i32; oh * ow * k];
-            let mut acc = vec![0i64; oh * ow * co];
-            let mut out = Tensor::zeros(vec![n, co, oh, ow]);
-            for s in 0..n {
-                gemm::im2col(x.sample(s), ci, h, w, kh, kw, stride, pad, &mut cols_f);
-                for (dst, &v) in cols_q.iter_mut().zip(cols_f.iter()) {
-                    *dst = qx.quantize(v) as i32;
-                }
-                self.run_gemm(p, &cols_q, &mut acc, oh * ow, co, k);
-                let dst = &mut out.data[s * co * oh * ow..(s + 1) * co * oh * ow];
-                for pix in 0..oh * ow {
-                    for o in 0..co {
-                        dst[o * oh * ow + pix] = acc[pix * co + o] as f32 * deq + p.bias[o];
-                    }
-                }
-            }
-            out
-        } else {
-            let (out_d, k) = p.linear.unwrap();
-            if x.sample_len() != k {
-                bail!("linear input {} != {k}", x.sample_len());
-            }
-            let xq: Vec<i32> = x.data.iter().map(|&v| qx.quantize(v) as i32).collect();
-            let mut acc = vec![0i64; n * out_d];
-            self.run_gemm(p, &xq, &mut acc, n, out_d, k);
-            let mut out = Tensor::zeros(vec![n, out_d]);
-            for i in 0..n {
-                for o in 0..out_d {
-                    out.data[i * out_d + o] = acc[i * out_d + o] as f32 * deq + p.bias[o];
-                }
-            }
-            out
-        };
-        // --- power accounting ---
-        let macs = out.sample_len() as u64 * p.depth as u64 * n as u64 / {
-            // conv: out elements per sample = co*oh*ow, each depth k
-            // linear: out elements = out_d
-            1
-        };
-        match self.config.arithmetic {
-            Arithmetic::Pann => {
-                meter.record_pann(p.meter, macs, p.weights.adds_per_element, self.config.bx);
-                if self.config.count_readout_sub {
-                    // one B≈2b̃x-bit subtraction per output element
-                    let subs = out.len() as u64;
-                    meter.record(p.meter, 0, 0.0);
-                    meter.layers[p.meter].flips += subs as f64 * (2 * self.config.bx) as f64;
-                }
-            }
-            _ => meter.record(p.meter, macs, self.flips_per_mac(0.0)),
-        }
-        Ok(out)
-    }
-
-    fn run_gemm(&self, p: &PreparedMac, xq: &[i32], acc: &mut [i64], m: usize, nd: usize, k: usize) {
-        // Overflow-safety proof for the narrow (i32-accumulate) path:
-        // every |product| ≤ act_qmax · max|code|, and at most k of them
-        // sum up — if that bound stays below 2^30 the i32 accumulator
-        // cannot wrap.
-        let act_qmax = ((1i64 << self.config.bx.min(30)) - 1).max(1);
-        let narrow = act_qmax
-            .saturating_mul(p.weights.max_code.max(1))
-            .saturating_mul(k as i64)
-            < (1i64 << 30);
-        if p.weights.split {
-            if narrow {
-                gemm::gemm_i32_split_narrow(xq, &p.weights.pos, &p.weights.neg, acc, m, nd, k);
-            } else {
-                gemm::gemm_i32_split(xq, &p.weights.pos, &p.weights.neg, acc, m, nd, k);
-            }
-        } else if narrow {
-            gemm::gemm_i32_narrow(xq, &p.weights.pos, acc, m, nd, k);
-        } else {
-            gemm::gemm_i32(xq, &p.weights.pos, acc, m, nd, k);
-        }
+        let mut scratch = Scratch::for_plan(&self.plan, x.batch());
+        self.plan
+            .forward_batch(x, &mut scratch, meter, super::eval::n_threads())
     }
 
     /// Storage bits per weight code (Table 14's `b_R`).
     pub fn weight_code_bits(&self) -> u32 {
-        self.prepared
-            .iter()
-            .flatten()
-            .map(|p| 64 - (p.weights.max_code.unsigned_abs().max(1)).leading_zeros())
-            .max()
-            .unwrap_or(1)
+        self.plan.weight_code_bits()
     }
 
     /// Mean achieved additions per element across MAC layers,
     /// MAC-weighted (the effective network R).
     pub fn achieved_r(&self) -> f64 {
-        let shapes = self.model.shapes().unwrap_or_default();
-        let mut num = 0.0;
-        let mut den = 0.0;
-        for p in self.prepared.iter().flatten() {
-            let macs = shapes[p.node].0 as f64;
-            num += macs * p.weights.adds_per_element;
-            den += macs;
-        }
-        if den > 0.0 {
-            num / den
-        } else {
-            0.0
-        }
+        self.plan.achieved_r()
     }
-}
-
-/// Fit the activation quantizer for the input of a MAC layer.
-fn fit_activation_quantizer(
-    model: &Model,
-    config: &QuantConfig,
-    input_idx: isize,
-    calib: Option<(&Tensor, &[Tensor])>,
-) -> Result<ActQ> {
-    use ActQuantMethod::*;
-    Ok(match config.act_method {
-        Dynamic => ActQ::Dynamic,
-        Aciq | Recon => {
-            let (cx, couts) = calib.context("ACIQ/Recon need a calibration set")?;
-            let data: &[f32] = if input_idx < 0 { &cx.data } else { &couts[input_idx as usize].data };
-            ActQ::Fixed(aciq::fit_relu_activations(data, config.bx))
-        }
-        BnStats | Dfq => {
-            if input_idx < 0 {
-                // model input: ranges are part of the data contract
-                // (inputs normalized to [0, 1] by the datasets).
-                ActQ::Fixed(ruq::fit_unsigned_clipped(1.0, config.bx))
-            } else {
-                let stats = model
-                    .act_stats
-                    .get(&(input_idx as usize))
-                    .context("manifest lacks act_stats for data-free quantization")?;
-                ActQ::Fixed(stats.fit_activations(config.bx))
-            }
-        }
-    })
-}
-
-/// Quantize one layer's weights under the config.
-fn quantize_weights(
-    w: &[f32],
-    out_ch: usize,
-    depth: usize,
-    config: &QuantConfig,
-    calib: Option<(&Tensor, &[Tensor])>,
-    model: &Model,
-    node: usize,
-) -> Result<WeightForm> {
-    let split = !matches!(config.arithmetic, Arithmetic::SignedMac { .. });
-    let mk = |codes: Vec<i64>, scale: f32, adds: f64| -> WeightForm {
-        let max_code = codes.iter().map(|c| c.abs()).max().unwrap_or(0);
-        if split {
-            let pos: Vec<i32> = codes.iter().map(|&c| c.max(0) as i32).collect();
-            let neg: Vec<i32> = codes.iter().map(|&c| (-c).max(0) as i32).collect();
-            WeightForm { pos, neg, scale, split: true, adds_per_element: adds, max_code }
-        } else {
-            WeightForm {
-                pos: codes.iter().map(|&c| c as i32).collect(),
-                neg: Vec::new(),
-                scale,
-                split: false,
-                adds_per_element: adds,
-                max_code,
-            }
-        }
-    };
-    match config.weight_quant {
-        WeightQuantMethod::Ruq => {
-            let q = ruq::fit_signed(w, config.bw);
-            let codes = q.quantize_slice(w);
-            Ok(mk(codes, q.scale, 0.0))
-        }
-        WeightQuantMethod::RuqRecon => {
-            let q = ruq::fit_signed(w, config.bw);
-            let codes = match calib {
-                Some((cx, couts)) => {
-                    let input_idx = model.nodes[node].input;
-                    let xin = if input_idx < 0 { cx } else { &couts[input_idx as usize] };
-                    let rows = recon_rows(&model.nodes[node].op, xin, depth, 48)?;
-                    let nrows = rows.len() / depth;
-                    let mut all = Vec::with_capacity(w.len());
-                    for o in 0..out_ch {
-                        let wrow = &w[o * depth..(o + 1) * depth];
-                        all.extend(recon::reconstruct_row(wrow, &q, &rows, nrows, 6));
-                    }
-                    all
-                }
-                None => q.quantize_slice(w),
-            };
-            Ok(mk(codes, q.scale, 0.0))
-        }
-        WeightQuantMethod::Pann { r } => {
-            let pq = PannQuant::new(r);
-            let pw = pq.quantize(w);
-            Ok(mk(pw.codes.clone(), pw.gamma, pw.adds_per_element))
-        }
-    }
-}
-
-/// Calibration rows (`[n][depth]`) for rounding reconstruction.
-fn recon_rows(op: &Op, xin: &Tensor, depth: usize, max_rows: usize) -> Result<Vec<f32>> {
-    match op {
-        Op::Linear { .. } => {
-            let n = xin.batch().min(max_rows);
-            Ok(xin.data[..n * depth].to_vec())
-        }
-        Op::Conv { w, stride, pad, .. } => {
-            let (ci, kh, kw) = (w.shape[1], w.shape[2], w.shape[3]);
-            let (h, wd) = match xin.shape.as_slice() {
-                [_, _, h, w] => (*h, *w),
-                other => bail!("conv calib input {other:?}"),
-            };
-            let mut cols = Vec::new();
-            let mut rows = Vec::new();
-            let samples = xin.batch().min(4);
-            for s in 0..samples {
-                gemm::im2col(xin.sample(s), ci, h, wd, kh, kw, *stride, *pad, &mut cols);
-                let nrows = cols.len() / depth;
-                // take evenly spaced rows
-                let want = (max_rows / samples).max(1);
-                let step = (nrows / want).max(1);
-                for r in (0..nrows).step_by(step).take(want) {
-                    rows.extend_from_slice(&cols[r * depth..(r + 1) * depth]);
-                }
-            }
-            Ok(rows)
-        }
-        _ => bail!("recon rows on non-mac layer"),
-    }
-}
-
-/// DFQ cross-layer equalization on directly-chained MAC pairs
-/// (conv→[relu/pool]→conv and linear→relu→linear).
-fn apply_dfq_equalization(model: &mut Model) -> Result<()> {
-    let n = model.nodes.len();
-    // find MAC pairs connected through shape-preserving per-channel ops
-    let mut pairs: Vec<(usize, usize)> = Vec::new();
-    for i in 0..n {
-        if !model.nodes[i].op.is_mac_layer() {
-            continue;
-        }
-        // walk forward through relu/maxpool only, following single-consumer chains
-        let mut cur = i;
-        'walk: loop {
-            // find the unique consumer of cur
-            let consumers: Vec<usize> = (0..n)
-                .filter(|&j| {
-                    model.nodes[j].input == cur as isize
-                        || matches!(model.nodes[j].op, Op::Add { rhs } if rhs == cur)
-                })
-                .collect();
-            if consumers.len() != 1 {
-                break 'walk;
-            }
-            let j = consumers[0];
-            match model.nodes[j].op {
-                Op::Relu | Op::MaxPool { .. } => {
-                    cur = j;
-                }
-                Op::Conv { .. } | Op::Linear { .. } => {
-                    pairs.push((i, j));
-                    break 'walk;
-                }
-                _ => break 'walk,
-            }
-        }
-    }
-    for (a, b) in pairs {
-        equalize_nodes(model, a, b)?;
-    }
-    Ok(())
-}
-
-/// Equalize one (producer, consumer) MAC pair in place.
-fn equalize_nodes(model: &mut Model, a: usize, b: usize) -> Result<()> {
-    // Extract producer rows [mid][ka] and consumer columns grouped by
-    // producer channel: consumer weight [out][mid * g] where g = spatial
-    // group size (kh*kw for conv, h*w collapsed for linear-after-conv).
-    let (mid, ka) = match &model.nodes[a].op {
-        Op::Conv { w, .. } => (w.shape[0], w.shape[1] * w.shape[2] * w.shape[3]),
-        Op::Linear { w, .. } => (w.shape[0], w.shape[1]),
-        _ => bail!("not a mac node"),
-    };
-    let (out_b, kb) = match &model.nodes[b].op {
-        Op::Conv { w, .. } => (w.shape[0], w.shape[1] * w.shape[2] * w.shape[3]),
-        Op::Linear { w, .. } => (w.shape[0], w.shape[1]),
-        _ => bail!("not a mac node"),
-    };
-    // consumer input features per producer channel
-    let cin_b = match &model.nodes[b].op {
-        Op::Conv { w, .. } => w.shape[1],
-        Op::Linear { .. } => {
-            if kb % mid != 0 {
-                return Ok(()); // shapes don't group cleanly; skip pair
-            }
-            mid
-        }
-        _ => unreachable!(),
-    };
-    if cin_b != mid {
-        return Ok(()); // channel mismatch (e.g. flatten regrouping failed)
-    }
-    let g = kb / mid;
-    // per-channel ranges
-    let (r1, r2) = {
-        let wa = match &model.nodes[a].op {
-            Op::Conv { w, .. } | Op::Linear { w, .. } => &w.data,
-            _ => unreachable!(),
-        };
-        let wb = match &model.nodes[b].op {
-            Op::Conv { w, .. } | Op::Linear { w, .. } => &w.data,
-            _ => unreachable!(),
-        };
-        let r1: Vec<f32> = (0..mid)
-            .map(|c| wa[c * ka..(c + 1) * ka].iter().fold(0.0f32, |m, &x| m.max(x.abs())))
-            .collect();
-        let r2: Vec<f32> = (0..mid)
-            .map(|c| {
-                let mut m = 0.0f32;
-                for o in 0..out_b {
-                    for gg in 0..g {
-                        m = m.max(wb[o * kb + c * g + gg].abs());
-                    }
-                }
-                m
-            })
-            .collect();
-        (r1, r2)
-    };
-    let scales: Vec<f32> = r1
-        .iter()
-        .zip(&r2)
-        .map(|(&x, &y)| if x <= 1e-12 || y <= 1e-12 { 1.0 } else { (x / y).sqrt().clamp(1e-3, 1e3) })
-        .collect();
-    // apply
-    if let Op::Conv { w, b: bias, .. } | Op::Linear { w, b: bias } = &mut model.nodes[a].op {
-        for c in 0..mid {
-            let s = scales[c];
-            for v in &mut w.data[c * ka..(c + 1) * ka] {
-                *v /= s;
-            }
-            bias[c] /= s;
-        }
-    }
-    if let Op::Conv { w, .. } | Op::Linear { w, .. } = &mut model.nodes[b].op {
-        for o in 0..out_b {
-            for c in 0..mid {
-                let s = scales[c];
-                for gg in 0..g {
-                    w.data[o * kb + c * g + gg] *= s;
-                }
-            }
-        }
-    }
-    // keep act_stats of the producer's chain consistent: scale them too
-    let idxs: Vec<usize> = model.act_stats.keys().copied().collect();
-    for idx in idxs {
-        // only stats of nodes between a and b along the chain carry the
-        // producer's channel dimension; scaling them keeps BN-stats
-        // quantizers correct after equalization.
-        if idx >= a && idx < b {
-            if let Some(st) = model.act_stats.get_mut(&idx) {
-                if st.mean.len() == mid {
-                    for c in 0..mid {
-                        st.mean[c] /= scales[c];
-                        st.std[c] /= scales[c];
-                    }
-                }
-            }
-        }
-    }
-    Ok(())
-}
-
-/// DFQ bias correction for one layer, from the manifest's activation
-/// statistics of the producer node. Returns the per-output correction
-/// `E[ε·x]` to subtract, or `None` if stats are missing.
-fn dfq_bias_correction(
-    model: &Model,
-    node: usize,
-    w: &[f32],
-    wf: &WeightForm,
-    out_ch: usize,
-    depth: usize,
-) -> Option<Vec<f32>> {
-    let input_idx = model.nodes[node].input;
-    if input_idx < 0 {
-        return None;
-    }
-    let stats = model.act_stats.get(&(input_idx as usize))?;
-    let ch = stats.mean.len();
-    if ch == 0 || depth % ch != 0 {
-        return None;
-    }
-    let g = depth / ch;
-    // expected input per position: post-ReLU mean per channel
-    let mean_in: Vec<f32> = (0..depth).map(|i| stats.mean[i / g].max(0.0)).collect();
-    let mut corr = vec![0.0f32; out_ch];
-    for o in 0..out_ch {
-        let mut acc = 0.0f32;
-        for i in 0..depth {
-            let code = if wf.split {
-                wf.pos[o * depth + i] as i64 - wf.neg[o * depth + i] as i64
-            } else {
-                wf.pos[o * depth + i] as i64
-            };
-            let err = wf.scale * code as f32 - w[o * depth + i];
-            acc += err * mean_in[i];
-        }
-        corr[o] = acc;
-    }
-    Some(corr)
 }
 
 #[cfg(test)]
@@ -790,6 +239,30 @@ mod tests {
         let bound_hi = macs * (2.2 + 0.5) * 6.0;
         let flips = meter.total_flips();
         assert!(flips > bound_lo && flips < bound_hi, "flips {flips}");
+    }
+
+    #[test]
+    fn readout_sub_config_charges_extra_flips() {
+        let mut model = Model::reference_cnn(9);
+        let x = test_input(2, 10);
+        model.record_act_stats(&x).unwrap();
+        let base = QuantConfig::pann(6, 2.0, ActQuantMethod::BnStats);
+        let with_sub = QuantConfig { count_readout_sub: true, ..base };
+        let run = |cfg| {
+            let qm = QuantizedModel::prepare(&model, cfg, None).unwrap();
+            let mut meter = qm.new_meter();
+            qm.forward(&x, &mut meter).unwrap();
+            (meter.total_flips(), meter.total_macs())
+        };
+        let (f0, m0) = run(base);
+        let (f1, m1) = run(with_sub);
+        assert_eq!(m0, m1, "readout subs must not inflate the MAC count");
+        // per output element: one 2·b̃x = 12-bit subtraction
+        assert!(f1 > f0, "readout accounting should add flips");
+        let extra = f1 - f0;
+        // conv1 (8·16·16) + conv2 (16·8·8) + fc (10) outputs × 2 samples × 12 bits
+        let want = (2 * (8 * 16 * 16 + 16 * 8 * 8 + 10) * 12) as f64;
+        assert!((extra - want).abs() < 1e-6, "extra {extra} want {want}");
     }
 
     #[test]

@@ -1,0 +1,56 @@
+//! Stub PJRT runtime, compiled when the `pjrt` feature is off.
+//!
+//! The offline registry for this build carries no `xla_extension`
+//! bindings, so the default build swaps the real PJRT wrapper
+//! (`executable.rs`) for this API-identical stub: every constructor
+//! fails with a clear message and the native integer engine serves
+//! everything. Call sites (`coordinator`, `pann-cli serve`, the
+//! `serve_e2e` example) compile unchanged and fall back gracefully.
+
+use anyhow::{bail, Result};
+use std::path::Path;
+
+/// Stub PJRT CPU client; construction always fails.
+pub struct CpuRuntime {
+    _private: (),
+}
+
+/// Stub compiled model; never constructible through the public API,
+/// but keeps the geometry fields the serving layer reads.
+pub struct LoadedModel {
+    /// Fixed batch the artifact was lowered with.
+    pub batch: usize,
+    /// Flattened per-sample input length.
+    pub sample_len: usize,
+    /// Input shape including batch, as lowered.
+    pub input_shape: Vec<usize>,
+}
+
+impl CpuRuntime {
+    pub fn new() -> Result<CpuRuntime> {
+        bail!("built without the `pjrt` feature: PJRT execution is unavailable (use the native engine)")
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    pub fn load(&self, _path: &Path, _input_shape: &[usize]) -> Result<LoadedModel> {
+        bail!("built without the `pjrt` feature")
+    }
+}
+
+impl LoadedModel {
+    pub fn run(&self, _input: &[f32]) -> Result<Vec<f32>> {
+        bail!("built without the `pjrt` feature")
+    }
+
+    pub fn run_padded(&self, _input: &[f32], _n: usize) -> Result<Vec<f32>> {
+        bail!("built without the `pjrt` feature")
+    }
+
+    /// Per-sample output length (0 before the first run).
+    pub fn out_len(&self) -> usize {
+        0
+    }
+}

@@ -6,8 +6,18 @@
 //! xla_extension 0.5.1 rejects; the text parser reassigns ids (see
 //! /opt/xla-example/README.md). Python never runs at serving time —
 //! after `make artifacts` the binary is self-contained.
+//!
+//! The real PJRT wrapper needs the `xla` bindings, which the offline
+//! registry does not carry; it is therefore gated behind the `pjrt`
+//! feature. Default builds get [`executable_stub`] — same API, every
+//! constructor errors — so the serving stack compiles and falls back
+//! to the native integer engine.
 
 pub mod artifact;
+#[cfg(feature = "pjrt")]
+pub mod executable;
+#[cfg(not(feature = "pjrt"))]
+#[path = "executable_stub.rs"]
 pub mod executable;
 
 pub use artifact::{ArtifactManifest, ExecSpec};

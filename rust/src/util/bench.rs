@@ -5,6 +5,7 @@
 //! and throughput, and prevents the optimizer from deleting work via
 //! `std::hint::black_box`.
 
+use crate::util::Json;
 use std::time::{Duration, Instant};
 
 /// Result of one benchmark case.
@@ -33,6 +34,23 @@ impl BenchResult {
     pub fn throughput(&self, items_per_iter: f64) -> f64 {
         items_per_iter / (self.mean_ns * 1e-9)
     }
+
+    /// Machine-readable form for the `BENCH_*.json` perf-trajectory
+    /// files.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("iters", Json::Num(self.iters as f64)),
+            ("mean_ns", Json::Num(self.mean_ns)),
+            ("std_ns", Json::Num(self.std_ns)),
+            ("min_ns", Json::Num(self.min_ns)),
+        ])
+    }
+}
+
+/// Write a JSON report next to the bench (e.g. `BENCH_engine.json`) so
+/// later PRs can track the perf trajectory without parsing stdout.
+pub fn write_json(path: &str, v: &Json) -> std::io::Result<()> {
+    std::fs::write(path, format!("{v}\n"))
 }
 
 fn fmt_ns(ns: f64) -> String {

@@ -192,7 +192,7 @@ fn end_to_end_native_serving() {
                     giga_flips_per_sample: pann::power::model::mac_power_unsigned_total(bits)
                         * model.num_macs() as f64
                         / 1e9,
-                    engine: Box::new(NativeEngine { qm, sample_shape: vec![1, 16, 16] }),
+                    engine: Box::new(NativeEngine::new(&qm, vec![1, 16, 16])),
                 });
             }
             Ok(points)
@@ -212,6 +212,125 @@ fn end_to_end_native_serving() {
     assert_eq!(m.requests, 2);
     assert!(m.total_giga_flips > 0.0);
     srv.shutdown();
+}
+
+#[test]
+fn worker_pool_serves_shared_plans() {
+    // The pool path: one Arc<ExecutionPlan> per operating point,
+    // shared by 4 workers, each with its own scratch arena. Outputs
+    // must match a direct forward through the same plan exactly.
+    use pann::coordinator::{PlanEngine, Server, ServerConfig, SharedPoint};
+    use pann::nn::{Scratch, Tensor};
+    use std::sync::Arc;
+    let mut model = Model::reference_cnn(7);
+    let ds = Dataset::from_synth(pann::data::synth::digits(64, 8));
+    let stats = batch_tensor(&ds, 0, 32);
+    model.record_act_stats(&stats).unwrap();
+    let mut plans = Vec::new();
+    let mut points = Vec::new();
+    for (bits, bx, r) in [(2u32, 6u32, 10.0 / 6.0 - 0.5), (8, 8, 7.5)] {
+        let qm = QuantizedModel::prepare(
+            &model,
+            QuantConfig::pann(bx, r, ActQuantMethod::BnStats),
+            None,
+        )
+        .unwrap();
+        let plan = qm.plan();
+        plans.push((format!("p{bits}"), plan.clone()));
+        points.push(SharedPoint {
+            name: format!("p{bits}"),
+            giga_flips_per_sample: pann::power::model::mac_power_unsigned_total(bits)
+                * model.num_macs() as f64
+                / 1e9,
+            engine: Arc::new(PlanEngine::new(plan, vec![1, 16, 16])),
+        });
+    }
+    let srv = Server::start_pool(points, 256, ServerConfig::default(), 4).unwrap();
+    let h = srv.handle();
+    // rich budget -> p8; outputs must equal a direct plan forward
+    let want = {
+        let plan = &plans.iter().find(|(n, _)| n == "p8").unwrap().1;
+        let x = Tensor::new(vec![1, 1, 16, 16], ds.sample(3).to_vec()).unwrap();
+        let mut scratch = Scratch::new();
+        let mut meter = plan.new_meter();
+        plan.forward_batch(&x, &mut scratch, &mut meter, 1).unwrap().data
+    };
+    let resp = h.infer(ds.sample(3).to_vec()).unwrap();
+    assert_eq!(resp.point, "p8");
+    assert_eq!(resp.output, want, "pool output diverges from direct plan forward");
+    // concurrent clients across the pool
+    let total: usize = std::thread::scope(|s| {
+        (0..8usize)
+            .map(|c| {
+                let h = h.clone();
+                let ds = &ds;
+                s.spawn(move || {
+                    let mut ok = 0usize;
+                    for i in 0..16usize {
+                        let idx = (c * 16 + i) % ds.len();
+                        if h.infer(ds.sample(idx).to_vec()).is_ok() {
+                            ok += 1;
+                        }
+                    }
+                    ok
+                })
+            })
+            .collect::<Vec<_>>()
+            .into_iter()
+            .map(|j| j.join().unwrap())
+            .sum()
+    });
+    assert_eq!(total, 128);
+    assert_eq!(h.metrics().requests, 129);
+    srv.shutdown();
+}
+
+#[test]
+fn batched_engine_matches_per_sample_path() {
+    // Acceptance criterion of the plan/exec refactor: the batched,
+    // blocked, multi-threaded engine produces bit-identical logits and
+    // bit-flip totals to the per-sample path, on both reference
+    // architectures and on signed/unsigned/PANN arithmetic.
+    use pann::nn::{Scratch, Tensor};
+    for model in [Model::reference_cnn(11), Model::reference_resnet(12)] {
+        let mut model = model;
+        let ds = Dataset::from_synth(pann::data::synth::digits(16, 13));
+        let x = batch_tensor(&ds, 0, 16);
+        model.record_act_stats(&x).unwrap();
+        let calib = batch_tensor(&ds, 0, 8);
+        for cfg in [
+            QuantConfig::signed_baseline(6, ActQuantMethod::Aciq),
+            QuantConfig::unsigned_baseline(4, ActQuantMethod::Aciq),
+            QuantConfig::pann(6, 2.0, ActQuantMethod::Aciq),
+        ] {
+            let qm = QuantizedModel::prepare(&model, cfg, Some(&calib)).unwrap();
+            let plan = qm.plan();
+            let mut scratch = Scratch::for_plan(&plan, 16);
+            let mut meter_b = plan.new_meter();
+            let batched = plan
+                .forward_batch(&x, &mut scratch, &mut meter_b, pann::nn::eval::n_threads())
+                .unwrap();
+            let classes = batched.sample_len();
+            let mut meter_s = plan.new_meter();
+            for i in 0..16 {
+                let xi = Tensor::new(vec![1, 1, 16, 16], x.sample(i).to_vec()).unwrap();
+                let yi = plan.forward_batch(&xi, &mut scratch, &mut meter_s, 1).unwrap();
+                assert_eq!(
+                    yi.data,
+                    &batched.data[i * classes..(i + 1) * classes],
+                    "{}: sample {i} logits diverge",
+                    model.name
+                );
+            }
+            assert_eq!(meter_b.total_macs(), meter_s.total_macs());
+            let (fb, fs) = (meter_b.total_flips(), meter_s.total_flips());
+            assert!(
+                (fb - fs).abs() <= 1e-9 * fb.abs().max(1.0),
+                "{}: flip totals diverge: {fb} vs {fs}",
+                model.name
+            );
+        }
+    }
 }
 
 #[test]

@@ -62,6 +62,42 @@ fn prop_unsigned_split_gemm_exact() {
 }
 
 #[test]
+fn prop_blocked_threaded_gemm_bit_exact() {
+    // The blocked/threaded kernels must match their scalar references
+    // bit-exactly across narrow/wide × split/unified variants, odd
+    // m/n/k sizes (straddling every tile boundary) and thread counts.
+    let mut rng = Rng::new(110);
+    for _ in 0..25 {
+        let m = 1 + rng.below(80);
+        let n = 1 + rng.below(70);
+        let k = 1 + rng.below(300);
+        let threads = 1 + rng.below(6);
+        let a: Vec<i32> = (0..m * k).map(|_| rng.range_i64(0, 256) as i32).collect();
+        let w: Vec<i32> = (0..n * k).map(|_| rng.range_i64(-127, 128) as i32).collect();
+        let pos: Vec<i32> = w.iter().map(|&v| v.max(0)).collect();
+        let neg: Vec<i32> = w.iter().map(|&v| (-v).max(0)).collect();
+        let mut want = vec![0i64; m * n];
+        let mut got = vec![0i64; m * n];
+
+        gemm::gemm_i32(&a, &w, &mut want, m, n, k);
+        gemm::gemm_i32_blocked(&a, &w, &mut got, m, n, k, threads);
+        assert_eq!(want, got, "wide m={m} n={n} k={k} t={threads}");
+
+        gemm::gemm_i32_narrow(&a, &w, &mut want, m, n, k);
+        gemm::gemm_i32_narrow_blocked(&a, &w, &mut got, m, n, k, threads);
+        assert_eq!(want, got, "narrow m={m} n={n} k={k} t={threads}");
+
+        gemm::gemm_i32_split(&a, &pos, &neg, &mut want, m, n, k);
+        gemm::gemm_i32_split_blocked(&a, &pos, &neg, &mut got, m, n, k, threads);
+        assert_eq!(want, got, "split m={m} n={n} k={k} t={threads}");
+
+        gemm::gemm_i32_split_narrow(&a, &pos, &neg, &mut want, m, n, k);
+        gemm::gemm_i32_split_narrow_blocked(&a, &pos, &neg, &mut got, m, n, k, threads);
+        assert_eq!(want, got, "split-narrow m={m} n={n} k={k} t={threads}");
+    }
+}
+
+#[test]
 fn prop_multipliers_agree_and_are_exact() {
     let mut rng = Rng::new(104);
     for _ in 0..40 {
