@@ -1,15 +1,27 @@
 //! Serving-loop benchmark: batching throughput and latency percentiles
-//! over the native integer engine — single worker vs worker pool.
+//! over the native integer engine — single worker vs worker pool,
+//! with clients split across the three QoS priority classes.
+//!
+//! Emits `BENCH_coordinator.json` (throughput + p50/p99 per priority
+//! class for each serving mode) so later PRs can track the serving
+//! perf trajectory without parsing stdout — the serving counterpart
+//! of `BENCH_engine.json`.
 
-use pann::coordinator::server::NativeEngine;
-use pann::coordinator::{EnginePoint, PlanEngine, Server, ServerConfig, SharedPoint};
+use pann::coordinator::{
+    Client, EnginePoint, InferRequest, Menu, MetricsSnapshot, NativeEngine, PlanEngine, Priority,
+    ServerBuilder, SharedPoint,
+};
 use pann::data::{synth, Dataset};
 use pann::nn::eval::batch_tensor;
 use pann::nn::quantized::{QuantConfig, QuantizedModel};
 use pann::nn::Model;
 use pann::quant::ActQuantMethod;
+use pann::util::bench::write_json;
+use pann::util::Json;
 use std::sync::Arc;
 use std::time::Duration;
+
+const MAX_BATCH: usize = 16;
 
 fn prepared_models() -> anyhow::Result<Vec<(u32, QuantizedModel)>> {
     let mut model = Model::reference_cnn(1);
@@ -32,62 +44,94 @@ fn gf_per_sample(bits: u32, qm: &QuantizedModel) -> f64 {
     pann::power::model::mac_power_unsigned_total(bits) * qm.macs_per_sample as f64 / 1e9
 }
 
-fn drive(h: &pann::coordinator::ServerHandle, ds: &Dataset, label: &str, budget: f64, clients: usize) {
-    h.set_budget(budget);
+/// Drive `clients` concurrent clients, one priority class per client
+/// round-robin (Hi / Normal / BestEffort). Returns req/s.
+fn drive(c: &Client, ds: &Dataset, label: &str, budget: f64, clients: usize) -> f64 {
+    c.set_budget(budget);
     let t0 = std::time::Instant::now();
     let n_per = 64usize;
     std::thread::scope(|s| {
-        for c in 0..clients {
-            let h = h.clone();
+        for cl in 0..clients {
+            let c = c.clone();
+            let prio = Priority::ALL[cl % Priority::ALL.len()];
             s.spawn(move || {
                 for i in 0..n_per {
-                    let idx = (c * n_per + i) % ds.len();
-                    h.infer(ds.sample(idx).to_vec()).expect("infer");
+                    let idx = (cl * n_per + i) % ds.len();
+                    c.submit(InferRequest::new(ds.sample(idx).to_vec()).priority(prio))
+                        .expect("submit")
+                        .wait()
+                        .expect("infer");
                 }
             });
         }
     });
     let dt = t0.elapsed().as_secs_f64();
     let total = clients * n_per;
-    println!(
-        "{label:<34} {total} reqs in {dt:.3}s = {:.0} req/s",
-        total as f64 / dt
-    );
+    let rps = total as f64 / dt;
+    println!("{label:<34} {total} reqs in {dt:.3}s = {rps:.0} req/s");
+    rps
+}
+
+/// One serving mode's JSON record: throughput + overall and
+/// per-priority latency percentiles.
+fn mode_json(rps: f64, m: &MetricsSnapshot) -> Json {
+    let per_priority = m
+        .per_priority
+        .iter()
+        .map(|pl| {
+            (
+                pl.priority.name().to_string(),
+                Json::obj(vec![
+                    ("requests", Json::Num(pl.requests as f64)),
+                    ("p50_us", Json::Num(pl.p50_us)),
+                    ("p99_us", Json::Num(pl.p99_us)),
+                ]),
+            )
+        })
+        .collect();
+    Json::obj(vec![
+        ("throughput_rps", Json::Num(rps)),
+        ("requests", Json::Num(m.requests as f64)),
+        ("mean_batch", Json::Num(m.mean_batch)),
+        ("p50_us", Json::Num(m.p50_us)),
+        ("p99_us", Json::Num(m.p99_us)),
+        ("per_priority", Json::Obj(per_priority)),
+    ])
 }
 
 fn main() {
-    let cfg = ServerConfig {
-        max_batch: 16,
-        max_wait: Duration::from_micros(500),
-        budget_gflips: f64::INFINITY,
-    };
     let ds = Dataset::from_synth(synth::digits(256, 5));
+    let mk_builder = || {
+        ServerBuilder::new()
+            .max_batch(MAX_BATCH)
+            .max_wait(Duration::from_micros(500))
+            .queue_depth(4096)
+    };
 
-    // --- single worker (the seed architecture) ---
-    let srv = Server::start(
-        || {
+    // --- single worker, local menu (the `!Send`-engine path) ---
+    let srv = mk_builder()
+        .serve(Menu::local(|| {
             Ok(prepared_models()?
                 .into_iter()
                 .map(|(bits, qm)| EnginePoint {
                     name: format!("pann-p{bits}"),
                     giga_flips_per_sample: gf_per_sample(bits, &qm),
-                    engine: Box::new(NativeEngine::new(&qm, vec![1, 16, 16])),
+                    engine: Box::new(NativeEngine::new(&qm, MAX_BATCH)),
                 })
                 .collect())
-        },
-        256,
-        cfg,
-    )
-    .expect("server start");
-    let h = srv.handle();
+        }))
+        .expect("server start");
+    let c = srv.client();
+    let mut single_rps = 0.0;
     for (label, budget, clients) in [
         ("1 worker, rich budget, 4 clients", f64::INFINITY, 4usize),
         ("1 worker, 2-bit budget, 4 clients", 0.001, 4),
         ("1 worker, rich budget, 16 clients", f64::INFINITY, 16),
     ] {
-        drive(&h, &ds, label, budget, clients);
+        single_rps = drive(&c, &ds, label, budget, clients);
     }
-    println!("{}", h.metrics().report());
+    let single_metrics = c.metrics();
+    println!("{}", single_metrics.report());
     srv.shutdown();
 
     // --- worker pool over shared execution plans ---
@@ -98,18 +142,35 @@ fn main() {
         .map(|(bits, qm)| SharedPoint {
             name: format!("pann-p{bits}"),
             giga_flips_per_sample: gf_per_sample(bits, &qm),
-            engine: Arc::new(PlanEngine::new(qm.plan(), vec![1, 16, 16])),
+            engine: Arc::new(PlanEngine::new(qm.plan(), MAX_BATCH)),
         })
         .collect();
-    let srv = Server::start_pool(points, 256, cfg, n_workers).expect("pool start");
-    let h = srv.handle();
+    let srv = mk_builder()
+        .workers(n_workers)
+        .serve(Menu::shared(points))
+        .expect("pool start");
+    let c = srv.client();
+    let mut pool_rps = 0.0;
     for (label, budget, clients) in [
         ("pool, rich budget, 4 clients", f64::INFINITY, 4usize),
         ("pool, 2-bit budget, 4 clients", 0.001, 4),
         ("pool, rich budget, 16 clients", f64::INFINITY, 16),
     ] {
-        drive(&h, &ds, &format!("{label} ({n_workers}w)"), budget, clients);
+        pool_rps = drive(&c, &ds, &format!("{label} ({n_workers}w)"), budget, clients);
     }
-    println!("{}", h.metrics().report());
+    let pool_metrics = c.metrics();
+    println!("{}", pool_metrics.report());
     srv.shutdown();
+
+    // machine-readable perf trajectory (throughput from the final
+    // 16-client drive of each mode; percentiles over the whole run)
+    let doc = Json::obj(vec![
+        ("schema", Json::from("bench-coordinator/v1")),
+        ("workers", Json::from(n_workers)),
+        ("max_batch", Json::from(MAX_BATCH)),
+        ("single", mode_json(single_rps, &single_metrics)),
+        ("pool", mode_json(pool_rps, &pool_metrics)),
+    ]);
+    write_json("BENCH_coordinator.json", &doc).expect("write BENCH_coordinator.json");
+    println!("wrote BENCH_coordinator.json");
 }

@@ -1,25 +1,32 @@
 //! End-to-end serving driver (the EXPERIMENTS.md validation run).
 //!
-//! Two modes, picked automatically:
+//! Two menus, picked automatically, behind the *same* `ServerBuilder`
+//! entry point and `Client`:
 //!
 //! - **PJRT** (requires `make artifacts` and a `--features pjrt`
 //!   build): JAX+Pallas AOT artifacts (L1+L2) are loaded by the Rust
-//!   PJRT runtime and served by the single-worker coordinator — PJRT
-//!   executables are not `Send`, so they stay on one thread.
+//!   PJRT runtime and served via `Menu::local` — PJRT executables are
+//!   not `Send`, so the menu is built on the single worker thread.
 //! - **Native pool** (default, no artifacts needed): the built-in
 //!   reference CNN is compiled into one immutable `ExecutionPlan` per
-//!   operating point, and a pool of workers serves every point from
-//!   shared `Arc`s with per-worker scratch arenas.
+//!   operating point and served via `Menu::shared` by a pool of
+//!   workers with per-worker scratch arenas.
 //!
-//! Either way the driver replays a test set as a request stream, then
-//! *changes the energy budget at runtime* and shows the coordinator
-//! hopping between operating points — the paper's deployment claim.
+//! Either way the driver replays a test set as a request stream,
+//! *changes the energy budget at runtime* (the paper's deployment
+//! claim), then demonstrates the per-request QoS surface: two
+//! simultaneous clients with different `max_gflips` caps served by
+//! different operating points, and an over-deadline request rejected
+//! with a typed `ServeError::DeadlineExceeded` — unexecuted.
 //!
 //! ```sh
 //! cargo run --release --example serve_e2e
 //! ```
 
-use pann::coordinator::{EnginePoint, PlanEngine, Server, ServerConfig, SharedPoint};
+use pann::coordinator::{
+    EnginePoint, InferRequest, Menu, PlanEngine, Priority, ServeError, Server, ServerBuilder,
+    SharedPoint,
+};
 use pann::data::Dataset;
 use pann::nn::eval::batch_tensor;
 use pann::nn::quantized::{QuantConfig, QuantizedModel};
@@ -50,7 +57,8 @@ fn main() -> anyhow::Result<()> {
     }
 }
 
-/// Single-worker PJRT serving over AOT artifacts.
+/// Single-worker PJRT serving over AOT artifacts (`Menu::local`: the
+/// executables are built on, and never leave, the worker thread).
 fn serve_pjrt(
     model: &str,
     artifacts: &std::path::Path,
@@ -58,10 +66,12 @@ fn serve_pjrt(
 ) -> anyhow::Result<()> {
     let specs: Vec<_> = manifest.points_for(model).into_iter().cloned().collect();
     anyhow::ensure!(!specs.is_empty(), "no executables for {model}");
-    let sample_len: usize = specs[0].input_shape[1..].iter().product();
 
-    let srv = Server::start(
-        move || {
+    let srv = ServerBuilder::new()
+        .max_batch(8)
+        .max_wait(Duration::from_millis(1))
+        .queue_depth(512)
+        .serve(Menu::local(move || {
             let rt = CpuRuntime::new()?;
             eprintln!("PJRT platform: {}", rt.platform());
             let mut points = Vec::new();
@@ -82,14 +92,7 @@ fn serve_pjrt(
                 });
             }
             Ok(points)
-        },
-        sample_len,
-        ServerConfig {
-            max_batch: 8,
-            max_wait: Duration::from_millis(1),
-            budget_gflips: f64::INFINITY,
-        },
-    )?;
+        }))?;
 
     let ds_name = pann::experiments::dataset_for(model);
     let ds = Dataset::load(&artifacts.join("data").join(ds_name), "test")?;
@@ -99,13 +102,15 @@ fn serve_pjrt(
 }
 
 /// Worker-pool serving of the built-in reference CNN: one
-/// `Arc<ExecutionPlan>` per operating point, shared by every worker.
+/// `Arc<ExecutionPlan>` per operating point, shared by every worker
+/// (`Menu::shared`).
 fn serve_native_pool() -> anyhow::Result<()> {
     let mut model = Model::reference_cnn(5);
     let ds = Dataset::from_synth(pann::data::synth::digits(512, 6));
     let stats = batch_tensor(&ds, 0, 64);
     model.record_act_stats(&stats)?;
 
+    let max_batch = 16;
     let mut points = Vec::new();
     for (bits, bx, r) in [(2u32, 6u32, 10.0 / 6.0 - 0.5), (4, 7, 24.0 / 7.0 - 0.5), (8, 8, 7.5)] {
         let qm = QuantizedModel::prepare(
@@ -118,28 +123,25 @@ fn serve_native_pool() -> anyhow::Result<()> {
         points.push(SharedPoint {
             name: format!("pann-p{bits}"),
             giga_flips_per_sample: gf,
-            engine: Arc::new(PlanEngine::new(qm.plan(), vec![1, 16, 16])),
+            engine: Arc::new(PlanEngine::new(qm.plan(), max_batch)),
         });
     }
     let n_workers = pann::nn::eval::n_threads();
-    let srv = Server::start_pool(
-        points,
-        256,
-        ServerConfig {
-            max_batch: 16,
-            max_wait: Duration::from_millis(1),
-            budget_gflips: f64::INFINITY,
-        },
-        n_workers,
-    )?;
+    let srv = ServerBuilder::new()
+        .workers(n_workers)
+        .max_batch(max_batch)
+        .max_wait(Duration::from_millis(1))
+        .queue_depth(1024)
+        .serve(Menu::shared(points))?;
     let macs = model.num_macs() as f64;
     let header = format!("serving ref-cnn over synth digits (native pool, {n_workers} workers)");
     run_phases(srv, &ds, macs, &header)
 }
 
-/// Replay the test set through three budget phases and report.
+/// Replay the test set through three budget phases, then exercise the
+/// per-request QoS surface, and report.
 fn run_phases(srv: Server, ds: &Dataset, macs: f64, header: &str) -> anyhow::Result<()> {
-    let h = srv.handle();
+    let client = srv.client();
     let n_phase = 256.min(ds.len());
     // Three budget phases: unlimited, generous (8-bit PANN budget),
     // tight (2-bit budget). The menu never reloads — only the (b̃x, R)
@@ -152,17 +154,17 @@ fn run_phases(srv: Server, ds: &Dataset, macs: f64, header: &str) -> anyhow::Res
     println!("\n{header}, {n_phase} requests per phase");
     let clients = 4usize;
     for (label, budget) in phases {
-        h.set_budget(budget);
+        client.set_budget(budget);
         let t0 = std::time::Instant::now();
         std::thread::scope(|s| -> anyhow::Result<()> {
             let mut js = Vec::new();
             for c in 0..clients {
-                let h = h.clone();
-                js.push(s.spawn(move || -> anyhow::Result<(usize, String)> {
+                let client = client.clone();
+                js.push(s.spawn(move || -> Result<(usize, String), ServeError> {
                     let mut ok = 0;
                     let mut point = String::new();
                     for i in (c..n_phase).step_by(clients) {
-                        let r = h.infer(ds.sample(i).to_vec())?;
+                        let r = client.infer(ds.sample(i).to_vec())?;
                         let pred = r
                             .output
                             .iter()
@@ -193,7 +195,36 @@ fn run_phases(srv: Server, ds: &Dataset, macs: f64, header: &str) -> anyhow::Res
             Ok(())
         })?;
     }
-    println!("\n{}", h.metrics().report());
+
+    // --- per-request QoS: two caps, two points, one server ---
+    client.set_budget(f64::INFINITY);
+    let tight_cap = 12.0 * macs / 1e9; // ~2-bit equal-power budget
+    let hi = client.submit(
+        InferRequest::new(ds.sample(0).to_vec())
+            .priority(Priority::Hi)
+            .tag("uncapped"),
+    )?;
+    let capped = client.submit(
+        InferRequest::new(ds.sample(1).to_vec())
+            .max_gflips(tight_cap)
+            .tag("capped"),
+    )?;
+    let expired = client
+        .submit(InferRequest::new(ds.sample(2).to_vec()).deadline(Duration::ZERO))?
+        .wait();
+    let hi = hi.wait()?;
+    let capped = capped.wait()?;
+    println!("\nper-request QoS (global budget unlimited):");
+    println!("  {:<10} -> point {}", hi.tag.as_deref().unwrap_or(""), hi.point);
+    println!("  {:<10} -> point {}", capped.tag.as_deref().unwrap_or(""), capped.point);
+    match expired {
+        Err(ServeError::DeadlineExceeded) => {
+            println!("  over-deadline request rejected unexecuted: deadline exceeded")
+        }
+        other => println!("  over-deadline request unexpectedly: {other:?}"),
+    }
+
+    println!("\n{}", client.metrics().report());
     srv.shutdown();
     Ok(())
 }

@@ -1,79 +1,447 @@
-//! Size/deadline dynamic batching.
+//! Bounded admission queue + QoS-aware dynamic batching.
 //!
-//! The batcher blocks for the first request, then drains the queue up
-//! to `max_batch` items or until `max_wait` elapses — the standard
-//! serving trade-off between batching efficiency and tail latency.
+//! One [`RequestQueue`] feeds every worker (single-worker and pool
+//! alike — the seed's two hand-rolled batching loops are folded into
+//! [`RequestQueue::collect`]). Admission control happens at `push`:
+//! the queue is bounded and load-sheds with [`ServeError::QueueFull`]
+//! instead of growing without bound; after `stop` it refuses with
+//! [`ServeError::ServerStopped`].
+//!
+//! Batches are *point-coherent*: a worker picks the oldest request of
+//! the highest non-empty priority lane as leader, asks the caller's
+//! `classify` callback which operating point it maps to (pinned point,
+//! or `PowerPolicy` under `min(global budget, request cap)`), then
+//! tops the batch up — across all lanes, highest priority first —
+//! with requests that map to the *same* point, waiting at most
+//! `max_wait` (the standard batching/tail-latency trade-off).
+//!
+//! Rejections are delivered here, typed, without executing: requests
+//! whose deadline has already passed get [`ServeError::DeadlineExceeded`]
+//! (counted as `expired`), unclassifiable ones (unknown pinned point)
+//! get the classifier's error (counted as `unservable`), and requests
+//! whose [`Ticket`] was dropped are discarded silently (counted as
+//! `cancelled`) — all in [`Metrics`].
+//!
+//! [`ServeError::QueueFull`]: super::request::ServeError::QueueFull
+//! [`ServeError::ServerStopped`]: super::request::ServeError::ServerStopped
+//! [`ServeError::DeadlineExceeded`]: super::request::ServeError::DeadlineExceeded
+//! [`Ticket`]: super::request::Ticket
 
-use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use super::metrics::Metrics;
+use super::request::{Priority, Response, ServeError, N_PRIORITIES};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-/// Collect a batch from `rx`. Returns `None` when the channel closed
-/// with nothing pending.
-pub fn collect_batch<T>(rx: &Receiver<T>, max_batch: usize, max_wait: Duration) -> Option<Vec<T>> {
-    let first = rx.recv().ok()?;
-    let mut batch = vec![first];
-    let deadline = Instant::now() + max_wait;
-    while batch.len() < max_batch {
-        let now = Instant::now();
-        if now >= deadline {
-            break;
-        }
-        match rx.recv_timeout(deadline - now) {
-            Ok(item) => batch.push(item),
-            Err(RecvTimeoutError::Timeout) => break,
-            Err(RecvTimeoutError::Disconnected) => break,
+/// One admitted request waiting for a worker.
+pub(crate) struct Pending {
+    pub input: Vec<f32>,
+    pub submitted: Instant,
+    /// Absolute start-by deadline.
+    pub deadline: Option<Instant>,
+    pub priority: Priority,
+    /// Per-request energy cap (Giga bit flips per sample).
+    pub max_gflips: Option<f64>,
+    /// Pinned operating-point name.
+    pub pin: Option<String>,
+    pub tag: Option<String>,
+    /// Set when the client dropped its `Ticket`.
+    pub cancelled: Arc<AtomicBool>,
+    pub resp: mpsc::Sender<Result<Response, ServeError>>,
+}
+
+impl Pending {
+    fn expired(&self, now: Instant) -> bool {
+        self.deadline.map_or(false, |d| d <= now)
+    }
+
+    fn cancelled(&self) -> bool {
+        self.cancelled.load(Ordering::Relaxed)
+    }
+}
+
+struct State {
+    /// One FIFO lane per priority class, highest priority first.
+    lanes: [VecDeque<Pending>; N_PRIORITIES],
+    stopped: bool,
+    /// Total admissions so far — lets a batching worker skip rescanning
+    /// the lanes on wakeups that delivered nothing new.
+    pushes: u64,
+}
+
+impl State {
+    fn len(&self) -> usize {
+        self.lanes.iter().map(|l| l.len()).sum()
+    }
+}
+
+/// Bounded, priority-laned request queue shared by client and workers.
+pub(crate) struct RequestQueue {
+    depth: usize,
+    state: Mutex<State>,
+    cv: Condvar,
+    metrics: Arc<Metrics>,
+}
+
+/// Maps a request to the operating-point index it should run on, or a
+/// typed rejection (e.g. `UnknownPoint` for a bad pin).
+pub(crate) type Classify<'a> = dyn FnMut(&Pending) -> Result<usize, ServeError> + 'a;
+
+impl RequestQueue {
+    pub(crate) fn new(depth: usize, metrics: Arc<Metrics>) -> RequestQueue {
+        RequestQueue {
+            depth: depth.max(1),
+            state: Mutex::new(State {
+                lanes: [VecDeque::new(), VecDeque::new(), VecDeque::new()],
+                stopped: false,
+                pushes: 0,
+            }),
+            cv: Condvar::new(),
+            metrics,
         }
     }
-    Some(batch)
+
+    pub(crate) fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Admit one request, or shed it.
+    pub(crate) fn push(&self, p: Pending) -> Result<(), ServeError> {
+        let mut s = self.state.lock().expect("queue poisoned");
+        if s.stopped {
+            return Err(ServeError::ServerStopped);
+        }
+        if s.len() >= self.depth {
+            self.metrics.record_shed();
+            return Err(ServeError::QueueFull { depth: self.depth });
+        }
+        s.lanes[p.priority.lane()].push_back(p);
+        s.pushes += 1;
+        drop(s);
+        self.cv.notify_all();
+        Ok(())
+    }
+
+    /// Refuse new requests and wake every waiting worker. Requests
+    /// already admitted are still drained before workers exit.
+    pub(crate) fn stop(&self) {
+        self.state.lock().expect("queue poisoned").stopped = true;
+        self.cv.notify_all();
+    }
+
+    /// Collect one point-coherent batch of at most `max_batch`
+    /// requests, waiting at most `max_wait` to fill it. Returns the
+    /// batch plus the operating-point index it must run on, or `None`
+    /// when the queue is stopped and drained (worker exits).
+    pub(crate) fn collect(
+        &self,
+        max_batch: usize,
+        max_wait: Duration,
+        classify: &mut Classify<'_>,
+    ) -> Option<(Vec<Pending>, usize)> {
+        let max_batch = max_batch.max(1);
+        let mut s = self.state.lock().expect("queue poisoned");
+        // Phase 1: block until a leader emerges (or stop + drained).
+        let (leader, point) = loop {
+            match self.take_leader(&mut s, classify) {
+                Some(found) => break found,
+                None => {
+                    if s.stopped {
+                        return None;
+                    }
+                    s = self.cv.wait(s).expect("queue poisoned");
+                }
+            }
+        };
+        let mut batch = vec![leader];
+        // Phase 2: top up with same-point requests until full/deadline.
+        // The fill wait never outlives the earliest deadline in the
+        // batch — a tight-deadline request must start executing, not
+        // batch-wait, in time (overshoot is bounded by scheduling
+        // jitter instead of a full `max_wait`).
+        let mut until = Instant::now() + max_wait;
+        if let Some(d) = batch[0].deadline {
+            until = until.min(d);
+        }
+        let mut spare = VecDeque::new();
+        let mut seen_pushes: Option<u64> = None;
+        while batch.len() < max_batch && !s.stopped {
+            // rescan only when something was admitted since last scan
+            if seen_pushes != Some(s.pushes) {
+                seen_pushes = Some(s.pushes);
+                let before = batch.len();
+                self.take_matching(&mut s, point, max_batch, &mut batch, classify, &mut spare);
+                for p in &batch[before..] {
+                    if let Some(d) = p.deadline {
+                        until = until.min(d);
+                    }
+                }
+                if batch.len() >= max_batch {
+                    break;
+                }
+            }
+            let now = Instant::now();
+            if now >= until {
+                break;
+            }
+            let (guard, _) = self
+                .cv
+                .wait_timeout(s, until - now)
+                .expect("queue poisoned");
+            s = guard;
+        }
+        Some((batch, point))
+    }
+
+    /// Deliver a typed rejection without executing.
+    fn reject(&self, p: Pending, e: ServeError) {
+        match e {
+            ServeError::DeadlineExceeded => self.metrics.record_expired(),
+            _ => self.metrics.record_unservable(),
+        }
+        let _ = p.resp.send(Err(e));
+    }
+
+    /// Pop the first healthy request, highest priority lane first,
+    /// pruning cancelled and rejecting expired / unclassifiable
+    /// requests along the way.
+    fn take_leader(&self, s: &mut State, classify: &mut Classify<'_>) -> Option<(Pending, usize)> {
+        let now = Instant::now();
+        for lane in s.lanes.iter_mut() {
+            while let Some(p) = lane.pop_front() {
+                if p.cancelled() {
+                    self.metrics.record_cancelled();
+                    continue;
+                }
+                if p.expired(now) {
+                    self.reject(p, ServeError::DeadlineExceeded);
+                    continue;
+                }
+                match classify(&p) {
+                    Ok(point) => return Some((p, point)),
+                    Err(e) => self.reject(p, e),
+                }
+            }
+        }
+        None
+    }
+
+    /// Move every request that classifies to `point` into `batch` (up
+    /// to `max_batch` total), scanning lanes highest priority first.
+    /// Prunes cancelled and expired requests from all lanes as a side
+    /// effect; requests bound for other points stay queued in order.
+    /// `spare` is a reusable (empty in/empty out) rebuild buffer so
+    /// repeated scans within one collect allocate at most once.
+    fn take_matching(
+        &self,
+        s: &mut State,
+        point: usize,
+        max_batch: usize,
+        batch: &mut Vec<Pending>,
+        classify: &mut Classify<'_>,
+        spare: &mut VecDeque<Pending>,
+    ) {
+        let now = Instant::now();
+        for lane in s.lanes.iter_mut() {
+            debug_assert!(spare.is_empty());
+            while let Some(p) = lane.pop_front() {
+                if p.cancelled() {
+                    self.metrics.record_cancelled();
+                    continue;
+                }
+                if p.expired(now) {
+                    self.reject(p, ServeError::DeadlineExceeded);
+                    continue;
+                }
+                if batch.len() >= max_batch {
+                    spare.push_back(p);
+                    continue;
+                }
+                match classify(&p) {
+                    Ok(k) if k == point => batch.push(p),
+                    Ok(_) => spare.push_back(p),
+                    Err(e) => self.reject(p, e),
+                }
+            }
+            // the drained lane (now empty, capacity kept) becomes the
+            // next lane's spare
+            std::mem::swap(lane, spare);
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::mpsc::channel;
 
-    #[test]
-    fn batches_up_to_max() {
-        let (tx, rx) = channel();
-        for i in 0..10 {
-            tx.send(i).unwrap();
-        }
-        let b = collect_batch(&rx, 4, Duration::from_millis(5)).unwrap();
-        assert_eq!(b, vec![0, 1, 2, 3]);
-        let b = collect_batch(&rx, 100, Duration::from_millis(5)).unwrap();
-        assert_eq!(b.len(), 6);
+    fn queue(depth: usize) -> (RequestQueue, Arc<Metrics>) {
+        let m = Arc::new(Metrics::new());
+        (RequestQueue::new(depth, m.clone()), m)
+    }
+
+    fn pending(
+        v: f32,
+        priority: Priority,
+    ) -> (Pending, mpsc::Receiver<Result<Response, ServeError>>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            Pending {
+                input: vec![v],
+                submitted: Instant::now(),
+                deadline: None,
+                priority,
+                max_gflips: None,
+                pin: None,
+                tag: None,
+                cancelled: Arc::new(AtomicBool::new(false)),
+                resp: tx,
+            },
+            rx,
+        )
+    }
+
+    fn any_point(_: &Pending) -> Result<usize, ServeError> {
+        Ok(0)
     }
 
     #[test]
-    fn deadline_flushes_partial_batch() {
-        let (tx, rx) = channel();
-        tx.send(1).unwrap();
-        let t0 = Instant::now();
-        let b = collect_batch(&rx, 8, Duration::from_millis(20)).unwrap();
-        assert_eq!(b, vec![1]);
-        assert!(t0.elapsed() >= Duration::from_millis(15));
+    fn sheds_when_full_and_refuses_after_stop() {
+        let (q, m) = queue(2);
+        let (a, _ra) = pending(1.0, Priority::Normal);
+        let (b, _rb) = pending(2.0, Priority::Normal);
+        let (c, _rc) = pending(3.0, Priority::Normal);
+        q.push(a).unwrap();
+        q.push(b).unwrap();
+        assert_eq!(q.push(c), Err(ServeError::QueueFull { depth: 2 }));
+        assert_eq!(m.snapshot().shed, 1);
+        q.stop();
+        let (d, _rd) = pending(4.0, Priority::Normal);
+        assert_eq!(q.push(d), Err(ServeError::ServerStopped));
     }
 
     #[test]
-    fn closed_channel_returns_none() {
-        let (tx, rx) = channel::<u32>();
-        drop(tx);
-        assert!(collect_batch(&rx, 4, Duration::from_millis(1)).is_none());
+    fn batches_up_to_max_in_priority_order() {
+        let (q, _m) = queue(64);
+        let mut rxs = Vec::new();
+        for i in 0..3 {
+            let (p, rx) = pending(i as f32, Priority::BestEffort);
+            q.push(p).unwrap();
+            rxs.push(rx);
+        }
+        let (p, rx) = pending(100.0, Priority::Hi);
+        q.push(p).unwrap();
+        rxs.push(rx);
+        let (batch, point) = q
+            .collect(3, Duration::from_millis(2), &mut any_point)
+            .unwrap();
+        assert_eq!(point, 0);
+        assert_eq!(batch.len(), 3);
+        // the Hi request leads despite arriving last
+        assert_eq!(batch[0].input, vec![100.0]);
+        assert_eq!(batch[1].input, vec![0.0]);
+        assert_eq!(batch[2].input, vec![1.0]);
     }
 
     #[test]
-    fn no_request_lost() {
-        let (tx, rx) = channel();
-        let n = 137;
-        for i in 0..n {
-            tx.send(i).unwrap();
+    fn groups_by_point_and_leaves_other_groups_queued() {
+        // odd inputs -> point 1, even -> point 0
+        let (q, _m) = queue(64);
+        let mut rxs = Vec::new();
+        for i in 0..6 {
+            let (p, rx) = pending(i as f32, Priority::Normal);
+            q.push(p).unwrap();
+            rxs.push(rx);
         }
-        drop(tx);
-        let mut got = Vec::new();
-        while let Some(mut b) = collect_batch(&rx, 7, Duration::from_millis(1)) {
-            assert!(b.len() <= 7);
-            got.append(&mut b);
-        }
-        assert_eq!(got, (0..n).collect::<Vec<_>>());
+        let mut classify = |p: &Pending| Ok(p.input[0] as usize % 2);
+        let (batch, point) = q.collect(8, Duration::from_millis(1), &mut classify).unwrap();
+        assert_eq!(point, 0);
+        assert_eq!(
+            batch.iter().map(|p| p.input[0]).collect::<Vec<_>>(),
+            vec![0.0, 2.0, 4.0]
+        );
+        let (batch, point) = q.collect(8, Duration::from_millis(1), &mut classify).unwrap();
+        assert_eq!(point, 1);
+        assert_eq!(
+            batch.iter().map(|p| p.input[0]).collect::<Vec<_>>(),
+            vec![1.0, 3.0, 5.0]
+        );
+    }
+
+    #[test]
+    fn expired_requests_rejected_unexecuted() {
+        let (q, m) = queue(8);
+        let (mut p, rx) = pending(1.0, Priority::Normal);
+        p.deadline = Some(Instant::now() - Duration::from_millis(1));
+        q.push(p).unwrap();
+        let (ok, _rx2) = pending(2.0, Priority::Normal);
+        q.push(ok).unwrap();
+        let (batch, _) = q
+            .collect(4, Duration::from_millis(1), &mut any_point)
+            .unwrap();
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].input, vec![2.0]);
+        assert_eq!(rx.recv().unwrap(), Err(ServeError::DeadlineExceeded));
+        assert_eq!(m.snapshot().expired, 1);
+    }
+
+    #[test]
+    fn cancelled_requests_silently_dropped() {
+        let (q, m) = queue(8);
+        let (p, rx) = pending(1.0, Priority::Normal);
+        p.cancelled.store(true, Ordering::Relaxed);
+        q.push(p).unwrap();
+        let (ok, _rx2) = pending(2.0, Priority::Normal);
+        q.push(ok).unwrap();
+        let (batch, _) = q
+            .collect(4, Duration::from_millis(1), &mut any_point)
+            .unwrap();
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].input, vec![2.0]);
+        // no rejection delivered, but the drop is counted
+        assert!(rx.try_recv().is_err());
+        assert_eq!(m.snapshot().cancelled, 1);
+    }
+
+    #[test]
+    fn stop_with_drained_queue_ends_collect() {
+        let m = Arc::new(Metrics::new());
+        let q = Arc::new(RequestQueue::new(8, m));
+        let q2 = q.clone();
+        let j = std::thread::spawn(move || {
+            q2.collect(4, Duration::from_millis(1), &mut any_point)
+        });
+        std::thread::sleep(Duration::from_millis(10));
+        q.stop();
+        assert!(j.join().unwrap().is_none());
+    }
+
+    #[test]
+    fn stop_drains_already_admitted_requests() {
+        let (q, _m) = queue(8);
+        let (p, _rx) = pending(1.0, Priority::Normal);
+        q.push(p).unwrap();
+        q.stop();
+        let got = q.collect(4, Duration::from_millis(1), &mut any_point);
+        assert_eq!(got.unwrap().0.len(), 1);
+        assert!(q.collect(4, Duration::from_millis(1), &mut any_point).is_none());
+    }
+
+    #[test]
+    fn unclassifiable_leader_rejected_and_scan_continues() {
+        let (q, m) = queue(8);
+        let (mut p, rx) = pending(1.0, Priority::Hi);
+        p.pin = Some("nope".into());
+        q.push(p).unwrap();
+        let (ok, _rx2) = pending(2.0, Priority::Normal);
+        q.push(ok).unwrap();
+        let mut classify = |p: &Pending| match &p.pin {
+            Some(name) => Err(ServeError::UnknownPoint(name.clone())),
+            None => Ok(0),
+        };
+        let (batch, _) = q.collect(4, Duration::from_millis(1), &mut classify).unwrap();
+        assert_eq!(batch[0].input, vec![2.0]);
+        assert_eq!(rx.recv().unwrap(), Err(ServeError::UnknownPoint("nope".into())));
+        assert_eq!(m.snapshot().unservable, 1);
     }
 }

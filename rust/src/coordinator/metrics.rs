@@ -1,15 +1,31 @@
-//! Serving metrics: latency distribution, throughput, energy.
+//! Serving metrics: latency distribution (overall and per priority
+//! class), throughput, energy, and the admission-control counters
+//! (shed / deadline-expired / cancelled).
 
+use super::request::{Priority, N_PRIORITIES};
 use std::sync::Mutex;
 use std::time::Instant;
 
 #[derive(Default)]
 struct Inner {
     latencies_us: Vec<f64>,
+    /// Latencies split by priority class (lane order).
+    lane_latencies_us: [Vec<f64>; N_PRIORITIES],
     batches: u64,
     requests: u64,
     giga_flips: f64,
     per_point: std::collections::BTreeMap<String, u64>,
+    /// Requests shed at admission (`QueueFull`).
+    shed: u64,
+    /// Requests rejected unexecuted (`DeadlineExceeded`).
+    expired: u64,
+    /// Requests rejected unexecuted for a non-deadline reason
+    /// (e.g. `UnknownPoint`).
+    unservable: u64,
+    /// Requests discarded because the client dropped the ticket.
+    cancelled: u64,
+    /// Batches whose engine call failed (`ServeError::Engine`).
+    engine_failures: u64,
 }
 
 /// Thread-safe metrics collector.
@@ -17,6 +33,15 @@ struct Inner {
 pub struct Metrics {
     inner: Mutex<Inner>,
     started: Option<Instant>,
+}
+
+/// Latency summary of one priority class.
+#[derive(Clone, Debug)]
+pub struct PriorityLatency {
+    pub priority: Priority,
+    pub requests: u64,
+    pub p50_us: f64,
+    pub p99_us: f64,
 }
 
 /// A point-in-time snapshot for reports.
@@ -30,6 +55,13 @@ pub struct MetricsSnapshot {
     pub throughput_rps: f64,
     pub total_giga_flips: f64,
     pub per_point: Vec<(String, u64)>,
+    /// Per-priority latency, highest class first.
+    pub per_priority: Vec<PriorityLatency>,
+    pub shed: u64,
+    pub expired: u64,
+    pub unservable: u64,
+    pub cancelled: u64,
+    pub engine_failures: u64,
 }
 
 impl Metrics {
@@ -37,19 +69,62 @@ impl Metrics {
         Metrics { inner: Mutex::new(Inner::default()), started: Some(Instant::now()) }
     }
 
-    /// Record one served batch.
-    pub fn record_batch(&self, point: &str, n: usize, latencies_us: &[f64], giga_flips: f64) {
+    /// Record one served batch: per-request `(latency µs, priority)`
+    /// plus the batch's total energy.
+    pub fn record_batch(&self, point: &str, lats: &[(f64, Priority)], giga_flips: f64) {
         let mut g = self.inner.lock().unwrap();
         g.batches += 1;
-        g.requests += n as u64;
+        g.requests += lats.len() as u64;
         g.giga_flips += giga_flips;
-        g.latencies_us.extend_from_slice(latencies_us);
-        *g.per_point.entry(point.to_string()).or_insert(0) += n as u64;
+        for &(us, prio) in lats {
+            g.latencies_us.push(us);
+            g.lane_latencies_us[prio.lane()].push(us);
+        }
+        *g.per_point.entry(point.to_string()).or_insert(0) += lats.len() as u64;
+    }
+
+    /// One request shed at admission (queue full).
+    pub fn record_shed(&self) {
+        self.inner.lock().unwrap().shed += 1;
+    }
+
+    /// One request rejected unexecuted because its deadline passed.
+    pub fn record_expired(&self) {
+        self.inner.lock().unwrap().expired += 1;
+    }
+
+    /// One request rejected unexecuted for a non-deadline reason
+    /// (e.g. an unknown pinned point).
+    pub fn record_unservable(&self) {
+        self.inner.lock().unwrap().unservable += 1;
+    }
+
+    /// One request discarded because its ticket was dropped.
+    pub fn record_cancelled(&self) {
+        self.inner.lock().unwrap().cancelled += 1;
+    }
+
+    /// One failed engine call (all requests of the batch got
+    /// `ServeError::Engine`).
+    pub fn record_engine_failure(&self) {
+        self.inner.lock().unwrap().engine_failures += 1;
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
         let g = self.inner.lock().unwrap();
         let elapsed = self.started.map(|t| t.elapsed().as_secs_f64()).unwrap_or(1.0);
+        let per_priority = Priority::ALL
+            .iter()
+            .map(|&p| {
+                let lat = &g.lane_latencies_us[p.lane()];
+                PriorityLatency {
+                    priority: p,
+                    requests: lat.len() as u64,
+                    p50_us: crate::util::stats::percentile(lat, 50.0),
+                    p99_us: crate::util::stats::percentile(lat, 99.0),
+                }
+            })
+            .collect();
         MetricsSnapshot {
             requests: g.requests,
             batches: g.batches,
@@ -59,6 +134,12 @@ impl Metrics {
             throughput_rps: g.requests as f64 / elapsed.max(1e-9),
             total_giga_flips: g.giga_flips,
             per_point: g.per_point.iter().map(|(k, v)| (k.clone(), *v)).collect(),
+            per_priority,
+            shed: g.shed,
+            expired: g.expired,
+            unservable: g.unservable,
+            cancelled: g.cancelled,
+            engine_failures: g.engine_failures,
         }
     }
 }
@@ -76,6 +157,23 @@ impl MetricsSnapshot {
             self.total_giga_flips,
             self.total_giga_flips / self.requests.max(1) as f64,
         );
+        if self.shed + self.expired + self.unservable + self.cancelled + self.engine_failures > 0 {
+            s.push_str(&format!(
+                "rejected: {} shed (queue full), {} past deadline, {} unservable, {} cancelled, {} engine failures\n",
+                self.shed, self.expired, self.unservable, self.cancelled, self.engine_failures
+            ));
+        }
+        for pl in &self.per_priority {
+            if pl.requests > 0 {
+                s.push_str(&format!(
+                    "  class {:<12} {} requests  p50={:.0}µs p99={:.0}µs\n",
+                    pl.priority.name(),
+                    pl.requests,
+                    pl.p50_us,
+                    pl.p99_us
+                ));
+            }
+        }
         for (k, v) in &self.per_point {
             s.push_str(&format!("  point {k}: {v} requests\n"));
         }
@@ -90,8 +188,16 @@ mod tests {
     #[test]
     fn accumulates() {
         let m = Metrics::new();
-        m.record_batch("p4", 3, &[100.0, 200.0, 300.0], 0.5);
-        m.record_batch("p8", 1, &[400.0], 0.4);
+        m.record_batch(
+            "p4",
+            &[
+                (100.0, Priority::Hi),
+                (200.0, Priority::Normal),
+                (300.0, Priority::Normal),
+            ],
+            0.5,
+        );
+        m.record_batch("p8", &[(400.0, Priority::BestEffort)], 0.4);
         let s = m.snapshot();
         assert_eq!(s.requests, 4);
         assert_eq!(s.batches, 2);
@@ -99,5 +205,27 @@ mod tests {
         assert!((s.total_giga_flips - 0.9).abs() < 1e-12);
         assert_eq!(s.per_point.len(), 2);
         assert!(s.p99_us >= s.p50_us);
+        assert_eq!(s.per_priority.len(), 3);
+        assert_eq!(s.per_priority[0].requests, 1); // Hi
+        assert_eq!(s.per_priority[1].requests, 2); // Normal
+        assert_eq!(s.per_priority[2].requests, 1); // BestEffort
+        assert_eq!(s.per_priority[0].p50_us, 100.0);
+    }
+
+    #[test]
+    fn rejection_counters() {
+        let m = Metrics::new();
+        m.record_shed();
+        m.record_shed();
+        m.record_expired();
+        m.record_unservable();
+        m.record_cancelled();
+        m.record_engine_failure();
+        let s = m.snapshot();
+        assert_eq!(
+            (s.shed, s.expired, s.unservable, s.cancelled, s.engine_failures),
+            (2, 1, 1, 1, 1)
+        );
+        assert!(s.report().contains("2 shed"));
     }
 }

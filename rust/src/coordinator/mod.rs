@@ -1,26 +1,41 @@
-//! L3 serving coordinator: power-budget-aware batched inference.
+//! L3 serving coordinator: QoS-aware, power-budget-aware batched
+//! inference behind one entry point.
 //!
 //! The deployment claim of the paper (Sec. 6) is that PANN traverses
 //! the power–accuracy trade-off **without hardware changes** — moving
 //! between equal-power curves only re-parameterizes `(b̃_x, R)`. This
-//! coordinator operationalizes that: it owns a menu of compiled
-//! operating points (fp32 + one PANN executable per power budget,
-//! produced by `make artifacts`), batches incoming requests, and
-//! serves each batch with the best point under the *current* energy
-//! budget — which can be changed at runtime without reloading models.
+//! coordinator operationalizes that *per request*: a server owns a
+//! menu of compiled operating points (fp32 + one PANN executable per
+//! power budget), and every [`InferRequest`] can carry its own QoS —
+//! a start-by `deadline`, an energy cap (`max_gflips`), a [`Priority`]
+//! class, a pinned point, a trace tag. The scheduler groups queued
+//! requests by the operating point [`PowerPolicy`] selects under
+//! `min(global budget, request cap)`, drains higher-priority groups
+//! first, sheds load on a bounded queue ([`ServeError::QueueFull`]),
+//! and rejects already-expired requests without executing them.
 //!
-//! Components: [`policy`] (budget → operating point), [`batcher`]
-//! (size/deadline batching), [`metrics`] (latency/energy accounting),
-//! [`server`] (single worker for `!Send` PJRT engines, or a worker
-//! *pool* sharing `Arc<ExecutionPlan>`-backed operating points).
+//! Entry point: [`ServerBuilder`] → [`Menu`] (`local` for `!Send`
+//! PJRT engines on one worker, `shared` for an `Arc`-shared plan menu
+//! on a worker pool) → [`Server`] → [`Client`] → [`Ticket`].
+//! Failures are typed ([`ServeError`]); dropping a [`Ticket`] cancels
+//! a still-queued request.
+//!
+//! Components: [`request`] (the public request/response model),
+//! [`policy`] (budget → operating point), [`batcher`] (bounded
+//! admission queue + point-coherent QoS batching), [`metrics`]
+//! (latency/energy/rejection accounting, per priority class),
+//! [`server`] (builder, engines, worker loops).
 
 pub mod batcher;
 pub mod metrics;
 pub mod policy;
+pub mod request;
 pub mod server;
 
-pub use metrics::MetricsSnapshot;
+pub use metrics::{MetricsSnapshot, PriorityLatency};
 pub use policy::{Costed, EnginePoint, PowerPolicy};
+pub use request::{InferRequest, Priority, Response, ServeError, Ticket};
 pub use server::{
-    BatchEngine, Engine, NativeEngine, PlanEngine, Server, ServerConfig, ServerHandle, SharedPoint,
+    BatchEngine, Client, Engine, Menu, NativeEngine, PlanEngine, Server, ServerBuilder,
+    ServerConfig, SharedPoint,
 };

@@ -73,6 +73,11 @@ impl<P: Costed> PowerPolicy<P> {
         best
     }
 
+    /// Index of the point named `name` (for pinned requests).
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.points.iter().position(|p| p.point_name() == name)
+    }
+
     pub fn point(&self, idx: usize) -> &P {
         &self.points[idx]
     }
@@ -128,6 +133,14 @@ mod tests {
         assert_eq!(p.point(p.select(0.5)).name, "p4");
         assert_eq!(p.point(p.select(2.0)).name, "p8");
         assert_eq!(p.point(p.select(f64::INFINITY)).name, "fp32");
+    }
+
+    #[test]
+    fn index_of_finds_sorted_position() {
+        let p = menu();
+        assert_eq!(p.index_of("p2"), Some(0));
+        assert_eq!(p.index_of("fp32"), Some(3));
+        assert_eq!(p.index_of("nope"), None);
     }
 
     #[test]

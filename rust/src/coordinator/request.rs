@@ -1,0 +1,297 @@
+//! The public request model of the serving API.
+//!
+//! A caller describes one inference with an [`InferRequest`] — input
+//! plus QoS: a relative `deadline`, a per-request energy cap
+//! (`max_gflips`), a [`Priority`] class, an optional pinned operating
+//! point and a trace tag. Submitting yields a [`Ticket`]; the server
+//! answers through it with `Result<Response, ServeError>`. Dropping a
+//! ticket before the result arrives cancels the request if it is
+//! still queued — the scheduler skips it without executing.
+//!
+//! Failure is typed: [`ServeError`] is the entire error surface of the
+//! request path (admission, scheduling, execution), replacing the
+//! seed's anyhow strings + dropped-sender `RecvError`s.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+/// Typed failure surface of the serving API.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ServeError {
+    /// Admission control shed the request: the bounded queue already
+    /// holds `depth` requests.
+    QueueFull { depth: usize },
+    /// The request's deadline had already passed when the scheduler
+    /// reached it; it was rejected without being executed.
+    DeadlineExceeded,
+    /// Input length does not match the menu's per-sample length.
+    BadInput { expected: usize, got: usize },
+    /// The request pinned an operating point that is not on the menu.
+    UnknownPoint(String),
+    /// The server has been shut down (or its worker died).
+    ServerStopped,
+    /// The backend engine failed while executing the batch.
+    Engine(String),
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::QueueFull { depth } => write!(f, "queue full ({depth} pending)"),
+            ServeError::DeadlineExceeded => write!(f, "deadline exceeded before execution"),
+            ServeError::BadInput { expected, got } => {
+                write!(f, "bad input length: expected {expected}, got {got}")
+            }
+            ServeError::UnknownPoint(name) => write!(f, "unknown operating point '{name}'"),
+            ServeError::ServerStopped => write!(f, "server stopped"),
+            ServeError::Engine(msg) => write!(f, "engine failure: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Scheduling class. Higher priorities drain first when groups of
+/// requests compete for a worker.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    Hi,
+    Normal,
+    BestEffort,
+}
+
+/// Number of priority classes (queue lanes).
+pub(crate) const N_PRIORITIES: usize = 3;
+
+impl Priority {
+    /// Queue-lane index, highest priority first.
+    pub(crate) fn lane(self) -> usize {
+        match self {
+            Priority::Hi => 0,
+            Priority::Normal => 1,
+            Priority::BestEffort => 2,
+        }
+    }
+
+    /// All classes, highest first (for reports).
+    pub const ALL: [Priority; N_PRIORITIES] =
+        [Priority::Hi, Priority::Normal, Priority::BestEffort];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::Hi => "hi",
+            Priority::Normal => "normal",
+            Priority::BestEffort => "best-effort",
+        }
+    }
+}
+
+/// One inference request: input + per-request QoS. Built fluently:
+///
+/// ```ignore
+/// let t = client.submit(
+///     InferRequest::new(x)
+///         .deadline(Duration::from_millis(20))
+///         .max_gflips(0.05)
+///         .priority(Priority::Hi)
+///         .tag("user-42"),
+/// )?;
+/// let resp = t.wait()?;
+/// ```
+#[derive(Clone, Debug)]
+pub struct InferRequest {
+    pub(crate) input: Vec<f32>,
+    pub(crate) deadline: Option<Duration>,
+    pub(crate) max_gflips: Option<f64>,
+    pub(crate) priority: Priority,
+    pub(crate) pin: Option<String>,
+    pub(crate) tag: Option<String>,
+}
+
+impl InferRequest {
+    pub fn new(input: Vec<f32>) -> InferRequest {
+        InferRequest {
+            input,
+            deadline: None,
+            max_gflips: None,
+            priority: Priority::Normal,
+            pin: None,
+            tag: None,
+        }
+    }
+
+    /// Reject (unexecuted) if not *started* within `d` of submission.
+    pub fn deadline(mut self, d: Duration) -> Self {
+        self.deadline = Some(d);
+        self
+    }
+
+    /// Per-request energy cap in Giga bit flips per sample. The
+    /// scheduler selects under `min(global budget, max_gflips)`.
+    pub fn max_gflips(mut self, g: f64) -> Self {
+        self.max_gflips = Some(g);
+        self
+    }
+
+    pub fn priority(mut self, p: Priority) -> Self {
+        self.priority = p;
+        self
+    }
+
+    /// Bypass policy selection: serve on the named operating point.
+    pub fn pin_point(mut self, name: impl Into<String>) -> Self {
+        self.pin = Some(name.into());
+        self
+    }
+
+    /// Opaque trace tag, echoed back on the [`Response`].
+    pub fn tag(mut self, t: impl Into<String>) -> Self {
+        self.tag = Some(t.into());
+        self
+    }
+}
+
+/// One served response.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Response {
+    pub output: Vec<f32>,
+    /// Operating point that served the request.
+    pub point: String,
+    pub latency: Duration,
+    /// Energy charged to this request (Giga bit flips).
+    pub giga_flips: f64,
+    /// Trace tag from the request, if any.
+    pub tag: Option<String>,
+}
+
+/// Handle for one in-flight request.
+///
+/// Dropping a `Ticket` whose result has not been taken cancels the
+/// request if it is still queued: the scheduler discards it without
+/// executing.
+pub struct Ticket {
+    pub(crate) rx: mpsc::Receiver<Result<Response, ServeError>>,
+    pub(crate) cancelled: Arc<AtomicBool>,
+    pub(crate) done: bool,
+}
+
+impl Ticket {
+    /// Block until the result arrives.
+    pub fn wait(mut self) -> Result<Response, ServeError> {
+        self.done = true;
+        match self.rx.recv() {
+            Ok(r) => r,
+            Err(_) => Err(ServeError::ServerStopped),
+        }
+    }
+
+    /// Wait up to `d`; `None` on timeout (the ticket stays live — call
+    /// again, or drop it to cancel a still-queued request).
+    pub fn wait_timeout(&mut self, d: Duration) -> Option<Result<Response, ServeError>> {
+        if self.done {
+            return None;
+        }
+        match self.rx.recv_timeout(d) {
+            Ok(r) => {
+                self.done = true;
+                Some(r)
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => None,
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                self.done = true;
+                Some(Err(ServeError::ServerStopped))
+            }
+        }
+    }
+
+    /// Non-blocking poll; `None` while the request is still in flight
+    /// (or after the result has already been taken).
+    pub fn try_get(&mut self) -> Option<Result<Response, ServeError>> {
+        if self.done {
+            return None;
+        }
+        match self.rx.try_recv() {
+            Ok(r) => {
+                self.done = true;
+                Some(r)
+            }
+            Err(mpsc::TryRecvError::Empty) => None,
+            Err(mpsc::TryRecvError::Disconnected) => {
+                self.done = true;
+                Some(Err(ServeError::ServerStopped))
+            }
+        }
+    }
+}
+
+impl Drop for Ticket {
+    fn drop(&mut self) {
+        if !self.done {
+            self.cancelled.store(true, Ordering::Relaxed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_defaults_and_chaining() {
+        let r = InferRequest::new(vec![1.0, 2.0]);
+        assert_eq!(r.priority, Priority::Normal);
+        assert!(r.deadline.is_none() && r.max_gflips.is_none() && r.pin.is_none());
+        let r = r
+            .deadline(Duration::from_millis(5))
+            .max_gflips(0.25)
+            .priority(Priority::Hi)
+            .pin_point("p8")
+            .tag("t");
+        assert_eq!(r.deadline, Some(Duration::from_millis(5)));
+        assert_eq!(r.max_gflips, Some(0.25));
+        assert_eq!(r.priority, Priority::Hi);
+        assert_eq!(r.pin.as_deref(), Some("p8"));
+        assert_eq!(r.tag.as_deref(), Some("t"));
+    }
+
+    #[test]
+    fn ticket_drop_sets_cancel_flag() {
+        let (_tx, rx) = mpsc::channel();
+        let cancelled = Arc::new(AtomicBool::new(false));
+        let t = Ticket { rx, cancelled: cancelled.clone(), done: false };
+        drop(t);
+        assert!(cancelled.load(Ordering::Relaxed));
+    }
+
+    #[test]
+    fn ticket_result_taken_only_once() {
+        let (tx, rx) = mpsc::channel();
+        let cancelled = Arc::new(AtomicBool::new(false));
+        let mut t = Ticket { rx, cancelled: cancelled.clone(), done: false };
+        assert!(t.try_get().is_none());
+        tx.send(Err(ServeError::DeadlineExceeded)).unwrap();
+        assert_eq!(t.try_get(), Some(Err(ServeError::DeadlineExceeded)));
+        assert!(t.try_get().is_none());
+        assert!(t.wait_timeout(Duration::from_millis(1)).is_none());
+        drop(t);
+        // result was taken: dropping must NOT flag a cancellation
+        assert!(!cancelled.load(Ordering::Relaxed));
+    }
+
+    #[test]
+    fn wait_on_dropped_sender_is_server_stopped() {
+        let (tx, rx) = mpsc::channel::<Result<Response, ServeError>>();
+        drop(tx);
+        let t = Ticket { rx, cancelled: Arc::new(AtomicBool::new(false)), done: false };
+        assert_eq!(t.wait(), Err(ServeError::ServerStopped));
+    }
+
+    #[test]
+    fn priority_lanes_ordered() {
+        assert_eq!(Priority::Hi.lane(), 0);
+        assert_eq!(Priority::Normal.lane(), 1);
+        assert_eq!(Priority::BestEffort.lane(), 2);
+        assert!(Priority::Hi < Priority::BestEffort);
+    }
+}

@@ -1,22 +1,34 @@
-//! The serving loop(s).
+//! The serving loop(s) behind one public entry point.
 //!
-//! Two execution models share one client [`ServerHandle`]:
+//! [`ServerBuilder`] configures the server (`workers`, `queue_depth`,
+//! `max_batch`, `max_wait`, `budget_gflips`) and [`ServerBuilder::serve`]
+//! starts it over a [`Menu`] of operating points:
 //!
-//! - [`Server::start`] — the seed's single worker thread owning a menu
-//!   of boxed [`Engine`]s. Still required for engines that are not
-//!   `Send` (PJRT executables must be constructed *inside* the worker
-//!   via the factory and never cross a thread boundary).
-//! - [`Server::start_pool`] — N workers sharing one request queue and
-//!   one immutable menu of [`SharedPoint`]s. Because a compiled
-//!   [`ExecutionPlan`] is `Send + Sync`, every worker serves every
-//!   operating point through the same `Arc`, with its own reusable
-//!   [`Scratch`] arena — "plan once, execute many, everywhere".
+//! - [`Menu::local`] — a factory that builds boxed [`Engine`]s *on the
+//!   worker thread*. Required for engines that are not `Send` (PJRT
+//!   executables must be constructed inside the worker and never cross
+//!   a thread boundary); always runs exactly one worker.
+//! - [`Menu::shared`] — [`SharedPoint`]s over `Send + Sync` batch
+//!   engines (compiled [`ExecutionPlan`]s), served by `workers`
+//!   threads that share one immutable menu through `Arc`s, each with
+//!   its own [`Scratch`] arena — "plan once, execute many, everywhere".
+//!
+//! Both paths return the same [`Client`]. Requests carry per-request
+//! QoS ([`InferRequest`]): the scheduler groups queued requests by the
+//! operating point [`PowerPolicy`] selects under
+//! `min(global budget, request.max_gflips)`, drains higher-priority
+//! groups first, sheds on a bounded queue, and rejects already-expired
+//! requests without executing them (see [`super::batcher`]).
+//!
+//! [`InferRequest`]: super::request::InferRequest
 
+use super::batcher::{Pending, RequestQueue};
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::policy::{Costed, EnginePoint, PowerPolicy};
-use crate::nn::{ExecutionPlan, Scratch, Tensor};
+use super::request::{InferRequest, Priority, Response, ServeError, Ticket};
+use crate::nn::{ExecutionPlan, PowerMeter, Scratch};
 use anyhow::Result;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -25,8 +37,8 @@ use std::time::{Duration, Instant};
 /// engine.
 ///
 /// PJRT handles are not `Send`, so these engines are constructed
-/// *inside* the worker thread via the factory passed to
-/// [`Server::start`] and never cross a thread boundary afterwards.
+/// *inside* the worker thread via the factory passed to [`Menu::local`]
+/// and never cross a thread boundary afterwards.
 pub trait Engine {
     /// Largest batch one call may carry.
     fn max_batch(&self) -> usize;
@@ -81,15 +93,23 @@ impl Costed for SharedPoint {
 /// Batch engine over a compiled [`ExecutionPlan`] — the native path of
 /// the worker pool. GEMM-internal threading stays at 1: the pool
 /// parallelizes across requests, not inside them.
+///
+/// The max batch is threaded in from [`ServerBuilder::max_batch`] by
+/// the caller; power meters are pooled and reused across calls instead
+/// of being re-allocated per batch.
 pub struct PlanEngine {
-    pub plan: Arc<ExecutionPlan>,
-    pub sample_shape: Vec<usize>,
-    pub max_batch: usize,
+    plan: Arc<ExecutionPlan>,
+    max_batch: usize,
+    meters: Mutex<Vec<PowerMeter>>,
 }
 
 impl PlanEngine {
-    pub fn new(plan: Arc<ExecutionPlan>, sample_shape: Vec<usize>) -> PlanEngine {
-        PlanEngine { plan, sample_shape, max_batch: 64 }
+    pub fn new(plan: Arc<ExecutionPlan>, max_batch: usize) -> PlanEngine {
+        PlanEngine { plan, max_batch: max_batch.max(1), meters: Mutex::new(Vec::new()) }
+    }
+
+    pub fn plan(&self) -> &Arc<ExecutionPlan> {
+        &self.plan
     }
 }
 
@@ -98,68 +118,79 @@ impl BatchEngine for PlanEngine {
         self.max_batch
     }
     fn sample_len(&self) -> usize {
-        self.sample_shape.iter().product()
+        self.plan.input_shape().iter().product()
     }
     fn infer_batch(&self, x: &[f32], n: usize, scratch: &mut Scratch) -> Result<Vec<f32>> {
-        let mut shape = vec![n];
-        shape.extend_from_slice(&self.sample_shape);
-        let t = Tensor::new(shape, x.to_vec())?;
-        let mut meter = self.plan.new_meter();
-        Ok(self.plan.forward_batch(&t, scratch, &mut meter, 1)?.data)
+        let mut meter = {
+            let mut pool = self.meters.lock().expect("meter pool poisoned");
+            pool.pop().unwrap_or_else(|| self.plan.new_meter())
+        };
+        meter.reset();
+        // borrowed-slice forward: no per-batch input copy
+        let out = self.plan.forward_slice(x, n, scratch, &mut meter, 1);
+        self.meters.lock().expect("meter pool poisoned").push(meter);
+        Ok(out?.data)
     }
 }
 
-/// Native-engine adapter for the single-worker server (serves without
-/// PJRT artifacts). Owns its scratch arena, reused across requests.
+/// Native-engine adapter for the single-worker (local-menu) server.
+/// Owns its scratch arena and meter, reused across requests.
 pub struct NativeEngine {
     plan: Arc<ExecutionPlan>,
-    sample_shape: Vec<usize>,
+    max_batch: usize,
     scratch: Scratch,
+    meter: PowerMeter,
 }
 
 impl NativeEngine {
-    pub fn new(qm: &crate::nn::QuantizedModel, sample_shape: Vec<usize>) -> NativeEngine {
-        NativeEngine { plan: qm.plan(), sample_shape, scratch: Scratch::new() }
+    pub fn new(qm: &crate::nn::QuantizedModel, max_batch: usize) -> NativeEngine {
+        NativeEngine::from_plan(qm.plan(), max_batch)
     }
 
-    pub fn from_plan(plan: Arc<ExecutionPlan>, sample_shape: Vec<usize>) -> NativeEngine {
-        NativeEngine { plan, sample_shape, scratch: Scratch::new() }
+    pub fn from_plan(plan: Arc<ExecutionPlan>, max_batch: usize) -> NativeEngine {
+        let meter = plan.new_meter();
+        NativeEngine { plan, max_batch: max_batch.max(1), scratch: Scratch::new(), meter }
     }
 }
 
 impl Engine for NativeEngine {
     fn max_batch(&self) -> usize {
-        64
+        self.max_batch
     }
     fn sample_len(&self) -> usize {
-        self.sample_shape.iter().product()
+        self.plan.input_shape().iter().product()
     }
     fn infer(&mut self, x: &[f32], n: usize) -> Result<Vec<f32>> {
-        let mut shape = vec![n];
-        shape.extend_from_slice(&self.sample_shape);
-        let t = Tensor::new(shape, x.to_vec())?;
-        let mut meter = self.plan.new_meter();
+        self.meter.reset();
         // single-worker server: the GEMMs may use the full thread budget
         let threads = crate::nn::eval::n_threads();
         Ok(self
             .plan
-            .forward_batch(&t, &mut self.scratch, &mut meter, threads)?
+            .forward_slice(x, n, &mut self.scratch, &mut self.meter, threads)?
             .data)
     }
 }
 
-/// Server configuration.
+/// Server configuration (all knobs of [`ServerBuilder`]).
 #[derive(Clone, Copy, Debug)]
 pub struct ServerConfig {
+    /// Worker threads (shared menus only; a local menu always runs 1).
+    pub workers: usize,
+    /// Bounded queue depth; admission sheds with `QueueFull` beyond it.
+    pub queue_depth: usize,
+    /// Largest batch the scheduler assembles.
     pub max_batch: usize,
+    /// How long a worker waits to fill a batch.
     pub max_wait: Duration,
-    /// Initial energy budget per sample, Giga bit flips.
+    /// Initial global energy budget per sample, Giga bit flips.
     pub budget_gflips: f64,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
         ServerConfig {
+            workers: 1,
+            queue_depth: 256,
             max_batch: 8,
             max_wait: Duration::from_millis(2),
             budget_gflips: f64::INFINITY,
@@ -167,89 +198,299 @@ impl Default for ServerConfig {
     }
 }
 
-struct Request {
-    input: Vec<f32>,
-    submitted: Instant,
-    resp: mpsc::Sender<Response>,
+/// The operating-point menu a server serves.
+pub enum Menu {
+    /// Engines built *on* the worker thread (may be `!Send`, e.g.
+    /// PJRT executables). Always served by exactly one worker.
+    Local(Box<dyn FnOnce() -> Result<Vec<EnginePoint>> + Send>),
+    /// `Send + Sync` points shared by a worker pool through `Arc`s.
+    Shared(Vec<SharedPoint>),
 }
 
-/// Worker mailbox message.
-enum Msg {
-    Req(Request),
-    /// Graceful stop (cloned handles may outlive the server, so a
-    /// sender-disconnect alone cannot signal shutdown). One `Stop`
-    /// terminates exactly one worker.
-    Stop,
+impl Menu {
+    /// Menu built on the worker thread (single-worker; `!Send` safe).
+    pub fn local<F>(factory: F) -> Menu
+    where
+        F: FnOnce() -> Result<Vec<EnginePoint>> + Send + 'static,
+    {
+        Menu::Local(Box::new(factory))
+    }
+
+    /// Shared menu for the worker pool.
+    pub fn shared(points: Vec<SharedPoint>) -> Menu {
+        Menu::Shared(points)
+    }
 }
 
-/// Collect a batch of requests; returns (batch, stop_seen). `None`
-/// means the channel closed or a stop arrived with nothing pending.
-fn collect_requests(
-    rx: &mpsc::Receiver<Msg>,
-    max_batch: usize,
-    max_wait: Duration,
-) -> Option<(Vec<Request>, bool)> {
-    let first = loop {
-        match rx.recv() {
-            Ok(Msg::Req(r)) => break r,
-            Ok(Msg::Stop) | Err(_) => return None,
-        }
-    };
-    let mut batch = vec![first];
-    let mut stop = false;
-    let deadline = Instant::now() + max_wait;
-    while batch.len() < max_batch && !stop {
-        let now = Instant::now();
-        if now >= deadline {
-            break;
-        }
-        match rx.recv_timeout(deadline - now) {
-            Ok(Msg::Req(r)) => batch.push(r),
-            Ok(Msg::Stop) => stop = true,
-            Err(_) => break,
+/// Builder for the one serving entry point.
+///
+/// ```ignore
+/// let srv = ServerBuilder::new()
+///     .workers(8)
+///     .queue_depth(512)
+///     .max_batch(16)
+///     .max_wait(Duration::from_millis(1))
+///     .budget_gflips(0.05)
+///     .serve(Menu::shared(points))?;
+/// let client = srv.client();
+/// ```
+#[derive(Clone, Copy, Debug)]
+pub struct ServerBuilder {
+    config: ServerConfig,
+}
+
+impl Default for ServerBuilder {
+    fn default() -> Self {
+        ServerBuilder::new()
+    }
+}
+
+impl ServerBuilder {
+    pub fn new() -> ServerBuilder {
+        ServerBuilder { config: ServerConfig::default() }
+    }
+
+    /// Start from an existing config.
+    pub fn from_config(config: ServerConfig) -> ServerBuilder {
+        ServerBuilder { config }
+    }
+
+    /// Worker threads for shared menus (clamped to ≥ 1). Local menus
+    /// always run exactly one worker regardless.
+    pub fn workers(mut self, n: usize) -> Self {
+        self.config.workers = n.max(1);
+        self
+    }
+
+    /// Bounded queue depth (clamped to ≥ 1): admission control sheds
+    /// with [`ServeError::QueueFull`] beyond it.
+    pub fn queue_depth(mut self, d: usize) -> Self {
+        self.config.queue_depth = d.max(1);
+        self
+    }
+
+    /// Largest batch the scheduler assembles (engines may split it
+    /// further across calls).
+    pub fn max_batch(mut self, b: usize) -> Self {
+        self.config.max_batch = b.max(1);
+        self
+    }
+
+    /// How long a worker waits to fill a batch.
+    pub fn max_wait(mut self, t: Duration) -> Self {
+        self.config.max_wait = t;
+        self
+    }
+
+    /// Initial global energy budget per sample (Giga bit flips).
+    pub fn budget_gflips(mut self, g: f64) -> Self {
+        self.config.budget_gflips = g;
+        self
+    }
+
+    /// Start the server over `menu`. Blocks until the menu is built
+    /// and validated (engine factories run first), so a returned
+    /// `Server` is ready to serve.
+    pub fn serve(self, menu: Menu) -> Result<Server> {
+        let cfg = self.config;
+        let metrics = Arc::new(Metrics::new());
+        let queue = Arc::new(RequestQueue::new(cfg.queue_depth, metrics.clone()));
+        let budget_bits = Arc::new(AtomicU64::new(cfg.budget_gflips.to_bits()));
+        match menu {
+            Menu::Shared(points) => {
+                let sample_len = validate_menu(points.iter().map(|p| p.engine.sample_len()))?;
+                let policy = Arc::new(PowerPolicy::new(points));
+                let mut workers = Vec::with_capacity(cfg.workers);
+                for _ in 0..cfg.workers.max(1) {
+                    let queue = queue.clone();
+                    let policy = policy.clone();
+                    let metrics = metrics.clone();
+                    let budget_bits = budget_bits.clone();
+                    workers.push(std::thread::spawn(move || {
+                        pool_worker(&queue, &policy, &metrics, &budget_bits, cfg)
+                    }));
+                }
+                let client = Client { queue: queue.clone(), budget_bits, metrics, sample_len };
+                Ok(Server { client, queue, workers })
+            }
+            Menu::Local(factory) => {
+                let (ready_tx, ready_rx) = mpsc::channel::<Result<usize>>();
+                let wq = queue.clone();
+                let wm = metrics.clone();
+                let wb = budget_bits.clone();
+                let worker = std::thread::spawn(move || {
+                    let mut policy = match build_local(factory) {
+                        Ok((policy, sample_len)) => {
+                            let _ = ready_tx.send(Ok(sample_len));
+                            policy
+                        }
+                        Err(e) => {
+                            let _ = ready_tx.send(Err(e));
+                            return;
+                        }
+                    };
+                    local_worker(&wq, &mut policy, &wm, &wb, cfg);
+                });
+                let sample_len = ready_rx
+                    .recv()
+                    .map_err(|_| anyhow::anyhow!("server worker died during startup"))??;
+                let client = Client { queue: queue.clone(), budget_bits, metrics, sample_len };
+                Ok(Server { client, queue, workers: vec![worker] })
+            }
         }
     }
-    Some((batch, stop))
 }
 
-/// One served response.
-#[derive(Clone, Debug)]
-pub struct Response {
-    pub output: Vec<f32>,
-    /// Operating point that served the request.
-    pub point: String,
-    pub latency: Duration,
-    /// Energy charged to this request (Giga bit flips).
-    pub giga_flips: f64,
+/// Non-empty menu with one agreed sample length.
+fn validate_menu(sample_lens: impl IntoIterator<Item = usize>) -> Result<usize> {
+    let mut lens = sample_lens.into_iter();
+    let first = lens.next().ok_or_else(|| anyhow::anyhow!("empty operating-point menu"))?;
+    for l in lens {
+        anyhow::ensure!(l == first, "menu sample lengths disagree: {l} vs {first}");
+    }
+    Ok(first)
 }
 
-/// Client handle: submit requests, change the budget, read metrics.
+fn build_local(
+    factory: Box<dyn FnOnce() -> Result<Vec<EnginePoint>> + Send>,
+) -> Result<(PowerPolicy<EnginePoint>, usize)> {
+    let points = factory()?;
+    let sample_len = validate_menu(points.iter().map(|p| p.engine.sample_len()))?;
+    Ok((PowerPolicy::new(points), sample_len))
+}
+
+/// QoS classifier: pinned point by name, otherwise the best point
+/// under `min(global budget, request cap)`.
+fn classify_for<'a, P: Costed>(
+    policy: &'a PowerPolicy<P>,
+    budget_bits: &'a AtomicU64,
+) -> impl FnMut(&Pending) -> Result<usize, ServeError> + 'a {
+    move |p: &Pending| {
+        if let Some(pin) = &p.pin {
+            return policy
+                .index_of(pin)
+                .ok_or_else(|| ServeError::UnknownPoint(pin.clone()));
+        }
+        let global = f64::from_bits(budget_bits.load(Ordering::Relaxed));
+        let budget = p.max_gflips.map_or(global, |cap| global.min(cap));
+        Ok(policy.select(budget))
+    }
+}
+
+/// Stops the queue when a worker unwinds (a panicking engine must not
+/// leave queued tickets hanging and the client accepting doomed
+/// requests); a normal worker exit only re-stops an already-stopped
+/// queue.
+struct StopQueueOnDrop<'a>(&'a RequestQueue);
+
+impl Drop for StopQueueOnDrop<'_> {
+    fn drop(&mut self) {
+        self.0.stop();
+    }
+}
+
+/// Pool worker: collect a point-coherent batch, execute it on the
+/// shared engine with this worker's scratch.
+fn pool_worker(
+    queue: &RequestQueue,
+    policy: &PowerPolicy<SharedPoint>,
+    metrics: &Metrics,
+    budget_bits: &AtomicU64,
+    cfg: ServerConfig,
+) {
+    let _guard = StopQueueOnDrop(queue);
+    let mut scratch = Scratch::new();
+    loop {
+        let collected = {
+            let mut classify = classify_for(policy, budget_bits);
+            queue.collect(cfg.max_batch, cfg.max_wait, &mut classify)
+        };
+        let Some((batch, idx)) = collected else { break };
+        let point = policy.point(idx);
+        let eng = point.engine.as_ref();
+        respond_batch(
+            &point.name,
+            point.giga_flips_per_sample,
+            eng.sample_len(),
+            eng.max_batch(),
+            batch,
+            metrics,
+            |x, n| eng.infer_batch(x, n, &mut scratch),
+        );
+    }
+}
+
+/// Single worker owning a menu of boxed (possibly `!Send`) engines.
+fn local_worker(
+    queue: &RequestQueue,
+    policy: &mut PowerPolicy<EnginePoint>,
+    metrics: &Metrics,
+    budget_bits: &AtomicU64,
+    cfg: ServerConfig,
+) {
+    let _guard = StopQueueOnDrop(queue);
+    loop {
+        let collected = {
+            let mut classify = classify_for(&*policy, budget_bits);
+            queue.collect(cfg.max_batch, cfg.max_wait, &mut classify)
+        };
+        let Some((batch, idx)) = collected else { break };
+        let (name, gf) = {
+            let p = policy.point(idx);
+            (p.name.clone(), p.giga_flips_per_sample)
+        };
+        let eng = policy.point_mut(idx).engine.as_mut();
+        let (sample_len, max_b) = (eng.sample_len(), eng.max_batch());
+        respond_batch(&name, gf, sample_len, max_b, batch, metrics, |x, n| eng.infer(x, n));
+    }
+}
+
+/// Client handle: submit QoS-tagged requests, change the global
+/// budget, read metrics. Cheap to clone; every clone feeds the same
+/// server.
 #[derive(Clone)]
-pub struct ServerHandle {
-    tx: mpsc::Sender<Msg>,
+pub struct Client {
+    queue: Arc<RequestQueue>,
     budget_bits: Arc<AtomicU64>,
     metrics: Arc<Metrics>,
     sample_len: usize,
 }
 
-impl ServerHandle {
-    /// Submit one sample; returns the channel the response arrives on.
-    pub fn submit(&self, input: Vec<f32>) -> Result<mpsc::Receiver<Response>> {
-        anyhow::ensure!(input.len() == self.sample_len, "bad input length {}", input.len());
+impl Client {
+    /// Submit one request; returns the [`Ticket`] its result arrives
+    /// on. Sheds immediately with [`ServeError::QueueFull`] when the
+    /// bounded queue is at depth, and rejects inputs of the wrong
+    /// length with [`ServeError::BadInput`].
+    pub fn submit(&self, req: InferRequest) -> Result<Ticket, ServeError> {
+        if req.input.len() != self.sample_len {
+            return Err(ServeError::BadInput { expected: self.sample_len, got: req.input.len() });
+        }
         let (tx, rx) = mpsc::channel();
-        self.tx
-            .send(Msg::Req(Request { input, submitted: Instant::now(), resp: tx }))
-            .map_err(|_| anyhow::anyhow!("server stopped"))?;
-        Ok(rx)
+        let cancelled = Arc::new(AtomicBool::new(false));
+        let now = Instant::now();
+        self.queue.push(Pending {
+            input: req.input,
+            submitted: now,
+            deadline: req.deadline.map(|d| now + d),
+            priority: req.priority,
+            max_gflips: req.max_gflips,
+            pin: req.pin,
+            tag: req.tag,
+            cancelled: cancelled.clone(),
+            resp: tx,
+        })?;
+        Ok(Ticket { rx, cancelled, done: false })
     }
 
-    /// Blocking convenience: submit and wait.
-    pub fn infer(&self, input: Vec<f32>) -> Result<Response> {
-        Ok(self.submit(input)?.recv()?)
+    /// Blocking convenience: submit with default QoS and wait.
+    pub fn infer(&self, input: Vec<f32>) -> Result<Response, ServeError> {
+        self.submit(InferRequest::new(input))?.wait()
     }
 
-    /// Change the per-sample energy budget at runtime — the paper's
-    /// "traverse the power-accuracy trade-off at deployment time".
+    /// Change the global per-sample energy budget at runtime — the
+    /// paper's "traverse the power-accuracy trade-off at deployment
+    /// time". Per-request `max_gflips` caps are applied *on top* of
+    /// this (the scheduler selects under the minimum of the two).
     pub fn set_budget(&self, gflips: f64) {
         self.budget_bits.store(gflips.to_bits(), Ordering::Relaxed);
     }
@@ -261,121 +502,34 @@ impl ServerHandle {
     pub fn metrics(&self) -> MetricsSnapshot {
         self.metrics.snapshot()
     }
+
+    /// Flattened per-sample input length the menu expects.
+    pub fn sample_len(&self) -> usize {
+        self.sample_len
+    }
+
+    /// Admission-control bound.
+    pub fn queue_depth(&self) -> usize {
+        self.queue.depth()
+    }
 }
 
-/// The server: one or more worker threads behind a [`ServerHandle`].
+/// The server: one or more worker threads behind a [`Client`]. Built
+/// via [`ServerBuilder`] (see the module docs for the two menu kinds).
 pub struct Server {
-    handle: ServerHandle,
+    client: Client,
+    queue: Arc<RequestQueue>,
     workers: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl Server {
-    /// Start the single-worker server. `factory` builds the
-    /// operating-point menu on the worker thread (PJRT executables are
-    /// not `Send`); `sample_len` is the flattened per-sample input
-    /// length the menu expects.
-    pub fn start<F>(factory: F, sample_len: usize, config: ServerConfig) -> Result<Server>
-    where
-        F: FnOnce() -> Result<Vec<EnginePoint>> + Send + 'static,
-    {
-        let (tx, rx) = mpsc::channel::<Msg>();
-        let budget_bits = Arc::new(AtomicU64::new(config.budget_gflips.to_bits()));
-        let metrics = Arc::new(Metrics::new());
-        let handle = ServerHandle {
-            tx,
-            budget_bits: budget_bits.clone(),
-            metrics: metrics.clone(),
-            sample_len,
-        };
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-        let worker = std::thread::spawn(move || {
-            let mut policy = match factory() {
-                Ok(points) if !points.is_empty() => {
-                    let _ = ready_tx.send(Ok(()));
-                    PowerPolicy::new(points)
-                }
-                Ok(_) => {
-                    let _ = ready_tx.send(Err(anyhow::anyhow!("empty operating-point menu")));
-                    return;
-                }
-                Err(e) => {
-                    let _ = ready_tx.send(Err(e));
-                    return;
-                }
-            };
-            while let Some((batch, stop)) = collect_requests(&rx, config.max_batch, config.max_wait)
-            {
-                let budget = f64::from_bits(budget_bits.load(Ordering::Relaxed));
-                let idx = policy.select(budget);
-                let (name, gf) = {
-                    let p = policy.point(idx);
-                    (p.name.clone(), p.giga_flips_per_sample)
-                };
-                serve_batch(policy.point_mut(idx), &name, gf, batch, &metrics);
-                if stop {
-                    break;
-                }
-            }
-        });
-        ready_rx
-            .recv()
-            .map_err(|_| anyhow::anyhow!("server worker died during startup"))??;
-        Ok(Server { handle, workers: vec![worker] })
+    /// Entry point: `Server::builder().workers(4)...serve(menu)`.
+    pub fn builder() -> ServerBuilder {
+        ServerBuilder::new()
     }
 
-    /// Start a pool of `n_workers` threads over one shared menu. All
-    /// workers serve all points; batching, point selection and budget
-    /// traversal behave exactly as in the single-worker server, but
-    /// batches execute concurrently.
-    pub fn start_pool(
-        points: Vec<SharedPoint>,
-        sample_len: usize,
-        config: ServerConfig,
-        n_workers: usize,
-    ) -> Result<Server> {
-        anyhow::ensure!(!points.is_empty(), "empty operating-point menu");
-        let n_workers = n_workers.max(1);
-        let (tx, rx) = mpsc::channel::<Msg>();
-        let rx = Arc::new(Mutex::new(rx));
-        let budget_bits = Arc::new(AtomicU64::new(config.budget_gflips.to_bits()));
-        let metrics = Arc::new(Metrics::new());
-        let policy = Arc::new(PowerPolicy::new(points));
-        let handle = ServerHandle {
-            tx,
-            budget_bits: budget_bits.clone(),
-            metrics: metrics.clone(),
-            sample_len,
-        };
-        let mut workers = Vec::with_capacity(n_workers);
-        for _ in 0..n_workers {
-            let rx = rx.clone();
-            let policy = policy.clone();
-            let metrics = metrics.clone();
-            let budget_bits = budget_bits.clone();
-            workers.push(std::thread::spawn(move || {
-                let mut scratch = Scratch::new();
-                loop {
-                    // hold the queue lock only while batching; execution
-                    // below runs in parallel across workers
-                    let collected = {
-                        let guard = rx.lock().expect("pool queue poisoned");
-                        collect_requests(&guard, config.max_batch, config.max_wait)
-                    };
-                    let Some((batch, stop)) = collected else { break };
-                    let budget = f64::from_bits(budget_bits.load(Ordering::Relaxed));
-                    let point = policy.point(policy.select(budget));
-                    serve_batch_shared(point, batch, &metrics, &mut scratch);
-                    if stop {
-                        break;
-                    }
-                }
-            }));
-        }
-        Ok(Server { handle, workers })
-    }
-
-    pub fn handle(&self) -> ServerHandle {
-        self.handle.clone()
+    pub fn client(&self) -> Client {
+        self.client.clone()
     }
 
     /// Number of worker threads.
@@ -383,15 +537,21 @@ impl Server {
         self.workers.len()
     }
 
-    /// Stop all workers (requests already queued before the stops are
-    /// drained; cloned handles then observe send errors).
+    /// Stop accepting requests, drain what was admitted, join all
+    /// workers. Clients then observe [`ServeError::ServerStopped`].
     pub fn shutdown(mut self) {
-        for _ in 0..self.workers.len() {
-            let _ = self.handle.tx.send(Msg::Stop);
-        }
+        self.queue.stop();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        // a server dropped without `shutdown` still releases its
+        // workers (they exit after draining; not joined here)
+        self.queue.stop();
     }
 }
 
@@ -402,12 +562,25 @@ fn respond_batch<F>(
     gf_per_sample: f64,
     sample_len: usize,
     max_b: usize,
-    batch: Vec<Request>,
+    batch: Vec<Pending>,
     metrics: &Metrics,
     mut infer: F,
 ) where
     F: FnMut(&[f32], usize) -> Result<Vec<f32>>,
 {
+    // last-moment check: skip requests whose ticket was dropped while
+    // the batch was being assembled. Deadlines need no re-check here —
+    // they gate dequeueing, and the collect fill-wait is capped by the
+    // earliest deadline in the batch, so execution starts in time.
+    let mut live = Vec::with_capacity(batch.len());
+    for r in batch {
+        if r.cancelled.load(Ordering::Relaxed) {
+            metrics.record_cancelled();
+        } else {
+            live.push(r);
+        }
+    }
+    let batch = live;
     let max_b = max_b.max(1);
     let mut start = 0;
     while start < batch.len() {
@@ -420,9 +593,9 @@ fn respond_batch<F>(
         match infer(&flat, n) {
             Ok(out) => {
                 let ol = out.len() / n;
-                let lats: Vec<f64> = chunk
+                let lats: Vec<(f64, Priority)> = chunk
                     .iter()
-                    .map(|r| r.submitted.elapsed().as_secs_f64() * 1e6)
+                    .map(|r| (r.submitted.elapsed().as_secs_f64() * 1e6, r.priority))
                     .collect();
                 let batch_gf = if gf_per_sample.is_finite() {
                     gf_per_sample * n as f64
@@ -431,62 +604,35 @@ fn respond_batch<F>(
                 };
                 // record *before* responding so a client that has its
                 // response always observes it in the metrics
-                metrics.record_batch(name, n, &lats, batch_gf);
+                metrics.record_batch(name, &lats, batch_gf);
                 for (i, r) in chunk.iter().enumerate() {
-                    let _ = r.resp.send(Response {
+                    let _ = r.resp.send(Ok(Response {
                         output: out[i * ol..(i + 1) * ol].to_vec(),
                         point: name.to_string(),
-                        latency: Duration::from_secs_f64(lats[i] * 1e-6),
+                        latency: Duration::from_secs_f64(lats[i].0 * 1e-6),
                         giga_flips: if gf_per_sample.is_finite() { gf_per_sample } else { 0.0 },
-                    });
+                        tag: r.tag.clone(),
+                    }));
                 }
             }
             Err(e) => {
-                // drop the senders: receivers observe RecvError
-                eprintln!("serve error on {name}: {e:#}");
+                metrics.record_engine_failure();
+                let msg = format!("{e:#}");
+                eprintln!("serve error on {name}: {msg}");
+                for r in chunk {
+                    let _ = r.resp.send(Err(ServeError::Engine(msg.clone())));
+                }
             }
         }
         start += n;
     }
 }
 
-fn serve_batch(
-    point: &mut EnginePoint,
-    name: &str,
-    gf_per_sample: f64,
-    batch: Vec<Request>,
-    metrics: &Metrics,
-) {
-    let eng = point.engine.as_mut();
-    let sample_len = eng.sample_len();
-    let max_b = eng.max_batch();
-    respond_batch(name, gf_per_sample, sample_len, max_b, batch, metrics, |x, n| {
-        eng.infer(x, n)
-    });
-}
-
-fn serve_batch_shared(
-    point: &SharedPoint,
-    batch: Vec<Request>,
-    metrics: &Metrics,
-    scratch: &mut Scratch,
-) {
-    let eng = point.engine.as_ref();
-    respond_batch(
-        &point.name,
-        point.giga_flips_per_sample,
-        eng.sample_len(),
-        eng.max_batch(),
-        batch,
-        metrics,
-        |x, n| eng.infer_batch(x, n, scratch),
-    );
-}
-
 /// Mock engines for unit tests.
 #[cfg(test)]
 pub(crate) mod tests_support {
     use super::*;
+    use std::sync::atomic::AtomicUsize;
 
     /// Echo-sum engine: out[j] = sum(input) + j.
     pub struct MockEngine {
@@ -535,11 +681,98 @@ pub(crate) mod tests_support {
             Ok(self.compute(x, n))
         }
     }
+
+    /// Shared observability for [`GateEngine`]s.
+    #[derive(Clone, Default)]
+    pub struct Gate {
+        /// Engines block in `infer` until this is set.
+        pub release: Arc<AtomicBool>,
+        /// Number of engine calls entered (incl. currently blocked).
+        pub entered: Arc<AtomicUsize>,
+        /// First element of every sample executed, in service order.
+        pub served: Arc<Mutex<Vec<f32>>>,
+    }
+
+    impl Gate {
+        pub fn new() -> Gate {
+            Gate::default()
+        }
+
+        pub fn open(&self) {
+            self.release.store(true, Ordering::SeqCst);
+        }
+
+        /// Spin until `n` engine calls have been entered.
+        pub fn wait_entered(&self, n: usize) {
+            let t0 = Instant::now();
+            while self.entered.load(Ordering::SeqCst) < n {
+                assert!(t0.elapsed() < Duration::from_secs(5), "gate wait timed out");
+                std::thread::sleep(Duration::from_micros(200));
+            }
+        }
+
+        pub fn served(&self) -> Vec<f32> {
+            self.served.lock().unwrap().clone()
+        }
+    }
+
+    /// MockEngine that blocks inside `infer` until its gate opens —
+    /// for stalled-worker tests (queue-full shedding, deadline expiry,
+    /// cancellation, priority draining).
+    pub struct GateEngine {
+        pub inner: MockEngine,
+        pub gate: Gate,
+    }
+
+    impl GateEngine {
+        pub fn new(max_b: usize, in_len: usize, out_len: usize, gate: Gate) -> Self {
+            GateEngine { inner: MockEngine::new(max_b, in_len, out_len), gate }
+        }
+
+        fn run(&self, x: &[f32], n: usize) -> Vec<f32> {
+            self.gate.entered.fetch_add(1, Ordering::SeqCst);
+            let t0 = Instant::now();
+            while !self.gate.release.load(Ordering::SeqCst) {
+                assert!(t0.elapsed() < Duration::from_secs(5), "gate never opened");
+                std::thread::sleep(Duration::from_micros(200));
+            }
+            let mut served = self.gate.served.lock().unwrap();
+            for i in 0..n {
+                served.push(x[i * self.inner.in_len]);
+            }
+            drop(served);
+            self.inner.compute(x, n)
+        }
+    }
+
+    impl Engine for GateEngine {
+        fn max_batch(&self) -> usize {
+            self.inner.max_b
+        }
+        fn sample_len(&self) -> usize {
+            self.inner.in_len
+        }
+        fn infer(&mut self, x: &[f32], n: usize) -> Result<Vec<f32>> {
+            Ok(self.run(x, n))
+        }
+    }
+
+    impl BatchEngine for GateEngine {
+        fn max_batch(&self) -> usize {
+            self.inner.max_b
+        }
+        fn sample_len(&self) -> usize {
+            self.inner.in_len
+        }
+        fn infer_batch(&self, x: &[f32], n: usize, _scratch: &mut Scratch) -> Result<Vec<f32>> {
+            Ok(self.run(x, n))
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
-    use super::tests_support::MockEngine;
+    use super::tests_support::{Gate, GateEngine, MockEngine};
     use super::*;
 
     fn points() -> Vec<EnginePoint> {
@@ -572,50 +805,120 @@ mod tests {
         ]
     }
 
+    /// Both gated points share one `Gate`, so a single worker can be
+    /// stalled deterministically while requests pile up behind it.
+    fn gated_points(gate: &Gate) -> Vec<SharedPoint> {
+        vec![
+            SharedPoint {
+                name: "cheap".into(),
+                giga_flips_per_sample: 0.1,
+                engine: Arc::new(GateEngine::new(4, 3, 2, gate.clone())),
+            },
+            SharedPoint {
+                name: "rich".into(),
+                giga_flips_per_sample: 0.9,
+                engine: Arc::new(GateEngine::new(4, 3, 2, gate.clone())),
+            },
+        ]
+    }
+
     #[test]
-    fn serves_and_responds() {
-        let srv = Server::start(|| Ok(points()), 3, ServerConfig {
-            budget_gflips: 1.0,
-            ..Default::default()
-        })
-        .unwrap();
-        let h = srv.handle();
-        let r = h.infer(vec![1.0, 2.0, 3.0]).unwrap();
+    fn serves_and_responds_local() {
+        let srv = ServerBuilder::new()
+            .budget_gflips(1.0)
+            .serve(Menu::local(|| Ok(points())))
+            .unwrap();
+        let c = srv.client();
+        assert_eq!(c.sample_len(), 3);
+        let r = c.infer(vec![1.0, 2.0, 3.0]).unwrap();
         assert_eq!(r.output, vec![6.0, 7.0]);
         assert_eq!(r.point, "rich");
+        assert_eq!(r.tag, None);
         srv.shutdown();
     }
 
     #[test]
     fn budget_traversal_switches_point() {
-        let srv = Server::start(|| Ok(points()), 3, ServerConfig {
-            budget_gflips: 1.0,
-            ..Default::default()
-        })
-        .unwrap();
-        let h = srv.handle();
-        assert_eq!(h.infer(vec![0.0; 3]).unwrap().point, "rich");
-        h.set_budget(0.2);
-        assert_eq!(h.infer(vec![0.0; 3]).unwrap().point, "cheap");
-        h.set_budget(5.0);
-        assert_eq!(h.infer(vec![0.0; 3]).unwrap().point, "rich");
-        let m = h.metrics();
+        let srv = ServerBuilder::new()
+            .budget_gflips(1.0)
+            .serve(Menu::local(|| Ok(points())))
+            .unwrap();
+        let c = srv.client();
+        assert_eq!(c.infer(vec![0.0; 3]).unwrap().point, "rich");
+        c.set_budget(0.2);
+        assert_eq!(c.infer(vec![0.0; 3]).unwrap().point, "cheap");
+        c.set_budget(5.0);
+        assert_eq!(c.infer(vec![0.0; 3]).unwrap().point, "rich");
+        let m = c.metrics();
         assert_eq!(m.requests, 3);
         srv.shutdown();
     }
 
     #[test]
+    fn per_request_cap_beats_global_budget() {
+        let srv = ServerBuilder::new()
+            .budget_gflips(1.0)
+            .serve(Menu::local(|| Ok(points())))
+            .unwrap();
+        let c = srv.client();
+        let r = c
+            .submit(InferRequest::new(vec![0.0; 3]).max_gflips(0.2))
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(r.point, "cheap");
+        // no cap: global budget alone
+        assert_eq!(c.infer(vec![0.0; 3]).unwrap().point, "rich");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn pinned_point_bypasses_policy_and_unknown_pin_is_typed() {
+        let srv = ServerBuilder::new()
+            .budget_gflips(1.0)
+            .serve(Menu::local(|| Ok(points())))
+            .unwrap();
+        let c = srv.client();
+        let r = c
+            .submit(InferRequest::new(vec![0.0; 3]).pin_point("cheap"))
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(r.point, "cheap");
+        let e = c
+            .submit(InferRequest::new(vec![0.0; 3]).pin_point("nope"))
+            .unwrap()
+            .wait()
+            .unwrap_err();
+        assert_eq!(e, ServeError::UnknownPoint("nope".into()));
+        srv.shutdown();
+    }
+
+    #[test]
+    fn tag_echoed_on_response() {
+        let srv = ServerBuilder::new().serve(Menu::local(|| Ok(points()))).unwrap();
+        let c = srv.client();
+        let r = c
+            .submit(InferRequest::new(vec![0.0; 3]).tag("trace-7"))
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(r.tag.as_deref(), Some("trace-7"));
+        srv.shutdown();
+    }
+
+    #[test]
     fn concurrent_clients_all_served() {
-        let srv = Server::start(|| Ok(points()), 3, ServerConfig::default()).unwrap();
-        let h = srv.handle();
+        let srv = ServerBuilder::new().serve(Menu::local(|| Ok(points()))).unwrap();
+        let c = srv.client();
         let mut joins = Vec::new();
         for t in 0..8 {
-            let h = h.clone();
+            let c = c.clone();
             joins.push(std::thread::spawn(move || {
                 let mut ok = 0;
                 for i in 0..25 {
                     let v = (t * 100 + i) as f32;
-                    let r = h.infer(vec![v, 0.0, 0.0]).unwrap();
+                    let r = c.infer(vec![v, 0.0, 0.0]).unwrap();
                     assert_eq!(r.output[0], v);
                     ok += 1;
                 }
@@ -624,50 +927,69 @@ mod tests {
         }
         let total: usize = joins.into_iter().map(|j| j.join().unwrap()).sum();
         assert_eq!(total, 200);
-        let m = h.metrics();
+        let m = c.metrics();
         assert_eq!(m.requests, 200);
         assert!(m.batches <= 200);
         srv.shutdown();
     }
 
     #[test]
-    fn rejects_bad_input_length() {
-        let srv = Server::start(|| Ok(points()), 3, ServerConfig::default()).unwrap();
-        let h = srv.handle();
-        assert!(h.submit(vec![1.0]).is_err());
+    fn rejects_bad_input_length_typed() {
+        let srv = ServerBuilder::new().serve(Menu::local(|| Ok(points()))).unwrap();
+        let c = srv.client();
+        let e = c.submit(InferRequest::new(vec![1.0])).unwrap_err();
+        assert_eq!(e, ServeError::BadInput { expected: 3, got: 1 });
         srv.shutdown();
+    }
+
+    #[test]
+    fn submit_after_shutdown_is_server_stopped() {
+        let srv = ServerBuilder::new().serve(Menu::shared(shared_points())).unwrap();
+        let c = srv.client();
+        let _ = c.infer(vec![0.0; 3]).unwrap();
+        srv.shutdown();
+        assert_eq!(
+            c.submit(InferRequest::new(vec![0.0; 3])).unwrap_err(),
+            ServeError::ServerStopped
+        );
     }
 
     #[test]
     fn oversized_batches_split_across_engine_calls() {
         // engine max_batch = 4, server max_batch = 16: a burst of 10
         // must still produce 10 correct responses.
-        let srv = Server::start(|| Ok(points()), 3, ServerConfig {
-            max_batch: 16,
-            max_wait: Duration::from_millis(30),
-            budget_gflips: 1.0,
-        })
-        .unwrap();
-        let h = srv.handle();
-        let rxs: Vec<_> = (0..10)
-            .map(|i| h.submit(vec![i as f32, 0.0, 0.0]).unwrap())
+        let srv = ServerBuilder::new()
+            .max_batch(16)
+            .max_wait(Duration::from_millis(30))
+            .budget_gflips(1.0)
+            .serve(Menu::local(|| Ok(points())))
+            .unwrap();
+        let c = srv.client();
+        let tickets: Vec<_> = (0..10)
+            .map(|i| c.submit(InferRequest::new(vec![i as f32, 0.0, 0.0])).unwrap())
             .collect();
-        for (i, rx) in rxs.into_iter().enumerate() {
-            assert_eq!(rx.recv().unwrap().output[0], i as f32);
+        for (i, t) in tickets.into_iter().enumerate() {
+            assert_eq!(t.wait().unwrap().output[0], i as f32);
         }
         srv.shutdown();
     }
 
     #[test]
+    fn empty_menu_is_startup_error() {
+        assert!(ServerBuilder::new().serve(Menu::shared(Vec::new())).is_err());
+        assert!(ServerBuilder::new().serve(Menu::local(|| Ok(Vec::new()))).is_err());
+    }
+
+    #[test]
     fn pool_serves_and_responds() {
-        let srv = Server::start_pool(shared_points(), 3, ServerConfig {
-            budget_gflips: 1.0,
-            ..Default::default()
-        }, 4)
-        .unwrap();
+        let srv = ServerBuilder::new()
+            .workers(4)
+            .budget_gflips(1.0)
+            .serve(Menu::shared(shared_points()))
+            .unwrap();
         assert_eq!(srv.n_workers(), 4);
-        let h = srv.handle();
-        let r = h.infer(vec![1.0, 2.0, 3.0]).unwrap();
+        let c = srv.client();
+        let r = c.infer(vec![1.0, 2.0, 3.0]).unwrap();
         assert_eq!(r.output, vec![6.0, 7.0]);
         assert_eq!(r.point, "rich");
         srv.shutdown();
@@ -675,32 +997,35 @@ mod tests {
 
     #[test]
     fn pool_budget_traversal_switches_point() {
-        let srv = Server::start_pool(shared_points(), 3, ServerConfig {
-            budget_gflips: 1.0,
-            ..Default::default()
-        }, 3)
-        .unwrap();
-        let h = srv.handle();
-        assert_eq!(h.infer(vec![0.0; 3]).unwrap().point, "rich");
-        h.set_budget(0.2);
-        assert_eq!(h.infer(vec![0.0; 3]).unwrap().point, "cheap");
-        h.set_budget(5.0);
-        assert_eq!(h.infer(vec![0.0; 3]).unwrap().point, "rich");
+        let srv = ServerBuilder::new()
+            .workers(3)
+            .budget_gflips(1.0)
+            .serve(Menu::shared(shared_points()))
+            .unwrap();
+        let c = srv.client();
+        assert_eq!(c.infer(vec![0.0; 3]).unwrap().point, "rich");
+        c.set_budget(0.2);
+        assert_eq!(c.infer(vec![0.0; 3]).unwrap().point, "cheap");
+        c.set_budget(5.0);
+        assert_eq!(c.infer(vec![0.0; 3]).unwrap().point, "rich");
         srv.shutdown();
     }
 
     #[test]
     fn pool_concurrent_clients_all_served() {
-        let srv = Server::start_pool(shared_points(), 3, ServerConfig::default(), 4).unwrap();
-        let h = srv.handle();
+        let srv = ServerBuilder::new()
+            .workers(4)
+            .serve(Menu::shared(shared_points()))
+            .unwrap();
+        let c = srv.client();
         let mut joins = Vec::new();
         for t in 0..8 {
-            let h = h.clone();
+            let c = c.clone();
             joins.push(std::thread::spawn(move || {
                 let mut ok = 0;
                 for i in 0..25 {
                     let v = (t * 100 + i) as f32;
-                    let r = h.infer(vec![v, 0.0, 0.0]).unwrap();
+                    let r = c.infer(vec![v, 0.0, 0.0]).unwrap();
                     assert_eq!(r.output[0], v);
                     ok += 1;
                 }
@@ -709,17 +1034,178 @@ mod tests {
         }
         let total: usize = joins.into_iter().map(|j| j.join().unwrap()).sum();
         assert_eq!(total, 200);
-        let m = h.metrics();
-        assert_eq!(m.requests, 200);
+        assert_eq!(c.metrics().requests, 200);
         srv.shutdown();
     }
 
     #[test]
     fn pool_shutdown_stops_every_worker() {
-        let srv = Server::start_pool(shared_points(), 3, ServerConfig::default(), 5).unwrap();
-        let h = srv.handle();
-        let _ = h.infer(vec![0.0; 3]).unwrap();
-        srv.shutdown(); // joins all 5 workers; hangs here if a Stop is lost
-        assert!(h.submit(vec![0.0; 3]).is_err() || h.submit(vec![0.0; 3]).unwrap().recv().is_err());
+        let srv = ServerBuilder::new()
+            .workers(5)
+            .serve(Menu::shared(shared_points()))
+            .unwrap();
+        let c = srv.client();
+        let _ = c.infer(vec![0.0; 3]).unwrap();
+        srv.shutdown(); // joins all 5 workers; hangs here if one is lost
+        assert!(c.submit(InferRequest::new(vec![0.0; 3])).is_err());
+    }
+
+    // --- the new failure surface, under a deterministically stalled worker ---
+
+    #[test]
+    fn queue_full_sheds_under_stalled_worker() {
+        let gate = Gate::new();
+        let srv = ServerBuilder::new()
+            .workers(1)
+            .queue_depth(2)
+            .max_batch(1)
+            .max_wait(Duration::from_micros(100))
+            .budget_gflips(1.0)
+            .serve(Menu::shared(gated_points(&gate)))
+            .unwrap();
+        let c = srv.client();
+        let t1 = c.submit(InferRequest::new(vec![1.0, 0.0, 0.0])).unwrap();
+        gate.wait_entered(1); // worker now blocked inside the engine
+        let t2 = c.submit(InferRequest::new(vec![2.0, 0.0, 0.0])).unwrap();
+        let t3 = c.submit(InferRequest::new(vec![3.0, 0.0, 0.0])).unwrap();
+        let e = c.submit(InferRequest::new(vec![4.0, 0.0, 0.0])).unwrap_err();
+        assert_eq!(e, ServeError::QueueFull { depth: 2 });
+        gate.open();
+        for t in [t1, t2, t3] {
+            t.wait().unwrap();
+        }
+        let m = c.metrics();
+        assert_eq!(m.shed, 1);
+        assert_eq!(m.requests, 3);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn expired_request_rejected_without_execution() {
+        let gate = Gate::new();
+        let srv = ServerBuilder::new()
+            .workers(1)
+            .max_batch(1)
+            .max_wait(Duration::from_micros(100))
+            .budget_gflips(1.0)
+            .serve(Menu::shared(gated_points(&gate)))
+            .unwrap();
+        let c = srv.client();
+        let t1 = c.submit(InferRequest::new(vec![1.0, 0.0, 0.0])).unwrap();
+        gate.wait_entered(1);
+        let t2 = c
+            .submit(InferRequest::new(vec![2.0, 0.0, 0.0]).deadline(Duration::from_millis(5)))
+            .unwrap();
+        std::thread::sleep(Duration::from_millis(20)); // t2 expires while queued
+        gate.open();
+        t1.wait().unwrap();
+        assert_eq!(t2.wait().unwrap_err(), ServeError::DeadlineExceeded);
+        // the expired request never reached an engine
+        assert!(!gate.served().contains(&2.0));
+        assert_eq!(c.metrics().expired, 1);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn dropped_ticket_cancels_queued_request() {
+        let gate = Gate::new();
+        let srv = ServerBuilder::new()
+            .workers(1)
+            .max_batch(1)
+            .max_wait(Duration::from_micros(100))
+            .budget_gflips(1.0)
+            .serve(Menu::shared(gated_points(&gate)))
+            .unwrap();
+        let c = srv.client();
+        let t1 = c.submit(InferRequest::new(vec![1.0, 0.0, 0.0])).unwrap();
+        gate.wait_entered(1);
+        let t2 = c.submit(InferRequest::new(vec![2.0, 0.0, 0.0])).unwrap();
+        drop(t2); // cancel while still queued
+        gate.open();
+        t1.wait().unwrap();
+        // a later request still flows; the cancelled one never executed
+        let r3 = c.infer(vec![3.0, 0.0, 0.0]).unwrap();
+        assert_eq!(r3.output[0], 3.0);
+        assert_eq!(gate.served(), vec![1.0, 3.0]);
+        assert_eq!(c.metrics().cancelled, 1);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn mixed_queue_splits_by_per_request_cap() {
+        // global budget allows "rich"; a capped request queued in the
+        // same window must be served by "cheap" instead, in its own
+        // point-coherent batch.
+        let gate = Gate::new();
+        let srv = ServerBuilder::new()
+            .workers(1)
+            .max_batch(8)
+            .max_wait(Duration::from_micros(100))
+            .budget_gflips(1.0)
+            .serve(Menu::shared(gated_points(&gate)))
+            .unwrap();
+        let c = srv.client();
+        let t1 = c.submit(InferRequest::new(vec![1.0, 0.0, 0.0])).unwrap();
+        gate.wait_entered(1);
+        let capped = c
+            .submit(InferRequest::new(vec![2.0, 0.0, 0.0]).max_gflips(0.2))
+            .unwrap();
+        let uncapped = c.submit(InferRequest::new(vec![3.0, 0.0, 0.0])).unwrap();
+        gate.open();
+        assert_eq!(t1.wait().unwrap().point, "rich");
+        assert_eq!(capped.wait().unwrap().point, "cheap");
+        assert_eq!(uncapped.wait().unwrap().point, "rich");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn higher_priority_drains_first() {
+        let gate = Gate::new();
+        let srv = ServerBuilder::new()
+            .workers(1)
+            .max_batch(1)
+            .max_wait(Duration::from_micros(100))
+            .budget_gflips(1.0)
+            .serve(Menu::shared(gated_points(&gate)))
+            .unwrap();
+        let c = srv.client();
+        let t1 = c.submit(InferRequest::new(vec![1.0, 0.0, 0.0])).unwrap();
+        gate.wait_entered(1);
+        let low = c
+            .submit(InferRequest::new(vec![10.0, 0.0, 0.0]).priority(Priority::BestEffort))
+            .unwrap();
+        let hi = c
+            .submit(InferRequest::new(vec![20.0, 0.0, 0.0]).priority(Priority::Hi))
+            .unwrap();
+        gate.open();
+        t1.wait().unwrap();
+        hi.wait().unwrap();
+        low.wait().unwrap();
+        // Hi was submitted after BestEffort but executed first
+        assert_eq!(gate.served(), vec![1.0, 20.0, 10.0]);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn ticket_wait_timeout_and_try_get() {
+        let gate = Gate::new();
+        let srv = ServerBuilder::new()
+            .workers(1)
+            .max_batch(1)
+            .max_wait(Duration::from_micros(100))
+            .serve(Menu::shared(gated_points(&gate)))
+            .unwrap();
+        let c = srv.client();
+        let mut t = c.submit(InferRequest::new(vec![1.0, 0.0, 0.0])).unwrap();
+        assert!(t.try_get().is_none());
+        assert!(t.wait_timeout(Duration::from_millis(5)).is_none());
+        gate.open();
+        let r = loop {
+            if let Some(r) = t.wait_timeout(Duration::from_millis(50)) {
+                break r;
+            }
+        };
+        assert_eq!(r.unwrap().output[0], 1.0);
+        srv.shutdown();
     }
 }

@@ -29,9 +29,13 @@
 //! - [`runtime`] — PJRT execution of AOT-lowered JAX/Pallas artifacts
 //!   (HLO text) produced by `python/compile/aot.py` (behind the `pjrt`
 //!   feature; the default build uses an API-identical stub).
-//! - [`coordinator`] — a power-budget-aware serving runtime: dynamic
-//!   batching, operating-point selection, runtime budget traversal,
-//!   and a worker pool that serves shared `Arc<ExecutionPlan>` menus.
+//! - [`coordinator`] — a QoS-aware serving runtime behind one entry
+//!   point (`ServerBuilder` → `Menu` → `Client`): per-request QoS
+//!   (deadline, `max_gflips` energy cap, priority, pinned point),
+//!   bounded-queue admission control with typed failures
+//!   (`ServeError`), point-coherent dynamic batching, runtime budget
+//!   traversal, and a worker pool over shared `Arc<ExecutionPlan>`
+//!   menus (or one worker owning `!Send` PJRT engines).
 //! - [`experiments`] — one driver per table/figure of the paper.
 //!
 //! Power is reported in **bit flips**, exactly as in the paper

@@ -4,6 +4,7 @@
 //! pann-cli experiment <id>|all [--quick] [--artifacts DIR]
 //! pann-cli power-report [--bits B] [--acc-bits B]
 //! pann-cli serve --model NAME [--requests N] [--budget GFLIPS]
+//!               [--queue-depth D] [--deadline-ms MS]
 //! pann-cli sweep --model NAME [--quick]
 //! pann-cli list
 //! ```
@@ -12,7 +13,7 @@
 //! carries no `clap`.)
 
 use anyhow::{bail, Context, Result};
-use pann::coordinator::{EnginePoint, Server, ServerConfig};
+use pann::coordinator::{EnginePoint, InferRequest, Menu, ServeError, ServerBuilder};
 use pann::experiments::{self, Ctx};
 use pann::runtime::{ArtifactManifest, CpuRuntime};
 use std::path::PathBuf;
@@ -97,7 +98,15 @@ fn run() -> Result<()> {
                 .flags
                 .get("budget")
                 .map_or(Ok(f64::INFINITY), |s| s.parse())?;
-            serve(&ctx, &model, n, budget)
+            let queue_depth: usize = args
+                .flags
+                .get("queue-depth")
+                .map_or(Ok(256), |s| s.parse())?;
+            let deadline_ms: Option<u64> = match args.flags.get("deadline-ms") {
+                Some(s) => Some(s.parse()?),
+                None => None,
+            };
+            serve(&ctx, &model, n, budget, queue_depth, deadline_ms)
         }
         "sweep" => {
             let model = args.flags.get("model").cloned().unwrap_or_else(|| "cnn-s".into());
@@ -111,6 +120,7 @@ fn run() -> Result<()> {
                  \x20 list                            list experiment ids\n\
                  \x20 power-report [--bits B]         per-MAC power model summary\n\
                  \x20 serve --model M [--requests N] [--budget G]\n\
+                 \x20       [--queue-depth D] [--deadline-ms MS]\n\
                  \x20 sweep --model M [--quick]       power-accuracy sweep (Fig. 1)\n"
             );
             Ok(())
@@ -139,7 +149,14 @@ fn power_report(bits: u32, acc_bits: u32) -> Result<()> {
 }
 
 /// End-to-end serving demo over the AOT artifacts.
-fn serve(ctx: &Ctx, model: &str, n_requests: usize, budget: f64) -> Result<()> {
+fn serve(
+    ctx: &Ctx,
+    model: &str,
+    n_requests: usize,
+    budget: f64,
+    queue_depth: usize,
+    deadline_ms: Option<u64>,
+) -> Result<()> {
     let hlo_dir = ctx.artifacts.join("hlo");
     let manifest = ArtifactManifest::load(&hlo_dir)
         .context("load artifacts/hlo/manifest.json — run `make artifacts` first")?;
@@ -147,10 +164,11 @@ fn serve(ctx: &Ctx, model: &str, n_requests: usize, budget: f64) -> Result<()> {
     if specs.is_empty() {
         bail!("no executables for model '{model}' in {}", hlo_dir.display());
     }
-    let sample_len: usize = specs[0].input_shape[1..].iter().product();
     let model_name = model.to_string();
-    let srv = Server::start(
-        move || {
+    let srv = ServerBuilder::new()
+        .queue_depth(queue_depth)
+        .budget_gflips(budget)
+        .serve(Menu::local(move || {
             let rt = CpuRuntime::new()?;
             println!("PJRT platform: {}", rt.platform());
             let mut points = Vec::new();
@@ -171,11 +189,8 @@ fn serve(ctx: &Ctx, model: &str, n_requests: usize, budget: f64) -> Result<()> {
                 });
             }
             Ok(points)
-        },
-        sample_len,
-        ServerConfig { budget_gflips: budget, ..Default::default() },
-    )?;
-    let h = srv.handle();
+        }))?;
+    let client = srv.client();
     // drive with test data, measure accuracy + latency
     let ds = pann::data::Dataset::load(
         &ctx.artifacts.join("data").join(experiments::dataset_for(model)),
@@ -183,21 +198,35 @@ fn serve(ctx: &Ctx, model: &str, n_requests: usize, budget: f64) -> Result<()> {
     )?;
     let n = n_requests.min(ds.len());
     let mut correct = 0usize;
+    let mut expired = 0usize;
     for i in 0..n {
-        let r = h.infer(ds.sample(i).to_vec())?;
-        let pred = r
-            .output
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .map(|(i, _)| i)
-            .unwrap_or(0);
-        if pred == ds.y[i] as usize {
-            correct += 1;
+        let mut req = InferRequest::new(ds.sample(i).to_vec());
+        if let Some(ms) = deadline_ms {
+            req = req.deadline(std::time::Duration::from_millis(ms));
+        }
+        match client.submit(req)?.wait() {
+            Ok(r) => {
+                let pred = r
+                    .output
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap_or(0);
+                if pred == ds.y[i] as usize {
+                    correct += 1;
+                }
+            }
+            Err(ServeError::DeadlineExceeded) => expired += 1,
+            Err(e) => return Err(e.into()),
         }
     }
-    println!("accuracy {:.3} over {n} requests", correct as f64 / n as f64);
-    println!("{}", h.metrics().report());
+    let served = n - expired;
+    println!("accuracy {:.3} over {served} served requests", correct as f64 / served.max(1) as f64);
+    if expired > 0 {
+        println!("{expired} requests rejected past their {}ms deadline", deadline_ms.unwrap_or(0));
+    }
+    println!("{}", client.metrics().report());
     srv.shutdown();
     Ok(())
 }

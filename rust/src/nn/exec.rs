@@ -74,14 +74,69 @@ impl ExecutionPlan {
         meter: &mut PowerMeter,
         threads: usize,
     ) -> Result<Tensor> {
+        self.forward_impl(&x.shape, &x.data, Some(x), scratch, meter, threads)
+    }
+
+    /// [`forward_batch`](Self::forward_batch) over a *borrowed* flat
+    /// input of `n` samples shaped per [`input_shape`](Self::input_shape)
+    /// — the serving hot path, which receives request bytes as slices
+    /// and must not copy them into a fresh `Tensor` per batch.
+    pub fn forward_slice(
+        &self,
+        data: &[f32],
+        n: usize,
+        scratch: &mut Scratch,
+        meter: &mut PowerMeter,
+        threads: usize,
+    ) -> Result<Tensor> {
+        let mut shape = Vec::with_capacity(1 + self.input_shape().len());
+        shape.push(n);
+        shape.extend_from_slice(self.input_shape());
+        let expect: usize = shape.iter().product();
+        if data.len() != expect {
+            bail!("input length {} != batch {n} × sample {:?}", data.len(), self.input_shape());
+        }
+        self.forward_impl(&shape, data, None, scratch, meter, threads)
+    }
+
+    /// Shared node loop. `input_tensor`, when given, is the `Tensor`
+    /// that owns `shape`/`data` (borrowed by f32 fallback nodes);
+    /// otherwise one is materialized lazily if such a node consumes
+    /// the raw input (MAC nodes — the common entry — never need it).
+    fn forward_impl(
+        &self,
+        shape: &[usize],
+        data: &[f32],
+        input_tensor: Option<&Tensor>,
+        scratch: &mut Scratch,
+        meter: &mut PowerMeter,
+        threads: usize,
+    ) -> Result<Tensor> {
         let mut outs: Vec<Tensor> = Vec::with_capacity(self.model.nodes.len());
+        let mut lazy_input: Option<Tensor> = None;
         for (i, node) in self.model.nodes.iter().enumerate() {
-            let input = if node.input < 0 { x } else { &outs[node.input as usize] };
             let y = match &self.steps[i] {
-                Some(p) => self
-                    .forward_mac(p, input, scratch, meter, threads)
-                    .with_context(|| format!("node {i}"))?,
+                Some(p) => {
+                    let (in_shape, in_data) = if node.input < 0 {
+                        (shape, data)
+                    } else {
+                        let t = &outs[node.input as usize];
+                        (t.shape.as_slice(), t.data.as_slice())
+                    };
+                    self.forward_mac(p, in_shape, in_data, scratch, meter, threads)
+                        .with_context(|| format!("node {i}"))?
+                }
                 None => {
+                    let input: &Tensor = if node.input < 0 {
+                        match input_tensor {
+                            Some(t) => t,
+                            None => lazy_input.get_or_insert_with(|| {
+                                Tensor { shape: shape.to_vec(), data: data.to_vec() }
+                            }),
+                        }
+                    } else {
+                        &outs[node.input as usize]
+                    };
                     let rhs = match node.op {
                         Op::Add { rhs } => Some(&outs[rhs]),
                         _ => None,
@@ -95,24 +150,26 @@ impl ExecutionPlan {
         Ok(outs.pop().expect("non-empty model"))
     }
 
-    /// One MAC node over the whole batch.
+    /// One MAC node over the whole batch (`data` flat, `shape[0] = n`).
     fn forward_mac(
         &self,
         p: &PlannedMac,
-        x: &Tensor,
+        shape: &[usize],
+        data: &[f32],
         scratch: &mut Scratch,
         meter: &mut PowerMeter,
         threads: usize,
     ) -> Result<Tensor> {
-        let n = x.batch();
+        let n = shape.first().copied().unwrap_or(0);
+        let sample_len: usize = shape[1..].iter().product();
         // activation quantizer (dynamic fits on the live batch)
         let qx = match &p.act {
             ActQ::Fixed(q) => *q,
-            ActQ::Dynamic => ruq::fit_unsigned(&x.data, self.config.bx),
+            ActQ::Dynamic => ruq::fit_unsigned(data, self.config.bx),
         };
         let deq = p.weights.scale * qx.scale;
         let out = if let Some((ci, kh, kw, stride, pad, co)) = p.conv {
-            let (h, w) = match x.shape.as_slice() {
+            let (h, w) = match shape {
                 [_, c, h, w] if *c == ci => (*h, *w),
                 other => bail!("conv input shape {other:?}"),
             };
@@ -126,7 +183,8 @@ impl ExecutionPlan {
             // blocked kernels zero their own accumulators.
             scratch.cols_q.resize(m * k, 0);
             for s in 0..n {
-                gemm::im2col(x.sample(s), ci, h, w, kh, kw, stride, pad, &mut scratch.cols_f);
+                let sample = &data[s * sample_len..(s + 1) * sample_len];
+                gemm::im2col(sample, ci, h, w, kh, kw, stride, pad, &mut scratch.cols_f);
                 let dst = &mut scratch.cols_q[s * spatial * k..(s + 1) * spatial * k];
                 for (d, &v) in dst.iter_mut().zip(scratch.cols_f.iter()) {
                     *d = qx.quantize(v) as i32;
@@ -148,14 +206,14 @@ impl ExecutionPlan {
             out
         } else {
             let (out_d, k) = p.linear.unwrap();
-            if x.sample_len() != k {
-                bail!("linear input {} != {k}", x.sample_len());
+            if sample_len != k {
+                bail!("linear input {sample_len} != {k}");
             }
             scratch.cols_q.clear();
             scratch.cols_q.reserve(n * k);
             scratch
                 .cols_q
-                .extend(x.data.iter().map(|&v| qx.quantize(v) as i32));
+                .extend(data.iter().map(|&v| qx.quantize(v) as i32));
             scratch.acc.resize(n * out_d, 0);
             run_gemm(p, &scratch.cols_q, &mut scratch.acc, n, out_d, k, threads);
             let mut out = Tensor::zeros(vec![n, out_d]);
@@ -259,6 +317,32 @@ mod tests {
                 meter_s.total_flips()
             );
         }
+    }
+
+    /// The serving entry: a borrowed flat slice must produce exactly
+    /// what the owned-`Tensor` entry produces (logits and flips).
+    #[test]
+    fn forward_slice_matches_forward_batch() {
+        let mut model = Model::reference_cnn(60);
+        let x = test_input(5, 61);
+        model.record_act_stats(&x).unwrap();
+        let plan = ExecutionPlan::compile(
+            &model,
+            QuantConfig::pann(6, 2.0, ActQuantMethod::BnStats),
+            None,
+        )
+        .unwrap();
+        let mut scratch = Scratch::new();
+        let mut m1 = plan.new_meter();
+        let y1 = plan.forward_batch(&x, &mut scratch, &mut m1, 1).unwrap();
+        let mut m2 = plan.new_meter();
+        let y2 = plan.forward_slice(&x.data, 5, &mut scratch, &mut m2, 1).unwrap();
+        assert_eq!(y1.data, y2.data);
+        assert_eq!(y1.shape, y2.shape);
+        assert_eq!(m1.total_flips(), m2.total_flips());
+        assert_eq!(m1.total_macs(), m2.total_macs());
+        // a length mismatch is an error, not a mis-shaped forward
+        assert!(plan.forward_slice(&x.data[1..], 5, &mut scratch, &mut m2, 1).is_err());
     }
 
     #[test]

@@ -171,15 +171,17 @@ fn python_rust_pann_quantizers_agree() {
 
 #[test]
 fn end_to_end_native_serving() {
-    // Serve the reference model through the coordinator without PJRT.
-    use pann::coordinator::server::NativeEngine;
-    use pann::coordinator::{EnginePoint, Server, ServerConfig};
+    // Serve the reference model through the coordinator without PJRT:
+    // a local (worker-thread-built) menu behind the one ServerBuilder
+    // entry point.
+    use pann::coordinator::{EnginePoint, Menu, NativeEngine, ServerBuilder};
     let mut model = Model::reference_cnn(5);
     let ds = Dataset::from_synth(pann::data::synth::digits(96, 6));
     let stats = batch_tensor(&ds, 0, 48);
     model.record_act_stats(&stats).unwrap();
-    let srv = Server::start(
-        move || {
+    let srv = ServerBuilder::new()
+        .max_batch(8)
+        .serve(Menu::local(move || {
             let mut points = Vec::new();
             for (bits, bx, r) in [(2u32, 6u32, 10.0 / 6.0 - 0.5), (8, 8, 7.5)] {
                 let qm = QuantizedModel::prepare(
@@ -192,23 +194,21 @@ fn end_to_end_native_serving() {
                     giga_flips_per_sample: pann::power::model::mac_power_unsigned_total(bits)
                         * model.num_macs() as f64
                         / 1e9,
-                    engine: Box::new(NativeEngine::new(&qm, vec![1, 16, 16])),
+                    engine: Box::new(NativeEngine::new(&qm, 8)),
                 });
             }
             Ok(points)
-        },
-        256,
-        ServerConfig::default(),
-    )
-    .unwrap();
-    let h = srv.handle();
+        }))
+        .unwrap();
+    let client = srv.client();
+    assert_eq!(client.sample_len(), 256);
     // unlimited budget -> p8; tight -> p2
-    let r = h.infer(ds.sample(0).to_vec()).unwrap();
+    let r = client.infer(ds.sample(0).to_vec()).unwrap();
     assert_eq!(r.point, "p8");
-    h.set_budget(0.001);
-    let r = h.infer(ds.sample(1).to_vec()).unwrap();
+    client.set_budget(0.001);
+    let r = client.infer(ds.sample(1).to_vec()).unwrap();
     assert_eq!(r.point, "p2");
-    let m = h.metrics();
+    let m = client.metrics();
     assert_eq!(m.requests, 2);
     assert!(m.total_giga_flips > 0.0);
     srv.shutdown();
@@ -219,7 +219,7 @@ fn worker_pool_serves_shared_plans() {
     // The pool path: one Arc<ExecutionPlan> per operating point,
     // shared by 4 workers, each with its own scratch arena. Outputs
     // must match a direct forward through the same plan exactly.
-    use pann::coordinator::{PlanEngine, Server, ServerConfig, SharedPoint};
+    use pann::coordinator::{Menu, PlanEngine, ServerBuilder, SharedPoint};
     use pann::nn::{Scratch, Tensor};
     use std::sync::Arc;
     let mut model = Model::reference_cnn(7);
@@ -242,11 +242,15 @@ fn worker_pool_serves_shared_plans() {
             giga_flips_per_sample: pann::power::model::mac_power_unsigned_total(bits)
                 * model.num_macs() as f64
                 / 1e9,
-            engine: Arc::new(PlanEngine::new(plan, vec![1, 16, 16])),
+            engine: Arc::new(PlanEngine::new(plan, 8)),
         });
     }
-    let srv = Server::start_pool(points, 256, ServerConfig::default(), 4).unwrap();
-    let h = srv.handle();
+    let srv = ServerBuilder::new()
+        .workers(4)
+        .max_batch(8)
+        .serve(Menu::shared(points))
+        .unwrap();
+    let h = srv.client();
     // rich budget -> p8; outputs must equal a direct plan forward
     let want = {
         let plan = &plans.iter().find(|(n, _)| n == "p8").unwrap().1;
@@ -282,6 +286,86 @@ fn worker_pool_serves_shared_plans() {
     });
     assert_eq!(total, 128);
     assert_eq!(h.metrics().requests, 129);
+    srv.shutdown();
+}
+
+#[test]
+fn qos_per_request_caps_and_deadline_on_one_server() {
+    // The API-redesign acceptance: two simultaneous clients with
+    // different per-request `max_gflips` are served by *different*
+    // operating points from the same server, while a third
+    // over-deadline request is rejected with
+    // `ServeError::DeadlineExceeded` — without being executed.
+    use pann::coordinator::{InferRequest, Menu, PlanEngine, ServeError, ServerBuilder, SharedPoint};
+    use std::sync::Arc;
+    use std::time::Duration;
+    let mut model = Model::reference_cnn(21);
+    let ds = Dataset::from_synth(pann::data::synth::digits(32, 22));
+    let stats = batch_tensor(&ds, 0, 16);
+    model.record_act_stats(&stats).unwrap();
+    let mut points = Vec::new();
+    let mut costs = Vec::new();
+    for (bits, bx, r) in [(2u32, 6u32, 10.0 / 6.0 - 0.5), (8, 8, 7.5)] {
+        let qm = QuantizedModel::prepare(
+            &model,
+            QuantConfig::pann(bx, r, ActQuantMethod::BnStats),
+            None,
+        )
+        .unwrap();
+        let gf = pann::power::model::mac_power_unsigned_total(bits) * model.num_macs() as f64 / 1e9;
+        costs.push(gf);
+        points.push(SharedPoint {
+            name: format!("p{bits}"),
+            giga_flips_per_sample: gf,
+            engine: Arc::new(PlanEngine::new(qm.plan(), 8)),
+        });
+    }
+    let (cheap_gf, rich_gf) = (costs[0], costs[1]);
+    let srv = ServerBuilder::new()
+        .workers(2)
+        .max_batch(8)
+        .queue_depth(64)
+        .budget_gflips(f64::INFINITY)
+        .serve(Menu::shared(points))
+        .unwrap();
+    let client = srv.client();
+    // two simultaneous clients, different energy caps
+    let (tight, rich) = std::thread::scope(|s| {
+        let c1 = client.clone();
+        let ds1 = &ds;
+        let jt = s.spawn(move || {
+            c1.submit(
+                InferRequest::new(ds1.sample(0).to_vec()).max_gflips(cheap_gf * 1.01),
+            )
+            .unwrap()
+            .wait()
+            .unwrap()
+        });
+        let c2 = client.clone();
+        let ds2 = &ds;
+        let jr = s.spawn(move || {
+            c2.submit(
+                InferRequest::new(ds2.sample(1).to_vec()).max_gflips(rich_gf * 1.01),
+            )
+            .unwrap()
+            .wait()
+            .unwrap()
+        });
+        (jt.join().unwrap(), jr.join().unwrap())
+    });
+    assert_eq!(tight.point, "p2", "capped request must take the cheap point");
+    assert_eq!(rich.point, "p8", "generous cap must take the rich point");
+    assert!(tight.giga_flips < rich.giga_flips);
+    // the third request is already past its deadline: typed rejection
+    let e = client
+        .submit(InferRequest::new(ds.sample(2).to_vec()).deadline(Duration::ZERO))
+        .unwrap()
+        .wait()
+        .unwrap_err();
+    assert_eq!(e, ServeError::DeadlineExceeded);
+    let m = client.metrics();
+    assert_eq!(m.requests, 2, "the expired request must not be executed");
+    assert_eq!(m.expired, 1);
     srv.shutdown();
 }
 
