@@ -1,0 +1,84 @@
+//! Menu-compiler benchmark: how long compiling + Pareto-pruning the
+//! full power–accuracy frontier takes, how long reloading it from the
+//! `menu.json` artifact takes, and how aggressively the frontier is
+//! pruned.
+//!
+//! Emits `BENCH_menu.json` (schema `bench-menu/v1`: compile/reload
+//! wall-clock, candidates swept, points kept vs pruned, plus the
+//! frontier itself) so later PRs can track the menu-compilation
+//! trajectory without parsing stdout — the compile-time counterpart of
+//! `BENCH_engine.json` / `BENCH_coordinator.json`.
+
+use pann::data::{synth, Dataset};
+use pann::nn::eval::batch_tensor;
+use pann::nn::Model;
+use pann::pann::{compile_menu, MenuArtifact};
+use pann::quant::ActQuantMethod;
+use pann::util::bench::write_json;
+use pann::util::Json;
+use std::time::Instant;
+
+fn main() {
+    let mut model = Model::reference_cnn(1);
+    let ds = Dataset::from_synth(synth::digits(256, 2));
+    let stats_x = batch_tensor(&ds, 0, 64);
+    model.record_act_stats(&stats_x).expect("record stats");
+    let val = ds.take(96);
+    let budget_bits = [2u32, 4, 8];
+
+    // --- compile: sweep all curves, evaluate, prune ---
+    let t0 = Instant::now();
+    let menu = compile_menu(&model, &budget_bits, ActQuantMethod::BnStats, None, &val, 2..=8)
+        .expect("compile menu");
+    let compile_ms = t0.elapsed().as_secs_f64() * 1e3;
+    println!(
+        "compile-menu (bits {budget_bits:?}, {} val samples): {compile_ms:.1} ms — swept {}, \
+         kept {}, pruned {}",
+        val.len(),
+        menu.swept,
+        menu.points.len(),
+        menu.pruned()
+    );
+    for line in menu.frontier_lines() {
+        println!("  {line}");
+    }
+
+    // --- artifact round trip: save, load, recompile for serving ---
+    let dir = std::env::temp_dir().join("pann_bench_menu");
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    let path = dir.join("menu.json");
+    menu.save(&path).expect("save menu");
+    let t1 = Instant::now();
+    let loaded = MenuArtifact::load(&path).expect("load menu");
+    let points = loaded.shared_points(&model, None, 16).expect("recompile menu");
+    let reload_ms = t1.elapsed().as_secs_f64() * 1e3;
+    assert_eq!(points.len(), menu.points.len());
+    println!("reload + recompile from {}: {reload_ms:.1} ms", path.display());
+
+    let frontier: Vec<Json> = menu
+        .points
+        .iter()
+        .map(|p| {
+            Json::obj(vec![
+                ("name", Json::from(p.name.as_str())),
+                ("bx_tilde", Json::from(p.bx_tilde as usize)),
+                ("r", Json::Num(p.r)),
+                ("gflips_per_sample", Json::Num(p.gflips_per_sample)),
+                ("val_acc", Json::Num(p.val_acc)),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("schema", Json::from("bench-menu/v1")),
+        ("budget_bits", Json::nums(budget_bits.iter().map(|&b| b as f64))),
+        ("val_samples", Json::from(val.len())),
+        ("compile_ms", Json::Num(compile_ms)),
+        ("reload_recompile_ms", Json::Num(reload_ms)),
+        ("swept", Json::from(menu.swept)),
+        ("kept", Json::from(menu.points.len())),
+        ("pruned", Json::from(menu.pruned())),
+        ("points", Json::Arr(frontier)),
+    ]);
+    write_json("BENCH_menu.json", &doc).expect("write BENCH_menu.json");
+    println!("wrote BENCH_menu.json");
+}

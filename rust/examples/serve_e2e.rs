@@ -7,10 +7,13 @@
 //!   build): JAX+Pallas AOT artifacts (L1+L2) are loaded by the Rust
 //!   PJRT runtime and served via `Menu::local` — PJRT executables are
 //!   not `Send`, so the menu is built on the single worker thread.
-//! - **Native pool** (default, no artifacts needed): the built-in
-//!   reference CNN is compiled into one immutable `ExecutionPlan` per
-//!   operating point and served via `Menu::shared` by a pool of
-//!   workers with per-worker scratch arenas.
+//! - **Native pool** (default, no artifacts needed): the operating-
+//!   point menu is *compiled* — `pann::pann::compile_menu` sweeps the
+//!   2/4/8-bit equal-power curves over the built-in reference CNN,
+//!   Pareto-prunes to the accuracy-vs-energy frontier, persists it as
+//!   a `menu.json` artifact, and `Menu::from_artifact` reloads and
+//!   recompiles it for a pool of workers — the full
+//!   `compile-menu → serve --menu` round trip in one process.
 //!
 //! Either way the driver replays a test set as a request stream,
 //! *changes the energy budget at runtime* (the paper's deployment
@@ -24,16 +27,13 @@
 //! ```
 
 use pann::coordinator::{
-    EnginePoint, InferRequest, Menu, PlanEngine, Priority, ServeError, Server, ServerBuilder,
-    SharedPoint,
+    EnginePoint, InferRequest, Menu, Priority, ServeError, Server, ServerBuilder,
 };
 use pann::data::Dataset;
 use pann::nn::eval::batch_tensor;
-use pann::nn::quantized::{QuantConfig, QuantizedModel};
 use pann::nn::Model;
 use pann::quant::ActQuantMethod;
 use pann::runtime::{ArtifactManifest, CpuRuntime};
-use std::sync::Arc;
 use std::time::Duration;
 
 fn main() -> anyhow::Result<()> {
@@ -97,64 +97,83 @@ fn serve_pjrt(
     let ds_name = pann::experiments::dataset_for(model);
     let ds = Dataset::load(&artifacts.join("data").join(ds_name), "test")?;
     let macs = pann::experiments::qat::num_macs(model) as f64;
+    // Three budget phases: unlimited, generous (8-bit PANN budget),
+    // tight (2-bit budget).
+    let phases = vec![
+        ("unlimited".to_string(), f64::INFINITY),
+        ("8-bit budget".to_string(), 64.0 * macs / 1e9),
+        ("2-bit budget".to_string(), 10.0 * macs / 1e9),
+    ];
     let header = format!("serving {model} over {ds_name} (PJRT, 1 worker)");
-    run_phases(srv, &ds, macs, &header)
+    run_phases(srv, &ds, &phases, &header)
 }
 
-/// Worker-pool serving of the built-in reference CNN: one
-/// `Arc<ExecutionPlan>` per operating point, shared by every worker
-/// (`Menu::shared`).
+/// Worker-pool serving of the built-in reference CNN over a *compiled*
+/// menu: sweep → Pareto-prune → `menu.json` → `Menu::from_artifact`.
 fn serve_native_pool() -> anyhow::Result<()> {
     let mut model = Model::reference_cnn(5);
     let ds = Dataset::from_synth(pann::data::synth::digits(512, 6));
     let stats = batch_tensor(&ds, 0, 64);
     model.record_act_stats(&stats)?;
 
-    let max_batch = 16;
-    let mut points = Vec::new();
-    for (bits, bx, r) in [(2u32, 6u32, 10.0 / 6.0 - 0.5), (4, 7, 24.0 / 7.0 - 0.5), (8, 8, 7.5)] {
-        let qm = QuantizedModel::prepare(
-            &model,
-            QuantConfig::pann(bx, r, ActQuantMethod::BnStats),
-            None,
-        )?;
-        let gf = pann::power::model::mac_power_unsigned_total(bits) * qm.macs_per_sample as f64 / 1e9;
-        eprintln!("  compiled pann-p{bits} ({gf:.5} Gflips/sample)");
-        points.push(SharedPoint {
-            name: format!("pann-p{bits}"),
-            giga_flips_per_sample: gf,
-            engine: Arc::new(PlanEngine::new(qm.plan(), max_batch)),
-        });
+    // compile the frontier on a validation slice and persist it
+    let val = ds.take(128);
+    let compiled =
+        pann::pann::compile_menu(&model, &[2, 4, 8], ActQuantMethod::BnStats, None, &val, 2..=8)?;
+    let dir = std::env::temp_dir().join("pann_serve_e2e");
+    std::fs::create_dir_all(&dir)?;
+    let menu_path = dir.join("menu.json");
+    compiled.save(&menu_path)?;
+    eprintln!(
+        "compiled menu: swept {} candidates, kept {} frontier points ({} pruned) -> {}",
+        compiled.swept,
+        compiled.points.len(),
+        compiled.pruned(),
+        menu_path.display()
+    );
+    for line in compiled.frontier_lines() {
+        eprintln!("  {line}");
     }
+
+    // reload through the artifact path — exactly what
+    // `pann-cli serve --menu menu.json` does (the engines are built
+    // inside serve() with the builder's max_batch)
+    let menu = Menu::from_artifact(&menu_path, &model)?;
     let n_workers = pann::nn::eval::n_threads();
     let srv = ServerBuilder::new()
         .workers(n_workers)
-        .max_batch(max_batch)
+        .max_batch(16)
         .max_wait(Duration::from_millis(1))
         .queue_depth(1024)
-        .serve(Menu::shared(points))?;
-    let macs = model.num_macs() as f64;
-    let header = format!("serving ref-cnn over synth digits (native pool, {n_workers} workers)");
-    run_phases(srv, &ds, macs, &header)
+        .serve(menu)?;
+    // one budget phase per frontier point (cheapest first), then
+    // unlimited: deployment-time traversal across the whole menu
+    let mut phases: Vec<(String, f64)> = compiled
+        .points
+        .iter()
+        .map(|p| (p.name.clone(), p.gflips_per_sample * (1.0 + 1e-9)))
+        .collect();
+    phases.push(("unlimited".to_string(), f64::INFINITY));
+    let header = format!(
+        "serving ref-cnn over synth digits (native pool, {n_workers} workers, compiled menu)"
+    );
+    run_phases(srv, &ds, &phases, &header)
 }
 
-/// Replay the test set through three budget phases, then exercise the
-/// per-request QoS surface, and report.
-fn run_phases(srv: Server, ds: &Dataset, macs: f64, header: &str) -> anyhow::Result<()> {
+/// Replay the test set through the given budget phases, then exercise
+/// the per-request QoS surface, and report.
+fn run_phases(
+    srv: Server,
+    ds: &Dataset,
+    phases: &[(String, f64)],
+    header: &str,
+) -> anyhow::Result<()> {
     let client = srv.client();
     let n_phase = 256.min(ds.len());
-    // Three budget phases: unlimited, generous (8-bit PANN budget),
-    // tight (2-bit budget). The menu never reloads — only the (b̃x, R)
-    // operating point changes, the paper's deployment claim.
-    let phases = [
-        ("unlimited", f64::INFINITY),
-        ("8-bit budget", 64.0 * macs / 1e9),
-        ("2-bit budget", 10.0 * macs / 1e9),
-    ];
     println!("\n{header}, {n_phase} requests per phase");
     let clients = 4usize;
     for (label, budget) in phases {
-        client.set_budget(budget);
+        client.set_budget(*budget);
         let t0 = std::time::Instant::now();
         std::thread::scope(|s| -> anyhow::Result<()> {
             let mut js = Vec::new();
@@ -188,7 +207,7 @@ fn run_phases(srv: Server, ds: &Dataset, macs: f64, header: &str) -> anyhow::Res
                 point = p;
             }
             println!(
-                "  phase {label:<14} -> point {point:<10} accuracy {:.3}  ({:.2}s)",
+                "  phase {label:<20} -> point {point:<18} accuracy {:.3}  ({:.2}s)",
                 total as f64 / n_phase as f64,
                 t0.elapsed().as_secs_f64()
             );
@@ -198,7 +217,12 @@ fn run_phases(srv: Server, ds: &Dataset, macs: f64, header: &str) -> anyhow::Res
 
     // --- per-request QoS: two caps, two points, one server ---
     client.set_budget(f64::INFINITY);
-    let tight_cap = 12.0 * macs / 1e9; // ~2-bit equal-power budget
+    // tightest finite phase budget = the cheapest point's cap
+    let tight_cap = phases
+        .iter()
+        .map(|(_, b)| *b)
+        .filter(|b| b.is_finite())
+        .fold(f64::INFINITY, f64::min);
     let hi = client.submit(
         InferRequest::new(ds.sample(0).to_vec())
             .priority(Priority::Hi)

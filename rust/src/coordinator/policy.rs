@@ -11,6 +11,7 @@
 //! `!Send` engines such as PJRT executables), the worker pool among
 //! [`super::server::SharedPoint`]s (`Arc`-shared plan-backed engines).
 
+use super::request::ServeError;
 use super::server::Engine;
 
 /// Anything with a name and an energy cost the policy can rank.
@@ -44,11 +45,24 @@ pub struct PowerPolicy<P: Costed = EnginePoint> {
 }
 
 impl<P: Costed> PowerPolicy<P> {
-    /// Build from an unsorted menu. Panics on an empty menu.
-    pub fn new(mut points: Vec<P>) -> Self {
-        assert!(!points.is_empty(), "empty operating-point menu");
-        points.sort_by(|a, b| a.cost_gflips().partial_cmp(&b.cost_gflips()).unwrap());
-        PowerPolicy { points }
+    /// Build from an unsorted menu.
+    ///
+    /// Rejects an empty menu and any point whose cost is NaN with
+    /// [`ServeError::BadMenu`] — a NaN cost is unrankable and used to
+    /// panic deep inside the sort (`partial_cmp().unwrap()`) after the
+    /// server had already accepted the menu.
+    pub fn new(mut points: Vec<P>) -> Result<Self, ServeError> {
+        if points.is_empty() {
+            return Err(ServeError::BadMenu("empty operating-point menu".into()));
+        }
+        if let Some(bad) = points.iter().find(|p| p.cost_gflips().is_nan()) {
+            return Err(ServeError::BadMenu(format!(
+                "point '{}' has a NaN energy cost",
+                bad.point_name()
+            )));
+        }
+        points.sort_by(|a, b| a.cost_gflips().total_cmp(&b.cost_gflips()));
+        Ok(PowerPolicy { points })
     }
 
     pub fn len(&self) -> usize {
@@ -60,8 +74,14 @@ impl<P: Costed> PowerPolicy<P> {
     }
 
     /// Index of the best point under `budget_gflips` per sample.
-    /// Falls back to the cheapest point when nothing fits.
-    pub fn select(&self, budget_gflips: f64) -> usize {
+    /// Falls back to the cheapest point when nothing fits. A NaN
+    /// budget is rejected explicitly ([`ServeError::BadBudget`])
+    /// rather than comparing false everywhere and silently serving
+    /// the cheapest point.
+    pub fn select(&self, budget_gflips: f64) -> Result<usize, ServeError> {
+        if budget_gflips.is_nan() {
+            return Err(ServeError::BadBudget);
+        }
         let mut best = 0;
         for (i, p) in self.points.iter().enumerate() {
             if p.cost_gflips() <= budget_gflips {
@@ -70,7 +90,7 @@ impl<P: Costed> PowerPolicy<P> {
                 break;
             }
         }
-        best
+        Ok(best)
     }
 
     /// Index of the point named `name` (for pinned requests).
@@ -100,39 +120,51 @@ mod tests {
     use super::*;
     use crate::coordinator::server::tests_support::MockEngine;
 
+    fn point(name: &str, gf: f64) -> EnginePoint {
+        EnginePoint {
+            name: name.into(),
+            giga_flips_per_sample: gf,
+            engine: Box::new(MockEngine::new(4, 4, 2)),
+        }
+    }
+
     fn menu() -> PowerPolicy {
         PowerPolicy::new(vec![
-            EnginePoint {
-                name: "p8".into(),
-                giga_flips_per_sample: 0.8,
-                engine: Box::new(MockEngine::new(4, 4, 2)),
-            },
-            EnginePoint {
-                name: "p2".into(),
-                giga_flips_per_sample: 0.1,
-                engine: Box::new(MockEngine::new(4, 4, 2)),
-            },
-            EnginePoint {
-                name: "fp32".into(),
-                giga_flips_per_sample: f64::INFINITY,
-                engine: Box::new(MockEngine::new(4, 4, 2)),
-            },
-            EnginePoint {
-                name: "p4".into(),
-                giga_flips_per_sample: 0.3,
-                engine: Box::new(MockEngine::new(4, 4, 2)),
-            },
+            point("p8", 0.8),
+            point("p2", 0.1),
+            point("fp32", f64::INFINITY),
+            point("p4", 0.3),
         ])
+        .unwrap()
     }
 
     #[test]
     fn selects_best_under_budget() {
         let p = menu();
-        assert_eq!(p.point(p.select(0.05)).name, "p2"); // nothing fits -> cheapest
-        assert_eq!(p.point(p.select(0.1)).name, "p2");
-        assert_eq!(p.point(p.select(0.5)).name, "p4");
-        assert_eq!(p.point(p.select(2.0)).name, "p8");
-        assert_eq!(p.point(p.select(f64::INFINITY)).name, "fp32");
+        assert_eq!(p.point(p.select(0.05).unwrap()).name, "p2"); // nothing fits -> cheapest
+        assert_eq!(p.point(p.select(0.1).unwrap()).name, "p2");
+        assert_eq!(p.point(p.select(0.5).unwrap()).name, "p4");
+        assert_eq!(p.point(p.select(2.0).unwrap()).name, "p8");
+        assert_eq!(p.point(p.select(f64::INFINITY).unwrap()).name, "fp32");
+    }
+
+    #[test]
+    fn nan_cost_rejected_at_construction() {
+        let e = PowerPolicy::new(vec![point("ok", 0.2), point("broken", f64::NAN)]).unwrap_err();
+        match e {
+            ServeError::BadMenu(msg) => assert!(msg.contains("broken"), "{msg}"),
+            other => panic!("expected BadMenu, got {other:?}"),
+        }
+        let e = PowerPolicy::<EnginePoint>::new(Vec::new()).unwrap_err();
+        assert!(matches!(e, ServeError::BadMenu(_)));
+    }
+
+    #[test]
+    fn nan_budget_rejected_at_selection() {
+        let p = menu();
+        assert_eq!(p.select(f64::NAN).unwrap_err(), ServeError::BadBudget);
+        // non-NaN budgets still select (the rejection is NaN-specific)
+        assert_eq!(p.point(p.select(0.3).unwrap()).name, "p4");
     }
 
     #[test]

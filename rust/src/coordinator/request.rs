@@ -33,6 +33,15 @@ pub enum ServeError {
     ServerStopped,
     /// The backend engine failed while executing the batch.
     Engine(String),
+    /// The operating-point menu handed to the policy was unusable
+    /// (empty, or a point whose energy cost is NaN and therefore
+    /// unrankable).
+    BadMenu(String),
+    /// The effective energy budget (global budget or per-request
+    /// `max_gflips` cap) was NaN — rejected explicitly instead of
+    /// silently falling through every comparison to the cheapest
+    /// point.
+    BadBudget,
 }
 
 impl std::fmt::Display for ServeError {
@@ -46,6 +55,8 @@ impl std::fmt::Display for ServeError {
             ServeError::UnknownPoint(name) => write!(f, "unknown operating point '{name}'"),
             ServeError::ServerStopped => write!(f, "server stopped"),
             ServeError::Engine(msg) => write!(f, "engine failure: {msg}"),
+            ServeError::BadMenu(msg) => write!(f, "bad operating-point menu: {msg}"),
+            ServeError::BadBudget => write!(f, "NaN energy budget"),
         }
     }
 }

@@ -205,6 +205,11 @@ pub enum Menu {
     Local(Box<dyn FnOnce() -> Result<Vec<EnginePoint>> + Send>),
     /// `Send + Sync` points shared by a worker pool through `Arc`s.
     Shared(Vec<SharedPoint>),
+    /// Shared points built inside [`ServerBuilder::serve`], once the
+    /// builder's `max_batch` is known (the closure's argument) — used
+    /// by menus recompiled from artifacts so the engines' per-call
+    /// batch bound always matches the server configuration.
+    SharedDeferred(Box<dyn FnOnce(usize) -> Result<Vec<SharedPoint>> + Send>),
 }
 
 impl Menu {
@@ -219,6 +224,40 @@ impl Menu {
     /// Shared menu for the worker pool.
     pub fn shared(points: Vec<SharedPoint>) -> Menu {
         Menu::Shared(points)
+    }
+
+    /// Load a compiled menu artifact (`menu.json`, written by
+    /// [`crate::pann::menu::compile_menu`] / `pann-cli compile-menu`)
+    /// to be served by the worker pool. The artifact is parsed (and
+    /// its schema checked) immediately; each frontier point is
+    /// recompiled into an [`ExecutionPlan`] inside
+    /// [`ServerBuilder::serve`], so the engines' per-call batch bound
+    /// is the builder's `max_batch`. The artifact's model fingerprint
+    /// is verified against `model` then, so a menu can never be
+    /// served against a different network than it was compiled for.
+    ///
+    /// Quantization methods that need calibration inputs (ACIQ, Recon)
+    /// must go through [`Menu::from_artifact_calibrated`]; the
+    /// data-free methods (Dynamic, BN-stats, DFQ) need none.
+    pub fn from_artifact(
+        path: impl AsRef<std::path::Path>,
+        model: &crate::nn::Model,
+    ) -> Result<Menu> {
+        Menu::from_artifact_calibrated(path, model, None)
+    }
+
+    /// [`Menu::from_artifact`] with explicit calibration inputs.
+    pub fn from_artifact_calibrated(
+        path: impl AsRef<std::path::Path>,
+        model: &crate::nn::Model,
+        calib: Option<&crate::nn::Tensor>,
+    ) -> Result<Menu> {
+        let artifact = crate::pann::menu::MenuArtifact::load(path.as_ref())?;
+        let model = model.clone();
+        let calib = calib.cloned();
+        Ok(Menu::SharedDeferred(Box::new(move |max_batch| {
+            artifact.shared_points(&model, calib.as_ref(), max_batch)
+        })))
     }
 }
 
@@ -296,10 +335,16 @@ impl ServerBuilder {
         let metrics = Arc::new(Metrics::new());
         let queue = Arc::new(RequestQueue::new(cfg.queue_depth, metrics.clone()));
         let budget_bits = Arc::new(AtomicU64::new(cfg.budget_gflips.to_bits()));
+        // deferred shared menus build their engines here, with the
+        // configured max batch (they are just a Shared menu afterwards)
+        let menu = match menu {
+            Menu::SharedDeferred(build) => Menu::Shared(build(cfg.max_batch)?),
+            other => other,
+        };
         match menu {
             Menu::Shared(points) => {
                 let sample_len = validate_menu(points.iter().map(|p| p.engine.sample_len()))?;
-                let policy = Arc::new(PowerPolicy::new(points));
+                let policy = Arc::new(PowerPolicy::new(points)?);
                 let mut workers = Vec::with_capacity(cfg.workers);
                 for _ in 0..cfg.workers.max(1) {
                     let queue = queue.clone();
@@ -337,6 +382,7 @@ impl ServerBuilder {
                 let client = Client { queue: queue.clone(), budget_bits, metrics, sample_len };
                 Ok(Server { client, queue, workers: vec![worker] })
             }
+            Menu::SharedDeferred(_) => unreachable!("resolved to Menu::Shared above"),
         }
     }
 }
@@ -356,7 +402,7 @@ fn build_local(
 ) -> Result<(PowerPolicy<EnginePoint>, usize)> {
     let points = factory()?;
     let sample_len = validate_menu(points.iter().map(|p| p.engine.sample_len()))?;
-    Ok((PowerPolicy::new(points), sample_len))
+    Ok((PowerPolicy::new(points)?, sample_len))
 }
 
 /// QoS classifier: pinned point by name, otherwise the best point
@@ -372,8 +418,15 @@ fn classify_for<'a, P: Costed>(
                 .ok_or_else(|| ServeError::UnknownPoint(pin.clone()));
         }
         let global = f64::from_bits(budget_bits.load(Ordering::Relaxed));
+        // reject a NaN global budget before the min: f64::min ignores
+        // NaN operands, so a finite per-request cap would otherwise
+        // mask it and identical servers would treat capped and
+        // cap-less requests inconsistently
+        if global.is_nan() {
+            return Err(ServeError::BadBudget);
+        }
         let budget = p.max_gflips.map_or(global, |cap| global.min(cap));
-        Ok(policy.select(budget))
+        policy.select(budget)
     }
 }
 
@@ -464,6 +517,11 @@ impl Client {
     pub fn submit(&self, req: InferRequest) -> Result<Ticket, ServeError> {
         if req.input.len() != self.sample_len {
             return Err(ServeError::BadInput { expected: self.sample_len, got: req.input.len() });
+        }
+        // A NaN cap would vanish inside `f64::min` at classification
+        // time (min ignores NaN operands) — reject it at admission.
+        if req.max_gflips.is_some_and(f64::is_nan) {
+            return Err(ServeError::BadBudget);
         }
         let (tx, rx) = mpsc::channel();
         let cancelled = Arc::new(AtomicBool::new(false));
@@ -978,6 +1036,48 @@ mod tests {
     fn empty_menu_is_startup_error() {
         assert!(ServerBuilder::new().serve(Menu::shared(Vec::new())).is_err());
         assert!(ServerBuilder::new().serve(Menu::local(|| Ok(Vec::new()))).is_err());
+    }
+
+    #[test]
+    fn nan_cost_menu_is_startup_error() {
+        let bad = vec![SharedPoint {
+            name: "nan".into(),
+            giga_flips_per_sample: f64::NAN,
+            engine: Arc::new(MockEngine::new(4, 3, 2)),
+        }];
+        let e = ServerBuilder::new().serve(Menu::shared(bad)).unwrap_err();
+        assert!(e.to_string().contains("NaN"), "{e}");
+    }
+
+    #[test]
+    fn nan_budgets_rejected_not_silently_served() {
+        let srv = ServerBuilder::new()
+            .budget_gflips(1.0)
+            .serve(Menu::local(|| Ok(points())))
+            .unwrap();
+        let c = srv.client();
+        // NaN per-request cap: rejected at admission
+        let e = c
+            .submit(InferRequest::new(vec![0.0; 3]).max_gflips(f64::NAN))
+            .unwrap_err();
+        assert_eq!(e, ServeError::BadBudget);
+        // NaN global budget: typed rejection at scheduling (the seed
+        // silently served the cheapest point)
+        c.set_budget(f64::NAN);
+        let e = c.infer(vec![0.0; 3]).unwrap_err();
+        assert_eq!(e, ServeError::BadBudget);
+        // ... and a finite per-request cap must not mask it (f64::min
+        // would swallow the NaN operand)
+        let e = c
+            .submit(InferRequest::new(vec![0.0; 3]).max_gflips(0.5))
+            .unwrap()
+            .wait()
+            .unwrap_err();
+        assert_eq!(e, ServeError::BadBudget);
+        // recovery: a sane budget serves again
+        c.set_budget(1.0);
+        assert_eq!(c.infer(vec![0.0; 3]).unwrap().point, "rich");
+        srv.shutdown();
     }
 
     #[test]

@@ -71,7 +71,7 @@ fn arrows(ctx: &Ctx, bits: u32, acc_bits: u32, method: ActQuantMethod) -> Result
         let op = algorithm1::choose_operating_point(&model, p, method, Some(&calib), &val, 2..=8)?;
         let (_, pann) = convert::pann_at_budget(&model, op.bx_tilde, op.r, method, Some(&calib), &test)?;
         println!(
-            "{name:<8} {:>6.3} | {:>10.4} {:>7.3} | {:>10.4} {:>7.3} | {:>10.4} {:>7.3}  (b̃x={} R={:.2})",
+            "{name:<8} {:>6.3} | {:>10.4} {:>7.3} | {:>10.4} {:>7.3} | {:>10.4} {:>7.3}  (b̃x={} R={:.2} achieved {:.2})",
             fp.accuracy(),
             signed.giga_flips / test.len() as f64 * 1000.0,
             signed.accuracy(),
@@ -80,7 +80,8 @@ fn arrows(ctx: &Ctx, bits: u32, acc_bits: u32, method: ActQuantMethod) -> Result
             pann.giga_flips / test.len() as f64 * 1000.0,
             pann.accuracy(),
             op.bx_tilde,
-            op.r
+            op.r,
+            op.achieved_adds_per_element
         );
     }
     println!("(P columns: Mega bit flips per sample)");

@@ -25,7 +25,12 @@
 //!   per-thread [`nn::Scratch`] arenas.
 //! - [`pann`] — the headline contribution: converting a pre-trained
 //!   model to unsigned arithmetic (Sec. 4), removing the multiplier
-//!   (Sec. 5), and Algorithm 1 for choosing the operating point.
+//!   (Sec. 5), Algorithm 1 for choosing the operating point, and the
+//!   menu compiler ([`pann::menu`]): sweep the `(b̃_x, R)` grid along
+//!   equal-power curves, Pareto-prune to the accuracy-vs-energy
+//!   frontier, persist it as a versioned `menu.json` artifact and
+//!   recompile it for serving (`pann-cli compile-menu` →
+//!   `pann-cli serve --menu`).
 //! - [`runtime`] — PJRT execution of AOT-lowered JAX/Pallas artifacts
 //!   (HLO text) produced by `python/compile/aot.py` (behind the `pjrt`
 //!   feature; the default build uses an API-identical stub).
@@ -35,7 +40,9 @@
 //!   bounded-queue admission control with typed failures
 //!   (`ServeError`), point-coherent dynamic batching, runtime budget
 //!   traversal, and a worker pool over shared `Arc<ExecutionPlan>`
-//!   menus (or one worker owning `!Send` PJRT engines).
+//!   menus (or one worker owning `!Send` PJRT engines). Menus load
+//!   straight from a compiled artifact via
+//!   [`coordinator::Menu::from_artifact`].
 //! - [`experiments`] — one driver per table/figure of the paper.
 //!
 //! Power is reported in **bit flips**, exactly as in the paper

@@ -3,7 +3,8 @@
 //! ```text
 //! pann-cli experiment <id>|all [--quick] [--artifacts DIR]
 //! pann-cli power-report [--bits B] [--acc-bits B]
-//! pann-cli serve --model NAME [--requests N] [--budget GFLIPS]
+//! pann-cli compile-menu --model NAME [--budget-bits 2,4,8] [--out menu.json] [--quick]
+//! pann-cli serve --model NAME [--menu menu.json] [--requests N] [--budget GFLIPS]
 //!               [--queue-depth D] [--deadline-ms MS]
 //! pann-cli sweep --model NAME [--quick]
 //! pann-cli list
@@ -13,7 +14,7 @@
 //! carries no `clap`.)
 
 use anyhow::{bail, Context, Result};
-use pann::coordinator::{EnginePoint, InferRequest, Menu, ServeError, ServerBuilder};
+use pann::coordinator::{Client, EnginePoint, InferRequest, Menu, ServeError, ServerBuilder};
 use pann::experiments::{self, Ctx};
 use pann::runtime::{ArtifactManifest, CpuRuntime};
 use std::path::PathBuf;
@@ -106,7 +107,24 @@ fn run() -> Result<()> {
                 Some(s) => Some(s.parse()?),
                 None => None,
             };
-            serve(&ctx, &model, n, budget, queue_depth, deadline_ms)
+            if let Some(menu_path) = args.flags.get("menu") {
+                serve_menu(&ctx, &model, menu_path, n, budget, queue_depth, deadline_ms)
+            } else {
+                serve(&ctx, &model, n, budget, queue_depth, deadline_ms)
+            }
+        }
+        "compile-menu" => {
+            let model = args.flags.get("model").cloned().unwrap_or_else(|| "cnn-s".into());
+            let bits: Vec<u32> = args
+                .flags
+                .get("budget-bits")
+                .map(String::as_str)
+                .unwrap_or("2,4,8")
+                .split(',')
+                .map(|s| s.trim().parse().context("parse --budget-bits"))
+                .collect::<Result<_>>()?;
+            let out = args.flags.get("out").cloned().unwrap_or_else(|| "menu.json".into());
+            compile_menu_cmd(&ctx, &model, &bits, &out)
         }
         "sweep" => {
             let model = args.flags.get("model").cloned().unwrap_or_else(|| "cnn-s".into());
@@ -119,7 +137,9 @@ fn run() -> Result<()> {
                  \x20 experiment <id>|all [--quick]   regenerate a paper table/figure\n\
                  \x20 list                            list experiment ids\n\
                  \x20 power-report [--bits B]         per-MAC power model summary\n\
-                 \x20 serve --model M [--requests N] [--budget G]\n\
+                 \x20 compile-menu --model M [--budget-bits 2,4,8] [--out menu.json]\n\
+                 \x20                                 compile + Pareto-prune the operating-point menu\n\
+                 \x20 serve --model M [--menu menu.json] [--requests N] [--budget G]\n\
                  \x20       [--queue-depth D] [--deadline-ms MS]\n\
                  \x20 sweep --model M [--quick]       power-accuracy sweep (Fig. 1)\n"
             );
@@ -197,8 +217,30 @@ fn serve(
         "test",
     )?;
     let n = n_requests.min(ds.len());
+    let (correct, expired, _) = replay(&client, &ds, n, deadline_ms)?;
+    let served = n - expired;
+    println!("accuracy {:.3} over {served} served requests", correct as f64 / served.max(1) as f64);
+    if expired > 0 {
+        println!("{expired} requests rejected past their {}ms deadline", deadline_ms.unwrap_or(0));
+    }
+    println!("{}", client.metrics().report());
+    srv.shutdown();
+    Ok(())
+}
+
+/// Replay the first `n` test samples through a serving client: returns
+/// (correct predictions, deadline-expired requests, last serving
+/// point). Shared by `serve` and `serve_menu` so accuracy/deadline
+/// accounting cannot diverge between the two paths.
+fn replay(
+    client: &Client,
+    ds: &pann::data::Dataset,
+    n: usize,
+    deadline_ms: Option<u64>,
+) -> Result<(usize, usize, String)> {
     let mut correct = 0usize;
     let mut expired = 0usize;
+    let mut point = String::new();
     for i in 0..n {
         let mut req = InferRequest::new(ds.sample(i).to_vec());
         if let Some(ms) = deadline_ms {
@@ -211,20 +253,123 @@ fn serve(
                     .iter()
                     .enumerate()
                     .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                    .map(|(i, _)| i)
+                    .map(|(j, _)| j)
                     .unwrap_or(0);
                 if pred == ds.y[i] as usize {
                     correct += 1;
                 }
+                point = r.point;
             }
             Err(ServeError::DeadlineExceeded) => expired += 1,
             Err(e) => return Err(e.into()),
         }
     }
-    let served = n - expired;
-    println!("accuracy {:.3} over {served} served requests", correct as f64 / served.max(1) as f64);
-    if expired > 0 {
-        println!("{expired} requests rejected past their {}ms deadline", deadline_ms.unwrap_or(0));
+    Ok((correct, expired, point))
+}
+
+/// Compile, Pareto-prune and persist the operating-point menu
+/// (`pann-cli compile-menu`).
+fn compile_menu_cmd(ctx: &Ctx, model_name: &str, bits: &[u32], out: &str) -> Result<()> {
+    use pann::quant::ActQuantMethod;
+    let (model, test) = ctx.load_model(model_name)?;
+    let val = test.take(ctx.eval_n().min(128));
+    let calib = pann::pann::convert::calib_tensor(&test, 32);
+    let t0 = std::time::Instant::now();
+    let menu = pann::pann::compile_menu(
+        &model,
+        bits,
+        ActQuantMethod::BnStats,
+        Some(&calib),
+        &val,
+        2..=8,
+    )?;
+    let dt = t0.elapsed().as_secs_f64();
+    menu.save(std::path::Path::new(out))?;
+    println!(
+        "compiled menu for '{model_name}' in {dt:.2}s: swept {} candidates, kept {} frontier \
+         points ({} pruned) -> {out}",
+        menu.swept,
+        menu.points.len(),
+        menu.pruned()
+    );
+    for line in menu.frontier_lines() {
+        println!("  {line}");
+    }
+    Ok(())
+}
+
+/// Serve a compiled menu artifact on the native worker pool
+/// (`pann-cli serve --menu menu.json`), sweeping the global budget
+/// across the frontier to demonstrate deployment-time traversal.
+///
+/// The model must be loaded exactly as it was for `compile-menu`
+/// (same `--model`, same `--quick`ness when falling back to the
+/// built-in reference models) — the artifact's fingerprint check
+/// rejects anything else.
+fn serve_menu(
+    ctx: &Ctx,
+    model: &str,
+    menu_path: &str,
+    n_requests: usize,
+    budget: f64,
+    queue_depth: usize,
+    deadline_ms: Option<u64>,
+) -> Result<()> {
+    let (m, test) = ctx.load_model(model)?;
+    let artifact = pann::pann::MenuArtifact::load(std::path::Path::new(menu_path))?;
+    println!(
+        "menu {menu_path}: {} frontier points ({} candidates swept) for model '{}'",
+        artifact.points.len(),
+        artifact.swept,
+        artifact.model_name
+    );
+    let calib = pann::pann::convert::calib_tensor(&test, 32);
+    let max_batch = 16;
+    // build the serving points from the artifact already in hand (one
+    // read: the sweep below and the served menu cannot diverge)
+    let menu = Menu::shared(artifact.shared_points(&m, Some(&calib), max_batch)?);
+    let workers = pann::nn::eval::n_threads();
+    let srv = ServerBuilder::new()
+        .workers(workers)
+        .queue_depth(queue_depth)
+        .max_batch(max_batch)
+        .budget_gflips(budget)
+        .serve(menu)?;
+    let client = srv.client();
+    let n = n_requests.min(test.len()).max(1);
+    println!(
+        "sweeping the global budget across the frontier ({workers} workers, {n} requests per point):"
+    );
+    let run_phase = |phase_budget: f64| -> Result<(String, f64, usize, usize)> {
+        client.set_budget(phase_budget);
+        let (correct, expired, served_by) = replay(&client, &test, n, deadline_ms)?;
+        let served = n - expired;
+        let acc = correct as f64 / served.max(1) as f64;
+        Ok((served_by, acc, served, expired))
+    };
+    for p in &artifact.points {
+        // a budget fractionally above the point's cost must land on it
+        let (served_by, acc, served, expired) = run_phase(p.gflips_per_sample * (1.0 + 1e-9))?;
+        println!(
+            "  budget {:>12.6} GF -> point {:<18} test acc {acc:.3} ({served} served{})",
+            p.gflips_per_sample,
+            served_by,
+            if expired > 0 { format!(", {expired} expired") } else { String::new() }
+        );
+        if served > 0 && served_by != p.name {
+            println!("    (warn: expected point {} to serve this budget)", p.name);
+        }
+    }
+    // finish at the caller's --budget so the flag is honored (the
+    // frontier sweep above deliberately overrides the global budget)
+    if budget.is_finite() {
+        let (served_by, acc, served, expired) = run_phase(budget)?;
+        println!(
+            "  --budget {:>10.6} GF -> point {:<18} test acc {acc:.3} ({served} served{})",
+            budget,
+            served_by,
+            if expired > 0 { format!(", {expired} expired") } else { String::new() }
+        );
     }
     println!("{}", client.metrics().report());
     srv.shutdown();

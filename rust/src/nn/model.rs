@@ -157,6 +157,68 @@ impl Model {
         Ok(model)
     }
 
+    /// Content fingerprint of the graph: a 64-bit FNV-1a over the
+    /// name, input shape, node topology, op parameters, exact weight
+    /// bits and recorded activation statistics. Compiled-menu
+    /// artifacts (`menu.json`) persist it so a menu is never
+    /// recompiled against a different model than it was measured on —
+    /// any weight, wiring or calibration-stat change moves the hash.
+    pub fn fingerprint(&self) -> u64 {
+        const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+        fn eat(h: &mut u64, bytes: &[u8]) {
+            for &b in bytes {
+                *h ^= b as u64;
+                *h = h.wrapping_mul(FNV_PRIME);
+            }
+        }
+        fn eat_usize(h: &mut u64, v: usize) {
+            eat(h, &(v as u64).to_le_bytes());
+        }
+        fn eat_f32s(h: &mut u64, vs: &[f32]) {
+            eat_usize(h, vs.len());
+            for v in vs {
+                eat(h, &v.to_bits().to_le_bytes());
+            }
+        }
+        let mut h = FNV_OFFSET;
+        eat(&mut h, self.name.as_bytes());
+        for &d in &self.input_shape {
+            eat_usize(&mut h, d);
+        }
+        for node in &self.nodes {
+            eat(&mut h, node.op.name().as_bytes());
+            eat(&mut h, &(node.input as i64).to_le_bytes());
+            match &node.op {
+                Op::Conv { w, b, stride, pad } => {
+                    for &d in &w.shape {
+                        eat_usize(&mut h, d);
+                    }
+                    eat_f32s(&mut h, &w.data);
+                    eat_f32s(&mut h, b);
+                    eat_usize(&mut h, *stride);
+                    eat_usize(&mut h, *pad);
+                }
+                Op::Linear { w, b } => {
+                    for &d in &w.shape {
+                        eat_usize(&mut h, d);
+                    }
+                    eat_f32s(&mut h, &w.data);
+                    eat_f32s(&mut h, b);
+                }
+                Op::MaxPool { k } => eat_usize(&mut h, *k),
+                Op::Add { rhs } => eat_usize(&mut h, *rhs),
+                Op::Relu | Op::GlobalAvgPool | Op::Flatten => {}
+            }
+        }
+        for (idx, stats) in &self.act_stats {
+            eat_usize(&mut h, *idx);
+            eat_f32s(&mut h, &stats.mean);
+            eat_f32s(&mut h, &stats.std);
+        }
+        h
+    }
+
     /// Record per-node output statistics on a batch (used when a
     /// manifest lacks them and for the built-in reference models).
     pub fn record_act_stats(&mut self, x: &Tensor) -> Result<()> {
@@ -311,6 +373,34 @@ mod tests {
         std::fs::write(dir.join("manifest.json"), r#"{"name":"x","input":[3],"layers":[{"op":"nope"}]}"#)
             .unwrap();
         assert!(Model::load(&dir).is_err());
+    }
+
+    #[test]
+    fn fingerprint_tracks_content() {
+        let m1 = Model::reference_cnn(3);
+        let m2 = Model::reference_cnn(3);
+        assert_eq!(m1.fingerprint(), m2.fingerprint(), "same seed, same fingerprint");
+        assert_ne!(
+            m1.fingerprint(),
+            Model::reference_cnn(4).fingerprint(),
+            "different weights must move the fingerprint"
+        );
+        assert_ne!(
+            m1.fingerprint(),
+            Model::reference_resnet(3).fingerprint(),
+            "different topology must move the fingerprint"
+        );
+        // a single weight bit moves it too
+        let mut m3 = Model::reference_cnn(3);
+        if let Op::Conv { w, .. } = &mut m3.nodes[0].op {
+            w.data[0] += 1e-3;
+        }
+        assert_ne!(m1.fingerprint(), m3.fingerprint());
+        // recording stats moves it (stats feed the data-free quantizers)
+        let mut m4 = Model::reference_cnn(3);
+        let x = Tensor::zeros(vec![2, 1, 16, 16]);
+        m4.record_act_stats(&x).unwrap();
+        assert_ne!(m1.fingerprint(), m4.fingerprint());
     }
 
     #[test]

@@ -1,9 +1,13 @@
 //! Algorithm 1 of the paper: choosing the optimal `(b̃_x, R)` for a
 //! power budget by validating candidate activation bit widths.
+//!
+//! The candidate evaluation is the shared equal-power sweep core in
+//! [`super::menu::sweep_equal_power`] (also behind the Table-15 curve
+//! and the menu compiler), so the `R` inversion and its
+//! [`crate::power::budget::MIN_R`] cutoff cannot drift between the
+//! three call sites.
 
 use crate::data::Dataset;
-use crate::nn::eval::eval_quantized;
-use crate::nn::quantized::{QuantConfig, QuantizedModel};
 use crate::nn::{Model, Tensor};
 use crate::quant::ActQuantMethod;
 use anyhow::Result;
@@ -12,7 +16,13 @@ use anyhow::Result;
 #[derive(Clone, Copy, Debug)]
 pub struct OperatingPoint {
     pub bx_tilde: u32,
+    /// Requested additions budget (Eq. 13 inversion at the power
+    /// budget).
     pub r: f64,
+    /// Additions per element the quantizer actually achieved
+    /// (`‖w_q‖₁/d`, MAC-weighted) — the realized latency factor,
+    /// which undershoots `r` in the small-R regime (Sec. 5.1).
+    pub achieved_adds_per_element: f64,
     /// Validation accuracy at this point.
     pub val_acc: f64,
     /// Power per element implied by Eq. (13) with the *requested* R.
@@ -21,6 +31,11 @@ pub struct OperatingPoint {
 
 /// Algorithm 1: for each candidate `b̃_x`, set `R = P/b̃_x − 0.5`
 /// (Eq. 13), quantize, run on the validation set, keep the best.
+///
+/// Accuracy ties break toward the *lower* `R`: `R` is the latency
+/// factor (paper Sec. 6), so among equally accurate points the
+/// fastest one wins. (The seed kept the first candidate — the lowest
+/// `b̃_x`, i.e. the *highest*-latency point.)
 ///
 /// `power_budget` is in flips per MAC/element (e.g.
 /// [`crate::power::model::mac_power_unsigned_total`] of the reference
@@ -33,26 +48,39 @@ pub fn choose_operating_point(
     val: &Dataset,
     bx_range: std::ops::RangeInclusive<u32>,
 ) -> Result<OperatingPoint> {
-    let mut best: Option<OperatingPoint> = None;
-    for bx in bx_range {
-        let r = power_budget / bx as f64 - 0.5;
-        if r <= 0.05 {
-            continue; // budget can't afford this activation width
-        }
-        let cfg = QuantConfig::pann(bx, r, act_method);
-        let qm = QuantizedModel::prepare(model, cfg, calib)?;
-        let res = eval_quantized(&qm, val)?;
-        let cand = OperatingPoint {
-            bx_tilde: bx,
-            r,
-            val_acc: res.accuracy(),
-            power_per_element: crate::power::model::pann_power_per_element(r, bx),
+    let cands: Vec<OperatingPoint> =
+        super::menu::sweep_equal_power(model, power_budget, act_method, calib, val, bx_range)?
+            .into_iter()
+            .map(|sp| OperatingPoint {
+                bx_tilde: sp.bx_tilde,
+                r: sp.r,
+                achieved_adds_per_element: sp.achieved_adds_per_element,
+                val_acc: sp.val_acc,
+                power_per_element: sp.power_per_element,
+            })
+            .collect();
+    pick_best(&cands)
+        .map(|i| cands[i])
+        .ok_or_else(|| anyhow::anyhow!("power budget {power_budget} too small for any bit width"))
+}
+
+/// Best candidate by validation accuracy; ties break toward lower `R`
+/// (lower latency).
+fn pick_best(cands: &[OperatingPoint]) -> Option<usize> {
+    let mut best: Option<usize> = None;
+    for (i, c) in cands.iter().enumerate() {
+        let better = match best {
+            None => true,
+            Some(b) => {
+                c.val_acc > cands[b].val_acc
+                    || (c.val_acc == cands[b].val_acc && c.r < cands[b].r)
+            }
         };
-        if best.map_or(true, |b| cand.val_acc > b.val_acc) {
-            best = Some(cand);
+        if better {
+            best = Some(i);
         }
     }
-    best.ok_or_else(|| anyhow::anyhow!("power budget {power_budget} too small for any bit width"))
+    best
 }
 
 #[cfg(test)]
@@ -74,6 +102,10 @@ mod tests {
         assert!(op.r > 0.0);
         // Eq. 13 consistency: requested point sits on the budget curve.
         assert!((op.power_per_element - p).abs() < 1e-9);
+        // achieved R is reported and can only undershoot the request
+        // (plus rounding slack, Sec. 5.1).
+        assert!(op.achieved_adds_per_element > 0.0);
+        assert!(op.achieved_adds_per_element <= op.r + 0.5 + 1e-9);
     }
 
     #[test]
@@ -95,5 +127,31 @@ mod tests {
         let hi = choose_operating_point(&model, 64.0, ActQuantMethod::Aciq, Some(&calib), &ds, 2..=8)
             .unwrap();
         assert!(hi.val_acc + 0.1 >= lo.val_acc, "hi {} lo {}", hi.val_acc, lo.val_acc);
+    }
+
+    #[test]
+    fn accuracy_ties_break_toward_lower_latency() {
+        // Hand-built candidates: b, c, d tie on accuracy; c has the
+        // lowest R (lowest latency) and must win. The seed kept the
+        // first (highest-R) tied candidate.
+        let op = |bx: u32, r: f64, acc: f64| OperatingPoint {
+            bx_tilde: bx,
+            r,
+            achieved_adds_per_element: r,
+            val_acc: acc,
+            power_per_element: (r + 0.5) * bx as f64,
+        };
+        let cands = [
+            op(2, 4.5, 0.80),
+            op(3, 2.83, 0.90),
+            op(6, 1.17, 0.90),
+            op(4, 2.0, 0.90),
+            op(8, 0.75, 0.85),
+        ];
+        assert_eq!(pick_best(&cands), Some(2), "lowest-R tie must win");
+        assert_eq!(pick_best(&[]), None);
+        // a strictly better accuracy still beats a faster tie
+        let cands = [op(6, 1.17, 0.90), op(2, 4.5, 0.95)];
+        assert_eq!(pick_best(&cands), Some(1));
     }
 }

@@ -1,0 +1,597 @@
+//! The menu compiler: build, Pareto-prune, persist and reload the
+//! full power–accuracy frontier (paper Sec. 6, Tables 14–15).
+//!
+//! The paper's deployment claim is that PANN "seamlessly traverses the
+//! power-accuracy trade-off at deployment time" — but traversing needs
+//! a *menu*: the set of `(b̃_x, R)` operating points actually worth
+//! serving. Following Moons et al. (*Minimum Energy Quantized Neural
+//! Networks*, 2017), finding that set requires sweeping the whole
+//! precision/energy grid, not guessing 2–3 points by hand:
+//!
+//! 1. [`sweep_equal_power`] — the one sweep core shared with
+//!    Algorithm 1 ([`super::algorithm1`]) and the Table-15 curve
+//!    ([`super::tradeoff`]): walk `b̃_x` along an equal-power curve
+//!    (`R` from [`crate::power::budget::equal_power_r_usable`]),
+//!    compile each candidate ([`QuantizedModel::prepare`]) and measure
+//!    validation accuracy + Gflips/sample ([`eval_quantized`]).
+//! 2. [`compile_menu`] — run the sweep over one curve per requested
+//!    budget bit width, then [`pareto_prune`] the union to the
+//!    monotone accuracy-vs-energy frontier (a point survives only if
+//!    no cheaper point classifies at least as well).
+//! 3. [`MenuArtifact`] — the versioned `menu.json` form of the
+//!    frontier (schema [`MENU_SCHEMA`]): model name + fingerprint,
+//!    per-point `(name, b̃_x, R, Gflips/sample, val-acc, quantizer)`.
+//! 4. [`MenuArtifact::shared_points`] — recompile every persisted
+//!    point into an [`ExecutionPlan`]-backed engine for the serving
+//!    pool; [`crate::coordinator::Menu::from_artifact`] wraps this so
+//!    `pann-cli compile-menu` → `pann-cli serve --menu menu.json`
+//!    round-trips.
+
+use crate::coordinator::{PlanEngine, SharedPoint};
+use crate::data::Dataset;
+use crate::nn::eval::eval_quantized;
+use crate::nn::quantized::{QuantConfig, QuantizedModel};
+use crate::nn::{ExecutionPlan, Model, Tensor};
+use crate::power::budget::equal_power_r_usable;
+use crate::power::model::{mac_power_unsigned_total, pann_power_per_element};
+use crate::quant::ActQuantMethod;
+use crate::util::Json;
+use anyhow::{Context, Result};
+use std::path::Path;
+use std::sync::Arc;
+
+/// Version tag of the `menu.json` artifact. Bump on any field change;
+/// the loader rejects other schemas instead of misreading them.
+pub const MENU_SCHEMA: &str = "pann-menu/v1";
+
+/// One evaluated candidate from an equal-power sweep.
+pub struct SweepPoint {
+    pub bx_tilde: u32,
+    /// Requested additions budget `R` (Eq. 13 inversion at the curve's
+    /// power level).
+    pub r: f64,
+    /// Power per element implied by Eq. (13) with the requested `R`
+    /// (= the curve's power level).
+    pub power_per_element: f64,
+    /// Validation accuracy of the compiled candidate.
+    pub val_acc: f64,
+    /// *Measured* energy per sample in Giga bit flips (metered by the
+    /// engine, not the analytic budget).
+    pub gflips_per_sample: f64,
+    /// Achieved `‖w_q‖₁/d` across MAC layers, MAC-weighted — the
+    /// latency factor actually realized (vs the requested `r`).
+    pub achieved_adds_per_element: f64,
+    /// Storage bits per weight code (`b_R`, Table 14).
+    pub weight_code_bits: u32,
+}
+
+/// Sweep every usable `b̃_x` on the equal-power curve at `power` flips
+/// per element: the shared evaluation core of Algorithm 1, the
+/// Table-15 trade-off table and the menu compiler. Candidates whose
+/// inverted `R` falls below [`crate::power::budget::MIN_R`] are
+/// skipped (the budget cannot afford that activation width).
+///
+/// Each candidate's compiled plan is dropped after measurement, so
+/// peak memory stays at one weight bank regardless of grid size; the
+/// menu compiler recompiles only the kept frontier points.
+pub fn sweep_equal_power(
+    model: &Model,
+    power: f64,
+    act_method: ActQuantMethod,
+    calib: Option<&Tensor>,
+    val: &Dataset,
+    bx_range: std::ops::RangeInclusive<u32>,
+) -> Result<Vec<SweepPoint>> {
+    let mut out = Vec::new();
+    for bx in bx_range {
+        let Some(r) = equal_power_r_usable(power, bx) else {
+            continue;
+        };
+        let cfg = QuantConfig::pann(bx, r, act_method);
+        let qm = QuantizedModel::prepare(model, cfg, calib)
+            .with_context(|| format!("compile candidate b̃x={bx} R={r:.3}"))?;
+        let res = eval_quantized(&qm, val)?;
+        out.push(SweepPoint {
+            bx_tilde: bx,
+            r,
+            power_per_element: pann_power_per_element(r, bx),
+            val_acc: res.accuracy(),
+            gflips_per_sample: res.flips_per_sample / 1e9,
+            achieved_adds_per_element: qm.achieved_r(),
+            weight_code_bits: qm.weight_code_bits(),
+        });
+    }
+    Ok(out)
+}
+
+/// Prune candidates to the monotone accuracy-vs-energy Pareto
+/// frontier: sorted by cost, a point survives only if it classifies
+/// *strictly* better than every cheaper survivor (equal-accuracy
+/// points at higher cost are dominated). The result is strictly
+/// increasing in both cost and accuracy, so a budget policy over it
+/// can never pick a dominated point.
+///
+/// Generic over the candidate representation (`cost`/`acc` accessors)
+/// so the invariant is property-testable without compiling models.
+pub fn pareto_prune<T>(
+    mut cands: Vec<T>,
+    cost: impl Fn(&T) -> f64,
+    acc: impl Fn(&T) -> f64,
+) -> Vec<T> {
+    // cheapest first; among equal costs, best accuracy first so the
+    // weaker same-cost candidates fail the strict-improvement test
+    cands.sort_by(|a, b| cost(a).total_cmp(&cost(b)).then(acc(b).total_cmp(&acc(a))));
+    let mut kept: Vec<T> = Vec::new();
+    for c in cands {
+        if kept.last().map_or(true, |l| acc(&c) > acc(l)) {
+            kept.push(c);
+        }
+    }
+    kept
+}
+
+/// One persisted frontier point of a [`MenuArtifact`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct MenuPointSpec {
+    /// Stable point name (unique within the menu; pinnable via
+    /// [`crate::coordinator::InferRequest::pin_point`]).
+    pub name: String,
+    pub bx_tilde: u32,
+    pub r: f64,
+    /// Measured energy per sample (Giga bit flips) — the cost the
+    /// serving policy ranks by.
+    pub gflips_per_sample: f64,
+    pub val_acc: f64,
+    /// Activation quantizer the point was compiled and measured with.
+    pub quant_method: ActQuantMethod,
+    /// Achieved additions per element (latency factor, Sec. 6).
+    pub achieved_adds_per_element: f64,
+    /// Storage bits per weight code (`b_R`).
+    pub weight_code_bits: u32,
+}
+
+/// The versioned, serializable power–accuracy frontier of one model.
+///
+/// Invariant: `points` is sorted ascending by `gflips_per_sample` and
+/// strictly Pareto-monotone (accuracy strictly increasing with cost).
+#[derive(Clone, Debug, PartialEq)]
+pub struct MenuArtifact {
+    pub model_name: String,
+    /// [`Model::fingerprint`] of the network the menu was compiled
+    /// for; verified again before recompiling for serving.
+    pub model_fingerprint: u64,
+    pub macs_per_sample: u64,
+    /// Candidates evaluated before Pareto pruning (for reporting:
+    /// `swept - points.len()` were dominated).
+    pub swept: usize,
+    pub points: Vec<MenuPointSpec>,
+}
+
+/// Compile the full operating-point menu for `model`: one equal-power
+/// sweep per entry of `budget_bits` (the curve matching a `b`-bit
+/// unsigned MAC), Pareto-pruned to the frontier.
+///
+/// `val` drives the accuracy measurement; `calib` feeds the quantizer
+/// methods that need calibration inputs (ACIQ, Recon). The result
+/// carries measurements only — serve it via [`MenuArtifact::save`] +
+/// [`crate::coordinator::Menu::from_artifact`] (or recompile directly
+/// with [`MenuArtifact::shared_points`]); plans are built exactly once
+/// at serving time, when the engine batch size is known.
+pub fn compile_menu(
+    model: &Model,
+    budget_bits: &[u32],
+    act_method: ActQuantMethod,
+    calib: Option<&Tensor>,
+    val: &Dataset,
+    bx_range: std::ops::RangeInclusive<u32>,
+) -> Result<MenuArtifact> {
+    anyhow::ensure!(!budget_bits.is_empty(), "no budget bit widths given");
+    // dedup the curve grid *before* sweeping: a repeated bit width
+    // would re-run prepare + eval (the two expensive steps) only to
+    // produce identical points; distinct widths cannot collide, since
+    // a given b̃x maps each power level to a distinct R
+    let mut bits: Vec<u32> = budget_bits.to_vec();
+    bits.sort_unstable();
+    bits.dedup();
+    let mut cands: Vec<SweepPoint> = Vec::new();
+    for &b in &bits {
+        let power = mac_power_unsigned_total(b);
+        cands.extend(sweep_equal_power(
+            model,
+            power,
+            act_method,
+            calib,
+            val,
+            bx_range.clone(),
+        )?);
+    }
+    anyhow::ensure!(
+        !cands.is_empty(),
+        "no usable operating point for budgets {budget_bits:?} over b̃x {bx_range:?}"
+    );
+    let swept = cands.len();
+    let kept = pareto_prune(cands, |p| p.gflips_per_sample, |p| p.val_acc);
+    let points: Vec<MenuPointSpec> = kept
+        .into_iter()
+        .enumerate()
+        .map(|(i, sp)| MenuPointSpec {
+            // index prefix keeps names unique even if two frontier
+            // points share (b̃x, rounded R)
+            name: format!("pt{i:02}-bx{}-r{:.2}", sp.bx_tilde, sp.r),
+            bx_tilde: sp.bx_tilde,
+            r: sp.r,
+            gflips_per_sample: sp.gflips_per_sample,
+            val_acc: sp.val_acc,
+            quant_method: act_method,
+            achieved_adds_per_element: sp.achieved_adds_per_element,
+            weight_code_bits: sp.weight_code_bits,
+        })
+        .collect();
+    Ok(MenuArtifact {
+        model_name: model.name.clone(),
+        model_fingerprint: model.fingerprint(),
+        macs_per_sample: model.num_macs(),
+        swept,
+        points,
+    })
+}
+
+impl MenuArtifact {
+    /// Candidates dropped by the Pareto pruning.
+    pub fn pruned(&self) -> usize {
+        self.swept - self.points.len()
+    }
+
+    /// One human-readable line per frontier point, cheapest first —
+    /// the single listing used by `pann-cli compile-menu`, the e2e
+    /// example and the menu bench, so their outputs cannot drift.
+    pub fn frontier_lines(&self) -> impl Iterator<Item = String> + '_ {
+        self.points.iter().map(|p| {
+            format!(
+                "{:<18} b̃x={} R={:.2} adds/elem {:.2} {:.6} GF/sample val-acc {:.3}",
+                p.name,
+                p.bx_tilde,
+                p.r,
+                p.achieved_adds_per_element,
+                p.gflips_per_sample,
+                p.val_acc
+            )
+        })
+    }
+
+    /// Serialize to the versioned `menu.json` form.
+    pub fn to_json(&self) -> Json {
+        let points = self
+            .points
+            .iter()
+            .map(|p| {
+                Json::obj(vec![
+                    ("name", Json::from(p.name.as_str())),
+                    ("bx_tilde", Json::from(p.bx_tilde as usize)),
+                    ("r", Json::Num(p.r)),
+                    ("gflips_per_sample", Json::Num(p.gflips_per_sample)),
+                    ("val_acc", Json::Num(p.val_acc)),
+                    ("quant_method", Json::from(p.quant_method.name())),
+                    (
+                        "achieved_adds_per_element",
+                        Json::Num(p.achieved_adds_per_element),
+                    ),
+                    ("weight_code_bits", Json::from(p.weight_code_bits as usize)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("schema", Json::from(MENU_SCHEMA)),
+            ("model", Json::from(self.model_name.as_str())),
+            // hex string: a u64 does not survive the f64 number path
+            (
+                "model_fingerprint",
+                Json::from(format!("{:016x}", self.model_fingerprint)),
+            ),
+            ("macs_per_sample", Json::Num(self.macs_per_sample as f64)),
+            ("swept", Json::from(self.swept)),
+            ("points", Json::Arr(points)),
+        ])
+    }
+
+    /// Parse the `menu.json` form, rejecting unknown schemas.
+    pub fn from_json(j: &Json) -> Result<MenuArtifact> {
+        let schema = j.req("schema")?.as_str().context("schema must be a string")?;
+        anyhow::ensure!(
+            schema == MENU_SCHEMA,
+            "unsupported menu schema '{schema}' (this build reads {MENU_SCHEMA})"
+        );
+        let fp_hex = j
+            .req("model_fingerprint")?
+            .as_str()
+            .context("model_fingerprint must be a hex string")?;
+        let model_fingerprint =
+            u64::from_str_radix(fp_hex, 16).context("parse model_fingerprint")?;
+        let mut points = Vec::new();
+        let arr = j.req("points")?.as_arr().context("points must be an array")?;
+        for (i, pj) in arr.iter().enumerate() {
+            let method_name = pj
+                .req("quant_method")?
+                .as_str()
+                .context("quant_method must be a string")?;
+            let quant_method = ActQuantMethod::from_name(method_name)
+                .with_context(|| format!("unknown quant_method '{method_name}'"))?;
+            points.push(MenuPointSpec {
+                name: pj
+                    .req("name")?
+                    .as_str()
+                    .with_context(|| format!("point {i}: name must be a string"))?
+                    .to_string(),
+                bx_tilde: pj.req("bx_tilde")?.as_usize().context("bx_tilde")? as u32,
+                r: pj.req("r")?.as_f64().context("r")?,
+                gflips_per_sample: pj
+                    .req("gflips_per_sample")?
+                    .as_f64()
+                    .context("gflips_per_sample")?,
+                val_acc: pj.req("val_acc")?.as_f64().context("val_acc")?,
+                quant_method,
+                achieved_adds_per_element: pj
+                    .req("achieved_adds_per_element")?
+                    .as_f64()
+                    .context("achieved_adds_per_element")?,
+                weight_code_bits: pj
+                    .req("weight_code_bits")?
+                    .as_usize()
+                    .context("weight_code_bits")? as u32,
+            });
+        }
+        anyhow::ensure!(!points.is_empty(), "menu artifact has no points");
+        let swept = j.req("swept")?.as_usize().context("swept")?;
+        anyhow::ensure!(
+            swept >= points.len(),
+            "menu artifact claims {swept} candidates swept but keeps {} points",
+            points.len()
+        );
+        // the serving guarantee ("budget traversal is monotone by
+        // construction") rests on this invariant — reject hand-edited
+        // or corrupted artifacts that break it instead of silently
+        // serving a dominated point
+        for w in points.windows(2) {
+            anyhow::ensure!(
+                w[1].gflips_per_sample > w[0].gflips_per_sample && w[1].val_acc > w[0].val_acc,
+                "menu points are not a strictly monotone Pareto frontier ('{}' -> '{}')",
+                w[0].name,
+                w[1].name
+            );
+        }
+        Ok(MenuArtifact {
+            model_name: j.req("model")?.as_str().context("model")?.to_string(),
+            model_fingerprint,
+            macs_per_sample: j.req("macs_per_sample")?.as_f64().context("macs_per_sample")?
+                as u64,
+            swept,
+            points,
+        })
+    }
+
+    /// Write `menu.json`.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, format!("{}\n", self.to_json()))
+            .with_context(|| format!("write {}", path.display()))
+    }
+
+    /// Read and parse `menu.json`.
+    pub fn load(path: &Path) -> Result<MenuArtifact> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        let j = Json::parse(&text).with_context(|| format!("parse {}", path.display()))?;
+        Self::from_json(&j).with_context(|| format!("decode {}", path.display()))
+    }
+
+    /// Recompile every persisted point into an [`ExecutionPlan`] for
+    /// `model`, after verifying the artifact was compiled for exactly
+    /// this model (fingerprint match).
+    pub fn recompile(
+        &self,
+        model: &Model,
+        calib: Option<&Tensor>,
+    ) -> Result<Vec<(MenuPointSpec, Arc<ExecutionPlan>)>> {
+        let fp = model.fingerprint();
+        anyhow::ensure!(
+            fp == self.model_fingerprint,
+            "menu was compiled for model '{}' (fingerprint {:016x}), got fingerprint {:016x} — \
+             recompile the menu with `pann-cli compile-menu`",
+            self.model_name,
+            self.model_fingerprint,
+            fp
+        );
+        let mut out = Vec::with_capacity(self.points.len());
+        for p in &self.points {
+            let cfg = QuantConfig::pann(p.bx_tilde, p.r, p.quant_method);
+            let qm = QuantizedModel::prepare(model, cfg, calib)
+                .with_context(|| format!("recompile menu point '{}'", p.name))?;
+            anyhow::ensure!(
+                qm.macs_per_sample == self.macs_per_sample,
+                "menu point '{}': plan has {} MACs/sample, artifact recorded {}",
+                p.name,
+                qm.macs_per_sample,
+                self.macs_per_sample
+            );
+            out.push((p.clone(), qm.plan()));
+        }
+        Ok(out)
+    }
+
+    /// Recompile into serving points for a shared (pool) menu.
+    pub fn shared_points(
+        &self,
+        model: &Model,
+        calib: Option<&Tensor>,
+        max_batch: usize,
+    ) -> Result<Vec<SharedPoint>> {
+        Ok(self
+            .recompile(model, calib)?
+            .into_iter()
+            .map(|(p, plan)| SharedPoint {
+                name: p.name,
+                giga_flips_per_sample: p.gflips_per_sample,
+                engine: Arc::new(PlanEngine::new(plan, max_batch)),
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    fn setup() -> (Model, Dataset) {
+        let mut model = Model::reference_cnn(17);
+        let ds = Dataset::from_synth(synth::digits(48, 18));
+        let calib = crate::pann::convert::calib_tensor(&ds, 16);
+        model.record_act_stats(&calib).unwrap();
+        (model, ds)
+    }
+
+    #[test]
+    fn pareto_prune_keeps_only_the_frontier() {
+        // (cost, acc): b dominates a (same cost, better acc), d
+        // dominates e (cheaper, better acc), f extends the frontier.
+        let cands = vec![
+            ("a", 1.0, 0.50),
+            ("b", 1.0, 0.60),
+            ("c", 2.0, 0.55), // dominated by b
+            ("d", 3.0, 0.80),
+            ("e", 4.0, 0.80), // dominated by d (equal acc, pricier)
+            ("f", 5.0, 0.90),
+        ];
+        let kept = pareto_prune(cands, |c| c.1, |c| c.2);
+        let names: Vec<&str> = kept.iter().map(|c| c.0).collect();
+        assert_eq!(names, vec!["b", "d", "f"]);
+        for w in kept.windows(2) {
+            assert!(w[1].1 > w[0].1 && w[1].2 > w[0].2);
+        }
+    }
+
+    #[test]
+    fn pareto_prune_single_and_empty() {
+        assert!(pareto_prune(Vec::<(f64, f64)>::new(), |c| c.0, |c| c.1).is_empty());
+        let one = pareto_prune(vec![(1.0, 0.5)], |c| c.0, |c| c.1);
+        assert_eq!(one, vec![(1.0, 0.5)]);
+    }
+
+    #[test]
+    fn sweep_matches_usable_grid() {
+        // Satellite consistency check: the sweep must include exactly
+        // the b̃x values `equal_power_r_usable` admits, with its R.
+        let (model, ds) = setup();
+        let power = mac_power_unsigned_total(2); // P = 10
+        let pts =
+            sweep_equal_power(&model, power, ActQuantMethod::BnStats, None, &ds, 2..=8).unwrap();
+        let want: Vec<(u32, f64)> = (2..=8)
+            .filter_map(|bx| equal_power_r_usable(power, bx).map(|r| (bx, r)))
+            .collect();
+        let got: Vec<(u32, f64)> = pts.iter().map(|p| (p.bx_tilde, p.r)).collect();
+        assert_eq!(got, want);
+        for p in &pts {
+            assert!((p.power_per_element - power).abs() < 1e-9);
+            assert!(p.gflips_per_sample > 0.0);
+            assert!(p.achieved_adds_per_element >= 0.0);
+        }
+    }
+
+    #[test]
+    fn compiled_menu_is_strictly_monotone() {
+        let (model, ds) = setup();
+        let menu =
+            compile_menu(&model, &[2, 4, 8], ActQuantMethod::BnStats, None, &ds, 2..=8).unwrap();
+        assert!(!menu.points.is_empty());
+        assert!(menu.swept >= menu.points.len());
+        assert_eq!(menu.pruned(), menu.swept - menu.points.len());
+        for w in menu.points.windows(2) {
+            assert!(
+                w[1].gflips_per_sample > w[0].gflips_per_sample,
+                "menu costs must strictly increase"
+            );
+            assert!(w[1].val_acc > w[0].val_acc, "menu accuracy must strictly increase");
+        }
+        // names unique (pinning relies on it)
+        let mut names: Vec<&str> = menu.points.iter().map(|p| p.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), menu.points.len());
+    }
+
+    #[test]
+    fn duplicate_budgets_do_not_duplicate_points() {
+        let (model, ds) = setup();
+        let once =
+            compile_menu(&model, &[2], ActQuantMethod::BnStats, None, &ds, 2..=6).unwrap();
+        let twice =
+            compile_menu(&model, &[2, 2], ActQuantMethod::BnStats, None, &ds, 2..=6).unwrap();
+        assert_eq!(once.points, twice.points);
+        // the duplicate curve is dropped before the sweep, so it is
+        // neither evaluated nor miscounted as Pareto-pruned
+        assert_eq!(once.swept, twice.swept);
+    }
+
+    #[test]
+    fn artifact_json_roundtrip() {
+        let (model, ds) = setup();
+        let menu =
+            compile_menu(&model, &[2, 8], ActQuantMethod::BnStats, None, &ds, 2..=8).unwrap();
+        let text = menu.to_json().to_string();
+        let back = MenuArtifact::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, menu);
+    }
+
+    #[test]
+    fn loader_rejects_wrong_schema_and_fingerprint() {
+        let (model, ds) = setup();
+        let menu =
+            compile_menu(&model, &[2], ActQuantMethod::BnStats, None, &ds, 2..=4).unwrap();
+        // wrong schema
+        let mut j = menu.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("schema".into(), Json::from("pann-menu/v999"));
+        }
+        assert!(MenuArtifact::from_json(&j).is_err());
+        // wrong model at recompile time
+        let other = Model::reference_cnn(99);
+        assert!(menu.recompile(&other, None).is_err());
+        // right model recompiles to matching plans
+        let pairs = menu.recompile(&model, None).unwrap();
+        assert_eq!(pairs.len(), menu.points.len());
+    }
+
+    #[test]
+    fn loader_rejects_non_monotone_frontier() {
+        // the serving guarantee rests on the artifact invariant; a
+        // hand-edited menu with a dominated point must not load
+        let point = |name: &str, gf: f64, acc: f64| MenuPointSpec {
+            name: name.into(),
+            bx_tilde: 4,
+            r: 2.0,
+            gflips_per_sample: gf,
+            val_acc: acc,
+            quant_method: ActQuantMethod::BnStats,
+            achieved_adds_per_element: 2.0,
+            weight_code_bits: 3,
+        };
+        let art = MenuArtifact {
+            model_name: "m".into(),
+            model_fingerprint: 7,
+            macs_per_sample: 100,
+            swept: 2,
+            points: vec![point("a", 1.0, 0.9), point("b", 2.0, 0.8)],
+        };
+        let e = MenuArtifact::from_json(&art.to_json()).unwrap_err();
+        assert!(e.to_string().contains("Pareto"), "{e}");
+        // the valid ordering loads
+        let ok = MenuArtifact {
+            points: vec![point("a", 1.0, 0.8), point("b", 2.0, 0.9)],
+            ..art
+        };
+        assert_eq!(MenuArtifact::from_json(&ok.to_json()).unwrap(), ok);
+        // swept must cover the kept points (pruned() would underflow)
+        let short = MenuArtifact { swept: 1, ..ok };
+        let e = MenuArtifact::from_json(&short.to_json()).unwrap_err();
+        assert!(e.to_string().contains("swept"), "{e}");
+    }
+}

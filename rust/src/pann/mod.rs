@@ -8,11 +8,16 @@
 //!    `P`, sweep `b̃_x`, set `R = P/b̃_x − 0.5`, validate, keep the best.
 //! 4. **Traverse the trade-off at deployment** (Sec. 6, Tables 14–15)
 //!    — latency / memory / accuracy of every point on a budget curve.
+//! 5. **Compile the menu** ([`menu`]) — sweep one or more equal-power
+//!    curves, Pareto-prune to the accuracy-vs-energy frontier, persist
+//!    it as a versioned `menu.json` and recompile it for serving.
 
 pub mod algorithm1;
 pub mod convert;
+pub mod menu;
 pub mod tradeoff;
 
 pub use algorithm1::{choose_operating_point, OperatingPoint};
 pub use convert::{pann_at_budget, ptq_baseline, unsigned_of};
+pub use menu::{compile_menu, pareto_prune, sweep_equal_power, MenuArtifact, MenuPointSpec};
 pub use tradeoff::{budget_curve_table, TradeoffRow};

@@ -1,10 +1,13 @@
 //! The deployment-time trade-off tables (paper Tables 14–15): every
 //! `(b̃_x, R)` point on one power-budget curve with its latency,
 //! storage and accuracy implications.
+//!
+//! The per-candidate evaluation is the shared sweep core in
+//! [`super::menu::sweep_equal_power`] (one `R` inversion, one
+//! [`crate::power::budget::MIN_R`] cutoff for Algorithm 1, this table
+//! and the menu compiler alike).
 
 use crate::data::Dataset;
-use crate::nn::eval::eval_quantized;
-use crate::nn::quantized::{QuantConfig, QuantizedModel};
 use crate::nn::{Model, Tensor};
 use crate::quant::ActQuantMethod;
 use anyhow::Result;
@@ -36,25 +39,18 @@ pub fn budget_curve_table(
     bx_range: std::ops::RangeInclusive<u32>,
 ) -> Result<Vec<TradeoffRow>> {
     let p = crate::power::model::mac_power_unsigned_total(bx_ref);
-    let mut rows = Vec::new();
-    for bx in bx_range {
-        let r = p / bx as f64 - 0.5;
-        if r <= 0.05 {
-            continue;
-        }
-        let cfg = QuantConfig::pann(bx, r, act_method);
-        let qm = QuantizedModel::prepare(model, cfg, calib)?;
-        let res = eval_quantized(&qm, test)?;
-        rows.push(TradeoffRow {
-            bx_tilde: bx,
-            r,
-            b_r: qm.weight_code_bits(),
-            act_mem_factor: bx as f64 / bx_ref as f64,
-            weight_mem_factor: qm.weight_code_bits() as f64 / bx_ref as f64,
-            accuracy: res.accuracy(),
-        });
-    }
-    Ok(rows)
+    let pts = super::menu::sweep_equal_power(model, p, act_method, calib, test, bx_range)?;
+    Ok(pts
+        .into_iter()
+        .map(|sp| TradeoffRow {
+            bx_tilde: sp.bx_tilde,
+            r: sp.r,
+            b_r: sp.weight_code_bits,
+            act_mem_factor: sp.bx_tilde as f64 / bx_ref as f64,
+            weight_mem_factor: sp.weight_code_bits as f64 / bx_ref as f64,
+            accuracy: sp.val_acc,
+        })
+        .collect())
 }
 
 #[cfg(test)]

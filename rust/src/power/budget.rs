@@ -15,11 +15,29 @@ pub struct EqualPowerCurve {
     pub points: Vec<(u32, f64)>,
 }
 
+/// Smallest additions budget `R` an operating point is allowed to run
+/// at. Below this the PANN quantizer rounds essentially every weight
+/// to code 0 (Sec. 5.1's "as close as possible" undershoot regime) and
+/// the point is useless in practice. This is the single cutoff shared
+/// by Algorithm 1, the Table-15 curve sweep and the menu compiler —
+/// the seed carried two private, mutually inconsistent copies of it
+/// (`r <= 0.05` in `pann/algorithm1.rs` and `pann/tradeoff.rs` vs
+/// `r >= 0.0` here).
+pub const MIN_R: f64 = 0.05;
+
 /// Number of additions `R` that puts PANN at power `p` with activation
 /// width `b̃_x` (inverting Eq. (13)); `None` if even `R = 0` overshoots.
 pub fn equal_power_r(p: f64, bx_tilde: u32) -> Option<f64> {
     let r = p / bx_tilde as f64 - 0.5;
     (r >= 0.0).then_some(r)
+}
+
+/// [`equal_power_r`] restricted to *usable* operating points: `None`
+/// when the inverted `R` falls below [`MIN_R`]. Every sweep over a
+/// budget curve (Algorithm 1, Table 15, the menu compiler) goes
+/// through this so the cutoff cannot drift between call sites.
+pub fn equal_power_r_usable(p: f64, bx_tilde: u32) -> Option<f64> {
+    equal_power_r(p, bx_tilde).filter(|&r| r >= MIN_R)
 }
 
 impl EqualPowerCurve {
@@ -87,6 +105,24 @@ mod tests {
         assert!((equal_power_r(10.0, 6).unwrap() - 1.1667).abs() < 1e-3);
         assert!((equal_power_r(10.0, 8).unwrap() - 0.75).abs() < 1e-9);
         assert!((equal_power_r(10.0, 2).unwrap() - 4.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn usable_r_cutoff_consistent() {
+        // One documented cutoff: usable iff the inverted R >= MIN_R.
+        // On the 2-bit curve (P = 10), b̃_x = 16 gives R = 0.125 ≥ MIN_R
+        // (usable) while b̃_x = 20 gives R = 0.0 (on the curve but not
+        // usable) and b̃_x = 32 overshoots even at R = 0.
+        assert_eq!(equal_power_r_usable(10.0, 16), Some(0.125));
+        assert_eq!(equal_power_r(10.0, 20), Some(0.0));
+        assert_eq!(equal_power_r_usable(10.0, 20), None);
+        assert_eq!(equal_power_r(10.0, 32), None);
+        assert_eq!(equal_power_r_usable(10.0, 32), None);
+        // The boundary itself is usable (the seed's `r <= 0.05`
+        // excluded it); tolerance because 0.55 is not a dyadic f64.
+        let p = (MIN_R + 0.5) * 8.0;
+        let r = equal_power_r_usable(p, 8).expect("boundary point must be usable");
+        assert!((r - MIN_R).abs() < 1e-12, "{r}");
     }
 
     #[test]

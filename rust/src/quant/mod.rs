@@ -66,4 +66,10 @@ impl ActQuantMethod {
             ActQuantMethod::Recon => "recon",
         }
     }
+
+    /// Inverse of [`Self::name`], for artifacts that persist the
+    /// method (e.g. `menu.json`).
+    pub fn from_name(name: &str) -> Option<ActQuantMethod> {
+        Self::ALL.into_iter().find(|m| m.name() == name)
+    }
 }

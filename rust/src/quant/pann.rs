@@ -42,7 +42,15 @@ impl PannQuant {
         assert!(!w.is_empty());
         let d = w.len() as f64;
         let l1: f64 = w.iter().map(|&x| x.abs() as f64).sum();
-        let gamma = if l1 > 0.0 { (l1 / (self.r * d)) as f32 } else { 1.0 };
+        // The f64→f32 cast underflows to 0.0 for very small-magnitude
+        // tensors (‖w‖₁/(R·d) below ~1e-45), which would make x/γ
+        // infinite and saturate every code to i64::MAX. Floor at the
+        // smallest normal f32, as the RUQ quantizers already do.
+        let gamma = if l1 > 0.0 {
+            ((l1 / (self.r * d)) as f32).max(f32::MIN_POSITIVE)
+        } else {
+            1.0
+        };
         let codes: Vec<i64> = w.iter().map(|&x| (x / gamma).round() as i64).collect();
         let adds: u64 = codes.iter().map(|c| c.unsigned_abs()).sum();
         let max_code = codes.iter().map(|c| c.abs()).max().unwrap_or(0);
@@ -167,6 +175,23 @@ mod tests {
         let pw = PannQuant::new(1.0).quantize(&w);
         assert!(pw.max_code > 100, "max code {}", pw.max_code);
         assert!(pw.code_bits() > 6);
+    }
+
+    #[test]
+    fn tiny_weights_do_not_underflow_gamma() {
+        // Regression: subnormal-magnitude weights at a large R used to
+        // underflow the f64→f32 cast of γ to 0.0, sending every code
+        // to ±i64::MAX through x/0. γ must stay a positive normal and
+        // the codes finite and budget-bounded.
+        let w = vec![1.0e-45f32; 32]; // rounds to the smallest subnormal
+        assert!(w[0] > 0.0, "test weights must be nonzero subnormals");
+        let pw = PannQuant::new(64.0).quantize(&w);
+        assert!(pw.gamma >= f32::MIN_POSITIVE, "gamma {} underflowed", pw.gamma);
+        assert!(pw.max_code < i64::MAX, "codes saturated: {}", pw.max_code);
+        assert!(pw.adds_per_element <= 64.0 + 0.5);
+        for (i, _) in w.iter().enumerate() {
+            assert!(pw.dequant(i).is_finite());
+        }
     }
 
     #[test]

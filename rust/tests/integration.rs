@@ -370,6 +370,83 @@ fn qos_per_request_caps_and_deadline_on_one_server() {
 }
 
 #[test]
+fn menu_compile_serialize_serve_roundtrip() {
+    // The menu-compiler acceptance: compile the frontier, persist it
+    // as menu.json, reload it through `Menu::from_artifact`, and serve
+    // it — a client sweeping `max_gflips` across the frontier must
+    // land on each point in turn, with monotone non-decreasing
+    // recorded validation accuracy (the paper's deployment-time
+    // traversal over a *compiled* menu).
+    use pann::coordinator::{InferRequest, Menu, ServerBuilder};
+    use pann::pann::{compile_menu, MenuArtifact};
+    let mut model = Model::reference_cnn(31);
+    let ds = Dataset::from_synth(pann::data::synth::digits(96, 32));
+    let stats = batch_tensor(&ds, 0, 48);
+    model.record_act_stats(&stats).unwrap();
+    let val = ds.take(64);
+    let art =
+        compile_menu(&model, &[2, 4, 8], ActQuantMethod::BnStats, None, &val, 2..=8).unwrap();
+    assert!(!art.points.is_empty());
+    assert!(art.swept >= art.points.len());
+
+    // serialize -> load: identical artifact
+    let dir = std::env::temp_dir().join("pann_test_menu_roundtrip");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("menu.json");
+    art.save(&path).unwrap();
+    let loaded = MenuArtifact::load(&path).unwrap();
+    assert_eq!(loaded, art);
+
+    // a different model is rejected by the fingerprint check when the
+    // deferred menu builds its engines at serve time
+    let other = Model::reference_cnn(99);
+    let bad = Menu::from_artifact(&path, &other).unwrap();
+    assert!(
+        ServerBuilder::new().serve(bad).is_err(),
+        "serving a menu against the wrong model must fail"
+    );
+
+    // serve the reloaded menu and sweep the frontier via per-request caps
+    let menu = Menu::from_artifact(&path, &model).unwrap();
+    let srv = ServerBuilder::new().workers(2).max_batch(8).serve(menu).unwrap();
+    let client = srv.client();
+    let mut last_acc = -1.0f64;
+    for p in &loaded.points {
+        let r = client
+            .submit(
+                InferRequest::new(ds.sample(0).to_vec())
+                    .max_gflips(p.gflips_per_sample * (1.0 + 1e-9)),
+            )
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(
+            r.point, p.name,
+            "cap {} must land on frontier point {}",
+            p.gflips_per_sample, p.name
+        );
+        assert!(
+            p.val_acc > last_acc,
+            "frontier accuracy must increase with budget: {} then {}",
+            last_acc,
+            p.val_acc
+        );
+        last_acc = p.val_acc;
+    }
+    // a cap below the cheapest point falls back to the cheapest
+    let r = client
+        .submit(
+            InferRequest::new(ds.sample(1).to_vec())
+                .max_gflips(loaded.points[0].gflips_per_sample * 0.5),
+        )
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert_eq!(r.point, loaded.points[0].name);
+    srv.shutdown();
+}
+
+#[test]
 fn batched_engine_matches_per_sample_path() {
     // Acceptance criterion of the plan/exec refactor: the batched,
     // blocked, multi-threaded engine produces bit-identical logits and

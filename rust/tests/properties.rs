@@ -198,3 +198,74 @@ fn prop_tensor_io_roundtrip_random() {
         assert_eq!(parse_tensor(&raw).unwrap(), t);
     }
 }
+
+#[test]
+fn prop_pareto_menu_monotone_and_select_undominated() {
+    // The menu-compiler invariants, over random candidate clouds:
+    // (1) the pruned frontier is strictly monotone in both cost and
+    //     accuracy;
+    // (2) every dropped candidate is dominated by a kept one;
+    // (3) `PowerPolicy::select` over the pruned menu always returns
+    //     the most accurate affordable point — never a dominated one.
+    use pann::coordinator::{Costed, PowerPolicy};
+    use pann::pann::pareto_prune;
+
+    struct Pt {
+        name: String,
+        cost: f64,
+    }
+    impl Costed for Pt {
+        fn point_name(&self) -> &str {
+            &self.name
+        }
+        fn cost_gflips(&self) -> f64 {
+            self.cost
+        }
+    }
+
+    let mut rng = Rng::new(107);
+    for _ in 0..CASES {
+        let n = 1 + rng.below(40);
+        let cands: Vec<(f64, f64)> = (0..n).map(|_| (rng.f64() * 10.0, rng.f64())).collect();
+        let kept = pareto_prune(cands.clone(), |c| c.0, |c| c.1);
+        assert!(!kept.is_empty(), "pruning must keep at least the cheapest point");
+        for w in kept.windows(2) {
+            assert!(
+                w[1].0 > w[0].0 && w[1].1 > w[0].1,
+                "frontier not strictly monotone: {:?} then {:?}",
+                w[0],
+                w[1]
+            );
+        }
+        for c in &cands {
+            if kept.contains(c) {
+                continue;
+            }
+            assert!(
+                kept.iter().any(|k| k.0 <= c.0 && k.1 >= c.1),
+                "dropped candidate {c:?} is not dominated by any kept point"
+            );
+        }
+        let policy = PowerPolicy::new(
+            kept.iter()
+                .enumerate()
+                .map(|(i, k)| Pt { name: format!("p{i}"), cost: k.0 })
+                .collect(),
+        )
+        .unwrap();
+        for _ in 0..20 {
+            let budget = rng.f64() * 12.0;
+            let idx = policy.select(budget).unwrap();
+            // expected: the priciest affordable point (menu accuracy is
+            // monotone in cost), falling back to the cheapest
+            let want = kept.iter().rposition(|k| k.0 <= budget).unwrap_or(0);
+            assert_eq!(idx, want, "budget {budget}");
+            // never dominated: no affordable alternative beats it
+            for (j, k) in kept.iter().enumerate() {
+                if k.0 <= budget && j != idx {
+                    assert!(k.1 < kept[idx].1, "select picked a dominated point");
+                }
+            }
+        }
+    }
+}
