@@ -1,0 +1,163 @@
+//! Closed-loop governor benchmark: compile a real menu, serve it
+//! under an energy envelope, drive a load ramp (idle → flood → idle)
+//! and record how the governor walks the frontier — per-point
+//! residency, switch count, and the envelope tracking error.
+//!
+//! Emits `BENCH_governor.json` (schema `bench-governor/v1`: envelope
+//! + window, one record per ramp phase with the achieved request rate
+//! and the point serving at phase end, plus the governor's residency /
+//! switches / mean tracking error and the per-point *measured*
+//! Gflips/sample ledger) — the closed-loop counterpart of
+//! `BENCH_coordinator.json`.
+
+use pann::coordinator::{EnergyEnvelope, Menu, ServerBuilder};
+use pann::data::{synth, Dataset};
+use pann::nn::eval::batch_tensor;
+use pann::nn::Model;
+use pann::pann::compile_menu;
+use pann::quant::ActQuantMethod;
+use pann::util::bench::write_json;
+use pann::util::Json;
+use std::time::{Duration, Instant};
+
+struct Phase {
+    name: &'static str,
+    requests: usize,
+    /// Inter-arrival gap (None = flood as fast as responses return).
+    gap: Option<Duration>,
+    /// Idle pause before the phase starts.
+    lead_in: Duration,
+}
+
+fn main() {
+    let mut model = Model::reference_cnn(3);
+    let ds = Dataset::from_synth(synth::digits(256, 4));
+    let stats = batch_tensor(&ds, 0, 64);
+    model.record_act_stats(&stats).expect("record stats");
+    let menu = compile_menu(&model, &[2, 4, 8], ActQuantMethod::BnStats, None, &ds.take(64), 2..=8)
+        .expect("compile menu");
+    let rich_cost = menu.points.last().expect("non-empty menu").gflips_per_sample;
+    println!("menu: {} frontier points, richest {rich_cost:.6} GF/sample", menu.points.len());
+
+    // Envelope: 25 requests/sec worth of the *richest* point. The
+    // low-rate phases fit comfortably at full accuracy; the flood
+    // phase exceeds it by orders of magnitude and must force the
+    // governor down the frontier.
+    let envelope_rate = rich_cost * 25.0;
+    let window = Duration::from_millis(20);
+    let hysteresis = 1u32;
+    let srv = ServerBuilder::new()
+        .workers(2)
+        .max_batch(8)
+        .queue_depth(1024)
+        .envelope(EnergyEnvelope::gflips_per_sec(envelope_rate))
+        .governor_window(window)
+        .governor_hysteresis(hysteresis)
+        .serve(Menu::shared(
+            menu.shared_points(&model, None, 8).expect("recompile menu"),
+        ))
+        .expect("serve menu");
+    let client = srv.client();
+
+    let phases = [
+        Phase {
+            name: "light",
+            requests: 12,
+            gap: Some(Duration::from_millis(25)),
+            lead_in: Duration::ZERO,
+        },
+        Phase {
+            name: "flood",
+            requests: 600,
+            gap: None,
+            lead_in: Duration::ZERO,
+        },
+        Phase {
+            name: "recovery",
+            requests: 4,
+            gap: Some(Duration::from_millis(150)),
+            lead_in: Duration::from_millis(300),
+        },
+    ];
+
+    let mut phase_records: Vec<Json> = Vec::new();
+    for ph in &phases {
+        std::thread::sleep(ph.lead_in);
+        let t0 = Instant::now();
+        let mut last_point = String::new();
+        for i in 0..ph.requests {
+            let r = client
+                .infer(ds.sample(i % ds.len()).to_vec())
+                .expect("governed request");
+            last_point = r.point;
+            if let Some(gap) = ph.gap {
+                std::thread::sleep(gap);
+            }
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        let rps = ph.requests as f64 / secs.max(1e-9);
+        println!(
+            "phase {:<9} {:>4} reqs in {secs:.2}s = {rps:>7.0} req/s, ends on {last_point}",
+            ph.name, ph.requests
+        );
+        phase_records.push(Json::obj(vec![
+            ("name", Json::from(ph.name)),
+            ("requests", Json::from(ph.requests)),
+            ("secs", Json::Num(secs)),
+            ("rps", Json::Num(rps)),
+            ("end_point", Json::from(last_point.as_str())),
+        ]));
+    }
+
+    let gov = client.governor().expect("governor active");
+    print!("{}", gov.report());
+    let metrics = client.metrics();
+    println!("{} point switches (metrics view)", metrics.point_switches);
+
+    let residency: Vec<Json> = gov
+        .residency
+        .iter()
+        .map(|(name, windows)| {
+            Json::obj(vec![
+                ("point", Json::from(name.as_str())),
+                ("windows", Json::from(*windows as usize)),
+            ])
+        })
+        .collect();
+    let measured: Vec<Json> = gov
+        .measured_gflips_per_sample
+        .iter()
+        .map(|(name, gf)| {
+            Json::obj(vec![
+                ("point", Json::from(name.as_str())),
+                (
+                    "measured_gflips_per_sample",
+                    gf.map_or(Json::Null, Json::Num),
+                ),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("schema", Json::from("bench-governor/v1")),
+        ("envelope_gflips_per_sec", Json::Num(envelope_rate)),
+        ("window_ms", Json::Num(window.as_secs_f64() * 1e3)),
+        ("hysteresis", Json::from(hysteresis as usize)),
+        ("menu_points", Json::from(gov.residency.len())),
+        ("phases", Json::Arr(phase_records)),
+        ("residency", Json::Arr(residency)),
+        ("switches", Json::from(gov.switches as usize)),
+        ("windows", Json::from(gov.windows as usize)),
+        (
+            "mean_tracking_error",
+            gov.mean_tracking_error.map_or(Json::Null, Json::Num),
+        ),
+        ("measured", Json::Arr(measured)),
+        (
+            "measured_minus_modeled_gflips",
+            Json::Num(metrics.measured_minus_modeled_gflips),
+        ),
+    ]);
+    write_json("BENCH_governor.json", &doc).expect("write BENCH_governor.json");
+    println!("wrote BENCH_governor.json");
+    srv.shutdown();
+}

@@ -1,0 +1,908 @@
+//! Closed-loop energy governor: feed *measured* flip energy back into
+//! the operating point the server runs.
+//!
+//! The paper's deployment story (Sec. 6) traverses the power–accuracy
+//! trade-off open-loop: somebody sets a budget, [`PowerPolicy`] picks
+//! the matching frontier point. That leaves exactly the gap the
+//! minimum-energy-network line of work keeps pointing at — modeled
+//! energy and observed energy drift apart, and nothing pushes the
+//! served point back when sustained load blows the power envelope.
+//!
+//! The [`Governor`] closes that loop:
+//!
+//! 1. Workers report every executed batch — sample count plus the
+//!    energy it *actually* metered ([`crate::nn::PowerMeter`] totals,
+//!    surfaced by the metered engine calls in [`super::server`]) — into
+//!    a sliding window ledger.
+//! 2. At each window boundary the windowed energy is compared against
+//!    the [`EnergyEnvelope`] target (Gflips per second — the crate's
+//!    platform-free joules proxy, paper footnote 2).
+//! 3. Decisions use a rolling horizon of the last `hysteresis`
+//!    windows, rate-limited to **one step per horizon**: when the
+//!    horizon's energy exceeds `hysteresis × target` the served
+//!    budget steps one frontier point down (cheaper, less accurate);
+//!    when it fits *and the same load would also fit one point up*,
+//!    it steps back up. An idle horizon always fits, so quiet periods
+//!    climb back to the most accurate point; judging the horizon
+//!    *sum* (a rate) rather than per-window streaks means sparse or
+//!    bursty overload still degrades instead of slipping between
+//!    windows. A single-point menu can never oscillate: there is
+//!    nowhere to step.
+//!
+//! The governor writes the same atomic budget cell
+//! [`super::server::Client::set_budget`] writes, so the rest of the
+//! stack (classification, per-request caps, pinning) is untouched.
+//! With an envelope configured the governor co-owns that cell: at
+//! every window close it re-derives its frontier level from whatever
+//! the cell currently selects (so a manual `set_budget` is honored,
+//! attributed correctly, and can never be mistaken for a higher
+//! level), and whenever it *steps* it rewrites the cell with the new
+//! point's exact cost. Without an envelope (`ServerBuilder` default)
+//! the open-loop path is bit-identical to before.
+//!
+//! Determinism: the governor never reads the wall clock. Every
+//! decision happens inside [`Governor::observe`], which takes the
+//! current [`Instant`] as an argument — workers pass `Instant::now()`,
+//! unit tests pass synthetic instants and drive the window grid by
+//! hand. Workers additionally bracket execution with
+//! [`Governor::batch_started`] / [`Governor::batch_finished`], so a
+//! window that elapses *during* a long-running batch is not mistaken
+//! for idle headroom. Size [`GovernorConfig::window`] at or above the
+//! typical per-batch execution time: with much smaller windows a
+//! completing batch's energy lands in a single window and reads as a
+//! burst, which keeps the governor correct but conservative (it will
+//! sit lower on the frontier than the true rate requires).
+//!
+//! [`PowerPolicy`]: super::policy::PowerPolicy
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Sustained-energy target the governor defends.
+///
+/// Expressed as a *rate* (Giga bit flips per second) rather than per
+/// sample: per-sample budgets are what the open-loop [`PowerPolicy`]
+/// already handles, while an envelope caps the total energy drawn per
+/// unit time regardless of request rate — the joules-per-second proxy
+/// of a thermal or battery limit, in the paper's platform-independent
+/// flip units.
+///
+/// ```
+/// use pann::coordinator::EnergyEnvelope;
+/// let e = EnergyEnvelope::gflips_per_sec(50.0);
+/// assert_eq!(e.rate(), 50.0);
+/// ```
+///
+/// [`PowerPolicy`]: super::policy::PowerPolicy
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EnergyEnvelope {
+    gflips_per_sec: f64,
+}
+
+impl EnergyEnvelope {
+    /// Envelope at `rate` Giga bit flips per second. Validated when
+    /// the governor is built: the rate must be finite and positive.
+    pub fn gflips_per_sec(rate: f64) -> EnergyEnvelope {
+        EnergyEnvelope { gflips_per_sec: rate }
+    }
+
+    /// The target rate in Giga bit flips per second.
+    pub fn rate(&self) -> f64 {
+        self.gflips_per_sec
+    }
+}
+
+/// Governor tuning knobs (see [`super::server::ServerBuilder::envelope`]).
+#[derive(Clone, Copy, Debug)]
+pub struct GovernorConfig {
+    pub envelope: EnergyEnvelope,
+    /// Ledger window length; decisions happen at window boundaries.
+    pub window: Duration,
+    /// Decision-horizon length in windows (≥ 1): each step judges the
+    /// energy of the last `hysteresis` windows against
+    /// `hysteresis × target`, and at most one step happens per
+    /// horizon.
+    pub hysteresis: u32,
+    /// Closed windows kept for the per-point measured-cost ledger.
+    pub ledger_windows: usize,
+}
+
+impl GovernorConfig {
+    pub const DEFAULT_WINDOW: Duration = Duration::from_millis(100);
+    pub const DEFAULT_HYSTERESIS: u32 = 2;
+    pub const DEFAULT_LEDGER_WINDOWS: usize = 64;
+
+    /// Defaults: 100 ms windows, hysteresis 2, 64-window ledger.
+    pub fn new(envelope: EnergyEnvelope) -> GovernorConfig {
+        GovernorConfig {
+            envelope,
+            window: Self::DEFAULT_WINDOW,
+            hysteresis: Self::DEFAULT_HYSTERESIS,
+            ledger_windows: Self::DEFAULT_LEDGER_WINDOWS,
+        }
+    }
+}
+
+/// Per-point metered totals of one closed window.
+struct WindowRecord {
+    /// `(metered samples, metered Gflips)` per frontier point.
+    per_point: Vec<(u64, f64)>,
+}
+
+struct GovState {
+    /// Index into `costs` currently served (ascending cost order).
+    level: usize,
+    /// Start of the currently accumulating window.
+    window_start: Instant,
+    /// Energy observed in the current window (metered when available,
+    /// modeled otherwise), Giga bit flips.
+    win_gflips: f64,
+    win_samples: u64,
+    /// Metered-only per-point accumulation of the current window.
+    win_per_point: Vec<(u64, f64)>,
+    /// Rolling `(samples, gflips)` of the last `hysteresis` closed
+    /// windows — the decision horizon.
+    recent: VecDeque<(u64, f64)>,
+    /// Start instants of the batches currently executing (bracketed
+    /// by [`Governor::batch_started`] / [`Governor::batch_finished`];
+    /// at most one entry per worker). A window that ends after the
+    /// *earliest* of these is covered by execution, not idle — the
+    /// running batch's energy has not landed yet and the window must
+    /// not be read as recovery headroom. Tracking each batch's own
+    /// start (rather than one "busy since" anchor) matters under
+    /// continuous load: back-to-back short batches keep the anchor
+    /// recent, so long-past windows still read as observable and the
+    /// governor can climb again without requiring a fully idle
+    /// moment.
+    in_flight_starts: Vec<Instant>,
+    /// Closed windows since the last step (saturating): a new step
+    /// needs a full horizon of fresh evidence.
+    windows_since_step: u32,
+    /// Frontier steps taken (up or down).
+    switches: u64,
+    /// Closed windows total.
+    windows: u64,
+    /// Closed windows spent at each level.
+    residency: Vec<u64>,
+    /// Metered per-point history, most recent window last.
+    ledger: VecDeque<WindowRecord>,
+    /// Σ |window energy − target| / target over windows that served
+    /// at least one sample (envelope tracking error numerator).
+    err_sum: f64,
+    loaded_windows: u64,
+}
+
+impl GovState {
+    fn empty(now: Instant) -> GovState {
+        GovState {
+            level: 0,
+            window_start: now,
+            win_gflips: 0.0,
+            win_samples: 0,
+            win_per_point: Vec::new(),
+            recent: VecDeque::new(),
+            in_flight_starts: Vec::new(),
+            // saturated: the very first decision only waits for the
+            // horizon to fill, not for an imaginary previous step
+            windows_since_step: u32::MAX,
+            switches: 0,
+            windows: 0,
+            residency: Vec::new(),
+            ledger: VecDeque::new(),
+            err_sum: 0.0,
+            loaded_windows: 0,
+        }
+    }
+}
+
+/// The closed-loop governor. One per server (when an envelope is
+/// configured); shared by all workers through an `Arc`.
+pub struct Governor {
+    cfg: GovernorConfig,
+    /// Frontier point names, cheapest first (the [`PowerPolicy`]
+    /// ordering, so worker point indices agree).
+    ///
+    /// [`PowerPolicy`]: super::policy::PowerPolicy
+    names: Vec<String>,
+    /// Energy cost per sample of each point, ascending.
+    costs: Vec<f64>,
+    /// Energy target per window, Giga bit flips.
+    target_per_window: f64,
+    /// The served-budget cell shared with policy classification.
+    budget_bits: Arc<AtomicU64>,
+    state: Mutex<GovState>,
+}
+
+/// Point-in-time view of the governor for reports and benches.
+#[derive(Clone, Debug)]
+pub struct GovernorSnapshot {
+    /// Current frontier level (index into `residency`, cheapest = 0).
+    pub level: usize,
+    /// Name of the currently served point.
+    pub point: String,
+    /// Frontier steps taken so far (up + down).
+    pub switches: u64,
+    /// Closed decision windows so far.
+    pub windows: u64,
+    pub window: Duration,
+    /// Envelope target per window, Giga bit flips.
+    pub target_gflips_per_window: f64,
+    /// Closed windows spent serving each point, cheapest first.
+    pub residency: Vec<(String, u64)>,
+    /// Measured Gflips/sample per point over the ledger (metered
+    /// observations only; `None` where nothing was metered — e.g. a
+    /// PJRT backend without a flip meter).
+    pub measured_gflips_per_sample: Vec<(String, Option<f64>)>,
+    /// Mean relative envelope tracking error over loaded windows
+    /// (`|E_w − target| / target`); `None` before any loaded window.
+    pub mean_tracking_error: Option<f64>,
+}
+
+impl GovernorSnapshot {
+    /// Human-readable multi-line report (CLI / bench output).
+    pub fn report(&self) -> String {
+        let mut s = format!(
+            "governor: point {} (level {}), {} switches over {} windows of {:?} \
+             (target {:.4} GF/window)\n",
+            self.point, self.level, self.switches, self.windows, self.window,
+            self.target_gflips_per_window,
+        );
+        if let Some(e) = self.mean_tracking_error {
+            s.push_str(&format!("  envelope tracking error (loaded windows): {:.1}%\n", e * 100.0));
+        }
+        for (i, (name, windows)) in self.residency.iter().enumerate() {
+            let measured = match self.measured_gflips_per_sample[i].1 {
+                Some(gf) => format!("{gf:.6} GF/sample measured"),
+                None => "no metered samples".to_string(),
+            };
+            s.push_str(&format!("  point {name}: residency {windows} windows, {measured}\n"));
+        }
+        s
+    }
+}
+
+impl Governor {
+    /// Build a governor over `menu` (`(name, Gflips/sample)` pairs,
+    /// **ascending cost** — the [`super::policy::PowerPolicy::menu`]
+    /// order, so the point indices workers report match).
+    ///
+    /// The initial level is whatever point the budget cell currently
+    /// selects (the builder's `budget_gflips`); the cell is then
+    /// normalized to that point's exact cost so the governor and the
+    /// policy agree from the first request.
+    pub fn new(
+        cfg: GovernorConfig,
+        menu: Vec<(String, f64)>,
+        budget_bits: Arc<AtomicU64>,
+        now: Instant,
+    ) -> anyhow::Result<Governor> {
+        anyhow::ensure!(!menu.is_empty(), "governor needs a non-empty menu");
+        let rate = cfg.envelope.rate();
+        anyhow::ensure!(
+            rate.is_finite() && rate > 0.0,
+            "energy envelope must be a finite positive Gflips/sec rate, got {rate}"
+        );
+        anyhow::ensure!(!cfg.window.is_zero(), "governor window must be non-zero");
+        let cfg = GovernorConfig {
+            hysteresis: cfg.hysteresis.max(1),
+            ledger_windows: cfg.ledger_windows.max(1),
+            ..cfg
+        };
+        let (names, costs): (Vec<String>, Vec<f64>) = menu.into_iter().unzip();
+        // strictly ascending: the budget cell is the only channel
+        // between governor and policy, and two points with the same
+        // cost cannot be told apart through it — a step between them
+        // would immediately resync back (livelock), so duplicate-cost
+        // menus are rejected up front
+        anyhow::ensure!(
+            costs.windows(2).all(|w| w[0] < w[1]),
+            "governor menu costs must be strictly ascending (duplicate-cost points are \
+             indistinguishable through the budget cell)"
+        );
+        let target_per_window = rate * cfg.window.as_secs_f64();
+        let governor = Governor {
+            cfg,
+            names,
+            costs,
+            target_per_window,
+            budget_bits,
+            state: Mutex::new(GovState::empty(now)),
+        };
+        // start from the point the current budget already selects and
+        // normalize the cell to that point's exact cost
+        let budget = f64::from_bits(governor.budget_bits.load(Ordering::Relaxed));
+        let level = governor.level_of(budget);
+        governor
+            .budget_bits
+            .store(governor.costs[level].to_bits(), Ordering::Relaxed);
+        let n = governor.costs.len();
+        {
+            let mut s = governor.state.lock().expect("governor poisoned");
+            s.level = level;
+            s.win_per_point = vec![(0, 0.0); n];
+            s.residency = vec![0; n];
+        }
+        Ok(governor)
+    }
+
+    /// The frontier level `budget` selects — literally the
+    /// [`super::policy::PowerPolicy::select`] rule (one shared
+    /// implementation, so classification and governor attribution
+    /// cannot drift apart).
+    fn level_of(&self, budget: f64) -> usize {
+        super::policy::best_fitting_index(self.costs.iter().copied(), budget)
+    }
+
+    /// Number of frontier points governed.
+    pub fn n_points(&self) -> usize {
+        self.costs.len()
+    }
+
+    /// Report one executed chunk: `samples` samples served on frontier
+    /// point `point` for `gflips` energy. `metered` says whether the
+    /// energy came from an actual flip meter (feeds the per-point
+    /// calibration ledger) or from the modeled per-sample cost (feeds
+    /// the envelope only).
+    ///
+    /// All window-boundary decisions happen here, against the caller's
+    /// `now` — no wall clock is read, which is what makes the governor
+    /// unit-testable with synthetic instants. Elapsed windows since
+    /// the last observation are closed first (idle windows count as
+    /// under-envelope, so recovery happens on the first batch after a
+    /// quiet period), then the observation lands in the now-current
+    /// window.
+    pub fn observe(&self, now: Instant, point: usize, samples: u64, gflips: f64, metered: bool) {
+        let mut s = self.state.lock().expect("governor poisoned");
+        self.close_elapsed_windows(&mut s, now);
+        s.win_gflips += gflips;
+        s.win_samples += samples;
+        if metered {
+            if let Some(slot) = s.win_per_point.get_mut(point) {
+                slot.0 += samples;
+                slot.1 += gflips;
+            }
+        }
+    }
+
+    /// A worker is about to execute a batch (at `now`). Paired with
+    /// [`Governor::batch_finished`]`(now)`, this lets the governor
+    /// tell an idle gap (worker parked on the queue) from execution
+    /// time (a batch running longer than a window): windows covered
+    /// by a running batch have unlanded energy and must not be read
+    /// as recovery headroom, or a slow engine would make the governor
+    /// climb mid-batch and step back down on completion — a thrash
+    /// loop.
+    pub fn batch_started(&self, now: Instant) {
+        let mut s = self.state.lock().expect("governor poisoned");
+        s.in_flight_starts.push(now);
+    }
+
+    /// The batch bracketed by [`Governor::batch_started`]`(started)`
+    /// completed (its chunks already reported through
+    /// [`Governor::observe`]). Pass the same instant given to
+    /// `batch_started`, so the busy anchor tracks the earliest batch
+    /// that is *still* running.
+    pub fn batch_finished(&self, started: Instant) {
+        let mut s = self.state.lock().expect("governor poisoned");
+        if let Some(i) = s.in_flight_starts.iter().position(|&b| b == started) {
+            s.in_flight_starts.swap_remove(i);
+        }
+    }
+
+    /// Current view (also closes nothing: decisions stay tied to
+    /// observations, so a snapshot never mutates the schedule).
+    pub fn snapshot(&self) -> GovernorSnapshot {
+        let s = self.state.lock().expect("governor poisoned");
+        let measured = self
+            .names
+            .iter()
+            .enumerate()
+            .map(|(i, name)| {
+                let (mut n, mut gf) = s.win_per_point[i];
+                for w in &s.ledger {
+                    n += w.per_point[i].0;
+                    gf += w.per_point[i].1;
+                }
+                (name.clone(), if n > 0 { Some(gf / n as f64) } else { None })
+            })
+            .collect();
+        GovernorSnapshot {
+            level: s.level,
+            point: self.names[s.level].clone(),
+            switches: s.switches,
+            windows: s.windows,
+            window: self.cfg.window,
+            target_gflips_per_window: self.target_per_window,
+            residency: self
+                .names
+                .iter()
+                .cloned()
+                .zip(s.residency.iter().copied())
+                .collect(),
+            measured_gflips_per_sample: measured,
+            mean_tracking_error: if s.loaded_windows > 0 {
+                Some(s.err_sum / s.loaded_windows as f64)
+            } else {
+                None
+            },
+        }
+    }
+
+    /// Close every window boundary `now` has passed, deciding at each.
+    fn close_elapsed_windows(&self, s: &mut GovState, now: Instant) {
+        let window = self.cfg.window;
+        // After enough consecutive identical (empty) windows the state
+        // is a fixed point — level at the top, counters saturated — so
+        // a long idle gap does not need one iteration per window: jump
+        // the grid so that at most `cap` windows remain to close. The
+        // new start is recomputed from `now` (sub-window remainder
+        // preserved) rather than advanced by a window count, so the
+        // bound holds for arbitrarily long gaps.
+        let cap = (self.cfg.hysteresis as u128)
+            .saturating_mul(self.costs.len() as u128)
+            .saturating_add(self.cfg.ledger_windows as u128)
+            .saturating_mul(2)
+            .min(4096);
+        if let Some(elapsed) = now.checked_duration_since(s.window_start) {
+            let win_nanos = window.as_nanos().max(1);
+            let k = elapsed.as_nanos() / win_nanos;
+            if k > cap {
+                let rem = (elapsed.as_nanos() % win_nanos) as u64;
+                let keep = window * cap as u32 + Duration::from_nanos(rem);
+                if let Some(start) = now.checked_sub(keep) {
+                    // the skipped windows were all empty (energy only
+                    // lands through observe, which closes first) —
+                    // account the elapsed time to the level the budget
+                    // cell selected throughout the gap (resync first:
+                    // a manual set_budget during the idle gap changed
+                    // which point would have served), so
+                    // `windows`/residency keep describing wall time
+                    // even though only `cap` windows get decided
+                    s.level = self
+                        .level_of(f64::from_bits(self.budget_bits.load(Ordering::Relaxed)));
+                    let skipped = (k - cap) as u64;
+                    s.windows += skipped;
+                    s.residency[s.level] += skipped;
+                    s.window_start = start;
+                }
+            }
+        }
+        while now
+            .checked_duration_since(s.window_start)
+            .is_some_and(|e| e >= window)
+        {
+            let window_end = s.window_start + window;
+            self.close_one_window(s, window_end);
+            s.window_start = window_end;
+        }
+    }
+
+    fn close_one_window(&self, s: &mut GovState, window_end: Instant) {
+        // A client may have written the budget cell manually since the
+        // last decision ([`super::server::Client::set_budget`]): start
+        // from the level that cell *actually* selects, so residency is
+        // attributed to the point that served the window and a breach
+        // step can only ever move the budget down from there — never
+        // "step down" from a stale higher level onto a budget larger
+        // than the manual one.
+        s.level = self.level_of(f64::from_bits(self.budget_bits.load(Ordering::Relaxed)));
+        let target = self.target_per_window;
+        s.windows += 1;
+        s.residency[s.level] += 1;
+        // infinite observed energy (an unbounded-cost point served
+        // without a meter) still counts as a breach below, but would
+        // poison the mean tracking error — keep the error ledger
+        // finite-only
+        if s.win_samples > 0 && s.win_gflips.is_finite() {
+            s.err_sum += (s.win_gflips - target).abs() / target;
+            s.loaded_windows += 1;
+        }
+        // roll the metered per-point accumulation into the ledger
+        let fresh = vec![(0, 0.0); self.costs.len()];
+        let rec = WindowRecord { per_point: std::mem::replace(&mut s.win_per_point, fresh) };
+        s.ledger.push_back(rec);
+        while s.ledger.len() > self.cfg.ledger_windows {
+            s.ledger.pop_front();
+        }
+        let win_gflips = s.win_gflips;
+        let win_samples = s.win_samples;
+        s.win_gflips = 0.0;
+        s.win_samples = 0;
+        // The decision works on a rolling horizon of the last
+        // `hysteresis` windows, not on per-window streaks: a streak
+        // counter would either reset on every empty window (sparse
+        // overload never degrades) or treat gaps as recovery (bursty
+        // overload thrashes up and down). Summing over the horizon
+        // judges the *rate*, which is what the envelope is. Steps are
+        // rate-limited to one per full horizon so each step's effect
+        // is observed before the next decision.
+        let h = self.cfg.hysteresis as usize;
+        s.recent.push_back((win_samples, win_gflips));
+        while s.recent.len() > h {
+            s.recent.pop_front();
+        }
+        if s.recent.len() == h && s.windows_since_step >= self.cfg.hysteresis {
+            let (sum_samples, sum_gf) = s
+                .recent
+                .iter()
+                .fold((0u64, 0.0f64), |(a, b), &(x, y)| (a + x, b + y));
+            let horizon_target = target * h as f64;
+            if sum_gf > horizon_target {
+                // over the envelope: degrade one frontier point
+                if s.level > 0 {
+                    s.level -= 1;
+                    s.switches += 1;
+                    s.windows_since_step = 0;
+                    self.set_budget(s.level);
+                }
+            } else if s.level + 1 < self.costs.len() {
+                // fits here — climb only if the same horizon's load
+                // would also fit one point up. A truly idle horizon
+                // always fits (quiet periods recover full accuracy),
+                // but a window that a still-running batch overlaps is
+                // not fully observed — its energy has not landed yet
+                // (regardless of what other workers landed in it), so
+                // treat the horizon as unknown and hold rather than
+                // climb on incomplete evidence.
+                let busy = s
+                    .in_flight_starts
+                    .iter()
+                    .min()
+                    .is_some_and(|&b| b < window_end);
+                let projected = if busy {
+                    f64::INFINITY
+                } else if sum_samples > 0 {
+                    sum_samples as f64 * self.costs[s.level + 1]
+                } else {
+                    0.0
+                };
+                if projected <= horizon_target {
+                    s.level += 1;
+                    s.switches += 1;
+                    s.windows_since_step = 0;
+                    self.set_budget(s.level);
+                }
+            }
+        }
+        s.windows_since_step = s.windows_since_step.saturating_add(1);
+    }
+
+    fn set_budget(&self, level: usize) {
+        self.budget_bits
+            .store(self.costs[level].to_bits(), Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const WIN: Duration = Duration::from_secs(1);
+
+    fn gov(costs: &[f64], rate: f64, hysteresis: u32, t0: Instant) -> (Governor, Arc<AtomicU64>) {
+        let budget = Arc::new(AtomicU64::new(f64::INFINITY.to_bits()));
+        let menu = costs
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| (format!("p{i}"), c))
+            .collect();
+        let cfg = GovernorConfig {
+            envelope: EnergyEnvelope::gflips_per_sec(rate),
+            window: WIN,
+            hysteresis,
+            ledger_windows: 8,
+        };
+        let g = Governor::new(cfg, menu, budget.clone(), t0).unwrap();
+        (g, budget)
+    }
+
+    fn budget_of(b: &AtomicU64) -> f64 {
+        f64::from_bits(b.load(Ordering::Relaxed))
+    }
+
+    #[test]
+    fn starts_at_point_selected_by_current_budget() {
+        let t0 = Instant::now();
+        let budget = Arc::new(AtomicU64::new(3.0f64.to_bits()));
+        let menu = vec![("a".into(), 1.0), ("b".into(), 2.0), ("c".into(), 4.0)];
+        let cfg = GovernorConfig::new(EnergyEnvelope::gflips_per_sec(1.0));
+        let g = Governor::new(cfg, menu, budget.clone(), t0).unwrap();
+        let snap = g.snapshot();
+        assert_eq!(snap.level, 1);
+        assert_eq!(snap.point, "b");
+        // budget normalized to the selected point's exact cost
+        assert_eq!(budget_of(&budget), 2.0);
+    }
+
+    #[test]
+    fn rejects_bad_envelope_window_and_menu() {
+        let t0 = Instant::now();
+        let budget = Arc::new(AtomicU64::new(f64::INFINITY.to_bits()));
+        let menu = || vec![("a".to_string(), 1.0)];
+        for bad in [f64::NAN, 0.0, -1.0, f64::INFINITY] {
+            let cfg = GovernorConfig::new(EnergyEnvelope::gflips_per_sec(bad));
+            assert!(Governor::new(cfg, menu(), budget.clone(), t0).is_err(), "rate {bad}");
+        }
+        let mut cfg = GovernorConfig::new(EnergyEnvelope::gflips_per_sec(1.0));
+        cfg.window = Duration::ZERO;
+        assert!(Governor::new(cfg, menu(), budget.clone(), t0).is_err());
+        let cfg = GovernorConfig::new(EnergyEnvelope::gflips_per_sec(1.0));
+        assert!(Governor::new(cfg, Vec::new(), budget.clone(), t0).is_err());
+        // unsorted menus are a construction error, not a silent misrank
+        let unsorted = vec![("hi".to_string(), 2.0), ("lo".to_string(), 1.0)];
+        assert!(Governor::new(cfg, unsorted, budget.clone(), t0).is_err());
+        // duplicate costs are indistinguishable through the budget
+        // cell: stepping between them would livelock, so reject
+        let dup = vec![
+            ("a".to_string(), 1.0),
+            ("b".to_string(), 2.0),
+            ("b2".to_string(), 2.0),
+        ];
+        assert!(Governor::new(cfg, dup, budget, t0).is_err());
+    }
+
+    #[test]
+    fn sparse_overload_still_accumulates_breach_pressure() {
+        // One 10 GF batch every other window is a sustained 5 GF/sec
+        // against a 1 GF/sec envelope. A per-window streak counter
+        // would reset on each empty window and never degrade; the
+        // rolling horizon judges the rate and must step down.
+        let t0 = Instant::now();
+        let (g, budget) = gov(&[1.0, 4.0], 1.0, 2, t0);
+        assert_eq!(g.snapshot().level, 1);
+        g.observe(t0 + WIN / 2, 1, 1, 10.0, false); // w0 loaded breach
+        // closes w0 (horizon not full yet) and the empty w1 — the
+        // horizon [10, 0] sums to 10 > 2 -> step down
+        g.observe(t0 + WIN * 5 / 2, 1, 1, 10.0, false); // w2 loaded breach
+        // closes w2 (one horizon must pass before the next step)
+        g.observe(t0 + WIN * 7 / 2, 1, 0, 0.0, false);
+        let snap = g.snapshot();
+        assert_eq!(snap.level, 0, "sparse overload must still degrade");
+        assert_eq!(budget_of(&budget), 1.0);
+        assert_eq!(snap.switches, 1);
+    }
+
+    #[test]
+    fn breach_steps_down_exactly_one_point_per_hysteresis_window() {
+        // target 1 GF/window, hysteresis 2: two over-windows per step.
+        let t0 = Instant::now();
+        let (g, budget) = gov(&[1.0, 2.0, 4.0], 1.0, 2, t0);
+        assert_eq!(g.snapshot().level, 2);
+        // window 0 over target (observation lands inside window 0)
+        g.observe(t0 + WIN / 2, 2, 1, 4.0, false);
+        // closing window 0: the 2-window horizon is not full yet
+        g.observe(t0 + WIN * 3 / 2, 2, 1, 4.0, false);
+        assert_eq!(g.snapshot().level, 2);
+        // closing window 1: horizon [4, 4] = 8 > 2 -> exactly one step
+        g.observe(t0 + WIN * 5 / 2, 1, 1, 4.0, false);
+        let snap = g.snapshot();
+        assert_eq!(snap.level, 1);
+        assert_eq!(snap.switches, 1);
+        assert_eq!(budget_of(&budget), 2.0);
+        // one horizon later, still breaching -> one more step, to the
+        // floor (one step per hysteresis horizon, never a jump)
+        g.observe(t0 + WIN * 7 / 2, 1, 1, 4.0, false);
+        g.observe(t0 + WIN * 9 / 2, 0, 1, 4.0, false);
+        assert_eq!(g.snapshot().level, 0);
+        assert_eq!(budget_of(&budget), 1.0);
+        // sustained breach at the floor: stays, no oscillation
+        g.observe(t0 + WIN * 11 / 2, 0, 1, 4.0, false);
+        g.observe(t0 + WIN * 13 / 2, 0, 1, 4.0, false);
+        g.observe(t0 + WIN * 15 / 2, 0, 1, 4.0, false);
+        let snap = g.snapshot();
+        assert_eq!(snap.level, 0);
+        assert_eq!(snap.switches, 2);
+    }
+
+    #[test]
+    fn recovery_steps_up_when_next_point_fits() {
+        // generous target: 10 GF/window; light load at the cheap point
+        // projects to 1 * 2.0 = 2.0 at the next point up -> fits.
+        let t0 = Instant::now();
+        let budget = Arc::new(AtomicU64::new(0.5f64.to_bits())); // selects cheapest
+        let menu = vec![("a".into(), 1.0), ("b".into(), 2.0), ("c".into(), 4.0)];
+        let cfg = GovernorConfig {
+            envelope: EnergyEnvelope::gflips_per_sec(10.0),
+            window: WIN,
+            hysteresis: 2,
+            ledger_windows: 8,
+        };
+        let g = Governor::new(cfg, menu, budget.clone(), t0).unwrap();
+        assert_eq!(g.snapshot().level, 0);
+        g.observe(t0 + WIN / 2, 0, 1, 1.0, false);
+        g.observe(t0 + WIN * 3 / 2, 0, 1, 1.0, false); // closes w0 (horizon filling)
+        g.observe(t0 + WIN * 5 / 2, 0, 1, 1.0, false); // closes w1: horizon fits above -> up
+        let snap = g.snapshot();
+        assert_eq!(snap.level, 1);
+        assert_eq!(budget_of(&budget), 2.0);
+        // heavy load: projecting it to the next point up (4.0 each,
+        // 5 samples/window -> 40 GF per 20-GF horizon) would blow the
+        // envelope -> the governor holds rather than climb
+        g.observe(t0 + WIN * 7 / 2, 1, 5, 10.0, false);
+        g.observe(t0 + WIN * 9 / 2, 1, 5, 10.0, false);
+        g.observe(t0 + WIN * 11 / 2, 1, 5, 10.0, false);
+        g.observe(t0 + WIN * 13 / 2, 1, 5, 10.0, false);
+        assert_eq!(g.snapshot().level, 1);
+    }
+
+    #[test]
+    fn idle_windows_climb_back_to_the_most_accurate_point() {
+        let t0 = Instant::now();
+        let budget = Arc::new(AtomicU64::new(1.0f64.to_bits()));
+        let menu = vec![("a".into(), 1.0), ("b".into(), 2.0), ("c".into(), 4.0)];
+        let cfg = GovernorConfig {
+            envelope: EnergyEnvelope::gflips_per_sec(1.0),
+            window: WIN,
+            hysteresis: 2,
+            ledger_windows: 8,
+        };
+        let g = Governor::new(cfg, menu, budget.clone(), t0).unwrap();
+        assert_eq!(g.snapshot().level, 0);
+        // one observation long after start: the elapsed idle windows
+        // are closed first, stepping up every `hysteresis` windows
+        g.observe(t0 + WIN * 20, 0, 1, 1.0, false);
+        let snap = g.snapshot();
+        assert_eq!(snap.level, 2, "idle catch-up must climb to the top");
+        assert_eq!(snap.switches, 2);
+        assert_eq!(budget_of(&budget), 4.0);
+    }
+
+    #[test]
+    fn single_point_menu_never_oscillates() {
+        let t0 = Instant::now();
+        let (g, budget) = gov(&[1.0], 1.0, 1, t0);
+        for k in 1..=10u32 {
+            // alternate breach and idle windows
+            let gf = if k % 2 == 0 { 5.0 } else { 0.0 };
+            g.observe(t0 + WIN * k - WIN / 2, 0, (gf > 0.0) as u64, gf, false);
+        }
+        let snap = g.snapshot();
+        assert_eq!(snap.level, 0);
+        assert_eq!(snap.switches, 0);
+        assert_eq!(budget_of(&budget), 1.0);
+        assert!(snap.windows >= 9);
+    }
+
+    #[test]
+    fn ledger_reports_measured_cost_per_point_metered_only() {
+        let t0 = Instant::now();
+        let (g, _b) = gov(&[1.0, 2.0], 100.0, 2, t0);
+        // metered observations on point 0: 4 samples, 0.8 GF
+        g.observe(t0 + WIN / 4, 0, 2, 0.4, true);
+        g.observe(t0 + WIN / 2, 0, 2, 0.4, true);
+        // modeled observation on point 1 must NOT enter the ledger
+        g.observe(t0 + WIN * 3 / 4, 1, 5, 10.0, false);
+        let snap = g.snapshot();
+        let m: std::collections::BTreeMap<_, _> =
+            snap.measured_gflips_per_sample.into_iter().collect();
+        let p0 = m["p0"].expect("point 0 has metered samples");
+        assert!((p0 - 0.2).abs() < 1e-12, "{p0}");
+        assert_eq!(m["p1"], None);
+    }
+
+    #[test]
+    fn residency_and_tracking_error_accumulate() {
+        let t0 = Instant::now();
+        let (g, _b) = gov(&[1.0, 2.0], 1.0, 10, t0); // high hysteresis: no steps
+        // two loaded windows at |E - 1|/1 = 1.0 and 0.5
+        g.observe(t0 + WIN / 2, 1, 1, 2.0, false);
+        g.observe(t0 + WIN * 3 / 2, 1, 1, 1.5, false);
+        g.observe(t0 + WIN * 5 / 2, 1, 0, 0.0, false); // close w1; w2 idle
+        g.observe(t0 + WIN * 7 / 2, 1, 0, 0.0, false); // close w2 (idle, no err)
+        let snap = g.snapshot();
+        assert_eq!(snap.windows, 3);
+        let err = snap.mean_tracking_error.unwrap();
+        assert!((err - 0.75).abs() < 1e-12, "{err}");
+        let resid: u64 = snap.residency.iter().map(|(_, w)| w).sum();
+        assert_eq!(resid, 3);
+        assert_eq!(snap.residency[1].1, 3, "all windows spent at the starting level");
+    }
+
+    #[test]
+    fn manual_budget_override_resyncs_level_so_breach_never_raises_budget() {
+        // A client writes the budget cell directly; the governor must
+        // pick up the manually-selected level at the next window close
+        // — a breach there must NOT "step down" from the stale high
+        // level onto a budget far above the manual one.
+        let t0 = Instant::now();
+        let (g, budget) = gov(&[0.1, 2.0, 4.0], 1.0, 1, t0);
+        assert_eq!(g.snapshot().level, 2); // governor starts at the top
+        budget.store(0.1f64.to_bits(), Ordering::Relaxed); // manual override
+        g.observe(t0 + WIN / 2, 0, 1, 5.0, false); // breach traffic at "cheap"
+        g.observe(t0 + WIN * 3 / 2, 0, 1, 5.0, false); // closes the breach window
+        let snap = g.snapshot();
+        assert_eq!(snap.level, 0, "level must resync to the manual budget");
+        assert_eq!(
+            budget_of(&budget),
+            0.1,
+            "a breach at the floor must not raise the budget"
+        );
+        assert_eq!(snap.residency[0].1, 1, "window attributed to the served point");
+        // idle recovery still works from the resynced level
+        g.observe(t0 + WIN * 11 / 2, 0, 0, 0.0, false);
+        assert_eq!(g.snapshot().level, 2);
+        assert_eq!(budget_of(&budget), 4.0);
+    }
+
+    #[test]
+    fn infinite_observed_energy_breaches_without_poisoning_tracking_error() {
+        // An unbounded-cost point served without a meter reports
+        // infinite energy (see respond_batch): that must count as a
+        // breach — stepping the governor down — while the mean
+        // tracking error stays finite.
+        let t0 = Instant::now();
+        let (g, budget) = gov(&[1.0, f64::INFINITY], 1.0, 1, t0);
+        assert_eq!(g.snapshot().level, 1); // starts at the "fp32" top
+        g.observe(t0 + WIN / 2, 1, 1, f64::INFINITY, false);
+        g.observe(t0 + WIN * 3 / 2, 1, 1, 0.5, false); // closes the inf window
+        let snap = g.snapshot();
+        assert_eq!(snap.level, 0, "infinite energy must breach the envelope");
+        assert_eq!(budget_of(&budget), 1.0);
+        assert_eq!(snap.mean_tracking_error, None, "inf window must not enter the error ledger");
+        // a later finite loaded window keeps the error ledger sane
+        g.observe(t0 + WIN * 5 / 2, 0, 1, 0.5, false);
+        let err = g.snapshot().mean_tracking_error.unwrap();
+        assert!(err.is_finite());
+    }
+
+    #[test]
+    fn busy_windows_do_not_count_as_idle_recovery() {
+        // Windows that a still-running batch overlaps must not be read
+        // as recovery headroom — neither when they close empty (the
+        // slow single-engine case) nor when another worker lands a
+        // light trickle in them (the mixed pool case) — or a slow
+        // batch would make the governor climb mid-flight and step
+        // back down on completion (thrash).
+        let t0 = Instant::now();
+        let budget = Arc::new(AtomicU64::new(1.0f64.to_bits())); // start cheap
+        let menu = vec![("a".into(), 1.0), ("b".into(), 4.0)];
+        let cfg = GovernorConfig {
+            envelope: EnergyEnvelope::gflips_per_sec(10.0), // target 10 GF/window
+            window: WIN,
+            hysteresis: 1,
+            ledger_windows: 8,
+        };
+        let g = Governor::new(cfg, menu, budget.clone(), t0).unwrap();
+        assert_eq!(g.snapshot().level, 0);
+        // a long batch starts immediately and is still running while
+        // another worker's light trickle lands (1 sample projects to
+        // 4 GF at the next point up — it would fit and climb if the
+        // busy overlap were ignored)
+        g.batch_started(t0);
+        g.observe(t0 + WIN * 3 / 2, 0, 1, 0.5, false); // trickle, other worker
+        g.observe(t0 + WIN * 9 / 2, 0, 1, 0.5, false); // closes busy windows
+        let snap = g.snapshot();
+        assert_eq!(snap.level, 0, "windows covered by a running batch must not climb");
+        assert_eq!(snap.switches, 0);
+        g.batch_finished(t0);
+        // a batch in flight whose start is *recent* must not block
+        // recovery: the earlier windows were genuinely idle (the busy
+        // anchor follows the earliest still-running batch, so
+        // back-to-back short batches never pin the governor down)
+        let t_probe = t0 + WIN * 9;
+        g.batch_started(t_probe);
+        g.observe(t_probe, 0, 1, 0.5, false);
+        g.batch_finished(t_probe);
+        assert_eq!(g.snapshot().level, 1, "parked-worker idle must still recover");
+        assert_eq!(budget_of(&budget), 4.0);
+    }
+
+    #[test]
+    fn long_idle_gap_is_bounded_and_converges() {
+        let t0 = Instant::now();
+        let (g, budget) = gov(&[1.0, 2.0, 4.0], 1.0, 1, t0);
+        // drive down to the floor first
+        g.observe(t0 + WIN / 2, 2, 1, 9.0, false);
+        g.observe(t0 + WIN * 3 / 2, 2, 1, 9.0, false);
+        g.observe(t0 + WIN * 5 / 2, 2, 1, 9.0, false);
+        assert_eq!(g.snapshot().level, 0);
+        // a week of idle must not spin one iteration per window, and
+        // must still land at the top
+        g.observe(t0 + WIN * 600_000, 0, 1, 0.1, false);
+        let snap = g.snapshot();
+        assert_eq!(snap.level, 2);
+        assert_eq!(budget_of(&budget), 4.0);
+    }
+}

@@ -1,20 +1,88 @@
 //! Serving metrics: latency distribution (overall and per priority
-//! class), throughput, energy, and the admission-control counters
-//! (shed / deadline-expired / cancelled).
+//! class), throughput, energy — modeled *and* measured — and the
+//! admission-control counters (shed / deadline-expired / cancelled).
+//!
+//! Latency percentiles are computed over a **bounded ring buffer** of
+//! the most recent [`LATENCY_WINDOW`] samples per distribution (one
+//! overall, one per priority lane). The seed pushed every latency into
+//! an unbounded `Vec`, so a long-lived server leaked memory linearly
+//! with traffic; the ring caps memory at a constant while keeping the
+//! percentiles meaningful (they describe the recent window, which is
+//! what an operator watches anyway). Counters (`requests`, energy
+//! totals, rejections) remain exact over the server's lifetime.
+//!
+//! Energy is tracked twice: the *modeled* cost (menu Gflips/sample ×
+//! samples — what the policy budgeted) and the *measured* cost (the
+//! engine's [`crate::nn::PowerMeter`] totals, when the backend meters
+//! flips). Their difference — `measured_minus_modeled_gflips`,
+//! accumulated only over batches that had a meter — is the
+//! modeled-vs-observed gap the closed-loop
+//! [`super::governor::Governor`] exists to absorb. `point_switches`
+//! counts how often consecutive batches were served by different
+//! operating points (budget traversal and governor activity alike).
 
 use super::request::{Priority, N_PRIORITIES};
 use std::sync::Mutex;
 use std::time::Instant;
 
+/// Latency samples held per distribution (overall + per lane).
+pub const LATENCY_WINDOW: usize = 4096;
+
+/// Fixed-capacity ring of the most recent latency samples, plus the
+/// exact all-time count.
+#[derive(Default)]
+struct LatencyRing {
+    buf: Vec<f64>,
+    /// Next write slot once the buffer is full.
+    next: usize,
+    /// All-time samples pushed (not capped).
+    total: u64,
+}
+
+impl LatencyRing {
+    fn push(&mut self, v: f64) {
+        if self.buf.len() < LATENCY_WINDOW {
+            self.buf.push(v);
+        } else {
+            self.buf[self.next] = v;
+        }
+        self.next = (self.next + 1) % LATENCY_WINDOW;
+        self.total += 1;
+    }
+
+    /// The retained window, unordered (percentile sorts its own copy).
+    fn samples(&self) -> &[f64] {
+        &self.buf
+    }
+}
+
+/// Modeled and measured energy served by one operating point.
+#[derive(Default, Clone)]
+struct PointStat {
+    requests: u64,
+    /// Metered samples / Gflips (absent for meter-less backends).
+    measured_samples: u64,
+    measured_gflips: f64,
+}
+
 #[derive(Default)]
 struct Inner {
-    latencies_us: Vec<f64>,
+    latencies_us: LatencyRing,
     /// Latencies split by priority class (lane order).
-    lane_latencies_us: [Vec<f64>; N_PRIORITIES],
+    lane_latencies_us: [LatencyRing; N_PRIORITIES],
     batches: u64,
     requests: u64,
+    /// Modeled energy total (menu cost × samples).
     giga_flips: f64,
-    per_point: std::collections::BTreeMap<String, u64>,
+    /// Measured energy total over metered batches.
+    measured_giga_flips: f64,
+    /// Modeled energy of exactly those batches that were metered —
+    /// the apples-to-apples base for the measured-vs-modeled delta.
+    modeled_when_measured: f64,
+    per_point: std::collections::BTreeMap<String, PointStat>,
+    /// Times consecutive batches were served by different points.
+    point_switches: u64,
+    last_point: Option<String>,
     /// Requests shed at admission (`QueueFull`).
     shed: u64,
     /// Requests rejected unexecuted (`DeadlineExceeded`).
@@ -50,11 +118,34 @@ pub struct MetricsSnapshot {
     pub requests: u64,
     pub batches: u64,
     pub mean_batch: f64,
+    /// Percentiles over the retained window of recent samples
+    /// ([`LATENCY_WINDOW`]), not the full history.
     pub p50_us: f64,
     pub p99_us: f64,
     pub throughput_rps: f64,
+    /// Modeled energy total (menu Gflips/sample × samples).
     pub total_giga_flips: f64,
+    /// Measured energy total (engine flip meters; metered batches).
+    pub measured_giga_flips: f64,
+    /// Measured − modeled, over metered batches only — positive when
+    /// the menu's compiled costs undershoot reality.
+    pub measured_minus_modeled_gflips: f64,
+    /// Requests served per operating point (residency). Index-parallel
+    /// with `per_point_measured`: both are produced by one iteration
+    /// over the same per-point table and must stay that way (the
+    /// report pairs them by index).
     pub per_point: Vec<(String, u64)>,
+    /// Measured Gflips/sample per point, `None` where nothing was
+    /// metered — the serving-side calibration the `pann-menu/v2`
+    /// artifact field stores. Same order as `per_point`.
+    pub per_point_measured: Vec<(String, Option<f64>)>,
+    /// Times consecutive batches (in global completion order) changed
+    /// operating point. On a multi-worker pool, in-flight batches from
+    /// different workers can interleave across one budget change, so
+    /// this may exceed the number of budget traversals —
+    /// [`crate::coordinator::GovernorSnapshot::switches`] counts
+    /// actual governor steps instead.
+    pub point_switches: u64,
     /// Per-priority latency, highest class first.
     pub per_priority: Vec<PriorityLatency>,
     pub shed: u64,
@@ -69,9 +160,16 @@ impl Metrics {
         Metrics { inner: Mutex::new(Inner::default()), started: Some(Instant::now()) }
     }
 
-    /// Record one served batch: per-request `(latency µs, priority)`
-    /// plus the batch's total energy.
-    pub fn record_batch(&self, point: &str, lats: &[(f64, Priority)], giga_flips: f64) {
+    /// Record one served batch: per-request `(latency µs, priority)`,
+    /// the batch's *modeled* energy, and the energy the engine
+    /// actually metered (`None` for meter-less backends).
+    pub fn record_batch(
+        &self,
+        point: &str,
+        lats: &[(f64, Priority)],
+        giga_flips: f64,
+        measured_giga_flips: Option<f64>,
+    ) {
         let mut g = self.inner.lock().unwrap();
         g.batches += 1;
         g.requests += lats.len() as u64;
@@ -80,7 +178,20 @@ impl Metrics {
             g.latencies_us.push(us);
             g.lane_latencies_us[prio.lane()].push(us);
         }
-        *g.per_point.entry(point.to_string()).or_insert(0) += lats.len() as u64;
+        if g.last_point.as_deref() != Some(point) {
+            if g.last_point.is_some() {
+                g.point_switches += 1;
+            }
+            g.last_point = Some(point.to_string());
+        }
+        let stat = g.per_point.entry(point.to_string()).or_default();
+        stat.requests += lats.len() as u64;
+        if let Some(m) = measured_giga_flips {
+            stat.measured_samples += lats.len() as u64;
+            stat.measured_gflips += m;
+            g.measured_giga_flips += m;
+            g.modeled_when_measured += giga_flips;
+        }
     }
 
     /// One request shed at admission (queue full).
@@ -116,12 +227,12 @@ impl Metrics {
         let per_priority = Priority::ALL
             .iter()
             .map(|&p| {
-                let lat = &g.lane_latencies_us[p.lane()];
+                let lane = &g.lane_latencies_us[p.lane()];
                 PriorityLatency {
                     priority: p,
-                    requests: lat.len() as u64,
-                    p50_us: crate::util::stats::percentile(lat, 50.0),
-                    p99_us: crate::util::stats::percentile(lat, 99.0),
+                    requests: lane.total,
+                    p50_us: crate::util::stats::percentile(lane.samples(), 50.0),
+                    p99_us: crate::util::stats::percentile(lane.samples(), 99.0),
                 }
             })
             .collect();
@@ -129,11 +240,26 @@ impl Metrics {
             requests: g.requests,
             batches: g.batches,
             mean_batch: if g.batches > 0 { g.requests as f64 / g.batches as f64 } else { 0.0 },
-            p50_us: crate::util::stats::percentile(&g.latencies_us, 50.0),
-            p99_us: crate::util::stats::percentile(&g.latencies_us, 99.0),
+            p50_us: crate::util::stats::percentile(g.latencies_us.samples(), 50.0),
+            p99_us: crate::util::stats::percentile(g.latencies_us.samples(), 99.0),
             throughput_rps: g.requests as f64 / elapsed.max(1e-9),
             total_giga_flips: g.giga_flips,
-            per_point: g.per_point.iter().map(|(k, v)| (k.clone(), *v)).collect(),
+            measured_giga_flips: g.measured_giga_flips,
+            measured_minus_modeled_gflips: g.measured_giga_flips - g.modeled_when_measured,
+            per_point: g.per_point.iter().map(|(k, v)| (k.clone(), v.requests)).collect(),
+            per_point_measured: g
+                .per_point
+                .iter()
+                .map(|(k, v)| {
+                    let m = if v.measured_samples > 0 {
+                        Some(v.measured_gflips / v.measured_samples as f64)
+                    } else {
+                        None
+                    };
+                    (k.clone(), m)
+                })
+                .collect(),
+            point_switches: g.point_switches,
             per_priority,
             shed: g.shed,
             expired: g.expired,
@@ -141,6 +267,13 @@ impl Metrics {
             cancelled: g.cancelled,
             engine_failures: g.engine_failures,
         }
+    }
+
+    /// Latency samples currently held (overall ring) — bounded by
+    /// [`LATENCY_WINDOW`] no matter how many requests were served.
+    #[cfg(test)]
+    fn held_latency_samples(&self) -> usize {
+        self.inner.lock().unwrap().latencies_us.buf.len()
     }
 }
 
@@ -157,6 +290,15 @@ impl MetricsSnapshot {
             self.total_giga_flips,
             self.total_giga_flips / self.requests.max(1) as f64,
         );
+        if self.measured_giga_flips > 0.0 {
+            s.push_str(&format!(
+                "measured energy={:.4} Gflips (measured − modeled: {:+.4})\n",
+                self.measured_giga_flips, self.measured_minus_modeled_gflips
+            ));
+        }
+        if self.point_switches > 0 {
+            s.push_str(&format!("operating-point switches: {}\n", self.point_switches));
+        }
         if self.shed + self.expired + self.unservable + self.cancelled + self.engine_failures > 0 {
             s.push_str(&format!(
                 "rejected: {} shed (queue full), {} past deadline, {} unservable, {} cancelled, {} engine failures\n",
@@ -174,8 +316,12 @@ impl MetricsSnapshot {
                 ));
             }
         }
-        for (k, v) in &self.per_point {
-            s.push_str(&format!("  point {k}: {v} requests\n"));
+        for (i, (k, v)) in self.per_point.iter().enumerate() {
+            let measured = match self.per_point_measured.get(i).and_then(|(_, m)| *m) {
+                Some(gf) => format!(" ({gf:.6} GF/sample measured)"),
+                None => String::new(),
+            };
+            s.push_str(&format!("  point {k}: {v} requests{measured}\n"));
         }
         s
     }
@@ -196,8 +342,9 @@ mod tests {
                 (300.0, Priority::Normal),
             ],
             0.5,
+            None,
         );
-        m.record_batch("p8", &[(400.0, Priority::BestEffort)], 0.4);
+        m.record_batch("p8", &[(400.0, Priority::BestEffort)], 0.4, None);
         let s = m.snapshot();
         assert_eq!(s.requests, 4);
         assert_eq!(s.batches, 2);
@@ -210,6 +357,8 @@ mod tests {
         assert_eq!(s.per_priority[1].requests, 2); // Normal
         assert_eq!(s.per_priority[2].requests, 1); // BestEffort
         assert_eq!(s.per_priority[0].p50_us, 100.0);
+        // two points, two batches -> one switch
+        assert_eq!(s.point_switches, 1);
     }
 
     #[test]
@@ -227,5 +376,56 @@ mod tests {
             (2, 1, 1, 1, 1)
         );
         assert!(s.report().contains("2 shed"));
+    }
+
+    #[test]
+    fn latency_memory_bounded_under_sustained_load() {
+        // the seed grew an unbounded Vec per latency sample; the ring
+        // must hold at most LATENCY_WINDOW samples no matter the load
+        let m = Metrics::new();
+        let n = LATENCY_WINDOW as u64 * 8;
+        for i in 0..n {
+            m.record_batch("p", &[(i as f64, Priority::Normal)], 0.01, None);
+        }
+        assert_eq!(m.held_latency_samples(), LATENCY_WINDOW);
+        let s = m.snapshot();
+        // exact counters survive the capping
+        assert_eq!(s.requests, n);
+        assert_eq!(s.per_priority[1].requests, n);
+        // percentiles describe the *recent* window: the oldest
+        // retained sample is n - LATENCY_WINDOW
+        assert!(s.p50_us >= (n - LATENCY_WINDOW as u64) as f64);
+        assert!(s.p99_us >= s.p50_us);
+    }
+
+    #[test]
+    fn measured_vs_modeled_delta_and_per_point_calibration() {
+        let m = Metrics::new();
+        // metered batch: modeled 0.5, measured 0.6 -> delta +0.1
+        let two = [(100.0, Priority::Normal), (110.0, Priority::Normal)];
+        m.record_batch("p4", &two, 0.5, Some(0.6));
+        // meter-less batch: counts toward modeled total only
+        m.record_batch("p4", &[(120.0, Priority::Normal)], 0.25, None);
+        let s = m.snapshot();
+        assert!((s.total_giga_flips - 0.75).abs() < 1e-12);
+        assert!((s.measured_giga_flips - 0.6).abs() < 1e-12);
+        assert!((s.measured_minus_modeled_gflips - 0.1).abs() < 1e-12);
+        // per-point calibration: 0.6 GF over 2 metered samples
+        assert_eq!(s.per_point_measured.len(), 1);
+        let (name, measured) = &s.per_point_measured[0];
+        assert_eq!(name, "p4");
+        assert!((measured.unwrap() - 0.3).abs() < 1e-12);
+        assert!(s.report().contains("measured energy"));
+    }
+
+    #[test]
+    fn switch_counter_tracks_point_changes_only() {
+        let m = Metrics::new();
+        let lat = [(1.0, Priority::Normal)];
+        m.record_batch("a", &lat, 0.1, None);
+        m.record_batch("a", &lat, 0.1, None); // same point: no switch
+        m.record_batch("b", &lat, 0.2, None); // a -> b
+        m.record_batch("a", &lat, 0.1, None); // b -> a
+        assert_eq!(m.snapshot().point_switches, 2);
     }
 }

@@ -20,18 +20,31 @@
 //! Failures are typed ([`ServeError`]); dropping a [`Ticket`] cancels
 //! a still-queued request.
 //!
+//! Budget selection can also run **closed-loop**: with
+//! [`ServerBuilder::envelope`] set, the [`governor`] watches the
+//! *metered* flip energy of every executed batch against an
+//! [`EnergyEnvelope`] (Gflips/sec) and walks the served budget along
+//! the menu frontier with hysteresis — sustained load degrades
+//! accuracy gracefully instead of blowing the envelope, idle periods
+//! climb back to the most accurate point. Without an envelope the
+//! budget only moves when a client calls [`Client::set_budget`]
+//! (the open-loop default).
+//!
 //! Components: [`request`] (the public request/response model),
 //! [`policy`] (budget → operating point), [`batcher`] (bounded
-//! admission queue + point-coherent QoS batching), [`metrics`]
-//! (latency/energy/rejection accounting, per priority class),
-//! [`server`] (builder, engines, worker loops).
+//! admission queue + point-coherent QoS batching), [`governor`]
+//! (closed-loop energy control), [`metrics`] (latency/energy/rejection
+//! accounting, per priority class), [`server`] (builder, engines,
+//! worker loops).
 
 pub mod batcher;
+pub mod governor;
 pub mod metrics;
 pub mod policy;
 pub mod request;
 pub mod server;
 
+pub use governor::{EnergyEnvelope, Governor, GovernorConfig, GovernorSnapshot};
 pub use metrics::{MetricsSnapshot, PriorityLatency};
 pub use policy::{Costed, EnginePoint, PowerPolicy};
 pub use request::{InferRequest, Priority, Response, ServeError, Ticket};

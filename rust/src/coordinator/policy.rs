@@ -38,6 +38,21 @@ impl Costed for EnginePoint {
     }
 }
 
+/// Index of the most expensive cost `<= budget` in an ascending cost
+/// list, falling back to the cheapest (index 0) when nothing fits —
+/// the one budget→point rule, shared by [`PowerPolicy::select`] and
+/// the governor's level resync ([`super::governor::Governor`]) so the
+/// two can never drift apart.
+pub(crate) fn best_fitting_index(costs: impl IntoIterator<Item = f64>, budget: f64) -> usize {
+    let mut best = 0;
+    for (i, c) in costs.into_iter().enumerate() {
+        if c <= budget {
+            best = i;
+        }
+    }
+    best
+}
+
 /// The selection policy over a menu of points.
 pub struct PowerPolicy<P: Costed = EnginePoint> {
     /// Sorted ascending by energy.
@@ -82,15 +97,10 @@ impl<P: Costed> PowerPolicy<P> {
         if budget_gflips.is_nan() {
             return Err(ServeError::BadBudget);
         }
-        let mut best = 0;
-        for (i, p) in self.points.iter().enumerate() {
-            if p.cost_gflips() <= budget_gflips {
-                best = i;
-            } else {
-                break;
-            }
-        }
-        Ok(best)
+        Ok(best_fitting_index(
+            self.points.iter().map(|p| p.cost_gflips()),
+            budget_gflips,
+        ))
     }
 
     /// Index of the point named `name` (for pinned requests).

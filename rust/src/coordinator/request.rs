@@ -98,17 +98,20 @@ impl Priority {
     }
 }
 
-/// One inference request: input + per-request QoS. Built fluently:
+/// One inference request: input + per-request QoS. Built fluently,
+/// then handed to [`crate::coordinator::Client::submit`], which
+/// returns the [`Ticket`] the result arrives on:
 ///
-/// ```ignore
-/// let t = client.submit(
-///     InferRequest::new(x)
-///         .deadline(Duration::from_millis(20))
-///         .max_gflips(0.05)
-///         .priority(Priority::Hi)
-///         .tag("user-42"),
-/// )?;
-/// let resp = t.wait()?;
+/// ```
+/// use pann::coordinator::{InferRequest, Priority};
+/// use std::time::Duration;
+///
+/// let req = InferRequest::new(vec![0.0; 256])
+///     .deadline(Duration::from_millis(20)) // start-by, else DeadlineExceeded
+///     .max_gflips(0.05)                    // per-request energy cap
+///     .priority(Priority::Hi)              // drains before Normal/BestEffort
+///     .tag("user-42");                     // echoed on the Response
+/// # let _ = req;
 /// ```
 #[derive(Clone, Debug)]
 pub struct InferRequest {
@@ -170,8 +173,13 @@ pub struct Response {
     /// Operating point that served the request.
     pub point: String,
     pub latency: Duration,
-    /// Energy charged to this request (Giga bit flips).
+    /// Energy charged to this request (Giga bit flips) under the
+    /// *modeled* per-sample cost of the serving point.
     pub giga_flips: f64,
+    /// This request's share of the energy the engine *actually
+    /// metered* for its batch (Giga bit flips); `None` when the
+    /// backend has no flip meter (e.g. PJRT executables).
+    pub measured_gflips: Option<f64>,
     /// Trace tag from the request, if any.
     pub tag: Option<String>,
 }

@@ -23,6 +23,7 @@
 //! [`InferRequest`]: super::request::InferRequest
 
 use super::batcher::{Pending, RequestQueue};
+use super::governor::{EnergyEnvelope, Governor, GovernorConfig, GovernorSnapshot};
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::policy::{Costed, EnginePoint, PowerPolicy};
 use super::request::{InferRequest, Priority, Response, ServeError, Ticket};
@@ -47,6 +48,16 @@ pub trait Engine {
     /// Run `n` samples (`x.len() == n * sample_len()`); returns
     /// flattened outputs (`n × out_len`).
     fn infer(&mut self, x: &[f32], n: usize) -> Result<Vec<f32>>;
+    /// [`Engine::infer`] plus the energy the call *actually metered*
+    /// (total Giga bit flips for the whole call), when the backend has
+    /// a flip meter. The default forwards to `infer` and reports
+    /// `None` — right for backends without metering (PJRT executables
+    /// count no flips); the native engines override it with their
+    /// [`crate::nn::PowerMeter`] totals, which is what feeds the
+    /// closed-loop [`Governor`] and the measured-vs-modeled metrics.
+    fn infer_metered(&mut self, x: &[f32], n: usize) -> Result<(Vec<f32>, Option<f64>)> {
+        Ok((self.infer(x, n)?, None))
+    }
 }
 
 impl Engine for crate::runtime::LoadedModel {
@@ -70,6 +81,17 @@ pub trait BatchEngine: Send + Sync {
     fn sample_len(&self) -> usize;
     /// Run `n` samples using the worker's scratch arena.
     fn infer_batch(&self, x: &[f32], n: usize, scratch: &mut Scratch) -> Result<Vec<f32>>;
+    /// [`BatchEngine::infer_batch`] plus the metered energy of the
+    /// call (total Giga bit flips), `None` when the backend does not
+    /// meter flips — see [`Engine::infer_metered`].
+    fn infer_batch_metered(
+        &self,
+        x: &[f32],
+        n: usize,
+        scratch: &mut Scratch,
+    ) -> Result<(Vec<f32>, Option<f64>)> {
+        Ok((self.infer_batch(x, n, scratch)?, None))
+    }
 }
 
 /// One pool operating point: an `Arc`-shared batch engine plus its
@@ -121,6 +143,15 @@ impl BatchEngine for PlanEngine {
         self.plan.input_shape().iter().product()
     }
     fn infer_batch(&self, x: &[f32], n: usize, scratch: &mut Scratch) -> Result<Vec<f32>> {
+        Ok(self.infer_batch_metered(x, n, scratch)?.0)
+    }
+
+    fn infer_batch_metered(
+        &self,
+        x: &[f32],
+        n: usize,
+        scratch: &mut Scratch,
+    ) -> Result<(Vec<f32>, Option<f64>)> {
         let mut meter = {
             let mut pool = self.meters.lock().expect("meter pool poisoned");
             pool.pop().unwrap_or_else(|| self.plan.new_meter())
@@ -128,8 +159,9 @@ impl BatchEngine for PlanEngine {
         meter.reset();
         // borrowed-slice forward: no per-batch input copy
         let out = self.plan.forward_slice(x, n, scratch, &mut meter, 1);
+        let measured = meter.giga();
         self.meters.lock().expect("meter pool poisoned").push(meter);
-        Ok(out?.data)
+        Ok((out?.data, Some(measured)))
     }
 }
 
@@ -169,6 +201,13 @@ impl Engine for NativeEngine {
             .forward_slice(x, n, &mut self.scratch, &mut self.meter, threads)?
             .data)
     }
+
+    fn infer_metered(&mut self, x: &[f32], n: usize) -> Result<(Vec<f32>, Option<f64>)> {
+        let out = self.infer(x, n)?;
+        // `infer` resets the meter on entry, so it now holds exactly
+        // this call's flips
+        Ok((out, Some(self.meter.giga())))
+    }
 }
 
 /// Server configuration (all knobs of [`ServerBuilder`]).
@@ -184,6 +223,14 @@ pub struct ServerConfig {
     pub max_wait: Duration,
     /// Initial global energy budget per sample, Giga bit flips.
     pub budget_gflips: f64,
+    /// Closed-loop energy envelope. `None` (the default) keeps the
+    /// open-loop PR-3 behavior: the budget only moves when a client
+    /// calls [`Client::set_budget`].
+    pub envelope: Option<EnergyEnvelope>,
+    /// Governor decision-window length (envelope only).
+    pub governor_window: Duration,
+    /// Consecutive over/under windows before the governor steps.
+    pub governor_hysteresis: u32,
 }
 
 impl Default for ServerConfig {
@@ -194,6 +241,9 @@ impl Default for ServerConfig {
             max_batch: 8,
             max_wait: Duration::from_millis(2),
             budget_gflips: f64::INFINITY,
+            envelope: None,
+            governor_window: GovernorConfig::DEFAULT_WINDOW,
+            governor_hysteresis: GovernorConfig::DEFAULT_HYSTERESIS,
         }
     }
 }
@@ -239,6 +289,29 @@ impl Menu {
     /// Quantization methods that need calibration inputs (ACIQ, Recon)
     /// must go through [`Menu::from_artifact_calibrated`]; the
     /// data-free methods (Dynamic, BN-stats, DFQ) need none.
+    ///
+    /// ```
+    /// use pann::coordinator::{Menu, ServerBuilder};
+    /// use pann::data::{synth, Dataset};
+    /// use pann::nn::Model;
+    /// use pann::pann::compile_menu;
+    /// use pann::quant::ActQuantMethod;
+    ///
+    /// let mut model = Model::reference_cnn(11);
+    /// let ds = Dataset::from_synth(synth::digits(48, 12));
+    /// let stats = pann::nn::eval::batch_tensor(&ds, 0, 24);
+    /// model.record_act_stats(&stats)?;
+    /// let path = std::env::temp_dir().join("pann_doc_from_artifact_menu.json");
+    /// compile_menu(&model, &[2], ActQuantMethod::BnStats, None, &ds.take(32), 2..=4)?
+    ///     .save(&path)?;
+    ///
+    /// let srv = ServerBuilder::new().serve(Menu::from_artifact(&path, &model)?)?;
+    /// let client = srv.client();
+    /// let resp = client.infer(ds.sample(0).to_vec())?;
+    /// assert!(resp.point.starts_with("pt"));
+    /// srv.shutdown();
+    /// # Ok::<(), anyhow::Error>(())
+    /// ```
     pub fn from_artifact(
         path: impl AsRef<std::path::Path>,
         model: &crate::nn::Model,
@@ -263,16 +336,47 @@ impl Menu {
 
 /// Builder for the one serving entry point.
 ///
-/// ```ignore
-/// let srv = ServerBuilder::new()
-///     .workers(8)
-///     .queue_depth(512)
-///     .max_batch(16)
-///     .max_wait(Duration::from_millis(1))
-///     .budget_gflips(0.05)
-///     .serve(Menu::shared(points))?;
-/// let client = srv.client();
+/// The example below compiles one PANN operating point for the
+/// built-in reference CNN and serves it on a two-worker pool:
+///
 /// ```
+/// use pann::coordinator::{Menu, PlanEngine, ServerBuilder, SharedPoint};
+/// use pann::data::{synth, Dataset};
+/// use pann::nn::{Model, QuantConfig, QuantizedModel};
+/// use pann::quant::ActQuantMethod;
+/// use std::sync::Arc;
+///
+/// let mut model = Model::reference_cnn(1);
+/// let ds = Dataset::from_synth(synth::digits(32, 2));
+/// let stats = pann::nn::eval::batch_tensor(&ds, 0, 16);
+/// model.record_act_stats(&stats)?;
+/// let qm = QuantizedModel::prepare(
+///     &model,
+///     QuantConfig::pann(4, 2.0, ActQuantMethod::BnStats),
+///     None,
+/// )?;
+///
+/// let srv = ServerBuilder::new()
+///     .workers(2)
+///     .queue_depth(64)
+///     .max_batch(8)
+///     .budget_gflips(1.0)
+///     .serve(Menu::shared(vec![SharedPoint {
+///         name: "p4".into(),
+///         giga_flips_per_sample: 0.001,
+///         engine: Arc::new(PlanEngine::new(qm.plan(), 8)),
+///     }]))?;
+/// let client = srv.client();
+/// let resp = client.infer(ds.sample(0).to_vec())?;
+/// assert_eq!(resp.point, "p4");
+/// srv.shutdown();
+/// # Ok::<(), anyhow::Error>(())
+/// ```
+///
+/// With [`ServerBuilder::envelope`] set, a closed-loop [`Governor`]
+/// additionally walks the served budget along the menu frontier so
+/// sustained load degrades accuracy gracefully instead of blowing the
+/// energy envelope (see [`super::governor`]).
 #[derive(Clone, Copy, Debug)]
 pub struct ServerBuilder {
     config: ServerConfig,
@@ -327,6 +431,36 @@ impl ServerBuilder {
         self
     }
 
+    /// Enable the closed-loop energy [`Governor`]: defend a sustained
+    /// energy envelope (Gflips/sec) by stepping the served budget
+    /// down the menu frontier under load and back up when the load
+    /// (or an idle period) leaves headroom. Without this call the
+    /// server is open-loop: the budget moves only via
+    /// [`Client::set_budget`]. With it, the governor co-owns the
+    /// budget cell: each decision window starts from whatever point
+    /// the cell currently selects (manual budgets are honored), and
+    /// every governor step rewrites the cell.
+    pub fn envelope(mut self, e: EnergyEnvelope) -> Self {
+        self.config.envelope = Some(e);
+        self
+    }
+
+    /// Governor decision-window length (default 100 ms). Only
+    /// meaningful together with [`ServerBuilder::envelope`].
+    pub fn governor_window(mut self, w: Duration) -> Self {
+        self.config.governor_window = w;
+        self
+    }
+
+    /// Governor decision-horizon length in windows (default 2,
+    /// clamped to ≥ 1): each step judges the last `h` windows of
+    /// energy against `h ×` the per-window target, and at most one
+    /// frontier step happens per horizon.
+    pub fn governor_hysteresis(mut self, h: u32) -> Self {
+        self.config.governor_hysteresis = h.max(1);
+        self
+    }
+
     /// Start the server over `menu`. Blocks until the menu is built
     /// and validated (engine factories run first), so a returned
     /// `Server` is ready to serve.
@@ -345,46 +479,87 @@ impl ServerBuilder {
             Menu::Shared(points) => {
                 let sample_len = validate_menu(points.iter().map(|p| p.engine.sample_len()))?;
                 let policy = Arc::new(PowerPolicy::new(points)?);
+                let governor = build_governor(&cfg, policy.menu(), &budget_bits)?;
                 let mut workers = Vec::with_capacity(cfg.workers);
                 for _ in 0..cfg.workers.max(1) {
                     let queue = queue.clone();
                     let policy = policy.clone();
                     let metrics = metrics.clone();
                     let budget_bits = budget_bits.clone();
+                    let governor = governor.clone();
                     workers.push(std::thread::spawn(move || {
-                        pool_worker(&queue, &policy, &metrics, &budget_bits, cfg)
+                        pool_worker(&queue, &policy, &metrics, &budget_bits, &governor, cfg)
                     }));
                 }
-                let client = Client { queue: queue.clone(), budget_bits, metrics, sample_len };
+                let client =
+                    Client { queue: queue.clone(), budget_bits, metrics, sample_len, governor };
                 Ok(Server { client, queue, workers })
             }
             Menu::Local(factory) => {
-                let (ready_tx, ready_rx) = mpsc::channel::<Result<usize>>();
+                let (ready_tx, ready_rx) =
+                    mpsc::channel::<Result<(usize, Option<Arc<Governor>>)>>();
                 let wq = queue.clone();
                 let wm = metrics.clone();
                 let wb = budget_bits.clone();
                 let worker = std::thread::spawn(move || {
-                    let mut policy = match build_local(factory) {
-                        Ok((policy, sample_len)) => {
-                            let _ = ready_tx.send(Ok(sample_len));
-                            policy
+                    // engines (and hence the menu the governor needs)
+                    // can only be built on this thread — they may be
+                    // `!Send`; the governor itself is shareable and is
+                    // handed back through the ready channel
+                    let startup = build_local(factory)
+                        .and_then(|(policy, sample_len)| {
+                            let governor = build_governor(&cfg, policy.menu(), &wb)?;
+                            Ok((policy, sample_len, governor))
+                        });
+                    let mut state = match startup {
+                        Ok((policy, sample_len, governor)) => {
+                            let _ = ready_tx.send(Ok((sample_len, governor.clone())));
+                            (policy, governor)
                         }
                         Err(e) => {
                             let _ = ready_tx.send(Err(e));
                             return;
                         }
                     };
-                    local_worker(&wq, &mut policy, &wm, &wb, cfg);
+                    local_worker(&wq, &mut state.0, &wm, &wb, &state.1, cfg);
                 });
-                let sample_len = ready_rx
+                let (sample_len, governor) = ready_rx
                     .recv()
                     .map_err(|_| anyhow::anyhow!("server worker died during startup"))??;
-                let client = Client { queue: queue.clone(), budget_bits, metrics, sample_len };
+                let client =
+                    Client { queue: queue.clone(), budget_bits, metrics, sample_len, governor };
                 Ok(Server { client, queue, workers: vec![worker] })
             }
             Menu::SharedDeferred(_) => unreachable!("resolved to Menu::Shared above"),
         }
     }
+}
+
+/// Build the closed-loop governor when an envelope is configured
+/// (`None` keeps the open-loop path untouched). `menu` is the
+/// policy's `(name, cost)` listing, cheapest first, so the point
+/// indices workers report to [`Governor::observe`] line up with the
+/// policy's selection indices.
+fn build_governor(
+    cfg: &ServerConfig,
+    menu: Vec<(String, f64)>,
+    budget_bits: &Arc<AtomicU64>,
+) -> Result<Option<Arc<Governor>>> {
+    let Some(envelope) = cfg.envelope else {
+        return Ok(None);
+    };
+    let gc = GovernorConfig {
+        envelope,
+        window: cfg.governor_window,
+        hysteresis: cfg.governor_hysteresis,
+        ledger_windows: GovernorConfig::DEFAULT_LEDGER_WINDOWS,
+    };
+    Ok(Some(Arc::new(Governor::new(
+        gc,
+        menu,
+        budget_bits.clone(),
+        Instant::now(),
+    )?)))
 }
 
 /// Non-empty menu with one agreed sample length.
@@ -449,6 +624,7 @@ fn pool_worker(
     policy: &PowerPolicy<SharedPoint>,
     metrics: &Metrics,
     budget_bits: &AtomicU64,
+    governor: &Option<Arc<Governor>>,
     cfg: ServerConfig,
 ) {
     let _guard = StopQueueOnDrop(queue);
@@ -461,6 +637,12 @@ fn pool_worker(
         let Some((batch, idx)) = collected else { break };
         let point = policy.point(idx);
         let eng = point.engine.as_ref();
+        // bracket execution so the governor can tell "worker parked"
+        // (idle, may climb) from "batch running" (not idle)
+        let t_batch = Instant::now();
+        if let Some(g) = governor {
+            g.batch_started(t_batch);
+        }
         respond_batch(
             &point.name,
             point.giga_flips_per_sample,
@@ -468,8 +650,16 @@ fn pool_worker(
             eng.max_batch(),
             batch,
             metrics,
-            |x, n| eng.infer_batch(x, n, &mut scratch),
+            |n, gf, metered| {
+                if let Some(g) = governor {
+                    g.observe(Instant::now(), idx, n, gf, metered);
+                }
+            },
+            |x, n| eng.infer_batch_metered(x, n, &mut scratch),
         );
+        if let Some(g) = governor {
+            g.batch_finished(t_batch);
+        }
     }
 }
 
@@ -479,6 +669,7 @@ fn local_worker(
     policy: &mut PowerPolicy<EnginePoint>,
     metrics: &Metrics,
     budget_bits: &AtomicU64,
+    governor: &Option<Arc<Governor>>,
     cfg: ServerConfig,
 ) {
     let _guard = StopQueueOnDrop(queue);
@@ -494,7 +685,27 @@ fn local_worker(
         };
         let eng = policy.point_mut(idx).engine.as_mut();
         let (sample_len, max_b) = (eng.sample_len(), eng.max_batch());
-        respond_batch(&name, gf, sample_len, max_b, batch, metrics, |x, n| eng.infer(x, n));
+        let t_batch = Instant::now();
+        if let Some(g) = governor {
+            g.batch_started(t_batch);
+        }
+        respond_batch(
+            &name,
+            gf,
+            sample_len,
+            max_b,
+            batch,
+            metrics,
+            |n, gf_obs, metered| {
+                if let Some(g) = governor {
+                    g.observe(Instant::now(), idx, n, gf_obs, metered);
+                }
+            },
+            |x, n| eng.infer_metered(x, n),
+        );
+        if let Some(g) = governor {
+            g.batch_finished(t_batch);
+        }
     }
 }
 
@@ -507,6 +718,7 @@ pub struct Client {
     budget_bits: Arc<AtomicU64>,
     metrics: Arc<Metrics>,
     sample_len: usize,
+    governor: Option<Arc<Governor>>,
 }
 
 impl Client {
@@ -549,8 +761,20 @@ impl Client {
     /// paper's "traverse the power-accuracy trade-off at deployment
     /// time". Per-request `max_gflips` caps are applied *on top* of
     /// this (the scheduler selects under the minimum of the two).
+    ///
+    /// When the server runs a closed-loop [`Governor`]
+    /// ([`ServerBuilder::envelope`]), the governor starts each
+    /// decision window from the point this cell selects — a manual
+    /// budget is honored until load makes the governor step, at which
+    /// point it rewrites the cell with a frontier point's exact cost.
     pub fn set_budget(&self, gflips: f64) {
         self.budget_bits.store(gflips.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Snapshot of the closed-loop energy governor; `None` on an
+    /// open-loop server (no [`ServerBuilder::envelope`] configured).
+    pub fn governor(&self) -> Option<GovernorSnapshot> {
+        self.governor.as_ref().map(|g| g.snapshot())
     }
 
     pub fn budget(&self) -> f64 {
@@ -614,7 +838,12 @@ impl Drop for Server {
 }
 
 /// Respond to one collected batch, splitting it across engine calls of
-/// at most `max_b` samples. `infer` runs one sub-batch.
+/// at most `max_b` samples. `infer` runs one sub-batch and reports the
+/// energy it metered (`None` for meter-less backends); `on_energy` is
+/// told, per executed chunk, `(samples, Gflips observed, metered?)` —
+/// the governor's feed — *before* responses go out, so a client that
+/// has its response never races a stale governor.
+#[allow(clippy::too_many_arguments)]
 fn respond_batch<F>(
     name: &str,
     gf_per_sample: f64,
@@ -622,9 +851,10 @@ fn respond_batch<F>(
     max_b: usize,
     batch: Vec<Pending>,
     metrics: &Metrics,
+    mut on_energy: impl FnMut(u64, f64, bool),
     mut infer: F,
 ) where
-    F: FnMut(&[f32], usize) -> Result<Vec<f32>>,
+    F: FnMut(&[f32], usize) -> Result<(Vec<f32>, Option<f64>)>,
 {
     // last-moment check: skip requests whose ticket was dropped while
     // the batch was being assembled. Deadlines need no re-check here —
@@ -649,7 +879,7 @@ fn respond_batch<F>(
             flat.extend_from_slice(&r.input);
         }
         match infer(&flat, n) {
-            Ok(out) => {
+            Ok((out, measured)) => {
                 let ol = out.len() / n;
                 let lats: Vec<(f64, Priority)> = chunk
                     .iter()
@@ -660,15 +890,30 @@ fn respond_batch<F>(
                 } else {
                     0.0
                 };
-                // record *before* responding so a client that has its
-                // response always observes it in the metrics
-                metrics.record_batch(name, &lats, batch_gf);
+                // governor and metrics both update *before* responding
+                // so a client that has its response always observes
+                // them (and the governor's decision) as already made.
+                // An unmetered infinite-cost point (fp32 on PJRT) is
+                // reported as infinite energy: its modeled cost is
+                // unbounded, so any load on it must breach any finite
+                // envelope — charging the metrics convention of 0.0
+                // would leave the governor blind at the most expensive
+                // point.
+                let observed = measured.unwrap_or(if gf_per_sample.is_finite() {
+                    batch_gf
+                } else {
+                    f64::INFINITY
+                });
+                on_energy(n as u64, observed, measured.is_some());
+                metrics.record_batch(name, &lats, batch_gf, measured);
+                let measured_each = measured.map(|m| m / n as f64);
                 for (i, r) in chunk.iter().enumerate() {
                     let _ = r.resp.send(Ok(Response {
                         output: out[i * ol..(i + 1) * ol].to_vec(),
                         point: name.to_string(),
                         latency: Duration::from_secs_f64(lats[i].0 * 1e-6),
                         giga_flips: if gf_per_sample.is_finite() { gf_per_sample } else { 0.0 },
+                        measured_gflips: measured_each,
                         tag: r.tag.clone(),
                     }));
                 }
@@ -892,7 +1137,64 @@ mod tests {
         assert_eq!(r.output, vec![6.0, 7.0]);
         assert_eq!(r.point, "rich");
         assert_eq!(r.tag, None);
+        // open-loop server: no governor, and mock engines meter nothing
+        assert!(c.governor().is_none());
+        assert_eq!(r.measured_gflips, None);
         srv.shutdown();
+    }
+
+    #[test]
+    fn envelope_governor_degrades_under_load_and_recovers_when_idle() {
+        // cheap = 0.1, rich = 0.9 GF/sample (modeled; mocks meter
+        // nothing, so the governor runs on the modeled fallback).
+        // Envelope 10 GF/s over 5 ms windows = 0.05 GF/window: a
+        // single rich request breaches, so sustained load must walk
+        // the served point down; an idle gap must climb back.
+        let srv = ServerBuilder::new()
+            .workers(1)
+            .max_batch(1)
+            .max_wait(Duration::from_micros(100))
+            .envelope(EnergyEnvelope::gflips_per_sec(10.0))
+            .governor_window(Duration::from_millis(5))
+            .governor_hysteresis(1)
+            .serve(Menu::shared(shared_points()))
+            .unwrap();
+        let c = srv.client();
+        // the governor normalized the (infinite) default budget to the
+        // most accurate point's exact cost
+        assert_eq!(c.budget(), 0.9);
+        assert!(c.governor().is_some());
+        // sustained load: the served point must degrade to "cheap"
+        let t0 = Instant::now();
+        let mut degraded = false;
+        while t0.elapsed() < Duration::from_secs(10) {
+            if c.infer(vec![0.0; 3]).unwrap().point == "cheap" {
+                degraded = true;
+                break;
+            }
+        }
+        assert!(degraded, "governor never stepped down under sustained load");
+        // idle gap, then two probes: the first closes the idle windows
+        // (climbing back), the second is served at the top again
+        std::thread::sleep(Duration::from_millis(60));
+        let _ = c.infer(vec![0.0; 3]).unwrap();
+        let r = c.infer(vec![0.0; 3]).unwrap();
+        assert_eq!(r.point, "rich", "idle period must climb back to the accurate point");
+        let g = c.governor().unwrap();
+        assert!(g.switches >= 2, "expected at least one down + one up step, got {}", g.switches);
+        assert!(g.windows >= 2);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn bad_envelope_is_startup_error() {
+        for bad in [f64::NAN, 0.0, -3.0, f64::INFINITY] {
+            let e = ServerBuilder::new()
+                .envelope(EnergyEnvelope::gflips_per_sec(bad))
+                .serve(Menu::shared(shared_points()))
+                .unwrap_err();
+            assert!(e.to_string().contains("envelope"), "{e}");
+        }
     }
 
     #[test]

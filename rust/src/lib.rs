@@ -42,11 +42,20 @@
 //!   traversal, and a worker pool over shared `Arc<ExecutionPlan>`
 //!   menus (or one worker owning `!Send` PJRT engines). Menus load
 //!   straight from a compiled artifact via
-//!   [`coordinator::Menu::from_artifact`].
+//!   [`coordinator::Menu::from_artifact`], and budget selection can
+//!   run closed-loop: [`coordinator::governor`] meters the energy
+//!   actually served against an [`coordinator::EnergyEnvelope`]
+//!   (Gflips/sec) and walks the budget along the frontier with
+//!   hysteresis, so sustained load degrades accuracy gracefully and
+//!   idle periods climb back.
 //! - [`experiments`] — one driver per table/figure of the paper.
 //!
 //! Power is reported in **bit flips**, exactly as in the paper
 //! (footnote 2: pJ/flip is platform specific; flip counts are not).
+//!
+//! See `rust/README.md` for a quickstart, the crate map and the
+//! paper-to-code table; `rust/EXPERIMENTS.md` documents measurement
+//! protocols and every artifact schema (`menu.json`, `BENCH_*.json`).
 
 pub mod bitflip;
 pub mod coordinator;

@@ -6,6 +6,8 @@
 //! pann-cli compile-menu --model NAME [--budget-bits 2,4,8] [--out menu.json] [--quick]
 //! pann-cli serve --model NAME [--menu menu.json] [--requests N] [--budget GFLIPS]
 //!               [--queue-depth D] [--deadline-ms MS]
+//!               [--envelope-gflips RATE] [--governor-window-ms MS]
+//!               [--calibrate-out menu.json (requires --menu)]
 //! pann-cli sweep --model NAME [--quick]
 //! pann-cli list
 //! ```
@@ -14,7 +16,9 @@
 //! carries no `clap`.)
 
 use anyhow::{bail, Context, Result};
-use pann::coordinator::{Client, EnginePoint, InferRequest, Menu, ServeError, ServerBuilder};
+use pann::coordinator::{
+    Client, EnergyEnvelope, EnginePoint, InferRequest, Menu, ServeError, ServerBuilder,
+};
 use pann::experiments::{self, Ctx};
 use pann::runtime::{ArtifactManifest, CpuRuntime};
 use std::path::PathBuf;
@@ -107,10 +111,52 @@ fn run() -> Result<()> {
                 Some(s) => Some(s.parse()?),
                 None => None,
             };
+            // closed-loop governor: a sustained-energy envelope in
+            // Gflips/sec, with an optional decision-window override
+            let governor = match args.flags.get("envelope-gflips") {
+                Some(s) => {
+                    let rate: f64 = s.parse().context("parse --envelope-gflips")?;
+                    let window_ms: u64 = args
+                        .flags
+                        .get("governor-window-ms")
+                        .map_or(Ok(100), |s| s.parse())
+                        .context("parse --governor-window-ms")?;
+                    if window_ms == 0 {
+                        bail!("--governor-window-ms must be at least 1");
+                    }
+                    Some(GovernorCli { rate, window_ms })
+                }
+                None => {
+                    if args.flags.contains_key("governor-window-ms") {
+                        eprintln!(
+                            "warning: --governor-window-ms requires --envelope-gflips \
+                             (no governor runs without an envelope); ignoring"
+                        );
+                    }
+                    None
+                }
+            };
+            let calibrate_out = args.flags.get("calibrate-out").cloned();
             if let Some(menu_path) = args.flags.get("menu") {
-                serve_menu(&ctx, &model, menu_path, n, budget, queue_depth, deadline_ms)
+                serve_menu(
+                    &ctx,
+                    &model,
+                    menu_path,
+                    n,
+                    budget,
+                    queue_depth,
+                    deadline_ms,
+                    governor,
+                    calibrate_out,
+                )
             } else {
-                serve(&ctx, &model, n, budget, queue_depth, deadline_ms)
+                if calibrate_out.is_some() {
+                    eprintln!(
+                        "warning: --calibrate-out requires --menu (nothing to calibrate \
+                         without a menu artifact); ignoring"
+                    );
+                }
+                serve(&ctx, &model, n, budget, queue_depth, deadline_ms, governor)
             }
         }
         "compile-menu" => {
@@ -141,6 +187,8 @@ fn run() -> Result<()> {
                  \x20                                 compile + Pareto-prune the operating-point menu\n\
                  \x20 serve --model M [--menu menu.json] [--requests N] [--budget G]\n\
                  \x20       [--queue-depth D] [--deadline-ms MS]\n\
+                 \x20       [--envelope-gflips RATE] [--governor-window-ms MS]\n\
+                 \x20       [--calibrate-out menu.json (requires --menu)]\n\
                  \x20 sweep --model M [--quick]       power-accuracy sweep (Fig. 1)\n"
             );
             Ok(())
@@ -168,6 +216,32 @@ fn power_report(bits: u32, acc_bits: u32) -> Result<()> {
     Ok(())
 }
 
+/// Closed-loop governor flags (`--envelope-gflips`,
+/// `--governor-window-ms`).
+struct GovernorCli {
+    rate: f64,
+    window_ms: u64,
+}
+
+impl GovernorCli {
+    /// Apply to a builder (no-op when the flags were absent).
+    fn configure(opt: &Option<GovernorCli>, mut b: ServerBuilder) -> ServerBuilder {
+        if let Some(g) = opt {
+            b = b
+                .envelope(EnergyEnvelope::gflips_per_sec(g.rate))
+                .governor_window(std::time::Duration::from_millis(g.window_ms));
+        }
+        b
+    }
+}
+
+/// Print the governor's end-of-run report, if one governed.
+fn print_governor(client: &Client) {
+    if let Some(g) = client.governor() {
+        print!("{}", g.report());
+    }
+}
+
 /// End-to-end serving demo over the AOT artifacts.
 fn serve(
     ctx: &Ctx,
@@ -176,6 +250,7 @@ fn serve(
     budget: f64,
     queue_depth: usize,
     deadline_ms: Option<u64>,
+    governor: Option<GovernorCli>,
 ) -> Result<()> {
     let hlo_dir = ctx.artifacts.join("hlo");
     let manifest = ArtifactManifest::load(&hlo_dir)
@@ -185,9 +260,11 @@ fn serve(
         bail!("no executables for model '{model}' in {}", hlo_dir.display());
     }
     let model_name = model.to_string();
-    let srv = ServerBuilder::new()
-        .queue_depth(queue_depth)
-        .budget_gflips(budget)
+    let builder = GovernorCli::configure(
+        &governor,
+        ServerBuilder::new().queue_depth(queue_depth).budget_gflips(budget),
+    );
+    let srv = builder
         .serve(Menu::local(move || {
             let rt = CpuRuntime::new()?;
             println!("PJRT platform: {}", rt.platform());
@@ -224,6 +301,7 @@ fn serve(
         println!("{expired} requests rejected past their {}ms deadline", deadline_ms.unwrap_or(0));
     }
     println!("{}", client.metrics().report());
+    print_governor(&client);
     srv.shutdown();
     Ok(())
 }
@@ -300,12 +378,17 @@ fn compile_menu_cmd(ctx: &Ctx, model_name: &str, bits: &[u32], out: &str) -> Res
 
 /// Serve a compiled menu artifact on the native worker pool
 /// (`pann-cli serve --menu menu.json`), sweeping the global budget
-/// across the frontier to demonstrate deployment-time traversal.
+/// across the frontier to demonstrate deployment-time traversal —
+/// or, with `--envelope-gflips`, letting the closed-loop governor
+/// own the budget while the replayed load runs.
 ///
 /// The model must be loaded exactly as it was for `compile-menu`
 /// (same `--model`, same `--quick`ness when falling back to the
 /// built-in reference models) — the artifact's fingerprint check
-/// rejects anything else.
+/// rejects anything else. With `--calibrate-out PATH`, the measured
+/// per-point Gflips/sample observed while serving are written back
+/// into the artifact as the `pann-menu/v2` calibration field.
+#[allow(clippy::too_many_arguments)]
 fn serve_menu(
     ctx: &Ctx,
     model: &str,
@@ -314,9 +397,11 @@ fn serve_menu(
     budget: f64,
     queue_depth: usize,
     deadline_ms: Option<u64>,
+    governor: Option<GovernorCli>,
+    calibrate_out: Option<String>,
 ) -> Result<()> {
     let (m, test) = ctx.load_model(model)?;
-    let artifact = pann::pann::MenuArtifact::load(std::path::Path::new(menu_path))?;
+    let mut artifact = pann::pann::MenuArtifact::load(std::path::Path::new(menu_path))?;
     println!(
         "menu {menu_path}: {} frontier points ({} candidates swept) for model '{}'",
         artifact.points.len(),
@@ -329,50 +414,83 @@ fn serve_menu(
     // read: the sweep below and the served menu cannot diverge)
     let menu = Menu::shared(artifact.shared_points(&m, Some(&calib), max_batch)?);
     let workers = pann::nn::eval::n_threads();
-    let srv = ServerBuilder::new()
-        .workers(workers)
-        .queue_depth(queue_depth)
-        .max_batch(max_batch)
-        .budget_gflips(budget)
-        .serve(menu)?;
+    let governed = governor.is_some();
+    let builder = GovernorCli::configure(
+        &governor,
+        ServerBuilder::new()
+            .workers(workers)
+            .queue_depth(queue_depth)
+            .max_batch(max_batch)
+            .budget_gflips(budget),
+    );
+    let srv = builder.serve(menu)?;
     let client = srv.client();
     let n = n_requests.min(test.len()).max(1);
-    println!(
-        "sweeping the global budget across the frontier ({workers} workers, {n} requests per point):"
-    );
-    let run_phase = |phase_budget: f64| -> Result<(String, f64, usize, usize)> {
-        client.set_budget(phase_budget);
+    let run_phase = |phase_budget: Option<f64>| -> Result<(String, f64, usize, usize)> {
+        if let Some(b) = phase_budget {
+            client.set_budget(b);
+        }
         let (correct, expired, served_by) = replay(&client, &test, n, deadline_ms)?;
         let served = n - expired;
         let acc = correct as f64 / served.max(1) as f64;
         Ok((served_by, acc, served, expired))
     };
-    for p in &artifact.points {
-        // a budget fractionally above the point's cost must land on it
-        let (served_by, acc, served, expired) = run_phase(p.gflips_per_sample * (1.0 + 1e-9))?;
+    if governed {
+        // the governor owns the budget cell: replay the load and let
+        // it pick the point, instead of sweeping budgets it would
+        // immediately overwrite
+        println!("closed-loop replay ({workers} workers, {n} requests, governor active):");
+        let (served_by, acc, served, expired) = run_phase(None)?;
         println!(
-            "  budget {:>12.6} GF -> point {:<18} test acc {acc:.3} ({served} served{})",
-            p.gflips_per_sample,
+            "  governed -> last point {:<18} test acc {acc:.3} ({served} served{})",
             served_by,
             if expired > 0 { format!(", {expired} expired") } else { String::new() }
         );
-        if served > 0 && served_by != p.name {
-            println!("    (warn: expected point {} to serve this budget)", p.name);
+    } else {
+        println!(
+            "sweeping the global budget across the frontier ({workers} workers, {n} requests per point):"
+        );
+        for p in &artifact.points {
+            // a budget fractionally above the point's cost must land on it
+            let (served_by, acc, served, expired) =
+                run_phase(Some(p.gflips_per_sample * (1.0 + 1e-9)))?;
+            println!(
+                "  budget {:>12.6} GF -> point {:<18} test acc {acc:.3} ({served} served{})",
+                p.gflips_per_sample,
+                served_by,
+                if expired > 0 { format!(", {expired} expired") } else { String::new() }
+            );
+            if served > 0 && served_by != p.name {
+                println!("    (warn: expected point {} to serve this budget)", p.name);
+            }
+        }
+        // finish at the caller's --budget so the flag is honored (the
+        // frontier sweep above deliberately overrides the global budget)
+        if budget.is_finite() {
+            let (served_by, acc, served, expired) = run_phase(Some(budget))?;
+            println!(
+                "  --budget {:>10.6} GF -> point {:<18} test acc {acc:.3} ({served} served{})",
+                budget,
+                served_by,
+                if expired > 0 { format!(", {expired} expired") } else { String::new() }
+            );
         }
     }
-    // finish at the caller's --budget so the flag is honored (the
-    // frontier sweep above deliberately overrides the global budget)
-    if budget.is_finite() {
-        let (served_by, acc, served, expired) = run_phase(budget)?;
-        println!(
-            "  --budget {:>10.6} GF -> point {:<18} test acc {acc:.3} ({served} served{})",
-            budget,
-            served_by,
-            if expired > 0 { format!(", {expired} expired") } else { String::new() }
-        );
-    }
-    println!("{}", client.metrics().report());
+    let snapshot = client.metrics();
+    println!("{}", snapshot.report());
+    print_governor(&client);
     srv.shutdown();
+    // measured-cost calibration write-back: the pann-menu/v2 loop
+    if let Some(out) = calibrate_out {
+        let measured: Vec<(&str, f64)> = snapshot
+            .per_point_measured
+            .iter()
+            .filter_map(|(name, gf)| gf.map(|g| (name.as_str(), g)))
+            .collect();
+        let updated = artifact.apply_calibration(measured);
+        artifact.save(std::path::Path::new(&out))?;
+        println!("calibrated {updated}/{} menu points -> {out}", artifact.points.len());
+    }
     Ok(())
 }
 

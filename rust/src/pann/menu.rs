@@ -40,9 +40,20 @@ use anyhow::{Context, Result};
 use std::path::Path;
 use std::sync::Arc;
 
-/// Version tag of the `menu.json` artifact. Bump on any field change;
-/// the loader rejects other schemas instead of misreading them.
-pub const MENU_SCHEMA: &str = "pann-menu/v1";
+/// Version tag written to new `menu.json` artifacts. `v2` adds one
+/// *additive, optional* per-point field over `v1`:
+/// `measured_gflips_per_sample` — the energy the serving stack
+/// actually metered for the point (fed back via
+/// [`MenuArtifact::apply_calibration`], e.g. from
+/// `pann-cli serve --menu … --calibrate-out`), as opposed to the
+/// compile-time `gflips_per_sample` the policy ranks by. The loader
+/// accepts both versions; unknown schemas are rejected instead of
+/// misread.
+pub const MENU_SCHEMA: &str = "pann-menu/v2";
+
+/// The previous schema, still accepted on read (its points simply
+/// carry no calibration).
+pub const MENU_SCHEMA_V1: &str = "pann-menu/v1";
 
 /// One evaluated candidate from an equal-power sweep.
 pub struct SweepPoint {
@@ -148,6 +159,15 @@ pub struct MenuPointSpec {
     pub achieved_adds_per_element: f64,
     /// Storage bits per weight code (`b_R`).
     pub weight_code_bits: u32,
+    /// Serving-side measured-cost calibration (`pann-menu/v2`,
+    /// additive): Gflips/sample the deployed engines actually metered
+    /// for this point, written back via
+    /// [`MenuArtifact::apply_calibration`]. Informational — the
+    /// serving policy keeps ranking by the compile-time
+    /// `gflips_per_sample`, whose strict monotonicity the loader
+    /// enforces; a calibration pass must not be able to reorder or
+    /// invalidate the frontier.
+    pub measured_gflips_per_sample: Option<f64>,
 }
 
 /// The versioned, serializable power–accuracy frontier of one model.
@@ -170,6 +190,27 @@ pub struct MenuArtifact {
 /// Compile the full operating-point menu for `model`: one equal-power
 /// sweep per entry of `budget_bits` (the curve matching a `b`-bit
 /// unsigned MAC), Pareto-pruned to the frontier.
+///
+/// ```
+/// use pann::data::{synth, Dataset};
+/// use pann::nn::Model;
+/// use pann::pann::compile_menu;
+/// use pann::quant::ActQuantMethod;
+///
+/// let mut model = Model::reference_cnn(7);
+/// let ds = Dataset::from_synth(synth::digits(48, 9));
+/// let stats = pann::nn::eval::batch_tensor(&ds, 0, 24);
+/// model.record_act_stats(&stats)?;
+///
+/// let menu = compile_menu(&model, &[2], ActQuantMethod::BnStats, None, &ds.take(32), 2..=4)?;
+/// assert!(!menu.points.is_empty());
+/// // the frontier is strictly monotone: paying more energy must buy accuracy
+/// for w in menu.points.windows(2) {
+///     assert!(w[1].gflips_per_sample > w[0].gflips_per_sample);
+///     assert!(w[1].val_acc > w[0].val_acc);
+/// }
+/// # Ok::<(), anyhow::Error>(())
+/// ```
 ///
 /// `val` drives the accuracy measurement; `calib` feeds the quantizer
 /// methods that need calibration inputs (ACIQ, Recon). The result
@@ -225,6 +266,7 @@ pub fn compile_menu(
             quant_method: act_method,
             achieved_adds_per_element: sp.achieved_adds_per_element,
             weight_code_bits: sp.weight_code_bits,
+            measured_gflips_per_sample: None,
         })
         .collect();
     Ok(MenuArtifact {
@@ -240,6 +282,34 @@ impl MenuArtifact {
     /// Candidates dropped by the Pareto pruning.
     pub fn pruned(&self) -> usize {
         self.swept - self.points.len()
+    }
+
+    /// Store serving-side measured costs back into the artifact (the
+    /// `pann-menu/v2` calibration loop): each `(point name,
+    /// Gflips/sample)` pair updates the matching point's
+    /// `measured_gflips_per_sample`. Non-finite or non-positive
+    /// measurements and unknown names are skipped — a calibration
+    /// pass must never corrupt a menu. Returns how many points were
+    /// updated; persist with [`MenuArtifact::save`].
+    ///
+    /// Sources: [`crate::coordinator::MetricsSnapshot::per_point_measured`]
+    /// or the governor ledger
+    /// ([`crate::coordinator::GovernorSnapshot::measured_gflips_per_sample`]).
+    pub fn apply_calibration<'a>(
+        &mut self,
+        measured: impl IntoIterator<Item = (&'a str, f64)>,
+    ) -> usize {
+        let mut updated = 0;
+        for (name, gf) in measured {
+            if !(gf.is_finite() && gf > 0.0) {
+                continue;
+            }
+            if let Some(p) = self.points.iter_mut().find(|p| p.name == name) {
+                p.measured_gflips_per_sample = Some(gf);
+                updated += 1;
+            }
+        }
+        updated
     }
 
     /// One human-readable line per frontier point, cheapest first —
@@ -265,7 +335,7 @@ impl MenuArtifact {
             .points
             .iter()
             .map(|p| {
-                Json::obj(vec![
+                let mut fields = vec![
                     ("name", Json::from(p.name.as_str())),
                     ("bx_tilde", Json::from(p.bx_tilde as usize)),
                     ("r", Json::Num(p.r)),
@@ -277,7 +347,13 @@ impl MenuArtifact {
                         Json::Num(p.achieved_adds_per_element),
                     ),
                     ("weight_code_bits", Json::from(p.weight_code_bits as usize)),
-                ])
+                ];
+                // the v2 additive calibration field, present only once
+                // a serving pass wrote it back
+                if let Some(m) = p.measured_gflips_per_sample {
+                    fields.push(("measured_gflips_per_sample", Json::Num(m)));
+                }
+                Json::obj(fields)
             })
             .collect();
         Json::obj(vec![
@@ -294,12 +370,14 @@ impl MenuArtifact {
         ])
     }
 
-    /// Parse the `menu.json` form, rejecting unknown schemas.
+    /// Parse the `menu.json` form, rejecting unknown schemas
+    /// (`pann-menu/v1` and `v2` are both readable; `v1` points simply
+    /// carry no measured-cost calibration).
     pub fn from_json(j: &Json) -> Result<MenuArtifact> {
         let schema = j.req("schema")?.as_str().context("schema must be a string")?;
         anyhow::ensure!(
-            schema == MENU_SCHEMA,
-            "unsupported menu schema '{schema}' (this build reads {MENU_SCHEMA})"
+            schema == MENU_SCHEMA || schema == MENU_SCHEMA_V1,
+            "unsupported menu schema '{schema}' (this build reads {MENU_SCHEMA_V1} and {MENU_SCHEMA})"
         );
         let fp_hex = j
             .req("model_fingerprint")?
@@ -338,6 +416,21 @@ impl MenuArtifact {
                     .req("weight_code_bits")?
                     .as_usize()
                     .context("weight_code_bits")? as u32,
+                measured_gflips_per_sample: match pj.get("measured_gflips_per_sample") {
+                    Some(v) => {
+                        let m = v.as_f64().context("measured_gflips_per_sample")?;
+                        // same corruption bar as apply_calibration: a
+                        // hand-edited artifact must not smuggle in a
+                        // calibration the API refuses to write
+                        anyhow::ensure!(
+                            m.is_finite() && m > 0.0,
+                            "point {i}: measured_gflips_per_sample must be finite and \
+                             positive, got {m}"
+                        );
+                        Some(m)
+                    }
+                    None => None,
+                },
             });
         }
         anyhow::ensure!(!points.is_empty(), "menu artifact has no points");
@@ -532,6 +625,41 @@ mod tests {
     }
 
     #[test]
+    fn calibration_roundtrips_and_v1_still_loads() {
+        let (model, ds) = setup();
+        let mut menu =
+            compile_menu(&model, &[2], ActQuantMethod::BnStats, None, &ds, 2..=4).unwrap();
+        assert!(menu.points.iter().all(|p| p.measured_gflips_per_sample.is_none()));
+        // a v1-tagged artifact (no calibration fields) still loads
+        let mut v1 = menu.to_json();
+        if let Json::Obj(m) = &mut v1 {
+            m.insert("schema".into(), Json::from(MENU_SCHEMA_V1));
+        }
+        assert_eq!(MenuArtifact::from_json(&v1).unwrap(), menu);
+        // apply a measured cost to the first point; bogus entries are
+        // skipped without corrupting the artifact
+        let first = menu.points[0].name.clone();
+        let n = menu.apply_calibration([
+            (first.as_str(), 0.123),
+            ("no-such-point", 1.0),
+            (first.as_str(), f64::NAN),
+            (first.as_str(), -1.0),
+        ]);
+        assert_eq!(n, 1);
+        assert_eq!(menu.points[0].measured_gflips_per_sample, Some(0.123));
+        // the calibration survives the v2 JSON round trip
+        let back = MenuArtifact::from_json(&menu.to_json()).unwrap();
+        assert_eq!(back, menu);
+        assert_eq!(back.points[0].measured_gflips_per_sample, Some(0.123));
+        assert!(menu.to_json().to_string().contains("pann-menu/v2"));
+        // a hand-edited artifact cannot smuggle in a calibration the
+        // API refuses to write (same bar as apply_calibration)
+        menu.points[0].measured_gflips_per_sample = Some(-1.0);
+        let e = MenuArtifact::from_json(&menu.to_json()).unwrap_err();
+        assert!(e.to_string().contains("measured_gflips_per_sample"), "{e}");
+    }
+
+    #[test]
     fn artifact_json_roundtrip() {
         let (model, ds) = setup();
         let menu =
@@ -573,6 +701,7 @@ mod tests {
             quant_method: ActQuantMethod::BnStats,
             achieved_adds_per_element: 2.0,
             weight_code_bits: 3,
+            measured_gflips_per_sample: None,
         };
         let art = MenuArtifact {
             model_name: "m".into(),

@@ -524,3 +524,169 @@ fn qat_results_present_and_ordered() {
         assert!(p > a, "PANN {p} should beat AdderNet {a} (paper Table 4)");
     }
 }
+
+#[test]
+fn governor_load_ramp_walks_frontier_down_and_back() {
+    // The closed-loop acceptance: with an energy envelope set, a
+    // synthetic load ramp must walk the served point *down* the
+    // frontier (sustained load would otherwise blow the envelope),
+    // and an idle period must climb back to the most accurate point.
+    // Without an envelope, the very same menu serves open-loop
+    // exactly as in PR 3: the budget cell never moves on its own.
+    use pann::coordinator::{
+        BatchEngine, EnergyEnvelope, InferRequest, Menu, ServerBuilder, SharedPoint,
+    };
+    use pann::nn::Scratch;
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+
+    /// Constant-output engine: the ramp needs controlled costs, not a
+    /// real network (those are covered by the serve_menu tests).
+    struct FixedEngine;
+    impl BatchEngine for FixedEngine {
+        fn max_batch(&self) -> usize {
+            8
+        }
+        fn sample_len(&self) -> usize {
+            3
+        }
+        fn infer_batch(
+            &self,
+            _x: &[f32],
+            n: usize,
+            _scratch: &mut Scratch,
+        ) -> anyhow::Result<Vec<f32>> {
+            Ok(vec![0.0; n * 2])
+        }
+    }
+
+    let points = |costs: &[(&str, f64)]| -> Vec<SharedPoint> {
+        costs
+            .iter()
+            .map(|&(name, gf)| SharedPoint {
+                name: name.into(),
+                giga_flips_per_sample: gf,
+                engine: Arc::new(FixedEngine),
+            })
+            .collect()
+    };
+    let frontier = [("cheap", 0.1), ("mid", 1.0), ("rich", 10.0)];
+
+    // open-loop control: identical menu, no envelope -> no governor,
+    // and the served point never moves without a client budget change
+    let open = ServerBuilder::new()
+        .workers(1)
+        .serve(Menu::shared(points(&frontier)))
+        .unwrap();
+    let oc = open.client();
+    assert!(oc.governor().is_none());
+    for _ in 0..20 {
+        assert_eq!(oc.infer(vec![0.0; 3]).unwrap().point, "rich");
+    }
+    assert_eq!(oc.budget(), f64::INFINITY, "open-loop budget cell must not move");
+    open.shutdown();
+
+    // closed loop: envelope of 60 GF/s over 10 ms windows = 0.6
+    // GF/window. A single "rich" request (10 GF) breaches; "mid"
+    // breaches under flood; "cheap" fits.
+    let srv = ServerBuilder::new()
+        .workers(1)
+        .max_batch(4)
+        .max_wait(Duration::from_micros(200))
+        .envelope(EnergyEnvelope::gflips_per_sec(60.0))
+        .governor_window(Duration::from_millis(10))
+        .governor_hysteresis(1)
+        .serve(Menu::shared(points(&frontier)))
+        .unwrap();
+    let c = srv.client();
+    assert!(c.governor().is_some());
+    // the governor normalizes the infinite default budget onto the top
+    // frontier point
+    assert_eq!(c.budget(), 10.0);
+
+    // ramp up: flood until the served point has walked to the floor,
+    // passing through at least one intermediate observation
+    let t0 = Instant::now();
+    let mut seen = Vec::<String>::new();
+    let mut reached_floor = false;
+    while t0.elapsed() < Duration::from_secs(20) {
+        let p = c.infer(vec![0.0; 3]).unwrap().point;
+        if seen.last() != Some(&p) {
+            seen.push(p.clone());
+        }
+        if p == "cheap" {
+            reached_floor = true;
+            break;
+        }
+    }
+    assert!(reached_floor, "sustained load never walked the frontier down: {seen:?}");
+    assert_eq!(seen.first().map(String::as_str), Some("rich"));
+    assert!(
+        seen.contains(&"mid".to_string()),
+        "degradation must step through the frontier, not jump: {seen:?}"
+    );
+
+    // ramp down: an idle period must climb back to the most accurate
+    // point — the first probe closes the idle windows (and is still
+    // served at the floor), the next one sees the recovered budget
+    std::thread::sleep(Duration::from_millis(120));
+    let _ = c.infer(vec![0.0; 3]).unwrap();
+    let recovered = c.infer(vec![0.0; 3]).unwrap().point;
+    assert_eq!(recovered, "rich", "idle period must recover full accuracy");
+
+    let g = c.governor().unwrap();
+    assert!(g.switches >= 3, "down 2 + up 2 steps expected, saw {}", g.switches);
+    assert!(g.windows > 0);
+    let resid_total: u64 = g.residency.iter().map(|(_, w)| w).sum();
+    assert_eq!(resid_total, g.windows, "every closed window belongs to one point");
+    // the synthetic engines meter nothing: the calibration ledger must
+    // say so rather than invent numbers from the modeled fallback
+    assert!(g.measured_gflips_per_sample.iter().all(|(_, m)| m.is_none()));
+    let m = c.metrics();
+    assert!(m.point_switches >= 3);
+    srv.shutdown();
+}
+
+#[test]
+fn governed_real_menu_serves_with_measured_energy() {
+    // Closed loop over a *real* compiled menu: the plan-backed engines
+    // meter actual flips, so responses carry measured energy and the
+    // governor's ledger fills with measured (not modeled) costs.
+    use pann::coordinator::{EnergyEnvelope, Menu, ServerBuilder};
+    use pann::pann::compile_menu;
+    let mut model = Model::reference_cnn(41);
+    let ds = Dataset::from_synth(pann::data::synth::digits(64, 42));
+    let stats = batch_tensor(&ds, 0, 32);
+    model.record_act_stats(&stats).unwrap();
+    let art = compile_menu(&model, &[2, 8], ActQuantMethod::BnStats, None, &ds.take(32), 2..=6)
+        .unwrap();
+    let srv = ServerBuilder::new()
+        .workers(2)
+        .max_batch(4)
+        .envelope(EnergyEnvelope::gflips_per_sec(1e6)) // generous: no stepping needed
+        .serve(Menu::shared(art.shared_points(&model, None, 4).unwrap()))
+        .unwrap();
+    let client = srv.client();
+    for i in 0..16 {
+        let r = client.infer(ds.sample(i).to_vec()).unwrap();
+        let measured = r.measured_gflips.expect("plan engines meter flips");
+        assert!(measured > 0.0);
+    }
+    let g = client.governor().unwrap();
+    // the served (top) point has a measured cost in the ledger
+    let top = g.measured_gflips_per_sample.last().unwrap();
+    assert!(top.1.is_some(), "ledger must hold measured GF/sample for the served point");
+    assert!(top.1.unwrap() > 0.0);
+    let m = client.metrics();
+    assert!(m.measured_giga_flips > 0.0);
+    // measured and modeled agree on the compiled menu (the artifact's
+    // costs *are* metered costs), so the delta stays small relative
+    // to the total
+    assert!(
+        m.measured_minus_modeled_gflips.abs() <= m.measured_giga_flips * 0.05,
+        "measured {} vs delta {}",
+        m.measured_giga_flips,
+        m.measured_minus_modeled_gflips
+    );
+    srv.shutdown();
+}
