@@ -1,0 +1,188 @@
+//! Fleet serving benchmark: two compiled menus registered on one
+//! worker pool under one energy envelope, driven by a *skewed*
+//! two-model load — a flooding "hot" model and a paced "cold" one —
+//! and measured for exactly the fleet claims: per-model throughput,
+//! per-model frontier residency, and envelope tracking error.
+//!
+//! The acceptance shape: the hot model must end the flood on a cheaper
+//! point of *its* frontier, while the cold model keeps serving its most
+//! accurate point throughout (demand-weighted max-min arbitration — see
+//! `coordinator/registry.rs`).
+//!
+//! Emits `BENCH_fleet.json` (schema `bench-fleet/v1`): envelope +
+//! window, then one record per model with requests, achieved req/s,
+//! the point serving at the end, governor residency/switches/tracking
+//! error, and the arbiter's final demand estimate and envelope share.
+
+use pann::coordinator::{EnergyEnvelope, InferRequest, Menu, ServerBuilder};
+use pann::data::{synth, Dataset};
+use pann::nn::eval::batch_tensor;
+use pann::nn::Model;
+use pann::pann::compile_menu;
+use pann::quant::ActQuantMethod;
+use pann::util::bench::write_json;
+use pann::util::Json;
+use std::time::{Duration, Instant};
+
+fn compiled_menu(seed: u64) -> (Model, Dataset, pann::pann::MenuArtifact) {
+    let mut model = Model::reference_cnn(seed);
+    let ds = Dataset::from_synth(synth::digits(192, seed + 1));
+    let stats = batch_tensor(&ds, 0, 64);
+    model.record_act_stats(&stats).expect("record stats");
+    let menu = compile_menu(&model, &[2, 8], ActQuantMethod::BnStats, None, &ds.take(48), 2..=8)
+        .expect("compile menu");
+    (model, ds, menu)
+}
+
+fn main() {
+    let (hot_model, hot_ds, hot_menu) = compiled_menu(3);
+    let (cold_model, cold_ds, cold_menu) = compiled_menu(23);
+    let hot_rich = hot_menu.points.last().expect("hot menu").gflips_per_sample;
+    let cold_rich = cold_menu.points.last().expect("cold menu").gflips_per_sample;
+    println!(
+        "hot menu: {} points (rich {hot_rich:.6} GF/sample); cold menu: {} points (rich {cold_rich:.6} GF/sample)",
+        hot_menu.points.len(),
+        cold_menu.points.len()
+    );
+
+    // Cold is paced at ~40 req/s; the arbiter prices its need at
+    // rate × rich × DEMAND_HEADROOM, so the envelope must leave the
+    // *equal* max-min share above that need (×2.2 margin) for cold to
+    // be satisfied in full — plus ~25 rich-requests/sec for hot, which
+    // the flood exceeds by orders of magnitude and must breach.
+    let cold_pace = Duration::from_millis(25);
+    let envelope_rate =
+        cold_rich * 40.0 * pann::coordinator::registry::DEMAND_HEADROOM * 2.2 + hot_rich * 25.0;
+    let window = Duration::from_millis(20);
+    let srv = ServerBuilder::new()
+        .workers(2)
+        .max_batch(8)
+        .queue_depth(1024)
+        .envelope(EnergyEnvelope::gflips_per_sec(envelope_rate))
+        .governor_window(window)
+        .governor_hysteresis(1)
+        .register(
+            "hot",
+            Menu::shared(hot_menu.shared_points(&hot_model, None, 8).expect("hot points")),
+        )
+        .register(
+            "cold",
+            Menu::shared(cold_menu.shared_points(&cold_model, None, 8).expect("cold points")),
+        )
+        .serve_fleet()
+        .expect("serve fleet");
+    let client = srv.client();
+
+    // Skewed load, concurrently: hot floods 600 requests, cold paces 40.
+    let (hot_stats, cold_stats) = std::thread::scope(|s| {
+        let hc = client.clone();
+        let hds = &hot_ds;
+        let hot = s.spawn(move || {
+            let t0 = Instant::now();
+            let n = 600usize;
+            let mut last = String::new();
+            for i in 0..n {
+                let r = hc
+                    .submit(InferRequest::new(hds.sample(i % hds.len()).to_vec()).model("hot"))
+                    .expect("submit hot")
+                    .wait()
+                    .expect("hot response");
+                last = r.point;
+            }
+            (n, t0.elapsed().as_secs_f64(), last)
+        });
+        let cc = client.clone();
+        let cds = &cold_ds;
+        let cold = s.spawn(move || {
+            let t0 = Instant::now();
+            let n = 40usize;
+            let mut last = String::new();
+            for i in 0..n {
+                let r = cc
+                    .submit(InferRequest::new(cds.sample(i % cds.len()).to_vec()).model("cold"))
+                    .expect("submit cold")
+                    .wait()
+                    .expect("cold response");
+                last = r.point;
+                std::thread::sleep(cold_pace);
+            }
+            (n, t0.elapsed().as_secs_f64(), last)
+        });
+        (hot.join().expect("hot thread"), cold.join().expect("cold thread"))
+    });
+
+    let fleet = client.fleet().expect("fleet snapshot");
+    print!("{}", fleet.report());
+    let metrics = client.metrics();
+    println!("{} point switches (metrics view)", metrics.point_switches);
+
+    let model_record = |name: &str, stats: (usize, f64, String)| {
+        let (n, secs, end_point) = stats;
+        let status = fleet
+            .models
+            .iter()
+            .find(|m| m.name == name)
+            .expect("model in fleet snapshot");
+        let gov = status.governor.as_ref().expect("governed model");
+        let residency: Vec<Json> = gov
+            .residency
+            .iter()
+            .map(|(point, windows)| {
+                Json::obj(vec![
+                    ("point", Json::from(point.as_str())),
+                    ("windows", Json::from(*windows as usize)),
+                ])
+            })
+            .collect();
+        println!(
+            "model {name:<5} {n:>4} reqs in {secs:.2}s = {:>7.0} req/s, ends on {end_point} \
+             (share {:.4} GF/s, demand {:.1}/s)",
+            n as f64 / secs.max(1e-9),
+            status.envelope_share.unwrap_or(f64::NAN),
+            status.demand_rate.unwrap_or(f64::NAN),
+        );
+        Json::obj(vec![
+            ("model", Json::from(name)),
+            ("requests", Json::from(n)),
+            ("secs", Json::Num(secs)),
+            ("rps", Json::Num(n as f64 / secs.max(1e-9))),
+            ("end_point", Json::from(end_point.as_str())),
+            ("menu_points", Json::from(status.points)),
+            ("residency", Json::Arr(residency)),
+            ("switches", Json::from(gov.switches as usize)),
+            ("windows", Json::from(gov.windows as usize)),
+            (
+                "mean_tracking_error",
+                gov.mean_tracking_error.map_or(Json::Null, Json::Num),
+            ),
+            (
+                "envelope_share_gflips_per_sec",
+                status.envelope_share.map_or(Json::Null, Json::Num),
+            ),
+            (
+                "demand_rate_samples_per_sec",
+                status.demand_rate.map_or(Json::Null, Json::Num),
+            ),
+        ])
+    };
+    let doc = Json::obj(vec![
+        ("schema", Json::from("bench-fleet/v1")),
+        ("envelope_gflips_per_sec", Json::Num(envelope_rate)),
+        ("window_ms", Json::Num(window.as_secs_f64() * 1e3)),
+        ("hysteresis", Json::from(1usize)),
+        (
+            "models",
+            Json::Arr(vec![
+                model_record("hot", hot_stats),
+                model_record("cold", cold_stats),
+            ]),
+        ),
+        (
+            "measured_minus_modeled_gflips",
+            Json::Num(metrics.measured_minus_modeled_gflips),
+        ),
+    ]);
+    write_json("BENCH_fleet.json", &doc).expect("write BENCH_fleet.json");
+    println!("wrote BENCH_fleet.json");
+    srv.shutdown();
+}

@@ -18,6 +18,7 @@ pub struct AddToggles {
 }
 
 impl AddToggles {
+    /// Total toggles of the addition.
     pub fn total(&self) -> u64 {
         self.inputs + self.carries + self.sum
     }
@@ -40,6 +41,7 @@ impl RippleAdder {
         RippleAdder { width, prev_a: 0, prev_b: 0, prev_sum: 0, prev_carry: 0 }
     }
 
+    /// Operand/sum bit width.
     pub fn width(&self) -> u32 {
         self.width
     }

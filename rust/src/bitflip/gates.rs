@@ -149,6 +149,7 @@ pub struct AdderCircuit {
 }
 
 impl AdderCircuit {
+    /// Build the netlist of a `width`-bit ripple-carry adder.
     pub fn new(width: u32) -> Self {
         let mut net = Netlist::new();
         let a: Vec<u32> = (0..width).map(|_| net.input()).collect();
@@ -158,6 +159,7 @@ impl AdderCircuit {
         AdderCircuit { net, a, b, sum, prev_a: 0, prev_b: 0 }
     }
 
+    /// Number of gates in the synthesized netlist.
     pub fn gate_count(&self) -> usize {
         self.net.gate_count()
     }
@@ -230,6 +232,7 @@ impl MultCircuit {
         MultCircuit::new(2 * b, 2 * b)
     }
 
+    /// Number of gates in the synthesized netlist.
     pub fn gate_count(&self) -> usize {
         self.net.gate_count()
     }

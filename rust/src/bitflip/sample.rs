@@ -13,9 +13,13 @@ use crate::util::Rng;
 /// A quantized input distribution.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Dist {
+    /// Uniform over the full signed `b`-bit range.
     UniformSigned(u32),
+    /// Uniform over half the unsigned `b`-bit range (App. A.4).
     UniformUnsigned(u32),
+    /// Normalized/rounded N(0,1), signed.
     GaussianSigned(u32),
+    /// Normalized/rounded |N(0,1)|, unsigned.
     GaussianUnsigned(u32),
 }
 
@@ -30,6 +34,7 @@ impl Dist {
         }
     }
 
+    /// Whether the distribution produces negative values.
     pub fn is_signed(&self) -> bool {
         matches!(self, Dist::UniformSigned(_) | Dist::GaussianSigned(_))
     }
@@ -77,10 +82,12 @@ impl Sampler {
         v
     }
 
+    /// Number of pre-generated samples in the buffer.
     pub fn len(&self) -> usize {
         self.vals.len()
     }
 
+    /// Whether the buffer is empty.
     pub fn is_empty(&self) -> bool {
         self.vals.is_empty()
     }

@@ -13,7 +13,11 @@
 //! or `PowerPolicy` under `min(global budget, request cap)`), then
 //! tops the batch up — across all lanes, highest priority first —
 //! with requests that map to the *same* point, waiting at most
-//! `max_wait` (the standard batching/tail-latency trade-off).
+//! `max_wait` (the standard batching/tail-latency trade-off). On a
+//! fleet server ([`super::registry`]) the classifier returns indices
+//! in a *global* point space where every registered model owns a
+//! disjoint range, so batches are point-coherent **per model** by
+//! construction — the queue itself needs no model awareness.
 //!
 //! Rejections are delivered here, typed, without executing: requests
 //! whose deadline has already passed get [`ServeError::DeadlineExceeded`]
@@ -37,6 +41,12 @@ use std::time::{Duration, Instant};
 /// One admitted request waiting for a worker.
 pub(crate) struct Pending {
     pub input: Vec<f32>,
+    /// Registry index of the model this request runs on (0 on a
+    /// single-model server; resolved from [`InferRequest::model`] at
+    /// admission so the hot path never does a name lookup).
+    ///
+    /// [`InferRequest::model`]: super::request::InferRequest::model
+    pub model: usize,
     pub submitted: Instant,
     /// Absolute start-by deadline.
     pub deadline: Option<Instant>,
@@ -288,6 +298,7 @@ mod tests {
         (
             Pending {
                 input: vec![v],
+                model: 0,
                 submitted: Instant::now(),
                 deadline: None,
                 priority,

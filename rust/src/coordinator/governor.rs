@@ -97,6 +97,7 @@ impl EnergyEnvelope {
 /// Governor tuning knobs (see [`super::server::ServerBuilder::envelope`]).
 #[derive(Clone, Copy, Debug)]
 pub struct GovernorConfig {
+    /// Sustained-energy target the governor defends.
     pub envelope: EnergyEnvelope,
     /// Ledger window length; decisions happen at window boundaries.
     pub window: Duration,
@@ -110,8 +111,11 @@ pub struct GovernorConfig {
 }
 
 impl GovernorConfig {
+    /// Default decision-window length (100 ms).
     pub const DEFAULT_WINDOW: Duration = Duration::from_millis(100);
+    /// Default decision horizon, in windows.
     pub const DEFAULT_HYSTERESIS: u32 = 2;
+    /// Default number of closed windows kept in the measured-cost ledger.
     pub const DEFAULT_LEDGER_WINDOWS: usize = 64;
 
     /// Defaults: 100 ms windows, hysteresis 2, 64-window ledger.
@@ -208,8 +212,12 @@ pub struct Governor {
     names: Vec<String>,
     /// Energy cost per sample of each point, ascending.
     costs: Vec<f64>,
-    /// Energy target per window, Giga bit flips.
-    target_per_window: f64,
+    /// Energy target per window (Giga bit flips), stored as `f64` bits
+    /// so a fleet arbiter ([`super::registry`]) can re-split a shared
+    /// envelope across models while windows are closing. On a
+    /// single-model server nothing ever rewrites it, so the value is
+    /// exactly the constructor's `envelope × window`.
+    target_bits: AtomicU64,
     /// The served-budget cell shared with policy classification.
     budget_bits: Arc<AtomicU64>,
     state: Mutex<GovState>,
@@ -226,6 +234,7 @@ pub struct GovernorSnapshot {
     pub switches: u64,
     /// Closed decision windows so far.
     pub windows: u64,
+    /// Decision-window length.
     pub window: Duration,
     /// Envelope target per window, Giga bit flips.
     pub target_gflips_per_window: f64,
@@ -306,7 +315,7 @@ impl Governor {
             cfg,
             names,
             costs,
-            target_per_window,
+            target_bits: AtomicU64::new(target_per_window.to_bits()),
             budget_bits,
             state: Mutex::new(GovState::empty(now)),
         };
@@ -338,6 +347,34 @@ impl Governor {
     /// Number of frontier points governed.
     pub fn n_points(&self) -> usize {
         self.costs.len()
+    }
+
+    /// The current energy target per window, Giga bit flips.
+    fn target_per_window(&self) -> f64 {
+        f64::from_bits(self.target_bits.load(Ordering::Relaxed))
+    }
+
+    /// Re-target the envelope this governor defends (Gflips/sec) —
+    /// the fleet-arbitration hook ([`super::registry::ModelRegistry`]):
+    /// when several models share one physical envelope, each model's
+    /// governor defends its currently allocated *share*, and the
+    /// arbiter moves the shares as observed demand shifts. Windows
+    /// already closed keep the decisions they made; the new target
+    /// applies from the next window close onward.
+    ///
+    /// Non-finite, NaN or non-positive rates are clamped to a tiny
+    /// positive floor rather than rejected: a zero target would make
+    /// every loaded window a breach *and* stop idle recovery-climb
+    /// projections from ever fitting, wedging the model at the floor
+    /// even after the demand that squeezed it out disappears.
+    pub fn set_envelope_rate(&self, gflips_per_sec: f64) {
+        let rate = if gflips_per_sec.is_finite() && gflips_per_sec > 0.0 {
+            gflips_per_sec
+        } else {
+            f64::MIN_POSITIVE
+        };
+        let target = rate * self.cfg.window.as_secs_f64();
+        self.target_bits.store(target.to_bits(), Ordering::Relaxed);
     }
 
     /// Report one executed chunk: `samples` samples served on frontier
@@ -414,7 +451,7 @@ impl Governor {
             switches: s.switches,
             windows: s.windows,
             window: self.cfg.window,
-            target_gflips_per_window: self.target_per_window,
+            target_gflips_per_window: self.target_per_window(),
             residency: self
                 .names
                 .iter()
@@ -488,7 +525,7 @@ impl Governor {
         // "step down" from a stale higher level onto a budget larger
         // than the manual one.
         s.level = self.level_of(f64::from_bits(self.budget_bits.load(Ordering::Relaxed)));
-        let target = self.target_per_window;
+        let target = self.target_per_window();
         s.windows += 1;
         s.residency[s.level] += 1;
         // infinite observed energy (an unbounded-cost point served
@@ -887,6 +924,42 @@ mod tests {
         g.batch_finished(t_probe);
         assert_eq!(g.snapshot().level, 1, "parked-worker idle must still recover");
         assert_eq!(budget_of(&budget), 4.0);
+    }
+
+    #[test]
+    fn retargeted_envelope_applies_from_next_window_close() {
+        // Fleet arbitration rewrites the defended rate mid-flight: a
+        // load that fit the original envelope must breach after the
+        // share is cut, and a widened share must let the same load
+        // climb back. Invalid rates clamp to a positive floor instead
+        // of wedging the governor.
+        let t0 = Instant::now();
+        let (g, budget) = gov(&[1.0, 4.0], 10.0, 1, t0); // 10 GF/window
+        assert_eq!(g.snapshot().level, 1);
+        // 1 sample × 4 GF per window fits the 10 GF target
+        g.observe(t0 + WIN / 2, 1, 1, 4.0, false);
+        g.observe(t0 + WIN * 3 / 2, 1, 1, 4.0, false);
+        assert_eq!(g.snapshot().level, 1);
+        // the arbiter cuts this model's share to 1 GF/s: the same load
+        // now breaches and the governor must step down
+        g.set_envelope_rate(1.0);
+        assert_eq!(g.snapshot().target_gflips_per_window, 1.0);
+        g.observe(t0 + WIN * 5 / 2, 1, 1, 4.0, false);
+        g.observe(t0 + WIN * 7 / 2, 0, 1, 1.0, false);
+        let snap = g.snapshot();
+        assert_eq!(snap.level, 0, "cut share must degrade the served point");
+        assert_eq!(budget_of(&budget), 1.0);
+        // share restored: the cheap-point load projects to 4 GF at the
+        // next point up, which fits 10 GF/window again -> climb
+        g.set_envelope_rate(10.0);
+        g.observe(t0 + WIN * 9 / 2, 0, 1, 1.0, false);
+        g.observe(t0 + WIN * 11 / 2, 0, 1, 1.0, false);
+        assert_eq!(g.snapshot().level, 1, "restored share must climb back");
+        // invalid rates clamp, they do not poison the target
+        g.set_envelope_rate(f64::NAN);
+        assert!(g.snapshot().target_gflips_per_window > 0.0);
+        g.set_envelope_rate(0.0);
+        assert!(g.snapshot().target_gflips_per_window > 0.0);
     }
 
     #[test]

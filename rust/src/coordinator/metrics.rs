@@ -80,9 +80,14 @@ struct Inner {
     /// the apples-to-apples base for the measured-vs-modeled delta.
     modeled_when_measured: f64,
     per_point: std::collections::BTreeMap<String, PointStat>,
-    /// Times consecutive batches were served by different points.
+    /// Times consecutive batches *of the same model* were served by
+    /// different points.
     point_switches: u64,
-    last_point: Option<String>,
+    /// Last point served per model (keyed by model name, `""` on a
+    /// single-model server): the switch edge detector must be
+    /// per-model, or interleaved fleet traffic would read as a switch
+    /// on every batch even with every model pinned to one point.
+    last_point: std::collections::BTreeMap<String, String>,
     /// Requests shed at admission (`QueueFull`).
     shed: u64,
     /// Requests rejected unexecuted (`DeadlineExceeded`).
@@ -106,22 +111,31 @@ pub struct Metrics {
 /// Latency summary of one priority class.
 #[derive(Clone, Debug)]
 pub struct PriorityLatency {
+    /// The priority class this row describes.
     pub priority: Priority,
+    /// All-time requests served in this class.
     pub requests: u64,
+    /// Median latency over the retained window, microseconds.
     pub p50_us: f64,
+    /// 99th-percentile latency over the retained window, microseconds.
     pub p99_us: f64,
 }
 
 /// A point-in-time snapshot for reports.
 #[derive(Clone, Debug)]
 pub struct MetricsSnapshot {
+    /// All-time requests served.
     pub requests: u64,
+    /// All-time batches executed.
     pub batches: u64,
+    /// Mean requests per batch (batching efficiency).
     pub mean_batch: f64,
     /// Percentiles over the retained window of recent samples
     /// ([`LATENCY_WINDOW`]), not the full history.
     pub p50_us: f64,
+    /// 99th-percentile latency over the retained window, microseconds.
     pub p99_us: f64,
+    /// Requests per second over the server's lifetime.
     pub throughput_rps: f64,
     /// Modeled energy total (menu Gflips/sample × samples).
     pub total_giga_flips: f64,
@@ -130,7 +144,10 @@ pub struct MetricsSnapshot {
     /// Measured − modeled, over metered batches only — positive when
     /// the menu's compiled costs undershoot reality.
     pub measured_minus_modeled_gflips: f64,
-    /// Requests served per operating point (residency). Index-parallel
+    /// Requests served per operating point (residency). On a fleet
+    /// server the keys are `model:point` (each registered model keeps
+    /// its own counters even when point names collide); on a
+    /// single-model server they are the bare point names. Index-parallel
     /// with `per_point_measured`: both are produced by one iteration
     /// over the same per-point table and must stay that way (the
     /// report pairs them by index).
@@ -139,23 +156,30 @@ pub struct MetricsSnapshot {
     /// metered — the serving-side calibration the `pann-menu/v2`
     /// artifact field stores. Same order as `per_point`.
     pub per_point_measured: Vec<(String, Option<f64>)>,
-    /// Times consecutive batches (in global completion order) changed
-    /// operating point. On a multi-worker pool, in-flight batches from
-    /// different workers can interleave across one budget change, so
-    /// this may exceed the number of budget traversals —
+    /// Times consecutive batches *of the same model* (in completion
+    /// order) changed operating point — fleet traffic interleaving
+    /// across models does not count. On a multi-worker pool, in-flight
+    /// batches from different workers can interleave across one budget
+    /// change, so this may exceed the number of budget traversals —
     /// [`crate::coordinator::GovernorSnapshot::switches`] counts
     /// actual governor steps instead.
     pub point_switches: u64,
     /// Per-priority latency, highest class first.
     pub per_priority: Vec<PriorityLatency>,
+    /// Requests shed at admission (`QueueFull`).
     pub shed: u64,
+    /// Requests rejected unexecuted past their deadline.
     pub expired: u64,
+    /// Requests rejected unexecuted for a non-deadline reason.
     pub unservable: u64,
+    /// Requests discarded because the client dropped the ticket.
     pub cancelled: u64,
+    /// Batches whose engine call failed.
     pub engine_failures: u64,
 }
 
 impl Metrics {
+    /// Fresh collector; the throughput clock starts now.
     pub fn new() -> Self {
         Metrics { inner: Mutex::new(Inner::default()), started: Some(Instant::now()) }
     }
@@ -163,13 +187,26 @@ impl Metrics {
     /// Record one served batch: per-request `(latency µs, priority)`,
     /// the batch's *modeled* energy, and the energy the engine
     /// actually metered (`None` for meter-less backends).
+    ///
+    /// `model` is the registry name the batch was served for, `None`
+    /// on a single-model server. The per-point table is keyed by
+    /// `(model, point)` — two registered models whose compiled menus
+    /// happen to share a point name (`compile_menu` names points
+    /// `pt00-…` for every model) must not alias each other's residency
+    /// or calibration counters, and a single-model server keeps its
+    /// bare point-name keys exactly as before.
     pub fn record_batch(
         &self,
+        model: Option<&str>,
         point: &str,
         lats: &[(f64, Priority)],
         giga_flips: f64,
         measured_giga_flips: Option<f64>,
     ) {
+        let key = match model {
+            Some(m) => format!("{m}:{point}"),
+            None => point.to_string(),
+        };
         let mut g = self.inner.lock().unwrap();
         g.batches += 1;
         g.requests += lats.len() as u64;
@@ -178,13 +215,24 @@ impl Metrics {
             g.latencies_us.push(us);
             g.lane_latencies_us[prio.lane()].push(us);
         }
-        if g.last_point.as_deref() != Some(point) {
-            if g.last_point.is_some() {
-                g.point_switches += 1;
+        // per-model edge detection: only a genuine within-model point
+        // change counts as a switch (interleaved fleet batches from
+        // different models are not traversal activity)
+        let inner = &mut *g;
+        match inner.last_point.get_mut(model.unwrap_or("")) {
+            Some(last) if last.as_str() == point => {}
+            Some(last) => {
+                inner.point_switches += 1;
+                last.clear();
+                last.push_str(point);
             }
-            g.last_point = Some(point.to_string());
+            None => {
+                inner
+                    .last_point
+                    .insert(model.unwrap_or("").to_string(), point.to_string());
+            }
         }
-        let stat = g.per_point.entry(point.to_string()).or_default();
+        let stat = g.per_point.entry(key).or_default();
         stat.requests += lats.len() as u64;
         if let Some(m) = measured_giga_flips {
             stat.measured_samples += lats.len() as u64;
@@ -221,6 +269,7 @@ impl Metrics {
         self.inner.lock().unwrap().engine_failures += 1;
     }
 
+    /// Point-in-time snapshot of every counter and distribution.
     pub fn snapshot(&self) -> MetricsSnapshot {
         let g = self.inner.lock().unwrap();
         let elapsed = self.started.map(|t| t.elapsed().as_secs_f64()).unwrap_or(1.0);
@@ -278,6 +327,7 @@ impl Metrics {
 }
 
 impl MetricsSnapshot {
+    /// Human-readable multi-line report (CLI / bench output).
     pub fn report(&self) -> String {
         let mut s = format!(
             "requests={} batches={} (mean batch {:.2})\nlatency p50={:.0}µs p99={:.0}µs  throughput={:.0} req/s\nenergy={:.4} Gflips total ({:.5} Gflips/req)\n",
@@ -335,6 +385,7 @@ mod tests {
     fn accumulates() {
         let m = Metrics::new();
         m.record_batch(
+            None,
             "p4",
             &[
                 (100.0, Priority::Hi),
@@ -344,7 +395,7 @@ mod tests {
             0.5,
             None,
         );
-        m.record_batch("p8", &[(400.0, Priority::BestEffort)], 0.4, None);
+        m.record_batch(None, "p8", &[(400.0, Priority::BestEffort)], 0.4, None);
         let s = m.snapshot();
         assert_eq!(s.requests, 4);
         assert_eq!(s.batches, 2);
@@ -385,7 +436,7 @@ mod tests {
         let m = Metrics::new();
         let n = LATENCY_WINDOW as u64 * 8;
         for i in 0..n {
-            m.record_batch("p", &[(i as f64, Priority::Normal)], 0.01, None);
+            m.record_batch(None, "p", &[(i as f64, Priority::Normal)], 0.01, None);
         }
         assert_eq!(m.held_latency_samples(), LATENCY_WINDOW);
         let s = m.snapshot();
@@ -403,9 +454,9 @@ mod tests {
         let m = Metrics::new();
         // metered batch: modeled 0.5, measured 0.6 -> delta +0.1
         let two = [(100.0, Priority::Normal), (110.0, Priority::Normal)];
-        m.record_batch("p4", &two, 0.5, Some(0.6));
+        m.record_batch(None, "p4", &two, 0.5, Some(0.6));
         // meter-less batch: counts toward modeled total only
-        m.record_batch("p4", &[(120.0, Priority::Normal)], 0.25, None);
+        m.record_batch(None, "p4", &[(120.0, Priority::Normal)], 0.25, None);
         let s = m.snapshot();
         assert!((s.total_giga_flips - 0.75).abs() < 1e-12);
         assert!((s.measured_giga_flips - 0.6).abs() < 1e-12);
@@ -422,10 +473,32 @@ mod tests {
     fn switch_counter_tracks_point_changes_only() {
         let m = Metrics::new();
         let lat = [(1.0, Priority::Normal)];
-        m.record_batch("a", &lat, 0.1, None);
-        m.record_batch("a", &lat, 0.1, None); // same point: no switch
-        m.record_batch("b", &lat, 0.2, None); // a -> b
-        m.record_batch("a", &lat, 0.1, None); // b -> a
+        m.record_batch(None, "a", &lat, 0.1, None);
+        m.record_batch(None, "a", &lat, 0.1, None); // same point: no switch
+        m.record_batch(None, "b", &lat, 0.2, None); // a -> b
+        m.record_batch(None, "a", &lat, 0.1, None); // b -> a
         assert_eq!(m.snapshot().point_switches, 2);
+    }
+
+    #[test]
+    fn fleet_switch_counter_is_per_model() {
+        // interleaved fleet traffic with every model pinned to one
+        // point must count ZERO switches — model interleaving is not
+        // frontier traversal
+        let m = Metrics::new();
+        let lat = [(1.0, Priority::Normal)];
+        for _ in 0..3 {
+            m.record_batch(Some("hot"), "p", &lat, 0.1, None);
+            m.record_batch(Some("cold"), "p", &lat, 0.1, None);
+        }
+        assert_eq!(m.snapshot().point_switches, 0);
+        // a genuine within-model change still counts, once
+        m.record_batch(Some("hot"), "q", &lat, 0.1, None);
+        m.record_batch(Some("cold"), "p", &lat, 0.1, None);
+        assert_eq!(m.snapshot().point_switches, 1);
+        // ...and the per-point residency table stays model-qualified
+        let s = m.snapshot();
+        let keys: Vec<&str> = s.per_point.iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(keys, vec!["cold:p", "hot:p", "hot:q"]);
     }
 }

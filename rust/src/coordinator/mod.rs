@@ -30,23 +30,39 @@
 //! budget only moves when a client calls [`Client::set_budget`]
 //! (the open-loop default).
 //!
+//! A server can also host a **fleet** of models:
+//! [`ServerBuilder::register`] named menus (repeatable) and start them
+//! with [`ServerBuilder::serve_fleet`] — one worker pool and one
+//! bounded queue serve every registered model, each on its own
+//! compiled frontier with its own budget cell, batches staying
+//! point-coherent per model. Under an envelope each model runs its own
+//! [`Governor`] and the [`registry`]'s fleet arbiter splits the global
+//! rate across models by observed demand (max-min fair), so a hot
+//! model degrades along its frontier before starving a cold one.
+//!
 //! Components: [`request`] (the public request/response model),
 //! [`policy`] (budget → operating point), [`batcher`] (bounded
 //! admission queue + point-coherent QoS batching), [`governor`]
-//! (closed-loop energy control), [`metrics`] (latency/energy/rejection
-//! accounting, per priority class), [`server`] (builder, engines,
-//! worker loops).
+//! (closed-loop energy control), [`registry`] (the multi-model fleet:
+//! named menus, per-model budgets/governors, envelope arbitration),
+//! [`metrics`] (latency/energy/rejection accounting, per priority
+//! class), [`server`] (builder, engines, worker loops).
+//!
+//! [`ServerBuilder::register`]: server::ServerBuilder::register
+//! [`ServerBuilder::serve_fleet`]: server::ServerBuilder::serve_fleet
 
 pub mod batcher;
 pub mod governor;
 pub mod metrics;
 pub mod policy;
+pub mod registry;
 pub mod request;
 pub mod server;
 
 pub use governor::{EnergyEnvelope, Governor, GovernorConfig, GovernorSnapshot};
 pub use metrics::{MetricsSnapshot, PriorityLatency};
 pub use policy::{Costed, EnginePoint, PowerPolicy};
+pub use registry::{FleetSnapshot, ModelFleetStatus, ModelRegistry};
 pub use request::{InferRequest, Priority, Response, ServeError, Ticket};
 pub use server::{
     BatchEngine, Client, Engine, Menu, NativeEngine, PlanEngine, Server, ServerBuilder,

@@ -10,6 +10,12 @@
 //! single-worker server selects among [`EnginePoint`]s (boxed, possibly
 //! `!Send` engines such as PJRT executables), the worker pool among
 //! [`super::server::SharedPoint`]s (`Arc`-shared plan-backed engines).
+//!
+//! A fleet server runs one `PowerPolicy` **per registered model**,
+//! each over that model's own frontier and budget cell; the
+//! cross-model arbitration (who gets how much of a shared energy
+//! envelope) lives in [`super::registry`], which lifts these per-model
+//! selections into one global point index space.
 
 use super::request::ServeError;
 use super::server::Engine;
@@ -23,9 +29,11 @@ pub trait Costed {
 
 /// One selectable operating point owning a boxed engine.
 pub struct EnginePoint {
+    /// Point name (unique within its menu; pinnable).
     pub name: String,
     /// Energy per sample in Giga bit flips; `f64::INFINITY` for fp32.
     pub giga_flips_per_sample: f64,
+    /// The (possibly `!Send`) engine executing this point.
     pub engine: Box<dyn Engine>,
 }
 
@@ -80,10 +88,12 @@ impl<P: Costed> PowerPolicy<P> {
         Ok(PowerPolicy { points })
     }
 
+    /// Number of points on the menu.
     pub fn len(&self) -> usize {
         self.points.len()
     }
 
+    /// Whether the menu is empty (never true: construction rejects it).
     pub fn is_empty(&self) -> bool {
         self.points.is_empty()
     }
@@ -108,10 +118,13 @@ impl<P: Costed> PowerPolicy<P> {
         self.points.iter().position(|p| p.point_name() == name)
     }
 
+    /// The point at a selection index (ascending-cost order).
     pub fn point(&self, idx: usize) -> &P {
         &self.points[idx]
     }
 
+    /// Mutable access to a point (the single-worker server owns its
+    /// engines through the policy).
     pub fn point_mut(&mut self, idx: usize) -> &mut P {
         &mut self.points[idx]
     }

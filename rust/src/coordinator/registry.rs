@@ -1,0 +1,729 @@
+//! Multi-model fleet serving: a registry of named menus behind one
+//! worker pool, under one energy envelope.
+//!
+//! PRs 1–4 built deployment-time traversal of the power–accuracy
+//! frontier for exactly one model per server. Real end-device and
+//! edge-server deployments run *several* networks at once under a
+//! single power budget — the setting the minimum-energy-network line
+//! of work targets (Moons et al., *Minimum Energy Quantized Neural
+//! Networks*; Goel et al., *A Survey of Methods for Low-Power Deep
+//! Learning*). The [`ModelRegistry`] closes that gap:
+//!
+//! - [`super::server::ServerBuilder::register`] collects named
+//!   [`Menu`]s; [`ServerBuilder::serve_fleet`] compiles each into its
+//!   own [`PowerPolicy`] frontier (menu artifacts are
+//!   fingerprint-verified exactly as in single-model serving) and
+//!   serves all of them from **one shared worker pool**.
+//! - Every registered model's points occupy a disjoint range of one
+//!   *global point index space* (model `i`'s local point `p` lives at
+//!   `offset[i] + p`). The classifier resolves a request to a global
+//!   index, so `RequestQueue` batches stay point-coherent **per
+//!   model** with no queue changes at all.
+//! - Each model keeps its own budget cell: open-loop,
+//!   [`super::server::Client::set_budget`] moves every model together
+//!   and [`super::server::Client::set_model_budget`] moves one.
+//! - Closed-loop, the global [`EnergyEnvelope`] is **arbitrated**: each
+//!   model gets its own [`Governor`] over its own frontier, and the
+//!   fleet arbiter re-splits the physical rate across models by the
+//!   demand observed in a sliding window — max-min fairness
+//!   ([`fair_shares`]): light ("cold") models are allocated what their
+//!   traffic actually needs (with headroom) and keep their most
+//!   accurate point, while a flooding ("hot") model gets only the
+//!   residual and walks *its own* frontier down. A hot model degrades
+//!   along its frontier before it can starve a cold one.
+//!
+//! Like the [`Governor`], the arbiter never reads the wall clock: all
+//! demand accounting happens as batches are reported against the
+//! caller's [`Instant`], so unit tests drive it with synthetic time.
+//!
+//! [`Menu`]: super::server::Menu
+//! [`ServerBuilder::serve_fleet`]: super::server::ServerBuilder::serve_fleet
+
+use super::batcher::Pending;
+use super::governor::{EnergyEnvelope, Governor, GovernorConfig, GovernorSnapshot};
+use super::policy::PowerPolicy;
+use super::request::ServeError;
+use super::server::{Menu, ServerConfig, SharedPoint};
+use anyhow::Result;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Demand headroom multiplier of the fleet arbiter: a model's envelope
+/// "need" is `observed samples/sec × top-point Gflips/sample ×` this
+/// factor. The slack keeps a satisfied model comfortably inside its
+/// share when its traffic is bursty or still ramping in the EWMA —
+/// without it a cold model whose allocation exactly equals its average
+/// draw would graze its governor threshold on every burst (or on every
+/// speed-up of the flooding neighbor it interleaves with) and flap
+/// down the frontier. 4× absorbs a doubled burst on top of a
+/// half-converged demand estimate.
+pub const DEMAND_HEADROOM: f64 = 4.0;
+
+/// Fraction of the envelope reserved as a per-model share floor
+/// (`total × this / n` each): a model that was idle through a demand
+/// window is never allocated literally nothing, so traffic waking it
+/// up is served (the governor climbed to the top during the idle
+/// spell) without instantly breaching a zero target — the arbiter
+/// grants its true need at the next window close.
+pub const MIN_SHARE_FRAC: f64 = 0.02;
+
+/// EWMA blend factor for the windowed demand estimate (weight of the
+/// newest window; the remainder stays on history). One half makes the
+/// estimate settle within a few windows while still smoothing
+/// single-window spikes. The very first closed window *primes* the
+/// estimate instead of blending against the zero it was initialized
+/// with — halving every model's opening demand would under-allocate
+/// exactly when no history justifies it.
+const DEMAND_EWMA_ALPHA: f64 = 0.5;
+
+/// One registered model: its compiled frontier, its budget cell, and
+/// (closed-loop only) its governor.
+pub(crate) struct FleetModel {
+    /// Registration name ([`super::server::ServerBuilder::register`]).
+    pub name: String,
+    /// This model's own frontier, cheapest point first.
+    pub policy: PowerPolicy<SharedPoint>,
+    /// Flattened per-sample input length of this model's menu.
+    pub sample_len: usize,
+    /// This model's served-budget cell (same role as the single-model
+    /// server's one global cell).
+    pub budget_bits: Arc<AtomicU64>,
+    /// Closed-loop governor over this model's frontier, defending the
+    /// arbiter-assigned share of the global envelope. `None` open-loop.
+    pub governor: Option<Arc<Governor>>,
+}
+
+impl FleetModel {
+    /// Modeled cost of this model's most accurate point (the arbiter's
+    /// per-sample price for "full accuracy").
+    fn top_cost(&self) -> f64 {
+        self.policy.point(self.policy.len() - 1).giga_flips_per_sample
+    }
+}
+
+/// The fleet: N named models compiled to frontiers, served from one
+/// pool. Built by [`super::server::ServerBuilder::serve_fleet`];
+/// observed through [`super::server::Client::fleet`].
+pub struct ModelRegistry {
+    models: Vec<FleetModel>,
+    /// `models[i]`'s points occupy global indices
+    /// `offsets[i] .. offsets[i] + models[i].policy.len()`.
+    offsets: Vec<usize>,
+    arbiter: Option<FleetArbiter>,
+}
+
+impl ModelRegistry {
+    /// Compile `registrations` into a fleet under `cfg`. Menus must be
+    /// pool-servable ([`Menu::shared`] / deferred artifact menus —
+    /// engine construction verifies artifact fingerprints here);
+    /// [`Menu::local`] factories build `!Send` engines that cannot be
+    /// shared by a pool and are rejected. Names must be unique.
+    ///
+    /// [`Menu::shared`]: super::server::Menu::shared
+    /// [`Menu::local`]: super::server::Menu::local
+    pub(crate) fn build(
+        cfg: &ServerConfig,
+        registrations: Vec<(String, Menu)>,
+        now: Instant,
+    ) -> Result<ModelRegistry> {
+        anyhow::ensure!(
+            !registrations.is_empty(),
+            "no models registered — call ServerBuilder::register(name, menu) before serve_fleet()"
+        );
+        let n = registrations.len();
+        let mut models: Vec<FleetModel> = Vec::with_capacity(n);
+        let mut offsets = Vec::with_capacity(n);
+        let mut next_offset = 0usize;
+        for (name, menu) in registrations {
+            anyhow::ensure!(
+                models.iter().all(|m| m.name != name),
+                "model '{name}' registered twice"
+            );
+            let points = match menu {
+                Menu::Shared(points) => points,
+                Menu::SharedDeferred(build) => build(cfg.max_batch)?,
+                Menu::Local(_) => anyhow::bail!(
+                    "model '{name}': fleet serving needs a pool-shareable menu \
+                     (Menu::shared or a menu artifact); Menu::local engines are !Send"
+                ),
+            };
+            let sample_len = {
+                let mut lens = points.iter().map(|p| p.engine.sample_len());
+                let first = lens
+                    .next()
+                    .ok_or_else(|| anyhow::anyhow!("model '{name}': empty operating-point menu"))?;
+                for l in lens {
+                    anyhow::ensure!(
+                        l == first,
+                        "model '{name}': menu sample lengths disagree: {l} vs {first}"
+                    );
+                }
+                first
+            };
+            let policy = PowerPolicy::new(points)
+                .map_err(|e| anyhow::anyhow!("model '{name}': {e}"))?;
+            let budget_bits = Arc::new(AtomicU64::new(cfg.budget_gflips.to_bits()));
+            let governor = match cfg.envelope {
+                None => None,
+                Some(envelope) => {
+                    // every model starts with an equal share; the
+                    // arbiter re-splits by demand from the first
+                    // closed window onward
+                    let gc = GovernorConfig {
+                        envelope: EnergyEnvelope::gflips_per_sec(envelope.rate() / n as f64),
+                        window: cfg.governor_window,
+                        hysteresis: cfg.governor_hysteresis,
+                        ledger_windows: GovernorConfig::DEFAULT_LEDGER_WINDOWS,
+                    };
+                    Some(Arc::new(
+                        Governor::new(gc, policy.menu(), budget_bits.clone(), now)
+                            .map_err(|e| anyhow::anyhow!("model '{name}': {e}"))?,
+                    ))
+                }
+            };
+            offsets.push(next_offset);
+            next_offset += policy.len();
+            models.push(FleetModel { name, policy, sample_len, budget_bits, governor });
+        }
+        let arbiter = cfg.envelope.map(|envelope| {
+            // demand is reassessed once per governor decision horizon,
+            // so a model's share is stable across each step decision
+            let window = cfg
+                .governor_window
+                .saturating_mul(cfg.governor_hysteresis.max(1));
+            FleetArbiter::new(envelope.rate(), window, n, now)
+        });
+        Ok(ModelRegistry { models, offsets, arbiter })
+    }
+
+    /// Number of registered models.
+    pub fn n_models(&self) -> usize {
+        self.models.len()
+    }
+
+    /// Registration names, in registration order.
+    pub fn model_names(&self) -> Vec<String> {
+        self.models.iter().map(|m| m.name.clone()).collect()
+    }
+
+    /// Registry index of the named model.
+    pub(crate) fn resolve(&self, name: &str) -> Option<usize> {
+        self.models.iter().position(|m| m.name == name)
+    }
+
+    pub(crate) fn model(&self, idx: usize) -> &FleetModel {
+        &self.models[idx]
+    }
+
+    /// Map a global point index back to `(model index, local point)`.
+    pub(crate) fn locate(&self, global: usize) -> (usize, usize) {
+        // offsets is ascending; find the last offset <= global
+        let mi = match self.offsets.binary_search(&global) {
+            Ok(i) => i,
+            Err(i) => i - 1,
+        };
+        (mi, global - self.offsets[mi])
+    }
+
+    /// The fleet classifier: pinned point by name on the request's
+    /// model, otherwise that model's best point under `min(its budget
+    /// cell, request cap)` — the single-model rule, applied per model,
+    /// then lifted into the global index space so batches stay
+    /// point-coherent per model.
+    pub(crate) fn classify(&self, p: &Pending) -> Result<usize, ServeError> {
+        let m = &self.models[p.model];
+        let offset = self.offsets[p.model];
+        if let Some(pin) = &p.pin {
+            return m
+                .policy
+                .index_of(pin)
+                .map(|i| offset + i)
+                .ok_or_else(|| ServeError::UnknownPoint(pin.clone()));
+        }
+        let global = f64::from_bits(m.budget_bits.load(Ordering::Relaxed));
+        if global.is_nan() {
+            return Err(ServeError::BadBudget);
+        }
+        let budget = p.max_gflips.map_or(global, |cap| global.min(cap));
+        m.policy.select(budget).map(|i| offset + i)
+    }
+
+    /// Report one executed chunk of `samples` samples on `model`'s
+    /// local point `point` for `gflips` energy (`metered` as in
+    /// [`Governor::observe`]): feeds the model's governor *and* the
+    /// fleet arbiter's demand window. No-op wiring open-loop (no
+    /// governors, no arbiter — demand splitting has nothing to split).
+    pub(crate) fn note_batch(
+        &self,
+        now: Instant,
+        model: usize,
+        point: usize,
+        samples: u64,
+        gflips: f64,
+        metered: bool,
+    ) {
+        if let Some(g) = &self.models[model].governor {
+            g.observe(now, point, samples, gflips, metered);
+        }
+        if let Some(arb) = &self.arbiter {
+            arb.observe(now, model, samples, &self.models);
+        }
+    }
+
+    /// Point-in-time view of every registered model.
+    pub fn snapshot(&self) -> FleetSnapshot {
+        let arb = self.arbiter.as_ref().map(|a| a.snapshot());
+        FleetSnapshot {
+            models: self
+                .models
+                .iter()
+                .enumerate()
+                .map(|(i, m)| ModelFleetStatus {
+                    name: m.name.clone(),
+                    points: m.policy.len(),
+                    sample_len: m.sample_len,
+                    budget_gflips: f64::from_bits(m.budget_bits.load(Ordering::Relaxed)),
+                    demand_rate: arb.as_ref().map(|a| a.demand_rate[i]),
+                    envelope_share: arb.as_ref().map(|a| a.shares[i]),
+                    governor: m.governor.as_ref().map(|g| g.snapshot()),
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Max-min fair ("water-filling") split of `total` across `needs`:
+/// walking the needs smallest first, each claimant gets
+/// `min(need, remaining / claimants left)`; whatever is left over once
+/// every need is met is spread equally. This is the allocation rule
+/// that makes a hot model degrade before a cold one starves: a small
+/// need is satisfied in full no matter how large the other demands
+/// grow, while over-subscribed claimants split the residual equally.
+/// (A zero-need claimant gets zero here when others are
+/// over-subscribed; the fleet arbiter guards against that with a
+/// [`MIN_SHARE_FRAC`] floor taken off the top.)
+///
+/// Infinite needs (a frontier topped by an unbounded-cost fp32 point)
+/// simply claim their full equal share; NaN needs are treated as zero.
+pub fn fair_shares(total: f64, needs: &[f64]) -> Vec<f64> {
+    let n = needs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| needs[a].total_cmp(&needs[b]));
+    let mut shares = vec![0.0f64; n];
+    let mut remaining = total.max(0.0);
+    for (k, &i) in order.iter().enumerate() {
+        let fair = remaining / (n - k) as f64;
+        let need = if needs[i].is_nan() { 0.0 } else { needs[i].max(0.0) };
+        let s = need.min(fair);
+        shares[i] = s;
+        remaining -= s;
+    }
+    if remaining > 0.0 {
+        let bonus = remaining / n as f64;
+        for s in &mut shares {
+            *s += bonus;
+        }
+    }
+    shares
+}
+
+/// Demand-weighted splitter of the global [`EnergyEnvelope`] across the
+/// fleet. Accumulates per-model sample counts; at each window boundary
+/// it folds them into an EWMA demand rate, prices each model's "need"
+/// (`rate × top cost × [`DEMAND_HEADROOM`]`), and re-targets every
+/// model's [`Governor`] with its [`fair_shares`] allocation.
+struct FleetArbiter {
+    total_rate: f64,
+    window: Duration,
+    state: Mutex<ArbState>,
+}
+
+struct ArbState {
+    window_start: Instant,
+    /// Samples served per model since `window_start`.
+    counts: Vec<u64>,
+    /// EWMA samples/sec per model.
+    demand_rate: Vec<f64>,
+    /// Whether a first window has primed `demand_rate`.
+    primed: bool,
+    /// Current envelope share per model, Gflips/sec.
+    shares: Vec<f64>,
+}
+
+/// Arbiter view used by [`FleetSnapshot`].
+struct ArbSnapshot {
+    demand_rate: Vec<f64>,
+    shares: Vec<f64>,
+}
+
+impl FleetArbiter {
+    fn new(total_rate: f64, window: Duration, n: usize, now: Instant) -> FleetArbiter {
+        FleetArbiter {
+            total_rate,
+            window: if window.is_zero() { Duration::from_millis(1) } else { window },
+            state: Mutex::new(ArbState {
+                window_start: now,
+                counts: vec![0; n],
+                demand_rate: vec![0.0; n],
+                primed: false,
+                // matches the equal initial split of the governors
+                shares: vec![total_rate / n as f64; n],
+            }),
+        }
+    }
+
+    /// Land `samples` of demand on `model`; close the demand window and
+    /// re-split the envelope if `now` has passed its end. Like the
+    /// governor, this takes the caller's `now` — no wall clock.
+    fn observe(&self, now: Instant, model: usize, samples: u64, models: &[FleetModel]) {
+        let mut s = self.state.lock().expect("fleet arbiter poisoned");
+        s.counts[model] += samples;
+        let Some(elapsed) = now.checked_duration_since(s.window_start) else {
+            return;
+        };
+        if elapsed < self.window {
+            return;
+        }
+        // One re-split per boundary crossing, over the actual elapsed
+        // span (a long quiet gap is one long window of near-zero rate,
+        // not thousands of empty ones — bounded work by construction).
+        let secs = elapsed.as_secs_f64().max(1e-9);
+        for i in 0..s.counts.len() {
+            let inst = s.counts[i] as f64 / secs;
+            s.demand_rate[i] = if s.primed {
+                (1.0 - DEMAND_EWMA_ALPHA) * s.demand_rate[i] + DEMAND_EWMA_ALPHA * inst
+            } else {
+                inst
+            };
+            s.counts[i] = 0;
+        }
+        s.primed = true;
+        s.window_start = now;
+        let needs: Vec<f64> = s
+            .demand_rate
+            .iter()
+            .zip(models)
+            .map(|(&rate, m)| rate * m.top_cost() * DEMAND_HEADROOM)
+            .collect();
+        // per-model floor off the top, max-min fairness on the rest
+        let n = models.len() as f64;
+        let floor = self.total_rate * MIN_SHARE_FRAC / n;
+        let mut shares = fair_shares(self.total_rate - floor * n, &needs);
+        for sh in &mut shares {
+            *sh += floor;
+        }
+        s.shares = shares;
+        for (m, &share) in models.iter().zip(&s.shares) {
+            if let Some(g) = &m.governor {
+                g.set_envelope_rate(share);
+            }
+        }
+    }
+
+    fn snapshot(&self) -> ArbSnapshot {
+        let s = self.state.lock().expect("fleet arbiter poisoned");
+        ArbSnapshot { demand_rate: s.demand_rate.clone(), shares: s.shares.clone() }
+    }
+}
+
+/// Point-in-time view of the whole fleet
+/// ([`super::server::Client::fleet`]).
+#[derive(Clone, Debug)]
+pub struct FleetSnapshot {
+    /// One status per registered model, in registration order.
+    pub models: Vec<ModelFleetStatus>,
+}
+
+/// One model's slice of a [`FleetSnapshot`].
+#[derive(Clone, Debug)]
+pub struct ModelFleetStatus {
+    /// Registration name.
+    pub name: String,
+    /// Frontier points on this model's menu.
+    pub points: usize,
+    /// Flattened per-sample input length this model expects.
+    pub sample_len: usize,
+    /// This model's current served budget (Gflips/sample).
+    pub budget_gflips: f64,
+    /// Arbiter's EWMA demand estimate, samples/sec (`None` open-loop).
+    pub demand_rate: Option<f64>,
+    /// This model's current share of the global envelope, Gflips/sec
+    /// (`None` open-loop).
+    pub envelope_share: Option<f64>,
+    /// This model's governor view (`None` open-loop).
+    pub governor: Option<GovernorSnapshot>,
+}
+
+impl FleetSnapshot {
+    /// Human-readable multi-line report (CLI / bench output).
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        for m in &self.models {
+            s.push_str(&format!(
+                "model {}: {} frontier points, budget {:.6} GF/sample",
+                m.name, m.points, m.budget_gflips
+            ));
+            if let (Some(d), Some(sh)) = (m.demand_rate, m.envelope_share) {
+                s.push_str(&format!(
+                    ", demand {d:.1} samples/s, envelope share {sh:.4} GF/s"
+                ));
+            }
+            s.push('\n');
+            if let Some(g) = &m.governor {
+                for line in g.report().lines() {
+                    s.push_str(&format!("  {line}\n"));
+                }
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::server::tests_support::MockEngine;
+    use super::*;
+    use std::sync::mpsc;
+
+    fn shared(name: &str, gf: f64, in_len: usize) -> SharedPoint {
+        SharedPoint {
+            name: name.into(),
+            giga_flips_per_sample: gf,
+            engine: Arc::new(MockEngine::new(4, in_len, 2)),
+        }
+    }
+
+    fn cfg(envelope: Option<f64>) -> ServerConfig {
+        ServerConfig {
+            envelope: envelope.map(EnergyEnvelope::gflips_per_sec),
+            governor_window: Duration::from_millis(10),
+            governor_hysteresis: 1,
+            ..ServerConfig::default()
+        }
+    }
+
+    fn two_model_regs() -> Vec<(String, Menu)> {
+        vec![
+            (
+                "a".to_string(),
+                Menu::shared(vec![shared("cheap", 0.1, 3), shared("rich", 1.0, 3)]),
+            ),
+            (
+                "b".to_string(),
+                Menu::shared(vec![shared("cheap", 0.2, 5), shared("rich", 2.0, 5)]),
+            ),
+        ]
+    }
+
+    // the receiver is dropped: these Pendings are only classified,
+    // never responded to
+    fn pending(model: usize, cap: Option<f64>, pin: Option<&str>) -> Pending {
+        let (tx, _rx) = mpsc::channel();
+        Pending {
+            input: vec![0.0; 3],
+            model,
+            submitted: Instant::now(),
+            deadline: None,
+            priority: super::super::request::Priority::Normal,
+            max_gflips: cap,
+            pin: pin.map(str::to_string),
+            tag: None,
+            cancelled: Arc::new(std::sync::atomic::AtomicBool::new(false)),
+            resp: tx,
+        }
+    }
+
+    #[test]
+    fn fair_shares_satisfies_small_needs_first() {
+        // cold needs 1, hot needs 100, total 10: cold gets its 1 in
+        // full, hot gets the residual 9.
+        let s = fair_shares(10.0, &[100.0, 1.0]);
+        assert!((s[1] - 1.0).abs() < 1e-12);
+        assert!((s[0] - 9.0).abs() < 1e-12);
+        // oversubscribed on both sides: equal split
+        let s = fair_shares(10.0, &[100.0, 80.0]);
+        assert!((s[0] - 5.0).abs() < 1e-12 && (s[1] - 5.0).abs() < 1e-12);
+        // under-subscribed: leftover spread equally, shares stay > need
+        let s = fair_shares(10.0, &[1.0, 2.0]);
+        assert!((s[0] - (1.0 + 3.5)).abs() < 1e-12);
+        assert!((s[1] - (2.0 + 3.5)).abs() < 1e-12);
+        assert!(((s[0] + s[1]) - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fair_shares_handles_zero_inf_nan_and_empty() {
+        assert!(fair_shares(10.0, &[]).is_empty());
+        // zero-demand model still ends strictly positive via the
+        // leftover spread when headroom exists
+        let s = fair_shares(10.0, &[0.0, 1.0]);
+        assert!(s[0] > 0.0);
+        // an infinite need (fp32-topped frontier) takes its equal
+        // share, not everything
+        let s = fair_shares(10.0, &[f64::INFINITY, 1.0]);
+        assert!((s[1] - 1.0).abs() < 1e-12);
+        assert!((s[0] - 9.0).abs() < 1e-12);
+        let s = fair_shares(10.0, &[f64::NAN, 4.0]);
+        assert!(s[0].is_finite() && s[1].is_finite());
+        // never over-allocates
+        let s = fair_shares(5.0, &[100.0, 100.0, 100.0]);
+        let sum: f64 = s.iter().sum();
+        assert!((sum - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn registry_rejects_duplicates_local_menus_and_empty() {
+        let c = cfg(None);
+        let e = ModelRegistry::build(&c, Vec::new(), Instant::now()).unwrap_err();
+        assert!(e.to_string().contains("no models registered"), "{e}");
+        let dup = vec![
+            ("a".to_string(), Menu::shared(vec![shared("p", 0.1, 3)])),
+            ("a".to_string(), Menu::shared(vec![shared("p", 0.1, 3)])),
+        ];
+        let e = ModelRegistry::build(&c, dup, Instant::now()).unwrap_err();
+        assert!(e.to_string().contains("registered twice"), "{e}");
+        let local = vec![("a".to_string(), Menu::local(|| Ok(Vec::new())))];
+        let e = ModelRegistry::build(&c, local, Instant::now()).unwrap_err();
+        assert!(e.to_string().contains("!Send"), "{e}");
+        let empty = vec![("a".to_string(), Menu::shared(Vec::new()))];
+        assert!(ModelRegistry::build(&c, empty, Instant::now()).is_err());
+    }
+
+    #[test]
+    fn classify_routes_into_disjoint_global_ranges() {
+        let reg = ModelRegistry::build(&cfg(None), two_model_regs(), Instant::now()).unwrap();
+        assert_eq!(reg.n_models(), 2);
+        assert_eq!(reg.model_names(), vec!["a", "b"]);
+        // model 0's points at 0..2, model 1's at 2..4
+        // (default budget = inf -> each model's richest point)
+        let g = reg.classify(&pending(0, None, None)).unwrap();
+        assert_eq!(reg.locate(g), (0, 1));
+        let g = reg.classify(&pending(1, None, None)).unwrap();
+        assert_eq!(reg.locate(g), (1, 1));
+        // per-request caps select within the request's own frontier
+        let g = reg.classify(&pending(1, Some(0.5), None)).unwrap();
+        assert_eq!(reg.locate(g), (1, 0));
+        // pins resolve against the request's model — both menus name a
+        // point "cheap", and they must not collide
+        let ga = reg.classify(&pending(0, None, Some("cheap"))).unwrap();
+        let gb = reg.classify(&pending(1, None, Some("cheap"))).unwrap();
+        assert_ne!(ga, gb);
+        assert_eq!(reg.locate(ga), (0, 0));
+        assert_eq!(reg.locate(gb), (1, 0));
+        let e = reg.classify(&pending(0, None, Some("nope"))).unwrap_err();
+        assert_eq!(e, ServeError::UnknownPoint("nope".into()));
+        // per-model sample lengths survive
+        assert_eq!(reg.model(0).sample_len, 3);
+        assert_eq!(reg.model(1).sample_len, 5);
+    }
+
+    #[test]
+    fn per_model_budgets_are_independent() {
+        let reg = ModelRegistry::build(&cfg(None), two_model_regs(), Instant::now()).unwrap();
+        reg.model(0).budget_bits.store(0.1f64.to_bits(), Ordering::Relaxed);
+        let g = reg.classify(&pending(0, None, None)).unwrap();
+        assert_eq!(reg.locate(g), (0, 0), "model a capped to its cheap point");
+        let g = reg.classify(&pending(1, None, None)).unwrap();
+        assert_eq!(reg.locate(g), (1, 1), "model b untouched");
+        // NaN budget on one model rejects only that model's requests
+        reg.model(0).budget_bits.store(f64::NAN.to_bits(), Ordering::Relaxed);
+        assert_eq!(
+            reg.classify(&pending(0, None, None)).unwrap_err(),
+            ServeError::BadBudget
+        );
+        assert!(reg.classify(&pending(1, None, None)).is_ok());
+    }
+
+    #[test]
+    fn arbiter_equal_split_when_both_models_oversubscribe() {
+        // Both models flood past any fair share: max-min collapses to
+        // an equal split — the hot-in-samples model cannot push the
+        // other below half the envelope, and shares always sum to it.
+        let t0 = Instant::now();
+        let c = cfg(Some(10.0));
+        let reg = ModelRegistry::build(&c, two_model_regs(), t0).unwrap();
+        // initial split is equal
+        let snap = reg.snapshot();
+        assert_eq!(snap.models.len(), 2);
+        for m in &snap.models {
+            assert!((m.envelope_share.unwrap() - 5.0).abs() < 1e-12);
+        }
+        // skewed flood: 1000 samples/s on a, 100/s on b, both of
+        // whose needs exceed the 10 GF/s envelope
+        let w = Duration::from_millis(10);
+        reg.note_batch(t0 + w / 2, 0, 1, 10, 10.0, false);
+        reg.note_batch(t0 + w, 0, 1, 0, 0.0, false);
+        reg.note_batch(t0 + w + Duration::from_micros(1), 1, 1, 1, 2.0, false);
+        reg.note_batch(t0 + w * 2, 0, 1, 10, 10.0, false);
+        reg.note_batch(t0 + w * 2 + Duration::from_micros(1), 1, 1, 1, 2.0, false);
+        reg.note_batch(t0 + w * 3, 0, 1, 10, 10.0, false);
+        let snap = reg.snapshot();
+        let a = &snap.models[0];
+        let b = &snap.models[1];
+        let share_sum = a.envelope_share.unwrap() + b.envelope_share.unwrap();
+        assert!((share_sum - 10.0).abs() < 1e-9, "shares must sum to the envelope");
+        assert!(a.demand_rate.unwrap() > b.demand_rate.unwrap());
+        assert!(b.envelope_share.unwrap() >= 5.0 - 1e-9, "cold model keeps >= fair share");
+    }
+
+    #[test]
+    fn arbiter_grants_cold_model_its_need_in_full() {
+        // a floods (1000 samples/s at top cost 1.0); b trickles at
+        // 1 sample/s with top cost 2.0, so b's steady need is
+        // 1 × 2.0 × DEMAND_HEADROOM = 8 GF/s — inside the 20 GF/s
+        // envelope's fair half. Max-min must satisfy b in full (plus
+        // the floor) and hand a only the residual, however hard a
+        // floods.
+        let t0 = Instant::now();
+        let c = ServerConfig {
+            governor_window: Duration::from_secs(1),
+            ..cfg(Some(20.0))
+        };
+        let reg = ModelRegistry::build(&c, two_model_regs(), t0).unwrap();
+        let w = Duration::from_secs(1);
+        let mut now = t0;
+        for k in 1..=4u32 {
+            // during each 1s window: a lands 1000 samples, b lands 1
+            reg.note_batch(now + w / 2, 0, 1, 1000, 1000.0, false);
+            reg.note_batch(now + w / 2, 1, 1, 1, 2.0, false);
+            now = t0 + w * k;
+            reg.note_batch(now, 0, 1, 0, 0.0, false);
+        }
+        let snap = reg.snapshot();
+        let a = &snap.models[0];
+        let b = &snap.models[1];
+        let b_share = b.envelope_share.unwrap();
+        let a_share = a.envelope_share.unwrap();
+        assert!(
+            (7.0..=9.0).contains(&b_share),
+            "cold model must get ~its 8 GF/s need, got {b_share}"
+        );
+        assert!(a_share > b_share, "hot model takes the larger residual, got {a_share}");
+        assert!((a_share + b_share - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn arbiter_share_floor_protects_a_model_idle_through_priming() {
+        // Model b is completely idle while a floods through the first
+        // demand windows: pure max-min would hand b literally nothing,
+        // and its first request after the idle spell would breach a
+        // zero target. The MIN_SHARE_FRAC floor keeps every share
+        // strictly positive.
+        let t0 = Instant::now();
+        let reg = ModelRegistry::build(&cfg(Some(10.0)), two_model_regs(), t0).unwrap();
+        let w = Duration::from_millis(10);
+        reg.note_batch(t0 + w / 2, 0, 1, 100, 100.0, false);
+        reg.note_batch(t0 + w, 0, 1, 0, 0.0, false); // close: b idle
+        let snap = reg.snapshot();
+        let b_share = snap.models[1].envelope_share.unwrap();
+        let floor = 10.0 * MIN_SHARE_FRAC / 2.0;
+        assert!(
+            (b_share - floor).abs() < 1e-12,
+            "idle model must keep the floor share, got {b_share}"
+        );
+        assert!(snap.models[0].envelope_share.unwrap() > b_share);
+    }
+}

@@ -42,6 +42,14 @@ pub enum ServeError {
     /// silently falling through every comparison to the cheapest
     /// point.
     BadBudget,
+    /// The request named a model that is not in the server's registry
+    /// (or named any model at all on a single-model server, which has
+    /// no registry).
+    UnknownModel(String),
+    /// The server registers several models and the request did not say
+    /// which one to run ([`InferRequest::model`]); with more than one
+    /// registered model there is no safe default to route to.
+    ModelRequired,
 }
 
 impl std::fmt::Display for ServeError {
@@ -57,6 +65,10 @@ impl std::fmt::Display for ServeError {
             ServeError::Engine(msg) => write!(f, "engine failure: {msg}"),
             ServeError::BadMenu(msg) => write!(f, "bad operating-point menu: {msg}"),
             ServeError::BadBudget => write!(f, "NaN energy budget"),
+            ServeError::UnknownModel(name) => write!(f, "unknown model '{name}'"),
+            ServeError::ModelRequired => {
+                write!(f, "multi-model server: the request must name a model")
+            }
         }
     }
 }
@@ -67,8 +79,11 @@ impl std::error::Error for ServeError {}
 /// requests compete for a worker.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum Priority {
+    /// Latency-sensitive: drains before every other class.
     Hi,
+    /// The default class.
     Normal,
+    /// Drains only when the higher lanes are empty.
     BestEffort,
 }
 
@@ -89,6 +104,7 @@ impl Priority {
     pub const ALL: [Priority; N_PRIORITIES] =
         [Priority::Hi, Priority::Normal, Priority::BestEffort];
 
+    /// Stable lower-case label (reports, bench JSON).
     pub fn name(self) -> &'static str {
         match self {
             Priority::Hi => "hi",
@@ -116,6 +132,7 @@ impl Priority {
 #[derive(Clone, Debug)]
 pub struct InferRequest {
     pub(crate) input: Vec<f32>,
+    pub(crate) model: Option<String>,
     pub(crate) deadline: Option<Duration>,
     pub(crate) max_gflips: Option<f64>,
     pub(crate) priority: Priority,
@@ -124,15 +141,28 @@ pub struct InferRequest {
 }
 
 impl InferRequest {
+    /// A request with default QoS (no deadline, no cap, [`Priority::Normal`]).
     pub fn new(input: Vec<f32>) -> InferRequest {
         InferRequest {
             input,
+            model: None,
             deadline: None,
             max_gflips: None,
             priority: Priority::Normal,
             pin: None,
             tag: None,
         }
+    }
+
+    /// Route to the named registered model (fleet servers,
+    /// [`crate::coordinator::ServerBuilder::register`]). Required when
+    /// more than one model is registered ([`ServeError::ModelRequired`]
+    /// otherwise); a fleet of exactly one model routes unnamed requests
+    /// to it, and a single-model server rejects any named model with
+    /// [`ServeError::UnknownModel`].
+    pub fn model(mut self, name: impl Into<String>) -> Self {
+        self.model = Some(name.into());
+        self
     }
 
     /// Reject (unexecuted) if not *started* within `d` of submission.
@@ -148,6 +178,7 @@ impl InferRequest {
         self
     }
 
+    /// Scheduling class (default [`Priority::Normal`]).
     pub fn priority(mut self, p: Priority) -> Self {
         self.priority = p;
         self
@@ -169,9 +200,14 @@ impl InferRequest {
 /// One served response.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Response {
+    /// Flattened output logits of the sample.
     pub output: Vec<f32>,
+    /// Registered model that served the request (`None` on a
+    /// single-model server).
+    pub model: Option<String>,
     /// Operating point that served the request.
     pub point: String,
+    /// Submission-to-response wall time.
     pub latency: Duration,
     /// Energy charged to this request (Giga bit flips) under the
     /// *modeled* per-sample cost of the serving point.
@@ -261,16 +297,19 @@ mod tests {
         let r = InferRequest::new(vec![1.0, 2.0]);
         assert_eq!(r.priority, Priority::Normal);
         assert!(r.deadline.is_none() && r.max_gflips.is_none() && r.pin.is_none());
+        assert!(r.model.is_none());
         let r = r
             .deadline(Duration::from_millis(5))
             .max_gflips(0.25)
             .priority(Priority::Hi)
             .pin_point("p8")
+            .model("resnet")
             .tag("t");
         assert_eq!(r.deadline, Some(Duration::from_millis(5)));
         assert_eq!(r.max_gflips, Some(0.25));
         assert_eq!(r.priority, Priority::Hi);
         assert_eq!(r.pin.as_deref(), Some("p8"));
+        assert_eq!(r.model.as_deref(), Some("resnet"));
         assert_eq!(r.tag.as_deref(), Some("t"));
     }
 

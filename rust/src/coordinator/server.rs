@@ -26,6 +26,7 @@ use super::batcher::{Pending, RequestQueue};
 use super::governor::{EnergyEnvelope, Governor, GovernorConfig, GovernorSnapshot};
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::policy::{Costed, EnginePoint, PowerPolicy};
+use super::registry::{FleetSnapshot, ModelRegistry};
 use super::request::{InferRequest, Priority, Response, ServeError, Ticket};
 use crate::nn::{ExecutionPlan, PowerMeter, Scratch};
 use anyhow::Result;
@@ -97,9 +98,11 @@ pub trait BatchEngine: Send + Sync {
 /// One pool operating point: an `Arc`-shared batch engine plus its
 /// energy cost.
 pub struct SharedPoint {
+    /// Point name (unique within its menu; pinnable).
     pub name: String,
     /// Energy per sample in Giga bit flips; `f64::INFINITY` for fp32.
     pub giga_flips_per_sample: f64,
+    /// The engine executing this point, shared across workers.
     pub engine: Arc<dyn BatchEngine>,
 }
 
@@ -126,10 +129,13 @@ pub struct PlanEngine {
 }
 
 impl PlanEngine {
+    /// Engine over `plan`, answering at most `max_batch` samples per
+    /// call (clamped to ≥ 1).
     pub fn new(plan: Arc<ExecutionPlan>, max_batch: usize) -> PlanEngine {
         PlanEngine { plan, max_batch: max_batch.max(1), meters: Mutex::new(Vec::new()) }
     }
 
+    /// The compiled plan this engine executes.
     pub fn plan(&self) -> &Arc<ExecutionPlan> {
         &self.plan
     }
@@ -175,10 +181,14 @@ pub struct NativeEngine {
 }
 
 impl NativeEngine {
+    /// Engine over a prepared model's plan (see
+    /// [`NativeEngine::from_plan`]).
     pub fn new(qm: &crate::nn::QuantizedModel, max_batch: usize) -> NativeEngine {
         NativeEngine::from_plan(qm.plan(), max_batch)
     }
 
+    /// Engine over `plan` with its own scratch arena and meter,
+    /// answering at most `max_batch` samples per call (clamped to ≥ 1).
     pub fn from_plan(plan: Arc<ExecutionPlan>, max_batch: usize) -> NativeEngine {
         let meter = plan.new_meter();
         NativeEngine { plan, max_batch: max_batch.max(1), scratch: Scratch::new(), meter }
@@ -377,9 +387,17 @@ impl Menu {
 /// additionally walks the served budget along the menu frontier so
 /// sustained load degrades accuracy gracefully instead of blowing the
 /// energy envelope (see [`super::governor`]).
-#[derive(Clone, Copy, Debug)]
+///
+/// A server can also host a **fleet**: [`ServerBuilder::register`]
+/// named menus (repeatable) and start them with
+/// [`ServerBuilder::serve_fleet`] — every model gets its own compiled
+/// frontier and budget cell behind the same worker pool, and a shared
+/// envelope is split across models by observed demand (see
+/// [`super::registry`]).
 pub struct ServerBuilder {
     config: ServerConfig,
+    /// Named menus for fleet serving (`register`/`serve_fleet`).
+    registrations: Vec<(String, Menu)>,
 }
 
 impl Default for ServerBuilder {
@@ -389,13 +407,14 @@ impl Default for ServerBuilder {
 }
 
 impl ServerBuilder {
+    /// A builder with [`ServerConfig::default`] knobs.
     pub fn new() -> ServerBuilder {
-        ServerBuilder { config: ServerConfig::default() }
+        ServerBuilder { config: ServerConfig::default(), registrations: Vec::new() }
     }
 
     /// Start from an existing config.
     pub fn from_config(config: ServerConfig) -> ServerBuilder {
-        ServerBuilder { config }
+        ServerBuilder { config, registrations: Vec::new() }
     }
 
     /// Worker threads for shared menus (clamped to ≥ 1). Local menus
@@ -461,10 +480,68 @@ impl ServerBuilder {
         self
     }
 
+    /// Register a named menu for fleet serving. Repeatable — each call
+    /// adds one model; start them together with
+    /// [`ServerBuilder::serve_fleet`]. The menu must be pool-shareable
+    /// ([`Menu::shared`] or a [`Menu::from_artifact`] menu, whose model
+    /// fingerprint is verified when the fleet starts); [`Menu::local`]
+    /// engines are `!Send` and are rejected at `serve_fleet`.
+    pub fn register(mut self, name: impl Into<String>, menu: Menu) -> Self {
+        self.registrations.push((name.into(), menu));
+        self
+    }
+
+    /// Start one server over every registered menu: N models, each with
+    /// its own compiled frontier and budget cell, behind **one** shared
+    /// worker pool and bounded queue. Requests pick their model with
+    /// [`InferRequest::model`] (optional when exactly one model is
+    /// registered) and batches stay point-coherent per model. With
+    /// [`ServerBuilder::envelope`] set, each model runs its own
+    /// [`Governor`] and the global envelope is split across models by
+    /// observed demand — a hot model degrades along its own frontier
+    /// before starving a cold one (see [`super::registry`]).
+    ///
+    /// [`InferRequest::model`]: super::request::InferRequest::model
+    pub fn serve_fleet(self) -> Result<Server> {
+        let cfg = self.config;
+        let metrics = Arc::new(Metrics::new());
+        let queue = Arc::new(RequestQueue::new(cfg.queue_depth, metrics.clone()));
+        let registry = Arc::new(ModelRegistry::build(&cfg, self.registrations, Instant::now())?);
+        // the fleet's "global" cell mirrors the last fleet-wide
+        // set_budget for reporting; selection reads the per-model cells
+        let budget_bits = Arc::new(AtomicU64::new(cfg.budget_gflips.to_bits()));
+        let mut workers = Vec::with_capacity(cfg.workers.max(1));
+        for _ in 0..cfg.workers.max(1) {
+            let queue = queue.clone();
+            let registry = registry.clone();
+            let metrics = metrics.clone();
+            workers.push(std::thread::spawn(move || {
+                fleet_worker(&queue, &registry, &metrics, cfg)
+            }));
+        }
+        let client = Client {
+            queue: queue.clone(),
+            budget_bits,
+            metrics,
+            serving: Serving::Fleet(registry),
+        };
+        Ok(Server { client, queue, workers })
+    }
+
     /// Start the server over `menu`. Blocks until the menu is built
     /// and validated (engine factories run first), so a returned
     /// `Server` is ready to serve.
+    ///
+    /// Single-model only: menus added with [`ServerBuilder::register`]
+    /// are served by [`ServerBuilder::serve_fleet`] instead, and mixing
+    /// the two is rejected.
     pub fn serve(self, menu: Menu) -> Result<Server> {
+        anyhow::ensure!(
+            self.registrations.is_empty(),
+            "this builder has {} registered menu(s) — serve them with serve_fleet(), or drop \
+             the register() calls to serve a single menu",
+            self.registrations.len()
+        );
         let cfg = self.config;
         let metrics = Arc::new(Metrics::new());
         let queue = Arc::new(RequestQueue::new(cfg.queue_depth, metrics.clone()));
@@ -491,8 +568,12 @@ impl ServerBuilder {
                         pool_worker(&queue, &policy, &metrics, &budget_bits, &governor, cfg)
                     }));
                 }
-                let client =
-                    Client { queue: queue.clone(), budget_bits, metrics, sample_len, governor };
+                let client = Client {
+                    queue: queue.clone(),
+                    budget_bits,
+                    metrics,
+                    serving: Serving::Single { sample_len, governor },
+                };
                 Ok(Server { client, queue, workers })
             }
             Menu::Local(factory) => {
@@ -526,8 +607,12 @@ impl ServerBuilder {
                 let (sample_len, governor) = ready_rx
                     .recv()
                     .map_err(|_| anyhow::anyhow!("server worker died during startup"))??;
-                let client =
-                    Client { queue: queue.clone(), budget_bits, metrics, sample_len, governor };
+                let client = Client {
+                    queue: queue.clone(),
+                    budget_bits,
+                    metrics,
+                    serving: Serving::Single { sample_len, governor },
+                };
                 Ok(Server { client, queue, workers: vec![worker] })
             }
             Menu::SharedDeferred(_) => unreachable!("resolved to Menu::Shared above"),
@@ -644,6 +729,7 @@ fn pool_worker(
             g.batch_started(t_batch);
         }
         respond_batch(
+            None,
             &point.name,
             point.giga_flips_per_sample,
             eng.sample_len(),
@@ -690,6 +776,7 @@ fn local_worker(
             g.batch_started(t_batch);
         }
         respond_batch(
+            None,
             &name,
             gf,
             sample_len,
@@ -709,6 +796,60 @@ fn local_worker(
     }
 }
 
+/// Fleet worker: like [`pool_worker`], but the classifier routes into
+/// the registry's global point index space, so each collected batch
+/// resolves to one `(model, point)` pair — executed on that model's
+/// engine, metered into that model's governor and the fleet arbiter's
+/// demand window.
+fn fleet_worker(
+    queue: &RequestQueue,
+    registry: &Arc<ModelRegistry>,
+    metrics: &Metrics,
+    cfg: ServerConfig,
+) {
+    let _guard = StopQueueOnDrop(queue);
+    let mut scratch = Scratch::new();
+    loop {
+        let collected = {
+            let mut classify = |p: &Pending| registry.classify(p);
+            queue.collect(cfg.max_batch, cfg.max_wait, &mut classify)
+        };
+        let Some((batch, global_idx)) = collected else { break };
+        let (mi, pi) = registry.locate(global_idx);
+        let model = registry.model(mi);
+        let point = model.policy.point(pi);
+        let eng = point.engine.as_ref();
+        let t_batch = Instant::now();
+        if let Some(g) = &model.governor {
+            g.batch_started(t_batch);
+        }
+        respond_batch(
+            Some(&model.name),
+            &point.name,
+            point.giga_flips_per_sample,
+            eng.sample_len(),
+            eng.max_batch(),
+            batch,
+            metrics,
+            |n, gf, metered| registry.note_batch(Instant::now(), mi, pi, n, gf, metered),
+            |x, n| eng.infer_batch_metered(x, n, &mut scratch),
+        );
+        if let Some(g) = &model.governor {
+            g.batch_finished(t_batch);
+        }
+    }
+}
+
+/// What a [`Client`] fronts: one menu, or a registered fleet.
+#[derive(Clone)]
+enum Serving {
+    /// Single-model server (`serve`): one sample length, at most one
+    /// governor.
+    Single { sample_len: usize, governor: Option<Arc<Governor>> },
+    /// Fleet server (`serve_fleet`): models resolved by name.
+    Fleet(Arc<ModelRegistry>),
+}
+
 /// Client handle: submit QoS-tagged requests, change the global
 /// budget, read metrics. Cheap to clone; every clone feeds the same
 /// server.
@@ -717,18 +858,44 @@ pub struct Client {
     queue: Arc<RequestQueue>,
     budget_bits: Arc<AtomicU64>,
     metrics: Arc<Metrics>,
-    sample_len: usize,
-    governor: Option<Arc<Governor>>,
+    serving: Serving,
 }
 
 impl Client {
     /// Submit one request; returns the [`Ticket`] its result arrives
     /// on. Sheds immediately with [`ServeError::QueueFull`] when the
     /// bounded queue is at depth, and rejects inputs of the wrong
-    /// length with [`ServeError::BadInput`].
+    /// length with [`ServeError::BadInput`]. On a fleet server the
+    /// request's model name is resolved here (typed
+    /// [`ServeError::UnknownModel`] / [`ServeError::ModelRequired`]
+    /// rejections), so the hot path works on indices.
     pub fn submit(&self, req: InferRequest) -> Result<Ticket, ServeError> {
-        if req.input.len() != self.sample_len {
-            return Err(ServeError::BadInput { expected: self.sample_len, got: req.input.len() });
+        let (model_idx, expected_len) = match &self.serving {
+            Serving::Single { sample_len, .. } => {
+                if let Some(name) = req.model {
+                    // a single-model server has no registry to resolve
+                    // names against — reject rather than silently serve
+                    // a different network than the caller asked for
+                    return Err(ServeError::UnknownModel(name));
+                }
+                (0, *sample_len)
+            }
+            Serving::Fleet(reg) => {
+                let idx = match &req.model {
+                    Some(name) => reg
+                        .resolve(name)
+                        .ok_or_else(|| ServeError::UnknownModel(name.clone()))?,
+                    // a fleet of one routes unnamed requests to it, so
+                    // single-menu CLI/workflows work unchanged; with
+                    // several models there is no safe default
+                    None if reg.n_models() == 1 => 0,
+                    None => return Err(ServeError::ModelRequired),
+                };
+                (idx, reg.model(idx).sample_len)
+            }
+        };
+        if req.input.len() != expected_len {
+            return Err(ServeError::BadInput { expected: expected_len, got: req.input.len() });
         }
         // A NaN cap would vanish inside `f64::min` at classification
         // time (min ignores NaN operands) — reject it at admission.
@@ -740,6 +907,7 @@ impl Client {
         let now = Instant::now();
         self.queue.push(Pending {
             input: req.input,
+            model: model_idx,
             submitted: now,
             deadline: req.deadline.map(|d| now + d),
             priority: req.priority,
@@ -760,7 +928,10 @@ impl Client {
     /// Change the global per-sample energy budget at runtime — the
     /// paper's "traverse the power-accuracy trade-off at deployment
     /// time". Per-request `max_gflips` caps are applied *on top* of
-    /// this (the scheduler selects under the minimum of the two).
+    /// this (the scheduler selects under the minimum of the two). On a
+    /// fleet server this moves **every** model's budget cell together
+    /// (the fleet-wide traversal); [`Client::set_model_budget`] moves
+    /// one model alone.
     ///
     /// When the server runs a closed-loop [`Governor`]
     /// ([`ServerBuilder::envelope`]), the governor starts each
@@ -769,25 +940,121 @@ impl Client {
     /// point it rewrites the cell with a frontier point's exact cost.
     pub fn set_budget(&self, gflips: f64) {
         self.budget_bits.store(gflips.to_bits(), Ordering::Relaxed);
+        if let Serving::Fleet(reg) = &self.serving {
+            for i in 0..reg.n_models() {
+                reg.model(i).budget_bits.store(gflips.to_bits(), Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Change one registered model's budget cell (fleet servers);
+    /// returns `false` when no model by that name is registered (or on
+    /// a single-model server, which has no named models).
+    pub fn set_model_budget(&self, model: &str, gflips: f64) -> bool {
+        let Serving::Fleet(reg) = &self.serving else {
+            return false;
+        };
+        match reg.resolve(model) {
+            Some(i) => {
+                reg.model(i).budget_bits.store(gflips.to_bits(), Ordering::Relaxed);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// One registered model's current budget (Gflips/sample); `None`
+    /// when unknown or on a single-model server.
+    pub fn model_budget(&self, model: &str) -> Option<f64> {
+        let Serving::Fleet(reg) = &self.serving else {
+            return None;
+        };
+        reg.resolve(model)
+            .map(|i| f64::from_bits(reg.model(i).budget_bits.load(Ordering::Relaxed)))
     }
 
     /// Snapshot of the closed-loop energy governor; `None` on an
     /// open-loop server (no [`ServerBuilder::envelope`] configured).
+    /// On a fleet server each model has its *own* governor: a fleet of
+    /// exactly one model answers with it (so single-menu workflows are
+    /// unchanged), larger fleets answer `None` — use
+    /// [`Client::model_governor`] / [`Client::fleet`] instead.
     pub fn governor(&self) -> Option<GovernorSnapshot> {
-        self.governor.as_ref().map(|g| g.snapshot())
+        match &self.serving {
+            Serving::Single { governor, .. } => governor.as_ref().map(|g| g.snapshot()),
+            Serving::Fleet(reg) if reg.n_models() == 1 => {
+                reg.model(0).governor.as_ref().map(|g| g.snapshot())
+            }
+            Serving::Fleet(_) => None,
+        }
     }
 
+    /// One registered model's governor snapshot; `None` when unknown,
+    /// open-loop, or on a single-model server (use [`Client::governor`]
+    /// there).
+    pub fn model_governor(&self, model: &str) -> Option<GovernorSnapshot> {
+        let Serving::Fleet(reg) = &self.serving else {
+            return None;
+        };
+        reg.resolve(model)
+            .and_then(|i| reg.model(i).governor.as_ref().map(|g| g.snapshot()))
+    }
+
+    /// Registered model names, in registration order (empty on a
+    /// single-model server).
+    pub fn models(&self) -> Vec<String> {
+        match &self.serving {
+            Serving::Single { .. } => Vec::new(),
+            Serving::Fleet(reg) => reg.model_names(),
+        }
+    }
+
+    /// Whole-fleet snapshot — per-model budgets, demand estimates,
+    /// envelope shares and governors; `None` on a single-model server.
+    pub fn fleet(&self) -> Option<FleetSnapshot> {
+        match &self.serving {
+            Serving::Single { .. } => None,
+            Serving::Fleet(reg) => Some(reg.snapshot()),
+        }
+    }
+
+    /// The last fleet-wide/global budget written (Gflips/sample). On a
+    /// fleet server individual model cells may have diverged via
+    /// [`Client::set_model_budget`] or their governors — read those
+    /// with [`Client::model_budget`].
     pub fn budget(&self) -> f64 {
-        f64::from_bits(self.budget_bits.load(Ordering::Relaxed))
+        match &self.serving {
+            Serving::Fleet(reg) if reg.n_models() == 1 => {
+                // fleet-of-one: report the one real cell, which the
+                // model's governor may be rewriting
+                f64::from_bits(reg.model(0).budget_bits.load(Ordering::Relaxed))
+            }
+            _ => f64::from_bits(self.budget_bits.load(Ordering::Relaxed)),
+        }
     }
 
+    /// Point-in-time serving metrics (latency, energy, rejections).
     pub fn metrics(&self) -> MetricsSnapshot {
         self.metrics.snapshot()
     }
 
-    /// Flattened per-sample input length the menu expects.
+    /// Flattened per-sample input length the menu expects. On a fleet
+    /// server models may disagree — this answers for the *first*
+    /// registered model; use [`Client::sample_len_for`] per model.
     pub fn sample_len(&self) -> usize {
-        self.sample_len
+        match &self.serving {
+            Serving::Single { sample_len, .. } => *sample_len,
+            Serving::Fleet(reg) => reg.model(0).sample_len,
+        }
+    }
+
+    /// Per-sample input length of one registered model; `None` when
+    /// unknown or on a single-model server.
+    pub fn sample_len_for(&self, model: &str) -> Option<usize> {
+        let Serving::Fleet(reg) = &self.serving else {
+            return None;
+        };
+        reg.resolve(model).map(|i| reg.model(i).sample_len)
     }
 
     /// Admission-control bound.
@@ -810,6 +1077,7 @@ impl Server {
         ServerBuilder::new()
     }
 
+    /// A handle feeding this server; cheap to clone.
     pub fn client(&self) -> Client {
         self.client.clone()
     }
@@ -842,9 +1110,13 @@ impl Drop for Server {
 /// energy it metered (`None` for meter-less backends); `on_energy` is
 /// told, per executed chunk, `(samples, Gflips observed, metered?)` —
 /// the governor's feed — *before* responses go out, so a client that
-/// has its response never races a stale governor.
+/// has its response never races a stale governor. `model` is the
+/// registry name serving the batch (`None` on a single-model server):
+/// it qualifies the metrics key — two models' same-named points must
+/// not alias — and is echoed on every [`Response`].
 #[allow(clippy::too_many_arguments)]
 fn respond_batch<F>(
+    model: Option<&str>,
     name: &str,
     gf_per_sample: f64,
     sample_len: usize,
@@ -905,11 +1177,12 @@ fn respond_batch<F>(
                     f64::INFINITY
                 });
                 on_energy(n as u64, observed, measured.is_some());
-                metrics.record_batch(name, &lats, batch_gf, measured);
+                metrics.record_batch(model, name, &lats, batch_gf, measured);
                 let measured_each = measured.map(|m| m / n as f64);
                 for (i, r) in chunk.iter().enumerate() {
                     let _ = r.resp.send(Ok(Response {
                         output: out[i * ol..(i + 1) * ol].to_vec(),
+                        model: model.map(str::to_string),
                         point: name.to_string(),
                         latency: Duration::from_secs_f64(lats[i].0 * 1e-6),
                         giga_flips: if gf_per_sample.is_finite() { gf_per_sample } else { 0.0 },
@@ -1585,6 +1858,251 @@ mod tests {
         low.wait().unwrap();
         // Hi was submitted after BestEffort but executed first
         assert_eq!(gate.served(), vec![1.0, 20.0, 10.0]);
+        srv.shutdown();
+    }
+
+    // --- fleet serving (ServerBuilder::register + serve_fleet) ---
+
+    /// Two registered models with *identical point names* but distinct
+    /// costs and sample lengths, so aliasing anywhere shows up fast.
+    fn fleet_regs() -> Vec<(String, Menu)> {
+        let menu_a = Menu::shared(vec![
+            SharedPoint {
+                name: "cheap".into(),
+                giga_flips_per_sample: 0.1,
+                engine: Arc::new(MockEngine::new(4, 3, 2)),
+            },
+            SharedPoint {
+                name: "rich".into(),
+                giga_flips_per_sample: 0.9,
+                engine: Arc::new(MockEngine::new(4, 3, 2)),
+            },
+        ]);
+        let menu_b = Menu::shared(vec![
+            SharedPoint {
+                name: "cheap".into(),
+                giga_flips_per_sample: 0.2,
+                engine: Arc::new(MockEngine::new(4, 5, 3)),
+            },
+            SharedPoint {
+                name: "rich".into(),
+                giga_flips_per_sample: 2.0,
+                engine: Arc::new(MockEngine::new(4, 5, 3)),
+            },
+        ]);
+        vec![("a".to_string(), menu_a), ("b".to_string(), menu_b)]
+    }
+
+    fn fleet_builder() -> ServerBuilder {
+        let mut b = ServerBuilder::new().workers(2).budget_gflips(5.0);
+        for (name, menu) in fleet_regs() {
+            b = b.register(name, menu);
+        }
+        b
+    }
+
+    #[test]
+    fn fleet_routes_by_model_and_checks_per_model_input_len() {
+        let srv = fleet_builder().serve_fleet().unwrap();
+        let c = srv.client();
+        assert_eq!(c.models(), vec!["a", "b"]);
+        assert_eq!(c.sample_len_for("a"), Some(3));
+        assert_eq!(c.sample_len_for("b"), Some(5));
+        let ra = c
+            .submit(InferRequest::new(vec![1.0, 2.0, 3.0]).model("a"))
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(ra.output, vec![6.0, 7.0]);
+        assert_eq!(ra.model.as_deref(), Some("a"));
+        assert_eq!(ra.point, "rich");
+        let rb = c
+            .submit(InferRequest::new(vec![1.0; 5]).model("b"))
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(rb.output, vec![5.0, 6.0, 7.0]);
+        assert_eq!(rb.model.as_deref(), Some("b"));
+        assert_eq!(rb.point, "rich");
+        // typed routing failures
+        assert_eq!(
+            c.submit(InferRequest::new(vec![0.0; 3]).model("nope")).unwrap_err(),
+            ServeError::UnknownModel("nope".into())
+        );
+        assert_eq!(
+            c.submit(InferRequest::new(vec![0.0; 3])).unwrap_err(),
+            ServeError::ModelRequired
+        );
+        // input length is checked against the *request's* model
+        assert_eq!(
+            c.submit(InferRequest::new(vec![0.0; 3]).model("b")).unwrap_err(),
+            ServeError::BadInput { expected: 5, got: 3 }
+        );
+        srv.shutdown();
+    }
+
+    #[test]
+    fn fleet_metrics_key_by_model_so_same_point_names_cannot_alias() {
+        // The registry-mode aliasing bugfix: both menus name their
+        // points "cheap"/"rich"; per-point counters must stay separate.
+        let srv = fleet_builder().serve_fleet().unwrap();
+        let c = srv.client();
+        for _ in 0..2 {
+            c.submit(InferRequest::new(vec![0.0; 3]).model("a")).unwrap().wait().unwrap();
+        }
+        c.submit(InferRequest::new(vec![0.0; 5]).model("b")).unwrap().wait().unwrap();
+        let m = c.metrics();
+        let per: std::collections::BTreeMap<_, _> = m.per_point.iter().cloned().collect();
+        assert_eq!(per.get("a:rich"), Some(&2));
+        assert_eq!(per.get("b:rich"), Some(&1));
+        assert!(
+            !per.contains_key("rich"),
+            "fleet metrics must be model-qualified, got {per:?}"
+        );
+        srv.shutdown();
+    }
+
+    #[test]
+    fn fleet_per_model_budget_traversal_and_pins() {
+        let srv = fleet_builder().serve_fleet().unwrap();
+        let c = srv.client();
+        // fleet-wide traversal moves both models
+        c.set_budget(0.15);
+        let ra = c.submit(InferRequest::new(vec![0.0; 3]).model("a")).unwrap().wait().unwrap();
+        let rb = c.submit(InferRequest::new(vec![0.0; 5]).model("b")).unwrap().wait().unwrap();
+        assert_eq!(ra.point, "cheap");
+        assert_eq!(rb.point, "cheap"); // 0.15 < 0.2 -> falls back to cheapest
+        // per-model budget moves one model only
+        assert!(c.set_model_budget("b", 5.0));
+        assert!(!c.set_model_budget("nope", 5.0));
+        assert_eq!(c.model_budget("b"), Some(5.0));
+        assert_eq!(c.model_budget("a"), Some(0.15));
+        let ra = c.submit(InferRequest::new(vec![0.0; 3]).model("a")).unwrap().wait().unwrap();
+        let rb = c.submit(InferRequest::new(vec![0.0; 5]).model("b")).unwrap().wait().unwrap();
+        assert_eq!(ra.point, "cheap", "model a's budget untouched");
+        assert_eq!(rb.point, "rich", "model b's budget raised alone");
+        // pins resolve against the request's model
+        let r = c
+            .submit(InferRequest::new(vec![0.0; 3]).model("a").pin_point("rich"))
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!((r.model.as_deref(), r.point.as_str()), (Some("a"), "rich"));
+        srv.shutdown();
+    }
+
+    #[test]
+    fn fleet_of_one_serves_unnamed_requests() {
+        let (name, menu) = fleet_regs().remove(0);
+        let srv = ServerBuilder::new().register(name, menu).serve_fleet().unwrap();
+        let c = srv.client();
+        let r = c.infer(vec![1.0, 2.0, 3.0]).unwrap();
+        assert_eq!(r.output, vec![6.0, 7.0]);
+        assert_eq!(r.model.as_deref(), Some("a"));
+        srv.shutdown();
+    }
+
+    #[test]
+    fn single_model_server_rejects_model_field_and_mixed_builders() {
+        let srv = ServerBuilder::new().serve(Menu::shared(shared_points())).unwrap();
+        let c = srv.client();
+        assert_eq!(
+            c.submit(InferRequest::new(vec![0.0; 3]).model("a")).unwrap_err(),
+            ServeError::UnknownModel("a".into())
+        );
+        // fleet-only accessors answer None/empty on a single-model server
+        assert!(c.models().is_empty());
+        assert!(c.fleet().is_none());
+        assert_eq!(c.model_budget("a"), None);
+        assert!(c.model_governor("a").is_none());
+        srv.shutdown();
+        // register + serve(menu) is a typed startup error
+        let (name, menu) = fleet_regs().remove(0);
+        let e = ServerBuilder::new()
+            .register(name, menu)
+            .serve(Menu::shared(shared_points()))
+            .unwrap_err();
+        assert!(e.to_string().contains("serve_fleet"), "{e}");
+        // serve_fleet without registrations is a typed startup error
+        assert!(ServerBuilder::new().serve_fleet().is_err());
+    }
+
+    #[test]
+    fn fleet_envelope_starves_hot_model_before_cold_one() {
+        // Model "hot" floods; model "cold" trickles. One shared
+        // envelope: hot must walk ITS frontier down while cold keeps
+        // serving its most accurate point.
+        let menu = |cheap: f64, rich: f64, in_len: usize| {
+            Menu::shared(vec![
+                SharedPoint {
+                    name: "cheap".into(),
+                    giga_flips_per_sample: cheap,
+                    engine: Arc::new(MockEngine::new(8, in_len, 2)),
+                },
+                SharedPoint {
+                    name: "rich".into(),
+                    giga_flips_per_sample: rich,
+                    engine: Arc::new(MockEngine::new(8, in_len, 2)),
+                },
+            ])
+        };
+        let srv = ServerBuilder::new()
+            .workers(2)
+            .max_batch(4)
+            .max_wait(Duration::from_micros(100))
+            .envelope(EnergyEnvelope::gflips_per_sec(50.0))
+            .governor_window(Duration::from_millis(5))
+            .governor_hysteresis(1)
+            // cold's whole frontier is ~4 orders cheaper than hot's
+            // rich point, so even an aggressive probe rate keeps cold's
+            // demand-need far inside the envelope while hot blows it
+            .register("hot", menu(0.1, 10.0, 3))
+            .register("cold", menu(0.0001, 0.001, 3))
+            .serve_fleet()
+            .unwrap();
+        let c = srv.client();
+        // flood "hot" from this thread until it degrades (the envelope
+        // cannot sustain 10 GF/sample at any realistic rate); "cold"
+        // stays idle throughout — its governor must not move
+        let t0 = Instant::now();
+        let mut hot_degraded = false;
+        while t0.elapsed() < Duration::from_secs(20) {
+            let rh = c
+                .submit(InferRequest::new(vec![0.0; 3]).model("hot"))
+                .unwrap()
+                .wait()
+                .unwrap();
+            assert_eq!(rh.model.as_deref(), Some("hot"));
+            if rh.point == "cheap" {
+                hot_degraded = true;
+                break;
+            }
+        }
+        assert!(hot_degraded, "hot model never degraded under flood");
+        // cold requests — paced no tighter than the governor window,
+        // so a window can never hold more load than the share floor
+        // covers — keep being served at cold's most accurate point
+        let mut cold_points = Vec::new();
+        for _ in 0..3 {
+            let rc = c
+                .submit(InferRequest::new(vec![0.0; 3]).model("cold"))
+                .unwrap()
+                .wait()
+                .unwrap();
+            cold_points.push(rc.point);
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert!(
+            cold_points.iter().all(|p| p == "rich"),
+            "cold model must keep its most accurate point, got {cold_points:?}"
+        );
+        let gh = c.model_governor("hot").expect("hot governor");
+        let gc = c.model_governor("cold").expect("cold governor");
+        assert!(gh.switches >= 1, "hot governor must have stepped");
+        assert_eq!(gc.level, 1, "cold governor must still sit at its top point");
+        let fleet = c.fleet().expect("fleet snapshot");
+        assert_eq!(fleet.models.len(), 2);
+        assert!(fleet.report().contains("model hot"));
         srv.shutdown();
     }
 

@@ -14,14 +14,17 @@ pub struct Dataset {
     pub x: Vec<f32>,
     /// Labels.
     pub y: Vec<u32>,
+    /// Number of label classes.
     pub classes: usize,
 }
 
 impl Dataset {
+    /// Number of samples.
     pub fn len(&self) -> usize {
         self.y.len()
     }
 
+    /// Whether the split holds no samples.
     pub fn is_empty(&self) -> bool {
         self.y.is_empty()
     }

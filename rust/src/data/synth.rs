@@ -12,12 +12,19 @@ use crate::util::Rng;
 /// row-major, labels in `[0, classes)`.
 #[derive(Clone, Debug)]
 pub struct SynthBatch {
+    /// Flattened images, `n × c × h × w` row-major.
     pub x: Vec<f32>,
+    /// Labels in `[0, classes)`.
     pub y: Vec<u32>,
+    /// Number of samples.
     pub n: usize,
+    /// Channels per image.
     pub c: usize,
+    /// Image height.
     pub h: usize,
+    /// Image width.
     pub w: usize,
+    /// Number of label classes.
     pub classes: usize,
 }
 

@@ -20,22 +20,28 @@ const MAGIC: &[u8; 4] = b"PTNS";
 /// A loaded tensor: shape plus typed payload.
 #[derive(Clone, Debug, PartialEq)]
 pub enum TensorData {
+    /// 32-bit float payload.
     F32(Vec<usize>, Vec<f32>),
+    /// 32-bit signed integer payload.
     I32(Vec<usize>, Vec<i32>),
+    /// Byte payload.
     U8(Vec<usize>, Vec<u8>),
 }
 
 impl TensorData {
+    /// The tensor's shape.
     pub fn shape(&self) -> &[usize] {
         match self {
             TensorData::F32(s, _) | TensorData::I32(s, _) | TensorData::U8(s, _) => s,
         }
     }
 
+    /// Total number of elements.
     pub fn len(&self) -> usize {
         self.shape().iter().product()
     }
 
+    /// Whether the tensor holds no elements.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }

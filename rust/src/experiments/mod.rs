@@ -33,6 +33,7 @@ impl Default for Ctx {
 }
 
 impl Ctx {
+    /// A default context with `quick` speed-ups enabled.
     pub fn quick() -> Self {
         Ctx { quick: true, ..Default::default() }
     }
@@ -96,9 +97,10 @@ pub fn dataset_for(model: &str) -> &'static str {
     }
 }
 
-/// All experiment ids with their drivers.
+/// One experiment driver.
 pub type ExpFn = fn(&Ctx) -> Result<()>;
 
+/// Every experiment id with its driver.
 pub const ALL: &[(&str, ExpFn)] = &[
     ("table1", power_sims::table1),
     ("table5", power_sims::table5),

@@ -47,15 +47,26 @@
 //!   actually served against an [`coordinator::EnergyEnvelope`]
 //!   (Gflips/sec) and walks the budget along the frontier with
 //!   hysteresis, so sustained load degrades accuracy gracefully and
-//!   idle periods climb back.
+//!   idle periods climb back. One server can host a **fleet** of
+//!   models ([`coordinator::registry`]): `ServerBuilder::register`
+//!   named menus, serve them all from one pool, and the shared
+//!   envelope is split across models by observed demand, so a hot
+//!   model degrades along its own frontier before starving a cold
+//!   one.
 //! - [`experiments`] — one driver per table/figure of the paper.
 //!
 //! Power is reported in **bit flips**, exactly as in the paper
 //! (footnote 2: pJ/flip is platform specific; flip counts are not).
 //!
-//! See `rust/README.md` for a quickstart, the crate map and the
-//! paper-to-code table; `rust/EXPERIMENTS.md` documents measurement
-//! protocols and every artifact schema (`menu.json`, `BENCH_*.json`).
+//! See `rust/README.md` for a quickstart and the crate map,
+//! `rust/ARCHITECTURE.md` for the system document (request lifecycle,
+//! module map, the paper→code table), and `rust/EXPERIMENTS.md` for
+//! measurement protocols and every artifact schema (`menu.json`,
+//! `BENCH_*.json`).
+
+// Every public item in this crate is documented, and CI's
+// `RUSTDOCFLAGS=-D warnings` doc job keeps it that way.
+#![warn(missing_docs)]
 
 pub mod bitflip;
 pub mod coordinator;

@@ -8,9 +8,19 @@
 //!               [--queue-depth D] [--deadline-ms MS]
 //!               [--envelope-gflips RATE] [--governor-window-ms MS]
 //!               [--calibrate-out menu.json (requires --menu)]
+//! pann-cli serve --menu NAME=menu.json --menu NAME2=menu2.json ...   (fleet mode)
+//!               [--requests N] [--budget GFLIPS] [--queue-depth D]
+//!               [--deadline-ms MS] [--envelope-gflips RATE] [--governor-window-ms MS]
 //! pann-cli sweep --model NAME [--quick]
 //! pann-cli list
 //! ```
+//!
+//! `--menu` is repeatable: one plain `--menu menu.json` serves a single
+//! model exactly as before, while `NAME=path` entries register each
+//! artifact as a named model in one fleet server
+//! (`ServerBuilder::register` + `serve_fleet`) — every NAME is loaded
+//! with `Ctx::load_model(NAME)` and fingerprint-checked against its
+//! artifact.
 //!
 //! (Hand-rolled argument parsing: the offline registry for this build
 //! carries no `clap`.)
@@ -32,14 +42,33 @@ fn main() {
 
 struct Args {
     cmd: String,
-    flags: std::collections::BTreeMap<String, String>,
+    /// Every occurrence of each flag, in order — `--menu` is
+    /// repeatable (fleet mode); single-valued flags read the last.
+    flags: std::collections::BTreeMap<String, Vec<String>>,
     positional: Vec<String>,
+}
+
+impl Args {
+    /// Last value of a single-valued flag.
+    fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).and_then(|v| v.last()).map(String::as_str)
+    }
+
+    /// Every value of a repeatable flag.
+    fn all(&self, name: &str) -> &[String] {
+        self.flags.get(name).map_or(&[], Vec::as_slice)
+    }
+
+    fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
 }
 
 fn parse_args() -> Args {
     let mut argv = std::env::args().skip(1);
     let cmd = argv.next().unwrap_or_else(|| "help".to_string());
-    let mut flags = std::collections::BTreeMap::new();
+    let mut flags: std::collections::BTreeMap<String, Vec<String>> =
+        std::collections::BTreeMap::new();
     let mut positional = Vec::new();
     let rest: Vec<String> = argv.collect();
     let mut i = 0;
@@ -47,10 +76,10 @@ fn parse_args() -> Args {
         if let Some(name) = rest[i].strip_prefix("--") {
             let has_val = i + 1 < rest.len() && !rest[i + 1].starts_with("--");
             if has_val {
-                flags.insert(name.to_string(), rest[i + 1].clone());
+                flags.entry(name.to_string()).or_default().push(rest[i + 1].clone());
                 i += 2;
             } else {
-                flags.insert(name.to_string(), "true".to_string());
+                flags.entry(name.to_string()).or_default().push("true".to_string());
                 i += 1;
             }
         } else {
@@ -65,9 +94,9 @@ fn run() -> Result<()> {
     let args = parse_args();
     let ctx = Ctx {
         artifacts: PathBuf::from(
-            args.flags.get("artifacts").cloned().unwrap_or_else(|| "artifacts".into()),
+            args.get("artifacts").map(str::to_string).unwrap_or_else(|| "artifacts".into()),
         ),
-        quick: args.flags.contains_key("quick"),
+        quick: args.has("quick"),
     };
     match args.cmd.as_str() {
         "list" => {
@@ -92,32 +121,25 @@ fn run() -> Result<()> {
             }
         }
         "power-report" => {
-            let bits: u32 = args.flags.get("bits").map_or(Ok(4), |s| s.parse())?;
-            let acc: u32 = args.flags.get("acc-bits").map_or(Ok(32), |s| s.parse())?;
+            let bits: u32 = args.get("bits").map_or(Ok(4), |s| s.parse())?;
+            let acc: u32 = args.get("acc-bits").map_or(Ok(32), |s| s.parse())?;
             power_report(bits, acc)
         }
         "serve" => {
-            let model = args.flags.get("model").cloned().unwrap_or_else(|| "cnn-s".into());
-            let n: usize = args.flags.get("requests").map_or(Ok(256), |s| s.parse())?;
-            let budget: f64 = args
-                .flags
-                .get("budget")
-                .map_or(Ok(f64::INFINITY), |s| s.parse())?;
-            let queue_depth: usize = args
-                .flags
-                .get("queue-depth")
-                .map_or(Ok(256), |s| s.parse())?;
-            let deadline_ms: Option<u64> = match args.flags.get("deadline-ms") {
+            let model = args.get("model").map(str::to_string).unwrap_or_else(|| "cnn-s".into());
+            let n: usize = args.get("requests").map_or(Ok(256), |s| s.parse())?;
+            let budget: f64 = args.get("budget").map_or(Ok(f64::INFINITY), |s| s.parse())?;
+            let queue_depth: usize = args.get("queue-depth").map_or(Ok(256), |s| s.parse())?;
+            let deadline_ms: Option<u64> = match args.get("deadline-ms") {
                 Some(s) => Some(s.parse()?),
                 None => None,
             };
             // closed-loop governor: a sustained-energy envelope in
             // Gflips/sec, with an optional decision-window override
-            let governor = match args.flags.get("envelope-gflips") {
+            let governor = match args.get("envelope-gflips") {
                 Some(s) => {
                     let rate: f64 = s.parse().context("parse --envelope-gflips")?;
                     let window_ms: u64 = args
-                        .flags
                         .get("governor-window-ms")
                         .map_or(Ok(100), |s| s.parse())
                         .context("parse --governor-window-ms")?;
@@ -127,7 +149,7 @@ fn run() -> Result<()> {
                     Some(GovernorCli { rate, window_ms })
                 }
                 None => {
-                    if args.flags.contains_key("governor-window-ms") {
+                    if args.has("governor-window-ms") {
                         eprintln!(
                             "warning: --governor-window-ms requires --envelope-gflips \
                              (no governor runs without an envelope); ignoring"
@@ -136,8 +158,33 @@ fn run() -> Result<()> {
                     None
                 }
             };
-            let calibrate_out = args.flags.get("calibrate-out").cloned();
-            if let Some(menu_path) = args.flags.get("menu") {
+            let calibrate_out = args.get("calibrate-out").map(str::to_string);
+            let menus = args.all("menu");
+            // fleet mode: several --menu flags, or any NAME=path entry
+            if menus.len() >= 2 || menus.first().is_some_and(|m| m.contains('=')) {
+                let mut entries = Vec::with_capacity(menus.len());
+                for m in menus {
+                    let (name, path) = m.split_once('=').with_context(|| {
+                        format!(
+                            "fleet mode: every --menu must be NAME=path (got '{m}'); \
+                             a single plain --menu path serves one model"
+                        )
+                    })?;
+                    entries.push((name.to_string(), path.to_string()));
+                }
+                if calibrate_out.is_some() {
+                    eprintln!(
+                        "warning: --calibrate-out applies to single-menu serving only; ignoring"
+                    );
+                }
+                if args.has("model") {
+                    eprintln!(
+                        "warning: fleet mode loads each model from its --menu NAME; \
+                         --model is ignored"
+                    );
+                }
+                serve_fleet_cli(&ctx, &entries, n, budget, queue_depth, deadline_ms, governor)
+            } else if let Some(menu_path) = menus.first() {
                 serve_menu(
                     &ctx,
                     &model,
@@ -160,20 +207,18 @@ fn run() -> Result<()> {
             }
         }
         "compile-menu" => {
-            let model = args.flags.get("model").cloned().unwrap_or_else(|| "cnn-s".into());
+            let model = args.get("model").map(str::to_string).unwrap_or_else(|| "cnn-s".into());
             let bits: Vec<u32> = args
-                .flags
                 .get("budget-bits")
-                .map(String::as_str)
                 .unwrap_or("2,4,8")
                 .split(',')
                 .map(|s| s.trim().parse().context("parse --budget-bits"))
                 .collect::<Result<_>>()?;
-            let out = args.flags.get("out").cloned().unwrap_or_else(|| "menu.json".into());
+            let out = args.get("out").map(str::to_string).unwrap_or_else(|| "menu.json".into());
             compile_menu_cmd(&ctx, &model, &bits, &out)
         }
         "sweep" => {
-            let model = args.flags.get("model").cloned().unwrap_or_else(|| "cnn-s".into());
+            let model = args.get("model").map(str::to_string).unwrap_or_else(|| "cnn-s".into());
             sweep(&ctx, &model)
         }
         _ => {
@@ -189,6 +234,8 @@ fn run() -> Result<()> {
                  \x20       [--queue-depth D] [--deadline-ms MS]\n\
                  \x20       [--envelope-gflips RATE] [--governor-window-ms MS]\n\
                  \x20       [--calibrate-out menu.json (requires --menu)]\n\
+                 \x20 serve --menu NAME=menu.json --menu NAME2=menu2.json ...\n\
+                 \x20                                 fleet: N models on one pool + one envelope\n\
                  \x20 sweep --model M [--quick]       power-accuracy sweep (Fig. 1)\n"
             );
             Ok(())
@@ -294,7 +341,7 @@ fn serve(
         "test",
     )?;
     let n = n_requests.min(ds.len());
-    let (correct, expired, _) = replay(&client, &ds, n, deadline_ms)?;
+    let (correct, expired, _) = replay(&client, None, &ds, n, deadline_ms)?;
     let served = n - expired;
     println!("accuracy {:.3} over {served} served requests", correct as f64 / served.max(1) as f64);
     if expired > 0 {
@@ -308,10 +355,13 @@ fn serve(
 
 /// Replay the first `n` test samples through a serving client: returns
 /// (correct predictions, deadline-expired requests, last serving
-/// point). Shared by `serve` and `serve_menu` so accuracy/deadline
-/// accounting cannot diverge between the two paths.
+/// point). Shared by `serve`, `serve_menu` and `serve_fleet_cli` so
+/// accuracy/deadline accounting cannot diverge between the paths;
+/// `model` routes every request to one registered fleet model (`None`
+/// on single-model servers).
 fn replay(
     client: &Client,
+    model: Option<&str>,
     ds: &pann::data::Dataset,
     n: usize,
     deadline_ms: Option<u64>,
@@ -321,6 +371,9 @@ fn replay(
     let mut point = String::new();
     for i in 0..n {
         let mut req = InferRequest::new(ds.sample(i).to_vec());
+        if let Some(name) = model {
+            req = req.model(name);
+        }
         if let Some(ms) = deadline_ms {
             req = req.deadline(std::time::Duration::from_millis(ms));
         }
@@ -430,7 +483,7 @@ fn serve_menu(
         if let Some(b) = phase_budget {
             client.set_budget(b);
         }
-        let (correct, expired, served_by) = replay(&client, &test, n, deadline_ms)?;
+        let (correct, expired, served_by) = replay(&client, None, &test, n, deadline_ms)?;
         let served = n - expired;
         let acc = correct as f64 / served.max(1) as f64;
         Ok((served_by, acc, served, expired))
@@ -491,6 +544,80 @@ fn serve_menu(
         artifact.save(std::path::Path::new(&out))?;
         println!("calibrated {updated}/{} menu points -> {out}", artifact.points.len());
     }
+    Ok(())
+}
+
+/// Serve a *fleet*: every `NAME=path` entry registers one compiled
+/// menu artifact under its model name, all served from one worker pool
+/// and one bounded queue (`pann-cli serve --menu a=a.json --menu
+/// b=b.json`). Each NAME is loaded via [`Ctx::load_model`] and
+/// fingerprint-verified against its artifact when the fleet starts.
+/// With `--envelope-gflips` the global envelope is split across the
+/// models by observed demand (a hot model degrades along its own
+/// frontier before starving a cold one); the per-model governor
+/// snapshots are printed at the end.
+#[allow(clippy::too_many_arguments)]
+fn serve_fleet_cli(
+    ctx: &Ctx,
+    entries: &[(String, String)],
+    n_requests: usize,
+    budget: f64,
+    queue_depth: usize,
+    deadline_ms: Option<u64>,
+    governor: Option<GovernorCli>,
+) -> Result<()> {
+    let workers = pann::nn::eval::n_threads();
+    let max_batch = 16;
+    let mut builder = GovernorCli::configure(
+        &governor,
+        ServerBuilder::new()
+            .workers(workers)
+            .queue_depth(queue_depth)
+            .max_batch(max_batch)
+            .budget_gflips(budget),
+    );
+    let mut test_sets = Vec::with_capacity(entries.len());
+    for (name, path) in entries {
+        let (model, test) = ctx.load_model(name)?;
+        let artifact = pann::pann::MenuArtifact::load(std::path::Path::new(path))?;
+        println!(
+            "model {name}: menu {path} with {} frontier points ({} candidates swept)",
+            artifact.points.len(),
+            artifact.swept
+        );
+        let calib = pann::pann::convert::calib_tensor(&test, 32);
+        // register from the artifact already in hand (one read per
+        // model: the printed header and the served menu cannot
+        // diverge); shared_points verifies the model fingerprint
+        builder = builder.register(
+            name.clone(),
+            Menu::shared(artifact.shared_points(&model, Some(&calib), max_batch)?),
+        );
+        test_sets.push((name.clone(), test));
+    }
+    let srv = builder.serve_fleet()?;
+    let client = srv.client();
+    println!(
+        "fleet of {} models on one pool ({workers} workers, {n_requests} requests per model):",
+        entries.len()
+    );
+    for (name, test) in &test_sets {
+        let n = n_requests.min(test.len()).max(1);
+        let (correct, expired, served_by) =
+            replay(&client, Some(name.as_str()), test, n, deadline_ms)?;
+        let served = n - expired;
+        let acc = correct as f64 / served.max(1) as f64;
+        println!(
+            "  model {name:<10} -> last point {:<18} test acc {acc:.3} ({served} served{})",
+            served_by,
+            if expired > 0 { format!(", {expired} expired") } else { String::new() }
+        );
+    }
+    println!("{}", client.metrics().report());
+    if let Some(fleet) = client.fleet() {
+        print!("{}", fleet.report());
+    }
+    srv.shutdown();
     Ok(())
 }
 

@@ -10,7 +10,9 @@ use anyhow::Result;
 /// Classification result of one evaluation.
 #[derive(Clone, Debug)]
 pub struct EvalResult {
+    /// Correctly classified samples.
     pub correct: usize,
+    /// Samples evaluated.
     pub total: usize,
     /// Giga bit flips consumed (0 for fp32 runs).
     pub giga_flips: f64,
@@ -19,6 +21,7 @@ pub struct EvalResult {
 }
 
 impl EvalResult {
+    /// Top-1 accuracy (0 when nothing was evaluated).
     pub fn accuracy(&self) -> f64 {
         if self.total == 0 {
             0.0

@@ -39,6 +39,7 @@ pub struct Scratch {
 }
 
 impl Scratch {
+    /// Empty arena; buffers grow on first use.
     pub fn new() -> Scratch {
         Scratch::default()
     }

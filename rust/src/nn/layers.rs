@@ -17,6 +17,7 @@ pub enum Op {
     Conv { w: Tensor, b: Vec<f32>, stride: usize, pad: usize },
     /// Fully connected; weights `[out, in]`, bias `[out]`.
     Linear { w: Tensor, b: Vec<f32> },
+    /// Elementwise `max(x, 0)`.
     Relu,
     /// Max pooling with square kernel = stride = `k`.
     MaxPool { k: usize },

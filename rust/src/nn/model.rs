@@ -17,6 +17,7 @@ use std::path::Path;
 /// One SSA node.
 #[derive(Clone, Debug)]
 pub struct Node {
+    /// The operation this node applies.
     pub op: Op,
     /// Producer index; -1 = model input.
     pub input: isize,
@@ -25,9 +26,11 @@ pub struct Node {
 /// A loaded model.
 #[derive(Clone, Debug)]
 pub struct Model {
+    /// Model name (artifact directory stem).
     pub name: String,
     /// Input shape per sample (e.g. `[1, 16, 16]` or `[64]`).
     pub input_shape: Vec<usize>,
+    /// SSA nodes in topological order.
     pub nodes: Vec<Node>,
     /// Per-node output activation statistics (per-channel mean/std),
     /// recorded at training time; used by the data-free quantizers.

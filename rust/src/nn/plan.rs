@@ -94,6 +94,7 @@ pub(crate) struct PlannedMac {
 /// (plain owned data), so serving holds one `Arc<ExecutionPlan>` per
 /// operating point.
 pub struct ExecutionPlan {
+    /// The configuration the plan was compiled under.
     pub config: QuantConfig,
     pub(crate) model: Model,
     pub(crate) steps: Vec<Option<PlannedMac>>,

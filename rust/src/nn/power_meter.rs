@@ -8,6 +8,7 @@
 /// One layer's tally.
 #[derive(Clone, Debug, Default)]
 pub struct LayerTally {
+    /// Layer label (graph node name).
     pub name: String,
     /// MACs executed (or elements processed, for PANN).
     pub macs: u64,
@@ -20,10 +21,12 @@ pub struct LayerTally {
 /// Accumulated power over a run.
 #[derive(Clone, Debug, Default)]
 pub struct PowerMeter {
+    /// One tally per registered MAC layer.
     pub layers: Vec<LayerTally>,
 }
 
 impl PowerMeter {
+    /// Meter with no layers registered yet.
     pub fn new() -> Self {
         Self::default()
     }
@@ -73,6 +76,7 @@ impl PowerMeter {
         self.layers.iter().map(|l| l.macs).sum()
     }
 
+    /// Zero every tally, keeping the registered layers.
     pub fn reset(&mut self) {
         for l in &mut self.layers {
             l.macs = 0;

@@ -58,8 +58,11 @@ pub struct QuantConfig {
     pub bw: u32,
     /// Activation bits (`b_x`, or `b̃_x` for PANN).
     pub bx: u32,
+    /// How weights are quantized.
     pub weight_quant: WeightQuantMethod,
+    /// Which integer datapath executes the MACs.
     pub arithmetic: Arithmetic,
+    /// How activation ranges are fitted.
     pub act_method: ActQuantMethod,
     /// Count the single per-output-element subtraction of Eq. (6)
     /// (the paper neglects it; off by default to match the tables).
@@ -101,6 +104,7 @@ impl QuantConfig {
 /// A model frozen under a [`QuantConfig`] — thin handle over a shared
 /// [`ExecutionPlan`].
 pub struct QuantizedModel {
+    /// The configuration the model was frozen under.
     pub config: QuantConfig,
     plan: Arc<ExecutionPlan>,
     /// MACs per sample, for power accounting without running.

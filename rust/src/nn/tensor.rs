@@ -5,11 +5,14 @@ use anyhow::{bail, Result};
 /// A dense row-major tensor of f32.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Tensor {
+    /// Dimension sizes, outermost first.
     pub shape: Vec<usize>,
+    /// Row-major elements (`prod(shape)` of them).
     pub data: Vec<f32>,
 }
 
 impl Tensor {
+    /// A tensor from shape + matching row-major data.
     pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
         let n: usize = shape.iter().product();
         if n != data.len() {
@@ -18,15 +21,18 @@ impl Tensor {
         Ok(Tensor { shape, data })
     }
 
+    /// An all-zero tensor of the given shape.
     pub fn zeros(shape: Vec<usize>) -> Tensor {
         let n = shape.iter().product();
         Tensor { shape, data: vec![0.0; n] }
     }
 
+    /// Total number of elements.
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// Whether the tensor holds no elements.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }

@@ -15,6 +15,7 @@ use anyhow::Result;
 /// A chosen PANN operating point.
 #[derive(Clone, Copy, Debug)]
 pub struct OperatingPoint {
+    /// Activation width `b̃_x`.
     pub bx_tilde: u32,
     /// Requested additions budget (Eq. 13 inversion at the power
     /// budget).

@@ -57,6 +57,7 @@ pub const MENU_SCHEMA_V1: &str = "pann-menu/v1";
 
 /// One evaluated candidate from an equal-power sweep.
 pub struct SweepPoint {
+    /// Activation width `b̃_x`.
     pub bx_tilde: u32,
     /// Requested additions budget `R` (Eq. 13 inversion at the curve's
     /// power level).
@@ -147,11 +148,14 @@ pub struct MenuPointSpec {
     /// Stable point name (unique within the menu; pinnable via
     /// [`crate::coordinator::InferRequest::pin_point`]).
     pub name: String,
+    /// Activation width `b̃_x`.
     pub bx_tilde: u32,
+    /// Additions budget `R` the point was compiled at.
     pub r: f64,
     /// Measured energy per sample (Giga bit flips) — the cost the
     /// serving policy ranks by.
     pub gflips_per_sample: f64,
+    /// Validation accuracy measured at compile time.
     pub val_acc: f64,
     /// Activation quantizer the point was compiled and measured with.
     pub quant_method: ActQuantMethod,
@@ -176,14 +180,17 @@ pub struct MenuPointSpec {
 /// strictly Pareto-monotone (accuracy strictly increasing with cost).
 #[derive(Clone, Debug, PartialEq)]
 pub struct MenuArtifact {
+    /// Name of the model the menu was compiled for.
     pub model_name: String,
     /// [`Model::fingerprint`] of the network the menu was compiled
     /// for; verified again before recompiling for serving.
     pub model_fingerprint: u64,
+    /// MACs per sample of that model (plan-consistency check).
     pub macs_per_sample: u64,
     /// Candidates evaluated before Pareto pruning (for reporting:
     /// `swept - points.len()` were dominated).
     pub swept: usize,
+    /// The frontier, ascending in cost and accuracy.
     pub points: Vec<MenuPointSpec>,
 }
 

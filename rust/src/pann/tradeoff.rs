@@ -15,6 +15,7 @@ use anyhow::Result;
 /// One row of Table 15 (or, with the Alg.-1 winner only, Table 14).
 #[derive(Clone, Copy, Debug)]
 pub struct TradeoffRow {
+    /// Activation width `b̃_x`.
     pub bx_tilde: u32,
     /// Additions per element = latency factor (paper Sec. 6).
     pub r: f64,

@@ -19,6 +19,7 @@ pub struct PowerBreakdown {
 }
 
 impl PowerBreakdown {
+    /// Total flips per instruction (multiplier + accumulator).
     pub fn total(&self) -> f64 {
         self.mult + self.acc
     }

@@ -20,7 +20,9 @@ const LAPLACE_ALPHA: [f64; 7] = [2.83, 3.89, 5.03, 6.20, 7.41, 8.64, 9.89];
 /// Assumed distribution family for the analytic clip.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Family {
+    /// Zero-mean Gaussian data (σ scale parameter).
     Gauss,
+    /// Zero-mean Laplace data (b scale parameter).
     Laplace,
 }
 

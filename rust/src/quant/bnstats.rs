@@ -13,11 +13,14 @@ use super::ruq::{fit_unsigned_clipped, QParams};
 /// Batch-norm running statistics of one layer (per output channel).
 #[derive(Clone, Debug)]
 pub struct BnStats {
+    /// Per-channel running mean.
     pub mean: Vec<f32>,
+    /// Per-channel running standard deviation.
     pub std: Vec<f32>,
 }
 
 impl BnStats {
+    /// Pair per-channel means and standard deviations (equal length).
     pub fn new(mean: Vec<f32>, std: Vec<f32>) -> Self {
         assert_eq!(mean.len(), std.len());
         BnStats { mean, std }

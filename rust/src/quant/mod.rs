@@ -49,6 +49,7 @@ pub enum ActQuantMethod {
 }
 
 impl ActQuantMethod {
+    /// Every method, in the paper's reporting order.
     pub const ALL: [ActQuantMethod; 5] = [
         ActQuantMethod::Dynamic,
         ActQuantMethod::Aciq,
@@ -57,6 +58,7 @@ impl ActQuantMethod {
         ActQuantMethod::Recon,
     ];
 
+    /// Stable lower-case label (reports, artifacts).
     pub fn name(&self) -> &'static str {
         match self {
             ActQuantMethod::Dynamic => "dynamic",

@@ -32,6 +32,7 @@ pub struct PannWeights {
 }
 
 impl PannQuant {
+    /// Quantizer at additions budget `R = r` per element (must be > 0).
     pub fn new(r: f64) -> Self {
         assert!(r > 0.0, "additions budget must be positive");
         PannQuant { r }

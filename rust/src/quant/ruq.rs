@@ -5,8 +5,11 @@
 /// `x̂ = scale·q`. Symmetric (no zero point), like the paper's `γ·Q(·)`.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct QParams {
+    /// Step size `γ`.
     pub scale: f32,
+    /// Smallest representable code.
     pub qmin: i64,
+    /// Largest representable code.
     pub qmax: i64,
 }
 

@@ -7,23 +7,29 @@ use std::path::{Path, PathBuf};
 /// One lowered executable's description.
 #[derive(Clone, Debug)]
 pub struct ExecSpec {
+    /// Model the executable was lowered from.
     pub model: String,
     /// `"fp32"` or `"pann-p<bits>"`.
     pub variant: String,
+    /// Path of the HLO text artifact.
     pub file: PathBuf,
+    /// Fixed batch the artifact was lowered with.
     pub batch: usize,
+    /// Input shape including the batch dimension.
     pub input_shape: Vec<usize>,
     /// Giga bit flips per sample (0 for fp32 — treated as unbounded
     /// cost by the budget policy).
     pub giga_flips_per_sample: f64,
     /// PANN metadata when applicable.
     pub bx_tilde: Option<u32>,
+    /// PANN additions budget when applicable.
     pub r: Option<f64>,
 }
 
 /// Parsed artifact manifest.
 #[derive(Clone, Debug, Default)]
 pub struct ArtifactManifest {
+    /// Every lowered executable the manifest lists.
     pub executables: Vec<ExecSpec>,
 }
 

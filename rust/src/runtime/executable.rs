@@ -22,11 +22,13 @@ pub struct LoadedModel {
 }
 
 impl CpuRuntime {
+    /// Create a PJRT CPU client.
     pub fn new() -> Result<CpuRuntime> {
         let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
         Ok(CpuRuntime { client })
     }
 
+    /// PJRT platform name (e.g. `"cpu"`).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }

@@ -27,24 +27,29 @@ pub struct LoadedModel {
 }
 
 impl CpuRuntime {
+    /// Always fails: this build carries no PJRT bindings.
     pub fn new() -> Result<CpuRuntime> {
         bail!("built without the `pjrt` feature: PJRT execution is unavailable (use the native engine)")
     }
 
+    /// Stub platform label.
     pub fn platform(&self) -> String {
         "unavailable".to_string()
     }
 
+    /// Always fails: this build carries no PJRT bindings.
     pub fn load(&self, _path: &Path, _input_shape: &[usize]) -> Result<LoadedModel> {
         bail!("built without the `pjrt` feature")
     }
 }
 
 impl LoadedModel {
+    /// Always fails: this build carries no PJRT bindings.
     pub fn run(&self, _input: &[f32]) -> Result<Vec<f32>> {
         bail!("built without the `pjrt` feature")
     }
 
+    /// Always fails: this build carries no PJRT bindings.
     pub fn run_padded(&self, _input: &[f32], _n: usize) -> Result<Vec<f32>> {
         bail!("built without the `pjrt` feature")
     }

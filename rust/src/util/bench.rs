@@ -11,10 +11,15 @@ use std::time::{Duration, Instant};
 /// Result of one benchmark case.
 #[derive(Clone, Debug)]
 pub struct BenchResult {
+    /// Case label.
     pub name: String,
+    /// Timed iterations.
     pub iters: u64,
+    /// Mean wall time per iteration, nanoseconds.
     pub mean_ns: f64,
+    /// Standard deviation of the per-iteration time, nanoseconds.
     pub std_ns: f64,
+    /// Fastest iteration, nanoseconds.
     pub min_ns: f64,
 }
 

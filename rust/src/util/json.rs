@@ -12,18 +12,26 @@ use std::fmt;
 /// A JSON value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any number (always stored as f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys, so output is deterministic).
     Obj(BTreeMap<String, Json>),
 }
 
 /// Parse error with byte offset.
 #[derive(Debug)]
 pub struct JsonError {
+    /// Byte offset of the failure in the input.
     pub pos: usize,
+    /// What went wrong.
     pub msg: String,
 }
 
@@ -61,6 +69,7 @@ impl Json {
         self.get(key).ok_or_else(|| anyhow::anyhow!("missing json field '{key}'"))
     }
 
+    /// The number value, if this is a `Num`.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -68,10 +77,12 @@ impl Json {
         }
     }
 
+    /// The number value truncated to usize, if this is a `Num`.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|n| n as usize)
     }
 
+    /// The string value, if this is a `Str`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -79,6 +90,7 @@ impl Json {
         }
     }
 
+    /// The boolean value, if this is a `Bool`.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -86,6 +98,7 @@ impl Json {
         }
     }
 
+    /// The elements, if this is an `Arr`.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -93,6 +106,7 @@ impl Json {
         }
     }
 
+    /// The key/value map, if this is an `Obj`.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),

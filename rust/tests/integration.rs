@@ -648,6 +648,165 @@ fn governor_load_ramp_walks_frontier_down_and_back() {
 }
 
 #[test]
+fn fleet_two_models_one_envelope_hot_degrades_cold_holds() {
+    // The fleet acceptance: two clients hit two *registered* models
+    // under one shared envelope. The hot (flooding) model must step
+    // down its own frontier; the cold (paced) model's operating point
+    // must never move; and a single-model ServerBuilder run over the
+    // same menu stays behaviorally identical to the PR-4 server.
+    use pann::coordinator::{
+        BatchEngine, EnergyEnvelope, InferRequest, Menu, ServerBuilder, SharedPoint,
+    };
+    use pann::nn::Scratch;
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+
+    /// Constant-output engine: the arbitration logic needs controlled
+    /// costs, not a real network (real compiled menus are covered by
+    /// the serve_menu and fleet bench paths).
+    struct FixedEngine;
+    impl BatchEngine for FixedEngine {
+        fn max_batch(&self) -> usize {
+            8
+        }
+        fn sample_len(&self) -> usize {
+            3
+        }
+        fn infer_batch(
+            &self,
+            _x: &[f32],
+            n: usize,
+            _scratch: &mut Scratch,
+        ) -> anyhow::Result<Vec<f32>> {
+            Ok(vec![0.0; n * 2])
+        }
+    }
+
+    let menu = |costs: &[(&str, f64)]| -> Menu {
+        Menu::shared(
+            costs
+                .iter()
+                .map(|&(name, gf)| SharedPoint {
+                    name: name.into(),
+                    giga_flips_per_sample: gf,
+                    engine: Arc::new(FixedEngine),
+                })
+                .collect(),
+        )
+    };
+    // hot's frontier is orders of magnitude pricier than cold's whole
+    // menu, so any realistic probe rate keeps cold's demand-need far
+    // inside the 50 GF/s envelope while hot's flood blows it.
+    let hot_frontier = [("h-cheap", 0.1), ("h-mid", 1.0), ("h-rich", 10.0)];
+    let cold_frontier = [("c-cheap", 0.0001), ("c-rich", 0.001)];
+
+    let srv = ServerBuilder::new()
+        .workers(2)
+        .max_batch(4)
+        .max_wait(Duration::from_micros(200))
+        .envelope(EnergyEnvelope::gflips_per_sec(50.0))
+        .governor_window(Duration::from_millis(10))
+        .governor_hysteresis(1)
+        .register("hot", menu(&hot_frontier))
+        .register("cold", menu(&cold_frontier))
+        .serve_fleet()
+        .unwrap();
+    let c = srv.client();
+    assert_eq!(c.models(), vec!["hot", "cold"]);
+
+    // two clients, concurrently: one floods hot, one paces cold
+    let (hot_walk, cold_points) = std::thread::scope(|s| {
+        let done = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let hc = c.clone();
+        let hd = done.clone();
+        let hot = s.spawn(move || {
+            let t0 = Instant::now();
+            let mut walk = Vec::<String>::new();
+            while t0.elapsed() < Duration::from_secs(20) {
+                let p = hc
+                    .submit(InferRequest::new(vec![0.0; 3]).model("hot"))
+                    .unwrap()
+                    .wait()
+                    .unwrap()
+                    .point;
+                if walk.last() != Some(&p) {
+                    walk.push(p.clone());
+                }
+                if p == "h-cheap" {
+                    break;
+                }
+            }
+            hd.store(true, std::sync::atomic::Ordering::SeqCst);
+            walk
+        });
+        let cc = c.clone();
+        let cold = s.spawn(move || {
+            let mut points = Vec::new();
+            while !done.load(std::sync::atomic::Ordering::SeqCst) {
+                let r = cc
+                    .submit(InferRequest::new(vec![0.0; 3]).model("cold"))
+                    .unwrap()
+                    .wait()
+                    .unwrap();
+                assert_eq!(r.model.as_deref(), Some("cold"));
+                points.push(r.point);
+                // pacing >= the governor window bounds how many cold
+                // requests can ever bunch into one decision window, so
+                // the demand headroom always covers the worst burst
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            points
+        });
+        (hot.join().unwrap(), cold.join().unwrap())
+    });
+
+    assert_eq!(
+        hot_walk.last().map(String::as_str),
+        Some("h-cheap"),
+        "hot model never reached its frontier floor: {hot_walk:?}"
+    );
+    assert_eq!(hot_walk.first().map(String::as_str), Some("h-rich"));
+    assert!(
+        cold_points.iter().all(|p| p == "c-rich"),
+        "cold model's point must not move: {cold_points:?}"
+    );
+    // per-model governors: hot stepped, cold did not
+    let gh = c.model_governor("hot").unwrap();
+    let gc = c.model_governor("cold").unwrap();
+    assert!(gh.switches >= 1);
+    assert_eq!(gh.point, "h-cheap");
+    assert_eq!(gc.switches, 0, "cold governor must never have stepped");
+    assert_eq!(gc.point, "c-rich");
+    // metrics are model-qualified: both models' counters are separate
+    let per: std::collections::BTreeMap<_, _> = c.metrics().per_point.iter().cloned().collect();
+    assert!(per.keys().all(|k| k.starts_with("hot:") || k.starts_with("cold:")), "{per:?}");
+    assert!(per.get("cold:c-rich").is_some_and(|&n| n > 0));
+    // the fleet snapshot exposes the arbitration: shares sum to the
+    // envelope, cold's demand estimate is the smaller one
+    let fleet = c.fleet().unwrap();
+    let share: f64 = fleet.models.iter().map(|m| m.envelope_share.unwrap()).sum();
+    assert!((share - 50.0).abs() < 1e-6, "shares must sum to the envelope, got {share}");
+    srv.shutdown();
+
+    // single-model control: the same hot menu behind the PR-4 `serve`
+    // path — no registry anywhere: bare point keys, no model echo, the
+    // fleet accessors empty, open-loop budget cell untouched
+    let single = ServerBuilder::new()
+        .workers(1)
+        .serve(menu(&hot_frontier))
+        .unwrap();
+    let sc = single.client();
+    let r = sc.infer(vec![0.0; 3]).unwrap();
+    assert_eq!(r.point, "h-rich");
+    assert_eq!(r.model, None, "single-model responses must not carry a model");
+    assert!(sc.models().is_empty() && sc.fleet().is_none() && sc.governor().is_none());
+    assert_eq!(sc.budget(), f64::INFINITY);
+    let per: Vec<String> = sc.metrics().per_point.iter().map(|(k, _)| k.clone()).collect();
+    assert_eq!(per, vec!["h-rich".to_string()], "single-model keys must stay bare");
+    single.shutdown();
+}
+
+#[test]
 fn governed_real_menu_serves_with_measured_energy() {
     // Closed loop over a *real* compiled menu: the plan-backed engines
     // meter actual flips, so responses carry measured energy and the
