@@ -1,16 +1,19 @@
-//! Hot-path benchmarks: GEMM kernels (scalar vs blocked vs threaded),
-//! im2col, and batched quantized engine throughput per operating
-//! point, single- vs multi-core.
+//! Hot-path benchmarks: GEMM kernels (scalar vs blocked vs threaded vs
+//! SIMD-dispatched), im2col, and batched quantized engine throughput
+//! per operating point, single- vs multi-core and SIMD vs forced
+//! scalar.
 //!
-//! Emits `BENCH_engine.json` (ops/sec and GFlips/sample per operating
-//! point, plus every micro-bench) so later PRs can track the perf
-//! trajectory without parsing stdout.
+//! Emits `BENCH_engine.json` (schema `bench-engine/v2`: ops/sec and
+//! GFlips/sample per operating point, per-kernel SIMD speedups, plus
+//! every micro-bench) so later PRs can track the perf trajectory
+//! without parsing stdout. See EXPERIMENTS.md §SIMD for the
+//! measurement protocol and field glossary.
 
 use pann::data::{synth, Dataset};
 use pann::nn::eval::{batch_tensor, n_threads};
-use pann::nn::gemm;
+use pann::nn::gemm::{self, SimdLevel};
 use pann::nn::quantized::{QuantConfig, QuantizedModel};
-use pann::nn::{Model, Scratch};
+use pann::nn::{ExecutionPlan, Model, Scratch};
 use pann::quant::ActQuantMethod;
 use pann::util::bench::{run, write_json};
 use pann::util::{Json, Rng};
@@ -18,6 +21,8 @@ use pann::util::{Json, Rng};
 fn main() {
     let mut report: Vec<(String, Json)> = Vec::new();
     let mut r = Rng::new(1);
+    let simd = gemm::active_level();
+    println!("simd level: {}", simd.name());
 
     // --- GEMM kernels, small (one conv layer at batch 1) ---
     let (m, n, k) = (256, 64, 144);
@@ -69,28 +74,108 @@ fn main() {
     println!("  -> {:.2} Gmac/s (dual bank)", res.throughput((m * n * k) as f64) / 1e9);
     report.push((res.name.clone(), res.to_json()));
 
-    // --- GEMM kernels, batched (one conv layer at batch 64) ---
+    // --- blocked kernels, batched (one conv layer at batch 64):
+    //     scalar dispatch vs the detected SIMD level, per variant ---
     let threads = n_threads();
     let (bm, bn, bk) = (64 * 256, 64, 144);
     let ba: Vec<i32> = (0..bm * bk).map(|_| r.range_i64(0, 64) as i32).collect();
     let bw: Vec<i32> = (0..bn * bk).map(|_| r.range_i64(-8, 8) as i32).collect();
     let bpos: Vec<i32> = bw.iter().map(|&v| v.max(0)).collect();
     let bneg: Vec<i32> = bw.iter().map(|&v| (-v).max(0)).collect();
+    let ba16: Vec<i16> = ba.iter().map(|&v| v as i16).collect();
+    let bw16: Vec<i16> = bw.iter().map(|&v| v as i16).collect();
     let mut bout = vec![0i64; bm * bn];
     let macs = (bm * bn * bk) as f64;
-    let res = run("gemm_i32_split 16384x64x144 scalar", || {
-        gemm::gemm_i32_split(
-            std::hint::black_box(&ba),
-            std::hint::black_box(&bpos),
-            std::hint::black_box(&bneg),
-            &mut bout,
-            bm,
-            bn,
-            bk,
-        );
-    });
-    println!("  -> {:.2} Gmac/s", res.throughput(macs) / 1e9);
-    report.push(("gemm_split_batch64_scalar".into(), res.to_json()));
+    let mut kernel_speedups: Vec<(String, Json)> = Vec::new();
+    {
+        // each variant timed at scalar then at the detected level, at
+        // 1 thread so the ratio isolates vectorization from core
+        // scaling
+        let mut bench_pair = |name: &str, f: &mut dyn FnMut(SimdLevel)| {
+            let rs = run(&format!("gemm {name} 16384x64x144 scalar t=1"), || f(SimdLevel::Scalar));
+            let rv = run(&format!("gemm {name} 16384x64x144 {} t=1", simd.name()), || f(simd));
+            let speedup = rs.mean_ns / rv.mean_ns;
+            println!(
+                "  {name}: {:.2} -> {:.2} Gmac/s ({speedup:.2}x {})",
+                rs.throughput(macs) / 1e9,
+                rv.throughput(macs) / 1e9,
+                simd.name()
+            );
+            report.push((format!("gemm_{name}_batch64_scalar_1t"), rs.to_json()));
+            report.push((format!("gemm_{name}_batch64_simd_1t"), rv.to_json()));
+            kernel_speedups.push((
+                name.to_string(),
+                Json::obj(vec![
+                    ("gmacs_scalar_1t", Json::Num(rs.throughput(macs) / 1e9)),
+                    ("gmacs_simd_1t", Json::Num(rv.throughput(macs) / 1e9)),
+                    ("simd_speedup_1t", Json::Num(speedup)),
+                ]),
+            ));
+        };
+        bench_pair("wide", &mut |l| {
+            gemm::gemm_i32_blocked_at(
+                l,
+                std::hint::black_box(&ba),
+                std::hint::black_box(&bw),
+                &mut bout,
+                bm,
+                bn,
+                bk,
+                1,
+            )
+        });
+        bench_pair("narrow", &mut |l| {
+            gemm::gemm_i32_narrow_blocked_at(
+                l,
+                std::hint::black_box(&ba),
+                std::hint::black_box(&bw),
+                &mut bout,
+                bm,
+                bn,
+                bk,
+                1,
+            )
+        });
+        bench_pair("split_wide", &mut |l| {
+            gemm::gemm_i32_split_blocked_at(
+                l,
+                std::hint::black_box(&ba),
+                std::hint::black_box(&bpos),
+                std::hint::black_box(&bneg),
+                &mut bout,
+                bm,
+                bn,
+                bk,
+                1,
+            )
+        });
+        bench_pair("split_narrow", &mut |l| {
+            gemm::gemm_i32_split_narrow_blocked_at(
+                l,
+                std::hint::black_box(&ba),
+                std::hint::black_box(&bpos),
+                std::hint::black_box(&bneg),
+                &mut bout,
+                bm,
+                bn,
+                bk,
+                1,
+            )
+        });
+        bench_pair("narrow_packed_i16", &mut |l| {
+            gemm::gemm_i16_narrow_blocked_at(
+                l,
+                std::hint::black_box(&ba16),
+                std::hint::black_box(&bw16),
+                &mut bout,
+                bm,
+                bn,
+                bk,
+                1,
+            )
+        });
+    }
+    // thread scaling on the split kernel, at the detected level
     let res1 = run("gemm_i32_split_blocked 16384x64x144 t=1", || {
         gemm::gemm_i32_split_blocked(
             std::hint::black_box(&ba),
@@ -103,7 +188,6 @@ fn main() {
             1,
         );
     });
-    println!("  -> {:.2} Gmac/s", res1.throughput(macs) / 1e9);
     report.push(("gemm_split_batch64_blocked_1t".into(), res1.to_json()));
     let rest = run(&format!("gemm_i32_split_blocked 16384x64x144 t={threads}"), || {
         gemm::gemm_i32_split_blocked(
@@ -132,7 +216,8 @@ fn main() {
     });
     report.push((res.name.clone(), res.to_json()));
 
-    // --- batched engine forward, per operating point, 1 vs N cores ---
+    // --- batched engine forward, per operating point: 1 vs N cores,
+    //     and SIMD plan vs its forced-scalar twin ---
     let mut model = Model::reference_cnn(1);
     let ds = Dataset::from_synth(synth::digits(256, 2));
     let stats_x = batch_tensor(&ds, 0, 64);
@@ -144,8 +229,9 @@ fn main() {
         ("unsigned-4bit", QuantConfig::unsigned_baseline(4, ActQuantMethod::BnStats)),
         ("pann-bx6-r2", QuantConfig::pann(6, 2.0, ActQuantMethod::BnStats)),
     ] {
-        let qm = QuantizedModel::prepare(&model, cfg, None).unwrap();
-        let plan = qm.plan();
+        let plan = ExecutionPlan::compile(&model, cfg, None).unwrap();
+        let mut scalar_plan = ExecutionPlan::compile(&model, cfg, None).unwrap();
+        scalar_plan.force_scalar();
         let mut scratch = Scratch::for_plan(&plan, batch);
         // energy per sample at this operating point
         let mut meter = plan.new_meter();
@@ -161,6 +247,16 @@ fn main() {
         });
         let ops1 = r1.throughput(batch as f64);
         println!("  -> {ops1:.0} samples/s single-core");
+        let rs = run(&format!("engine {name} batch{batch} t=1 forced-scalar"), || {
+            let mut meter = scalar_plan.new_meter();
+            let y = scalar_plan
+                .forward_batch(std::hint::black_box(&xb), &mut scratch, &mut meter, 1)
+                .unwrap();
+            std::hint::black_box(y.data.len());
+        });
+        let ops_scalar = rs.throughput(batch as f64);
+        let simd_speedup = ops1 / ops_scalar;
+        println!("  -> {ops_scalar:.0} samples/s forced-scalar ({simd_speedup:.2}x from simd)");
         let rt = run(&format!("engine {name} batch{batch} t={threads}"), || {
             let mut meter = plan.new_meter();
             let y = plan
@@ -172,12 +268,15 @@ fn main() {
         let speedup = opst / ops1;
         println!("  -> {opst:.0} samples/s on {threads} threads ({speedup:.2}x)");
         report.push((format!("engine_{name}_1t"), r1.to_json()));
+        report.push((format!("engine_{name}_scalar_1t"), rs.to_json()));
         report.push((format!("engine_{name}_mt"), rt.to_json()));
         points.push(Json::obj(vec![
             ("point", Json::from(name)),
             ("batch", Json::from(batch)),
             ("threads", Json::from(threads)),
             ("ops_per_sec_1t", Json::Num(ops1)),
+            ("ops_per_sec_scalar_1t", Json::Num(ops_scalar)),
+            ("simd_speedup_1t", Json::Num(simd_speedup)),
             ("ops_per_sec_mt", Json::Num(opst)),
             ("speedup", Json::Num(speedup)),
             ("gflips_per_sample", Json::Num(gflips_per_sample)),
@@ -200,8 +299,10 @@ fn main() {
     }
 
     let doc = Json::obj(vec![
-        ("schema", Json::from("bench-engine/v1")),
+        ("schema", Json::from("bench-engine/v2")),
+        ("simd_level", Json::from(simd.name())),
         ("threads", Json::from(threads)),
+        ("kernel_speedups", Json::Obj(kernel_speedups.into_iter().collect())),
         ("engine_points", Json::Arr(points)),
         (
             "cases",

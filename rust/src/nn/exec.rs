@@ -34,6 +34,9 @@ pub struct Scratch {
     cols_f: Vec<f32>,
     /// Quantized activation codes for the whole batch (`m × k`).
     cols_q: Vec<i32>,
+    /// Packed i16 activation codes for the SIMD narrow path (`m × k`;
+    /// used instead of `cols_q` when the node carries a packed bank).
+    cols_q16: Vec<i16>,
     /// Integer accumulators for the whole batch (`m × out`).
     acc: Vec<i64>,
 }
@@ -51,13 +54,17 @@ impl Scratch {
         Scratch {
             cols_f: Vec::with_capacity(plan.max_cols_per_sample),
             cols_q: Vec::with_capacity(cols),
+            cols_q16: Vec::new(),
             acc: Vec::with_capacity(acc),
         }
     }
 
     /// Bytes currently held (for reports).
     pub fn bytes(&self) -> usize {
-        self.cols_f.capacity() * 4 + self.cols_q.capacity() * 4 + self.acc.capacity() * 8
+        self.cols_f.capacity() * 4
+            + self.cols_q.capacity() * 4
+            + self.cols_q16.capacity() * 2
+            + self.acc.capacity() * 8
     }
 }
 
@@ -182,17 +189,42 @@ impl ExecutionPlan {
             // growth zero-fills: every element is overwritten below
             // (im2col sizes cols_f to exactly spatial·k), and the
             // blocked kernels zero their own accumulators.
-            scratch.cols_q.resize(m * k, 0);
-            for s in 0..n {
-                let sample = &data[s * sample_len..(s + 1) * sample_len];
-                gemm::im2col(sample, ci, h, w, kh, kw, stride, pad, &mut scratch.cols_f);
-                let dst = &mut scratch.cols_q[s * spatial * k..(s + 1) * spatial * k];
-                for (d, &v) in dst.iter_mut().zip(scratch.cols_f.iter()) {
-                    *d = qx.quantize(v) as i32;
-                }
-            }
             scratch.acc.resize(m * co, 0);
-            run_gemm(p, &scratch.cols_q, &mut scratch.acc, m, co, k, threads);
+            if let Some(wp) = p.weights.packed.as_deref() {
+                // packed narrow path: activation codes fit i16 (the
+                // plan packs only when act_qmax ≤ i16::MAX), so
+                // quantize straight into the dense i16 slab.
+                scratch.cols_q16.resize(m * k, 0);
+                for s in 0..n {
+                    let sample = &data[s * sample_len..(s + 1) * sample_len];
+                    gemm::im2col(sample, ci, h, w, kh, kw, stride, pad, &mut scratch.cols_f);
+                    let dst = &mut scratch.cols_q16[s * spatial * k..(s + 1) * spatial * k];
+                    for (d, &v) in dst.iter_mut().zip(scratch.cols_f.iter()) {
+                        *d = qx.quantize(v) as i16;
+                    }
+                }
+                gemm::gemm_i16_narrow_blocked_at(
+                    self.simd,
+                    &scratch.cols_q16,
+                    wp,
+                    &mut scratch.acc,
+                    m,
+                    co,
+                    k,
+                    threads,
+                );
+            } else {
+                scratch.cols_q.resize(m * k, 0);
+                for s in 0..n {
+                    let sample = &data[s * sample_len..(s + 1) * sample_len];
+                    gemm::im2col(sample, ci, h, w, kh, kw, stride, pad, &mut scratch.cols_f);
+                    let dst = &mut scratch.cols_q[s * spatial * k..(s + 1) * spatial * k];
+                    for (d, &v) in dst.iter_mut().zip(scratch.cols_f.iter()) {
+                        *d = qx.quantize(v) as i32;
+                    }
+                }
+                run_gemm(self.simd, p, &scratch.cols_q, &mut scratch.acc, m, co, k, threads);
+            }
             // scatter accumulators back to NCHW
             let mut out = Tensor::zeros(vec![n, co, oh, ow]);
             for s in 0..n {
@@ -210,13 +242,31 @@ impl ExecutionPlan {
             if sample_len != k {
                 bail!("linear input {sample_len} != {k}");
             }
-            scratch.cols_q.clear();
-            scratch.cols_q.reserve(n * k);
-            scratch
-                .cols_q
-                .extend(data.iter().map(|&v| qx.quantize(v) as i32));
             scratch.acc.resize(n * out_d, 0);
-            run_gemm(p, &scratch.cols_q, &mut scratch.acc, n, out_d, k, threads);
+            if let Some(wp) = p.weights.packed.as_deref() {
+                scratch.cols_q16.clear();
+                scratch.cols_q16.reserve(n * k);
+                scratch
+                    .cols_q16
+                    .extend(data.iter().map(|&v| qx.quantize(v) as i16));
+                gemm::gemm_i16_narrow_blocked_at(
+                    self.simd,
+                    &scratch.cols_q16,
+                    wp,
+                    &mut scratch.acc,
+                    n,
+                    out_d,
+                    k,
+                    threads,
+                );
+            } else {
+                scratch.cols_q.clear();
+                scratch.cols_q.reserve(n * k);
+                scratch
+                    .cols_q
+                    .extend(data.iter().map(|&v| qx.quantize(v) as i32));
+                run_gemm(self.simd, p, &scratch.cols_q, &mut scratch.acc, n, out_d, k, threads);
+            }
             let mut out = Tensor::zeros(vec![n, out_d]);
             for i in 0..n {
                 for o in 0..out_d {
@@ -243,8 +293,12 @@ impl ExecutionPlan {
     }
 }
 
-/// Dispatch to the plan-selected blocked kernel.
+/// Dispatch to the plan-selected blocked kernel at the plan's frozen
+/// SIMD level (the unpacked paths; packed banks go straight to
+/// [`gemm::gemm_i16_narrow_blocked_at`] in `forward_mac`).
+#[allow(clippy::too_many_arguments)]
 fn run_gemm(
+    level: gemm::SimdLevel,
     p: &PlannedMac,
     xq: &[i32],
     acc: &mut [i64],
@@ -255,14 +309,16 @@ fn run_gemm(
 ) {
     let w = &p.weights;
     match p.kernel {
-        GemmKernel::Wide => gemm::gemm_i32_blocked(xq, &w.pos, acc, m, nd, k, threads),
-        GemmKernel::Narrow => gemm::gemm_i32_narrow_blocked(xq, &w.pos, acc, m, nd, k, threads),
+        GemmKernel::Wide => gemm::gemm_i32_blocked_at(level, xq, &w.pos, acc, m, nd, k, threads),
+        GemmKernel::Narrow => {
+            gemm::gemm_i32_narrow_blocked_at(level, xq, &w.pos, acc, m, nd, k, threads)
+        }
         GemmKernel::SplitWide => {
-            gemm::gemm_i32_split_blocked(xq, &w.pos, &w.neg, acc, m, nd, k, threads)
+            gemm::gemm_i32_split_blocked_at(level, xq, &w.pos, &w.neg, acc, m, nd, k, threads)
         }
-        GemmKernel::SplitNarrow => {
-            gemm::gemm_i32_split_narrow_blocked(xq, &w.pos, &w.neg, acc, m, nd, k, threads)
-        }
+        GemmKernel::SplitNarrow => gemm::gemm_i32_split_narrow_blocked_at(
+            level, xq, &w.pos, &w.neg, acc, m, nd, k, threads,
+        ),
     }
 }
 
@@ -366,6 +422,36 @@ mod tests {
             assert_eq!(y1.data, yt.data, "threads={t}");
             assert_eq!(m1.total_macs(), mt.total_macs());
             assert_eq!(m1.total_flips(), mt.total_flips());
+        }
+    }
+
+    /// SIMD dispatch (including the packed i16 banks) must be
+    /// invisible: a plan downgraded with `force_scalar` produces the
+    /// same logits and metered totals as the detected-level plan, for
+    /// every kernel family the configs below exercise (SplitNarrow +
+    /// packed, Narrow, and the PANN split path).
+    #[test]
+    fn simd_and_forced_scalar_plans_bit_identical() {
+        for (name, cfg) in [
+            ("unsigned4", QuantConfig::unsigned_baseline(4, ActQuantMethod::BnStats)),
+            ("signed8", QuantConfig::signed_baseline(8, ActQuantMethod::BnStats)),
+            ("pann", QuantConfig::pann(6, 2.0, ActQuantMethod::BnStats)),
+        ] {
+            let mut model = Model::reference_cnn(70);
+            let x = test_input(5, 71);
+            model.record_act_stats(&x).unwrap();
+            let simd_plan = ExecutionPlan::compile(&model, cfg, None).unwrap();
+            let mut scalar_plan = ExecutionPlan::compile(&model, cfg, None).unwrap();
+            scalar_plan.force_scalar();
+
+            let mut scratch = Scratch::new();
+            let mut m1 = simd_plan.new_meter();
+            let y1 = simd_plan.forward_batch(&x, &mut scratch, &mut m1, 2).unwrap();
+            let mut m2 = scalar_plan.new_meter();
+            let y2 = scalar_plan.forward_batch(&x, &mut scratch, &mut m2, 2).unwrap();
+            assert_eq!(y1.data, y2.data, "{name}: logits diverge across dispatch");
+            assert_eq!(m1.total_macs(), m2.total_macs(), "{name}: macs");
+            assert_eq!(m1.total_flips(), m2.total_flips(), "{name}: flips");
         }
     }
 

@@ -1,0 +1,192 @@
+//! AVX2 (x86-64) row-dot kernels behind the [`super::simd`] dispatch.
+//!
+//! Lane semantics mirror the scalar oracle exactly:
+//!
+//! - wide variants widen i32×i32 products to i64 lanes
+//!   (`_mm256_mul_epi32` on the even/odd halves) and accumulate in
+//!   i64 — identical to the scalar chains wherever the scalar chains
+//!   don't overflow (the plan's code bounds guarantee they don't);
+//! - narrow variants use `_mm256_mullo_epi32` / `_mm256_add_epi32`,
+//!   which are *exactly* wrapping-i32 multiply/add — bit-identical to
+//!   the scalar wrapping fold for **all** inputs, since wrapping i32
+//!   arithmetic is a commutative ring (any summation order agrees);
+//! - the packed path multiplies 16 i16 lanes per `_mm256_madd_epi16`,
+//!   whose pairwise i32 sums also wrap — again bit-identical to the
+//!   scalar packed fold for all inputs.
+//!
+//! All loads are unaligned (`loadu`), so callers owe no alignment
+//! contract — `Vec`-backed scratch slabs and weight banks work as-is.
+
+use std::arch::x86_64::*;
+
+/// Wide dot: Σ a·b with i64 accumulation.
+///
+/// # Safety
+/// AVX2 must be available on the running CPU (guaranteed by
+/// [`super::simd::SimdLevel::supported`]).
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn dot_i64(a: &[i32], b: &[i32]) -> i64 {
+    let len = a.len().min(b.len());
+    let pa = a.as_ptr();
+    let pb = b.as_ptr();
+    let mut acc = _mm256_setzero_si256();
+    let mut i = 0usize;
+    while i + 8 <= len {
+        let va = _mm256_loadu_si256(pa.add(i) as *const __m256i);
+        let vb = _mm256_loadu_si256(pb.add(i) as *const __m256i);
+        // even lanes sit in the low half of each 64-bit element; the
+        // odd lanes get there via a logical 64-bit shift (mul_epi32
+        // sign-extends from bit 31 of the low half, so both are exact)
+        let even = _mm256_mul_epi32(va, vb);
+        let odd = _mm256_mul_epi32(_mm256_srli_epi64(va, 32), _mm256_srli_epi64(vb, 32));
+        acc = _mm256_add_epi64(acc, _mm256_add_epi64(even, odd));
+        i += 8;
+    }
+    let mut out = hsum_i64x4(acc);
+    while i < len {
+        out = out.wrapping_add(a[i] as i64 * b[i] as i64);
+        i += 1;
+    }
+    out
+}
+
+/// Wide split dot: Σ a·(p − n) with i64 accumulation.
+///
+/// # Safety
+/// AVX2 must be available on the running CPU.
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn dot_i64_split(a: &[i32], p: &[i32], n: &[i32]) -> i64 {
+    let len = a.len().min(p.len()).min(n.len());
+    let pa = a.as_ptr();
+    let pp = p.as_ptr();
+    let pn = n.as_ptr();
+    let mut acc = _mm256_setzero_si256();
+    let mut i = 0usize;
+    while i + 8 <= len {
+        let va = _mm256_loadu_si256(pa.add(i) as *const __m256i);
+        let vp = _mm256_loadu_si256(pp.add(i) as *const __m256i);
+        let vn = _mm256_loadu_si256(pn.add(i) as *const __m256i);
+        let va_o = _mm256_srli_epi64(va, 32);
+        // Σ a·p − Σ a·n ≡ Σ a·(p − n): the subtraction distributes, and
+        // i64 lane adds/subs form the same mod-2^64 ring as the oracle
+        let pe = _mm256_mul_epi32(va, vp);
+        let po = _mm256_mul_epi32(va_o, _mm256_srli_epi64(vp, 32));
+        let ne = _mm256_mul_epi32(va, vn);
+        let no = _mm256_mul_epi32(va_o, _mm256_srli_epi64(vn, 32));
+        let d = _mm256_sub_epi64(_mm256_add_epi64(pe, po), _mm256_add_epi64(ne, no));
+        acc = _mm256_add_epi64(acc, d);
+        i += 8;
+    }
+    let mut out = hsum_i64x4(acc);
+    while i < len {
+        out = out.wrapping_add(a[i] as i64 * (p[i] as i64 - n[i] as i64));
+        i += 1;
+    }
+    out
+}
+
+/// Narrow dot: wrapping-i32 Σ a·b.
+///
+/// # Safety
+/// AVX2 must be available on the running CPU.
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn dot_i32_wrapping(a: &[i32], b: &[i32]) -> i32 {
+    let len = a.len().min(b.len());
+    let pa = a.as_ptr();
+    let pb = b.as_ptr();
+    let mut acc = _mm256_setzero_si256();
+    let mut i = 0usize;
+    while i + 8 <= len {
+        let va = _mm256_loadu_si256(pa.add(i) as *const __m256i);
+        let vb = _mm256_loadu_si256(pb.add(i) as *const __m256i);
+        acc = _mm256_add_epi32(acc, _mm256_mullo_epi32(va, vb));
+        i += 8;
+    }
+    let mut out = hsum_i32x8_wrapping(acc);
+    while i < len {
+        out = out.wrapping_add(a[i].wrapping_mul(b[i]));
+        i += 1;
+    }
+    out
+}
+
+/// Narrow split dot: wrapping-i32 Σ a·(p ⊖ n).
+///
+/// # Safety
+/// AVX2 must be available on the running CPU.
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn dot_i32_split_wrapping(a: &[i32], p: &[i32], n: &[i32]) -> i32 {
+    let len = a.len().min(p.len()).min(n.len());
+    let pa = a.as_ptr();
+    let pp = p.as_ptr();
+    let pn = n.as_ptr();
+    let mut acc = _mm256_setzero_si256();
+    let mut i = 0usize;
+    while i + 8 <= len {
+        let va = _mm256_loadu_si256(pa.add(i) as *const __m256i);
+        let vp = _mm256_loadu_si256(pp.add(i) as *const __m256i);
+        let vn = _mm256_loadu_si256(pn.add(i) as *const __m256i);
+        // sub_epi32 wraps — same as the oracle's p.wrapping_sub(n)
+        let d = _mm256_sub_epi32(vp, vn);
+        acc = _mm256_add_epi32(acc, _mm256_mullo_epi32(va, d));
+        i += 8;
+    }
+    let mut out = hsum_i32x8_wrapping(acc);
+    while i < len {
+        out = out.wrapping_add(a[i].wrapping_mul(p[i].wrapping_sub(n[i])));
+        i += 1;
+    }
+    out
+}
+
+/// Packed narrow dot: wrapping-i32 Σ a·b over i16 codes, 16 lanes per
+/// multiply (`pmaddwd` pairs two products into each i32 lane).
+///
+/// # Safety
+/// AVX2 must be available on the running CPU.
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn dot_i16_wrapping(a: &[i16], b: &[i16]) -> i32 {
+    let len = a.len().min(b.len());
+    let pa = a.as_ptr();
+    let pb = b.as_ptr();
+    let mut acc = _mm256_setzero_si256();
+    let mut i = 0usize;
+    while i + 16 <= len {
+        let va = _mm256_loadu_si256(pa.add(i) as *const __m256i);
+        let vb = _mm256_loadu_si256(pb.add(i) as *const __m256i);
+        // madd's pairwise horizontal add wraps mod 2^32 (no
+        // saturation), so the whole chain stays in the wrapping ring
+        acc = _mm256_add_epi32(acc, _mm256_madd_epi16(va, vb));
+        i += 16;
+    }
+    let mut out = hsum_i32x8_wrapping(acc);
+    while i < len {
+        out = out.wrapping_add(a[i] as i32 * b[i] as i32);
+        i += 1;
+    }
+    out
+}
+
+/// Horizontal sum of 4 i64 lanes (wrapping adds).
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn hsum_i64x4(v: __m256i) -> i64 {
+    let lo = _mm256_castsi256_si128(v);
+    let hi = _mm256_extracti128_si256(v, 1);
+    let s = _mm_add_epi64(lo, hi);
+    let s = _mm_add_epi64(s, _mm_unpackhi_epi64(s, s));
+    _mm_cvtsi128_si64(s)
+}
+
+/// Horizontal sum of 8 i32 lanes (wrapping adds — part of the narrow
+/// paths' defined arithmetic).
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn hsum_i32x8_wrapping(v: __m256i) -> i32 {
+    let lo = _mm256_castsi256_si128(v);
+    let hi = _mm256_extracti128_si256(v, 1);
+    let s = _mm_add_epi32(lo, hi);
+    let s = _mm_add_epi32(s, _mm_unpackhi_epi64(s, s));
+    let s = _mm_add_epi32(s, _mm_shuffle_epi32(s, 1));
+    _mm_cvtsi128_si32(s)
+}

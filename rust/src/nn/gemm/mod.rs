@@ -1,14 +1,39 @@
 //! GEMM kernels and im2col — the engine's hot path.
 //!
-//! Three kernels: f32 (reference forward), i32 (quantized baselines)
-//! and a dual i32 kernel for the W⁺/W⁻ unsigned split that reuses each
-//! activation tile for both banks (the activation-reuse argument of the
-//! paper's App. A.8, and the same reuse the L1 Pallas kernel performs
-//! in VMEM).
+//! Three kernel families: f32 (reference forward), i32 (quantized
+//! baselines) and a dual i32 family for the W⁺/W⁻ unsigned split that
+//! reuses each activation tile for both banks (the activation-reuse
+//! argument of the paper's App. A.8, and the same reuse the L1 Pallas
+//! kernel performs in VMEM).
+//!
+//! The module is layered:
+//!
+//! - the **scalar reference kernels** in this file and [`scalar`] are
+//!   the bit-exactness oracle — untouched, boring, and what everything
+//!   else is property-tested against;
+//! - the `*_blocked` kernels tile m/n/k so the weight panel stays
+//!   cache-resident and split the m rows over scoped threads;
+//! - [`simd`] dispatches the blocked kernels' inner row-dots to AVX2
+//!   ([`avx2`](self)) or NEON ([`neon`](self)) at runtime, detected
+//!   once per process and frozen into each `ExecutionPlan`;
+//! - [`packed`] stores narrow weight codes densely in i16 lanes so one
+//!   vector multiply covers twice the elements
+//!   ([`gemm_i16_narrow_blocked_at`] consumes them).
 //!
 //! All kernels compute `out[m][n] = Σ_k a[m][k] · b[n][k]` — note `b`
 //! is pre-transposed (`[n][k]`, i.e. weights stored `[out][in]`), which
 //! makes the inner loop a contiguous dot product on both operands.
+
+#[cfg(target_arch = "x86_64")]
+mod avx2;
+#[cfg(target_arch = "aarch64")]
+mod neon;
+pub mod packed;
+mod scalar;
+pub mod simd;
+
+pub use packed::{pack_codes_i16, pack_diff_i16};
+pub use simd::{active_level, detect, detect_with, SimdLevel};
 
 /// f32 GEMM: `out[m][n] = Σ_k a[m*K+k] * bt[n*K+k]`.
 ///
@@ -53,24 +78,7 @@ pub fn gemm_i32(a: &[i32], bt: &[i32], out: &mut [i64], m: usize, n: usize, k: u
         let or = &mut out[i * n..(i + 1) * n];
         for j in 0..n {
             let br = &bt[j * k..(j + 1) * k];
-            // i32 products accumulated pairwise in i64 with four
-            // parallel chains (values are quantization codes, far from
-            // overflowing the intermediate i64s).
-            let (mut a0, mut a1, mut a2, mut a3) = (0i64, 0i64, 0i64, 0i64);
-            let chunks = k / 4 * 4;
-            let mut kk = 0;
-            while kk < chunks {
-                a0 += ar[kk] as i64 * br[kk] as i64;
-                a1 += ar[kk + 1] as i64 * br[kk + 1] as i64;
-                a2 += ar[kk + 2] as i64 * br[kk + 2] as i64;
-                a3 += ar[kk + 3] as i64 * br[kk + 3] as i64;
-                kk += 4;
-            }
-            let mut acc = (a0 + a1) + (a2 + a3);
-            for kk in chunks..k {
-                acc += ar[kk] as i64 * br[kk] as i64;
-            }
-            or[j] = acc;
+            or[j] = scalar::dot_i64(ar, br);
         }
     }
 }
@@ -102,21 +110,7 @@ pub fn gemm_i32_split(
             // single combined chain `x·(p−n)` halves the multiply count
             // while reusing the x tile for both banks (the VMEM-reuse
             // story of the L1 kernel, and ~2× on this path).
-            let (mut a0, mut a1, mut a2, mut a3) = (0i64, 0i64, 0i64, 0i64);
-            let chunks = k / 4 * 4;
-            let mut kk = 0;
-            while kk < chunks {
-                a0 += ar[kk] as i64 * (pr[kk] as i64 - nr[kk] as i64);
-                a1 += ar[kk + 1] as i64 * (pr[kk + 1] as i64 - nr[kk + 1] as i64);
-                a2 += ar[kk + 2] as i64 * (pr[kk + 2] as i64 - nr[kk + 2] as i64);
-                a3 += ar[kk + 3] as i64 * (pr[kk + 3] as i64 - nr[kk + 3] as i64);
-                kk += 4;
-            }
-            let mut acc = (a0 + a1) + (a2 + a3);
-            for kk in chunks..k {
-                acc += ar[kk] as i64 * (pr[kk] as i64 - nr[kk] as i64);
-            }
-            or[j] = acc;
+            or[j] = scalar::dot_i64_split(ar, pr, nr);
         }
     }
 }
@@ -134,17 +128,15 @@ pub fn gemm_i32_narrow(a: &[i32], bt: &[i32], out: &mut [i64], m: usize, n: usiz
         let or = &mut out[i * n..(i + 1) * n];
         for j in 0..n {
             let br = &bt[j * k..(j + 1) * k];
-            let mut acc = 0i32;
-            for kk in 0..k {
-                acc = acc.wrapping_add(ar[kk].wrapping_mul(br[kk]));
-            }
-            or[j] = acc as i64;
+            or[j] = scalar::dot_i32_wrapping(ar, br) as i64;
         }
     }
 }
 
 /// Narrow-accumulation variant of [`gemm_i32_split`]; same overflow
-/// precondition as [`gemm_i32_narrow`].
+/// precondition as [`gemm_i32_narrow`]. The bank difference wraps
+/// (`wrapping_sub`), keeping the kernel total over arbitrary i32
+/// banks.
 pub fn gemm_i32_split_narrow(
     a: &[i32],
     pos_t: &[i32],
@@ -164,11 +156,7 @@ pub fn gemm_i32_split_narrow(
         for j in 0..n {
             let pr = &pos_t[j * k..(j + 1) * k];
             let nr = &neg_t[j * k..(j + 1) * k];
-            let mut acc = 0i32;
-            for kk in 0..k {
-                acc = acc.wrapping_add(ar[kk].wrapping_mul(pr[kk] - nr[kk]));
-            }
-            or[j] = acc as i64;
+            or[j] = scalar::dot_i32_split_wrapping(ar, pr, nr) as i64;
         }
     }
 }
@@ -176,13 +164,15 @@ pub fn gemm_i32_split_narrow(
 // ---------------------------------------------------------------------
 // Cache-blocked, row-parallel kernels.
 //
-// The four scalar kernels above are the bit-exact references; the
+// The scalar kernels above are the bit-exact references; the
 // `*_blocked` variants tile the same arithmetic over m/n/k so the
 // weight panel stays in cache across the batch, and split the m rows
 // over `threads` scoped threads (each thread owns a disjoint slice of
 // `out`, so no synchronization is needed). Integer addition is
 // associative — wrapping i32 included — so any tiling/threading order
-// produces bit-identical results to the scalar reference.
+// produces bit-identical results to the scalar reference, and the
+// same argument covers the SIMD lane reorderings: every `*_blocked_at`
+// kernel is bit-exact for any `SimdLevel`.
 // ---------------------------------------------------------------------
 
 /// Rows per m tile inside one thread.
@@ -194,9 +184,12 @@ const BLOCK_K: usize = 1024;
 
 /// Split the `m` rows of `a`/`out` into up to `threads` contiguous
 /// chunks and run `f(a_rows, out_rows, rows)` on each, in parallel.
-fn par_rows<F>(a: &[i32], out: &mut [i64], m: usize, n: usize, k: usize, threads: usize, f: F)
+/// Generic over the activation element (i32, or i16 on the packed
+/// path).
+fn par_rows<T, F>(a: &[T], out: &mut [i64], m: usize, n: usize, k: usize, threads: usize, f: F)
 where
-    F: Fn(&[i32], &mut [i64], usize) + Sync,
+    T: Sync,
+    F: Fn(&[T], &mut [i64], usize) + Sync,
 {
     let t = threads.clamp(1, m.max(1));
     if t <= 1 {
@@ -223,70 +216,12 @@ where
     });
 }
 
-/// Four-chain i64 dot product over equal-length i32 slices.
-#[inline]
-fn dot_i64(ar: &[i32], br: &[i32]) -> i64 {
-    let len = ar.len();
-    let (mut a0, mut a1, mut a2, mut a3) = (0i64, 0i64, 0i64, 0i64);
-    let chunks = len / 4 * 4;
-    let mut kk = 0;
-    while kk < chunks {
-        a0 += ar[kk] as i64 * br[kk] as i64;
-        a1 += ar[kk + 1] as i64 * br[kk + 1] as i64;
-        a2 += ar[kk + 2] as i64 * br[kk + 2] as i64;
-        a3 += ar[kk + 3] as i64 * br[kk + 3] as i64;
-        kk += 4;
-    }
-    let mut acc = (a0 + a1) + (a2 + a3);
-    for kk in chunks..len {
-        acc += ar[kk] as i64 * br[kk] as i64;
-    }
-    acc
-}
-
-/// Four-chain i64 dot against a split (pos − neg) bank.
-#[inline]
-fn dot_i64_split(ar: &[i32], pr: &[i32], nr: &[i32]) -> i64 {
-    let len = ar.len();
-    let (mut a0, mut a1, mut a2, mut a3) = (0i64, 0i64, 0i64, 0i64);
-    let chunks = len / 4 * 4;
-    let mut kk = 0;
-    while kk < chunks {
-        a0 += ar[kk] as i64 * (pr[kk] as i64 - nr[kk] as i64);
-        a1 += ar[kk + 1] as i64 * (pr[kk + 1] as i64 - nr[kk + 1] as i64);
-        a2 += ar[kk + 2] as i64 * (pr[kk + 2] as i64 - nr[kk + 2] as i64);
-        a3 += ar[kk + 3] as i64 * (pr[kk + 3] as i64 - nr[kk + 3] as i64);
-        kk += 4;
-    }
-    let mut acc = (a0 + a1) + (a2 + a3);
-    for kk in chunks..len {
-        acc += ar[kk] as i64 * (pr[kk] as i64 - nr[kk] as i64);
-    }
-    acc
-}
-
-/// Wrapping-i32 dot product (the narrow path's exact arithmetic).
-#[inline]
-fn dot_i32_wrapping(ar: &[i32], br: &[i32]) -> i32 {
-    ar.iter()
-        .zip(br)
-        .fold(0i32, |acc, (&a, &b)| acc.wrapping_add(a.wrapping_mul(b)))
-}
-
-/// Wrapping-i32 dot against a split (pos − neg) bank.
-#[inline]
-fn dot_i32_split_wrapping(ar: &[i32], pr: &[i32], nr: &[i32]) -> i32 {
-    ar.iter()
-        .zip(pr.iter().zip(nr))
-        .fold(0i32, |acc, (&a, (&p, &n))| acc.wrapping_add(a.wrapping_mul(p - n)))
-}
-
 /// Tile loop shared by all blocked variants. `partial` folds one
 /// (i, j, k-tile) contribution into `out[i·n + j]`.
 #[inline]
-fn block_rows<P>(a: &[i32], out: &mut [i64], rows: usize, n: usize, k: usize, partial: P)
+fn block_rows<T, P>(a: &[T], out: &mut [i64], rows: usize, n: usize, k: usize, partial: P)
 where
-    P: Fn(&[i32], usize, std::ops::Range<usize>, &mut [i64]),
+    P: Fn(&[T], usize, std::ops::Range<usize>, &mut [i64]),
 {
     out.fill(0);
     for ib in (0..rows).step_by(BLOCK_M) {
@@ -305,8 +240,37 @@ where
     }
 }
 
-/// Blocked, row-parallel [`gemm_i32`] (i64 accumulation). Bit-exact
-/// with the scalar reference for any `threads`.
+/// Blocked, row-parallel [`gemm_i32`] (i64 accumulation) at an
+/// explicit dispatch level. Bit-exact with the scalar reference for
+/// any `level`/`threads`; unsupported levels clamp to scalar.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_i32_blocked_at(
+    level: SimdLevel,
+    a: &[i32],
+    bt: &[i32],
+    out: &mut [i64],
+    m: usize,
+    n: usize,
+    k: usize,
+    threads: usize,
+) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(bt.len(), n * k);
+    assert_eq!(out.len(), m * n);
+    let level = level.supported();
+    par_rows(a, out, m, n, k, threads, |ar, or, rows| {
+        block_rows(ar, or, rows, n, k, |arow, kb, js, orow| {
+            let kl = arow.len();
+            for j in js {
+                let br = &bt[j * k + kb..j * k + kb + kl];
+                orow[j] += simd::dot_i64(level, arow, br);
+            }
+        });
+    });
+}
+
+/// Blocked, row-parallel [`gemm_i32`] at the process-wide detected
+/// dispatch level ([`active_level`]).
 pub fn gemm_i32_blocked(
     a: &[i32],
     bt: &[i32],
@@ -316,24 +280,16 @@ pub fn gemm_i32_blocked(
     k: usize,
     threads: usize,
 ) {
-    assert_eq!(a.len(), m * k);
-    assert_eq!(bt.len(), n * k);
-    assert_eq!(out.len(), m * n);
-    par_rows(a, out, m, n, k, threads, |ar, or, rows| {
-        block_rows(ar, or, rows, n, k, |arow, kb, js, orow| {
-            let kl = arow.len();
-            for j in js {
-                let br = &bt[j * k + kb..j * k + kb + kl];
-                orow[j] += dot_i64(arow, br);
-            }
-        });
-    });
+    gemm_i32_blocked_at(active_level(), a, bt, out, m, n, k, threads);
 }
 
-/// Blocked, row-parallel [`gemm_i32_narrow`]. Partial sums combine
-/// with the same wrapping-i32 arithmetic as the scalar reference, so
-/// results are bit-exact even at the overflow boundary.
-pub fn gemm_i32_narrow_blocked(
+/// Blocked, row-parallel [`gemm_i32_narrow`] at an explicit dispatch
+/// level. Partial sums combine with the same wrapping-i32 arithmetic
+/// as the scalar reference, so results are bit-exact even at the
+/// overflow boundary, for any `level`/`threads`.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_i32_narrow_blocked_at(
+    level: SimdLevel,
     a: &[i32],
     bt: &[i32],
     out: &mut [i64],
@@ -345,19 +301,66 @@ pub fn gemm_i32_narrow_blocked(
     assert_eq!(a.len(), m * k);
     assert_eq!(bt.len(), n * k);
     assert_eq!(out.len(), m * n);
+    let level = level.supported();
     par_rows(a, out, m, n, k, threads, |ar, or, rows| {
         block_rows(ar, or, rows, n, k, |arow, kb, js, orow| {
             let kl = arow.len();
             for j in js {
                 let br = &bt[j * k + kb..j * k + kb + kl];
                 let prev = orow[j] as i32;
-                orow[j] = prev.wrapping_add(dot_i32_wrapping(arow, br)) as i64;
+                orow[j] = prev.wrapping_add(simd::dot_i32_wrapping(level, arow, br)) as i64;
             }
         });
     });
 }
 
-/// Blocked, row-parallel [`gemm_i32_split`].
+/// Blocked, row-parallel [`gemm_i32_narrow`] at the process-wide
+/// detected dispatch level.
+pub fn gemm_i32_narrow_blocked(
+    a: &[i32],
+    bt: &[i32],
+    out: &mut [i64],
+    m: usize,
+    n: usize,
+    k: usize,
+    threads: usize,
+) {
+    gemm_i32_narrow_blocked_at(active_level(), a, bt, out, m, n, k, threads);
+}
+
+/// Blocked, row-parallel [`gemm_i32_split`] at an explicit dispatch
+/// level.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_i32_split_blocked_at(
+    level: SimdLevel,
+    a: &[i32],
+    pos_t: &[i32],
+    neg_t: &[i32],
+    out: &mut [i64],
+    m: usize,
+    n: usize,
+    k: usize,
+    threads: usize,
+) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(pos_t.len(), n * k);
+    assert_eq!(neg_t.len(), n * k);
+    assert_eq!(out.len(), m * n);
+    let level = level.supported();
+    par_rows(a, out, m, n, k, threads, |ar, or, rows| {
+        block_rows(ar, or, rows, n, k, |arow, kb, js, orow| {
+            let kl = arow.len();
+            for j in js {
+                let pr = &pos_t[j * k + kb..j * k + kb + kl];
+                let nr = &neg_t[j * k + kb..j * k + kb + kl];
+                orow[j] += simd::dot_i64_split(level, arow, pr, nr);
+            }
+        });
+    });
+}
+
+/// Blocked, row-parallel [`gemm_i32_split`] at the process-wide
+/// detected dispatch level.
 #[allow(clippy::too_many_arguments)]
 pub fn gemm_i32_split_blocked(
     a: &[i32],
@@ -369,25 +372,14 @@ pub fn gemm_i32_split_blocked(
     k: usize,
     threads: usize,
 ) {
-    assert_eq!(a.len(), m * k);
-    assert_eq!(pos_t.len(), n * k);
-    assert_eq!(neg_t.len(), n * k);
-    assert_eq!(out.len(), m * n);
-    par_rows(a, out, m, n, k, threads, |ar, or, rows| {
-        block_rows(ar, or, rows, n, k, |arow, kb, js, orow| {
-            let kl = arow.len();
-            for j in js {
-                let pr = &pos_t[j * k + kb..j * k + kb + kl];
-                let nr = &neg_t[j * k + kb..j * k + kb + kl];
-                orow[j] += dot_i64_split(arow, pr, nr);
-            }
-        });
-    });
+    gemm_i32_split_blocked_at(active_level(), a, pos_t, neg_t, out, m, n, k, threads);
 }
 
-/// Blocked, row-parallel [`gemm_i32_split_narrow`].
+/// Blocked, row-parallel [`gemm_i32_split_narrow`] at an explicit
+/// dispatch level.
 #[allow(clippy::too_many_arguments)]
-pub fn gemm_i32_split_narrow_blocked(
+pub fn gemm_i32_split_narrow_blocked_at(
+    level: SimdLevel,
     a: &[i32],
     pos_t: &[i32],
     neg_t: &[i32],
@@ -401,6 +393,7 @@ pub fn gemm_i32_split_narrow_blocked(
     assert_eq!(pos_t.len(), n * k);
     assert_eq!(neg_t.len(), n * k);
     assert_eq!(out.len(), m * n);
+    let level = level.supported();
     par_rows(a, out, m, n, k, threads, |ar, or, rows| {
         block_rows(ar, or, rows, n, k, |arow, kb, js, orow| {
             let kl = arow.len();
@@ -408,7 +401,60 @@ pub fn gemm_i32_split_narrow_blocked(
                 let pr = &pos_t[j * k + kb..j * k + kb + kl];
                 let nr = &neg_t[j * k + kb..j * k + kb + kl];
                 let prev = orow[j] as i32;
-                orow[j] = prev.wrapping_add(dot_i32_split_wrapping(arow, pr, nr)) as i64;
+                let dot = simd::dot_i32_split_wrapping(level, arow, pr, nr);
+                orow[j] = prev.wrapping_add(dot) as i64;
+            }
+        });
+    });
+}
+
+/// Blocked, row-parallel [`gemm_i32_split_narrow`] at the process-wide
+/// detected dispatch level.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_i32_split_narrow_blocked(
+    a: &[i32],
+    pos_t: &[i32],
+    neg_t: &[i32],
+    out: &mut [i64],
+    m: usize,
+    n: usize,
+    k: usize,
+    threads: usize,
+) {
+    gemm_i32_split_narrow_blocked_at(active_level(), a, pos_t, neg_t, out, m, n, k, threads);
+}
+
+/// Blocked, row-parallel narrow GEMM over *packed* i16 activation
+/// codes and a packed i16 weight bank (see [`packed`]), with the
+/// narrow path's exact wrapping-i32 arithmetic over the widened
+/// values. Serves both the unified narrow bank ([`pack_codes_i16`])
+/// and the split narrow banks via the packed `W⁺ − W⁻` difference
+/// ([`pack_diff_i16`]) — the subtraction distributes over the
+/// accumulation, so the difference bank is functionally identical.
+/// Bit-exact with [`gemm_i32_narrow`] over the widened codes, for any
+/// `level`/`threads`.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_i16_narrow_blocked_at(
+    level: SimdLevel,
+    a: &[i16],
+    bt: &[i16],
+    out: &mut [i64],
+    m: usize,
+    n: usize,
+    k: usize,
+    threads: usize,
+) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(bt.len(), n * k);
+    assert_eq!(out.len(), m * n);
+    let level = level.supported();
+    par_rows(a, out, m, n, k, threads, |ar, or, rows| {
+        block_rows(ar, or, rows, n, k, |arow, kb, js, orow| {
+            let kl = arow.len();
+            for j in js {
+                let br = &bt[j * k + kb..j * k + kb + kl];
+                let prev = orow[j] as i32;
+                orow[j] = prev.wrapping_add(simd::dot_i16_wrapping(level, arow, br)) as i64;
             }
         });
     });
@@ -518,23 +564,70 @@ mod tests {
         assert_eq!(wide, narrow);
     }
 
-    // Broad blocked-vs-scalar bit-exactness (all four variants ×
-    // random odd sizes × thread counts) lives in
-    // tests/properties.rs::prop_blocked_threaded_gemm_bit_exact; here
-    // we keep only the wrap-around edge the property test's value
-    // ranges cannot reach.
+    // Broad blocked-vs-scalar bit-exactness (all kernel variants ×
+    // dispatch levels × random odd sizes × thread counts) lives in
+    // tests/properties.rs; here we keep the wrap-around edges the
+    // property tests' value ranges cannot reach.
     #[test]
     fn narrow_blocked_wraps_like_scalar() {
         // Drive the i32 accumulator past wrap-around: the blocked
-        // variant must reproduce the scalar wrapping bit pattern.
+        // variant must reproduce the scalar wrapping bit pattern at
+        // every dispatch level.
         let (m, n, k) = (2, 3, 2100);
         let a = vec![1 << 15; m * k];
         let w = vec![1 << 15; n * k]; // products of 2^30, k of them: wraps
         let mut want = vec![0i64; m * n];
         let mut got = vec![0i64; m * n];
         gemm_i32_narrow(&a, &w, &mut want, m, n, k);
-        gemm_i32_narrow_blocked(&a, &w, &mut got, m, n, k, 2);
-        assert_eq!(want, got);
+        for level in [SimdLevel::Scalar, active_level()] {
+            gemm_i32_narrow_blocked_at(level, &a, &w, &mut got, m, n, k, 2);
+            assert_eq!(want, got, "level {level:?}");
+        }
+    }
+
+    #[test]
+    fn split_narrow_wrapping_sub_at_i32_extremes() {
+        // Regression: the bank difference used a plain `-`, which
+        // overflows (debug-build panic) for p = i32::MAX, n = i32::MIN.
+        // It must wrap — MAX ⊖ MIN ≡ −1 — identically at every level.
+        let (m, n, k) = (2, 2, 5);
+        let a = vec![3i32; m * k];
+        let pos = vec![i32::MAX; n * k];
+        let neg = vec![i32::MIN; n * k];
+        let mut want = vec![0i64; m * n];
+        let mut got = vec![0i64; m * n];
+        gemm_i32_split_narrow(&a, &pos, &neg, &mut want, m, n, k);
+        assert!(want.iter().all(|&v| v == -(3 * k as i64)), "{want:?}");
+        for level in [SimdLevel::Scalar, active_level()] {
+            gemm_i32_split_narrow_blocked_at(level, &a, &pos, &neg, &mut got, m, n, k, 2);
+            assert_eq!(want, got, "level {level:?}");
+        }
+    }
+
+    #[test]
+    fn packed_narrow_matches_widened_reference() {
+        // The packed i16 kernel must reproduce gemm_i32_narrow over the
+        // widened codes bit-for-bit — including genuine i32 wrap-around
+        // (full-range i16 products overflow the accumulator fast).
+        let (m, n, k) = (5, 6, 77);
+        let mut r = Rng::new(21);
+        let a16: Vec<i16> = (0..m * k)
+            .map(|_| r.range_i64(i16::MIN as i64, i16::MAX as i64 + 1) as i16)
+            .collect();
+        let w16: Vec<i16> = (0..n * k)
+            .map(|_| r.range_i64(i16::MIN as i64, i16::MAX as i64 + 1) as i16)
+            .collect();
+        let a32: Vec<i32> = a16.iter().map(|&v| v as i32).collect();
+        let w32: Vec<i32> = w16.iter().map(|&v| v as i32).collect();
+        let mut want = vec![0i64; m * n];
+        let mut got = vec![0i64; m * n];
+        gemm_i32_narrow(&a32, &w32, &mut want, m, n, k);
+        for level in [SimdLevel::Scalar, active_level()] {
+            for threads in [1, 3] {
+                gemm_i16_narrow_blocked_at(level, &a16, &w16, &mut got, m, n, k, threads);
+                assert_eq!(want, got, "level {level:?} t={threads}");
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,141 @@
+//! NEON (aarch64) row-dot kernels behind the [`super::simd`] dispatch.
+//!
+//! NEON is baseline on every aarch64 target, so these are safe
+//! functions with unsafe intrinsic bodies — no runtime feature gate is
+//! needed beyond the `target_arch` compile gate. Lane semantics match
+//! the scalar oracle the same way the AVX2 kernels do: widening
+//! multiply-accumulate (`vmlal`/`vmlsl`) for the wide variants, and
+//! plain wrapping i32 lane arithmetic (`vmlaq_s32`) for the narrow
+//! variants, which is bit-identical to the scalar wrapping fold for
+//! all inputs. All loads are unaligned-tolerant (`vld1q`).
+
+use std::arch::aarch64::*;
+
+/// Wide dot: Σ a·b with i64 accumulation.
+pub(super) fn dot_i64(a: &[i32], b: &[i32]) -> i64 {
+    let len = a.len().min(b.len());
+    let mut i = 0usize;
+    // SAFETY: in-bounds pointer loads; NEON is baseline on aarch64.
+    let mut out = unsafe {
+        let pa = a.as_ptr();
+        let pb = b.as_ptr();
+        let mut acc = vdupq_n_s64(0);
+        while i + 4 <= len {
+            let va = vld1q_s32(pa.add(i));
+            let vb = vld1q_s32(pb.add(i));
+            acc = vmlal_s32(acc, vget_low_s32(va), vget_low_s32(vb));
+            acc = vmlal_high_s32(acc, va, vb);
+            i += 4;
+        }
+        vaddvq_s64(acc)
+    };
+    while i < len {
+        out = out.wrapping_add(a[i] as i64 * b[i] as i64);
+        i += 1;
+    }
+    out
+}
+
+/// Wide split dot: Σ a·(p − n) with i64 accumulation
+/// (`vmlal` on the W⁺ bank, `vmlsl` on the W⁻ bank — the subtraction
+/// distributes over the accumulation).
+pub(super) fn dot_i64_split(a: &[i32], p: &[i32], n: &[i32]) -> i64 {
+    let len = a.len().min(p.len()).min(n.len());
+    let mut i = 0usize;
+    // SAFETY: in-bounds pointer loads; NEON is baseline on aarch64.
+    let mut out = unsafe {
+        let pa = a.as_ptr();
+        let pp = p.as_ptr();
+        let pn = n.as_ptr();
+        let mut acc = vdupq_n_s64(0);
+        while i + 4 <= len {
+            let va = vld1q_s32(pa.add(i));
+            let vp = vld1q_s32(pp.add(i));
+            let vn = vld1q_s32(pn.add(i));
+            acc = vmlal_s32(acc, vget_low_s32(va), vget_low_s32(vp));
+            acc = vmlal_high_s32(acc, va, vp);
+            acc = vmlsl_s32(acc, vget_low_s32(va), vget_low_s32(vn));
+            acc = vmlsl_high_s32(acc, va, vn);
+            i += 4;
+        }
+        vaddvq_s64(acc)
+    };
+    while i < len {
+        out = out.wrapping_add(a[i] as i64 * (p[i] as i64 - n[i] as i64));
+        i += 1;
+    }
+    out
+}
+
+/// Narrow dot: wrapping-i32 Σ a·b.
+pub(super) fn dot_i32_wrapping(a: &[i32], b: &[i32]) -> i32 {
+    let len = a.len().min(b.len());
+    let mut i = 0usize;
+    // SAFETY: in-bounds pointer loads; NEON is baseline on aarch64.
+    let mut out = unsafe {
+        let pa = a.as_ptr();
+        let pb = b.as_ptr();
+        let mut acc = vdupq_n_s32(0);
+        while i + 4 <= len {
+            acc = vmlaq_s32(acc, vld1q_s32(pa.add(i)), vld1q_s32(pb.add(i)));
+            i += 4;
+        }
+        vaddvq_s32(acc)
+    };
+    while i < len {
+        out = out.wrapping_add(a[i].wrapping_mul(b[i]));
+        i += 1;
+    }
+    out
+}
+
+/// Narrow split dot: wrapping-i32 Σ a·(p ⊖ n) (`vsubq_s32` wraps, same
+/// as the oracle's `wrapping_sub`).
+pub(super) fn dot_i32_split_wrapping(a: &[i32], p: &[i32], n: &[i32]) -> i32 {
+    let len = a.len().min(p.len()).min(n.len());
+    let mut i = 0usize;
+    // SAFETY: in-bounds pointer loads; NEON is baseline on aarch64.
+    let mut out = unsafe {
+        let pa = a.as_ptr();
+        let pp = p.as_ptr();
+        let pn = n.as_ptr();
+        let mut acc = vdupq_n_s32(0);
+        while i + 4 <= len {
+            let d = vsubq_s32(vld1q_s32(pp.add(i)), vld1q_s32(pn.add(i)));
+            acc = vmlaq_s32(acc, vld1q_s32(pa.add(i)), d);
+            i += 4;
+        }
+        vaddvq_s32(acc)
+    };
+    while i < len {
+        out = out.wrapping_add(a[i].wrapping_mul(p[i].wrapping_sub(n[i])));
+        i += 1;
+    }
+    out
+}
+
+/// Packed narrow dot: wrapping-i32 Σ a·b over i16 codes, 8 lanes per
+/// widening multiply-accumulate.
+pub(super) fn dot_i16_wrapping(a: &[i16], b: &[i16]) -> i32 {
+    let len = a.len().min(b.len());
+    let mut i = 0usize;
+    // SAFETY: in-bounds pointer loads; NEON is baseline on aarch64.
+    let mut out = unsafe {
+        let pa = a.as_ptr();
+        let pb = b.as_ptr();
+        let mut acc = vdupq_n_s32(0);
+        while i + 8 <= len {
+            let va = vld1q_s16(pa.add(i));
+            let vb = vld1q_s16(pb.add(i));
+            acc = vmlal_s16(acc, vget_low_s16(va), vget_low_s16(vb));
+            acc = vmlal_high_s16(acc, va, vb);
+            i += 8;
+        }
+        vaddvq_s32(acc)
+    };
+    while i < len {
+        out = out.wrapping_add(a[i] as i32 * b[i] as i32);
+        i += 1;
+    }
+    out
+}

@@ -1,0 +1,66 @@
+//! Dense i16 packing of narrow weight codes.
+//!
+//! The paper's premise is that 2–8-bit codes should be *cheaper* than
+//! full-width arithmetic, but i32 storage wastes the narrow width: a
+//! 256-bit vector covers only 8 codes. Packing the bank into i16 lanes
+//! doubles the codes per load and unlocks the paired-multiply
+//! instructions (`pmaddwd` on AVX2, `vmlal_s16` on NEON) — one vector
+//! multiply covers 2× the elements, with the widen folded into the
+//! instruction itself.
+//!
+//! Packing applies exactly when the plan's narrow-accumulation proof
+//! already holds **and** both activation codes (`≤ 2^b̃x − 1`) and
+//! weight codes fit i16. The split path packs the `W⁺ − W⁻`
+//! *difference* (exact in i64, checked per element): the subtraction
+//! distributes over the accumulation, so the difference bank is
+//! functionally identical to the two-bank form — the power model still
+//! charges the split datapath, which is an accounting concern, not an
+//! arithmetic one.
+
+/// Pack i32 codes into i16 lanes. `None` if any code is out of range —
+/// the caller keeps the unpacked bank.
+pub fn pack_codes_i16(codes: &[i32]) -> Option<Vec<i16>> {
+    codes
+        .iter()
+        .map(|&c| i16::try_from(c).ok())
+        .collect::<Option<Vec<i16>>>()
+}
+
+/// Pack the split difference `W⁺ − W⁻` into i16 lanes (difference
+/// computed in i64, so arbitrary i32 banks can't overflow here).
+/// `None` if the banks differ in length or any difference is out of
+/// i16 range.
+pub fn pack_diff_i16(pos: &[i32], neg: &[i32]) -> Option<Vec<i16>> {
+    if pos.len() != neg.len() {
+        return None;
+    }
+    pos.iter()
+        .zip(neg)
+        .map(|(&p, &n)| i16::try_from(p as i64 - n as i64).ok())
+        .collect::<Option<Vec<i16>>>()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_roundtrips_and_rejects_out_of_range() {
+        assert_eq!(
+            pack_codes_i16(&[0, 1, -1, i16::MAX as i32, i16::MIN as i32]),
+            Some(vec![0, 1, -1, i16::MAX, i16::MIN])
+        );
+        assert_eq!(pack_codes_i16(&[i16::MAX as i32 + 1]), None);
+        assert_eq!(pack_codes_i16(&[i16::MIN as i32 - 1]), None);
+    }
+
+    #[test]
+    fn pack_diff_is_exact_and_total() {
+        assert_eq!(pack_diff_i16(&[5, 0, 7], &[0, 3, 7]), Some(vec![5, -3, 0]));
+        // non-negative banks whose difference leaves i16
+        assert_eq!(pack_diff_i16(&[40_000], &[0]), None);
+        // arbitrary i32 banks must not overflow the difference itself
+        assert_eq!(pack_diff_i16(&[i32::MAX], &[i32::MIN]), None);
+        assert_eq!(pack_diff_i16(&[1, 2], &[1]), None);
+    }
+}

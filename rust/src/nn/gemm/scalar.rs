@@ -1,0 +1,84 @@
+//! Scalar row-dot kernels — the bit-exactness oracle every SIMD path
+//! is property-tested against.
+//!
+//! These are deliberately boring: four-chain i64 accumulation for the
+//! wide variants (the chains break the loop-carried dependency) and a
+//! plain wrapping fold for the narrow variants, whose arithmetic is
+//! *defined* as wrapping-i32 so any summation order is bit-identical.
+
+/// Four-chain i64 dot product over equal-length i32 slices.
+#[inline]
+pub(super) fn dot_i64(ar: &[i32], br: &[i32]) -> i64 {
+    let len = ar.len();
+    let (mut a0, mut a1, mut a2, mut a3) = (0i64, 0i64, 0i64, 0i64);
+    let chunks = len / 4 * 4;
+    let mut kk = 0;
+    while kk < chunks {
+        a0 += ar[kk] as i64 * br[kk] as i64;
+        a1 += ar[kk + 1] as i64 * br[kk + 1] as i64;
+        a2 += ar[kk + 2] as i64 * br[kk + 2] as i64;
+        a3 += ar[kk + 3] as i64 * br[kk + 3] as i64;
+        kk += 4;
+    }
+    let mut acc = (a0 + a1) + (a2 + a3);
+    for kk in chunks..len {
+        acc += ar[kk] as i64 * br[kk] as i64;
+    }
+    acc
+}
+
+/// Four-chain i64 dot against a split (pos − neg) bank.
+#[inline]
+pub(super) fn dot_i64_split(ar: &[i32], pr: &[i32], nr: &[i32]) -> i64 {
+    let len = ar.len();
+    let (mut a0, mut a1, mut a2, mut a3) = (0i64, 0i64, 0i64, 0i64);
+    let chunks = len / 4 * 4;
+    let mut kk = 0;
+    while kk < chunks {
+        a0 += ar[kk] as i64 * (pr[kk] as i64 - nr[kk] as i64);
+        a1 += ar[kk + 1] as i64 * (pr[kk + 1] as i64 - nr[kk + 1] as i64);
+        a2 += ar[kk + 2] as i64 * (pr[kk + 2] as i64 - nr[kk + 2] as i64);
+        a3 += ar[kk + 3] as i64 * (pr[kk + 3] as i64 - nr[kk + 3] as i64);
+        kk += 4;
+    }
+    let mut acc = (a0 + a1) + (a2 + a3);
+    for kk in chunks..len {
+        acc += ar[kk] as i64 * (pr[kk] as i64 - nr[kk] as i64);
+    }
+    acc
+}
+
+/// Wrapping-i32 dot product (the narrow path's exact arithmetic).
+#[inline]
+pub(super) fn dot_i32_wrapping(ar: &[i32], br: &[i32]) -> i32 {
+    ar.iter()
+        .zip(br)
+        .fold(0i32, |acc, (&a, &b)| acc.wrapping_add(a.wrapping_mul(b)))
+}
+
+/// Wrapping-i32 dot against a split (pos − neg) bank.
+///
+/// The bank difference is a `wrapping_sub`: plan-built banks are
+/// non-negative (so the difference always fits), but the kernel is
+/// public and must stay total over arbitrary i32 banks — a plain `-`
+/// overflowed (debug-build panic) for inputs like `p = i32::MAX,
+/// n = i32::MIN`, and the SIMD lanes wrap here too.
+#[inline]
+pub(super) fn dot_i32_split_wrapping(ar: &[i32], pr: &[i32], nr: &[i32]) -> i32 {
+    ar.iter()
+        .zip(pr.iter().zip(nr))
+        .fold(0i32, |acc, (&a, (&p, &n))| {
+            acc.wrapping_add(a.wrapping_mul(p.wrapping_sub(n)))
+        })
+}
+
+/// Wrapping-i32 dot over *packed* i16 codes (the packed narrow path's
+/// scalar reference). Each i16·i16 product is exactly representable in
+/// i32, so only the accumulation wraps — same ring as
+/// [`dot_i32_wrapping`] over the widened values.
+#[inline]
+pub(super) fn dot_i16_wrapping(ar: &[i16], br: &[i16]) -> i32 {
+    ar.iter()
+        .zip(br)
+        .fold(0i32, |acc, (&a, &b)| acc.wrapping_add(a as i32 * b as i32))
+}

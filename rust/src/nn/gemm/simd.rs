@@ -1,0 +1,188 @@
+//! Runtime SIMD dispatch for the integer GEMM hot path.
+//!
+//! The level is detected **once per process** ([`active_level`], an
+//! atomically-initialized cache) and frozen into every
+//! [`ExecutionPlan`](crate::nn::plan::ExecutionPlan) at compile time —
+//! the hot loops never re-probe CPU features. The scalar kernels in
+//! [`super::scalar`] stay untouched as the bit-exactness oracle; every
+//! vector path is property-tested identical to them (wrapping-i32
+//! semantics included, see `tests/properties.rs`).
+//!
+//! Escape hatches, for A/B debugging and the CI scalar-fallback leg:
+//!
+//! - `PANN_FORCE_SCALAR=1` (any value other than empty/`0`) in the
+//!   environment at first use;
+//! - the `force-scalar` cargo feature (compile-time);
+//! - [`ExecutionPlan::force_scalar`](crate::nn::plan::ExecutionPlan::force_scalar)
+//!   on an already-compiled plan.
+
+use std::sync::OnceLock;
+
+/// Instruction set the integer dot-product kernels dispatch to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdLevel {
+    /// Scalar reference kernels (the bit-exactness oracle).
+    Scalar,
+    /// x86-64 AVX2: 256-bit lanes via `std::arch`, runtime-detected.
+    Avx2,
+    /// AArch64 NEON: 128-bit lanes, baseline on every aarch64 target.
+    Neon,
+}
+
+impl SimdLevel {
+    /// Short lowercase name for bench labels and reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdLevel::Scalar => "scalar",
+            SimdLevel::Avx2 => "avx2",
+            SimdLevel::Neon => "neon",
+        }
+    }
+
+    /// Clamp to what this machine actually supports: a level the
+    /// running CPU cannot execute falls back to `Scalar`. This is what
+    /// keeps the public `*_blocked_at` kernels safe for arbitrary
+    /// arguments — the unsafe intrinsic paths are only entered behind
+    /// a successful feature check.
+    pub fn supported(self) -> SimdLevel {
+        match self {
+            SimdLevel::Scalar => SimdLevel::Scalar,
+            #[cfg(target_arch = "x86_64")]
+            SimdLevel::Avx2 if is_x86_feature_detected!("avx2") => SimdLevel::Avx2,
+            #[cfg(target_arch = "aarch64")]
+            SimdLevel::Neon => SimdLevel::Neon,
+            _ => SimdLevel::Scalar,
+        }
+    }
+}
+
+/// The level this process dispatches to, detected once and cached.
+pub fn active_level() -> SimdLevel {
+    static ACTIVE: OnceLock<SimdLevel> = OnceLock::new();
+    *ACTIVE.get_or_init(detect)
+}
+
+/// Detect the best level, honouring the force-scalar escape hatches
+/// (the `PANN_FORCE_SCALAR` env var and the `force-scalar` feature).
+pub fn detect() -> SimdLevel {
+    let force = cfg!(feature = "force-scalar")
+        || std::env::var_os("PANN_FORCE_SCALAR").is_some_and(|v| !v.is_empty() && v != "0");
+    detect_with(force)
+}
+
+/// Pure detection given an explicit force-scalar flag (testable
+/// without touching the process environment).
+pub fn detect_with(force_scalar: bool) -> SimdLevel {
+    if force_scalar {
+        return SimdLevel::Scalar;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            SimdLevel::Avx2
+        } else {
+            SimdLevel::Scalar
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        SimdLevel::Neon
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        SimdLevel::Scalar
+    }
+}
+
+// ---------------------------------------------------------------------
+// Dispatched row dots. Callers (the blocked kernels) resolve `level`
+// through `SimdLevel::supported()` once per GEMM call, so the unsafe
+// arms below are only reachable with the feature present.
+// ---------------------------------------------------------------------
+
+/// Dispatched wide dot (Σ a·b, i64 accumulation).
+#[inline]
+pub(super) fn dot_i64(level: SimdLevel, a: &[i32], b: &[i32]) -> i64 {
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `Avx2` survives `supported()` only when the CPU has it.
+        SimdLevel::Avx2 => unsafe { super::avx2::dot_i64(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => super::neon::dot_i64(a, b),
+        _ => super::scalar::dot_i64(a, b),
+    }
+}
+
+/// Dispatched wide split dot (Σ a·(p − n), i64 accumulation).
+#[inline]
+pub(super) fn dot_i64_split(level: SimdLevel, a: &[i32], p: &[i32], n: &[i32]) -> i64 {
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `Avx2` survives `supported()` only when the CPU has it.
+        SimdLevel::Avx2 => unsafe { super::avx2::dot_i64_split(a, p, n) },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => super::neon::dot_i64_split(a, p, n),
+        _ => super::scalar::dot_i64_split(a, p, n),
+    }
+}
+
+/// Dispatched narrow dot (wrapping-i32 Σ a·b).
+#[inline]
+pub(super) fn dot_i32_wrapping(level: SimdLevel, a: &[i32], b: &[i32]) -> i32 {
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `Avx2` survives `supported()` only when the CPU has it.
+        SimdLevel::Avx2 => unsafe { super::avx2::dot_i32_wrapping(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => super::neon::dot_i32_wrapping(a, b),
+        _ => super::scalar::dot_i32_wrapping(a, b),
+    }
+}
+
+/// Dispatched narrow split dot (wrapping-i32 Σ a·(p ⊖ n)).
+#[inline]
+pub(super) fn dot_i32_split_wrapping(level: SimdLevel, a: &[i32], p: &[i32], n: &[i32]) -> i32 {
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `Avx2` survives `supported()` only when the CPU has it.
+        SimdLevel::Avx2 => unsafe { super::avx2::dot_i32_split_wrapping(a, p, n) },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => super::neon::dot_i32_split_wrapping(a, p, n),
+        _ => super::scalar::dot_i32_split_wrapping(a, p, n),
+    }
+}
+
+/// Dispatched packed narrow dot (wrapping-i32 Σ a·b over i16 codes).
+#[inline]
+pub(super) fn dot_i16_wrapping(level: SimdLevel, a: &[i16], b: &[i16]) -> i32 {
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `Avx2` survives `supported()` only when the CPU has it.
+        SimdLevel::Avx2 => unsafe { super::avx2::dot_i16_wrapping(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => super::neon::dot_i16_wrapping(a, b),
+        _ => super::scalar::dot_i16_wrapping(a, b),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn force_scalar_wins_over_any_hardware() {
+        assert_eq!(detect_with(true), SimdLevel::Scalar);
+    }
+
+    #[test]
+    fn detected_level_is_supported_and_stable() {
+        let l = active_level();
+        assert_eq!(l.supported(), l, "active level must be executable");
+        assert_eq!(active_level(), l, "detection is cached per process");
+    }
+
+    #[test]
+    fn scalar_is_always_supported() {
+        assert_eq!(SimdLevel::Scalar.supported(), SimdLevel::Scalar);
+    }
+}

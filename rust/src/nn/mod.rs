@@ -22,7 +22,8 @@
 //! one-call [`QuantizedModel`] wrapper plus the config vocabulary.
 //!
 //! Modules: [`tensor`] (shape + storage), [`gemm`] (f32/integer GEMM,
-//! blocked + threaded variants, im2col), [`layers`]/[`model`] (graph +
+//! blocked + threaded variants with runtime AVX2/NEON dispatch and
+//! packed-i16 narrow banks, im2col), [`layers`]/[`model`] (graph +
 //! manifest), [`plan`] (compile), [`exec`] (batched execution),
 //! [`quantized`] (config + wrapper), [`power_meter`] (accounting),
 //! [`eval`] (dataset accuracy loops).
@@ -38,6 +39,7 @@ pub mod quantized;
 pub mod tensor;
 
 pub use exec::Scratch;
+pub use gemm::SimdLevel;
 pub use model::Model;
 pub use plan::{ExecutionPlan, GemmKernel};
 pub use power_meter::PowerMeter;

@@ -19,6 +19,7 @@
 //! [`super::exec::Scratch`].
 
 use super::gemm;
+use super::gemm::SimdLevel;
 use super::layers::Op;
 use super::model::Model;
 use super::power_meter::PowerMeter;
@@ -64,6 +65,11 @@ pub(crate) struct WeightForm {
     pub adds_per_element: f64,
     /// max |code| (storage bits, Table 14).
     pub max_code: i64,
+    /// Dense i16 bank for the SIMD narrow path (the unified codes, or
+    /// the `W⁺ − W⁻` difference on the split path — see
+    /// [`gemm::packed`]). `None` when the plan runs scalar, the kernel
+    /// is wide, or the codes don't fit i16.
+    pub packed: Option<Vec<i16>>,
 }
 
 /// A frozen MAC layer ready for integer execution.
@@ -105,6 +111,11 @@ pub struct ExecutionPlan {
     pub max_cols_per_sample: usize,
     /// Largest per-sample accumulator buffer any node needs.
     pub max_acc_per_sample: usize,
+    /// SIMD level the plan's GEMMs dispatch to — frozen at compile
+    /// time from the process-wide detection ([`gemm::active_level`]),
+    /// so the hot loops never re-probe CPU features. Downgrade with
+    /// [`ExecutionPlan::force_scalar`] for A/B checks.
+    pub simd: SimdLevel,
 }
 
 impl ExecutionPlan {
@@ -122,6 +133,7 @@ impl ExecutionPlan {
             None => None,
         };
 
+        let simd = gemm::active_level();
         let mut steps: Vec<Option<PlannedMac>> = vec![None; model.nodes.len()];
         let mut meter_names = Vec::new();
         let mut max_cols = 0usize;
@@ -157,7 +169,7 @@ impl ExecutionPlan {
                 }
                 _ => unreachable!(),
             };
-            let weights = quantize_weights(
+            let mut weights = quantize_weights(
                 &w.data,
                 out_ch,
                 depth,
@@ -191,6 +203,18 @@ impl ExecutionPlan {
                 (false, true) => GemmKernel::Narrow,
                 (false, false) => GemmKernel::Wide,
             };
+            // --- packed i16 bank for the SIMD narrow path ---
+            // The narrow proof already bounds |a·w·k| < 2^30; packing
+            // additionally needs both operands in i16 (activation codes
+            // are ≤ act_qmax). Skipped on scalar plans so the forced-
+            // scalar escape hatch runs the pristine original path.
+            if simd != SimdLevel::Scalar && act_qmax <= i16::MAX as i64 {
+                weights.packed = match kernel {
+                    GemmKernel::Narrow => gemm::pack_codes_i16(&weights.pos),
+                    GemmKernel::SplitNarrow => gemm::pack_diff_i16(&weights.pos, &weights.neg),
+                    GemmKernel::Wide | GemmKernel::SplitWide => None,
+                };
+            }
             // --- scratch geometry (im2col columns `oh·ow·k` and
             // accumulators `co·oh·ow` per sample; `k` / `out` for
             // linear) ---
@@ -223,7 +247,19 @@ impl ExecutionPlan {
             macs_per_sample,
             max_cols_per_sample: max_cols,
             max_acc_per_sample: max_acc,
+            simd,
         })
+    }
+
+    /// Downgrade this plan to the scalar reference kernels: clears the
+    /// SIMD level and drops the packed i16 banks, so subsequent
+    /// forwards take exactly the pre-SIMD code path. For A/B
+    /// bit-exactness checks and scalar-baseline benchmarking.
+    pub fn force_scalar(&mut self) {
+        self.simd = SimdLevel::Scalar;
+        for p in self.steps.iter_mut().flatten() {
+            p.weights.packed = None;
+        }
     }
 
     /// Create a fresh meter with this plan's layer slots.
@@ -349,7 +385,15 @@ fn quantize_weights(
         if split {
             let pos: Vec<i32> = codes.iter().map(|&c| c.max(0) as i32).collect();
             let neg: Vec<i32> = codes.iter().map(|&c| (-c).max(0) as i32).collect();
-            WeightForm { pos, neg, scale, split: true, adds_per_element: adds, max_code }
+            WeightForm {
+                pos,
+                neg,
+                scale,
+                split: true,
+                adds_per_element: adds,
+                max_code,
+                packed: None,
+            }
         } else {
             WeightForm {
                 pos: codes.iter().map(|&c| c as i32).collect(),
@@ -358,6 +402,7 @@ fn quantize_weights(
                 split: false,
                 adds_per_element: adds,
                 max_code,
+                packed: None,
             }
         }
     };
@@ -674,5 +719,40 @@ mod tests {
     fn plan_is_send_sync() {
         fn assert_send_sync<T: Send + Sync>() {}
         assert_send_sync::<ExecutionPlan>();
+    }
+
+    #[test]
+    fn narrow_plans_pack_weight_banks_when_simd_active() {
+        let mut model = Model::reference_cnn(42);
+        let x = Tensor::zeros(vec![2, 1, 16, 16]);
+        model.record_act_stats(&x).unwrap();
+        let mut plan = ExecutionPlan::compile(
+            &model,
+            QuantConfig::unsigned_baseline(4, ActQuantMethod::BnStats),
+            None,
+        )
+        .unwrap();
+        assert_eq!(plan.simd, gemm::active_level());
+        for p in plan.steps.iter().flatten() {
+            match (plan.simd, p.kernel) {
+                // 4-bit codes always fit i16, so every narrow kernel
+                // must carry a packed bank on a SIMD plan...
+                (l, GemmKernel::Narrow | GemmKernel::SplitNarrow) if l != SimdLevel::Scalar => {
+                    let packed = p.weights.packed.as_ref().expect("packed bank");
+                    assert_eq!(packed.len(), p.weights.pos.len());
+                    for (i, &q) in packed.iter().enumerate() {
+                        let want = p.weights.pos[i] as i64
+                            - p.weights.neg.get(i).copied().unwrap_or(0) as i64;
+                        assert_eq!(q as i64, want);
+                    }
+                }
+                // ...and never on a scalar plan or a wide kernel.
+                _ => assert!(p.weights.packed.is_none()),
+            }
+        }
+        // force_scalar drops the banks and the level together.
+        plan.force_scalar();
+        assert_eq!(plan.simd, SimdLevel::Scalar);
+        assert!(plan.steps.iter().flatten().all(|p| p.weights.packed.is_none()));
     }
 }

@@ -98,6 +98,117 @@ fn prop_blocked_threaded_gemm_bit_exact() {
 }
 
 #[test]
+fn prop_simd_kernels_bit_identical_to_scalar() {
+    // Every SIMD dispatch level must reproduce the scalar reference
+    // kernels bit-for-bit, for all four variants, across odd shapes
+    // (straddling vector-width and tile boundaries), thread counts,
+    // and two input regimes: realistic quantization codes, and
+    // full-range i32 values that drive the narrow (wrapping) paths
+    // deep into wrap-around.
+    use pann::nn::gemm::{active_level, SimdLevel};
+    let levels = [SimdLevel::Scalar, active_level()];
+    let mut rng = Rng::new(120);
+    for case in 0..30 {
+        let m = 1 + rng.below(40);
+        let n = 1 + rng.below(35);
+        let k = 1 + rng.below(200);
+        let threads = 1 + rng.below(4);
+        let wild = case % 2 == 1; // alternate realistic / wrap-around
+        let (alo, ahi, wlo, whi) = if wild {
+            (i32::MIN as i64, i32::MAX as i64 + 1, i32::MIN as i64, i32::MAX as i64 + 1)
+        } else {
+            (0, 256, -127, 128)
+        };
+        let a: Vec<i32> = (0..m * k).map(|_| rng.range_i64(alo, ahi) as i32).collect();
+        let w: Vec<i32> = (0..n * k).map(|_| rng.range_i64(wlo, whi) as i32).collect();
+        let pos: Vec<i32> = w.iter().map(|&v| v.max(0)).collect();
+        let neg: Vec<i32> = w.iter().map(|&v| (-v).max(0)).collect();
+        let mut want = vec![0i64; m * n];
+        let mut got = vec![0i64; m * n];
+
+        gemm::gemm_i32_narrow(&a, &w, &mut want, m, n, k);
+        for level in levels {
+            gemm::gemm_i32_narrow_blocked_at(level, &a, &w, &mut got, m, n, k, threads);
+            assert_eq!(want, got, "narrow {level:?} m={m} n={n} k={k} t={threads} wild={wild}");
+        }
+
+        gemm::gemm_i32_split_narrow(&a, &pos, &neg, &mut want, m, n, k);
+        for level in levels {
+            gemm::gemm_i32_split_narrow_blocked_at(level, &a, &pos, &neg, &mut got, m, n, k, threads);
+            assert_eq!(want, got, "split-narrow {level:?} m={m} n={n} k={k} t={threads}");
+        }
+
+        // The wide kernels' contract requires |Σ a·w| within i64 — the
+        // realistic regime; skip them on wild inputs where even the
+        // scalar reference's i64 chain may wrap (UB-free but
+        // unspecified by the kernel contract).
+        if !wild {
+            gemm::gemm_i32(&a, &w, &mut want, m, n, k);
+            for level in levels {
+                gemm::gemm_i32_blocked_at(level, &a, &w, &mut got, m, n, k, threads);
+                assert_eq!(want, got, "wide {level:?} m={m} n={n} k={k} t={threads}");
+            }
+
+            gemm::gemm_i32_split(&a, &pos, &neg, &mut want, m, n, k);
+            for level in levels {
+                gemm::gemm_i32_split_blocked_at(level, &a, &pos, &neg, &mut got, m, n, k, threads);
+                assert_eq!(want, got, "split-wide {level:?} m={m} n={n} k={k} t={threads}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_packed_kernel_matches_widened_narrow() {
+    // The packed i16 kernel is the narrow kernel over widened codes:
+    // bit-identical for all i16 inputs, including accumulator
+    // wrap-around (full-range i16 products overflow i32 within a few
+    // hundred terms), at every dispatch level and thread count.
+    use pann::nn::gemm::{active_level, SimdLevel};
+    let levels = [SimdLevel::Scalar, active_level()];
+    let mut rng = Rng::new(121);
+    for case in 0..30 {
+        let m = 1 + rng.below(30);
+        let n = 1 + rng.below(25);
+        let k = 1 + rng.below(400);
+        let threads = 1 + rng.below(4);
+        let (lo, hi) = if case % 2 == 1 {
+            (i16::MIN as i64, i16::MAX as i64 + 1)
+        } else {
+            (0, 64) // realistic narrow codes
+        };
+        let a16: Vec<i16> = (0..m * k).map(|_| rng.range_i64(lo, hi) as i16).collect();
+        let w16: Vec<i16> = (0..n * k).map(|_| rng.range_i64(lo.min(-63), hi) as i16).collect();
+        let a32: Vec<i32> = a16.iter().map(|&v| v as i32).collect();
+        let w32: Vec<i32> = w16.iter().map(|&v| v as i32).collect();
+        let mut want = vec![0i64; m * n];
+        let mut got = vec![0i64; m * n];
+        gemm::gemm_i32_narrow(&a32, &w32, &mut want, m, n, k);
+        for level in levels {
+            gemm::gemm_i16_narrow_blocked_at(level, &a16, &w16, &mut got, m, n, k, threads);
+            assert_eq!(want, got, "packed {level:?} m={m} n={n} k={k} t={threads}");
+        }
+    }
+}
+
+#[test]
+fn prop_forced_scalar_hatches_pin_dispatch() {
+    // When either escape hatch is engaged — the `force-scalar` cargo
+    // feature (CI fallback leg) or PANN_FORCE_SCALAR in the
+    // environment — the process-wide level must be Scalar. Otherwise
+    // this just asserts the detected level is executable.
+    use pann::nn::gemm::{active_level, detect_with, SimdLevel};
+    assert_eq!(detect_with(true), SimdLevel::Scalar);
+    let env_forced =
+        std::env::var_os("PANN_FORCE_SCALAR").is_some_and(|v| !v.is_empty() && v != "0");
+    if cfg!(feature = "force-scalar") || env_forced {
+        assert_eq!(active_level(), SimdLevel::Scalar);
+    } else {
+        assert_eq!(active_level().supported(), active_level());
+    }
+}
+
+#[test]
 fn prop_multipliers_agree_and_are_exact() {
     let mut rng = Rng::new(104);
     for _ in 0..40 {
