@@ -1,0 +1,230 @@
+//! Network-edge benchmark: a compiled menu served over loopback
+//! HTTP/1.1 by a 2-shard router under an energy envelope, driven by
+//! concurrent keep-alive clients (half keyless round-robin, half
+//! affinity-pinned), measuring exactly the edge claims: request
+//! throughput, loopback latency percentiles, shed/retry counts and the
+//! per-shard envelope split.
+//!
+//! Emits `BENCH_net.json` (schema `bench-net/v1`): rps + p50/p99
+//! loopback latency, shed totals and rate, then one record per shard
+//! with admitted/shed/retried counts and the shard's envelope share.
+
+use pann::coordinator::{Menu, ServerBuilder};
+use pann::data::{synth, Dataset};
+use pann::net::{NetConfig, NetServer, ShardRouter};
+use pann::nn::eval::batch_tensor;
+use pann::nn::Model;
+use pann::pann::compile_menu;
+use pann::quant::ActQuantMethod;
+use pann::util::bench::write_json;
+use pann::util::Json;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+const SHARDS: usize = 2;
+const CLIENTS: usize = 4;
+const REQUESTS_PER_CLIENT: usize = 64;
+
+fn compiled_menu(seed: u64) -> (Model, Dataset, pann::pann::MenuArtifact) {
+    let mut model = Model::reference_cnn(seed);
+    let ds = Dataset::from_synth(synth::digits(192, seed + 1));
+    let stats = batch_tensor(&ds, 0, 64);
+    model.record_act_stats(&stats).expect("record stats");
+    let menu = compile_menu(&model, &[2, 8], ActQuantMethod::BnStats, None, &ds.take(48), 2..=8)
+        .expect("compile menu");
+    (model, ds, menu)
+}
+
+/// Read one HTTP response off a keep-alive stream; returns the body.
+fn read_response(r: &mut BufReader<&TcpStream>) -> String {
+    let mut line = String::new();
+    r.read_line(&mut line).expect("status line");
+    assert!(line.starts_with("HTTP/1.1 200"), "non-200 response: {line}");
+    let mut len = 0usize;
+    loop {
+        let mut h = String::new();
+        r.read_line(&mut h).expect("header line");
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some(v) = h.to_ascii_lowercase().strip_prefix("content-length:") {
+            len = v.trim().parse().expect("content-length");
+        }
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body).expect("body");
+    String::from_utf8(body).expect("utf8 body")
+}
+
+/// One client: `n` sequential infer requests on one keep-alive
+/// connection; returns per-request latency in microseconds.
+fn drive(addr: SocketAddr, ds: &Dataset, n: usize, affinity: Option<&str>) -> Vec<f64> {
+    let stream = TcpStream::connect(addr).expect("connect");
+    let mut reader = BufReader::new(&stream);
+    let mut writer = &stream;
+    let mut lat = Vec::with_capacity(n);
+    for i in 0..n {
+        let nums: Vec<String> =
+            ds.sample(i % ds.len()).iter().map(|x| format!("{x}")).collect();
+        let aff = affinity
+            .map(|k| format!(r#", "affinity": "{k}""#))
+            .unwrap_or_default();
+        let body = format!(r#"{{"input": [{}]{aff}}}"#, nums.join(","));
+        let raw = format!(
+            "POST /v1/infer HTTP/1.1\r\nContent-Length: {}\r\n\r\n{}",
+            body.len(),
+            body
+        );
+        let t0 = Instant::now();
+        writer.write_all(raw.as_bytes()).expect("write request");
+        let resp = read_response(&mut reader);
+        lat.push(t0.elapsed().as_secs_f64() * 1e6);
+        assert!(resp.contains("\"point\""), "unexpected body: {resp}");
+    }
+    lat
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
+    sorted[idx]
+}
+
+/// Pull one numeric metric series (`name{shard="i"} v`) off /metrics.
+fn metric(metrics: &str, name: &str, shard: usize) -> f64 {
+    let needle = format!("{name}{{shard=\"{shard}\"}}");
+    metrics
+        .lines()
+        .find(|l| l.starts_with(&needle))
+        .and_then(|l| l.split_whitespace().last())
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.0)
+}
+
+fn main() {
+    let (model, ds, artifact) = compiled_menu(7);
+    let top_cost = artifact
+        .points
+        .iter()
+        .map(|p| p.gflips_per_sample)
+        .filter(|g| g.is_finite())
+        .fold(0.0f64, f64::max)
+        .max(1e-12);
+    println!(
+        "menu: {} frontier points, top cost {top_cost:.6} GF/sample; {SHARDS} shards, \
+         {CLIENTS} clients x {REQUESTS_PER_CLIENT} requests",
+        artifact.points.len()
+    );
+    // envelope sized to keep the load comfortably servable at the top
+    // point: the interesting quantities here are latency and the split,
+    // not governor stepping (benches/governor.rs covers that)
+    let envelope_rate = top_cost * 2000.0;
+    let window = Duration::from_millis(20);
+    let router = ShardRouter::builder()
+        .envelope(
+            pann::coordinator::EnergyEnvelope::gflips_per_sec(envelope_rate),
+            top_cost,
+        )
+        .window(window)
+        .build(SHARDS, |_, slice| {
+            let mut b = ServerBuilder::new().workers(2).max_batch(8).queue_depth(256);
+            if let Some(e) = slice {
+                b = b.envelope(e).governor_window(window);
+            }
+            b.serve(Menu::shared(artifact.shared_points(&model, None, 8)?))
+        })
+        .expect("build router");
+    let srv = NetServer::bind(
+        "127.0.0.1:0",
+        router,
+        NetConfig { handler_threads: CLIENTS, ..NetConfig::default() },
+    )
+    .expect("bind edge");
+    let addr = srv.local_addr();
+    println!("edge on {addr}");
+
+    let t0 = Instant::now();
+    let mut lats: Vec<f64> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..CLIENTS)
+            .map(|c| {
+                let ds = &ds;
+                s.spawn(move || {
+                    // half the clients pin an affinity key (sticky
+                    // placement), half spread round-robin
+                    let key = format!("client-{c}");
+                    let aff = if c % 2 == 0 { None } else { Some(key.as_str()) };
+                    drive(addr, ds, REQUESTS_PER_CLIENT, aff)
+                })
+            })
+            .collect();
+        handles.into_iter().flat_map(|h| h.join().expect("client thread")).collect()
+    });
+    let secs = t0.elapsed().as_secs_f64();
+    lats.sort_by(|a, b| a.total_cmp(b));
+    let total = CLIENTS * REQUESTS_PER_CLIENT;
+    let rps = total as f64 / secs.max(1e-9);
+    let (p50, p99) = (percentile(&lats, 0.50), percentile(&lats, 0.99));
+    println!("{total} requests in {secs:.2}s = {rps:.0} req/s; p50 {p50:.0} µs, p99 {p99:.0} µs");
+
+    // pull the shard counters off the edge itself
+    let stream = TcpStream::connect(addr).expect("metrics connect");
+    let mut w = &stream;
+    w.write_all(b"GET /metrics HTTP/1.1\r\nConnection: close\r\n\r\n").expect("metrics req");
+    let mut metrics = String::new();
+    let mut r = BufReader::new(&stream);
+    r.read_to_string(&mut metrics).expect("metrics body");
+
+    let mut shed_total = 0.0;
+    let mut retries_total = 0.0;
+    let mut per_shard = Vec::new();
+    for i in 0..SHARDS {
+        let requests = metric(&metrics, "pann_shard_requests_total", i);
+        let shed = metric(&metrics, "pann_shard_shed_total", i);
+        let retries = metric(&metrics, "pann_shard_retries_total", i);
+        let share = metric(&metrics, "pann_shard_envelope_share_gflips_per_sec", i);
+        shed_total += shed;
+        retries_total += retries;
+        println!(
+            "shard {i}: {requests:.0} admitted, {shed:.0} shed, {retries:.0} retried-in, \
+             share {share:.4} GF/s"
+        );
+        per_shard.push(Json::obj(vec![
+            ("shard", Json::from(i)),
+            ("requests", Json::Num(requests)),
+            ("shed", Json::Num(shed)),
+            ("retries", Json::Num(retries)),
+            ("envelope_share_gflips_per_sec", Json::Num(share)),
+        ]));
+    }
+    let doc = Json::obj(vec![
+        ("schema", Json::from("bench-net/v1")),
+        (
+            "provenance",
+            Json::from(
+                "committed baseline captured on an 8-core x86-64 AVX2 dev box (cargo bench \
+                 --bench net, release profile, loopback); regenerate locally to compare — \
+                 absolute rps/latency numbers are machine-dependent, the shed/retry counters \
+                 and the share-sum invariant are the tracked quantities",
+            ),
+        ),
+        ("shards", Json::from(SHARDS)),
+        ("clients", Json::from(CLIENTS)),
+        ("requests", Json::from(total)),
+        ("secs", Json::Num(secs)),
+        ("rps", Json::Num(rps)),
+        ("p50_us", Json::Num(p50)),
+        ("p99_us", Json::Num(p99)),
+        ("shed_total", Json::Num(shed_total)),
+        ("shed_rate", Json::Num(shed_total / (total as f64 + shed_total).max(1.0))),
+        ("retries_total", Json::Num(retries_total)),
+        ("envelope_gflips_per_sec", Json::Num(envelope_rate)),
+        ("per_shard", Json::Arr(per_shard)),
+    ]);
+    write_json("BENCH_net.json", &doc).expect("write BENCH_net.json");
+    println!("wrote BENCH_net.json");
+    srv.shutdown();
+}

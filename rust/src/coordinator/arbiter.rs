@@ -1,0 +1,411 @@
+//! Demand-weighted envelope arbitration, shared by the fleet and the
+//! shard router.
+//!
+//! PR 5's `FleetArbiter` split one [`EnergyEnvelope`] across the
+//! models of a fleet with max-min fair water-filling over observed
+//! demand. The shard router ([`crate::net::ShardRouter`]) needs the
+//! *same* split across the N shards of one logical model — so the
+//! mechanism lives here, once, in three layers:
+//!
+//! - [`fair_shares`] — the pure water-filling rule: split a total
+//!   across raw "needs", smallest first, leftover spread equally.
+//! - [`demand_shares`] — price a [`Demand`] (an observed request rate
+//!   at a per-sample energy cost) into a need with headroom, take a
+//!   per-claimant floor off the top, then [`fair_shares`] the rest.
+//! - [`EnvelopeSplitter`] — the stateful windowed form: accumulate
+//!   per-claimant sample counts, fold them into an EWMA demand rate at
+//!   each window boundary, and answer the re-split shares. Like the
+//!   [`Governor`], it never reads the wall clock — every decision
+//!   happens against the caller's [`Instant`], so unit tests drive it
+//!   with synthetic time.
+//!
+//! The fleet arbiter (`registry.rs`) and the shard router are thin
+//! adapters over [`EnvelopeSplitter`]: the fleet prices each model by
+//! the top cost of *its own* frontier, the shard router prices every
+//! shard by the one shared frontier's top cost.
+//!
+//! [`EnergyEnvelope`]: super::governor::EnergyEnvelope
+//! [`Governor`]: super::governor::Governor
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Demand headroom multiplier: a claimant's envelope "need" is
+/// `observed samples/sec × per-sample cost ×` this factor. The slack
+/// keeps a satisfied claimant comfortably inside its share when its
+/// traffic is bursty or still ramping in the EWMA — without it a cold
+/// claimant whose allocation exactly equals its average draw would
+/// graze its governor threshold on every burst (or on every speed-up
+/// of the flooding neighbor it interleaves with) and flap down the
+/// frontier. 4× absorbs a doubled burst on top of a half-converged
+/// demand estimate.
+pub const DEMAND_HEADROOM: f64 = 4.0;
+
+/// Fraction of the envelope reserved as a per-claimant share floor
+/// (`total × this / n` each): a claimant that was idle through a
+/// demand window is never allocated literally nothing, so traffic
+/// waking it up is served (its governor climbed to the top during the
+/// idle spell) without instantly breaching a zero target — the
+/// splitter grants its true need at the next window close.
+pub const MIN_SHARE_FRAC: f64 = 0.02;
+
+/// EWMA blend factor for the windowed demand estimate (weight of the
+/// newest window; the remainder stays on history). One half makes the
+/// estimate settle within a few windows while still smoothing
+/// single-window spikes. The very first closed window *primes* the
+/// estimate instead of blending against the zero it was initialized
+/// with — halving every claimant's opening demand would under-allocate
+/// exactly when no history justifies it.
+const DEMAND_EWMA_ALPHA: f64 = 0.5;
+
+/// One claimant's observed demand: a request rate at a per-sample
+/// energy price. The product `rate × unit_cost` is the Gflips/sec the
+/// claimant would draw serving its whole load on that point;
+/// [`demand_shares`] multiplies in [`DEMAND_HEADROOM`] on top.
+#[derive(Clone, Copy, Debug)]
+pub struct Demand {
+    /// Observed samples/sec.
+    pub rate: f64,
+    /// Energy price per sample, Giga bit flips (typically the cost of
+    /// the claimant's most accurate frontier point — "what full
+    /// accuracy would cost").
+    pub unit_cost: f64,
+}
+
+/// Max-min fair ("water-filling") split of `total` across `needs`:
+/// walking the needs smallest first, each claimant gets
+/// `min(need, remaining / claimants left)`; whatever is left over once
+/// every need is met is spread equally. This is the allocation rule
+/// that makes a hot claimant degrade before a cold one starves: a
+/// small need is satisfied in full no matter how large the other
+/// demands grow, while over-subscribed claimants split the residual
+/// equally. (A zero-need claimant gets zero here when others are
+/// over-subscribed; [`demand_shares`] guards against that with a
+/// [`MIN_SHARE_FRAC`] floor taken off the top.)
+///
+/// Infinite needs (a frontier topped by an unbounded-cost fp32 point)
+/// simply claim their full equal share; NaN needs are treated as zero.
+pub fn fair_shares(total: f64, needs: &[f64]) -> Vec<f64> {
+    let n = needs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| needs[a].total_cmp(&needs[b]));
+    let mut shares = vec![0.0f64; n];
+    let mut remaining = total.max(0.0);
+    for (k, &i) in order.iter().enumerate() {
+        let fair = remaining / (n - k) as f64;
+        let need = if needs[i].is_nan() { 0.0 } else { needs[i].max(0.0) };
+        let s = need.min(fair);
+        shares[i] = s;
+        remaining -= s;
+    }
+    if remaining > 0.0 {
+        let bonus = remaining / n as f64;
+        for s in &mut shares {
+            *s += bonus;
+        }
+    }
+    shares
+}
+
+/// [`fair_shares`] over priced [`Demand`]s: each claimant's need is
+/// `rate × unit_cost × headroom`, a floor of `total × floor_frac / n`
+/// is taken off the top for every claimant, and the remainder is split
+/// max-min fairly over the needs. Shares always sum to `max(total, 0)`
+/// (`floor_frac` is clamped to `[0, 1]`).
+pub fn demand_shares(total: f64, demands: &[Demand], headroom: f64, floor_frac: f64) -> Vec<f64> {
+    let n = demands.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let total = total.max(0.0);
+    let needs: Vec<f64> =
+        demands.iter().map(|d| d.rate * d.unit_cost * headroom).collect();
+    let floor = total * floor_frac.clamp(0.0, 1.0) / n as f64;
+    let mut shares = fair_shares(total - floor * n as f64, &needs);
+    for s in &mut shares {
+        *s += floor;
+    }
+    shares
+}
+
+/// The stateful, windowed splitter of one [`EnergyEnvelope`] across
+/// `n` claimants (fleet models or router shards).
+///
+/// Callers land per-claimant sample counts through
+/// [`EnvelopeSplitter::observe`]; when the caller's `now` crosses a
+/// window boundary the accumulated counts are folded into an EWMA
+/// demand rate (the first closed window primes it), priced into needs,
+/// and re-split — the fresh shares are returned exactly once per
+/// boundary for the caller to apply (re-targeting governors is the
+/// caller's business: this type knows nothing about what a claimant
+/// *is*).
+///
+/// [`EnergyEnvelope`]: super::governor::EnergyEnvelope
+pub struct EnvelopeSplitter {
+    total_rate: f64,
+    window: Duration,
+    headroom: f64,
+    floor_frac: f64,
+    state: Mutex<SplitState>,
+}
+
+struct SplitState {
+    window_start: Instant,
+    /// Samples landed per claimant since `window_start`.
+    counts: Vec<u64>,
+    /// EWMA samples/sec per claimant.
+    demand_rate: Vec<f64>,
+    /// Whether a first window has primed `demand_rate`.
+    primed: bool,
+    /// Current share per claimant, Gflips/sec.
+    shares: Vec<f64>,
+}
+
+/// Point-in-time view of an [`EnvelopeSplitter`].
+#[derive(Clone, Debug)]
+pub struct SplitterSnapshot {
+    /// EWMA demand estimate per claimant, samples/sec.
+    pub demand_rate: Vec<f64>,
+    /// Current envelope share per claimant, Gflips/sec.
+    pub shares: Vec<f64>,
+}
+
+impl EnvelopeSplitter {
+    /// A splitter of `total_rate` Gflips/sec across `n` claimants,
+    /// re-assessed once per `window`, with the default
+    /// [`DEMAND_HEADROOM`] and [`MIN_SHARE_FRAC`] parameters. Every
+    /// claimant starts on an equal share.
+    pub fn new(total_rate: f64, window: Duration, n: usize, now: Instant) -> EnvelopeSplitter {
+        EnvelopeSplitter {
+            total_rate,
+            window: if window.is_zero() { Duration::from_millis(1) } else { window },
+            headroom: DEMAND_HEADROOM,
+            floor_frac: MIN_SHARE_FRAC,
+            state: Mutex::new(SplitState {
+                window_start: now,
+                counts: vec![0; n],
+                demand_rate: vec![0.0; n],
+                primed: false,
+                shares: vec![total_rate / n.max(1) as f64; n],
+            }),
+        }
+    }
+
+    /// The envelope rate being split, Gflips/sec.
+    pub fn total_rate(&self) -> f64 {
+        self.total_rate
+    }
+
+    /// Land `samples` of demand on `claimant`; when `now` has passed
+    /// the window's end, fold the counts into the EWMA, re-split, and
+    /// return the fresh shares (in claimant order) for the caller to
+    /// apply. `unit_cost(i)` prices claimant `i`'s demand (its
+    /// most-accurate-point Gflips/sample). Returns `None` inside a
+    /// window — one re-split per boundary crossing, over the actual
+    /// elapsed span (a long quiet gap is one long window of near-zero
+    /// rate, not thousands of empty ones — bounded work by
+    /// construction). Like the governor, this takes the caller's
+    /// `now`: no wall clock.
+    pub fn observe(
+        &self,
+        now: Instant,
+        claimant: usize,
+        samples: u64,
+        unit_cost: impl Fn(usize) -> f64,
+    ) -> Option<Vec<f64>> {
+        let mut s = self.state.lock().expect("envelope splitter poisoned");
+        s.counts[claimant] += samples;
+        let elapsed = now.checked_duration_since(s.window_start)?;
+        if elapsed < self.window {
+            return None;
+        }
+        let secs = elapsed.as_secs_f64().max(1e-9);
+        for i in 0..s.counts.len() {
+            let inst = s.counts[i] as f64 / secs;
+            s.demand_rate[i] = if s.primed {
+                (1.0 - DEMAND_EWMA_ALPHA) * s.demand_rate[i] + DEMAND_EWMA_ALPHA * inst
+            } else {
+                inst
+            };
+            s.counts[i] = 0;
+        }
+        s.primed = true;
+        s.window_start = now;
+        let demands: Vec<Demand> = s
+            .demand_rate
+            .iter()
+            .enumerate()
+            .map(|(i, &rate)| Demand { rate, unit_cost: unit_cost(i) })
+            .collect();
+        let shares = demand_shares(self.total_rate, &demands, self.headroom, self.floor_frac);
+        s.shares.clone_from(&shares);
+        Some(shares)
+    }
+
+    /// Current demand estimates and shares.
+    pub fn snapshot(&self) -> SplitterSnapshot {
+        let s = self.state.lock().expect("envelope splitter poisoned");
+        SplitterSnapshot { demand_rate: s.demand_rate.clone(), shares: s.shares.clone() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn sum(v: &[f64]) -> f64 {
+        v.iter().sum()
+    }
+
+    #[test]
+    fn fair_shares_satisfies_small_needs_first() {
+        // cold needs 1, hot needs 100, total 10: cold gets its 1 in
+        // full, hot gets the residual 9.
+        let s = fair_shares(10.0, &[100.0, 1.0]);
+        assert!((s[1] - 1.0).abs() < 1e-12);
+        assert!((s[0] - 9.0).abs() < 1e-12);
+        // oversubscribed on both sides: equal split
+        let s = fair_shares(10.0, &[100.0, 80.0]);
+        assert!((s[0] - 5.0).abs() < 1e-12 && (s[1] - 5.0).abs() < 1e-12);
+        // under-subscribed: leftover spread equally, shares stay > need
+        let s = fair_shares(10.0, &[1.0, 2.0]);
+        assert!((s[0] - (1.0 + 3.5)).abs() < 1e-12);
+        assert!((s[1] - (2.0 + 3.5)).abs() < 1e-12);
+        assert!((sum(&s) - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fair_shares_handles_zero_inf_nan_and_empty() {
+        assert!(fair_shares(10.0, &[]).is_empty());
+        // zero-demand claimant still ends strictly positive via the
+        // leftover spread when headroom exists
+        let s = fair_shares(10.0, &[0.0, 1.0]);
+        assert!(s[0] > 0.0);
+        // an infinite need (fp32-topped frontier) takes its equal
+        // share, not everything
+        let s = fair_shares(10.0, &[f64::INFINITY, 1.0]);
+        assert!((s[1] - 1.0).abs() < 1e-12);
+        assert!((s[0] - 9.0).abs() < 1e-12);
+        let s = fair_shares(10.0, &[f64::NAN, 4.0]);
+        assert!(s[0].is_finite() && s[1].is_finite());
+        // never over-allocates
+        let s = fair_shares(5.0, &[100.0, 100.0, 100.0]);
+        assert!((sum(&s) - 5.0).abs() < 1e-9);
+    }
+
+    // --- the three extraction properties, over randomized cases ---
+
+    fn random_demands(rng: &mut Rng, n: usize) -> Vec<Demand> {
+        (0..n)
+            .map(|_| Demand {
+                rate: rng.f64() * 1000.0,
+                unit_cost: 1e-4 + rng.f64() * 2.0,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn property_shares_sum_to_envelope() {
+        let mut rng = Rng::new(0xA1B1);
+        for _ in 0..200 {
+            let n = 1 + rng.below(6);
+            let total = rng.f64() * 50.0;
+            let d = random_demands(&mut rng, n);
+            let s = demand_shares(total, &d, DEMAND_HEADROOM, MIN_SHARE_FRAC);
+            assert_eq!(s.len(), n);
+            assert!(
+                (sum(&s) - total).abs() < 1e-9 * total.max(1.0),
+                "shares {s:?} must sum to {total}"
+            );
+        }
+    }
+
+    #[test]
+    fn property_monotone_in_own_demand() {
+        // Raising one claimant's demand never lowers its own share
+        // (and never raises anyone else's).
+        let mut rng = Rng::new(0xB2C2);
+        for _ in 0..200 {
+            let n = 2 + rng.below(5);
+            let total = 1.0 + rng.f64() * 50.0;
+            let d = random_demands(&mut rng, n);
+            let i = rng.below(n);
+            let mut d2 = d.clone();
+            d2[i].rate += 1.0 + rng.f64() * 500.0;
+            let s1 = demand_shares(total, &d, DEMAND_HEADROOM, MIN_SHARE_FRAC);
+            let s2 = demand_shares(total, &d2, DEMAND_HEADROOM, MIN_SHARE_FRAC);
+            assert!(
+                s2[i] >= s1[i] - 1e-9,
+                "claimant {i}'s share fell from {} to {} when its demand rose",
+                s1[i],
+                s2[i]
+            );
+            for j in 0..n {
+                if j != i {
+                    assert!(
+                        s2[j] <= s1[j] + 1e-9,
+                        "claimant {j}'s share rose when {i}'s demand did"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn property_floor_respected() {
+        // Every claimant — even one with zero demand against flooding
+        // neighbors — keeps at least the MIN_SHARE_FRAC floor.
+        let mut rng = Rng::new(0xC3D3);
+        for _ in 0..200 {
+            let n = 2 + rng.below(5);
+            let total = 1.0 + rng.f64() * 50.0;
+            let mut d = random_demands(&mut rng, n);
+            d[0].rate = 0.0; // one idle claimant
+            let s = demand_shares(total, &d, DEMAND_HEADROOM, MIN_SHARE_FRAC);
+            let floor = total * MIN_SHARE_FRAC / n as f64;
+            for (i, &sh) in s.iter().enumerate() {
+                assert!(
+                    sh >= floor - 1e-12,
+                    "claimant {i} got {sh}, below the {floor} floor"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn splitter_windows_prime_then_blend() {
+        let t0 = Instant::now();
+        let w = Duration::from_millis(10);
+        let sp = EnvelopeSplitter::new(10.0, w, 2, t0);
+        // initial: equal shares, no demand
+        let snap = sp.snapshot();
+        assert_eq!(snap.shares, vec![5.0, 5.0]);
+        assert_eq!(snap.demand_rate, vec![0.0, 0.0]);
+        // inside the window: no re-split
+        assert!(sp.observe(t0 + w / 2, 0, 100, |_| 1.0).is_none());
+        // boundary: primed with the instantaneous rate (10k samples/s)
+        let shares = sp.observe(t0 + w, 0, 0, |_| 1.0).expect("boundary re-split");
+        assert!((sum(&shares) - 10.0).abs() < 1e-9);
+        let snap = sp.snapshot();
+        assert!((snap.demand_rate[0] - 10_000.0).abs() < 1.0, "{:?}", snap.demand_rate);
+        // the idle claimant keeps exactly the floor share
+        let floor = 10.0 * MIN_SHARE_FRAC / 2.0;
+        assert!((snap.shares[1] - floor).abs() < 1e-12);
+        // next window idle: EWMA halves the estimate instead of zeroing
+        let shares = sp.observe(t0 + w * 2, 0, 0, |_| 1.0).expect("second boundary");
+        assert!((sum(&shares) - 10.0).abs() < 1e-9);
+        assert!((sp.snapshot().demand_rate[0] - 5_000.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn splitter_ignores_time_running_backwards() {
+        let t0 = Instant::now();
+        let sp = EnvelopeSplitter::new(10.0, Duration::from_millis(10), 2, t0 + Duration::from_secs(1));
+        // a `now` before the window start must not panic or re-split
+        assert!(sp.observe(t0, 0, 5, |_| 1.0).is_none());
+    }
+}

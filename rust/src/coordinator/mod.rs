@@ -43,7 +43,10 @@
 //! Components: [`request`] (the public request/response model),
 //! [`policy`] (budget → operating point), [`batcher`] (bounded
 //! admission queue + point-coherent QoS batching), [`governor`]
-//! (closed-loop energy control), [`registry`] (the multi-model fleet:
+//! (closed-loop energy control), [`arbiter`] (demand-weighted max-min
+//! envelope splitting — [`fair_shares`] water-filling plus the
+//! windowed [`EnvelopeSplitter`], shared by the fleet and by
+//! [`crate::net::ShardRouter`]), [`registry`] (the multi-model fleet:
 //! named menus, per-model budgets/governors, envelope arbitration),
 //! [`metrics`] (latency/energy/rejection accounting, per priority
 //! class), [`server`] (builder, engines, worker loops).
@@ -51,6 +54,7 @@
 //! [`ServerBuilder::register`]: server::ServerBuilder::register
 //! [`ServerBuilder::serve_fleet`]: server::ServerBuilder::serve_fleet
 
+pub mod arbiter;
 pub mod batcher;
 pub mod governor;
 pub mod metrics;
@@ -59,6 +63,7 @@ pub mod registry;
 pub mod request;
 pub mod server;
 
+pub use arbiter::{demand_shares, fair_shares, Demand, EnvelopeSplitter, SplitterSnapshot};
 pub use governor::{EnergyEnvelope, Governor, GovernorConfig, GovernorSnapshot};
 pub use metrics::{MetricsSnapshot, PriorityLatency};
 pub use policy::{Costed, EnginePoint, PowerPolicy};

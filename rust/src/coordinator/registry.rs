@@ -39,6 +39,7 @@
 //! [`Menu`]: super::server::Menu
 //! [`ServerBuilder::serve_fleet`]: super::server::ServerBuilder::serve_fleet
 
+use super::arbiter::{EnvelopeSplitter, SplitterSnapshot};
 use super::batcher::Pending;
 use super::governor::{EnergyEnvelope, Governor, GovernorConfig, GovernorSnapshot};
 use super::policy::PowerPolicy;
@@ -46,36 +47,13 @@ use super::request::ServeError;
 use super::server::{Menu, ServerConfig, SharedPoint};
 use anyhow::Result;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::sync::Arc;
+use std::time::Instant;
 
-/// Demand headroom multiplier of the fleet arbiter: a model's envelope
-/// "need" is `observed samples/sec × top-point Gflips/sample ×` this
-/// factor. The slack keeps a satisfied model comfortably inside its
-/// share when its traffic is bursty or still ramping in the EWMA —
-/// without it a cold model whose allocation exactly equals its average
-/// draw would graze its governor threshold on every burst (or on every
-/// speed-up of the flooding neighbor it interleaves with) and flap
-/// down the frontier. 4× absorbs a doubled burst on top of a
-/// half-converged demand estimate.
-pub const DEMAND_HEADROOM: f64 = 4.0;
-
-/// Fraction of the envelope reserved as a per-model share floor
-/// (`total × this / n` each): a model that was idle through a demand
-/// window is never allocated literally nothing, so traffic waking it
-/// up is served (the governor climbed to the top during the idle
-/// spell) without instantly breaching a zero target — the arbiter
-/// grants its true need at the next window close.
-pub const MIN_SHARE_FRAC: f64 = 0.02;
-
-/// EWMA blend factor for the windowed demand estimate (weight of the
-/// newest window; the remainder stays on history). One half makes the
-/// estimate settle within a few windows while still smoothing
-/// single-window spikes. The very first closed window *primes* the
-/// estimate instead of blending against the zero it was initialized
-/// with — halving every model's opening demand would under-allocate
-/// exactly when no history justifies it.
-const DEMAND_EWMA_ALPHA: f64 = 0.5;
+// The water-filling split itself lives in `arbiter` now (PR 7 shares
+// it with the shard router); these re-exports keep the original fleet
+// API paths working.
+pub use super::arbiter::{fair_shares, DEMAND_HEADROOM, MIN_SHARE_FRAC};
 
 /// One registered model: its compiled frontier, its budget cell, and
 /// (closed-loop only) its governor.
@@ -293,140 +271,35 @@ impl ModelRegistry {
     }
 }
 
-/// Max-min fair ("water-filling") split of `total` across `needs`:
-/// walking the needs smallest first, each claimant gets
-/// `min(need, remaining / claimants left)`; whatever is left over once
-/// every need is met is spread equally. This is the allocation rule
-/// that makes a hot model degrade before a cold one starves: a small
-/// need is satisfied in full no matter how large the other demands
-/// grow, while over-subscribed claimants split the residual equally.
-/// (A zero-need claimant gets zero here when others are
-/// over-subscribed; the fleet arbiter guards against that with a
-/// [`MIN_SHARE_FRAC`] floor taken off the top.)
-///
-/// Infinite needs (a frontier topped by an unbounded-cost fp32 point)
-/// simply claim their full equal share; NaN needs are treated as zero.
-pub fn fair_shares(total: f64, needs: &[f64]) -> Vec<f64> {
-    let n = needs.len();
-    if n == 0 {
-        return Vec::new();
-    }
-    let mut order: Vec<usize> = (0..n).collect();
-    order.sort_by(|&a, &b| needs[a].total_cmp(&needs[b]));
-    let mut shares = vec![0.0f64; n];
-    let mut remaining = total.max(0.0);
-    for (k, &i) in order.iter().enumerate() {
-        let fair = remaining / (n - k) as f64;
-        let need = if needs[i].is_nan() { 0.0 } else { needs[i].max(0.0) };
-        let s = need.min(fair);
-        shares[i] = s;
-        remaining -= s;
-    }
-    if remaining > 0.0 {
-        let bonus = remaining / n as f64;
-        for s in &mut shares {
-            *s += bonus;
-        }
-    }
-    shares
-}
-
-/// Demand-weighted splitter of the global [`EnergyEnvelope`] across the
-/// fleet. Accumulates per-model sample counts; at each window boundary
-/// it folds them into an EWMA demand rate, prices each model's "need"
-/// (`rate × top cost × [`DEMAND_HEADROOM`]`), and re-targets every
-/// model's [`Governor`] with its [`fair_shares`] allocation.
+/// The fleet adapter over [`EnvelopeSplitter`]: prices every model's
+/// demand by the top cost of *its own* frontier, and re-targets each
+/// model's [`Governor`] whenever a window boundary answers fresh
+/// shares.
 struct FleetArbiter {
-    total_rate: f64,
-    window: Duration,
-    state: Mutex<ArbState>,
-}
-
-struct ArbState {
-    window_start: Instant,
-    /// Samples served per model since `window_start`.
-    counts: Vec<u64>,
-    /// EWMA samples/sec per model.
-    demand_rate: Vec<f64>,
-    /// Whether a first window has primed `demand_rate`.
-    primed: bool,
-    /// Current envelope share per model, Gflips/sec.
-    shares: Vec<f64>,
-}
-
-/// Arbiter view used by [`FleetSnapshot`].
-struct ArbSnapshot {
-    demand_rate: Vec<f64>,
-    shares: Vec<f64>,
+    splitter: EnvelopeSplitter,
 }
 
 impl FleetArbiter {
-    fn new(total_rate: f64, window: Duration, n: usize, now: Instant) -> FleetArbiter {
-        FleetArbiter {
-            total_rate,
-            window: if window.is_zero() { Duration::from_millis(1) } else { window },
-            state: Mutex::new(ArbState {
-                window_start: now,
-                counts: vec![0; n],
-                demand_rate: vec![0.0; n],
-                primed: false,
-                // matches the equal initial split of the governors
-                shares: vec![total_rate / n as f64; n],
-            }),
-        }
+    fn new(total_rate: f64, window: std::time::Duration, n: usize, now: Instant) -> FleetArbiter {
+        FleetArbiter { splitter: EnvelopeSplitter::new(total_rate, window, n, now) }
     }
 
     /// Land `samples` of demand on `model`; close the demand window and
     /// re-split the envelope if `now` has passed its end. Like the
     /// governor, this takes the caller's `now` — no wall clock.
     fn observe(&self, now: Instant, model: usize, samples: u64, models: &[FleetModel]) {
-        let mut s = self.state.lock().expect("fleet arbiter poisoned");
-        s.counts[model] += samples;
-        let Some(elapsed) = now.checked_duration_since(s.window_start) else {
-            return;
-        };
-        if elapsed < self.window {
-            return;
-        }
-        // One re-split per boundary crossing, over the actual elapsed
-        // span (a long quiet gap is one long window of near-zero rate,
-        // not thousands of empty ones — bounded work by construction).
-        let secs = elapsed.as_secs_f64().max(1e-9);
-        for i in 0..s.counts.len() {
-            let inst = s.counts[i] as f64 / secs;
-            s.demand_rate[i] = if s.primed {
-                (1.0 - DEMAND_EWMA_ALPHA) * s.demand_rate[i] + DEMAND_EWMA_ALPHA * inst
-            } else {
-                inst
-            };
-            s.counts[i] = 0;
-        }
-        s.primed = true;
-        s.window_start = now;
-        let needs: Vec<f64> = s
-            .demand_rate
-            .iter()
-            .zip(models)
-            .map(|(&rate, m)| rate * m.top_cost() * DEMAND_HEADROOM)
-            .collect();
-        // per-model floor off the top, max-min fairness on the rest
-        let n = models.len() as f64;
-        let floor = self.total_rate * MIN_SHARE_FRAC / n;
-        let mut shares = fair_shares(self.total_rate - floor * n, &needs);
-        for sh in &mut shares {
-            *sh += floor;
-        }
-        s.shares = shares;
-        for (m, &share) in models.iter().zip(&s.shares) {
-            if let Some(g) = &m.governor {
-                g.set_envelope_rate(share);
+        let shares = self.splitter.observe(now, model, samples, |i| models[i].top_cost());
+        if let Some(shares) = shares {
+            for (m, &share) in models.iter().zip(&shares) {
+                if let Some(g) = &m.governor {
+                    g.set_envelope_rate(share);
+                }
             }
         }
     }
 
-    fn snapshot(&self) -> ArbSnapshot {
-        let s = self.state.lock().expect("fleet arbiter poisoned");
-        ArbSnapshot { demand_rate: s.demand_rate.clone(), shares: s.shares.clone() }
+    fn snapshot(&self) -> SplitterSnapshot {
+        self.splitter.snapshot()
     }
 }
 
@@ -488,6 +361,7 @@ mod tests {
     use super::super::server::tests_support::MockEngine;
     use super::*;
     use std::sync::mpsc;
+    use std::time::Duration;
 
     fn shared(name: &str, gf: f64, in_len: usize) -> SharedPoint {
         SharedPoint {
@@ -537,42 +411,8 @@ mod tests {
         }
     }
 
-    #[test]
-    fn fair_shares_satisfies_small_needs_first() {
-        // cold needs 1, hot needs 100, total 10: cold gets its 1 in
-        // full, hot gets the residual 9.
-        let s = fair_shares(10.0, &[100.0, 1.0]);
-        assert!((s[1] - 1.0).abs() < 1e-12);
-        assert!((s[0] - 9.0).abs() < 1e-12);
-        // oversubscribed on both sides: equal split
-        let s = fair_shares(10.0, &[100.0, 80.0]);
-        assert!((s[0] - 5.0).abs() < 1e-12 && (s[1] - 5.0).abs() < 1e-12);
-        // under-subscribed: leftover spread equally, shares stay > need
-        let s = fair_shares(10.0, &[1.0, 2.0]);
-        assert!((s[0] - (1.0 + 3.5)).abs() < 1e-12);
-        assert!((s[1] - (2.0 + 3.5)).abs() < 1e-12);
-        assert!(((s[0] + s[1]) - 10.0).abs() < 1e-12);
-    }
-
-    #[test]
-    fn fair_shares_handles_zero_inf_nan_and_empty() {
-        assert!(fair_shares(10.0, &[]).is_empty());
-        // zero-demand model still ends strictly positive via the
-        // leftover spread when headroom exists
-        let s = fair_shares(10.0, &[0.0, 1.0]);
-        assert!(s[0] > 0.0);
-        // an infinite need (fp32-topped frontier) takes its equal
-        // share, not everything
-        let s = fair_shares(10.0, &[f64::INFINITY, 1.0]);
-        assert!((s[1] - 1.0).abs() < 1e-12);
-        assert!((s[0] - 9.0).abs() < 1e-12);
-        let s = fair_shares(10.0, &[f64::NAN, 4.0]);
-        assert!(s[0].is_finite() && s[1].is_finite());
-        // never over-allocates
-        let s = fair_shares(5.0, &[100.0, 100.0, 100.0]);
-        let sum: f64 = s.iter().sum();
-        assert!((sum - 5.0).abs() < 1e-9);
-    }
+    // (the fair_shares / demand_shares unit and property tests live
+    // with the extracted helper in `coordinator/arbiter.rs`)
 
     #[test]
     fn registry_rejects_duplicates_local_menus_and_empty() {

@@ -138,6 +138,7 @@ pub struct InferRequest {
     pub(crate) priority: Priority,
     pub(crate) pin: Option<String>,
     pub(crate) tag: Option<String>,
+    pub(crate) affinity: Option<String>,
 }
 
 impl InferRequest {
@@ -151,6 +152,7 @@ impl InferRequest {
             priority: Priority::Normal,
             pin: None,
             tag: None,
+            affinity: None,
         }
     }
 
@@ -193,6 +195,17 @@ impl InferRequest {
     /// Opaque trace tag, echoed back on the [`Response`].
     pub fn tag(mut self, t: impl Into<String>) -> Self {
         self.tag = Some(t.into());
+        self
+    }
+
+    /// Shard-routing affinity key ([`crate::net::ShardRouter`]):
+    /// requests sharing a key consistently land on the same shard
+    /// (rendezvous hashing), so per-shard state such as warmed caches
+    /// stays hot. Without a key the router spreads requests
+    /// round-robin. A plain single [`crate::coordinator::Client`]
+    /// ignores it.
+    pub fn affinity(mut self, key: impl Into<String>) -> Self {
+        self.affinity = Some(key.into());
         self
     }
 }
@@ -297,20 +310,22 @@ mod tests {
         let r = InferRequest::new(vec![1.0, 2.0]);
         assert_eq!(r.priority, Priority::Normal);
         assert!(r.deadline.is_none() && r.max_gflips.is_none() && r.pin.is_none());
-        assert!(r.model.is_none());
+        assert!(r.model.is_none() && r.affinity.is_none());
         let r = r
             .deadline(Duration::from_millis(5))
             .max_gflips(0.25)
             .priority(Priority::Hi)
             .pin_point("p8")
             .model("resnet")
-            .tag("t");
+            .tag("t")
+            .affinity("user-42");
         assert_eq!(r.deadline, Some(Duration::from_millis(5)));
         assert_eq!(r.max_gflips, Some(0.25));
         assert_eq!(r.priority, Priority::Hi);
         assert_eq!(r.pin.as_deref(), Some("p8"));
         assert_eq!(r.model.as_deref(), Some("resnet"));
         assert_eq!(r.tag.as_deref(), Some("t"));
+        assert_eq!(r.affinity.as_deref(), Some("user-42"));
     }
 
     #[test]

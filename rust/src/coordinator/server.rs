@@ -973,6 +973,25 @@ impl Client {
             .map(|i| f64::from_bits(reg.model(i).budget_bits.load(Ordering::Relaxed)))
     }
 
+    /// Re-target this server's closed-loop [`Governor`] to a new
+    /// envelope rate (Gflips/sec) without rebuilding anything — the
+    /// shard router ([`crate::net::ShardRouter`]) uses this to move a
+    /// shard's slice of the cluster envelope as demand shifts between
+    /// shards, exactly the way the fleet arbiter re-targets per-model
+    /// governors. Returns `false` (no-op) when no single-model
+    /// governor runs: open-loop servers have no governor, and on a
+    /// fleet server the per-model envelopes are owned by the
+    /// registry's arbiter — writing them from outside would fight it.
+    pub fn set_envelope_rate(&self, gflips_per_sec: f64) -> bool {
+        match &self.serving {
+            Serving::Single { governor: Some(g), .. } => {
+                g.set_envelope_rate(gflips_per_sec);
+                true
+            }
+            _ => false,
+        }
+    }
+
     /// Snapshot of the closed-loop energy governor; `None` on an
     /// open-loop server (no [`ServerBuilder::envelope`] configured).
     /// On a fleet server each model has its *own* governor: a fleet of

@@ -53,6 +53,15 @@
 //!   envelope is split across models by observed demand, so a hot
 //!   model degrades along its own frontier before starving a cold
 //!   one.
+//! - [`net`] — the L4 network edge: the same serving surface over a
+//!   socket. A std-only HTTP/1.1 server (`POST /v1/infer` maps 1:1
+//!   onto [`coordinator::InferRequest`], typed `ServeError` → HTTP
+//!   status, Prometheus-style `/metrics`) in front of a
+//!   [`net::ShardRouter`] that spreads one logical model across N
+//!   in-process servers — rendezvous-hash affinity placement,
+//!   deadline-aware retry of shed requests, and a cluster energy
+//!   envelope split across shards by the fleet's demand-weighted
+//!   water-filling ([`coordinator::arbiter`]).
 //! - [`experiments`] — one driver per table/figure of the paper.
 //!
 //! Power is reported in **bit flips**, exactly as in the paper
@@ -72,6 +81,7 @@ pub mod bitflip;
 pub mod coordinator;
 pub mod data;
 pub mod experiments;
+pub mod net;
 pub mod nn;
 pub mod pann;
 pub mod power;

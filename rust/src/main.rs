@@ -11,9 +11,20 @@
 //! pann-cli serve --menu NAME=menu.json --menu NAME2=menu2.json ...   (fleet mode)
 //!               [--requests N] [--budget GFLIPS] [--queue-depth D]
 //!               [--deadline-ms MS] [--envelope-gflips RATE] [--governor-window-ms MS]
+//! pann-cli serve --menu menu.json --listen 127.0.0.1:8080 [--shards N] [--hold]
+//!               [--budget GFLIPS] [--queue-depth D]
+//!               [--envelope-gflips RATE] [--governor-window-ms MS]
 //! pann-cli sweep --model NAME [--quick]
 //! pann-cli list
 //! ```
+//!
+//! `--listen` switches `serve` from a local replay to the network
+//! edge: the compiled menu is served over HTTP (`POST /v1/infer`,
+//! `GET /v1/models`, `GET /v1/governor`, `GET /metrics`), sharded
+//! across `--shards` in-process servers. With `--hold` the edge stays
+//! up until stdin reaches EOF (or the process is signalled), then
+//! drains gracefully; without it the command binds, prints the
+//! address and exits — a configuration smoke test.
 //!
 //! `--menu` is repeatable: one plain `--menu menu.json` serves a single
 //! model exactly as before, while `NAME=path` entries register each
@@ -30,6 +41,7 @@ use pann::coordinator::{
     Client, EnergyEnvelope, EnginePoint, InferRequest, Menu, ServeError, ServerBuilder,
 };
 use pann::experiments::{self, Ctx};
+use pann::net::{NetConfig, NetServer, ShardRouter};
 use pann::runtime::{ArtifactManifest, CpuRuntime};
 use std::path::PathBuf;
 
@@ -160,6 +172,49 @@ fn run() -> Result<()> {
             };
             let calibrate_out = args.get("calibrate-out").map(str::to_string);
             let menus = args.all("menu");
+            // network edge: --listen serves the menu over a socket
+            // instead of replaying local test data against it
+            if let Some(addr) = args.get("listen") {
+                let shards: usize = args.get("shards").map_or(Ok(1), |s| s.parse())?;
+                if shards == 0 {
+                    bail!("--shards must be at least 1");
+                }
+                let Some(menu_path) = menus.first() else {
+                    bail!(
+                        "--listen requires --menu menu.json \
+                         (compile one with `pann-cli compile-menu`)"
+                    );
+                };
+                if menus.len() >= 2 || menu_path.contains('=') {
+                    bail!(
+                        "--listen serves one compiled menu across --shards copies of one \
+                         model; fleet NAME=path entries are not supported over the socket"
+                    );
+                }
+                if calibrate_out.is_some() {
+                    eprintln!("warning: --calibrate-out applies to replay serving only; ignoring");
+                }
+                if deadline_ms.is_some() {
+                    eprintln!(
+                        "warning: --deadline-ms is a replay flag; network clients set \
+                         per-request deadlines via the wire field deadline_ms; ignoring"
+                    );
+                }
+                return serve_listen(
+                    &ctx,
+                    &model,
+                    menu_path,
+                    addr,
+                    shards,
+                    budget,
+                    queue_depth,
+                    governor,
+                    args.has("hold"),
+                );
+            }
+            if args.has("shards") || args.has("hold") {
+                eprintln!("warning: --shards/--hold only apply with --listen; ignoring");
+            }
             // fleet mode: several --menu flags, or any NAME=path entry
             if menus.len() >= 2 || menus.first().is_some_and(|m| m.contains('=')) {
                 let mut entries = Vec::with_capacity(menus.len());
@@ -236,6 +291,10 @@ fn run() -> Result<()> {
                  \x20       [--calibrate-out menu.json (requires --menu)]\n\
                  \x20 serve --menu NAME=menu.json --menu NAME2=menu2.json ...\n\
                  \x20                                 fleet: N models on one pool + one envelope\n\
+                 \x20 serve --menu menu.json --listen ADDR [--shards N] [--hold]\n\
+                 \x20                                 HTTP edge: POST /v1/infer, GET /v1/models,\n\
+                 \x20                                 GET /v1/governor, GET /metrics; --hold keeps\n\
+                 \x20                                 serving until stdin EOF, then drains\n\
                  \x20 sweep --model M [--quick]       power-accuracy sweep (Fig. 1)\n"
             );
             Ok(())
@@ -619,6 +678,104 @@ fn serve_fleet_cli(
     }
     srv.shutdown();
     Ok(())
+}
+
+/// Serve a compiled menu over the network edge (`pann-cli serve
+/// --menu menu.json --listen ADDR [--shards N] [--hold]`): the menu is
+/// compiled once per shard (engines are per-shard, plans cheap to
+/// share), the shards sit behind a [`ShardRouter`] (rendezvous
+/// affinity, shed retry), and a [`NetServer`] exposes them over
+/// HTTP/1.1. With `--envelope-gflips` the cluster envelope is split
+/// across the shards by observed demand, each shard running its own
+/// governor on its slice. Prints `listening on http://ADDR` (with the
+/// real port when bound to `:0`) so scripts can discover the address.
+#[allow(clippy::too_many_arguments)]
+fn serve_listen(
+    ctx: &Ctx,
+    model: &str,
+    menu_path: &str,
+    addr: &str,
+    shards: usize,
+    budget: f64,
+    queue_depth: usize,
+    governor: Option<GovernorCli>,
+    hold: bool,
+) -> Result<()> {
+    let (m, test) = ctx.load_model(model)?;
+    let artifact = pann::pann::MenuArtifact::load(std::path::Path::new(menu_path))?;
+    println!(
+        "menu {menu_path}: {} frontier points ({} candidates swept) for model '{}'",
+        artifact.points.len(),
+        artifact.swept,
+        artifact.model_name
+    );
+    let calib = pann::pann::convert::calib_tensor(&test, 32);
+    let max_batch = 16;
+    // split the native thread pool across the shards instead of
+    // oversubscribing it shards-fold
+    let workers = (pann::nn::eval::n_threads() / shards).max(1);
+    // price shard demand at the most accurate (most expensive) finite
+    // frontier point: what serving everything at full accuracy would
+    // cost per sample
+    let top_cost = artifact
+        .points
+        .iter()
+        .map(|p| p.gflips_per_sample)
+        .filter(|g| g.is_finite())
+        .fold(0.0f64, f64::max)
+        .max(1e-12);
+    let mut rb = ShardRouter::builder();
+    if let Some(g) = &governor {
+        rb = rb
+            .envelope(EnergyEnvelope::gflips_per_sec(g.rate), top_cost)
+            // re-split demand a few governor windows apart so each
+            // governor settles between re-targets
+            .window(std::time::Duration::from_millis(g.window_ms * 4));
+    }
+    let router = rb.build(shards, |i, slice| {
+        let mut b = ServerBuilder::new()
+            .workers(workers)
+            .queue_depth(queue_depth)
+            .max_batch(max_batch)
+            .budget_gflips(budget);
+        if let Some(e) = slice {
+            b = b.envelope(e);
+            if let Some(g) = &governor {
+                b = b.governor_window(std::time::Duration::from_millis(g.window_ms));
+            }
+        }
+        // fresh engines per shard off the same verified artifact
+        let srv = b.serve(Menu::shared(artifact.shared_points(&m, Some(&calib), max_batch)?))?;
+        println!("shard {i}: {workers} workers, queue depth {queue_depth}");
+        Ok(srv)
+    })?;
+    let net = NetServer::bind(addr, router, NetConfig::default())
+        .with_context(|| format!("binding the edge on {addr}"))?;
+    println!("listening on http://{}", net.local_addr());
+    println!("endpoints: POST /v1/infer  GET /v1/models  GET /v1/governor  GET /metrics");
+    if hold {
+        println!("holding until stdin EOF (pipe `sleep N |` in scripts, or Ctrl-D)...");
+        hold_until_stdin_eof();
+        println!("stdin closed: draining in-flight requests and stopping shards");
+    } else {
+        println!("no --hold: configuration verified, shutting the edge down");
+    }
+    net.shutdown();
+    println!("edge stopped");
+    Ok(())
+}
+
+/// Block until stdin reaches EOF (the `--hold` lifetime).
+fn hold_until_stdin_eof() {
+    use std::io::Read;
+    let mut stdin = std::io::stdin();
+    let mut buf = [0u8; 1024];
+    loop {
+        match stdin.read(&mut buf) {
+            Ok(0) | Err(_) => break,
+            Ok(_) => {}
+        }
+    }
 }
 
 /// Fig. 1 power–accuracy sweep on the native engine.

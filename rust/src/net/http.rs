@@ -1,0 +1,388 @@
+//! Minimal HTTP/1.1 framing for the network edge.
+//!
+//! Just enough of RFC 9112 for `curl`, load generators and the
+//! loopback tests to speak to [`super::server::NetServer`]: request
+//! line + headers + `Content-Length` bodies in, fixed-length responses
+//! out, keep-alive by default. Deliberately *not* implemented: chunked
+//! transfer encoding (501), HTTP/2, TLS — the edge targets trusted
+//! LANs and loopback, and the offline registry carries no TLS or async
+//! dependencies (the acceptor is plain [`std::net::TcpListener`]).
+//!
+//! Reads are bounded everywhere: the head is capped at
+//! [`MAX_HEAD_BYTES`], header count at [`MAX_HEADERS`], and the body
+//! at the caller's limit (413 beyond it) — a malicious peer cannot
+//! buffer unbounded memory. With a read timeout set on the socket,
+//! [`read_request`] distinguishes an *idle* keep-alive connection
+//! (no bytes yet — [`ReadOutcome::Idle`], poll your stop flag and try
+//! again) from a peer that stalled mid-request (408).
+
+use std::io::{self, BufRead, Read, Write};
+
+/// Upper bound on the request head: request line plus all headers.
+pub const MAX_HEAD_BYTES: usize = 16 * 1024;
+
+/// Upper bound on the number of request headers.
+pub const MAX_HEADERS: usize = 64;
+
+/// One parsed HTTP request.
+#[derive(Debug)]
+pub struct HttpRequest {
+    /// Request method, upper-case as sent (`GET`, `POST`, …).
+    pub method: String,
+    /// Request target (path + optional query), as sent.
+    pub path: String,
+    /// Header `(name, value)` pairs in arrival order.
+    pub headers: Vec<(String, String)>,
+    /// The request body (empty without a `Content-Length`).
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    /// First header value under `name`, case-insensitively.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Whether the peer asked to close the connection after this
+    /// exchange (`Connection: close`).
+    pub fn wants_close(&self) -> bool {
+        self.header("connection").is_some_and(|v| v.eq_ignore_ascii_case("close"))
+    }
+
+    /// The body as UTF-8, or a 400 [`HttpError`].
+    pub fn body_str(&self) -> Result<&str, HttpError> {
+        std::str::from_utf8(&self.body)
+            .map_err(|_| HttpError::new(400, "request body is not valid UTF-8"))
+    }
+}
+
+/// A framing-level failure, carrying the status the peer should see.
+#[derive(Debug)]
+pub struct HttpError {
+    /// HTTP status to answer with (400, 408, 413, 501, …).
+    pub status: u16,
+    /// Human-readable cause, safe to echo to the peer.
+    pub msg: String,
+}
+
+impl HttpError {
+    /// An error answering `status` with `msg`.
+    pub fn new(status: u16, msg: impl Into<String>) -> HttpError {
+        HttpError { status, msg: msg.into() }
+    }
+}
+
+impl std::fmt::Display for HttpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "http {}: {}", self.status, self.msg)
+    }
+}
+
+impl std::error::Error for HttpError {}
+
+/// What one read attempt on a kept-alive connection produced.
+pub enum ReadOutcome {
+    /// A complete request.
+    Request(HttpRequest),
+    /// Clean EOF before any byte of a next request: the peer closed.
+    Closed,
+    /// The socket's read timeout expired before any byte arrived —
+    /// the connection is idle, not broken; poll your stop flag and
+    /// call [`read_request`] again.
+    Idle,
+}
+
+enum Line {
+    Text(String),
+    Eof,
+    Timeout,
+}
+
+fn is_timeout(e: &io::Error) -> bool {
+    matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut)
+}
+
+/// Read one CRLF-terminated line, bounded at `max` bytes.
+fn read_line(r: &mut impl BufRead, max: usize) -> Result<Line, HttpError> {
+    let mut buf = Vec::new();
+    // the +2 leaves room for the CRLF of a line of exactly `max` bytes
+    match r.take(max as u64 + 2).read_until(b'\n', &mut buf) {
+        Ok(0) => {
+            if buf.is_empty() {
+                Ok(Line::Eof)
+            } else {
+                Err(HttpError::new(400, "truncated request head"))
+            }
+        }
+        Ok(_) => {
+            if buf.last() != Some(&b'\n') {
+                // either EOF mid-line or the bound was hit first
+                return Err(HttpError::new(400, "request head line too long or truncated"));
+            }
+            while matches!(buf.last(), Some(b'\n' | b'\r')) {
+                buf.pop();
+            }
+            String::from_utf8(buf)
+                .map(Line::Text)
+                .map_err(|_| HttpError::new(400, "request head is not valid UTF-8"))
+        }
+        Err(e) if is_timeout(&e) => {
+            if buf.is_empty() {
+                Ok(Line::Timeout)
+            } else {
+                Err(HttpError::new(408, "timed out mid-request"))
+            }
+        }
+        Err(e) => Err(HttpError::new(400, format!("read failed: {e}"))),
+    }
+}
+
+/// Read and parse one request from `r`, with the body bounded at
+/// `max_body` bytes (413 beyond it). See [`ReadOutcome`] for the
+/// idle/EOF cases; every malformed head is a 400 [`HttpError`].
+pub fn read_request(r: &mut impl BufRead, max_body: usize) -> Result<ReadOutcome, HttpError> {
+    let line = match read_line(r, MAX_HEAD_BYTES)? {
+        Line::Eof => return Ok(ReadOutcome::Closed),
+        Line::Timeout => return Ok(ReadOutcome::Idle),
+        Line::Text(l) => l,
+    };
+    let mut parts = line.split_whitespace();
+    let method = parts
+        .next()
+        .filter(|m| !m.is_empty())
+        .ok_or_else(|| HttpError::new(400, "empty request line"))?
+        .to_string();
+    let path = parts
+        .next()
+        .ok_or_else(|| HttpError::new(400, "request line has no target"))?
+        .to_string();
+    let version = parts
+        .next()
+        .ok_or_else(|| HttpError::new(400, "request line has no version"))?;
+    if !version.starts_with("HTTP/1.") {
+        return Err(HttpError::new(400, format!("unsupported version '{version}'")));
+    }
+    let mut headers = Vec::new();
+    loop {
+        let line = match read_line(r, MAX_HEAD_BYTES)? {
+            Line::Text(l) => l,
+            // EOF or a stall inside the head is a broken request, not
+            // an idle connection
+            Line::Eof => return Err(HttpError::new(400, "EOF inside request head")),
+            Line::Timeout => return Err(HttpError::new(408, "timed out inside request head")),
+        };
+        if line.is_empty() {
+            break;
+        }
+        if headers.len() >= MAX_HEADERS {
+            return Err(HttpError::new(400, "too many headers"));
+        }
+        let (name, value) = line
+            .split_once(':')
+            .ok_or_else(|| HttpError::new(400, "malformed header line"))?;
+        headers.push((name.trim().to_string(), value.trim().to_string()));
+    }
+    let req = HttpRequest { method, path, headers, body: Vec::new() };
+    if req.header("transfer-encoding").is_some() {
+        return Err(HttpError::new(501, "transfer-encoding is not supported"));
+    }
+    let len = match req.header("content-length") {
+        None => 0usize,
+        Some(v) => v
+            .trim()
+            .parse::<usize>()
+            .map_err(|_| HttpError::new(400, "bad content-length"))?,
+    };
+    if len > max_body {
+        return Err(HttpError::new(
+            413,
+            format!("body of {len} bytes exceeds the {max_body}-byte limit"),
+        ));
+    }
+    let mut req = req;
+    if len > 0 {
+        let mut body = vec![0u8; len];
+        r.read_exact(&mut body).map_err(|e| {
+            if is_timeout(&e) {
+                HttpError::new(408, "timed out reading request body")
+            } else {
+                HttpError::new(400, format!("short body: {e}"))
+            }
+        })?;
+        req.body = body;
+    }
+    Ok(ReadOutcome::Request(req))
+}
+
+/// Canonical reason phrase for the statuses this edge emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Write one fixed-length response; `close` adds `Connection: close`.
+pub fn write_response(
+    w: &mut impl Write,
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+    close: bool,
+) -> io::Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n",
+        status,
+        reason(status),
+        content_type,
+        body.len()
+    )?;
+    if close {
+        w.write_all(b"Connection: close\r\n")?;
+    }
+    w.write_all(b"\r\n")?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufReader;
+
+    fn parse(raw: &str) -> Result<ReadOutcome, HttpError> {
+        read_request(&mut BufReader::new(raw.as_bytes()), 1024)
+    }
+
+    fn request(raw: &str) -> HttpRequest {
+        match parse(raw) {
+            Ok(ReadOutcome::Request(r)) => r,
+            other => panic!(
+                "expected a request, got {:?}",
+                other.map(|_| "non-request outcome")
+            ),
+        }
+    }
+
+    #[test]
+    fn parses_post_with_body_and_headers() {
+        let r = request(
+            "POST /v1/infer HTTP/1.1\r\nHost: x\r\nContent-Type: application/json\r\n\
+             Content-Length: 11\r\n\r\n{\"input\":1}",
+        );
+        assert_eq!(r.method, "POST");
+        assert_eq!(r.path, "/v1/infer");
+        assert_eq!(r.header("content-type"), Some("application/json"));
+        assert_eq!(r.header("CONTENT-TYPE"), Some("application/json"));
+        assert_eq!(r.body_str().unwrap(), "{\"input\":1}");
+        assert!(!r.wants_close());
+    }
+
+    #[test]
+    fn parses_get_without_body_and_connection_close() {
+        let r = request("GET /metrics HTTP/1.0\r\nConnection: close\r\n\r\n");
+        assert_eq!(r.method, "GET");
+        assert!(r.body.is_empty());
+        assert!(r.wants_close());
+    }
+
+    #[test]
+    fn eof_before_any_byte_is_closed() {
+        assert!(matches!(parse("").unwrap(), ReadOutcome::Closed));
+    }
+
+    #[test]
+    fn malformed_heads_are_400() {
+        for raw in [
+            "GARBAGE\r\n\r\n",                        // no target/version
+            "GET /\r\n\r\n",                          // no version
+            "GET / SPDY/3\r\n\r\n",                   // wrong protocol
+            "GET / HTTP/1.1\r\nno-colon-here\r\n\r\n", // bad header
+            "POST / HTTP/1.1\r\nContent-Length: nope\r\n\r\n", // bad length
+            "POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nshort", // truncated body
+        ] {
+            let e = parse(raw).unwrap_err();
+            assert_eq!(e.status, 400, "{raw:?} -> {e}");
+        }
+    }
+
+    #[test]
+    fn oversized_body_is_413_and_chunked_is_501() {
+        let e = parse("POST / HTTP/1.1\r\nContent-Length: 9999\r\n\r\n").unwrap_err();
+        assert_eq!(e.status, 413);
+        let e = parse("POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n").unwrap_err();
+        assert_eq!(e.status, 501);
+    }
+
+    #[test]
+    fn overlong_head_line_is_400() {
+        let raw = format!("GET /{} HTTP/1.1\r\n\r\n", "a".repeat(MAX_HEAD_BYTES));
+        assert_eq!(parse(&raw).unwrap_err().status, 400);
+    }
+
+    /// Reader that yields `WouldBlock`, as a timed-out socket does.
+    struct TimeoutReader;
+    impl io::Read for TimeoutReader {
+        fn read(&mut self, _buf: &mut [u8]) -> io::Result<usize> {
+            Err(io::Error::new(io::ErrorKind::WouldBlock, "timed out"))
+        }
+    }
+
+    #[test]
+    fn timeout_before_any_byte_is_idle() {
+        let mut r = BufReader::new(TimeoutReader);
+        assert!(matches!(read_request(&mut r, 1024).unwrap(), ReadOutcome::Idle));
+    }
+
+    #[test]
+    fn timeout_mid_request_is_408() {
+        // head arrives, then the body stalls
+        let head = "POST / HTTP/1.1\r\nContent-Length: 5\r\n\r\n";
+        let mut r = BufReader::new(head.as_bytes().chain(TimeoutReader));
+        assert_eq!(read_request(&mut r, 1024).unwrap_err().status, 408);
+    }
+
+    #[test]
+    fn write_response_frames_and_closes() {
+        let mut out = Vec::new();
+        write_response(&mut out, 200, "application/json", b"{}", false).unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.starts_with("HTTP/1.1 200 OK\r\n"), "{s}");
+        assert!(s.contains("Content-Length: 2\r\n"));
+        assert!(!s.contains("Connection: close"));
+        assert!(s.ends_with("\r\n\r\n{}"));
+        let mut out = Vec::new();
+        write_response(&mut out, 503, "text/plain", b"busy", true).unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.starts_with("HTTP/1.1 503 Service Unavailable\r\n"));
+        assert!(s.contains("Connection: close\r\n"));
+    }
+
+    #[test]
+    fn keep_alive_reads_two_requests_off_one_stream() {
+        let raw = "GET /a HTTP/1.1\r\n\r\nGET /b HTTP/1.1\r\n\r\n";
+        let mut r = BufReader::new(raw.as_bytes());
+        let a = match read_request(&mut r, 64).unwrap() {
+            ReadOutcome::Request(a) => a,
+            _ => panic!("first request"),
+        };
+        let b = match read_request(&mut r, 64).unwrap() {
+            ReadOutcome::Request(b) => b,
+            _ => panic!("second request"),
+        };
+        assert_eq!((a.path.as_str(), b.path.as_str()), ("/a", "/b"));
+        assert!(matches!(read_request(&mut r, 64).unwrap(), ReadOutcome::Closed));
+    }
+}

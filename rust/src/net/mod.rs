@@ -1,0 +1,36 @@
+//! L4 network edge: the power–accuracy frontier over a socket.
+//!
+//! Everything below this module serves *in-process* callers — a
+//! [`Client`](crate::coordinator::Client) handle into one
+//! [`Server`](crate::coordinator::Server). This module is the boundary
+//! where the paper's deployment story ("traverse the power–accuracy
+//! trade-off at deployment time, no hardware changes") becomes a wire
+//! protocol any load balancer or `curl` can drive:
+//!
+//! - [`http`] — bounded, std-only HTTP/1.1 framing (no async runtime,
+//!   no TLS: thread-per-connection over [`std::net::TcpListener`]).
+//! - [`wire`] — the JSON schema: `POST /v1/infer` maps 1:1 onto
+//!   [`InferRequest`](crate::coordinator::InferRequest) (deadline,
+//!   energy cap, priority, pin, tag, affinity), and every
+//!   [`ServeError`](crate::coordinator::ServeError) variant has a
+//!   fixed HTTP status and a machine-readable `kind`.
+//! - [`shard`] — the [`ShardRouter`]: one logical model spread over N
+//!   in-process servers, with rendezvous-hash affinity placement,
+//!   deadline-aware retry of shed requests, and a cluster
+//!   [`EnergyEnvelope`](crate::coordinator::EnergyEnvelope) split
+//!   across shards by the same demand-weighted water-filling the
+//!   multi-model fleet uses ([`crate::coordinator::arbiter`]).
+//! - [`server`] — the [`NetServer`]: acceptor + bounded handler pool
+//!   in front of a router, four endpoints (`/v1/infer`, `/v1/models`,
+//!   `/v1/governor`, `/metrics`), graceful drain on shutdown.
+//!
+//! CLI: `pann-cli serve --menu MENU.json --listen 127.0.0.1:8080
+//! --shards 2 --hold`.
+
+pub mod http;
+pub mod server;
+pub mod shard;
+pub mod wire;
+
+pub use server::{NetConfig, NetServer};
+pub use shard::{RouterSnapshot, ShardRouter, ShardRouterBuilder, ShardStatus, ShardTicket};

@@ -1,0 +1,589 @@
+//! The HTTP edge: a [`ShardRouter`] behind a socket.
+//!
+//! Std-only by design — [`std::net::TcpListener`], a fixed pool of
+//! blocking handler threads, and a bounded accept→handler channel. No
+//! async runtime: the serving hot path is already thread-per-worker
+//! inside each shard, the edge only has to keep a handful of
+//! connections fed, and the offline registry stays empty. Back
+//! pressure is explicit at both layers: a full handler channel answers
+//! `503` at accept time, a full shard queue is retried/shed by the
+//! router ([`ServeError::QueueFull`] → `503` with a JSON body).
+//!
+//! Endpoints:
+//!
+//! | method+path       | answer                                        |
+//! |-------------------|-----------------------------------------------|
+//! | `POST /v1/infer`  | run one request ([`super::wire`] schema)      |
+//! | `GET /v1/models`  | registered models, shard count, sample length |
+//! | `GET /v1/governor`| cluster envelope + per-shard governor state   |
+//! | `GET /metrics`    | Prometheus-style text counters                |
+//!
+//! Shutdown is graceful: [`NetServer::shutdown`] stops the acceptor
+//! (waking its blocking `accept` with a loopback self-connect), lets
+//! every handler finish the request it is serving, joins all threads,
+//! and only then shuts the shards down — no admitted request is
+//! dropped.
+//!
+//! [`ServeError::QueueFull`]: crate::coordinator::ServeError::QueueFull
+
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::http::{self, HttpError, HttpRequest, ReadOutcome};
+use super::shard::ShardRouter;
+use super::wire;
+use crate::util::Json;
+
+/// Tuning knobs of a [`NetServer`].
+#[derive(Clone, Debug)]
+pub struct NetConfig {
+    /// Connection-handler threads (each serves one connection at a
+    /// time, keep-alive included).
+    pub handler_threads: usize,
+    /// Largest accepted request body, bytes (413 beyond).
+    pub max_body: usize,
+    /// Accepted-but-unhandled connection backlog; connections beyond
+    /// it are answered `503` at accept time.
+    pub pending_conns: usize,
+    /// How often an idle keep-alive handler wakes to poll the stop
+    /// flag (the socket read timeout).
+    pub idle_poll: Duration,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            handler_threads: 4,
+            max_body: 4 << 20,
+            pending_conns: 64,
+            idle_poll: Duration::from_millis(250),
+        }
+    }
+}
+
+/// Edge-level counters, reported on `/metrics`.
+#[derive(Default)]
+struct NetStats {
+    /// HTTP requests parsed (any endpoint, any outcome).
+    requests: AtomicU64,
+    /// Responses with a 4xx/5xx status, accept-time 503s included.
+    errors: AtomicU64,
+}
+
+struct EdgeState {
+    router: ShardRouter,
+    stats: NetStats,
+    stop: Arc<AtomicBool>,
+    max_body: usize,
+    idle_poll: Duration,
+}
+
+/// The HTTP edge server. Bind with [`NetServer::bind`], stop with
+/// [`NetServer::shutdown`] (dropping it shuts down too).
+pub struct NetServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    acceptor: Option<JoinHandle<()>>,
+    handlers: Vec<JoinHandle<()>>,
+    state: Option<Arc<EdgeState>>,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port) and
+    /// serve `router` on it with `config`'s pool sizes.
+    pub fn bind(
+        addr: impl ToSocketAddrs,
+        router: ShardRouter,
+        config: NetConfig,
+    ) -> Result<NetServer> {
+        let listener = TcpListener::bind(addr).context("binding the edge listener")?;
+        let local = listener.local_addr().context("reading the bound address")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let state = Arc::new(EdgeState {
+            router,
+            stats: NetStats::default(),
+            stop: stop.clone(),
+            max_body: config.max_body,
+            idle_poll: config.idle_poll,
+        });
+        let (tx, rx) = mpsc::sync_channel::<TcpStream>(config.pending_conns.max(1));
+        let rx = Arc::new(Mutex::new(rx));
+        let mut handlers = Vec::with_capacity(config.handler_threads.max(1));
+        for i in 0..config.handler_threads.max(1) {
+            let rx = rx.clone();
+            let state = state.clone();
+            handlers.push(
+                std::thread::Builder::new()
+                    .name(format!("pann-edge-{i}"))
+                    .spawn(move || loop {
+                        // hold the lock only to dequeue, not to serve
+                        let conn = rx.lock().expect("edge receiver poisoned").recv();
+                        match conn {
+                            Ok(stream) => handle_connection(stream, &state),
+                            Err(_) => break, // acceptor gone: drained
+                        }
+                    })
+                    .context("spawning an edge handler")?,
+            );
+        }
+        let acceptor = {
+            let state = state.clone();
+            let stop = stop.clone();
+            std::thread::Builder::new()
+                .name("pann-edge-accept".into())
+                .spawn(move || {
+                    for conn in listener.incoming() {
+                        if stop.load(Ordering::SeqCst) {
+                            break; // the wake-up self-connect lands here
+                        }
+                        let stream = match conn {
+                            Ok(s) => s,
+                            Err(_) => continue,
+                        };
+                        match tx.try_send(stream) {
+                            Ok(()) => {}
+                            Err(mpsc::TrySendError::Full(stream)) => {
+                                // overloaded: answer 503 inline rather
+                                // than queueing unboundedly
+                                state.stats.errors.fetch_add(1, Ordering::Relaxed);
+                                let body = wire::http_error_body(&HttpError::new(
+                                    503,
+                                    "connection backlog full",
+                                ))
+                                .to_string();
+                                let mut w = &stream;
+                                let _ = http::write_response(
+                                    &mut w,
+                                    503,
+                                    "application/json",
+                                    body.as_bytes(),
+                                    true,
+                                );
+                            }
+                            Err(mpsc::TrySendError::Disconnected(_)) => break,
+                        }
+                    }
+                    // dropping tx here lets handlers drain and exit
+                })
+                .context("spawning the edge acceptor")?
+        };
+        Ok(NetServer { addr: local, stop, acceptor: Some(acceptor), handlers, state: Some(state) })
+    }
+
+    /// The bound address (with the real port when bound to `:0`).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Graceful stop: no new connections, in-flight requests finish,
+    /// every thread joins, then the shards shut down.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        if self.state.is_none() {
+            return;
+        }
+        self.stop.store(true, Ordering::SeqCst);
+        // wake the acceptor out of its blocking accept
+        let _ = TcpStream::connect(self.addr);
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+        for h in self.handlers.drain(..) {
+            let _ = h.join();
+        }
+        if let Some(state) = self.state.take() {
+            if let Ok(state) = Arc::try_unwrap(state) {
+                state.router.shutdown();
+            }
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+/// Serve one connection until it closes, errors, or the server stops.
+fn handle_connection(stream: TcpStream, state: &EdgeState) {
+    let _ = stream.set_read_timeout(Some(state.idle_poll));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(10)));
+    let mut reader = BufReader::new(&stream);
+    let mut writer = &stream;
+    loop {
+        let req = match http::read_request(&mut reader, state.max_body) {
+            Ok(ReadOutcome::Request(r)) => r,
+            Ok(ReadOutcome::Closed) => return,
+            Ok(ReadOutcome::Idle) => {
+                if state.stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                continue;
+            }
+            Err(e) => {
+                // framing failure: answer what we can, then drop the
+                // connection — the stream offset is unreliable now
+                state.stats.requests.fetch_add(1, Ordering::Relaxed);
+                state.stats.errors.fetch_add(1, Ordering::Relaxed);
+                let body = wire::http_error_body(&e).to_string();
+                let _ = http::write_response(
+                    &mut writer,
+                    e.status,
+                    "application/json",
+                    body.as_bytes(),
+                    true,
+                );
+                return;
+            }
+        };
+        state.stats.requests.fetch_add(1, Ordering::Relaxed);
+        let close = req.wants_close() || state.stop.load(Ordering::SeqCst);
+        let (status, content_type, body) = route(state, &req);
+        if status >= 400 {
+            state.stats.errors.fetch_add(1, Ordering::Relaxed);
+        }
+        let sent = http::write_response(&mut writer, status, content_type, body.as_bytes(), close);
+        if sent.is_err() || close {
+            return;
+        }
+    }
+}
+
+/// Dispatch one parsed request to its endpoint.
+fn route(state: &EdgeState, req: &HttpRequest) -> (u16, &'static str, String) {
+    let path = req.path.split('?').next().unwrap_or("");
+    let want = match path {
+        "/v1/infer" => "POST",
+        "/v1/models" | "/v1/governor" | "/metrics" => "GET",
+        _ => return err(HttpError::new(404, format!("no such endpoint: {path}"))),
+    };
+    if req.method != want {
+        return err(HttpError::new(
+            405,
+            format!("{} is not supported on {path} (use {want})", req.method),
+        ));
+    }
+    match path {
+        "/v1/infer" => infer(state, req),
+        "/v1/models" => (200, "application/json", models_json(state).to_string()),
+        "/v1/governor" => (200, "application/json", governor_json(state).to_string()),
+        _ => (200, "text/plain; version=0.0.4", metrics_text(state)),
+    }
+}
+
+fn err(e: HttpError) -> (u16, &'static str, String) {
+    (e.status, "application/json", wire::http_error_body(&e).to_string())
+}
+
+fn infer(state: &EdgeState, req: &HttpRequest) -> (u16, &'static str, String) {
+    let body = match req.body_str().and_then(wire::parse_infer) {
+        Ok(r) => r,
+        Err(e) => return err(e),
+    };
+    // wait inline: the handler thread *is* this request's thread
+    let answered = state.router.submit(body).and_then(|t| {
+        let shard = t.shard;
+        t.wait().map(|resp| (shard, resp))
+    });
+    match answered {
+        Ok((shard, resp)) => {
+            (200, "application/json", wire::response_json(shard, &resp).to_string())
+        }
+        Err(e) => {
+            (wire::status_of(&e), "application/json", wire::serve_error_body(&e).to_string())
+        }
+    }
+}
+
+fn models_json(state: &EdgeState) -> Json {
+    let c = state.router.primary();
+    Json::obj(vec![
+        (
+            "models",
+            Json::Arr(c.models().into_iter().map(Json::from).collect()),
+        ),
+        ("shards", Json::from(state.router.n_shards())),
+        ("sample_len", Json::from(c.sample_len())),
+        ("budget_gflips", Json::from(c.budget())),
+    ])
+}
+
+fn governor_json(state: &EdgeState) -> Json {
+    let snap = state.router.snapshot();
+    Json::obj(vec![
+        (
+            "envelope_gflips_per_sec",
+            snap.envelope_rate.map(Json::from).unwrap_or(Json::Null),
+        ),
+        (
+            "shards",
+            Json::Arr(
+                snap.shards
+                    .iter()
+                    .map(|s| {
+                        Json::obj(vec![
+                            (
+                                "share_gflips_per_sec",
+                                s.envelope_share.map(Json::from).unwrap_or(Json::Null),
+                            ),
+                            (
+                                "demand_samples_per_sec",
+                                s.demand_rate.map(Json::from).unwrap_or(Json::Null),
+                            ),
+                            (
+                                "governor",
+                                match &s.governor {
+                                    None => Json::Null,
+                                    Some(g) => Json::obj(vec![
+                                        ("point", Json::from(g.point.as_str())),
+                                        ("level", Json::from(g.level)),
+                                        ("switches", Json::from(g.switches as f64)),
+                                        ("windows", Json::from(g.windows as f64)),
+                                        (
+                                            "target_gflips_per_window",
+                                            Json::from(g.target_gflips_per_window),
+                                        ),
+                                    ]),
+                                },
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+fn metrics_text(state: &EdgeState) -> String {
+    let snap = state.router.snapshot();
+    let mut out = String::new();
+    out.push_str(&format!(
+        "pann_http_requests_total {}\n",
+        state.stats.requests.load(Ordering::Relaxed)
+    ));
+    out.push_str(&format!(
+        "pann_http_errors_total {}\n",
+        state.stats.errors.load(Ordering::Relaxed)
+    ));
+    if let Some(rate) = snap.envelope_rate {
+        out.push_str(&format!("pann_envelope_gflips_per_sec {rate}\n"));
+    }
+    for (i, s) in snap.shards.iter().enumerate() {
+        out.push_str(&format!("pann_shard_requests_total{{shard=\"{i}\"}} {}\n", s.requests));
+        out.push_str(&format!("pann_shard_shed_total{{shard=\"{i}\"}} {}\n", s.shed));
+        out.push_str(&format!("pann_shard_retries_total{{shard=\"{i}\"}} {}\n", s.retries));
+        out.push_str(&format!("pann_shard_queue_depth{{shard=\"{i}\"}} {}\n", s.queue_depth));
+        out.push_str(&format!(
+            "pann_shard_expired_total{{shard=\"{i}\"}} {}\n",
+            s.metrics.expired
+        ));
+        if let Some(share) = s.envelope_share {
+            out.push_str(&format!(
+                "pann_shard_envelope_share_gflips_per_sec{{shard=\"{i}\"}} {share}\n"
+            ));
+        }
+        if let Some(rate) = s.demand_rate {
+            out.push_str(&format!(
+                "pann_shard_demand_samples_per_sec{{shard=\"{i}\"}} {rate}\n"
+            ));
+        }
+        // operating-point residency: where on the frontier this
+        // shard's requests actually ran
+        for (point, served) in &s.metrics.per_point {
+            out.push_str(&format!(
+                "pann_point_residency_total{{shard=\"{i}\",point=\"{point}\"}} {served}\n"
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::server::tests_support::MockEngine;
+    use crate::coordinator::{Menu, Server, SharedPoint};
+    use std::io::{Read, Write};
+
+    fn bind_mock(n_shards: usize) -> NetServer {
+        let router = ShardRouter::builder()
+            .build(n_shards, |_, _| {
+                let menu = Menu::shared(vec![SharedPoint {
+                    name: "p".into(),
+                    giga_flips_per_sample: 1.0,
+                    engine: std::sync::Arc::new(MockEngine::new(4, 2, 1)),
+                }]);
+                Server::builder().workers(1).queue_depth(8).serve(menu)
+            })
+            .unwrap();
+        let cfg = NetConfig { handler_threads: 2, ..NetConfig::default() };
+        NetServer::bind("127.0.0.1:0", router, cfg).unwrap()
+    }
+
+    /// One raw HTTP exchange over a fresh connection.
+    fn call(addr: SocketAddr, raw: &str) -> (u16, String) {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(raw.as_bytes()).unwrap();
+        let mut buf = String::new();
+        s.read_to_string(&mut buf).unwrap();
+        let status: u16 = buf
+            .split_whitespace()
+            .nth(1)
+            .expect("status line")
+            .parse()
+            .expect("numeric status");
+        let body = buf.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
+        (status, body)
+    }
+
+    fn post_infer(addr: SocketAddr, json: &str) -> (u16, String) {
+        call(
+            addr,
+            &format!(
+                "POST /v1/infer HTTP/1.1\r\nConnection: close\r\nContent-Length: {}\r\n\r\n{}",
+                json.len(),
+                json
+            ),
+        )
+    }
+
+    #[test]
+    fn serves_infer_models_governor_and_metrics() {
+        let srv = bind_mock(2);
+        let addr = srv.local_addr();
+
+        let (status, body) = post_infer(addr, r#"{"input": [2, 3], "tag": "t1"}"#);
+        assert_eq!(status, 200, "{body}");
+        let j = Json::parse(&body).unwrap();
+        assert_eq!(j.get("output").unwrap().as_arr().unwrap()[0].as_f64(), Some(5.0));
+        assert_eq!(j.get("point").unwrap().as_str(), Some("p"));
+        assert_eq!(j.get("tag").unwrap().as_str(), Some("t1"));
+        assert!(j.get("shard").unwrap().as_usize().unwrap() < 2);
+
+        let (status, body) = call(addr, "GET /v1/models HTTP/1.1\r\nConnection: close\r\n\r\n");
+        assert_eq!(status, 200);
+        let j = Json::parse(&body).unwrap();
+        assert_eq!(j.get("shards").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("sample_len").unwrap().as_usize(), Some(2));
+
+        let (status, body) = call(addr, "GET /v1/governor HTTP/1.1\r\nConnection: close\r\n\r\n");
+        assert_eq!(status, 200);
+        let j = Json::parse(&body).unwrap();
+        assert_eq!(j.get("shards").unwrap().as_arr().unwrap().len(), 2);
+
+        let (status, body) = call(addr, "GET /metrics HTTP/1.1\r\nConnection: close\r\n\r\n");
+        assert_eq!(status, 200);
+        assert!(body.contains("pann_http_requests_total"), "{body}");
+        assert!(body.contains("pann_shard_requests_total{shard=\"0\"}"), "{body}");
+        assert!(body.contains("pann_point_residency_total{shard="), "{body}");
+
+        srv.shutdown();
+    }
+
+    #[test]
+    fn maps_wire_and_routing_failures_to_statuses() {
+        let srv = bind_mock(1);
+        let addr = srv.local_addr();
+
+        // malformed JSON body
+        let (status, body) = post_infer(addr, "{not json");
+        assert_eq!(status, 400, "{body}");
+        // schema violation
+        let (status, _) = post_infer(addr, r#"{"input": [1, 2], "bogus": 1}"#);
+        assert_eq!(status, 400);
+        // unknown pinned point -> 404 via ServeError mapping
+        let (status, body) = post_infer(addr, r#"{"input": [1, 2], "pin": "ghost"}"#);
+        assert_eq!(status, 404, "{body}");
+        assert!(body.contains("unknown_point"), "{body}");
+        // a named model on a single-model server -> 404
+        let (status, body) = post_infer(addr, r#"{"input": [1, 2], "model": "ghost"}"#);
+        assert_eq!(status, 404, "{body}");
+        assert!(body.contains("unknown_model"), "{body}");
+        // already-expired deadline -> 408
+        let (status, body) = post_infer(addr, r#"{"input": [1, 2], "deadline_ms": 0}"#);
+        assert_eq!(status, 408, "{body}");
+        // unknown path / wrong method
+        let (status, _) = call(addr, "GET /nope HTTP/1.1\r\nConnection: close\r\n\r\n");
+        assert_eq!(status, 404);
+        let (status, _) = call(addr, "GET /v1/infer HTTP/1.1\r\nConnection: close\r\n\r\n");
+        assert_eq!(status, 405);
+
+        // the error counter saw all of the above
+        let (_, body) = call(addr, "GET /metrics HTTP/1.1\r\nConnection: close\r\n\r\n");
+        let errors: u64 = body
+            .lines()
+            .find(|l| l.starts_with("pann_http_errors_total"))
+            .and_then(|l| l.split_whitespace().nth(1))
+            .unwrap()
+            .parse()
+            .unwrap();
+        assert!(errors >= 7, "expected >= 7 counted errors, metrics said {errors}");
+
+        srv.shutdown();
+    }
+
+    #[test]
+    fn keep_alive_serves_sequential_requests_on_one_connection() {
+        let srv = bind_mock(1);
+        let addr = srv.local_addr();
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        for k in 0..3 {
+            let json = format!(r#"{{"input": [{k}, 1]}}"#);
+            let raw = format!(
+                "POST /v1/infer HTTP/1.1\r\nContent-Length: {}\r\n\r\n{}",
+                json.len(),
+                json
+            );
+            s.write_all(raw.as_bytes()).unwrap();
+            // read exactly one response off the still-open stream
+            let mut buf = Vec::new();
+            let mut byte = [0u8; 1];
+            while !buf.ends_with(b"\r\n\r\n") {
+                s.read_exact(&mut byte).unwrap();
+                buf.push(byte[0]);
+            }
+            let head = String::from_utf8(buf).unwrap();
+            assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+            let len: usize = head
+                .lines()
+                .find(|l| l.to_ascii_lowercase().starts_with("content-length:"))
+                .and_then(|l| l.split(':').nth(1))
+                .unwrap()
+                .trim()
+                .parse()
+                .unwrap();
+            let mut body = vec![0u8; len];
+            s.read_exact(&mut body).unwrap();
+            let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+            let out = j.get("output").unwrap().as_arr().unwrap()[0].as_f64().unwrap();
+            assert_eq!(out, k as f64 + 1.0);
+        }
+        drop(s);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn shutdown_is_idempotent_and_drop_safe() {
+        let srv = bind_mock(1);
+        let addr = srv.local_addr();
+        srv.shutdown();
+        // the port is released: a fresh bind on the same address works
+        let l = TcpListener::bind(addr);
+        assert!(l.is_ok(), "address not released after shutdown");
+        drop(l);
+        // dropping without shutdown must also stop cleanly
+        let srv = bind_mock(1);
+        drop(srv);
+    }
+}

@@ -1,0 +1,521 @@
+//! Shard router: one logical model spread across N in-process
+//! [`Server`]s.
+//!
+//! Each shard is a full coordinator stack — its own worker pool,
+//! bounded queue, metrics and (under an envelope) its own
+//! [`Governor`] — built by a caller-supplied factory so every shard
+//! compiles its own engine instances (engines are `Arc`-shared *plans*,
+//! so the memory cost is workers, not weights). The router in front
+//! adds three things:
+//!
+//! - **Placement**: a request carrying an
+//!   [affinity key](crate::coordinator::InferRequest::affinity) lands
+//!   on the shard that wins rendezvous (highest-random-weight) hashing
+//!   over `(key, shard)` — the same key always goes to the same shard
+//!   while shards stay fixed, and removing a shard only remaps the
+//!   keys that lived on it. Keyless requests spread round-robin.
+//! - **Shed retry**: a shard that answers [`ServeError::QueueFull`]
+//!   (or died: [`ServeError::ServerStopped`]) is not the end — the
+//!   router walks the remaining shards in rendezvous order, shrinking
+//!   the request's relative deadline by the time already burned, and
+//!   only reports the shed when every shard refused or the deadline
+//!   ran out first.
+//! - **Envelope split**: under a cluster [`EnergyEnvelope`] the router
+//!   feeds admitted samples to an [`EnvelopeSplitter`] and re-targets
+//!   every shard's governor with its demand-weighted share at each
+//!   window boundary — a hot shard degrades down its frontier before a
+//!   cold one starves, exactly as fleet models do under the registry's
+//!   arbiter.
+//!
+//! [`Governor`]: crate::coordinator::Governor
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::{
+    Client, EnergyEnvelope, EnvelopeSplitter, GovernorSnapshot, InferRequest, MetricsSnapshot,
+    Response, ServeError, Server, Ticket,
+};
+
+/// Builder for a [`ShardRouter`].
+pub struct ShardRouterBuilder {
+    envelope: Option<(f64, f64)>, // (cluster Gflips/sec, top Gflips/sample)
+    window: Duration,
+}
+
+impl Default for ShardRouterBuilder {
+    fn default() -> Self {
+        ShardRouterBuilder::new()
+    }
+}
+
+impl ShardRouterBuilder {
+    /// A router with no cluster envelope (shards keep whatever budget
+    /// or governor their factory gave them) and a 200 ms demand window.
+    pub fn new() -> ShardRouterBuilder {
+        ShardRouterBuilder { envelope: None, window: Duration::from_millis(200) }
+    }
+
+    /// Run the cluster under `envelope` (Gflips/sec across *all*
+    /// shards). `top_gflips_per_sample` prices shard demand for the
+    /// split — pass the cost of the menu's most accurate point, i.e.
+    /// what serving a shard's whole load at full accuracy would draw.
+    /// The factory receives each shard's initial equal slice to build
+    /// its governor from.
+    pub fn envelope(mut self, envelope: EnergyEnvelope, top_gflips_per_sample: f64) -> Self {
+        self.envelope = Some((envelope.rate(), top_gflips_per_sample));
+        self
+    }
+
+    /// Demand window for the envelope re-split (default 200 ms).
+    pub fn window(mut self, w: Duration) -> Self {
+        self.window = w;
+        self
+    }
+
+    /// Build `n` shards through `make(shard, envelope_slice)` — the
+    /// factory returns each shard's fully-built [`Server`], attaching
+    /// the passed envelope slice as its governor envelope when one is
+    /// given (`None` without a cluster envelope).
+    pub fn build<F>(self, n: usize, mut make: F) -> Result<ShardRouter>
+    where
+        F: FnMut(usize, Option<EnergyEnvelope>) -> Result<Server>,
+    {
+        if n == 0 {
+            bail!("a shard router needs at least one shard");
+        }
+        let now = Instant::now();
+        let mut shards = Vec::with_capacity(n);
+        for i in 0..n {
+            let slice = self
+                .envelope
+                .map(|(rate, _)| EnergyEnvelope::gflips_per_sec(rate / n as f64));
+            let server = make(i, slice)?;
+            let client = server.client();
+            shards.push(Shard {
+                server,
+                client,
+                requests: AtomicU64::new(0),
+                shed: AtomicU64::new(0),
+                retries: AtomicU64::new(0),
+            });
+        }
+        Ok(ShardRouter {
+            shards,
+            splitter: self
+                .envelope
+                .map(|(rate, _)| EnvelopeSplitter::new(rate, self.window, n, now)),
+            top_cost: self.envelope.map(|(_, c)| c).unwrap_or(0.0),
+            rr: AtomicUsize::new(0),
+        })
+    }
+}
+
+struct Shard {
+    server: Server,
+    client: Client,
+    requests: AtomicU64,
+    shed: AtomicU64,
+    retries: AtomicU64,
+}
+
+/// N in-process [`Server`]s behind one submit surface. See the
+/// [module docs](self) for placement, retry and envelope semantics.
+pub struct ShardRouter {
+    shards: Vec<Shard>,
+    splitter: Option<EnvelopeSplitter>,
+    top_cost: f64,
+    rr: AtomicUsize,
+}
+
+/// A [`Ticket`] plus the shard that admitted the request.
+pub struct ShardTicket {
+    /// Index of the shard serving the request.
+    pub shard: usize,
+    /// The underlying result handle.
+    pub ticket: Ticket,
+}
+
+impl ShardTicket {
+    /// Block until the result arrives (see [`Ticket::wait`]).
+    pub fn wait(self) -> Result<Response, ServeError> {
+        self.ticket.wait()
+    }
+}
+
+/// Point-in-time view of a [`ShardRouter`].
+#[derive(Clone, Debug)]
+pub struct RouterSnapshot {
+    /// Per-shard status, in shard order.
+    pub shards: Vec<ShardStatus>,
+    /// The cluster envelope rate being split (Gflips/sec), when one is
+    /// set.
+    pub envelope_rate: Option<f64>,
+}
+
+/// One shard's slice of a [`RouterSnapshot`].
+#[derive(Clone, Debug)]
+pub struct ShardStatus {
+    /// Requests this shard admitted.
+    pub requests: u64,
+    /// Requests this shard refused ([`ServeError::QueueFull`] /
+    /// [`ServeError::ServerStopped`]) — each refusal either retried on
+    /// another shard or surfaced to the caller.
+    pub shed: u64,
+    /// Requests that landed here after at least one other shard shed
+    /// them.
+    pub retries: u64,
+    /// Requests currently queued on the shard.
+    pub queue_depth: usize,
+    /// The shard's current envelope share (Gflips/sec) under a cluster
+    /// envelope.
+    pub envelope_share: Option<f64>,
+    /// The splitter's EWMA demand estimate for the shard (samples/sec)
+    /// under a cluster envelope.
+    pub demand_rate: Option<f64>,
+    /// The shard's governor state, when it runs one.
+    pub governor: Option<GovernorSnapshot>,
+    /// The shard's full serving metrics (per-point residency, latency
+    /// per priority class, shed/expired counters).
+    pub metrics: MetricsSnapshot,
+}
+
+/// 64-bit FNV-1a over `bytes`, folded into `seed`.
+fn fnv1a(mut seed: u64, bytes: &[u8]) -> u64 {
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    for &b in bytes {
+        seed ^= b as u64;
+        seed = seed.wrapping_mul(PRIME);
+    }
+    seed
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+impl ShardRouter {
+    /// Start building a router.
+    pub fn builder() -> ShardRouterBuilder {
+        ShardRouterBuilder::new()
+    }
+
+    /// Number of shards.
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The client of shard 0 — for surface queries that are identical
+    /// on every shard (registered models, sample length, budget),
+    /// since all shards serve the same menu.
+    pub fn primary(&self) -> &Client {
+        &self.shards[0].client
+    }
+
+    /// Shard preference order for `req`: rendezvous order of its
+    /// affinity key, or round-robin rotation when it has none.
+    fn order(&self, req: &InferRequest) -> Vec<usize> {
+        let n = self.shards.len();
+        match &req.affinity {
+            Some(key) => {
+                let h0 = fnv1a(FNV_OFFSET, key.as_bytes());
+                let mut order: Vec<usize> = (0..n).collect();
+                // highest-random-weight first; ties (impossible in
+                // practice) break on shard index for determinism
+                order.sort_by_key(|&i| {
+                    (std::cmp::Reverse(fnv1a(h0, &(i as u64).to_le_bytes())), i)
+                });
+                order
+            }
+            None => {
+                let start = self.rr.fetch_add(1, Ordering::Relaxed) % n;
+                (start..n).chain(0..start).collect()
+            }
+        }
+    }
+
+    /// Submit one request. Walks the shards in preference order,
+    /// retrying sheds on the next shard with the deadline shrunk by the
+    /// time already spent; non-capacity rejections (bad input, unknown
+    /// point/model, NaN budget) surface immediately — no shard would
+    /// answer differently.
+    pub fn submit(&self, req: InferRequest) -> Result<ShardTicket, ServeError> {
+        let t0 = Instant::now();
+        let order = self.order(&req);
+        let mut last = ServeError::ServerStopped;
+        for (attempt, &i) in order.iter().enumerate() {
+            let mut try_req = req.clone();
+            if let Some(d) = req.deadline {
+                // charge routing time against the caller's deadline so
+                // a retry cannot serve later than the caller allowed
+                let elapsed = t0.elapsed();
+                if elapsed >= d {
+                    return Err(ServeError::DeadlineExceeded);
+                }
+                try_req = try_req.deadline(d - elapsed);
+            }
+            match self.shards[i].client.submit(try_req) {
+                Ok(ticket) => {
+                    self.shards[i].requests.fetch_add(1, Ordering::Relaxed);
+                    if attempt > 0 {
+                        self.shards[i].retries.fetch_add(1, Ordering::Relaxed);
+                    }
+                    self.note_admitted(i);
+                    return Ok(ShardTicket { shard: i, ticket });
+                }
+                Err(e @ (ServeError::QueueFull { .. } | ServeError::ServerStopped)) => {
+                    self.shards[i].shed.fetch_add(1, Ordering::Relaxed);
+                    last = e;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        Err(last)
+    }
+
+    /// Blocking convenience: submit with default QoS and wait.
+    pub fn infer(&self, input: Vec<f32>) -> Result<Response, ServeError> {
+        self.submit(InferRequest::new(input))?.wait()
+    }
+
+    /// Land one admitted sample on the envelope splitter; at a window
+    /// boundary, push every shard's fresh share into its governor.
+    fn note_admitted(&self, shard: usize) {
+        let Some(sp) = &self.splitter else { return };
+        if let Some(shares) = sp.observe(Instant::now(), shard, 1, |_| self.top_cost) {
+            for (i, &share) in shares.iter().enumerate() {
+                self.shards[i].client.set_envelope_rate(share);
+            }
+        }
+    }
+
+    /// Per-shard status plus the cluster envelope, for `/metrics` and
+    /// `/v1/governor`.
+    pub fn snapshot(&self) -> RouterSnapshot {
+        let split = self.splitter.as_ref().map(|s| s.snapshot());
+        RouterSnapshot {
+            envelope_rate: self.splitter.as_ref().map(|s| s.total_rate()),
+            shards: self
+                .shards
+                .iter()
+                .enumerate()
+                .map(|(i, s)| ShardStatus {
+                    requests: s.requests.load(Ordering::Relaxed),
+                    shed: s.shed.load(Ordering::Relaxed),
+                    retries: s.retries.load(Ordering::Relaxed),
+                    queue_depth: s.client.queue_depth(),
+                    envelope_share: split.as_ref().map(|sp| sp.shares[i]),
+                    demand_rate: split.as_ref().map(|sp| sp.demand_rate[i]),
+                    governor: s.client.governor(),
+                    metrics: s.client.metrics(),
+                })
+                .collect(),
+        }
+    }
+
+    /// Stop every shard: queues stop accepting, in-flight batches
+    /// finish, workers join.
+    pub fn shutdown(self) {
+        for shard in self.shards {
+            shard.server.shutdown();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::server::tests_support::{Gate, GateEngine, MockEngine};
+    use crate::coordinator::{Menu, Server, SharedPoint};
+    use std::sync::Arc;
+
+    fn mock_shard(_i: usize, env: Option<EnergyEnvelope>) -> Result<Server> {
+        let menu = Menu::shared(vec![SharedPoint {
+            name: "p".into(),
+            giga_flips_per_sample: 1.0,
+            engine: Arc::new(MockEngine::new(4, 2, 1)),
+        }]);
+        let mut b = Server::builder().workers(1).queue_depth(4);
+        if let Some(e) = env {
+            b = b.envelope(e);
+        }
+        b.serve(menu)
+    }
+
+    fn router(n: usize) -> ShardRouter {
+        ShardRouter::builder().build(n, mock_shard).unwrap()
+    }
+
+    #[test]
+    fn keyless_requests_round_robin_across_shards() {
+        let r = router(3);
+        let mut seen = [0u64; 3];
+        for _ in 0..9 {
+            let t = r.submit(InferRequest::new(vec![1.0, 2.0])).unwrap();
+            seen[t.shard] += 1;
+            t.wait().unwrap();
+        }
+        assert_eq!(seen, [3, 3, 3], "round-robin must spread evenly");
+        let snap = r.snapshot();
+        assert!(snap.shards.iter().all(|s| s.requests == 3 && s.shed == 0));
+        assert!(snap.envelope_rate.is_none());
+        r.shutdown();
+    }
+
+    #[test]
+    fn affinity_keys_stick_to_one_shard() {
+        let r = router(4);
+        for key in ["user-1", "user-2", "session-xyz"] {
+            let mut shards = std::collections::BTreeSet::new();
+            for _ in 0..5 {
+                let t = r
+                    .submit(InferRequest::new(vec![0.0, 0.0]).affinity(key))
+                    .unwrap();
+                shards.insert(t.shard);
+                t.wait().unwrap();
+            }
+            assert_eq!(shards.len(), 1, "key {key} must always land on one shard");
+        }
+        r.shutdown();
+    }
+
+    #[test]
+    fn affinity_keys_spread_over_shards() {
+        // rendezvous hashing must not degenerate to one hot shard
+        let r = router(4);
+        let mut seen = std::collections::BTreeSet::new();
+        for k in 0..32 {
+            let t = r
+                .submit(InferRequest::new(vec![0.0, 0.0]).affinity(format!("key-{k}")))
+                .unwrap();
+            seen.insert(t.shard);
+            t.wait().unwrap();
+        }
+        assert!(seen.len() >= 3, "32 keys landed on only {seen:?}");
+        r.shutdown();
+    }
+
+    /// An affinity key whose rendezvous order on a 2-shard router puts
+    /// shard 0 first — found deterministically against the same hash
+    /// the router uses.
+    fn key_preferring_shard0() -> String {
+        (0..)
+            .map(|i| format!("k{i}"))
+            .find(|k| {
+                let h0 = fnv1a(FNV_OFFSET, k.as_bytes());
+                fnv1a(h0, &0u64.to_le_bytes()) > fnv1a(h0, &1u64.to_le_bytes())
+            })
+            .unwrap()
+    }
+
+    #[test]
+    fn shed_requests_retry_on_the_next_shard() {
+        // shard 0: gated engine with queue_depth 1 (fills instantly);
+        // shard 1: free. An affinity key pinned to shard 0 makes the
+        // targeting deterministic.
+        let gate = Gate::new();
+        let g2 = gate.clone();
+        let r = ShardRouter::builder()
+            .build(2, move |i, _| {
+                if i == 0 {
+                    let menu = Menu::shared(vec![SharedPoint {
+                        name: "p".into(),
+                        giga_flips_per_sample: 1.0,
+                        engine: Arc::new(GateEngine::new(1, 2, 1, g2.clone())),
+                    }]);
+                    Server::builder().workers(1).queue_depth(1).serve(menu)
+                } else {
+                    mock_shard(i, None)
+                }
+            })
+            .unwrap();
+        let key = key_preferring_shard0();
+        // occupy shard 0: one executing (held at the gate) + one queued
+        let hold = r
+            .submit(InferRequest::new(vec![1.0, 1.0]).affinity(key.as_str()))
+            .unwrap();
+        assert_eq!(hold.shard, 0);
+        gate.wait_entered(1);
+        let queued = r
+            .submit(InferRequest::new(vec![1.0, 1.0]).affinity(key.as_str()))
+            .unwrap();
+        assert_eq!(queued.shard, 0);
+        // shard 0 is now full: the router must shed there and land the
+        // request on shard 1 despite the affinity preference
+        let t = r
+            .submit(InferRequest::new(vec![2.0, 3.0]).affinity(key.as_str()))
+            .unwrap();
+        assert_eq!(t.shard, 1);
+        let resp = t.wait().unwrap();
+        assert_eq!(resp.output, vec![5.0]); // echo-sum engine
+        let snap = r.snapshot();
+        assert_eq!(snap.shards[0].shed, 1);
+        assert_eq!(snap.shards[1].retries, 1);
+        gate.open();
+        hold.wait().unwrap();
+        queued.wait().unwrap();
+        r.shutdown();
+    }
+
+    #[test]
+    fn expired_deadline_rejected_before_any_shard() {
+        let r = router(2);
+        let e = r
+            .submit(InferRequest::new(vec![0.0, 0.0]).deadline(Duration::ZERO))
+            .unwrap_err();
+        assert_eq!(e, ServeError::DeadlineExceeded);
+        r.shutdown();
+    }
+
+    #[test]
+    fn non_capacity_errors_do_not_retry() {
+        let r = router(2);
+        // wrong input length: every shard would reject identically
+        let e = r.submit(InferRequest::new(vec![0.0])).unwrap_err();
+        assert_eq!(e, ServeError::BadInput { expected: 2, got: 1 });
+        // a pinned unknown point is admitted and rejected by the
+        // scheduler — through the ticket, once, with no shed counted
+        let t = r
+            .submit(InferRequest::new(vec![0.0, 0.0]).pin_point("ghost"))
+            .unwrap();
+        assert_eq!(t.wait(), Err(ServeError::UnknownPoint("ghost".into())));
+        let snap = r.snapshot();
+        assert!(snap.shards.iter().all(|s| s.shed == 0), "rejections are not sheds");
+        r.shutdown();
+    }
+
+    #[test]
+    fn envelope_router_targets_governors_with_shares() {
+        let r = ShardRouter::builder()
+            .envelope(EnergyEnvelope::gflips_per_sec(8.0), 1.0)
+            .window(Duration::from_millis(1))
+            .build(2, mock_shard)
+            .unwrap();
+        let snap = r.snapshot();
+        assert_eq!(snap.envelope_rate, Some(8.0));
+        // equal slices before any demand window closes
+        assert_eq!(
+            snap.shards.iter().map(|s| s.envelope_share).collect::<Vec<_>>(),
+            vec![Some(4.0), Some(4.0)]
+        );
+        assert!(snap.shards[0].governor.is_some(), "envelope shards run governors");
+        // drive traffic until at least one 1 ms window closes and the
+        // splitter re-targets
+        for _ in 0..64 {
+            r.infer(vec![1.0, 1.0]).unwrap();
+        }
+        let snap = r.snapshot();
+        let total: f64 = snap.shards.iter().map(|s| s.envelope_share.unwrap()).sum();
+        assert!((total - 8.0).abs() < 1e-9, "shares must keep summing to the envelope");
+        assert!(
+            snap.shards.iter().any(|s| s.demand_rate.unwrap() > 0.0),
+            "demand must have been observed"
+        );
+        r.shutdown();
+    }
+
+    #[test]
+    fn builder_rejects_zero_shards() {
+        assert!(ShardRouter::builder().build(0, mock_shard).is_err());
+    }
+}

@@ -1,0 +1,279 @@
+//! JSON wire schema of the network edge.
+//!
+//! Maps the HTTP surface 1:1 onto the in-process serving API: a
+//! `POST /v1/infer` body becomes an [`InferRequest`] (same fields,
+//! same defaults), a [`Response`] becomes the reply object, and every
+//! [`ServeError`] variant has a fixed HTTP status ([`status_of`]) and
+//! a stable machine-readable `kind` ([`error_kind`]) so clients can
+//! branch without parsing prose.
+//!
+//! The request schema is *strict*: unknown top-level keys are a 400,
+//! not silently ignored — a client that misspells `max_gflips` should
+//! learn about it from the first response, not from an energy bill.
+//!
+//! ```json
+//! {
+//!   "input": [0.0, 1.0, ...],      // required, flattened f32 sample
+//!   "model": "cnn-s",              // optional, fleet routing
+//!   "deadline_ms": 50,             // optional, start-by deadline
+//!   "max_gflips": 0.5,             // optional, per-request energy cap
+//!   "priority": "hi",              // optional: hi | normal | best-effort
+//!   "pin": "b2",                   // optional, pin an operating point
+//!   "tag": "trace-17",             // optional, echoed back
+//!   "affinity": "user-42"         // optional, shard stickiness key
+//! }
+//! ```
+
+use std::time::Duration;
+
+use super::http::HttpError;
+use crate::coordinator::{InferRequest, Priority, Response, ServeError};
+use crate::util::Json;
+
+/// HTTP status for a [`ServeError`]. Client-side mistakes (bad input,
+/// unknown names) map to 4xx, capacity and lifecycle to 503/408, and
+/// server-side configuration or engine failures to 500.
+pub fn status_of(e: &ServeError) -> u16 {
+    match e {
+        ServeError::QueueFull { .. } | ServeError::ServerStopped => 503,
+        ServeError::DeadlineExceeded => 408,
+        ServeError::BadInput { .. } | ServeError::BadBudget | ServeError::ModelRequired => 400,
+        ServeError::UnknownPoint(_) | ServeError::UnknownModel(_) => 404,
+        ServeError::Engine(_) | ServeError::BadMenu(_) => 500,
+    }
+}
+
+/// Stable machine-readable kind label for a [`ServeError`].
+pub fn error_kind(e: &ServeError) -> &'static str {
+    match e {
+        ServeError::QueueFull { .. } => "queue_full",
+        ServeError::DeadlineExceeded => "deadline_exceeded",
+        ServeError::BadInput { .. } => "bad_input",
+        ServeError::UnknownPoint(_) => "unknown_point",
+        ServeError::ServerStopped => "server_stopped",
+        ServeError::Engine(_) => "engine",
+        ServeError::BadMenu(_) => "bad_menu",
+        ServeError::BadBudget => "bad_budget",
+        ServeError::UnknownModel(_) => "unknown_model",
+        ServeError::ModelRequired => "model_required",
+    }
+}
+
+/// JSON error body for a [`ServeError`]:
+/// `{"error": {"kind": ..., "status": ..., "message": ...}}`.
+pub fn serve_error_body(e: &ServeError) -> Json {
+    error_body(status_of(e), error_kind(e), &e.to_string())
+}
+
+/// JSON error body for a framing/schema failure ([`HttpError`]).
+pub fn http_error_body(e: &HttpError) -> Json {
+    let kind = match e.status {
+        400 => "bad_request",
+        404 => "not_found",
+        405 => "method_not_allowed",
+        408 => "timeout",
+        413 => "payload_too_large",
+        501 => "not_implemented",
+        503 => "overloaded",
+        _ => "error",
+    };
+    error_body(e.status, kind, &e.msg)
+}
+
+fn error_body(status: u16, kind: &str, message: &str) -> Json {
+    Json::obj(vec![(
+        "error",
+        Json::obj(vec![
+            ("kind", Json::from(kind)),
+            ("status", Json::from(status as usize)),
+            ("message", Json::from(message)),
+        ]),
+    )])
+}
+
+fn field_err(key: &str, want: &str) -> HttpError {
+    HttpError::new(400, format!("field '{key}' must be {want}"))
+}
+
+/// Parse a strict `POST /v1/infer` body into an [`InferRequest`].
+/// Unknown top-level keys, wrong types and non-finite/negative
+/// `deadline_ms` are all 400s; `max_gflips` passes through verbatim
+/// (the server's own `BadBudget` check covers NaN).
+pub fn parse_infer(body: &str) -> Result<InferRequest, HttpError> {
+    let doc = Json::parse(body).map_err(|e| HttpError::new(400, e.to_string()))?;
+    let obj = doc
+        .as_obj()
+        .ok_or_else(|| HttpError::new(400, "request body must be a JSON object"))?;
+    const KNOWN: [&str; 8] =
+        ["input", "model", "deadline_ms", "max_gflips", "priority", "pin", "tag", "affinity"];
+    if let Some(k) = obj.keys().find(|k| !KNOWN.contains(&k.as_str())) {
+        return Err(HttpError::new(400, format!("unknown field '{k}'")));
+    }
+    let input = obj
+        .get("input")
+        .ok_or_else(|| HttpError::new(400, "missing required field 'input'"))?
+        .as_arr()
+        .ok_or_else(|| field_err("input", "an array of numbers"))?
+        .iter()
+        .map(|v| v.as_f64().map(|n| n as f32))
+        .collect::<Option<Vec<f32>>>()
+        .ok_or_else(|| field_err("input", "an array of numbers"))?;
+    let mut req = InferRequest::new(input);
+    if let Some(v) = obj.get("model") {
+        req = req.model(v.as_str().ok_or_else(|| field_err("model", "a string"))?);
+    }
+    if let Some(v) = obj.get("deadline_ms") {
+        let ms = v.as_f64().ok_or_else(|| field_err("deadline_ms", "a number"))?;
+        if !ms.is_finite() || ms < 0.0 {
+            return Err(field_err("deadline_ms", "a finite non-negative number"));
+        }
+        req = req.deadline(Duration::from_secs_f64(ms / 1e3));
+    }
+    if let Some(v) = obj.get("max_gflips") {
+        req = req.max_gflips(v.as_f64().ok_or_else(|| field_err("max_gflips", "a number"))?);
+    }
+    if let Some(v) = obj.get("priority") {
+        let p = match v.as_str() {
+            Some("hi") => Priority::Hi,
+            Some("normal") => Priority::Normal,
+            Some("best-effort") => Priority::BestEffort,
+            _ => return Err(field_err("priority", "one of 'hi', 'normal', 'best-effort'")),
+        };
+        req = req.priority(p);
+    }
+    if let Some(v) = obj.get("pin") {
+        req = req.pin_point(v.as_str().ok_or_else(|| field_err("pin", "a string"))?);
+    }
+    if let Some(v) = obj.get("tag") {
+        req = req.tag(v.as_str().ok_or_else(|| field_err("tag", "a string"))?);
+    }
+    if let Some(v) = obj.get("affinity") {
+        req = req.affinity(v.as_str().ok_or_else(|| field_err("affinity", "a string"))?);
+    }
+    Ok(req)
+}
+
+fn opt_str(s: &Option<String>) -> Json {
+    match s {
+        Some(s) => Json::from(s.as_str()),
+        None => Json::Null,
+    }
+}
+
+/// Serialize one served [`Response`], stamped with the shard that
+/// executed it.
+pub fn response_json(shard: usize, r: &Response) -> Json {
+    Json::obj(vec![
+        ("output", Json::nums(r.output.iter().map(|&x| x as f64))),
+        ("model", opt_str(&r.model)),
+        ("point", Json::from(r.point.as_str())),
+        ("latency_us", Json::from(r.latency.as_micros() as f64)),
+        ("giga_flips", Json::from(r.giga_flips)),
+        (
+            "measured_gflips",
+            match r.measured_gflips {
+                Some(g) => Json::from(g),
+                None => Json::Null,
+            },
+        ),
+        ("tag", opt_str(&r.tag)),
+        ("shard", Json::from(shard)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serve_errors_map_to_expected_statuses() {
+        let cases = [
+            (ServeError::QueueFull { depth: 8 }, 503, "queue_full"),
+            (ServeError::DeadlineExceeded, 408, "deadline_exceeded"),
+            (ServeError::BadInput { expected: 4, got: 2 }, 400, "bad_input"),
+            (ServeError::UnknownPoint("x".into()), 404, "unknown_point"),
+            (ServeError::ServerStopped, 503, "server_stopped"),
+            (ServeError::Engine("boom".into()), 500, "engine"),
+            (ServeError::BadMenu("empty".into()), 500, "bad_menu"),
+            (ServeError::BadBudget, 400, "bad_budget"),
+            (ServeError::UnknownModel("ghost".into()), 404, "unknown_model"),
+            (ServeError::ModelRequired, 400, "model_required"),
+        ];
+        for (e, status, kind) in cases {
+            assert_eq!(status_of(&e), status, "{e}");
+            assert_eq!(error_kind(&e), kind, "{e}");
+            let body = serve_error_body(&e);
+            let err = body.get("error").unwrap();
+            assert_eq!(err.get("status").unwrap().as_usize(), Some(status as usize));
+            assert_eq!(err.get("kind").unwrap().as_str(), Some(kind));
+        }
+    }
+
+    #[test]
+    fn parse_full_request() {
+        let r = parse_infer(
+            r#"{"input": [1, 2.5], "model": "cnn-s", "deadline_ms": 50,
+                "max_gflips": 0.5, "priority": "hi", "pin": "b2",
+                "tag": "t1", "affinity": "user-42"}"#,
+        )
+        .unwrap();
+        assert_eq!(r.input, vec![1.0f32, 2.5]);
+        assert_eq!(r.model.as_deref(), Some("cnn-s"));
+        assert_eq!(r.deadline, Some(Duration::from_millis(50)));
+        assert_eq!(r.max_gflips, Some(0.5));
+        assert_eq!(r.priority, Priority::Hi);
+        assert_eq!(r.pin.as_deref(), Some("b2"));
+        assert_eq!(r.tag.as_deref(), Some("t1"));
+        assert_eq!(r.affinity.as_deref(), Some("user-42"));
+    }
+
+    #[test]
+    fn parse_minimal_request_defaults() {
+        let r = parse_infer(r#"{"input": []}"#).unwrap();
+        assert!(r.input.is_empty());
+        assert!(r.model.is_none() && r.deadline.is_none() && r.max_gflips.is_none());
+        assert_eq!(r.priority, Priority::Normal);
+    }
+
+    #[test]
+    fn parse_rejects_bad_bodies_with_400() {
+        for body in [
+            "not json at all",
+            "[1, 2]",                                   // not an object
+            "{}",                                       // missing input
+            r#"{"input": "nope"}"#,                     // wrong input type
+            r#"{"input": [1, "x"]}"#,                   // non-numeric element
+            r#"{"input": [], "max_gflipz": 1}"#,        // misspelled key
+            r#"{"input": [], "priority": "urgent"}"#,   // unknown class
+            r#"{"input": [], "deadline_ms": -5}"#,      // negative deadline
+            r#"{"input": [], "deadline_ms": "soon"}"#,  // wrong deadline type
+            r#"{"input": [], "pin": 3}"#,               // wrong pin type
+        ] {
+            let e = parse_infer(body).unwrap_err();
+            assert_eq!(e.status, 400, "{body} -> {e}");
+        }
+    }
+
+    #[test]
+    fn response_round_trips_through_json() {
+        let resp = Response {
+            output: vec![1.5, -2.0],
+            model: Some("cnn-s".into()),
+            point: "b2".into(),
+            latency: Duration::from_micros(730),
+            giga_flips: 0.25,
+            measured_gflips: None,
+            tag: Some("t1".into()),
+        };
+        let j = response_json(1, &resp);
+        let j = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(j.get("point").unwrap().as_str(), Some("b2"));
+        assert_eq!(j.get("model").unwrap().as_str(), Some("cnn-s"));
+        assert_eq!(j.get("latency_us").unwrap().as_f64(), Some(730.0));
+        assert_eq!(j.get("shard").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("measured_gflips"), Some(&Json::Null));
+        let out = j.get("output").unwrap().as_arr().unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].as_f64(), Some(1.5));
+    }
+}

@@ -849,3 +849,152 @@ fn governed_real_menu_serves_with_measured_energy() {
     );
     srv.shutdown();
 }
+
+#[test]
+fn net_edge_serves_the_frontier_over_loopback() {
+    // The network-edge acceptance: the same frontier that answers
+    // in-process QoS (see `qos_per_request_caps_and_deadline_on_one_
+    // server`) must answer it over a socket — two concurrent HTTP
+    // clients with different `max_gflips` caps are served by different
+    // operating points from a 2-shard edge, wire-level failures map to
+    // their HTTP statuses, and /metrics exposes per-shard residency.
+    use pann::coordinator::{PlanEngine, Server, ServerBuilder, SharedPoint};
+    use pann::net::{NetConfig, NetServer, ShardRouter};
+    use pann::util::Json;
+    use std::io::{Read, Write};
+    use std::net::{SocketAddr, TcpStream};
+    use std::sync::Arc;
+
+    /// One raw HTTP/1.1 exchange (Connection: close) -> (status, body).
+    fn call(addr: SocketAddr, raw: &str) -> (u16, String) {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(raw.as_bytes()).unwrap();
+        let mut buf = String::new();
+        s.read_to_string(&mut buf).unwrap();
+        let status: u16 = buf.split_whitespace().nth(1).expect("status line").parse().unwrap();
+        let body = buf.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
+        (status, body)
+    }
+    fn post_infer(addr: SocketAddr, json: &str) -> (u16, String) {
+        call(
+            addr,
+            &format!(
+                "POST /v1/infer HTTP/1.1\r\nConnection: close\r\nContent-Length: {}\r\n\r\n{}",
+                json.len(),
+                json
+            ),
+        )
+    }
+
+    let mut model = Model::reference_cnn(21);
+    let ds = Dataset::from_synth(pann::data::synth::digits(32, 22));
+    let stats = batch_tensor(&ds, 0, 16);
+    model.record_act_stats(&stats).unwrap();
+    // two frontier points; engines compiled once, plans Arc-shared
+    // into per-shard SharedPoint vectors (SharedPoint itself is not
+    // Clone — each shard gets its own)
+    let mut compiled = Vec::new();
+    for (bits, bx, r) in [(2u32, 6u32, 10.0 / 6.0 - 0.5), (8, 8, 7.5)] {
+        let qm = QuantizedModel::prepare(
+            &model,
+            QuantConfig::pann(bx, r, ActQuantMethod::BnStats),
+            None,
+        )
+        .unwrap();
+        let gf = pann::power::model::mac_power_unsigned_total(bits) * model.num_macs() as f64 / 1e9;
+        compiled.push((format!("p{bits}"), gf, qm.plan()));
+    }
+    let (cheap_gf, rich_gf) = (compiled[0].1, compiled[1].1);
+    let router = ShardRouter::builder()
+        .build(2, |_, _| -> anyhow::Result<Server> {
+            let points = compiled
+                .iter()
+                .map(|(name, gf, plan)| SharedPoint {
+                    name: name.clone(),
+                    giga_flips_per_sample: *gf,
+                    engine: Arc::new(PlanEngine::new(plan.clone(), 8)),
+                })
+                .collect();
+            Ok(ServerBuilder::new()
+                .workers(1)
+                .max_batch(8)
+                .queue_depth(64)
+                .budget_gflips(f64::INFINITY)
+                .serve(pann::coordinator::Menu::shared(points))?)
+        })
+        .unwrap();
+    let srv = NetServer::bind(
+        "127.0.0.1:0",
+        router,
+        NetConfig { handler_threads: 3, ..NetConfig::default() },
+    )
+    .unwrap();
+    let addr = srv.local_addr();
+
+    // two concurrent clients at different energy caps: different
+    // operating points over the same socket
+    fn body_json(sample: &[f32], cap: f64) -> String {
+        let nums: Vec<String> = sample.iter().map(|x| format!("{x}")).collect();
+        format!(r#"{{"input": [{}], "max_gflips": {cap}}}"#, nums.join(","))
+    }
+    let (tight, rich) = std::thread::scope(|s| {
+        let jt = s.spawn(|| post_infer(addr, &body_json(ds.sample(0), cheap_gf * 1.01)));
+        let jr = s.spawn(|| post_infer(addr, &body_json(ds.sample(1), rich_gf * 1.01)));
+        (jt.join().unwrap(), jr.join().unwrap())
+    });
+    assert_eq!(tight.0, 200, "{}", tight.1);
+    assert_eq!(rich.0, 200, "{}", rich.1);
+    let tight = Json::parse(&tight.1).unwrap();
+    let rich = Json::parse(&rich.1).unwrap();
+    assert_eq!(tight.get("point").unwrap().as_str(), Some("p2"), "capped -> cheap point");
+    assert_eq!(rich.get("point").unwrap().as_str(), Some("p8"), "generous -> rich point");
+    assert!(
+        tight.get("giga_flips").unwrap().as_f64().unwrap()
+            < rich.get("giga_flips").unwrap().as_f64().unwrap()
+    );
+
+    // wire-level failure mapping
+    let (status, _) = post_infer(addr, "{definitely not json");
+    assert_eq!(status, 400);
+    let (status, body) = post_infer(addr, &body_json(ds.sample(2), 1e9).replace(
+        "\"max_gflips\"",
+        "\"pin\": \"ghost\", \"max_gflips\"",
+    ));
+    assert_eq!(status, 404, "{body}");
+    assert!(body.contains("unknown_point"), "{body}");
+    let expired: Vec<String> = ds.sample(3).iter().map(|x| format!("{x}")).collect();
+    let (status, body) = post_infer(
+        addr,
+        &format!(r#"{{"input": [{}], "deadline_ms": 0}}"#, expired.join(",")),
+    );
+    assert_eq!(status, 408, "{body}");
+    assert!(body.contains("deadline_exceeded"), "{body}");
+
+    // shard residency is visible on /metrics
+    let (status, metrics) = call(addr, "GET /metrics HTTP/1.1\r\nConnection: close\r\n\r\n");
+    assert_eq!(status, 200);
+    for line in [
+        "pann_http_requests_total",
+        "pann_shard_requests_total{shard=\"0\"}",
+        "pann_shard_requests_total{shard=\"1\"}",
+        "pann_shard_shed_total{shard=\"0\"}",
+    ] {
+        assert!(metrics.contains(line), "missing {line} in:\n{metrics}");
+    }
+    // both 200-served requests landed somewhere
+    let served: u64 = metrics
+        .lines()
+        .filter(|l| l.starts_with("pann_shard_requests_total"))
+        .map(|l| l.split_whitespace().last().unwrap().parse::<u64>().unwrap())
+        .sum();
+    assert!(served >= 2, "at least the two 200s must be admitted, metrics:\n{metrics}");
+
+    // the model surface answers over the wire too
+    let (status, body) = call(addr, "GET /v1/models HTTP/1.1\r\nConnection: close\r\n\r\n");
+    assert_eq!(status, 200);
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.get("shards").unwrap().as_usize(), Some(2));
+    assert_eq!(j.get("sample_len").unwrap().as_usize(), Some(ds.sample(0).len()));
+
+    srv.shutdown();
+}
