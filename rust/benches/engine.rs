@@ -9,6 +9,10 @@
 //! without parsing stdout. See EXPERIMENTS.md §SIMD for the
 //! measurement protocol and field glossary.
 
+// The panic ban in clippy.toml targets the serving layer
+// (coordinator/, net/); CLI/test/bench crates may assert freely.
+#![allow(clippy::disallowed_methods, clippy::disallowed_macros)]
+
 use pann::data::{synth, Dataset};
 use pann::nn::eval::{batch_tensor, n_threads};
 use pann::nn::gemm::{self, SimdLevel};

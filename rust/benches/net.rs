@@ -9,6 +9,10 @@
 //! loopback latency, shed totals and rate, then one record per shard
 //! with admitted/shed/retried counts and the shard's envelope share.
 
+// The panic ban in clippy.toml targets the serving layer
+// (coordinator/, net/); CLI/test/bench crates may assert freely.
+#![allow(clippy::disallowed_methods, clippy::disallowed_macros)]
+
 use pann::coordinator::{Menu, ServerBuilder};
 use pann::data::{synth, Dataset};
 use pann::net::{NetConfig, NetServer, ShardRouter};

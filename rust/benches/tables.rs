@@ -4,6 +4,10 @@
 //! the fast variant. Output lines mirror the paper's rows (see
 //! EXPERIMENTS.md for the paper-vs-measured comparison).
 
+// The panic ban in clippy.toml targets the serving layer
+// (coordinator/, net/); CLI/test/bench crates may assert freely.
+#![allow(clippy::disallowed_methods, clippy::disallowed_macros)]
+
 use pann::experiments::{self, Ctx};
 
 fn main() {

@@ -1,0 +1,178 @@
+//! Per-layer overflow-soundness certificates.
+//!
+//! A [`KernelCert`] is the prover's verdict for one quantized GEMM
+//! reduction: given the layer's activation-code interval, weight-code
+//! interval (the effective per-element multiplier range, i.e. `p − n`
+//! for split banks), reduction depth and bank layout, it states —
+//! by exact i128 interval arithmetic — which accumulator widths are
+//! provably safe:
+//!
+//! - **i64 (wide)**: the true dot product, and for split banks each
+//!   partial bank sum and their difference, fit i64 without wrapping.
+//! - **i32 (narrow)**: the true dot product fits i32. Wrapping-i32
+//!   arithmetic is a commutative ring, so *intermediate* wraps are
+//!   harmless — the final wrapped value equals the true sum exactly
+//!   when the true sum is representable. The same argument covers the
+//!   split-narrow fold (`p.wrapping_sub(n)` reproduces the code
+//!   exactly because codes are certified to fit i32 first).
+//! - **packed i16**: the narrow verdict *and* both operand streams fit
+//!   i16 lanes (`pmaddwd` / NEON `smlal` pairwise sums also stay in
+//!   the wrapping-i32 ring, including the `(−32768)²·2` edge, which
+//!   wraps to `i32::MIN` identically on both scalar and SIMD paths).
+//!
+//! The plan compiler consumes certificates for kernel selection
+//! (replacing the former `2^30` heuristic) and `pann-cli verify`
+//! re-derives them offline to audit artifacts without running
+//! inference.
+
+use super::interval::Interval;
+
+/// Prover verdict for one layer's GEMM reduction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KernelCert {
+    /// Activation-code interval (quantized input codes).
+    pub act: Interval,
+    /// Effective weight-code interval (per-element multiplier; for
+    /// split banks this is the `p − n` range, i.e. the original code).
+    pub weight: Interval,
+    /// Reduction depth: number of multiply–accumulates per output.
+    pub depth: u64,
+    /// Whether the weights are stored as split W⁺/W⁻ banks.
+    pub split: bool,
+    /// True accumulator interval: `(act ⊗ weight) · depth`.
+    pub acc: Interval,
+    /// Split-bank positive partial-sum interval (`[0,0]` when unified).
+    pub pos_acc: Interval,
+    /// Split-bank negative partial-sum interval (`[0,0]` when unified).
+    pub neg_acc: Interval,
+    /// i64 accumulation is provably exact (wide kernels).
+    pub i64_ok: bool,
+    /// Wrapping-i32 accumulation provably reproduces the true sum
+    /// (narrow kernels).
+    pub i32_ok: bool,
+    /// The packed-i16 lane format is provably exact (narrow verdict
+    /// plus both operand streams fit i16).
+    pub packed_i16_ok: bool,
+}
+
+impl KernelCert {
+    /// Prove bounds for one reduction.
+    ///
+    /// `act` and `weight` are the per-element operand intervals,
+    /// `depth` the reduction length, `split` whether the weight bank
+    /// is stored as W⁺/W⁻ halves (which adds the partial-sum
+    /// obligations on the wide path).
+    pub fn certify(act: Interval, weight: Interval, depth: u64, split: bool) -> KernelCert {
+        let acc = act.mul(weight).sum_n(depth);
+        let (pos_acc, neg_acc, i64_ok) = if split {
+            // The split banks are p = max(code, 0) and n = max(−code, 0);
+            // each bank's partial sum must independently fit i64 (the
+            // wide split kernel folds a·p and a·n terms in i64 lanes),
+            // and so must their difference hull.
+            let pos = Interval::new(0, weight.hi.max(0));
+            let neg = Interval::new(0, (-weight.lo).max(0));
+            let pos_acc = act.mul(pos).sum_n(depth);
+            let neg_acc = act.mul(neg).sum_n(depth);
+            let ok = pos_acc.fits_i64()
+                && neg_acc.fits_i64()
+                && pos_acc.sub(neg_acc).fits_i64();
+            (pos_acc, neg_acc, ok)
+        } else {
+            (Interval::point(0), Interval::point(0), acc.fits_i64())
+        };
+        // Narrow validity additionally requires the operand codes to be
+        // representable in the i32 operand slabs at all; the compiler
+        // rejects plans where they aren't before certifying, but the
+        // certificate re-checks so an offline audit can't be fooled.
+        let i32_ok = acc.fits_i32() && act.fits_i32() && weight.fits_i32();
+        let packed_i16_ok = i32_ok && act.fits_i16() && weight.fits_i16();
+        KernelCert {
+            act,
+            weight,
+            depth,
+            split,
+            acc,
+            pos_acc,
+            neg_acc,
+            i64_ok,
+            i32_ok,
+            packed_i16_ok,
+        }
+    }
+
+    /// Does the certificate admit the narrow (wrapping-i32) path?
+    pub fn admits_narrow(&self) -> bool {
+        self.i32_ok
+    }
+
+    /// Does the certificate admit the packed-i16 lane format?
+    pub fn admits_packed(&self) -> bool {
+        self.packed_i16_ok
+    }
+
+    /// Does the certificate prove the wide (i64) path exact?
+    pub fn admits_wide(&self) -> bool {
+        self.i64_ok
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tight_fit_admits_narrow_exactly_at_the_boundary() {
+        // act ∈ [0, 3], code ∈ [0, 715827882], depth 1:
+        // max = 3·715827882 = 2147483646 = i32::MAX − 1 → fits.
+        let c = KernelCert::certify(
+            Interval::new(0, 3),
+            Interval::new(0, 715_827_882),
+            1,
+            false,
+        );
+        assert!(c.i32_ok && c.i64_ok);
+        // one more on the code range pushes max to i32::MAX + 2 → wraps
+        let c = KernelCert::certify(
+            Interval::new(0, 3),
+            Interval::new(0, 715_827_883),
+            1,
+            false,
+        );
+        assert!(!c.i32_ok);
+        assert!(c.i64_ok);
+    }
+
+    #[test]
+    fn negative_extremum_also_blocks_narrow() {
+        // act ∈ [0, 2^16], code ∈ [−2^15, 0], depth 2:
+        // min = 2·(−2^31) = −2^32 < i32::MIN
+        let c = KernelCert::certify(
+            Interval::new(0, 1 << 16),
+            Interval::new(-(1 << 15), 0),
+            2,
+            false,
+        );
+        assert!(!c.i32_ok);
+        assert!(c.i64_ok);
+    }
+
+    #[test]
+    fn split_partial_sums_are_checked_independently() {
+        // codes ∈ [−K, K] with K·act·depth each fitting i64 but the
+        // bank partial sums are what the wide-split obligation bounds
+        let k = 1i128 << 30;
+        let c = KernelCert::certify(Interval::new(0, 1 << 20), Interval::new(-k, k), 1 << 12, true);
+        // pos partial: 2^20 · 2^30 · 2^12 = 2^62 fits i64; diff hull 2^63 doesn't
+        assert!(c.pos_acc.fits_i64() && c.neg_acc.fits_i64());
+        assert!(!c.i64_ok, "difference hull must be part of the obligation");
+    }
+
+    #[test]
+    fn packed_requires_i16_operands() {
+        let c = KernelCert::certify(Interval::new(0, 40_000), Interval::new(-3, 3), 8, false);
+        assert!(c.i32_ok, "sum fits i32");
+        assert!(!c.packed_i16_ok, "act codes exceed i16 lanes");
+        let c = KernelCert::certify(Interval::new(0, 255), Interval::new(-3, 3), 8, false);
+        assert!(c.packed_i16_ok);
+    }
+}

@@ -1,0 +1,142 @@
+//! Exact integer interval arithmetic in i128.
+//!
+//! The prover's only numeric primitive: closed integer intervals
+//! `[lo, hi]` with corner-product multiplication and n-fold sum
+//! scaling. All operations use saturating i128 arithmetic — the
+//! quantities being bounded (|act| ≤ 2^31, |code| ≤ 2^31, depth ≤
+//! 2^32) keep true extrema far below the i128 saturation points, and
+//! even if a pathological synthetic config saturated, saturation only
+//! pushes corners *outward*, so the `fits_*` verdicts stay sound
+//! (a saturated bound can only turn a true "fits" into "doesn't fit",
+//! never the reverse).
+
+/// A closed integer interval `[lo, hi]` over i128.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Interval {
+    /// Inclusive lower bound.
+    pub lo: i128,
+    /// Inclusive upper bound.
+    pub hi: i128,
+}
+
+impl Interval {
+    /// A new interval. Panics if `lo > hi` (a programming error in the
+    /// caller, never data-dependent).
+    pub fn new(lo: i128, hi: i128) -> Self {
+        assert!(lo <= hi, "interval bounds inverted: [{lo}, {hi}]");
+        Interval { lo, hi }
+    }
+
+    /// The degenerate single-point interval `[v, v]`.
+    pub fn point(v: i128) -> Self {
+        Interval { lo: v, hi: v }
+    }
+
+    /// Exact product interval: the hull of the four corner products.
+    ///
+    /// For integer intervals this is exact (the extrema of `x·y` over
+    /// a box are attained at corners), not merely an over-approximation.
+    pub fn mul(self, other: Interval) -> Interval {
+        let c = [
+            self.lo.saturating_mul(other.lo),
+            self.lo.saturating_mul(other.hi),
+            self.hi.saturating_mul(other.lo),
+            self.hi.saturating_mul(other.hi),
+        ];
+        Interval {
+            lo: *c.iter().min().expect("nonempty"),
+            hi: *c.iter().max().expect("nonempty"),
+        }
+    }
+
+    /// The interval containing every sum of exactly `n` values drawn
+    /// from `self`: `[n·lo, n·hi]`.
+    ///
+    /// This is the accumulator hull for a reduction of depth `n` whose
+    /// per-element products all lie in `self`. Partial sums of `k ≤ n`
+    /// elements lie in `[k·lo, k·hi] ⊆ [min(n·lo, 0), max(n·hi, 0)]`,
+    /// and `0` always fits every machine width, so a `fits_*` verdict
+    /// on this interval also covers every intermediate partial sum.
+    pub fn sum_n(self, n: u64) -> Interval {
+        let n = n as i128;
+        Interval {
+            lo: self.lo.saturating_mul(n),
+            hi: self.hi.saturating_mul(n),
+        }
+    }
+
+    /// Difference interval `self − other` (hull over both operands).
+    pub fn sub(self, other: Interval) -> Interval {
+        Interval {
+            lo: self.lo.saturating_sub(other.hi),
+            hi: self.hi.saturating_sub(other.lo),
+        }
+    }
+
+    /// Does every value in the interval fit in i16?
+    pub fn fits_i16(self) -> bool {
+        self.lo >= i16::MIN as i128 && self.hi <= i16::MAX as i128
+    }
+
+    /// Does every value in the interval fit in i32?
+    pub fn fits_i32(self) -> bool {
+        self.lo >= i32::MIN as i128 && self.hi <= i32::MAX as i128
+    }
+
+    /// Does every value in the interval fit in i64?
+    pub fn fits_i64(self) -> bool {
+        self.lo >= i64::MIN as i128 && self.hi <= i64::MAX as i128
+    }
+
+    /// Is `v` inside the interval?
+    pub fn contains(self, v: i128) -> bool {
+        self.lo <= v && v <= self.hi
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corner_products_are_exact() {
+        // mixed-sign × mixed-sign: extrema at corners
+        let a = Interval::new(-3, 5);
+        let b = Interval::new(-7, 2);
+        let p = a.mul(b);
+        let mut lo = i128::MAX;
+        let mut hi = i128::MIN;
+        for x in -3..=5i128 {
+            for y in -7..=2i128 {
+                lo = lo.min(x * y);
+                hi = hi.max(x * y);
+            }
+        }
+        assert_eq!((p.lo, p.hi), (lo, hi));
+    }
+
+    #[test]
+    fn sum_n_scales_both_ends() {
+        let p = Interval::new(-4, 9);
+        let s = p.sum_n(10);
+        assert_eq!((s.lo, s.hi), (-40, 90));
+    }
+
+    #[test]
+    fn fits_checks_are_inclusive() {
+        assert!(Interval::new(i32::MIN as i128, i32::MAX as i128).fits_i32());
+        assert!(!Interval::new(i32::MIN as i128 - 1, 0).fits_i32());
+        assert!(!Interval::new(0, i32::MAX as i128 + 1).fits_i32());
+        assert!(Interval::point(i16::MAX as i128).fits_i16());
+        assert!(!Interval::point(i16::MAX as i128 + 1).fits_i16());
+    }
+
+    #[test]
+    fn saturation_never_understates() {
+        // a deliberately saturating product still fails every fits check
+        let huge = Interval::new(0, i128::MAX);
+        let p = huge.mul(huge);
+        assert_eq!(p.hi, i128::MAX);
+        assert!(!p.fits_i64());
+    }
+}

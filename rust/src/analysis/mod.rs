@@ -1,0 +1,32 @@
+//! Static soundness analysis: the overflow-bound prover.
+//!
+//! PANN's energy savings come from running reductions at the narrowest
+//! accumulator width that is still *exact* — and "exact" has to be a
+//! theorem, not a heuristic. This module is the theorem: exact i128
+//! interval arithmetic over a layer's quantized operand ranges
+//! ([`interval::Interval`]) producing a per-layer soundness
+//! certificate ([`cert::KernelCert`]) that states which accumulator
+//! widths (i64 wide, wrapping-i32 narrow, packed-i16 lanes) provably
+//! cannot produce a wrong answer.
+//!
+//! Two consumers:
+//!
+//! - the plan compiler ([`crate::nn::ExecutionPlan`]) certifies every
+//!   layer at compile time and selects kernels from the certificate —
+//!   a layer only runs narrow/packed arithmetic when the certificate
+//!   admits it, and compilation *fails* if even i64 accumulation
+//!   cannot be proven safe;
+//! - `pann-cli verify --menu` re-derives certificates offline to audit
+//!   a serialized menu artifact without running inference (see
+//!   `EXPERIMENTS.md` §Verify for the exit-code contract).
+//!
+//! The concurrency half of the soundness story (loom models, TSan,
+//! Miri) lives in `tests/loom.rs` and CI; `ARCHITECTURE.md`'s
+//! "Soundness & verification matrix" maps every invariant to the tool
+//! that checks it.
+
+pub mod cert;
+pub mod interval;
+
+pub use cert::KernelCert;
+pub use interval::Interval;

@@ -27,7 +27,14 @@
 //! [`EnergyEnvelope`]: super::governor::EnergyEnvelope
 //! [`Governor`]: super::governor::Governor
 
-use std::sync::Mutex;
+// Request-handling surface: panics are banned (see clippy.toml). The
+// splitter's mutex recovers from poisoning via `into_inner` — the
+// state is a demand ledger whose worst torn update miscounts one
+// window, while losing arbitration would freeze every claimant's
+// envelope share.
+#![deny(clippy::disallowed_methods, clippy::disallowed_macros)]
+
+use std::sync::{Mutex, PoisonError};
 use std::time::{Duration, Instant};
 
 /// Demand headroom multiplier: a claimant's envelope "need" is
@@ -216,7 +223,7 @@ impl EnvelopeSplitter {
         samples: u64,
         unit_cost: impl Fn(usize) -> f64,
     ) -> Option<Vec<f64>> {
-        let mut s = self.state.lock().expect("envelope splitter poisoned");
+        let mut s = self.state.lock().unwrap_or_else(PoisonError::into_inner);
         s.counts[claimant] += samples;
         let elapsed = now.checked_duration_since(s.window_start)?;
         if elapsed < self.window {
@@ -247,12 +254,13 @@ impl EnvelopeSplitter {
 
     /// Current demand estimates and shares.
     pub fn snapshot(&self) -> SplitterSnapshot {
-        let s = self.state.lock().expect("envelope splitter poisoned");
+        let s = self.state.lock().unwrap_or_else(PoisonError::into_inner);
         SplitterSnapshot { demand_rate: s.demand_rate.clone(), shares: s.shares.clone() }
     }
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods, clippy::disallowed_macros)]
 mod tests {
     use super::*;
     use crate::util::Rng;
@@ -399,6 +407,23 @@ mod tests {
         let shares = sp.observe(t0 + w * 2, 0, 0, |_| 1.0).expect("second boundary");
         assert!((sum(&shares) - 10.0).abs() < 1e-9);
         assert!((sp.snapshot().demand_rate[0] - 5_000.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn poisoned_splitter_keeps_arbitrating() {
+        let t0 = Instant::now();
+        let w = Duration::from_millis(10);
+        let sp = EnvelopeSplitter::new(10.0, w, 2, t0);
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _s = sp.state.lock().unwrap();
+            panic!("poison the splitter");
+        }));
+        assert!(sp.state.lock().is_err(), "splitter mutex must be poisoned");
+        // observation and snapshot recover the guard and still re-split
+        assert!(sp.observe(t0 + w / 2, 0, 100, |_| 1.0).is_none());
+        let shares = sp.observe(t0 + w, 0, 0, |_| 1.0).expect("boundary re-split");
+        assert!((sum(&shares) - 10.0).abs() < 1e-9);
+        assert!(sp.snapshot().demand_rate[0] > 0.0);
     }
 
     #[test]

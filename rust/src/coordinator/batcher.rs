@@ -31,6 +31,13 @@
 //! [`ServeError::DeadlineExceeded`]: super::request::ServeError::DeadlineExceeded
 //! [`Ticket`]: super::request::Ticket
 
+// Request-handling surface: panics are banned (see clippy.toml); fail
+// with a typed `ServeError` instead. Lock poisoning (a worker panicked
+// while holding the queue) is handled explicitly: `push` answers with
+// `ServeError::Internal`, `collect` drains to `None` so the worker
+// exits cleanly, and `stop` recovers the guard to still flip the flag.
+#![deny(clippy::disallowed_methods, clippy::disallowed_macros)]
+
 use super::metrics::Metrics;
 use super::request::{Priority, Response, ServeError, N_PRIORITIES};
 use std::collections::VecDeque;
@@ -118,7 +125,10 @@ impl RequestQueue {
 
     /// Admit one request, or shed it.
     pub(crate) fn push(&self, p: Pending) -> Result<(), ServeError> {
-        let mut s = self.state.lock().expect("queue poisoned");
+        let mut s = self
+            .state
+            .lock()
+            .map_err(|_| ServeError::Internal("request queue poisoned".into()))?;
         if s.stopped {
             return Err(ServeError::ServerStopped);
         }
@@ -136,7 +146,11 @@ impl RequestQueue {
     /// Refuse new requests and wake every waiting worker. Requests
     /// already admitted are still drained before workers exit.
     pub(crate) fn stop(&self) {
-        self.state.lock().expect("queue poisoned").stopped = true;
+        // recover a poisoned guard: stop must always take effect
+        self.state
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .stopped = true;
         self.cv.notify_all();
     }
 
@@ -151,7 +165,8 @@ impl RequestQueue {
         classify: &mut Classify<'_>,
     ) -> Option<(Vec<Pending>, usize)> {
         let max_batch = max_batch.max(1);
-        let mut s = self.state.lock().expect("queue poisoned");
+        // a poisoned queue ends the worker exactly like stop + drained
+        let mut s = self.state.lock().ok()?;
         // Phase 1: block until a leader emerges (or stop + drained).
         let (leader, point) = loop {
             match self.take_leader(&mut s, classify) {
@@ -160,7 +175,7 @@ impl RequestQueue {
                     if s.stopped {
                         return None;
                     }
-                    s = self.cv.wait(s).expect("queue poisoned");
+                    s = self.cv.wait(s).ok()?;
                 }
             }
         };
@@ -195,10 +210,7 @@ impl RequestQueue {
             if now >= until {
                 break;
             }
-            let (guard, _) = self
-                .cv
-                .wait_timeout(s, until - now)
-                .expect("queue poisoned");
+            let (guard, _) = self.cv.wait_timeout(s, until - now).ok()?;
             s = guard;
         }
         Some((batch, point))
@@ -282,6 +294,7 @@ impl RequestQueue {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods, clippy::disallowed_macros)]
 mod tests {
     use super::*;
 
@@ -436,6 +449,37 @@ mod tests {
         let got = q.collect(4, Duration::from_millis(1), &mut any_point);
         assert_eq!(got.unwrap().0.len(), 1);
         assert!(q.collect(4, Duration::from_millis(1), &mut any_point).is_none());
+    }
+
+    /// Panic while holding the queue lock, poisoning it.
+    fn poison(q: &RequestQueue) {
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _g = q.state.lock().unwrap();
+            panic!("poison the queue");
+        }));
+        assert!(q.state.lock().is_err(), "queue mutex must be poisoned");
+    }
+
+    #[test]
+    fn poisoned_queue_pushes_answer_internal_not_panic() {
+        let (q, _m) = queue(8);
+        poison(&q);
+        let (p, _rx) = pending(1.0, Priority::Normal);
+        match q.push(p) {
+            Err(ServeError::Internal(msg)) => assert!(msg.contains("poisoned")),
+            other => panic!("expected Internal, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn poisoned_queue_ends_collect_and_stop_still_flips_flag() {
+        let (q, _m) = queue(8);
+        poison(&q);
+        // the worker exits cleanly instead of propagating the panic
+        assert!(q.collect(4, Duration::from_millis(1), &mut any_point).is_none());
+        // stop recovers the guard and still takes effect
+        q.stop();
+        assert!(q.state.lock().unwrap_or_else(std::sync::PoisonError::into_inner).stopped);
     }
 
     #[test]

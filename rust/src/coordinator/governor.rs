@@ -55,9 +55,17 @@
 //!
 //! [`PowerPolicy`]: super::policy::PowerPolicy
 
+// Request-handling surface: panics are banned (see clippy.toml). The
+// governor's state mutex recovers from poisoning via `into_inner`: the
+// state is a monotone ledger (counters, rolling windows) that stays
+// internally consistent even if a panicking worker abandoned it
+// mid-update, and losing the governor entirely would freeze the served
+// operating point for good.
+#![deny(clippy::disallowed_methods, clippy::disallowed_macros)]
+
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
 
 /// Sustained-energy target the governor defends.
@@ -328,12 +336,19 @@ impl Governor {
             .store(governor.costs[level].to_bits(), Ordering::Relaxed);
         let n = governor.costs.len();
         {
-            let mut s = governor.state.lock().expect("governor poisoned");
+            let mut s = governor.state();
             s.level = level;
             s.win_per_point = vec![(0, 0.0); n];
             s.residency = vec![0; n];
         }
         Ok(governor)
+    }
+
+    /// Lock the governor state, recovering a poisoned guard (see the
+    /// module-top note: the ledger stays consistent, and losing the
+    /// governor would freeze the served point).
+    fn state(&self) -> MutexGuard<'_, GovState> {
+        self.state.lock().unwrap_or_else(PoisonError::into_inner)
     }
 
     /// The frontier level `budget` selects — literally the
@@ -391,7 +406,7 @@ impl Governor {
     /// quiet period), then the observation lands in the now-current
     /// window.
     pub fn observe(&self, now: Instant, point: usize, samples: u64, gflips: f64, metered: bool) {
-        let mut s = self.state.lock().expect("governor poisoned");
+        let mut s = self.state();
         self.close_elapsed_windows(&mut s, now);
         s.win_gflips += gflips;
         s.win_samples += samples;
@@ -412,7 +427,7 @@ impl Governor {
     /// climb mid-batch and step back down on completion — a thrash
     /// loop.
     pub fn batch_started(&self, now: Instant) {
-        let mut s = self.state.lock().expect("governor poisoned");
+        let mut s = self.state();
         s.in_flight_starts.push(now);
     }
 
@@ -422,7 +437,7 @@ impl Governor {
     /// `batch_started`, so the busy anchor tracks the earliest batch
     /// that is *still* running.
     pub fn batch_finished(&self, started: Instant) {
-        let mut s = self.state.lock().expect("governor poisoned");
+        let mut s = self.state();
         if let Some(i) = s.in_flight_starts.iter().position(|&b| b == started) {
             s.in_flight_starts.swap_remove(i);
         }
@@ -431,7 +446,7 @@ impl Governor {
     /// Current view (also closes nothing: decisions stay tied to
     /// observations, so a snapshot never mutates the schedule).
     pub fn snapshot(&self) -> GovernorSnapshot {
-        let s = self.state.lock().expect("governor poisoned");
+        let s = self.state();
         let measured = self
             .names
             .iter()
@@ -613,6 +628,7 @@ impl Governor {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods, clippy::disallowed_macros)]
 mod tests {
     use super::*;
 
@@ -960,6 +976,26 @@ mod tests {
         assert!(g.snapshot().target_gflips_per_window > 0.0);
         g.set_envelope_rate(0.0);
         assert!(g.snapshot().target_gflips_per_window > 0.0);
+    }
+
+    #[test]
+    fn poisoned_state_recovers_instead_of_cascading_panics() {
+        let t0 = Instant::now();
+        let (g, budget) = gov(&[1.0, 4.0], 1.0, 1, t0);
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _s = g.state.lock().unwrap();
+            panic!("poison the governor");
+        }));
+        assert!(g.state.lock().is_err(), "governor mutex must be poisoned");
+        // every entry point recovers the guard and keeps governing:
+        // a breach after the poison still steps the budget down
+        g.batch_started(t0);
+        g.batch_finished(t0);
+        g.observe(t0 + WIN / 2, 1, 1, 9.0, false);
+        g.observe(t0 + WIN * 3 / 2, 1, 1, 9.0, false);
+        let snap = g.snapshot();
+        assert_eq!(snap.level, 0, "governing must continue after poison recovery");
+        assert_eq!(budget_of(&budget), 1.0);
     }
 
     #[test]

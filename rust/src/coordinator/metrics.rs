@@ -21,8 +21,15 @@
 //! counts how often consecutive batches were served by different
 //! operating points (budget traversal and governor activity alike).
 
+// Request-handling surface: panics are banned (see clippy.toml). The
+// metrics mutex recovers from poisoning via `into_inner`: counters are
+// monotone and a torn update at worst miscounts one batch — losing all
+// observability (or cascading the panic into every reporting thread)
+// is strictly worse.
+#![deny(clippy::disallowed_methods, clippy::disallowed_macros)]
+
 use super::request::{Priority, N_PRIORITIES};
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard, PoisonError};
 use std::time::Instant;
 
 /// Latency samples held per distribution (overall + per lane).
@@ -184,6 +191,12 @@ impl Metrics {
         Metrics { inner: Mutex::new(Inner::default()), started: Some(Instant::now()) }
     }
 
+    /// Lock the counters, recovering a poisoned guard (see the
+    /// module-top note).
+    fn guard(&self) -> MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
     /// Record one served batch: per-request `(latency µs, priority)`,
     /// the batch's *modeled* energy, and the energy the engine
     /// actually metered (`None` for meter-less backends).
@@ -207,7 +220,7 @@ impl Metrics {
             Some(m) => format!("{m}:{point}"),
             None => point.to_string(),
         };
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.guard();
         g.batches += 1;
         g.requests += lats.len() as u64;
         g.giga_flips += giga_flips;
@@ -244,34 +257,34 @@ impl Metrics {
 
     /// One request shed at admission (queue full).
     pub fn record_shed(&self) {
-        self.inner.lock().unwrap().shed += 1;
+        self.guard().shed += 1;
     }
 
     /// One request rejected unexecuted because its deadline passed.
     pub fn record_expired(&self) {
-        self.inner.lock().unwrap().expired += 1;
+        self.guard().expired += 1;
     }
 
     /// One request rejected unexecuted for a non-deadline reason
     /// (e.g. an unknown pinned point).
     pub fn record_unservable(&self) {
-        self.inner.lock().unwrap().unservable += 1;
+        self.guard().unservable += 1;
     }
 
     /// One request discarded because its ticket was dropped.
     pub fn record_cancelled(&self) {
-        self.inner.lock().unwrap().cancelled += 1;
+        self.guard().cancelled += 1;
     }
 
     /// One failed engine call (all requests of the batch got
     /// `ServeError::Engine`).
     pub fn record_engine_failure(&self) {
-        self.inner.lock().unwrap().engine_failures += 1;
+        self.guard().engine_failures += 1;
     }
 
     /// Point-in-time snapshot of every counter and distribution.
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let g = self.inner.lock().unwrap();
+        let g = self.guard();
         let elapsed = self.started.map(|t| t.elapsed().as_secs_f64()).unwrap_or(1.0);
         let per_priority = Priority::ALL
             .iter()
@@ -322,7 +335,7 @@ impl Metrics {
     /// [`LATENCY_WINDOW`] no matter how many requests were served.
     #[cfg(test)]
     fn held_latency_samples(&self) -> usize {
-        self.inner.lock().unwrap().latencies_us.buf.len()
+        self.guard().latencies_us.buf.len()
     }
 }
 
@@ -378,6 +391,7 @@ impl MetricsSnapshot {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods, clippy::disallowed_macros)]
 mod tests {
     use super::*;
 
@@ -478,6 +492,23 @@ mod tests {
         m.record_batch(None, "b", &lat, 0.2, None); // a -> b
         m.record_batch(None, "a", &lat, 0.1, None); // b -> a
         assert_eq!(m.snapshot().point_switches, 2);
+    }
+
+    #[test]
+    fn poisoned_metrics_keep_counting() {
+        let m = Metrics::new();
+        m.record_shed();
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _g = m.inner.lock().unwrap();
+            panic!("poison the metrics");
+        }));
+        assert!(m.inner.lock().is_err(), "metrics mutex must be poisoned");
+        // counting and snapshots recover the guard instead of panicking
+        m.record_shed();
+        m.record_batch(None, "p", &[(1.0, Priority::Normal)], 0.1, None);
+        let s = m.snapshot();
+        assert_eq!(s.shed, 2);
+        assert_eq!(s.requests, 1);
     }
 
     #[test]

@@ -17,6 +17,10 @@
 //! envelope) lives in [`super::registry`], which lifts these per-model
 //! selections into one global point index space.
 
+// Request-handling surface: panics are banned (see clippy.toml);
+// fail with a typed `ServeError` instead.
+#![deny(clippy::disallowed_methods, clippy::disallowed_macros)]
+
 use super::request::ServeError;
 use super::server::Engine;
 
@@ -139,6 +143,7 @@ impl<P: Costed> PowerPolicy<P> {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods, clippy::disallowed_macros)]
 mod tests {
     use super::*;
     use crate::coordinator::server::tests_support::MockEngine;

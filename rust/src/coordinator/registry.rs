@@ -39,6 +39,10 @@
 //! [`Menu`]: super::server::Menu
 //! [`ServerBuilder::serve_fleet`]: super::server::ServerBuilder::serve_fleet
 
+// Request-handling surface: panics are banned (see clippy.toml);
+// fail with a typed `ServeError` instead.
+#![deny(clippy::disallowed_methods, clippy::disallowed_macros)]
+
 use super::arbiter::{EnvelopeSplitter, SplitterSnapshot};
 use super::batcher::Pending;
 use super::governor::{EnergyEnvelope, Governor, GovernorConfig, GovernorSnapshot};
@@ -357,6 +361,7 @@ impl FleetSnapshot {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods, clippy::disallowed_macros)]
 mod tests {
     use super::super::server::tests_support::MockEngine;
     use super::*;

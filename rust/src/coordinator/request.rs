@@ -12,6 +12,10 @@
 //! request path (admission, scheduling, execution), replacing the
 //! seed's anyhow strings + dropped-sender `RecvError`s.
 
+// Request-handling surface: panics are banned (see clippy.toml); fail
+// with a typed `ServeError` instead.
+#![deny(clippy::disallowed_methods, clippy::disallowed_macros)]
+
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::Duration;
@@ -50,6 +54,10 @@ pub enum ServeError {
     /// which one to run ([`InferRequest::model`]); with more than one
     /// registered model there is no safe default to route to.
     ModelRequired,
+    /// Serving-internal invariant failure (e.g. a shared lock poisoned
+    /// by a panicking worker). The request was not executed; the server
+    /// may still serve others.
+    Internal(String),
 }
 
 impl std::fmt::Display for ServeError {
@@ -69,6 +77,7 @@ impl std::fmt::Display for ServeError {
             ServeError::ModelRequired => {
                 write!(f, "multi-model server: the request must name a model")
             }
+            ServeError::Internal(msg) => write!(f, "internal serving error: {msg}"),
         }
     }
 }
@@ -302,6 +311,7 @@ impl Drop for Ticket {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods, clippy::disallowed_macros)]
 mod tests {
     use super::*;
 

@@ -22,6 +22,10 @@
 //!
 //! [`InferRequest`]: super::request::InferRequest
 
+// Request-handling surface: panics are banned (see clippy.toml); fail
+// with a typed `ServeError` (or recover poisoned guards) instead.
+#![deny(clippy::disallowed_methods, clippy::disallowed_macros)]
+
 use super::batcher::{Pending, RequestQueue};
 use super::governor::{EnergyEnvelope, Governor, GovernorConfig, GovernorSnapshot};
 use super::metrics::{Metrics, MetricsSnapshot};
@@ -158,15 +162,23 @@ impl BatchEngine for PlanEngine {
         n: usize,
         scratch: &mut Scratch,
     ) -> Result<(Vec<f32>, Option<f64>)> {
+        // a poisoned pool just means a worker panicked holding it; the
+        // pooled meters are reset before use, so recover the guard
         let mut meter = {
-            let mut pool = self.meters.lock().expect("meter pool poisoned");
+            let mut pool = self
+                .meters
+                .lock()
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
             pool.pop().unwrap_or_else(|| self.plan.new_meter())
         };
         meter.reset();
         // borrowed-slice forward: no per-batch input copy
         let out = self.plan.forward_slice(x, n, scratch, &mut meter, 1);
         let measured = meter.giga();
-        self.meters.lock().expect("meter pool poisoned").push(meter);
+        self.meters
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .push(meter);
         Ok((out?.data, Some(measured)))
     }
 }
@@ -1225,6 +1237,7 @@ fn respond_batch<F>(
 
 /// Mock engines for unit tests.
 #[cfg(test)]
+#[allow(clippy::disallowed_methods, clippy::disallowed_macros)]
 pub(crate) mod tests_support {
     use super::*;
     use std::sync::atomic::AtomicUsize;
@@ -1366,9 +1379,39 @@ pub(crate) mod tests_support {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods, clippy::disallowed_macros)]
 mod tests {
     use super::tests_support::{Gate, GateEngine, MockEngine};
     use super::*;
+
+    #[test]
+    fn plan_engine_meter_pool_recovers_from_poison() {
+        use crate::nn::{Model, QuantConfig};
+        use crate::quant::ActQuantMethod;
+        let mut model = Model::reference_cnn(7);
+        let x = crate::nn::Tensor::zeros(vec![2, 1, 16, 16]);
+        model.record_act_stats(&x).unwrap();
+        let plan = Arc::new(
+            ExecutionPlan::compile(
+                &model,
+                QuantConfig::unsigned_baseline(4, ActQuantMethod::BnStats),
+                None,
+            )
+            .unwrap(),
+        );
+        let engine = PlanEngine::new(plan, 4);
+        let mut scratch = Scratch::new();
+        let input = vec![0.0f32; engine.sample_len()];
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _pool = engine.meters.lock().unwrap();
+            panic!("poison the meter pool");
+        }));
+        assert!(engine.meters.lock().is_err(), "meter pool must be poisoned");
+        // inference recovers the pool instead of panicking the worker
+        let (out, measured) = engine.infer_batch_metered(&input, 1, &mut scratch).unwrap();
+        assert_eq!(out.len(), 10);
+        assert!(measured.unwrap() > 0.0, "the recovered meter still meters");
+    }
 
     fn points() -> Vec<EnginePoint> {
         vec![

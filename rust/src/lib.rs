@@ -62,6 +62,14 @@
 //!   deadline-aware retry of shed requests, and a cluster energy
 //!   envelope split across shards by the fleet's demand-weighted
 //!   water-filling ([`coordinator::arbiter`]).
+//! - [`analysis`] — the static soundness pass: exact i128 interval
+//!   arithmetic ([`analysis::Interval`]) proving per-layer overflow
+//!   bounds into [`analysis::KernelCert`] certificates. The plan
+//!   compiler selects kernels *from* the certificate (a layer only
+//!   runs narrow/packed arithmetic when provably exact), and
+//!   `pann-cli verify --menu` re-derives the same certificates
+//!   offline to audit a serialized artifact without running
+//!   inference.
 //! - [`experiments`] — one driver per table/figure of the paper.
 //!
 //! Power is reported in **bit flips**, exactly as in the paper
@@ -76,7 +84,18 @@
 // Every public item in this crate is documented, and CI's
 // `RUSTDOCFLAGS=-D warnings` doc job keeps it that way.
 #![warn(missing_docs)]
+// Unsafe operations must be spelled out (and carry `// SAFETY:`
+// comments — CI greps for them) even inside `unsafe fn` bodies.
+#![deny(unsafe_op_in_unsafe_fn)]
+// `clippy.toml` bans `unwrap`/`expect`/`panic!` via disallowed-methods
+// / disallowed-macros, which fire crate-wide once configured. The ban
+// is *scoped*: allowed here at the root, re-denied per module in
+// `coordinator/` and `net/` (the request-handling surface where a
+// panic would poison locks and take down serving threads), and
+// re-allowed inside their `#[cfg(test)]` modules.
+#![allow(clippy::disallowed_methods, clippy::disallowed_macros)]
 
+pub mod analysis;
 pub mod bitflip;
 pub mod coordinator;
 pub mod data;

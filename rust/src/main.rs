@@ -36,6 +36,10 @@
 //! (Hand-rolled argument parsing: the offline registry for this build
 //! carries no `clap`.)
 
+// The panic ban in clippy.toml targets the serving layer
+// (coordinator/, net/); CLI/test/bench crates may assert freely.
+#![allow(clippy::disallowed_methods, clippy::disallowed_macros)]
+
 use anyhow::{bail, Context, Result};
 use pann::coordinator::{
     Client, EnergyEnvelope, EnginePoint, InferRequest, Menu, ServeError, ServerBuilder,
@@ -276,6 +280,13 @@ fn run() -> Result<()> {
             let model = args.get("model").map(str::to_string).unwrap_or_else(|| "cnn-s".into());
             sweep(&ctx, &model)
         }
+        "verify" => {
+            let menu = args
+                .get("menu")
+                .context("usage: pann-cli verify --menu menu.json [--model NAME]")?
+                .to_string();
+            verify_menu(&ctx, &menu, args.get("model"))
+        }
         _ => {
             println!(
                 "pann-cli — power-aware neural networks (PANN reproduction)\n\
@@ -295,7 +306,11 @@ fn run() -> Result<()> {
                  \x20                                 HTTP edge: POST /v1/infer, GET /v1/models,\n\
                  \x20                                 GET /v1/governor, GET /metrics; --hold keeps\n\
                  \x20                                 serving until stdin EOF, then drains\n\
-                 \x20 sweep --model M [--quick]       power-accuracy sweep (Fig. 1)\n"
+                 \x20 sweep --model M [--quick]       power-accuracy sweep (Fig. 1)\n\
+                 \x20 verify --menu menu.json [--model M]\n\
+                 \x20                                 static overflow audit of a menu artifact\n\
+                 \x20                                 (exit 0 sound / 1 error / 2 findings,\n\
+                 \x20                                 pann-verify/v1 JSON report on stdout)\n"
             );
             Ok(())
         }
@@ -484,6 +499,141 @@ fn compile_menu_cmd(ctx: &Ctx, model_name: &str, bits: &[u32], out: &str) -> Res
     );
     for line in menu.frontier_lines() {
         println!("  {line}");
+    }
+    Ok(())
+}
+
+/// Statically audit a menu artifact for overflow soundness
+/// (`pann-cli verify --menu menu.json [--model NAME]`).
+///
+/// Exit contract: **0** — every point is provably sound; **1** —
+/// operational error (unreadable or corrupt artifact, model load
+/// failure), reported on stderr by `main`; **2** — the audit produced
+/// findings: the artifact declares operand widths whose codes cannot
+/// fit the kernels' operand slabs, or (with `--model`) the recompiled
+/// plans' per-layer certificates do not admit the kernels that would
+/// be selected. The machine-readable report (`pann-verify/v1`) goes
+/// to stdout in every non-error case.
+///
+/// The width audit is model-free: activation codes span
+/// `[0, 2^b̃x − 1]` under dynamic quantization and weight codes span
+/// `±2^(bR−1)`, so `b̃x ∉ 1..=31` or `bR > 31` already proves the i32
+/// operand slabs can wrap before any model is consulted. `--model`
+/// additionally recompiles every point and re-derives the per-layer
+/// [`pann::analysis::KernelCert`]s, cross-checking each selected
+/// kernel against its certificate.
+fn verify_menu(ctx: &Ctx, menu_path: &str, model_name: Option<&str>) -> Result<()> {
+    use pann::nn::GemmKernel;
+    use pann::util::Json;
+    let artifact = pann::pann::MenuArtifact::load(std::path::Path::new(menu_path))
+        .with_context(|| format!("load menu artifact {menu_path}"))?;
+    let mut findings: Vec<Json> = Vec::new();
+    let mut report = |point: &str, kind: &str, detail: String| {
+        findings.push(Json::obj(vec![
+            ("point", Json::from(point)),
+            ("kind", Json::from(kind)),
+            ("detail", Json::from(detail)),
+        ]));
+    };
+
+    // model-free width audit: reject artifacts whose declared operand
+    // widths already overflow the kernels' operand slabs
+    for p in &artifact.points {
+        if p.bx_tilde == 0 || p.bx_tilde > 31 {
+            report(
+                &p.name,
+                "act-width",
+                format!(
+                    "activation width b̃x={} is outside 1..=31: dynamic activation \
+                     codes span [0, 2^b̃x − 1], which cannot be represented in the \
+                     i32 operand slab",
+                    p.bx_tilde
+                ),
+            );
+        }
+        if p.weight_code_bits > 31 {
+            report(
+                &p.name,
+                "weight-width",
+                format!(
+                    "weight code width bR={} exceeds 31 bits: split-bank codes \
+                     cannot be represented in the i32 operand slab",
+                    p.weight_code_bits
+                ),
+            );
+        }
+    }
+
+    // with a model: recompile every point and re-derive the per-layer
+    // overflow certificates the kernel selection was proven against
+    let mut points_recompiled = 0usize;
+    if let Some(name) = model_name {
+        let (model, test) = ctx.load_model(name)?;
+        if model.fingerprint() != artifact.model_fingerprint {
+            report(
+                "(menu)",
+                "fingerprint",
+                format!(
+                    "menu was compiled for model '{}' (fingerprint {:016x}), \
+                     '{name}' has fingerprint {:016x}",
+                    artifact.model_name,
+                    artifact.model_fingerprint,
+                    model.fingerprint()
+                ),
+            );
+        } else {
+            let calib = pann::pann::convert::calib_tensor(&test, 32);
+            for p in &artifact.points {
+                let cfg = pann::nn::QuantConfig::pann(p.bx_tilde, p.r, p.quant_method);
+                let plan = match pann::nn::ExecutionPlan::compile(&model, cfg, Some(&calib)) {
+                    Ok(plan) => plan,
+                    Err(e) => {
+                        report(
+                            &p.name,
+                            "compile",
+                            format!("point does not recompile into a provably safe plan: {e:#}"),
+                        );
+                        continue;
+                    }
+                };
+                points_recompiled += 1;
+                for (node, kernel, cert) in plan.layer_certs() {
+                    let admitted = match kernel {
+                        GemmKernel::Wide | GemmKernel::SplitWide => cert.admits_wide(),
+                        GemmKernel::Narrow | GemmKernel::SplitNarrow => cert.admits_narrow(),
+                    };
+                    if !admitted {
+                        report(
+                            &p.name,
+                            "certificate",
+                            format!(
+                                "node {node}: selected kernel {kernel:?} is not admitted \
+                                 by its overflow certificate (acc hull [{}, {}])",
+                                cert.acc.lo, cert.acc.hi
+                            ),
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    let sound = findings.is_empty();
+    let out = Json::obj(vec![
+        ("schema", Json::from("pann-verify/v1")),
+        ("menu", Json::from(menu_path)),
+        (
+            "model",
+            model_name.map_or(Json::Null, Json::from),
+        ),
+        ("points_checked", Json::from(artifact.points.len())),
+        ("points_recompiled", Json::from(points_recompiled)),
+        ("sound", Json::from(sound)),
+        ("findings", Json::Arr(findings)),
+    ]);
+    println!("{out}");
+    if !sound {
+        std::process::exit(2);
     }
     Ok(())
 }

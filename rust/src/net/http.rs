@@ -16,6 +16,10 @@
 //! (no bytes yet — [`ReadOutcome::Idle`], poll your stop flag and try
 //! again) from a peer that stalled mid-request (408).
 
+// Request-handling surface: panics are banned (see clippy.toml);
+// fail with typed errors instead.
+#![deny(clippy::disallowed_methods, clippy::disallowed_macros)]
+
 use std::io::{self, BufRead, Read, Write};
 
 /// Upper bound on the request head: request line plus all headers.
@@ -258,6 +262,7 @@ pub fn write_response(
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods, clippy::disallowed_macros)]
 mod tests {
     use super::*;
     use std::io::BufReader;

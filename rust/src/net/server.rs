@@ -26,6 +26,10 @@
 //!
 //! [`ServeError::QueueFull`]: crate::coordinator::ServeError::QueueFull
 
+// Request-handling surface: panics are banned (see clippy.toml);
+// answer errors over the wire instead.
+#![deny(clippy::disallowed_methods, clippy::disallowed_macros)]
+
 use std::io::BufReader;
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -122,8 +126,14 @@ impl NetServer {
                 std::thread::Builder::new()
                     .name(format!("pann-edge-{i}"))
                     .spawn(move || loop {
-                        // hold the lock only to dequeue, not to serve
-                        let conn = rx.lock().expect("edge receiver poisoned").recv();
+                        // hold the lock only to dequeue, not to serve;
+                        // a poisoned guard (a sibling handler panicked
+                        // mid-recv) is recovered — the channel itself
+                        // is still consistent
+                        let conn = rx
+                            .lock()
+                            .unwrap_or_else(std::sync::PoisonError::into_inner)
+                            .recv();
                         match conn {
                             Ok(stream) => handle_connection(stream, &state),
                             Err(_) => break, // acceptor gone: drained
@@ -409,6 +419,7 @@ fn metrics_text(state: &EdgeState) -> String {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods, clippy::disallowed_macros)]
 mod tests {
     use super::*;
     use crate::coordinator::server::tests_support::MockEngine;

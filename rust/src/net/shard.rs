@@ -29,6 +29,10 @@
 //!
 //! [`Governor`]: crate::coordinator::Governor
 
+// Request-handling surface: panics are banned (see clippy.toml);
+// fail with typed errors instead.
+#![deny(clippy::disallowed_methods, clippy::disallowed_macros)]
+
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::time::{Duration, Instant};
 
@@ -323,6 +327,7 @@ impl ShardRouter {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods, clippy::disallowed_macros)]
 mod tests {
     use super::*;
     use crate::coordinator::server::tests_support::{Gate, GateEngine, MockEngine};

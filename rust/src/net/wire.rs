@@ -24,6 +24,10 @@
 //! }
 //! ```
 
+// Request-handling surface: panics are banned (see clippy.toml);
+// fail with a typed `ServeError` instead.
+#![deny(clippy::disallowed_methods, clippy::disallowed_macros)]
+
 use std::time::Duration;
 
 use super::http::HttpError;
@@ -39,7 +43,7 @@ pub fn status_of(e: &ServeError) -> u16 {
         ServeError::DeadlineExceeded => 408,
         ServeError::BadInput { .. } | ServeError::BadBudget | ServeError::ModelRequired => 400,
         ServeError::UnknownPoint(_) | ServeError::UnknownModel(_) => 404,
-        ServeError::Engine(_) | ServeError::BadMenu(_) => 500,
+        ServeError::Engine(_) | ServeError::BadMenu(_) | ServeError::Internal(_) => 500,
     }
 }
 
@@ -56,6 +60,7 @@ pub fn error_kind(e: &ServeError) -> &'static str {
         ServeError::BadBudget => "bad_budget",
         ServeError::UnknownModel(_) => "unknown_model",
         ServeError::ModelRequired => "model_required",
+        ServeError::Internal(_) => "internal",
     }
 }
 
@@ -182,6 +187,7 @@ pub fn response_json(shard: usize, r: &Response) -> Json {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods, clippy::disallowed_macros)]
 mod tests {
     use super::*;
 
@@ -198,6 +204,7 @@ mod tests {
             (ServeError::BadBudget, 400, "bad_budget"),
             (ServeError::UnknownModel("ghost".into()), 404, "unknown_model"),
             (ServeError::ModelRequired, 400, "model_required"),
+            (ServeError::Internal("queue poisoned".into()), 500, "internal"),
         ];
         for (e, status, kind) in cases {
             assert_eq!(status_of(&e), status, "{e}");

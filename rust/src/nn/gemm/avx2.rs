@@ -32,8 +32,14 @@ pub(super) unsafe fn dot_i64(a: &[i32], b: &[i32]) -> i64 {
     let mut acc = _mm256_setzero_si256();
     let mut i = 0usize;
     while i + 8 <= len {
-        let va = _mm256_loadu_si256(pa.add(i) as *const __m256i);
-        let vb = _mm256_loadu_si256(pb.add(i) as *const __m256i);
+        // SAFETY: `i + 8 <= len ≤ a.len(), b.len()` keeps both 8-lane
+        // unaligned reads in bounds; `loadu` has no alignment contract.
+        let (va, vb) = unsafe {
+            (
+                _mm256_loadu_si256(pa.add(i) as *const __m256i),
+                _mm256_loadu_si256(pb.add(i) as *const __m256i),
+            )
+        };
         // even lanes sit in the low half of each 64-bit element; the
         // odd lanes get there via a logical 64-bit shift (mul_epi32
         // sign-extends from bit 31 of the low half, so both are exact)
@@ -63,9 +69,15 @@ pub(super) unsafe fn dot_i64_split(a: &[i32], p: &[i32], n: &[i32]) -> i64 {
     let mut acc = _mm256_setzero_si256();
     let mut i = 0usize;
     while i + 8 <= len {
-        let va = _mm256_loadu_si256(pa.add(i) as *const __m256i);
-        let vp = _mm256_loadu_si256(pp.add(i) as *const __m256i);
-        let vn = _mm256_loadu_si256(pn.add(i) as *const __m256i);
+        // SAFETY: `i + 8 <= len`, the min of all three slice lengths,
+        // keeps every 8-lane unaligned read in bounds.
+        let (va, vp, vn) = unsafe {
+            (
+                _mm256_loadu_si256(pa.add(i) as *const __m256i),
+                _mm256_loadu_si256(pp.add(i) as *const __m256i),
+                _mm256_loadu_si256(pn.add(i) as *const __m256i),
+            )
+        };
         let va_o = _mm256_srli_epi64(va, 32);
         // Σ a·p − Σ a·n ≡ Σ a·(p − n): the subtraction distributes, and
         // i64 lane adds/subs form the same mod-2^64 ring as the oracle
@@ -97,8 +109,14 @@ pub(super) unsafe fn dot_i32_wrapping(a: &[i32], b: &[i32]) -> i32 {
     let mut acc = _mm256_setzero_si256();
     let mut i = 0usize;
     while i + 8 <= len {
-        let va = _mm256_loadu_si256(pa.add(i) as *const __m256i);
-        let vb = _mm256_loadu_si256(pb.add(i) as *const __m256i);
+        // SAFETY: `i + 8 <= len ≤ a.len(), b.len()` keeps both 8-lane
+        // unaligned reads in bounds.
+        let (va, vb) = unsafe {
+            (
+                _mm256_loadu_si256(pa.add(i) as *const __m256i),
+                _mm256_loadu_si256(pb.add(i) as *const __m256i),
+            )
+        };
         acc = _mm256_add_epi32(acc, _mm256_mullo_epi32(va, vb));
         i += 8;
     }
@@ -123,9 +141,15 @@ pub(super) unsafe fn dot_i32_split_wrapping(a: &[i32], p: &[i32], n: &[i32]) -> 
     let mut acc = _mm256_setzero_si256();
     let mut i = 0usize;
     while i + 8 <= len {
-        let va = _mm256_loadu_si256(pa.add(i) as *const __m256i);
-        let vp = _mm256_loadu_si256(pp.add(i) as *const __m256i);
-        let vn = _mm256_loadu_si256(pn.add(i) as *const __m256i);
+        // SAFETY: `i + 8 <= len`, the min of all three slice lengths,
+        // keeps every 8-lane unaligned read in bounds.
+        let (va, vp, vn) = unsafe {
+            (
+                _mm256_loadu_si256(pa.add(i) as *const __m256i),
+                _mm256_loadu_si256(pp.add(i) as *const __m256i),
+                _mm256_loadu_si256(pn.add(i) as *const __m256i),
+            )
+        };
         // sub_epi32 wraps — same as the oracle's p.wrapping_sub(n)
         let d = _mm256_sub_epi32(vp, vn);
         acc = _mm256_add_epi32(acc, _mm256_mullo_epi32(va, d));
@@ -152,8 +176,14 @@ pub(super) unsafe fn dot_i16_wrapping(a: &[i16], b: &[i16]) -> i32 {
     let mut acc = _mm256_setzero_si256();
     let mut i = 0usize;
     while i + 16 <= len {
-        let va = _mm256_loadu_si256(pa.add(i) as *const __m256i);
-        let vb = _mm256_loadu_si256(pb.add(i) as *const __m256i);
+        // SAFETY: `i + 16 <= len ≤ a.len(), b.len()` keeps both
+        // 16-lane (i16) unaligned reads in bounds.
+        let (va, vb) = unsafe {
+            (
+                _mm256_loadu_si256(pa.add(i) as *const __m256i),
+                _mm256_loadu_si256(pb.add(i) as *const __m256i),
+            )
+        };
         // madd's pairwise horizontal add wraps mod 2^32 (no
         // saturation), so the whole chain stays in the wrapping ring
         acc = _mm256_add_epi32(acc, _mm256_madd_epi16(va, vb));
@@ -167,10 +197,12 @@ pub(super) unsafe fn dot_i16_wrapping(a: &[i16], b: &[i16]) -> i32 {
     out
 }
 
-/// Horizontal sum of 4 i64 lanes (wrapping adds).
+/// Horizontal sum of 4 i64 lanes (wrapping adds). Safe
+/// `#[target_feature]` fn: value-only intrinsics, callable safely from
+/// the AVX2-enabled kernels above.
 #[inline]
 #[target_feature(enable = "avx2")]
-unsafe fn hsum_i64x4(v: __m256i) -> i64 {
+fn hsum_i64x4(v: __m256i) -> i64 {
     let lo = _mm256_castsi256_si128(v);
     let hi = _mm256_extracti128_si256(v, 1);
     let s = _mm_add_epi64(lo, hi);
@@ -179,10 +211,11 @@ unsafe fn hsum_i64x4(v: __m256i) -> i64 {
 }
 
 /// Horizontal sum of 8 i32 lanes (wrapping adds — part of the narrow
-/// paths' defined arithmetic).
+/// paths' defined arithmetic). Safe `#[target_feature]` fn, like
+/// [`hsum_i64x4`].
 #[inline]
 #[target_feature(enable = "avx2")]
-unsafe fn hsum_i32x8_wrapping(v: __m256i) -> i32 {
+fn hsum_i32x8_wrapping(v: __m256i) -> i32 {
     let lo = _mm256_castsi256_si128(v);
     let hi = _mm256_extracti128_si256(v, 1);
     let s = _mm_add_epi32(lo, hi);

@@ -24,9 +24,12 @@
 //! is pre-transposed (`[n][k]`, i.e. weights stored `[out][in]`), which
 //! makes the inner loop a contiguous dot product on both operands.
 
-#[cfg(target_arch = "x86_64")]
+// The intrinsic modules are compiled out under Miri (which interprets
+// no vendor intrinsics); dispatch pins to Scalar there, so the CI Miri
+// leg checks the scalar oracle and everything above it.
+#[cfg(all(target_arch = "x86_64", not(miri)))]
 mod avx2;
-#[cfg(target_arch = "aarch64")]
+#[cfg(all(target_arch = "aarch64", not(miri)))]
 mod neon;
 pub mod packed;
 mod scalar;

@@ -47,9 +47,9 @@ impl SimdLevel {
     pub fn supported(self) -> SimdLevel {
         match self {
             SimdLevel::Scalar => SimdLevel::Scalar,
-            #[cfg(target_arch = "x86_64")]
+            #[cfg(all(target_arch = "x86_64", not(miri)))]
             SimdLevel::Avx2 if is_x86_feature_detected!("avx2") => SimdLevel::Avx2,
-            #[cfg(target_arch = "aarch64")]
+            #[cfg(all(target_arch = "aarch64", not(miri)))]
             SimdLevel::Neon => SimdLevel::Neon,
             _ => SimdLevel::Scalar,
         }
@@ -76,7 +76,7 @@ pub fn detect_with(force_scalar: bool) -> SimdLevel {
     if force_scalar {
         return SimdLevel::Scalar;
     }
-    #[cfg(target_arch = "x86_64")]
+    #[cfg(all(target_arch = "x86_64", not(miri)))]
     {
         if is_x86_feature_detected!("avx2") {
             SimdLevel::Avx2
@@ -84,11 +84,11 @@ pub fn detect_with(force_scalar: bool) -> SimdLevel {
             SimdLevel::Scalar
         }
     }
-    #[cfg(target_arch = "aarch64")]
+    #[cfg(all(target_arch = "aarch64", not(miri)))]
     {
         SimdLevel::Neon
     }
-    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    #[cfg(any(miri, not(any(target_arch = "x86_64", target_arch = "aarch64"))))]
     {
         SimdLevel::Scalar
     }
@@ -104,10 +104,10 @@ pub fn detect_with(force_scalar: bool) -> SimdLevel {
 #[inline]
 pub(super) fn dot_i64(level: SimdLevel, a: &[i32], b: &[i32]) -> i64 {
     match level {
-        #[cfg(target_arch = "x86_64")]
+        #[cfg(all(target_arch = "x86_64", not(miri)))]
         // SAFETY: `Avx2` survives `supported()` only when the CPU has it.
         SimdLevel::Avx2 => unsafe { super::avx2::dot_i64(a, b) },
-        #[cfg(target_arch = "aarch64")]
+        #[cfg(all(target_arch = "aarch64", not(miri)))]
         SimdLevel::Neon => super::neon::dot_i64(a, b),
         _ => super::scalar::dot_i64(a, b),
     }
@@ -117,10 +117,10 @@ pub(super) fn dot_i64(level: SimdLevel, a: &[i32], b: &[i32]) -> i64 {
 #[inline]
 pub(super) fn dot_i64_split(level: SimdLevel, a: &[i32], p: &[i32], n: &[i32]) -> i64 {
     match level {
-        #[cfg(target_arch = "x86_64")]
+        #[cfg(all(target_arch = "x86_64", not(miri)))]
         // SAFETY: `Avx2` survives `supported()` only when the CPU has it.
         SimdLevel::Avx2 => unsafe { super::avx2::dot_i64_split(a, p, n) },
-        #[cfg(target_arch = "aarch64")]
+        #[cfg(all(target_arch = "aarch64", not(miri)))]
         SimdLevel::Neon => super::neon::dot_i64_split(a, p, n),
         _ => super::scalar::dot_i64_split(a, p, n),
     }
@@ -130,10 +130,10 @@ pub(super) fn dot_i64_split(level: SimdLevel, a: &[i32], p: &[i32], n: &[i32]) -
 #[inline]
 pub(super) fn dot_i32_wrapping(level: SimdLevel, a: &[i32], b: &[i32]) -> i32 {
     match level {
-        #[cfg(target_arch = "x86_64")]
+        #[cfg(all(target_arch = "x86_64", not(miri)))]
         // SAFETY: `Avx2` survives `supported()` only when the CPU has it.
         SimdLevel::Avx2 => unsafe { super::avx2::dot_i32_wrapping(a, b) },
-        #[cfg(target_arch = "aarch64")]
+        #[cfg(all(target_arch = "aarch64", not(miri)))]
         SimdLevel::Neon => super::neon::dot_i32_wrapping(a, b),
         _ => super::scalar::dot_i32_wrapping(a, b),
     }
@@ -143,10 +143,10 @@ pub(super) fn dot_i32_wrapping(level: SimdLevel, a: &[i32], b: &[i32]) -> i32 {
 #[inline]
 pub(super) fn dot_i32_split_wrapping(level: SimdLevel, a: &[i32], p: &[i32], n: &[i32]) -> i32 {
     match level {
-        #[cfg(target_arch = "x86_64")]
+        #[cfg(all(target_arch = "x86_64", not(miri)))]
         // SAFETY: `Avx2` survives `supported()` only when the CPU has it.
         SimdLevel::Avx2 => unsafe { super::avx2::dot_i32_split_wrapping(a, p, n) },
-        #[cfg(target_arch = "aarch64")]
+        #[cfg(all(target_arch = "aarch64", not(miri)))]
         SimdLevel::Neon => super::neon::dot_i32_split_wrapping(a, p, n),
         _ => super::scalar::dot_i32_split_wrapping(a, p, n),
     }
@@ -156,10 +156,10 @@ pub(super) fn dot_i32_split_wrapping(level: SimdLevel, a: &[i32], p: &[i32], n: 
 #[inline]
 pub(super) fn dot_i16_wrapping(level: SimdLevel, a: &[i16], b: &[i16]) -> i32 {
     match level {
-        #[cfg(target_arch = "x86_64")]
+        #[cfg(all(target_arch = "x86_64", not(miri)))]
         // SAFETY: `Avx2` survives `supported()` only when the CPU has it.
         SimdLevel::Avx2 => unsafe { super::avx2::dot_i16_wrapping(a, b) },
-        #[cfg(target_arch = "aarch64")]
+        #[cfg(all(target_arch = "aarch64", not(miri)))]
         SimdLevel::Neon => super::neon::dot_i16_wrapping(a, b),
         _ => super::scalar::dot_i16_wrapping(a, b),
     }

@@ -25,6 +25,7 @@ use super::model::Model;
 use super::power_meter::PowerMeter;
 use super::quantized::{Arithmetic, QuantConfig, WeightQuantMethod};
 use super::tensor::Tensor;
+use crate::analysis::{Interval, KernelCert};
 use crate::quant::{aciq, pann::PannQuant, recon, ruq, ActQuantMethod, QParams};
 use anyhow::{bail, Context, Result};
 
@@ -65,6 +66,11 @@ pub(crate) struct WeightForm {
     pub adds_per_element: f64,
     /// max |code| (storage bits, Table 14).
     pub max_code: i64,
+    /// Smallest effective per-element code (`p − n` on the split
+    /// path), before any storage cast — prover input.
+    pub code_lo: i64,
+    /// Largest effective per-element code — prover input.
+    pub code_hi: i64,
     /// Dense i16 bank for the SIMD narrow path (the unified codes, or
     /// the `W⁺ − W⁻` difference on the split path — see
     /// [`gemm::packed`]). `None` when the plan runs scalar, the kernel
@@ -90,6 +96,9 @@ pub(crate) struct PlannedMac {
     pub depth: usize,
     /// Kernel selected at plan time.
     pub kernel: GemmKernel,
+    /// The overflow-soundness certificate the kernel was selected
+    /// from (see [`crate::analysis`]).
+    pub cert: KernelCert,
     /// Precomputed flips per MAC (non-PANN arithmetic; 0 for PANN,
     /// whose cost is charged through `record_pann`).
     pub flips_per_mac: f64,
@@ -187,28 +196,57 @@ impl ExecutionPlan {
                     }
                 }
             }
-            // --- kernel selection (was re-decided on every run_gemm) ---
-            // Overflow-safety proof for the narrow (i32-accumulate)
-            // path: every |product| ≤ act_qmax · max|code|, and at most
-            // `depth` of them sum up — if that bound stays below 2^30
-            // the i32 accumulator cannot wrap.
-            let act_qmax = ((1i64 << config.bx.min(30)) - 1).max(1);
-            let narrow = act_qmax
-                .saturating_mul(weights.max_code.max(1))
-                .saturating_mul(depth as i64)
-                < (1i64 << 30);
-            let kernel = match (weights.split, narrow) {
+            // --- kernel selection: per-layer overflow certificate ---
+            // The prover (`crate::analysis`) runs exact i128 interval
+            // arithmetic over this layer's activation-code range,
+            // effective weight-code range and reduction depth, and
+            // certifies which accumulator widths provably cannot wrap.
+            // (This replaces the old `< 2^30` magnitude heuristic,
+            // which both under-admitted safe narrow layers and — via a
+            // `bx.min(30)` clamp — understated the activation range
+            // for b̃x > 30.)
+            let act_iv = match &act {
+                ActQ::Fixed(q) => Interval::new(q.qmin as i128, q.qmax as i128),
+                // Dynamic refits per batch; the static bound is the
+                // full unsigned b̃x code range, unclamped (the shift
+                // cap only guards the i128 shift itself).
+                ActQ::Dynamic => Interval::new(0, (1i128 << config.bx.min(126)) - 1),
+            };
+            if !act_iv.fits_i32() {
+                bail!(
+                    "node {i}: activation codes [{}, {}] (b̃x = {}) do not fit the i32 \
+                     activation slab",
+                    act_iv.lo,
+                    act_iv.hi,
+                    config.bx
+                );
+            }
+            let cert = KernelCert::certify(
+                act_iv,
+                Interval::new(weights.code_lo as i128, weights.code_hi as i128),
+                depth as u64,
+                weights.split,
+            );
+            if !cert.admits_wide() {
+                bail!(
+                    "node {i}: cannot prove i64 accumulation exact (accumulator interval \
+                     [{}, {}] at depth {depth})",
+                    cert.acc.lo,
+                    cert.acc.hi
+                );
+            }
+            let kernel = match (weights.split, cert.admits_narrow()) {
                 (true, true) => GemmKernel::SplitNarrow,
                 (true, false) => GemmKernel::SplitWide,
                 (false, true) => GemmKernel::Narrow,
                 (false, false) => GemmKernel::Wide,
             };
             // --- packed i16 bank for the SIMD narrow path ---
-            // The narrow proof already bounds |a·w·k| < 2^30; packing
-            // additionally needs both operands in i16 (activation codes
-            // are ≤ act_qmax). Skipped on scalar plans so the forced-
-            // scalar escape hatch runs the pristine original path.
-            if simd != SimdLevel::Scalar && act_qmax <= i16::MAX as i64 {
+            // Admitted only when the certificate proves the narrow
+            // verdict *and* both operand streams fit i16 lanes.
+            // Skipped on scalar plans so the forced-scalar escape
+            // hatch runs the pristine original path.
+            if simd != SimdLevel::Scalar && cert.admits_packed() {
                 weights.packed = match kernel {
                     GemmKernel::Narrow => gemm::pack_codes_i16(&weights.pos),
                     GemmKernel::SplitNarrow => gemm::pack_diff_i16(&weights.pos, &weights.neg),
@@ -236,6 +274,7 @@ impl ExecutionPlan {
                 linear,
                 depth,
                 kernel,
+                cert,
             });
         }
         let macs_per_sample = shapes.iter().map(|(m, _)| m).sum();
@@ -284,6 +323,23 @@ impl ExecutionPlan {
     /// Kernel selected for node `i`, if it is a planned MAC node.
     pub fn kernel_of(&self, node: usize) -> Option<GemmKernel> {
         self.steps.get(node).and_then(|s| s.as_ref()).map(|p| p.kernel)
+    }
+
+    /// Overflow-soundness certificate proven for node `i`, if it is a
+    /// planned MAC node (the certificate the kernel was selected from).
+    pub fn cert_of(&self, node: usize) -> Option<KernelCert> {
+        self.steps.get(node).and_then(|s| s.as_ref()).map(|p| p.cert)
+    }
+
+    /// Every planned MAC layer's `(node, kernel, certificate)` triple
+    /// in graph order — the offline audit surface consumed by
+    /// `pann-cli verify`.
+    pub fn layer_certs(&self) -> Vec<(usize, GemmKernel, KernelCert)> {
+        self.steps
+            .iter()
+            .flatten()
+            .map(|p| (p.node, p.kernel, p.cert))
+            .collect()
     }
 
     /// Scratch elements (`cols`, `acc`) needed to run a batch of `n`.
@@ -346,6 +402,17 @@ fn fit_activation_quantizer(
     calib: Option<(&Tensor, &[Tensor])>,
 ) -> Result<ActQ> {
     use ActQuantMethod::*;
+    // The fitted paths produce codes for the i32 activation slab, so
+    // b̃x is bounded by what the fitters can represent; Dynamic defers
+    // to the prover in `compile`, which rejects the same configs with
+    // the certified range in the message.
+    if !matches!(config.act_method, Dynamic) && !(1..=31).contains(&config.bx) {
+        bail!(
+            "activation bit-width b̃x = {} unsupported: fitted activation codes must fit \
+             the i32 activation slab (1..=31 bits)",
+            config.bx
+        );
+    }
     Ok(match config.act_method {
         Dynamic => ActQ::Dynamic,
         Aciq | Recon => {
@@ -380,9 +447,18 @@ fn quantize_weights(
     node: usize,
 ) -> Result<WeightForm> {
     let split = !matches!(config.arithmetic, Arithmetic::SignedMac { .. });
-    let mk = |codes: Vec<i64>, scale: f32, adds: f64| -> WeightForm {
-        let max_code = codes.iter().map(|c| c.abs()).max().unwrap_or(0);
-        if split {
+    let mk = |codes: Vec<i64>, scale: f32, adds: f64| -> Result<WeightForm> {
+        let code_lo = codes.iter().copied().min().unwrap_or(0);
+        let code_hi = codes.iter().copied().max().unwrap_or(0);
+        // The storage banks are i32; a code outside i32 would
+        // previously truncate silently in the `as i32` casts below.
+        if code_lo < i32::MIN as i64 || code_hi > i32::MAX as i64 {
+            bail!(
+                "weight codes [{code_lo}, {code_hi}] do not fit the i32 weight banks"
+            );
+        }
+        let max_code = code_lo.unsigned_abs().max(code_hi.unsigned_abs()) as i64;
+        Ok(if split {
             let pos: Vec<i32> = codes.iter().map(|&c| c.max(0) as i32).collect();
             let neg: Vec<i32> = codes.iter().map(|&c| (-c).max(0) as i32).collect();
             WeightForm {
@@ -392,6 +468,8 @@ fn quantize_weights(
                 split: true,
                 adds_per_element: adds,
                 max_code,
+                code_lo,
+                code_hi,
                 packed: None,
             }
         } else {
@@ -402,15 +480,17 @@ fn quantize_weights(
                 split: false,
                 adds_per_element: adds,
                 max_code,
+                code_lo,
+                code_hi,
                 packed: None,
             }
-        }
+        })
     };
     match config.weight_quant {
         WeightQuantMethod::Ruq => {
             let q = ruq::fit_signed(w, config.bw);
             let codes = q.quantize_slice(w);
-            Ok(mk(codes, q.scale, 0.0))
+            mk(codes, q.scale, 0.0)
         }
         WeightQuantMethod::RuqRecon => {
             let q = ruq::fit_signed(w, config.bw);
@@ -429,12 +509,12 @@ fn quantize_weights(
                 }
                 None => q.quantize_slice(w),
             };
-            Ok(mk(codes, q.scale, 0.0))
+            mk(codes, q.scale, 0.0)
         }
         WeightQuantMethod::Pann { r } => {
             let pq = PannQuant::new(r);
             let pw = pq.quantize(w);
-            Ok(mk(pw.codes.clone(), pw.gamma, pw.adds_per_element))
+            mk(pw.codes.clone(), pw.gamma, pw.adds_per_element)
         }
     }
 }
@@ -713,6 +793,89 @@ mod tests {
         assert!(acc >= 2048, "acc {acc}");
         let (cols8, _) = plan.scratch_hint(8);
         assert_eq!(cols8, cols * 8);
+    }
+
+    #[test]
+    fn bx32_dynamic_is_rejected_not_misplanned() {
+        // Regression: the old selector modeled the act range as
+        // `(1 << bx.min(30)) - 1`, so a b̃x = 32 Dynamic config
+        // compiled — and could select a narrow kernel — even though
+        // its activation codes cannot fit the i32 slab at all (the
+        // per-batch fitter would then panic at exec time). The prover
+        // must reject it at compile time instead.
+        let mut model = Model::reference_cnn(43);
+        let err = ExecutionPlan::compile(
+            &model,
+            QuantConfig::pann(32, 2.0, ActQuantMethod::Dynamic),
+            None,
+        )
+        .err()
+        .expect("b̃x = 32 must be rejected at compile time");
+        assert!(format!("{err:#}").contains("i32 activation slab"), "{err:#}");
+        // the fitted paths reject the same range with a typed error
+        // (they used to assert inside the fitters)
+        model.record_act_stats(&Tensor::zeros(vec![2, 1, 16, 16])).unwrap();
+        let err = ExecutionPlan::compile(
+            &model,
+            QuantConfig { bx: 32, ..QuantConfig::unsigned_baseline(4, ActQuantMethod::BnStats) },
+            None,
+        )
+        .err()
+        .expect("fitted b̃x = 32 must be rejected too");
+        assert!(format!("{err:#}").contains("1..=31"), "{err:#}");
+    }
+
+    #[test]
+    fn bx31_true_act_range_blocks_narrow_kernels() {
+        // b̃x = 31 fits the slab, but its qmax = 2^31 − 1: times any
+        // nonzero code at depth ≥ 2 that exceeds i32. The old clamp
+        // understated the range by 2× ((1 << 30) − 1) and could still
+        // admit a narrow kernel here; the certificate cannot.
+        let model = Model::reference_cnn(44);
+        let plan = ExecutionPlan::compile(
+            &model,
+            QuantConfig::pann(31, 2.0, ActQuantMethod::Dynamic),
+            None,
+        )
+        .unwrap();
+        let certs = plan.layer_certs();
+        assert!(!certs.is_empty());
+        let mut nonzero_layers = 0;
+        for (node, kernel, cert) in certs {
+            if cert.weight.lo == 0 && cert.weight.hi == 0 {
+                continue; // an all-zero bank is trivially narrow-safe
+            }
+            nonzero_layers += 1;
+            assert!(!cert.i32_ok, "node {node} cert wrongly admits i32");
+            assert!(
+                matches!(kernel, GemmKernel::Wide | GemmKernel::SplitWide),
+                "node {node} selected {kernel:?} despite act range 2^31 − 1"
+            );
+            assert!(plan.steps[node].as_ref().unwrap().weights.packed.is_none());
+        }
+        assert!(nonzero_layers > 0, "test model quantized to all-zero codes");
+    }
+
+    #[test]
+    fn kernels_always_match_their_certificates() {
+        let mut model = Model::reference_cnn(45);
+        model.record_act_stats(&Tensor::zeros(vec![2, 1, 16, 16])).unwrap();
+        for cfg in [
+            QuantConfig::unsigned_baseline(4, ActQuantMethod::BnStats),
+            QuantConfig::signed_baseline(8, ActQuantMethod::BnStats),
+            QuantConfig::pann(6, 2.0, ActQuantMethod::Dynamic),
+        ] {
+            let plan = ExecutionPlan::compile(&model, cfg, None).unwrap();
+            for (node, kernel, cert) in plan.layer_certs() {
+                assert!(cert.i64_ok, "node {node}: plans must always prove wide");
+                let narrow =
+                    matches!(kernel, GemmKernel::Narrow | GemmKernel::SplitNarrow);
+                assert_eq!(narrow, cert.admits_narrow(), "node {node} under {cfg:?}");
+                if plan.steps[node].as_ref().unwrap().weights.packed.is_some() {
+                    assert!(cert.admits_packed(), "node {node} packed without proof");
+                }
+            }
+        }
     }
 
     #[test]

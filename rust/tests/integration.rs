@@ -3,6 +3,10 @@
 //! Tests that need `make artifacts` outputs skip gracefully when the
 //! artifacts are absent, so `cargo test` is green on a fresh clone.
 
+// The panic ban in clippy.toml targets the serving layer
+// (coordinator/, net/); CLI/test/bench crates may assert freely.
+#![allow(clippy::disallowed_methods, clippy::disallowed_macros)]
+
 use pann::data::Dataset;
 use pann::experiments::Ctx;
 use pann::nn::eval::{batch_tensor, eval_fp32, eval_quantized};
@@ -997,4 +1001,39 @@ fn net_edge_serves_the_frontier_over_loopback() {
     assert_eq!(j.get("sample_len").unwrap().as_usize(), Some(ds.sample(0).len()));
 
     srv.shutdown();
+}
+
+#[test]
+fn overflow_unsafe_fixture_parses_but_never_compiles() {
+    // the committed fixture `pann-cli verify` must reject (CI asserts
+    // exit code 2 on it): it parses as a valid pann-menu/v2 artifact —
+    // the loader checks structure, not soundness — but its declared
+    // widths are exactly the ones the plan compiler refuses, so the
+    // static audit and the compiler agree on the verdict
+    let path = Path::new(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/tests/fixtures/menu-overflow-unsafe.json"
+    ));
+    let menu = pann::pann::MenuArtifact::load(path).expect("fixture must stay parseable");
+    let p = &menu.points[0];
+    assert!(p.bx_tilde > 31, "fixture must declare an unrepresentable act width");
+    assert!(p.weight_code_bits > 31, "fixture must declare an unrepresentable weight width");
+
+    let mut model = Model::reference_cnn(7);
+    model
+        .record_act_stats(&batch_tensor(
+            &Dataset::from_synth(pann::data::synth::digits(64, 11)),
+            0,
+            32,
+        ))
+        .unwrap();
+    let cfg = QuantConfig::pann(p.bx_tilde, p.r, p.quant_method);
+    let err = pann::nn::ExecutionPlan::compile(&model, cfg, None)
+        .err()
+        .expect("a 32-bit dynamic activation hull cannot fit the i32 operand slab");
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("i32") || msg.contains("32"),
+        "rejection should cite the width: {msg}"
+    );
 }

@@ -1,0 +1,349 @@
+//! Exhaustive-interleaving models of the coordinator's concurrency
+//! protocols, gated behind `--cfg loom` (the CI loom leg sets
+//! `RUSTFLAGS="--cfg loom"`; a plain `cargo test` compiles this file
+//! to nothing).
+//!
+//! The offline registry carries no `loom` crate, so the checker is
+//! hand-rolled in its spirit: each protocol is modeled as a small set
+//! of per-thread state machines whose steps are the protocol's atomic
+//! transitions (one critical section or one atomic access per step),
+//! and [`explore`] enumerates **every** interleaving of those steps by
+//! depth-first search, asserting the protocol invariants in every
+//! reachable state and that no schedule deadlocks. The models mirror
+//! the production structures they certify:
+//!
+//! - `RequestQueue` push/drain handshake (`coordinator/batcher.rs`):
+//!   bounded queue, full-queue shedding, stop-flag shutdown — no
+//!   request is ever lost or duplicated, and the drain loop terminates
+//!   in every interleaving.
+//! - The shared envelope cell (`coordinator/governor.rs`): f64 bits
+//!   published through one `AtomicU64` — every read observes exactly
+//!   the old or the new bits (never a torn mix), and per-variable
+//!   coherence keeps reads monotone once the new value is seen.
+//! - `Governor::set_envelope_rate` re-targeting vs. the observe loop:
+//!   however the re-target interleaves with breach/clear decisions,
+//!   the degradation level stays in range and the effective budget
+//!   stays positive.
+
+#![cfg(loom)]
+// Models assert freely; the clippy.toml panic ban targets the
+// production serving layer, not test crates.
+#![allow(clippy::disallowed_methods, clippy::disallowed_macros)]
+
+/// One modeled thread: a cloneable state machine advanced one atomic
+/// protocol step at a time.
+trait ModelThread<S: Clone>: Clone {
+    /// Has the thread run to completion?
+    fn done(&self) -> bool;
+    /// Could the thread make progress right now (not blocked on the
+    /// shared state)? A blocked thread is simply not scheduled; a
+    /// schedule where nothing is runnable and not everything is done
+    /// is a deadlock and fails the check.
+    fn runnable(&self, shared: &S) -> bool;
+    /// Execute one atomic step.
+    fn step(&mut self, shared: &mut S);
+}
+
+/// Depth-first enumeration of every interleaving: at each state, fork
+/// one branch per runnable thread. `check` runs on every *terminal*
+/// state (all threads done); per-step invariants live inside `step`.
+fn explore<S: Clone, T: ModelThread<S>>(shared: &S, threads: &[T], check: &mut dyn FnMut(&S)) {
+    let mut forked = false;
+    for i in 0..threads.len() {
+        if threads[i].done() || !threads[i].runnable(shared) {
+            continue;
+        }
+        forked = true;
+        let mut s = shared.clone();
+        let mut ts = threads.to_vec();
+        ts[i].step(&mut s);
+        explore(&s, &ts, check);
+    }
+    if !forked {
+        assert!(
+            threads.iter().all(ModelThread::done),
+            "deadlock: no thread runnable but not all are done"
+        );
+        check(shared);
+    }
+}
+
+// --- model 1: RequestQueue push/drain handshake ------------------------
+
+/// Shared state of the batcher handshake: the bounded queue, the stop
+/// flag, and the consumer's transcript.
+#[derive(Clone)]
+struct QueueState {
+    queue: Vec<u32>,
+    cap: usize,
+    stopped: bool,
+    producer_done: bool,
+    drained: Vec<u32>,
+    shed: Vec<u32>,
+}
+
+#[derive(Clone)]
+enum QueueThread {
+    /// Pushes ids `next..n`; a full queue sheds (QueueFull) exactly
+    /// like `Batcher::push`, a stopped queue rejects the rest.
+    Producer { next: u32, n: u32 },
+    /// Drains batches until the producer is done and the queue is
+    /// empty — the worker-loop shape of `Batcher::collect`.
+    Consumer { live: bool },
+    /// Flips the stop flag once (`Batcher::stop`).
+    Stopper { fired: bool },
+}
+
+impl ModelThread<QueueState> for QueueThread {
+    fn done(&self) -> bool {
+        match self {
+            QueueThread::Producer { next, n } => next >= n,
+            QueueThread::Consumer { live } => !live,
+            QueueThread::Stopper { fired } => *fired,
+        }
+    }
+
+    fn runnable(&self, s: &QueueState) -> bool {
+        match self {
+            // push never blocks: full or stopped sheds immediately
+            QueueThread::Producer { .. } | QueueThread::Stopper { .. } => true,
+            // the consumer parks on the condvar until there is work,
+            // the producer finished, or the server is stopping
+            QueueThread::Consumer { .. } => {
+                !s.queue.is_empty() || s.producer_done || s.stopped
+            }
+        }
+    }
+
+    fn step(&mut self, s: &mut QueueState) {
+        match self {
+            QueueThread::Producer { next, n } => {
+                let id = *next;
+                if s.stopped || s.queue.len() >= s.cap {
+                    s.shed.push(id);
+                } else {
+                    s.queue.push(id);
+                }
+                *next += 1;
+                if *next >= *n {
+                    s.producer_done = true;
+                }
+            }
+            QueueThread::Consumer { live } => {
+                if !s.queue.is_empty() {
+                    s.drained.append(&mut s.queue);
+                } else {
+                    // woke with an empty queue: exit iff shutdown
+                    debug_assert!(s.producer_done || s.stopped);
+                    *live = false;
+                }
+            }
+            QueueThread::Stopper { fired } => {
+                s.stopped = true;
+                *fired = true;
+            }
+        }
+    }
+}
+
+#[test]
+fn queue_handshake_never_loses_or_duplicates_requests() {
+    let n = 4u32;
+    let shared = QueueState {
+        queue: Vec::new(),
+        cap: 2,
+        stopped: false,
+        producer_done: false,
+        drained: Vec::new(),
+        shed: Vec::new(),
+    };
+    let threads = vec![
+        QueueThread::Producer { next: 0, n },
+        QueueThread::Consumer { live: true },
+    ];
+    let mut terminal = 0usize;
+    explore(&shared, &threads, &mut |s| {
+        terminal += 1;
+        // every request got exactly one fate: drained or shed
+        let mut all: Vec<u32> = s.drained.iter().chain(&s.shed).copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..n).collect::<Vec<_>>(), "lost or duplicated ids");
+        // FIFO order survives batching
+        assert!(s.drained.windows(2).all(|w| w[0] < w[1]));
+        assert!(s.queue.is_empty(), "terminal state left requests behind");
+    });
+    assert!(terminal > 1, "checker explored only one schedule");
+}
+
+#[test]
+fn queue_stop_always_terminates_and_sheds_the_rest() {
+    let n = 3u32;
+    let shared = QueueState {
+        queue: Vec::new(),
+        cap: 8,
+        stopped: false,
+        producer_done: false,
+        drained: Vec::new(),
+        shed: Vec::new(),
+    };
+    let threads = vec![
+        QueueThread::Producer { next: 0, n },
+        QueueThread::Consumer { live: true },
+        QueueThread::Stopper { fired: false },
+    ];
+    explore(&shared, &threads, &mut |s| {
+        // termination in every interleaving is the deadlock assert in
+        // `explore`; here: no id vanished, whatever the stop timing
+        assert_eq!(s.drained.len() + s.shed.len(), n as usize);
+    });
+}
+
+// --- model 2: the shared envelope cell ---------------------------------
+
+/// One `AtomicU64` publishing f64 bits (the governor's envelope-rate
+/// cell). Reads and writes of the single cell are atomic steps.
+#[derive(Clone)]
+struct CellState {
+    bits: u64,
+}
+
+#[derive(Clone)]
+enum CellThread {
+    /// `set_envelope_rate`: one release-store of the new bits.
+    Writer { fired: bool, new: u64 },
+    /// The observe loop's relaxed loads: each must see exactly the old
+    /// or the new bits, and—per-variable coherence—never the old bits
+    /// again after the new ones.
+    Reader { reads: usize, seen_new: bool, old: u64, new: u64 },
+}
+
+impl ModelThread<CellState> for CellThread {
+    fn done(&self) -> bool {
+        match self {
+            CellThread::Writer { fired, .. } => *fired,
+            CellThread::Reader { reads, .. } => *reads == 0,
+        }
+    }
+
+    fn runnable(&self, _s: &CellState) -> bool {
+        true
+    }
+
+    fn step(&mut self, s: &mut CellState) {
+        match self {
+            CellThread::Writer { fired, new } => {
+                s.bits = *new;
+                *fired = true;
+            }
+            CellThread::Reader { reads, seen_new, old, new } => {
+                let got = s.bits;
+                assert!(
+                    got == *old || got == *new,
+                    "torn read: {got:#x} is neither the old nor the new bits"
+                );
+                if got == *new {
+                    *seen_new = true;
+                } else {
+                    assert!(!*seen_new, "coherence violated: old bits after new bits");
+                }
+                let v = f64::from_bits(got);
+                assert!(v.is_finite() && v > 0.0, "reader must always see a usable rate");
+                *reads -= 1;
+            }
+        }
+    }
+}
+
+#[test]
+fn envelope_cell_reads_are_never_torn_and_stay_coherent() {
+    let old = 10.0f64.to_bits();
+    let new = 25.0f64.to_bits();
+    let shared = CellState { bits: old };
+    let threads = vec![
+        CellThread::Writer { fired: false, new },
+        CellThread::Reader { reads: 3, seen_new: false, old, new },
+    ];
+    let mut terminal = 0usize;
+    explore(&shared, &threads, &mut |s| {
+        terminal += 1;
+        assert_eq!(s.bits, new, "the write must eventually be visible");
+    });
+    // 1 writer step interleaved into 3 reader steps: 4 schedules
+    assert_eq!(terminal, 4);
+}
+
+// --- model 3: governor re-targeting vs. the observe loop ---------------
+
+/// Degradation ladder the observe loop walks (most-accurate first).
+const LEVELS: [f64; 3] = [1.0, 0.5, 0.25];
+
+/// Governor state under one lock: the envelope rate, the ladder
+/// position, and the published budget multiplier.
+#[derive(Clone)]
+struct GovState {
+    rate: f64,
+    level: usize,
+    budget: f64,
+}
+
+#[derive(Clone)]
+enum GovThread {
+    /// The observe loop: each step is one locked decision window
+    /// comparing a fixed measured rate against the envelope and moving
+    /// one rung (the `Governor::observe` shape).
+    Observer { windows: usize, measured: f64 },
+    /// `set_envelope_rate`: re-target the envelope mid-run.
+    Retarget { fired: bool, new_rate: f64 },
+}
+
+impl ModelThread<GovState> for GovThread {
+    fn done(&self) -> bool {
+        match self {
+            GovThread::Observer { windows, .. } => *windows == 0,
+            GovThread::Retarget { fired, .. } => *fired,
+        }
+    }
+
+    fn runnable(&self, _s: &GovState) -> bool {
+        true
+    }
+
+    fn step(&mut self, s: &mut GovState) {
+        match self {
+            GovThread::Observer { windows, measured } => {
+                if *measured > s.rate {
+                    s.level = (s.level + 1).min(LEVELS.len() - 1);
+                } else {
+                    s.level = s.level.saturating_sub(1);
+                }
+                s.budget = LEVELS[s.level];
+                *windows -= 1;
+            }
+            GovThread::Retarget { fired, new_rate } => {
+                s.rate = *new_rate;
+                *fired = true;
+            }
+        }
+    }
+}
+
+#[test]
+fn retargeting_mid_run_keeps_the_budget_positive_and_the_level_in_range() {
+    // measured load of 20 Gflips/s: a breach under the initial 10
+    // envelope, clear under the re-targeted 40 — every interleaving of
+    // the re-target among the windows must stay inside the ladder
+    let shared = GovState { rate: 10.0, level: 0, budget: LEVELS[0] };
+    let threads = vec![
+        GovThread::Observer { windows: 4, measured: 20.0 },
+        GovThread::Retarget { fired: false, new_rate: 40.0 },
+    ];
+    let mut terminal = 0usize;
+    explore(&shared, &threads, &mut |s| {
+        terminal += 1;
+        assert!(s.level < LEVELS.len());
+        assert!(s.budget > 0.0 && s.budget <= 1.0);
+        assert_eq!(s.rate, 40.0);
+    });
+    // 1 re-target step into 4 windows: 5 schedules
+    assert_eq!(terminal, 5);
+}

@@ -2,6 +2,10 @@
 //! proptest): randomized invariants over quantizers, the unsigned
 //! split, power models and the toggle simulators.
 
+// The panic ban in clippy.toml targets the serving layer
+// (coordinator/, net/); CLI/test/bench crates may assert freely.
+#![allow(clippy::disallowed_methods, clippy::disallowed_macros)]
+
 use pann::bitflip::{BoothMultiplier, Multiplier, SerialMultiplier};
 use pann::nn::gemm;
 use pann::quant::pann::PannQuant;
@@ -379,4 +383,154 @@ fn prop_pareto_menu_monotone_and_select_undominated() {
             }
         }
     }
+}
+
+#[test]
+fn prop_kernel_cert_acc_hull_matches_i128_brute_force() {
+    use pann::analysis::{Interval, KernelCert};
+    let mut rng = Rng::new(104);
+    for case in 0..CASES {
+        // operand magnitudes up to 2^16 and depths up to 4096, so
+        // depth·act·|w| straddles the i32 boundary from both sides
+        let act_hi = 1i128 << (1 + rng.below(16));
+        let act_lo = if rng.below(2) == 0 { 0 } else { -act_hi };
+        let w_mag = 1i128 << (1 + rng.below(16));
+        let (w_lo, w_hi) = match rng.below(3) {
+            0 => (-w_mag, w_mag),
+            1 => (0, w_mag),
+            _ => (-w_mag, 0),
+        };
+        let depth = 1 + rng.below(4096) as u64;
+        let split = rng.below(2) == 0;
+        let cert = KernelCert::certify(
+            Interval::new(act_lo, act_hi),
+            Interval::new(w_lo, w_hi),
+            depth,
+            split,
+        );
+
+        // Brute-force extrema by construction: a dot product is a sum of
+        // `depth` independent per-element products, so its extrema are
+        // reached by `depth` copies of the extreme corner pair. Sum those
+        // copies one by one in i128 — an independent route to the hull.
+        let corners = [
+            (act_lo, w_lo),
+            (act_lo, w_hi),
+            (act_hi, w_lo),
+            (act_hi, w_hi),
+        ];
+        let pmax = corners.iter().map(|&(a, w)| a * w).max().unwrap();
+        let pmin = corners.iter().map(|&(a, w)| a * w).min().unwrap();
+        let (mut smax, mut smin) = (0i128, 0i128);
+        for _ in 0..depth {
+            smax += pmax;
+            smin += pmin;
+        }
+        assert_eq!((cert.acc.lo, cert.acc.hi), (smin, smax), "case {case}");
+
+        // the verdicts are exactly the brute-force fit checks
+        let ops_i32 = act_lo >= i32::MIN as i128
+            && act_hi <= i32::MAX as i128
+            && w_lo >= i32::MIN as i128
+            && w_hi <= i32::MAX as i128;
+        let sum_i32 = smin >= i32::MIN as i128 && smax <= i32::MAX as i128;
+        assert_eq!(cert.i32_ok, sum_i32 && ops_i32, "case {case}");
+        let ops_i16 = act_lo >= i16::MIN as i128
+            && act_hi <= i16::MAX as i128
+            && w_lo >= i16::MIN as i128
+            && w_hi <= i16::MAX as i128;
+        assert_eq!(cert.packed_i16_ok, cert.i32_ok && ops_i16, "case {case}");
+
+        if split {
+            // split banks: p = max(w, 0), n = max(−w, 0); brute-force each
+            // bank's extreme partial sum the same constructive way
+            let (p_lo, p_hi) = (w_lo.max(0), w_hi.max(0));
+            let (n_lo, n_hi) = ((-w_hi).max(0), (-w_lo).max(0));
+            for (bank, (b_lo, b_hi)) in
+                [(cert.pos_acc, (p_lo, p_hi)), (cert.neg_acc, (n_lo, n_hi))]
+            {
+                let bc = [
+                    act_lo * b_lo,
+                    act_lo * b_hi,
+                    act_hi * b_lo,
+                    act_hi * b_hi,
+                ];
+                let (mut bmax, mut bmin) = (0i128, 0i128);
+                for _ in 0..depth {
+                    bmax += bc.iter().max().unwrap();
+                    bmin += bc.iter().min().unwrap();
+                }
+                assert_eq!((bank.lo, bank.hi), (bmin, bmax), "case {case}");
+            }
+            let diff_lo = cert.pos_acc.lo - cert.neg_acc.hi;
+            let diff_hi = cert.pos_acc.hi - cert.neg_acc.lo;
+            let all_i64 = [
+                cert.pos_acc.lo,
+                cert.pos_acc.hi,
+                cert.neg_acc.lo,
+                cert.neg_acc.hi,
+                diff_lo,
+                diff_hi,
+            ]
+            .iter()
+            .all(|&v| v >= i64::MIN as i128 && v <= i64::MAX as i128);
+            assert_eq!(cert.i64_ok, all_i64, "case {case}");
+        } else {
+            let sum_i64 = smin >= i64::MIN as i128 && smax <= i64::MAX as i128;
+            assert_eq!(cert.i64_ok, sum_i64, "case {case}");
+        }
+    }
+}
+
+#[test]
+fn prop_admitted_narrow_wrapping_fold_equals_true_sum() {
+    use pann::analysis::{Interval, KernelCert};
+    let mut rng = Rng::new(105);
+    let mut admitted = 0usize;
+    for _ in 0..CASES {
+        let depth = 1 + rng.below(512);
+        let act_hi = 1 + rng.below(1 << 12) as i128;
+        let w_mag = 1 + rng.below(1 << 12) as i128;
+        let acts: Vec<i64> = (0..depth).map(|_| rng.range_i64(0, act_hi as i64)).collect();
+        let ws: Vec<i64> = (0..depth)
+            .map(|_| rng.range_i64(-(w_mag as i64), w_mag as i64))
+            .collect();
+        let cert = KernelCert::certify(
+            Interval::new(0, act_hi),
+            Interval::new(-w_mag, w_mag),
+            depth as u64,
+            false,
+        );
+        let true_sum: i128 = acts
+            .iter()
+            .zip(&ws)
+            .map(|(&a, &w)| a as i128 * w as i128)
+            .sum();
+        assert!(
+            cert.acc.contains(true_sum),
+            "every concrete dot product lies in the certified hull"
+        );
+        if cert.admits_narrow() {
+            admitted += 1;
+            // fold in wrapping i32, exactly like the narrow kernels
+            let mut acc = 0i32;
+            for (&a, &w) in acts.iter().zip(&ws) {
+                acc = acc.wrapping_add((a as i32).wrapping_mul(w as i32));
+            }
+            assert_eq!(acc as i128, true_sum, "narrow verdict must be exact");
+        }
+    }
+    assert!(admitted > 0, "sampler never produced an admitted config");
+
+    // and a certified-unsafe config really can wrap: the greedy extreme
+    // vector overflows i32 while the wrapped fold silently disagrees
+    let cert = KernelCert::certify(Interval::new(0, 1 << 10), Interval::new(0, 1 << 12), 1024, false);
+    assert!(!cert.admits_narrow());
+    let (a, w, depth) = (1i64 << 10, 1i64 << 12, 1024usize);
+    let true_sum = (a as i128) * (w as i128) * depth as i128;
+    let mut acc = 0i32;
+    for _ in 0..depth {
+        acc = acc.wrapping_add((a as i32).wrapping_mul(w as i32));
+    }
+    assert_ne!(acc as i128, true_sum, "the rejected config does overflow");
 }
