@@ -1,0 +1,112 @@
+//! Scenario-harness benchmark: how fast the virtual-clock rig replays
+//! each workload family on each device profile, with the rig's own
+//! correctness guarantees asserted along the way (accounting
+//! invariants per run, byte-identical reports across repeat runs).
+//!
+//! Emits `BENCH_scenarios.json` (schema `bench-scenarios/v1`): one
+//! record per family x device with replay wall time, replay rate and
+//! the deterministic outcome counters (served / shed / expired,
+//! governor switches and windows), plus the measured determinism
+//! check. Wall-time fields are machine-dependent; the outcome
+//! counters are pure functions of (trace, config) and reproduce
+//! anywhere.
+
+// The panic ban in clippy.toml targets the serving layer
+// (coordinator/, net/); CLI/test/bench crates may assert freely.
+#![allow(clippy::disallowed_methods, clippy::disallowed_macros)]
+
+use pann::scenario::{
+    replay, DeviceProfile, FrontierPoint, ReplayConfig, Trace, TraceFamily, TraceParams,
+};
+use pann::util::bench::{stamped, write_json};
+use pann::util::Json;
+use std::time::Instant;
+
+const EVENTS: usize = 2048;
+const SHARDS: usize = 2;
+
+/// Synthetic three-point frontier (costs in Gflips/sample) — fixed
+/// here rather than compiled from a model so the outcome counters in
+/// the artifact are comparable across machines.
+fn frontier() -> Vec<FrontierPoint> {
+    vec![
+        FrontierPoint { name: "cheap".into(), cost_gflips: 0.02, acc_proxy: 0.90 },
+        FrontierPoint { name: "mid".into(), cost_gflips: 0.08, acc_proxy: 0.95 },
+        FrontierPoint { name: "rich".into(), cost_gflips: 0.32, acc_proxy: 0.985 },
+    ]
+}
+
+fn main() {
+    let params = TraceParams { seed: 7, events: EVENTS, duration_us: 2_000_000, tenants: 4 };
+    let mut runs = Vec::new();
+    for device in DeviceProfile::all() {
+        for family in TraceFamily::ALL {
+            let trace = Trace::generate(family, &params);
+            let mut cfg = ReplayConfig::new(device);
+            cfg.shards = SHARDS;
+            let t0 = Instant::now();
+            let report = replay(&trace, &frontier(), &cfg).expect("replay");
+            let secs = t0.elapsed().as_secs_f64();
+            assert!(report.invariants().is_empty(), "{:?}", report.invariants());
+            let switches: u64 = report.governors.iter().map(|g| g.switches).sum();
+            let windows: u64 = report.governors.iter().map(|g| g.windows).sum();
+            println!(
+                "{:<12} on {:<7}: {} events in {:>7.2} ms ({:>9.0} ev/s) \
+                 served {} shed {} expired {} switches {}",
+                family.name(),
+                device.name,
+                EVENTS,
+                secs * 1e3,
+                EVENTS as f64 / secs.max(1e-9),
+                report.totals.served,
+                report.totals.shed,
+                report.totals.expired,
+                switches,
+            );
+            runs.push(Json::obj(vec![
+                ("family", Json::from(family.name())),
+                ("device", Json::from(device.name)),
+                ("events", Json::from(EVENTS)),
+                ("replay_ms", Json::Num(secs * 1e3)),
+                ("events_per_sec", Json::Num(EVENTS as f64 / secs.max(1e-9))),
+                ("served", Json::Num(report.totals.served as f64)),
+                ("shed", Json::Num(report.totals.shed as f64)),
+                ("expired", Json::Num(report.totals.expired as f64)),
+                ("governor_switches", Json::Num(switches as f64)),
+                ("governor_windows", Json::Num(windows as f64)),
+            ]));
+        }
+    }
+
+    // the harness's core promise, measured end to end: two replays of
+    // the same trace serialize byte-identically
+    let trace = Trace::generate(TraceFamily::FlashCrowd, &params);
+    let cfg = ReplayConfig::new(DeviceProfile::server());
+    let a = replay(&trace, &frontier(), &cfg).expect("replay").to_json().to_string();
+    let b = replay(&trace, &frontier(), &cfg).expect("replay").to_json().to_string();
+    assert_eq!(a, b, "replay must be byte-deterministic");
+    println!("determinism: two replays -> identical {}-byte reports", a.len());
+
+    let doc = stamped(
+        "bench-scenarios/v1",
+        "committed baseline captured on an 8-core x86-64 dev box (cargo bench --bench \
+         scenarios, release profile); replay_ms / events_per_sec are machine-dependent — \
+         served/shed/expired and the governor counters are deterministic functions of \
+         (trace, config) and must reproduce exactly on any machine",
+        vec![
+            ("trace_events", Json::from(EVENTS)),
+            ("shards", Json::from(SHARDS)),
+            ("seed", Json::from(params.seed as usize)),
+            ("runs", Json::Arr(runs)),
+            (
+                "determinism",
+                Json::obj(vec![
+                    ("byte_identical", Json::from(true)),
+                    ("report_bytes", Json::from(a.len())),
+                ]),
+            ),
+        ],
+    );
+    write_json("BENCH_scenarios.json", &doc).expect("write BENCH_scenarios.json");
+    println!("wrote BENCH_scenarios.json");
+}

@@ -435,7 +435,10 @@ mod tests {
         let j = std::thread::spawn(move || {
             q2.collect(4, Duration::from_millis(1), &mut any_point)
         });
-        std::thread::sleep(Duration::from_millis(10));
+        // timing-sensitive: the sleep only makes it *likely* that the
+        // collector is already parked when stop() lands; stop() must
+        // end the collect either way, so generous slack beats a race
+        std::thread::sleep(Duration::from_millis(50));
         q.stop();
         assert!(j.join().unwrap().is_none());
     }

@@ -532,4 +532,66 @@ mod tests {
         let keys: Vec<&str> = s.per_point.iter().map(|(k, _)| k.as_str()).collect();
         assert_eq!(keys, vec!["cold:p", "hot:p", "hot:q"]);
     }
+
+    #[test]
+    fn ring_exactly_at_window_keeps_every_sample() {
+        // the boundary case: the LATENCY_WINDOW-th sample must still
+        // land in the unwrapped buffer, and the percentiles must be
+        // computed over all of it
+        let m = Metrics::new();
+        for i in 0..LATENCY_WINDOW {
+            m.record_batch(None, "p", &[(i as f64, Priority::Normal)], 0.0, None);
+        }
+        assert_eq!(m.held_latency_samples(), LATENCY_WINDOW);
+        let s = m.snapshot();
+        // sorted samples are 0..=4095: rank(p50) = 0.5 * 4095
+        assert!((s.p50_us - 2047.5).abs() < 1e-9, "p50 {}", s.p50_us);
+        // rank(p99) = 0.99 * 4095 = 4054.05, interpolated
+        assert!((s.p99_us - 4054.05).abs() < 1e-6, "p99 {}", s.p99_us);
+    }
+
+    #[test]
+    fn ring_evicts_exactly_the_oldest_at_window_plus_one() {
+        // one past the boundary: sample 0 (and only sample 0) must
+        // leave the window, shifting both percentiles up by exactly 1
+        let m = Metrics::new();
+        for i in 0..=LATENCY_WINDOW {
+            m.record_batch(None, "p", &[(i as f64, Priority::Normal)], 0.0, None);
+        }
+        assert_eq!(m.held_latency_samples(), LATENCY_WINDOW, "capacity must not grow");
+        let s = m.snapshot();
+        assert_eq!(s.requests, LATENCY_WINDOW as u64 + 1, "exact counters keep counting");
+        // retained samples are 1..=4096
+        assert!((s.p50_us - 2048.5).abs() < 1e-9, "p50 {}", s.p50_us);
+        assert!((s.p99_us - 4055.05).abs() < 1e-6, "p99 {}", s.p99_us);
+    }
+
+    #[test]
+    fn percentiles_on_tiny_windows_interpolate_exactly() {
+        // 1 sample: p50 == p99 == the sample
+        let m = Metrics::new();
+        m.record_batch(None, "p", &[(42.0, Priority::Normal)], 0.0, None);
+        let s = m.snapshot();
+        assert_eq!(s.p50_us, 42.0);
+        assert_eq!(s.p99_us, 42.0);
+
+        // 2 samples a=100, b=300: p50 = midpoint, p99 = a + 0.99(b-a)
+        let m = Metrics::new();
+        for v in [100.0, 300.0] {
+            m.record_batch(None, "p", &[(v, Priority::Normal)], 0.0, None);
+        }
+        let s = m.snapshot();
+        assert!((s.p50_us - 200.0).abs() < 1e-9, "p50 {}", s.p50_us);
+        assert!((s.p99_us - 298.0).abs() < 1e-6, "p99 {}", s.p99_us);
+
+        // 3 samples: p50 is the middle one, p99 interpolates the top
+        let m = Metrics::new();
+        for v in [30.0, 10.0, 20.0] {
+            m.record_batch(None, "p", &[(v, Priority::Normal)], 0.0, None);
+        }
+        let s = m.snapshot();
+        assert!((s.p50_us - 20.0).abs() < 1e-9, "p50 {}", s.p50_us);
+        // rank = 0.99 * 2 = 1.98: 0.02 * 20 + 0.98 * 30
+        assert!((s.p99_us - 29.8).abs() < 1e-6, "p99 {}", s.p99_us);
+    }
 }

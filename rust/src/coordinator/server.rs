@@ -1510,8 +1510,12 @@ mod tests {
         }
         assert!(degraded, "governor never stepped down under sustained load");
         // idle gap, then two probes: the first closes the idle windows
-        // (climbing back), the second is served at the top again
-        std::thread::sleep(Duration::from_millis(60));
+        // (climbing back), the second is served at the top again.
+        // timing-sensitive: the gap must cover >= hysteresis * window
+        // per climb step even on a loaded CI box, hence the slack
+        // (deterministic coverage of the same walk lives in the
+        // injected-clock governor tests and tests/scenarios.rs)
+        std::thread::sleep(Duration::from_millis(100));
         let _ = c.infer(vec![0.0; 3]).unwrap();
         let r = c.infer(vec![0.0; 3]).unwrap();
         assert_eq!(r.point, "rich", "idle period must climb back to the accurate point");
@@ -1830,10 +1834,12 @@ mod tests {
         let c = srv.client();
         let t1 = c.submit(InferRequest::new(vec![1.0, 0.0, 0.0])).unwrap();
         gate.wait_entered(1);
+        // an already-elapsed deadline expires deterministically the
+        // moment the scheduler reaches the queued request — no sleep,
+        // no race against the wall clock
         let t2 = c
-            .submit(InferRequest::new(vec![2.0, 0.0, 0.0]).deadline(Duration::from_millis(5)))
+            .submit(InferRequest::new(vec![2.0, 0.0, 0.0]).deadline(Duration::ZERO))
             .unwrap();
-        std::thread::sleep(Duration::from_millis(20)); // t2 expires while queued
         gate.open();
         t1.wait().unwrap();
         assert_eq!(t2.wait().unwrap_err(), ServeError::DeadlineExceeded);
@@ -2152,6 +2158,8 @@ mod tests {
                 .wait()
                 .unwrap();
             cold_points.push(rc.point);
+            // timing-sensitive: the pacing sleep must be >= the
+            // governor window for the share-floor argument to hold
             std::thread::sleep(Duration::from_millis(10));
         }
         assert!(

@@ -62,6 +62,14 @@
 //!   deadline-aware retry of shed requests, and a cluster energy
 //!   envelope split across shards by the fleet's demand-weighted
 //!   water-filling ([`coordinator::arbiter`]).
+//! - [`scenario`] — the trace-driven scenario harness: replayable
+//!   workload traces (`pann-trace/v1`; seeded diurnal / flash-crowd /
+//!   deadline-mix / tenant-skew generators), named device profiles
+//!   (`jetson`, `server`) parameterizing the power model per
+//!   deployment target, and a deterministic virtual-clock replay rig
+//!   that drives the real governor/policy/rendezvous placement and
+//!   emits byte-reproducible `scenario-report/v1` documents
+//!   (`pann-cli replay`).
 //! - [`analysis`] — the static soundness pass: exact i128 interval
 //!   arithmetic ([`analysis::Interval`]) proving per-layer overflow
 //!   bounds into [`analysis::KernelCert`] certificates. The plan
@@ -106,4 +114,5 @@ pub mod pann;
 pub mod power;
 pub mod quant;
 pub mod runtime;
+pub mod scenario;
 pub mod util;

@@ -15,8 +15,19 @@
 //!               [--budget GFLIPS] [--queue-depth D]
 //!               [--envelope-gflips RATE] [--governor-window-ms MS]
 //! pann-cli sweep --model NAME [--quick]
+//! pann-cli replay --trace trace.json --menu menu.json [--device jetson|server]
+//!                [--shards N] [--envelope-gflips RATE] [--governor-window-ms MS]
+//!                [--quick] [--out report.json]
 //! pann-cli list
 //! ```
+//!
+//! `replay` is the scenario harness's CLI surface: a `pann-trace/v1`
+//! workload replays through the deterministic virtual-clock rig
+//! ([`pann::scenario`]) against the compiled menu on a named device
+//! profile. The human summary prints to stderr and the
+//! `scenario-report/v1` JSON to stdout; exit codes follow the verify
+//! contract (0 invariants hold, 1 operational error, 2 findings). Two
+//! runs with the same inputs print byte-identical reports.
 //!
 //! `--listen` switches `serve` from a local replay to the network
 //! edge: the compiled menu is served over HTTP (`POST /v1/infer`,
@@ -287,6 +298,36 @@ fn run() -> Result<()> {
                 .to_string();
             verify_menu(&ctx, &menu, args.get("model"))
         }
+        "replay" => {
+            let usage = "usage: pann-cli replay --trace trace.json --menu menu.json \
+                         [--device jetson|server] [--shards N] [--envelope-gflips RATE] \
+                         [--governor-window-ms MS] [--quick] [--out report.json]";
+            let trace_path = args.get("trace").context(usage)?;
+            let menu_path = args.get("menu").context(usage)?;
+            let device = args.get("device").unwrap_or("server");
+            let shards: usize = args.get("shards").map_or(Ok(1), |s| s.parse())?;
+            if shards == 0 {
+                bail!("--shards must be at least 1");
+            }
+            let envelope: Option<f64> = match args.get("envelope-gflips") {
+                Some(s) => Some(s.parse().context("parse --envelope-gflips")?),
+                None => None,
+            };
+            let window_ms: Option<u64> = match args.get("governor-window-ms") {
+                Some(s) => Some(s.parse().context("parse --governor-window-ms")?),
+                None => None,
+            };
+            replay_cmd(
+                trace_path,
+                menu_path,
+                device,
+                shards,
+                envelope,
+                window_ms,
+                args.has("quick"),
+                args.get("out"),
+            )
+        }
         _ => {
             println!(
                 "pann-cli — power-aware neural networks (PANN reproduction)\n\
@@ -310,7 +351,12 @@ fn run() -> Result<()> {
                  \x20 verify --menu menu.json [--model M]\n\
                  \x20                                 static overflow audit of a menu artifact\n\
                  \x20                                 (exit 0 sound / 1 error / 2 findings,\n\
-                 \x20                                 pann-verify/v1 JSON report on stdout)\n"
+                 \x20                                 pann-verify/v1 JSON report on stdout)\n\
+                 \x20 replay --trace t.json --menu menu.json [--device jetson|server]\n\
+                 \x20        [--shards N] [--envelope-gflips RATE] [--quick] [--out r.json]\n\
+                 \x20                                 deterministic trace replay through the\n\
+                 \x20                                 scenario rig (exit 0 sound / 1 error /\n\
+                 \x20                                 2 findings, scenario-report/v1 on stdout)\n"
             );
             Ok(())
         }
@@ -926,6 +972,67 @@ fn hold_until_stdin_eof() {
             Ok(_) => {}
         }
     }
+}
+
+/// Deterministic scenario replay (`pann-cli replay`): feed a
+/// `pann-trace/v1` workload through the virtual-clock rig against a
+/// compiled menu on a named device profile. Human summary on stderr,
+/// `scenario-report/v1` JSON on stdout; exit 0 when the report's
+/// accounting invariants hold, 1 on operational errors, 2 with
+/// findings (printed to stderr).
+#[allow(clippy::too_many_arguments)]
+fn replay_cmd(
+    trace_path: &str,
+    menu_path: &str,
+    device_name: &str,
+    shards: usize,
+    envelope: Option<f64>,
+    governor_window_ms: Option<u64>,
+    quick: bool,
+    out: Option<&str>,
+) -> Result<()> {
+    use pann::scenario::{frontier_from_menu, DeviceProfile, ReplayConfig, Trace};
+    let trace = Trace::load(std::path::Path::new(trace_path))
+        .with_context(|| format!("load trace {trace_path}"))?;
+    let artifact = pann::pann::MenuArtifact::load(std::path::Path::new(menu_path))
+        .with_context(|| format!("load menu artifact {menu_path}"))?;
+    let device = DeviceProfile::by_name(device_name).with_context(|| {
+        let names: Vec<&str> = DeviceProfile::all().iter().map(|d| d.name).collect();
+        format!("unknown device '{device_name}' (known: {})", names.join(", "))
+    })?;
+    let frontier = frontier_from_menu(&artifact, &device);
+    if frontier.is_empty() {
+        bail!("menu {menu_path} has no frontier points to replay");
+    }
+    let mut cfg = ReplayConfig::new(device);
+    cfg.shards = shards;
+    cfg.envelope_gflips_per_sec = envelope;
+    if let Some(ms) = governor_window_ms {
+        if ms == 0 {
+            bail!("--governor-window-ms must be at least 1");
+        }
+        cfg.governor_window_us = ms * 1_000;
+    }
+    if quick {
+        cfg.max_events = Some(64);
+    }
+    let report = pann::scenario::replay(&trace, &frontier, &cfg)?;
+    eprint!("{}", report.summary());
+    let doc = report.to_json();
+    if let Some(path) = out {
+        pann::util::bench::write_json(path, &doc)
+            .with_context(|| format!("write report {path}"))?;
+        eprintln!("report written to {path}");
+    }
+    println!("{doc}");
+    let findings = report.invariants();
+    if !findings.is_empty() {
+        for f in &findings {
+            eprintln!("finding: {f}");
+        }
+        std::process::exit(2);
+    }
+    Ok(())
 }
 
 /// Fig. 1 power–accuracy sweep on the native engine.

@@ -33,4 +33,6 @@ pub mod shard;
 pub mod wire;
 
 pub use server::{NetConfig, NetServer};
-pub use shard::{RouterSnapshot, ShardRouter, ShardRouterBuilder, ShardStatus, ShardTicket};
+pub use shard::{
+    rendezvous_order, RouterSnapshot, ShardRouter, ShardRouterBuilder, ShardStatus, ShardTicket,
+};

@@ -198,6 +198,22 @@ fn fnv1a(mut seed: u64, bytes: &[u8]) -> u64 {
 
 const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
 
+/// Rendezvous (highest-random-weight) shard preference order for an
+/// affinity `key` over `n` shards: every shard's weight is the FNV-1a
+/// hash of the key folded with the shard index, sorted descending.
+/// Deterministic, and stable as long as `n` is — the property the
+/// router's cache-affinity story rests on. Exposed so the scenario
+/// replay harness ([`crate::scenario`]) places keyed trace events on
+/// exactly the shard the real router would pick.
+pub fn rendezvous_order(key: &str, n: usize) -> Vec<usize> {
+    let h0 = fnv1a(FNV_OFFSET, key.as_bytes());
+    let mut order: Vec<usize> = (0..n).collect();
+    // ties (impossible in practice) break on shard index for
+    // determinism
+    order.sort_by_key(|&i| (std::cmp::Reverse(fnv1a(h0, &(i as u64).to_le_bytes())), i));
+    order
+}
+
 impl ShardRouter {
     /// Start building a router.
     pub fn builder() -> ShardRouterBuilder {
@@ -221,16 +237,7 @@ impl ShardRouter {
     fn order(&self, req: &InferRequest) -> Vec<usize> {
         let n = self.shards.len();
         match &req.affinity {
-            Some(key) => {
-                let h0 = fnv1a(FNV_OFFSET, key.as_bytes());
-                let mut order: Vec<usize> = (0..n).collect();
-                // highest-random-weight first; ties (impossible in
-                // practice) break on shard index for determinism
-                order.sort_by_key(|&i| {
-                    (std::cmp::Reverse(fnv1a(h0, &(i as u64).to_le_bytes())), i)
-                });
-                order
-            }
+            Some(key) => rendezvous_order(key, n),
             None => {
                 let start = self.rr.fetch_add(1, Ordering::Relaxed) % n;
                 (start..n).chain(0..start).collect()

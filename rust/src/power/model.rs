@@ -23,6 +23,19 @@ impl PowerBreakdown {
     pub fn total(&self) -> f64 {
         self.mult + self.acc
     }
+
+    /// Both components scaled by a device-class energy factor.
+    ///
+    /// The per-instruction formulas above count *logical* bit flips;
+    /// what a flip costs in joules depends on the silicon it runs on
+    /// (process node, cell library). Device profiles
+    /// ([`crate::scenario::DeviceProfile`]) express that as one scalar
+    /// multiplier applied uniformly to both halves of the breakdown,
+    /// keeping the mult/acc ratio — which is what the paper's
+    /// equations predict — device-independent.
+    pub fn scaled(&self, factor: f64) -> PowerBreakdown {
+        PowerBreakdown { mult: self.mult * factor, acc: self.acc * factor }
+    }
 }
 
 /// Eq. (1)+(2): signed `b×b` MAC with a `B`-bit accumulator.
@@ -112,6 +125,14 @@ mod tests {
     fn pann_eq13() {
         assert_eq!(pann_power_per_element(2.0, 4), 10.0);
         assert_eq!(pann_power_per_element(0.5, 8), 8.0);
+    }
+
+    #[test]
+    fn scaled_preserves_mult_acc_ratio() {
+        let p = mac_power_signed(4, 32);
+        let s = p.scaled(1.25);
+        assert!((s.total() - p.total() * 1.25).abs() < 1e-12);
+        assert!((s.mult / s.acc - p.mult / p.acc).abs() < 1e-12);
     }
 
     #[test]

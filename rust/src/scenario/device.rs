@@ -1,0 +1,158 @@
+//! Named device profiles — per-device parameterizations of the
+//! paper's power model.
+//!
+//! The per-instruction formulas in [`crate::power::model`] count
+//! *logical* bit flips; what a flip costs, how many the device can
+//! execute per second, and how deep its admission queue runs are all
+//! properties of the deployment target. Hashemi et al. (PAPERS.md)
+//! show energy/accuracy conclusions shift materially across device
+//! classes, so the scenario harness makes the device an explicit,
+//! named input: the same trace replayed under `jetson` and `server`
+//! answers "what does this envelope do to p99 and accuracy on device
+//! X" without touching the menu.
+//!
+//! Two calibrated classes ship today:
+//!
+//! | profile  | process scale | acc. width | envelope (GF/s) | drain (GF/s) | queue |
+//! |----------|---------------|------------|-----------------|--------------|-------|
+//! | `jetson` | 0.8           | 32 bit     | 4               | 25           | 16    |
+//! | `server` | 1.0           | 64 bit     | 40              | 250          | 64    |
+//!
+//! The *flip-energy scale* each profile applies to menu costs is
+//! derived from the power model itself rather than stated: it is the
+//! process scale times the ratio of the device's signed-MAC flip count
+//! (at its accumulator width, Eq. (2): `P_acc = 0.5·B + 2b`) to the
+//! 32-bit reference — a server-class 64-bit accumulator makes every
+//! flip-count higher, a low-power process makes each flip cheaper.
+
+use crate::power::model::{mac_power_signed, PowerBreakdown};
+
+/// Reference operand width used to derive the accumulator-width part
+/// of the flip-energy scale.
+const REF_BITS: u32 = 8;
+
+/// One named deployment target.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DeviceProfile {
+    /// Stable profile name (`--device` on the CLI).
+    pub name: &'static str,
+    /// Silicon/process energy factor applied to logical flip counts
+    /// (see [`PowerBreakdown::scaled`]).
+    pub process_scale: f64,
+    /// Physical accumulator width, bits (Eq. (2) parameter `B`).
+    pub acc_bits: u32,
+    /// Default sustained energy envelope, Giga bit flips per second.
+    pub envelope_gflips_per_sec: f64,
+    /// Compute throughput: the rate a busy device retires modeled
+    /// flips, Giga bit flips per second. Virtual service time of a
+    /// request is `point cost / this rate`.
+    pub service_gflips_per_sec: f64,
+    /// Admission-queue bound per shard.
+    pub queue_depth: usize,
+}
+
+impl DeviceProfile {
+    /// Jetson-class edge device: low-power process, 32-bit
+    /// accumulators, tight envelope, modest drain rate.
+    pub fn jetson() -> DeviceProfile {
+        DeviceProfile {
+            name: "jetson",
+            process_scale: 0.8,
+            acc_bits: 32,
+            envelope_gflips_per_sec: 4.0,
+            service_gflips_per_sec: 25.0,
+            queue_depth: 16,
+        }
+    }
+
+    /// Server-class machine: standard process, 64-bit accumulators,
+    /// wide envelope, high drain rate.
+    pub fn server() -> DeviceProfile {
+        DeviceProfile {
+            name: "server",
+            process_scale: 1.0,
+            acc_bits: 64,
+            envelope_gflips_per_sec: 40.0,
+            service_gflips_per_sec: 250.0,
+            queue_depth: 64,
+        }
+    }
+
+    /// Every named profile, CLI/report order.
+    pub fn all() -> [DeviceProfile; 2] {
+        [DeviceProfile::jetson(), DeviceProfile::server()]
+    }
+
+    /// Look a profile up by its [`DeviceProfile::name`].
+    pub fn by_name(name: &str) -> Option<DeviceProfile> {
+        DeviceProfile::all().into_iter().find(|d| d.name == name)
+    }
+
+    /// The factor menu costs are multiplied by on this device: process
+    /// scale × (device signed-MAC flips at `acc_bits` / 32-bit
+    /// reference flips), both at the [`REF_BITS`] operand width.
+    pub fn flip_energy_scale(&self) -> f64 {
+        let reference = mac_power_signed(REF_BITS, 32).total();
+        let device = self.mac_breakdown(REF_BITS).total();
+        device / reference
+    }
+
+    /// This device's per-MAC breakdown at operand width `b`: the
+    /// paper's signed-MAC model at the device accumulator width,
+    /// scaled by the process factor.
+    pub fn mac_breakdown(&self, b: u32) -> PowerBreakdown {
+        mac_power_signed(b, self.acc_bits).scaled(self.process_scale)
+    }
+
+    /// A menu point's effective per-sample cost on this device.
+    pub fn point_cost(&self, gflips_per_sample: f64) -> f64 {
+        gflips_per_sample * self.flip_energy_scale()
+    }
+
+    /// Virtual service time for one request at `cost_gflips` on this
+    /// device, microseconds (at least 1).
+    pub fn service_us(&self, cost_gflips: f64) -> u64 {
+        ((cost_gflips / self.service_gflips_per_sec) * 1e6).ceil().max(1.0) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_roundtrips() {
+        for d in DeviceProfile::all() {
+            assert_eq!(DeviceProfile::by_name(d.name), Some(d));
+        }
+        assert_eq!(DeviceProfile::by_name("toaster"), None);
+    }
+
+    #[test]
+    fn jetson_flips_are_cheaper_per_sample() {
+        let j = DeviceProfile::jetson().flip_energy_scale();
+        let s = DeviceProfile::server().flip_energy_scale();
+        // low-power process beats the reference; 64-bit accumulators
+        // cost more than the 32-bit reference
+        assert!(j < 1.0, "jetson scale {j}");
+        assert!(s > 1.0, "server scale {s}");
+        assert!(j < s);
+    }
+
+    #[test]
+    fn server_scale_matches_eq2_by_hand() {
+        // signed MAC at b=8: mult = 0.5·64 + 8 = 40;
+        // acc(B=32) = 16 + 16 = 32 → 72; acc(B=64) = 32 + 16 = 48 → 88
+        let s = DeviceProfile::server().flip_energy_scale();
+        assert!((s - 88.0 / 72.0).abs() < 1e-12, "scale {s}");
+    }
+
+    #[test]
+    fn service_time_scales_with_cost_and_never_rounds_to_zero() {
+        let d = DeviceProfile::server();
+        assert_eq!(d.service_us(0.0), 1);
+        let one = d.service_us(0.25); // 0.25 GF / 250 GF/s = 1 ms
+        assert_eq!(one, 1_000);
+        assert_eq!(d.service_us(0.5), 2 * one);
+    }
+}

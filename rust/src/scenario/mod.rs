@@ -1,0 +1,51 @@
+//! Trace-driven scenario harness: replayable workloads, per-device
+//! power profiles, and a deterministic fleet test rig.
+//!
+//! The serving stack ([`crate::coordinator`], [`crate::net`]) is
+//! exercised everywhere else by live tests that pace real threads with
+//! sleeps — useful as smoke, but slow, racy under CI load, and unable
+//! to answer the questions the paper's deployment story raises:
+//! *what does a flash crowd do to p99 under a 4 GF/s envelope? does a
+//! hot tenant starve a cold one? which priority class sheds first?*
+//! This module answers those questions reproducibly:
+//!
+//! - [`trace`] — a versioned workload format (`pann-trace/v1`): each
+//!   event is an arrival offset in virtual microseconds plus the full
+//!   per-request QoS surface (deadline, energy cap, priority, affinity
+//!   key). Seeded generators produce four workload families — diurnal
+//!   cycles, flash crowds, adversarial deadline mixes, multi-tenant
+//!   skew — and the same seed regenerates the same trace byte for
+//!   byte. No generator reads a wall clock.
+//! - [`device`] — named [`DeviceProfile`]s (`jetson`, `server`): the
+//!   paper's power model parameterized per deployment target
+//!   (process-energy scale, accumulator width, default envelope,
+//!   drain rate, queue depth), so one menu replays differently — and
+//!   comparably — across device classes.
+//! - [`replay`] — the deterministic rig: a virtual-clock
+//!   discrete-event engine that drives the *real* [`Governor`]
+//!   (injected instants), the *real* [`PowerPolicy`] and the router's
+//!   *real* rendezvous placement over N simulated shards, and folds
+//!   the outcome into a provenance-stamped [`ScenarioReport`]
+//!   (`scenario-report/v1`): per-window p50/p99 and shed/expired
+//!   counts, per-priority and per-tenant outcomes, per-shard governor
+//!   residency and switches. Identical inputs produce byte-identical
+//!   reports.
+//!
+//! Three surfaces share this engine: `pann-cli replay --trace t.json
+//! --menu menu.json [--device jetson] [--shards N]`, the scenario
+//! matrix in `tests/scenarios.rs`, and `benches/scenarios.rs` (the
+//! committed `BENCH_scenarios.json`).
+//!
+//! [`Governor`]: crate::coordinator::Governor
+//! [`PowerPolicy`]: crate::coordinator::PowerPolicy
+
+pub mod device;
+pub mod replay;
+pub mod trace;
+
+pub use device::DeviceProfile;
+pub use replay::{
+    frontier_from_menu, replay, FrontierPoint, OutcomeCounts, ReplayConfig, ScenarioReport,
+    ShardGovernorSummary, WindowStat, REPORT_SCHEMA,
+};
+pub use trace::{priority_from_name, Trace, TraceEvent, TraceFamily, TraceParams, TRACE_SCHEMA};

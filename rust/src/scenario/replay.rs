@@ -1,0 +1,976 @@
+//! Deterministic trace replay against a virtual clock.
+//!
+//! The replay engine is a discrete-event simulation over virtual
+//! microsecond offsets that reuses the *real* serving-stack decision
+//! components rather than re-modeling them:
+//!
+//! - point selection is a real [`PowerPolicy`] over the menu frontier,
+//!   selecting under `min(governed budget, per-request cap)` exactly
+//!   like the server's scheduler;
+//! - the energy feedback loop is a real [`Governor`] per shard, driven
+//!   with injected [`Instant`]s derived from virtual time (the same
+//!   synthetic-instant protocol the governor unit tests use — the
+//!   governor never reads the wall clock);
+//! - keyed shard placement is the router's own rendezvous rule,
+//!   [`crate::net::rendezvous_order`]; keyless events rotate
+//!   round-robin, as in [`crate::net::ShardRouter`].
+//!
+//! Around those components the simulation models each shard as a
+//! single-server queue: three priority lanes drained highest-first, a
+//! bounded total depth, deterministic per-request service time
+//! `point cost / device drain rate`
+//! ([`DeviceProfile::service_us`]), and start-time deadline expiry
+//! (matching the scheduler's start-by contract). When a shard is full
+//! the simulation first tries to *evict* the newest request from the
+//! lowest-priority non-empty lane below the arrival's class (the
+//! single-shard analogue of the router shedding cheap work and
+//! retrying it elsewhere), then walks the remaining shards in
+//! preference order, and only then sheds the arrival itself.
+//!
+//! Because every input is virtual and every component deterministic,
+//! a [`ScenarioReport`] contains **no wall-clock data at all**: two
+//! replays of the same trace under the same config produce
+//! byte-identical JSON. That is the property the CI scenario leg
+//! checks by diffing two independent `pann-cli replay` runs.
+
+use super::device::DeviceProfile;
+use super::trace::Trace;
+use crate::coordinator::{Costed, EnergyEnvelope, Governor, GovernorConfig, PowerPolicy, Priority};
+use crate::net::rendezvous_order;
+use crate::pann::menu::MenuArtifact;
+use crate::util::{bench, stats, Json};
+use anyhow::{ensure, Context, Result};
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Schema tag every scenario report carries.
+pub const REPORT_SCHEMA: &str = "scenario-report/v1";
+
+/// Provenance string stamped on every report. Deliberately free of
+/// timestamps: the report must be byte-identical across runs.
+const REPORT_PROVENANCE: &str =
+    "deterministic virtual-clock replay; identical trace and config reproduce this report \
+     byte-for-byte";
+
+/// Number of priority lanes (mirrors the server's queue).
+const N_LANES: usize = 3;
+
+/// One operating point of the replayed frontier: a name, a per-sample
+/// energy cost (already device-scaled), and the validation accuracy
+/// the menu compiler measured for it — the accuracy proxy realized
+/// throughput is scored with.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FrontierPoint {
+    /// Point name (menu order key).
+    pub name: String,
+    /// Per-sample cost on the replay device, Giga bit flips.
+    pub cost_gflips: f64,
+    /// Validation accuracy of the point, `[0, 1]`.
+    pub acc_proxy: f64,
+}
+
+impl Costed for FrontierPoint {
+    fn point_name(&self) -> &str {
+        &self.name
+    }
+    fn cost_gflips(&self) -> f64 {
+        self.cost_gflips
+    }
+}
+
+/// Lift a compiled menu artifact onto `device`: every point's modeled
+/// cost is scaled by the device's flip-energy factor
+/// ([`DeviceProfile::point_cost`]), sorted ascending, with
+/// duplicate-cost points dropped (the governor's budget cell cannot
+/// distinguish them — same rule as [`Governor`] construction).
+pub fn frontier_from_menu(menu: &MenuArtifact, device: &DeviceProfile) -> Vec<FrontierPoint> {
+    let mut points: Vec<FrontierPoint> = menu
+        .points
+        .iter()
+        .map(|p| FrontierPoint {
+            name: p.name.clone(),
+            cost_gflips: device.point_cost(p.gflips_per_sample),
+            acc_proxy: p.val_acc,
+        })
+        .collect();
+    points.sort_by(|a, b| a.cost_gflips.total_cmp(&b.cost_gflips));
+    points.dedup_by(|b, a| a.cost_gflips == b.cost_gflips);
+    points
+}
+
+/// Replay knobs beyond the trace and the frontier.
+#[derive(Clone, Copy, Debug)]
+pub struct ReplayConfig {
+    /// Device profile costs, drain rate and queue depth come from.
+    pub device: DeviceProfile,
+    /// Number of simulated shards (min 1).
+    pub shards: usize,
+    /// Cluster envelope override, Gflips/sec; defaults to the device
+    /// profile's envelope. Split evenly across shards.
+    pub envelope_gflips_per_sec: Option<f64>,
+    /// Governor decision-window length, virtual µs.
+    pub governor_window_us: u64,
+    /// Governor decision horizon, windows.
+    pub hysteresis: u32,
+    /// Report aggregation window, virtual µs.
+    pub report_window_us: u64,
+    /// Per-shard queue-depth override; defaults to the device profile.
+    pub queue_depth: Option<usize>,
+    /// Replay only the first N events (`--quick`).
+    pub max_events: Option<usize>,
+}
+
+impl ReplayConfig {
+    /// Defaults for `device`: 1 shard, device envelope, 10 ms governor
+    /// windows with hysteresis 2, 100 ms report windows.
+    pub fn new(device: DeviceProfile) -> ReplayConfig {
+        ReplayConfig {
+            device,
+            shards: 1,
+            envelope_gflips_per_sec: None,
+            governor_window_us: 10_000,
+            hysteresis: 2,
+            report_window_us: 100_000,
+            queue_depth: None,
+            max_events: None,
+        }
+    }
+}
+
+/// Served / shed / expired accounting for one slice of the trace.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct OutcomeCounts {
+    /// Events that arrived in this slice.
+    pub arrivals: u64,
+    /// Events served to completion.
+    pub served: u64,
+    /// Events shed by admission control (queue full / evicted).
+    pub shed: u64,
+    /// Events whose deadline passed before service started.
+    pub expired: u64,
+}
+
+impl OutcomeCounts {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("arrivals", Json::Num(self.arrivals as f64)),
+            ("served", Json::Num(self.served as f64)),
+            ("shed", Json::Num(self.shed as f64)),
+            ("expired", Json::Num(self.expired as f64)),
+        ])
+    }
+
+    fn add(&mut self, other: &OutcomeCounts) {
+        self.arrivals += other.arrivals;
+        self.served += other.served;
+        self.shed += other.shed;
+        self.expired += other.expired;
+    }
+}
+
+/// Per-report-window aggregate (windows are indexed by arrival time).
+#[derive(Clone, Debug)]
+pub struct WindowStat {
+    /// Window index (`arrival offset / report window`).
+    pub index: usize,
+    /// Outcomes of events that arrived in this window.
+    pub counts: OutcomeCounts,
+    /// Median served latency, virtual µs (0 when nothing served).
+    pub p50_us: f64,
+    /// 99th-percentile served latency, virtual µs.
+    pub p99_us: f64,
+    /// Mean accuracy proxy of the points that served this window's
+    /// events (0 when nothing served).
+    pub mean_acc_proxy: f64,
+}
+
+/// End-of-replay view of one shard's governor.
+#[derive(Clone, Debug)]
+pub struct ShardGovernorSummary {
+    /// Shard index.
+    pub shard: usize,
+    /// Final operating point after the trailing idle flush.
+    pub point: String,
+    /// Frontier steps taken.
+    pub switches: u64,
+    /// Decision windows closed.
+    pub windows: u64,
+    /// Closed windows spent at each point, cheapest first.
+    pub residency: Vec<(String, u64)>,
+}
+
+/// Everything one replay produced. Contains no wall-clock data:
+/// identical inputs serialize byte-identically.
+#[derive(Clone, Debug)]
+pub struct ScenarioReport {
+    /// Replayed trace name.
+    pub trace_name: String,
+    /// Trace family label.
+    pub family: String,
+    /// Trace generator seed.
+    pub seed: u64,
+    /// Device profile name.
+    pub device: String,
+    /// Simulated shard count.
+    pub shards: usize,
+    /// Cluster envelope rate, Gflips/sec.
+    pub envelope_gflips_per_sec: f64,
+    /// Governor window, virtual µs.
+    pub governor_window_us: u64,
+    /// Report window, virtual µs.
+    pub report_window_us: u64,
+    /// Events replayed (after any `--quick` cap).
+    pub events: u64,
+    /// Whole-trace outcome totals.
+    pub totals: OutcomeCounts,
+    /// Outcomes per priority class, [`Priority::ALL`] order.
+    pub per_priority: Vec<(String, OutcomeCounts)>,
+    /// Outcomes per affinity key (`(none)` for keyless events).
+    pub per_tenant: BTreeMap<String, OutcomeCounts>,
+    /// `(point name, served count, accuracy proxy)` in frontier order.
+    pub per_point: Vec<(String, u64, f64)>,
+    /// Per-window aggregates, ascending index.
+    pub windows: Vec<WindowStat>,
+    /// One governor summary per shard.
+    pub governors: Vec<ShardGovernorSummary>,
+    /// Whole-trace served-latency median, virtual µs.
+    pub p50_us: f64,
+    /// Whole-trace served-latency p99, virtual µs.
+    pub p99_us: f64,
+    /// Mean accuracy proxy over every served event.
+    pub mean_acc_proxy: f64,
+}
+
+impl ScenarioReport {
+    /// Provenance-stamped `scenario-report/v1` document.
+    pub fn to_json(&self) -> Json {
+        let windows: Vec<Json> = self
+            .windows
+            .iter()
+            .map(|w| {
+                Json::obj(vec![
+                    ("index", Json::Num(w.index as f64)),
+                    ("counts", w.counts.to_json()),
+                    ("p50_us", Json::Num(w.p50_us)),
+                    ("p99_us", Json::Num(w.p99_us)),
+                    ("mean_acc_proxy", Json::Num(w.mean_acc_proxy)),
+                ])
+            })
+            .collect();
+        let governors: Vec<Json> = self
+            .governors
+            .iter()
+            .map(|g| {
+                Json::obj(vec![
+                    ("shard", Json::Num(g.shard as f64)),
+                    ("point", Json::from(g.point.clone())),
+                    ("switches", Json::Num(g.switches as f64)),
+                    ("windows", Json::Num(g.windows as f64)),
+                    (
+                        "residency",
+                        Json::Obj(
+                            g.residency
+                                .iter()
+                                .map(|(n, w)| (n.clone(), Json::Num(*w as f64)))
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect();
+        let per_priority = Json::Obj(
+            self.per_priority.iter().map(|(n, c)| (n.clone(), c.to_json())).collect(),
+        );
+        let per_tenant =
+            Json::Obj(self.per_tenant.iter().map(|(n, c)| (n.clone(), c.to_json())).collect());
+        let per_point: Vec<Json> = self
+            .per_point
+            .iter()
+            .map(|(name, served, acc)| {
+                Json::obj(vec![
+                    ("name", Json::from(name.clone())),
+                    ("served", Json::Num(*served as f64)),
+                    ("acc_proxy", Json::Num(*acc)),
+                ])
+            })
+            .collect();
+        bench::stamped(
+            REPORT_SCHEMA,
+            REPORT_PROVENANCE,
+            vec![
+                ("trace_name", Json::from(self.trace_name.clone())),
+                ("family", Json::from(self.family.clone())),
+                ("seed", Json::Num(self.seed as f64)),
+                ("device", Json::from(self.device.clone())),
+                ("shards", Json::Num(self.shards as f64)),
+                ("envelope_gflips_per_sec", Json::Num(self.envelope_gflips_per_sec)),
+                ("governor_window_us", Json::Num(self.governor_window_us as f64)),
+                ("report_window_us", Json::Num(self.report_window_us as f64)),
+                ("events", Json::Num(self.events as f64)),
+                ("totals", self.totals.to_json()),
+                ("per_priority", per_priority),
+                ("per_tenant", per_tenant),
+                ("per_point", Json::Arr(per_point)),
+                ("windows", Json::Arr(windows)),
+                ("governors", Json::Arr(governors)),
+                ("p50_us", Json::Num(self.p50_us)),
+                ("p99_us", Json::Num(self.p99_us)),
+                ("mean_acc_proxy", Json::Num(self.mean_acc_proxy)),
+            ],
+        )
+    }
+
+    /// Check the report's internal accounting identities. An empty
+    /// vector means the report is sound; findings map to the CLI's
+    /// exit-2 contract.
+    pub fn invariants(&self) -> Vec<String> {
+        let mut findings = Vec::new();
+        let t = &self.totals;
+        if t.arrivals != self.events {
+            findings.push(format!("arrivals {} != events {}", t.arrivals, self.events));
+        }
+        if t.served + t.shed + t.expired != t.arrivals {
+            findings.push(format!(
+                "served {} + shed {} + expired {} != arrivals {}",
+                t.served, t.shed, t.expired, t.arrivals
+            ));
+        }
+        let mut win_sum = OutcomeCounts::default();
+        for w in &self.windows {
+            win_sum.add(&w.counts);
+            if w.p99_us < w.p50_us {
+                findings.push(format!("window {}: p99 {} < p50 {}", w.index, w.p99_us, w.p50_us));
+            }
+            if !(0.0..=1.0).contains(&w.mean_acc_proxy) {
+                let (i, a) = (w.index, w.mean_acc_proxy);
+                findings.push(format!("window {i}: acc proxy {a} outside [0,1]"));
+            }
+        }
+        if win_sum != *t {
+            findings.push(format!("window sums {win_sum:?} != totals {t:?}"));
+        }
+        let mut pri_sum = OutcomeCounts::default();
+        for (_, c) in &self.per_priority {
+            pri_sum.add(c);
+        }
+        if pri_sum != *t {
+            findings.push(format!("priority sums {pri_sum:?} != totals {t:?}"));
+        }
+        let mut tenant_sum = OutcomeCounts::default();
+        for c in self.per_tenant.values() {
+            tenant_sum.add(c);
+        }
+        if tenant_sum != *t {
+            findings.push(format!("tenant sums {tenant_sum:?} != totals {t:?}"));
+        }
+        let point_served: u64 = self.per_point.iter().map(|(_, s, _)| s).sum();
+        if point_served != t.served {
+            findings.push(format!("per-point served {point_served} != served {}", t.served));
+        }
+        for g in &self.governors {
+            let res: u64 = g.residency.iter().map(|(_, w)| w).sum();
+            if res != g.windows {
+                findings.push(format!(
+                    "shard {}: residency sum {res} != windows {}",
+                    g.shard, g.windows
+                ));
+            }
+        }
+        if !(0.0..=1.0).contains(&self.mean_acc_proxy) {
+            findings.push(format!("mean acc proxy {} outside [0,1]", self.mean_acc_proxy));
+        }
+        findings
+    }
+
+    /// Human summary for the CLI's stderr channel.
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "replayed {} events ({} family, seed {}) on {} x{} shards under {} GF/s:\n\
+             \x20 served {} / shed {} / expired {}; p50 {:.0}µs p99 {:.0}µs; \
+             mean acc proxy {:.4}\n",
+            self.events,
+            self.family,
+            self.seed,
+            self.device,
+            self.shards,
+            self.envelope_gflips_per_sec,
+            self.totals.served,
+            self.totals.shed,
+            self.totals.expired,
+            self.p50_us,
+            self.p99_us,
+            self.mean_acc_proxy,
+        );
+        for g in &self.governors {
+            let residency: Vec<String> =
+                g.residency.iter().map(|(n, w)| format!("{n}:{w}")).collect();
+            s.push_str(&format!(
+                "  shard {}: final point {}, {} switches over {} windows [{}]\n",
+                g.shard,
+                g.point,
+                g.switches,
+                g.windows,
+                residency.join(" ")
+            ));
+        }
+        s
+    }
+}
+
+/// One queued arrival inside the simulation.
+struct QueuedEvent {
+    event_idx: usize,
+    offset_us: u64,
+    deadline_us: Option<u64>,
+    max_gflips: Option<f64>,
+}
+
+/// One simulated shard: real policy + governor, modeled queue.
+struct SimShard {
+    policy: PowerPolicy<FrontierPoint>,
+    governor: Governor,
+    budget_bits: Arc<AtomicU64>,
+    lanes: [VecDeque<QueuedEvent>; N_LANES],
+    queued: usize,
+    free_at_us: u64,
+}
+
+/// Accounting sinks shared by the event loop.
+struct Recorder {
+    totals: OutcomeCounts,
+    per_priority: [OutcomeCounts; N_LANES],
+    per_tenant: BTreeMap<String, OutcomeCounts>,
+    per_point_served: Vec<u64>,
+    window_counts: Vec<OutcomeCounts>,
+    window_latencies: Vec<Vec<f64>>,
+    window_acc: Vec<(f64, u64)>,
+    latencies: Vec<f64>,
+    acc_sum: f64,
+}
+
+/// What became of one event (indices into the recorder).
+#[derive(Clone, Copy)]
+enum Outcome {
+    Served { point: usize, latency_us: u64 },
+    Shed,
+    Expired,
+}
+
+impl Recorder {
+    fn record(
+        &mut self,
+        lane: usize,
+        tenant: &str,
+        window: usize,
+        acc: &[FrontierPoint],
+        outcome: Outcome,
+    ) {
+        let tenant_slot = self.per_tenant.entry(tenant.to_string()).or_default();
+        match outcome {
+            Outcome::Served { point, latency_us } => {
+                self.totals.served += 1;
+                self.per_priority[lane].served += 1;
+                tenant_slot.served += 1;
+                self.per_point_served[point] += 1;
+                self.window_counts[window].served += 1;
+                self.window_latencies[window].push(latency_us as f64);
+                self.window_acc[window].0 += acc[point].acc_proxy;
+                self.window_acc[window].1 += 1;
+                self.latencies.push(latency_us as f64);
+                self.acc_sum += acc[point].acc_proxy;
+            }
+            Outcome::Shed => {
+                self.totals.shed += 1;
+                self.per_priority[lane].shed += 1;
+                tenant_slot.shed += 1;
+                self.window_counts[window].shed += 1;
+            }
+            Outcome::Expired => {
+                self.totals.expired += 1;
+                self.per_priority[lane].expired += 1;
+                tenant_slot.expired += 1;
+                self.window_counts[window].expired += 1;
+            }
+        }
+    }
+}
+
+/// The lane an event's priority drains on (0 = `Hi`).
+fn lane_of(p: Priority) -> usize {
+    Priority::ALL.iter().position(|q| *q == p).unwrap_or(1)
+}
+
+/// Replay `trace` over `frontier` under `cfg`. The frontier must be
+/// non-empty; duplicate-cost points are dropped (cheapest-first
+/// ordering is established internally, so callers may pass any
+/// order). See the module docs for the simulation model.
+pub fn replay(
+    trace: &Trace,
+    frontier: &[FrontierPoint],
+    cfg: &ReplayConfig,
+) -> Result<ScenarioReport> {
+    trace.validate().context("trace failed schema validation")?;
+    ensure!(!frontier.is_empty(), "replay needs a non-empty frontier");
+    ensure!(cfg.governor_window_us > 0, "governor window must be positive");
+    ensure!(cfg.report_window_us > 0, "report window must be positive");
+    let mut points = frontier.to_vec();
+    points.sort_by(|a, b| a.cost_gflips.total_cmp(&b.cost_gflips));
+    points.dedup_by(|b, a| a.cost_gflips == b.cost_gflips);
+    for p in &points {
+        ensure!(
+            p.cost_gflips.is_finite() && p.cost_gflips >= 0.0,
+            "point '{}' has non-finite cost",
+            p.name
+        );
+    }
+
+    let n_shards = cfg.shards.max(1);
+    let device = cfg.device;
+    let envelope_total =
+        cfg.envelope_gflips_per_sec.unwrap_or(device.envelope_gflips_per_sec);
+    ensure!(
+        envelope_total.is_finite() && envelope_total > 0.0,
+        "envelope rate must be finite and positive, got {envelope_total}"
+    );
+    let per_shard_rate = envelope_total / n_shards as f64;
+    let depth = cfg.queue_depth.unwrap_or(device.queue_depth).max(1);
+    let top_cost = points[points.len() - 1].cost_gflips;
+    let menu_pairs: Vec<(String, f64)> =
+        points.iter().map(|p| (p.name.clone(), p.cost_gflips)).collect();
+
+    // Virtual-clock anchor: one arbitrary epoch; every governor
+    // decision sees `epoch + offset`, so nothing depends on when the
+    // replay itself runs.
+    let epoch = Instant::now();
+    let at = |us: u64| epoch + Duration::from_micros(us);
+
+    let mut shards = Vec::with_capacity(n_shards);
+    for _ in 0..n_shards {
+        let budget_bits = Arc::new(AtomicU64::new(top_cost.to_bits()));
+        let gov_cfg = GovernorConfig {
+            window: Duration::from_micros(cfg.governor_window_us),
+            hysteresis: cfg.hysteresis,
+            ..GovernorConfig::new(EnergyEnvelope::gflips_per_sec(per_shard_rate))
+        };
+        let governor = Governor::new(gov_cfg, menu_pairs.clone(), Arc::clone(&budget_bits), epoch)
+            .context("build shard governor")?;
+        let policy = PowerPolicy::new(points.clone())
+            .map_err(|e| anyhow::anyhow!("build shard policy: {e}"))?;
+        shards.push(SimShard {
+            policy,
+            governor,
+            budget_bits,
+            lanes: [VecDeque::new(), VecDeque::new(), VecDeque::new()],
+            queued: 0,
+            free_at_us: 0,
+        });
+    }
+
+    let events: Vec<_> = match cfg.max_events {
+        Some(cap) => trace.events.iter().take(cap).collect(),
+        None => trace.events.iter().collect(),
+    };
+    let n_windows = (trace.duration_us / cfg.report_window_us + 1) as usize;
+    let mut rec = Recorder {
+        totals: OutcomeCounts::default(),
+        per_priority: [OutcomeCounts::default(); N_LANES],
+        per_tenant: BTreeMap::new(),
+        per_point_served: vec![0; points.len()],
+        window_counts: vec![OutcomeCounts::default(); n_windows],
+        window_latencies: vec![Vec::new(); n_windows],
+        window_acc: vec![(0.0, 0); n_windows],
+        latencies: Vec::new(),
+        acc_sum: 0.0,
+    };
+    // event metadata the drain loop needs when an outcome lands later
+    // than admission: (lane, tenant, window)
+    let meta: Vec<(usize, String, usize)> = events
+        .iter()
+        .map(|e| {
+            let lane = lane_of(e.priority);
+            let tenant = e.affinity.clone().unwrap_or_else(|| "(none)".to_string());
+            let window =
+                ((e.offset_us / cfg.report_window_us) as usize).min(n_windows.saturating_sub(1));
+            (lane, tenant, window)
+        })
+        .collect();
+    for (lane, tenant, window) in &meta {
+        rec.totals.arrivals += 1;
+        rec.per_priority[*lane].arrivals += 1;
+        rec.per_tenant.entry(tenant.clone()).or_default().arrivals += 1;
+        rec.window_counts[*window].arrivals += 1;
+    }
+
+    let mut rr = 0usize;
+    for (i, e) in events.iter().enumerate() {
+        let order: Vec<usize> = match &e.affinity {
+            Some(key) => rendezvous_order(key, n_shards),
+            None => {
+                let start = rr % n_shards;
+                rr += 1;
+                (start..n_shards).chain(0..start).collect()
+            }
+        };
+        let lane = meta[i].0;
+        let qe = QueuedEvent {
+            event_idx: i,
+            offset_us: e.offset_us,
+            deadline_us: e.deadline_us,
+            max_gflips: e.max_gflips,
+        };
+        let mut pending = Some(qe);
+        for &s in &order {
+            drain_shard(&mut shards[s], e.offset_us, &points, &device, &at, &meta, &mut rec)?;
+            let shard = &mut shards[s];
+            if shard.queued < depth {
+                let qe = pending.take().context("event admitted twice")?;
+                shard.lanes[lane].push_back(qe);
+                shard.queued += 1;
+                // a newly idle shard starts the request immediately
+                drain_shard(&mut shards[s], e.offset_us, &points, &device, &at, &meta, &mut rec)?;
+                break;
+            }
+            // full: evict the newest request of the lowest-priority
+            // non-empty lane strictly below this arrival's class
+            let victim_lane = (lane + 1..N_LANES).rev().find(|&l| !shard.lanes[l].is_empty());
+            if let Some(vl) = victim_lane {
+                if let Some(victim) = shard.lanes[vl].pop_back() {
+                    shard.queued -= 1;
+                    let (v_lane, v_tenant, v_window) = &meta[victim.event_idx];
+                    rec.record(*v_lane, v_tenant, *v_window, &points, Outcome::Shed);
+                }
+                let qe = pending.take().context("event admitted twice")?;
+                shard.lanes[lane].push_back(qe);
+                shard.queued += 1;
+                break;
+            }
+        }
+        if let Some(_dropped) = pending.take() {
+            let (lane, tenant, window) = &meta[i];
+            rec.record(*lane, tenant, *window, &points, Outcome::Shed);
+        }
+    }
+
+    // Drain every queue to completion, then flush enough idle governor
+    // windows for the recovery climb back up the frontier to finish.
+    let mut end_us = trace.duration_us;
+    for s in 0..n_shards {
+        drain_shard(&mut shards[s], u64::MAX, &points, &device, &at, &meta, &mut rec)?;
+        end_us = end_us.max(shards[s].free_at_us);
+    }
+    let flush_windows = 2 * cfg.hysteresis as u64 * (points.len() as u64 + 2) + 4;
+    let flush_us = end_us + flush_windows * cfg.governor_window_us;
+    for shard in &shards {
+        shard.governor.observe(at(flush_us), 0, 0, 0.0, false);
+    }
+
+    let windows = (0..n_windows)
+        .map(|w| {
+            let lat = &rec.window_latencies[w];
+            let (acc_sum, acc_n) = rec.window_acc[w];
+            WindowStat {
+                index: w,
+                counts: rec.window_counts[w],
+                p50_us: stats::percentile(lat, 50.0),
+                p99_us: stats::percentile(lat, 99.0),
+                mean_acc_proxy: if acc_n > 0 { acc_sum / acc_n as f64 } else { 0.0 },
+            }
+        })
+        .collect();
+    let governors = shards
+        .iter()
+        .enumerate()
+        .map(|(i, s)| {
+            let snap = s.governor.snapshot();
+            ShardGovernorSummary {
+                shard: i,
+                point: snap.point,
+                switches: snap.switches,
+                windows: snap.windows,
+                residency: snap.residency,
+            }
+        })
+        .collect();
+    let report = ScenarioReport {
+        trace_name: trace.name.clone(),
+        family: trace.family.name().to_string(),
+        seed: trace.seed,
+        device: device.name.to_string(),
+        shards: n_shards,
+        envelope_gflips_per_sec: envelope_total,
+        governor_window_us: cfg.governor_window_us,
+        report_window_us: cfg.report_window_us,
+        events: events.len() as u64,
+        totals: rec.totals,
+        per_priority: Priority::ALL
+            .iter()
+            .enumerate()
+            .map(|(l, p)| (p.name().to_string(), rec.per_priority[l]))
+            .collect(),
+        per_tenant: rec.per_tenant,
+        per_point: points
+            .iter()
+            .enumerate()
+            .map(|(i, p)| (p.name.clone(), rec.per_point_served[i], p.acc_proxy))
+            .collect(),
+        windows,
+        governors,
+        p50_us: stats::percentile(&rec.latencies, 50.0),
+        p99_us: stats::percentile(&rec.latencies, 99.0),
+        mean_acc_proxy: if rec.totals.served > 0 {
+            rec.acc_sum / rec.totals.served as f64
+        } else {
+            0.0
+        },
+    };
+    Ok(report)
+}
+
+/// Start every queued request whose service can begin by `now_us`,
+/// highest lane first: check the start-by deadline, select the point
+/// under `min(governed budget, per-request cap)`, charge the governor
+/// with virtual instants, advance the shard's busy horizon.
+#[allow(clippy::too_many_arguments)]
+fn drain_shard(
+    shard: &mut SimShard,
+    now_us: u64,
+    points: &[FrontierPoint],
+    device: &DeviceProfile,
+    at: &dyn Fn(u64) -> Instant,
+    meta: &[(usize, String, usize)],
+    rec: &mut Recorder,
+) -> Result<()> {
+    while shard.queued > 0 && shard.free_at_us <= now_us {
+        let Some(lane) = (0..N_LANES).find(|&l| !shard.lanes[l].is_empty()) else {
+            break;
+        };
+        let Some(qe) = shard.lanes[lane].pop_front() else {
+            break;
+        };
+        shard.queued -= 1;
+        let start_us = shard.free_at_us.max(qe.offset_us);
+        let (m_lane, m_tenant, m_window) = &meta[qe.event_idx];
+        if let Some(d) = qe.deadline_us {
+            if start_us > qe.offset_us + d {
+                rec.record(*m_lane, m_tenant, *m_window, points, Outcome::Expired);
+                continue;
+            }
+        }
+        let budget = f64::from_bits(shard.budget_bits.load(Ordering::Relaxed));
+        let effective = match qe.max_gflips {
+            Some(cap) => budget.min(cap),
+            None => budget,
+        };
+        let idx = shard
+            .policy
+            .select(effective)
+            .map_err(|e| anyhow::anyhow!("policy select: {e}"))?;
+        let cost = points[idx].cost_gflips;
+        let service_us = device.service_us(cost);
+        let done_us = start_us + service_us;
+        shard.governor.batch_started(at(start_us));
+        shard.governor.observe(at(done_us), idx, 1, cost, true);
+        shard.governor.batch_finished(at(start_us));
+        shard.free_at_us = done_us;
+        rec.record(
+            *m_lane,
+            m_tenant,
+            *m_window,
+            points,
+            Outcome::Served { point: idx, latency_us: done_us - qe.offset_us },
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::trace::{TraceEvent, TraceFamily, TraceParams};
+
+    fn frontier3() -> Vec<FrontierPoint> {
+        vec![
+            FrontierPoint { name: "cheap".into(), cost_gflips: 0.02, acc_proxy: 0.90 },
+            FrontierPoint { name: "mid".into(), cost_gflips: 0.08, acc_proxy: 0.95 },
+            FrontierPoint { name: "rich".into(), cost_gflips: 0.32, acc_proxy: 0.985 },
+        ]
+    }
+
+    fn manual_trace(events: Vec<TraceEvent>, duration_us: u64) -> Trace {
+        Trace {
+            name: "manual".into(),
+            family: TraceFamily::DeadlineMix,
+            seed: 0,
+            duration_us,
+            events,
+        }
+    }
+
+    fn ev(offset_us: u64) -> TraceEvent {
+        TraceEvent {
+            offset_us,
+            model: None,
+            deadline_us: None,
+            max_gflips: None,
+            priority: Priority::Normal,
+            affinity: None,
+        }
+    }
+
+    #[test]
+    fn accounting_identities_hold_on_every_family() {
+        let params = TraceParams { seed: 11, events: 256, duration_us: 1_000_000, tenants: 4 };
+        for family in TraceFamily::ALL {
+            let trace = Trace::generate(family, &params);
+            let cfg = ReplayConfig::new(DeviceProfile::server());
+            let report = replay(&trace, &frontier3(), &cfg).unwrap();
+            assert!(report.invariants().is_empty(), "{family:?}: {:?}", report.invariants());
+            assert_eq!(report.totals.arrivals, 256);
+        }
+    }
+
+    #[test]
+    fn replay_is_byte_deterministic() {
+        let trace = Trace::generate(TraceFamily::FlashCrowd, &TraceParams::default());
+        let mut cfg = ReplayConfig::new(DeviceProfile::jetson());
+        cfg.shards = 2;
+        let a = replay(&trace, &frontier3(), &cfg).unwrap().to_json().to_string();
+        let b = replay(&trace, &frontier3(), &cfg).unwrap().to_json().to_string();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn saturating_flood_degrades_then_recovers() {
+        // 200 arrivals every 500µs: at `rich` (1.28ms service) the
+        // shard saturates, so observed energy runs at the full drain
+        // rate (250 GF/s) — far over the 5 GF/s envelope — and the
+        // governor must step down; the trailing idle flush must climb
+        // back to the top of the frontier.
+        let events: Vec<TraceEvent> = (0..200).map(|i| ev(i * 500)).collect();
+        let trace = manual_trace(events, 200 * 500);
+        let mut cfg = ReplayConfig::new(DeviceProfile::server());
+        cfg.envelope_gflips_per_sec = Some(5.0);
+        let report = replay(&trace, &frontier3(), &cfg).unwrap();
+        assert!(report.invariants().is_empty(), "{:?}", report.invariants());
+        let g = &report.governors[0];
+        assert!(g.switches >= 2, "switches {}", g.switches);
+        assert_eq!(g.point, "rich", "must recover after the flood");
+        let cheap_windows: u64 = g
+            .residency
+            .iter()
+            .filter(|(n, _)| n != "rich")
+            .map(|(_, w)| w)
+            .sum();
+        assert!(cheap_windows > 0, "residency {:?}", g.residency);
+    }
+
+    #[test]
+    fn full_queue_evicts_best_effort_before_hi() {
+        // One slow point (1 GF ⇒ 40ms on jetson), queue depth 1: the
+        // first arrival occupies the device, the second queues, the
+        // third (Hi) finds the queue full and must evict the queued
+        // BestEffort instead of being shed itself.
+        let slow = vec![FrontierPoint { name: "only".into(), cost_gflips: 1.0, acc_proxy: 0.9 }];
+        let mut e1 = ev(0);
+        e1.priority = Priority::BestEffort;
+        let mut e2 = ev(1);
+        e2.priority = Priority::BestEffort;
+        let mut e3 = ev(2);
+        e3.priority = Priority::Hi;
+        let trace = manual_trace(vec![e1, e2, e3], 100_000);
+        let mut cfg = ReplayConfig::new(DeviceProfile::jetson());
+        cfg.queue_depth = Some(1);
+        let report = replay(&trace, &slow, &cfg).unwrap();
+        assert!(report.invariants().is_empty(), "{:?}", report.invariants());
+        assert_eq!(report.totals.served, 2);
+        assert_eq!(report.totals.shed, 1);
+        let by_name: BTreeMap<_, _> =
+            report.per_priority.iter().map(|(n, c)| (n.as_str(), *c)).collect();
+        assert_eq!(by_name["best-effort"].shed, 1);
+        assert_eq!(by_name["hi"].shed, 0);
+        assert_eq!(by_name["hi"].served, 1);
+    }
+
+    #[test]
+    fn start_by_deadline_expires_queued_events() {
+        // The first request holds the device for 40ms; the second has
+        // a 5ms start-by deadline and must expire unexecuted.
+        let slow = vec![FrontierPoint { name: "only".into(), cost_gflips: 1.0, acc_proxy: 0.9 }];
+        let e1 = ev(0);
+        let mut e2 = ev(1);
+        e2.deadline_us = Some(5_000);
+        let trace = manual_trace(vec![e1, e2], 100_000);
+        let cfg = ReplayConfig::new(DeviceProfile::jetson());
+        let report = replay(&trace, &slow, &cfg).unwrap();
+        assert_eq!(report.totals.served, 1);
+        assert_eq!(report.totals.expired, 1);
+        assert!(report.invariants().is_empty(), "{:?}", report.invariants());
+    }
+
+    #[test]
+    fn per_request_cap_forces_the_cheap_point() {
+        let mut e = ev(0);
+        e.max_gflips = Some(0.05); // only `cheap` (0.02) fits
+        let trace = manual_trace(vec![e], 1_000);
+        let cfg = ReplayConfig::new(DeviceProfile::server());
+        let report = replay(&trace, &frontier3(), &cfg).unwrap();
+        assert_eq!(report.per_point[0].1, 1, "cheap must serve: {:?}", report.per_point);
+        assert_eq!(report.totals.served, 1);
+    }
+
+    #[test]
+    fn keyed_events_follow_the_router_rendezvous_rule() {
+        // All events share one key: with 2 shards exactly one shard
+        // must see traffic, and it must be the router's pick.
+        let events: Vec<TraceEvent> = (0..8)
+            .map(|i| {
+                let mut e = ev(i * 10_000);
+                e.affinity = Some("tenant-0".into());
+                e
+            })
+            .collect();
+        let trace = manual_trace(events, 100_000);
+        let mut cfg = ReplayConfig::new(DeviceProfile::server());
+        cfg.shards = 2;
+        let report = replay(&trace, &frontier3(), &cfg).unwrap();
+        // a single key maps to exactly one shard under the router's
+        // rendezvous rule, and the load is light: everything serves
+        assert_eq!(report.totals.served, 8);
+        assert_eq!(report.totals.shed, 0);
+        assert_eq!(report.per_tenant["tenant-0"].served, 8);
+        let primary = crate::net::rendezvous_order("tenant-0", 2)[0];
+        assert!(primary < 2);
+        assert_eq!(report.governors.len(), 2);
+    }
+
+    #[test]
+    fn frontier_from_menu_scales_and_dedups() {
+        use crate::pann::menu::{MenuArtifact, MenuPointSpec};
+        use crate::quant::ActQuantMethod;
+        let point = |name: &str, gf: f64, acc: f64| MenuPointSpec {
+            name: name.into(),
+            bx_tilde: 4,
+            r: 1.0,
+            gflips_per_sample: gf,
+            val_acc: acc,
+            quant_method: ActQuantMethod::BnStats,
+            achieved_adds_per_element: 1.0,
+            weight_code_bits: 4,
+            measured_gflips_per_sample: None,
+        };
+        let menu = MenuArtifact {
+            model_name: "m".into(),
+            model_fingerprint: 0,
+            macs_per_sample: 0,
+            swept: 3,
+            points: vec![point("a", 0.1, 0.9), point("b", 0.1, 0.91), point("c", 0.4, 0.95)],
+        };
+        let device = DeviceProfile::jetson();
+        let f = frontier_from_menu(&menu, &device);
+        assert_eq!(f.len(), 2, "duplicate cost dropped: {f:?}");
+        assert!((f[0].cost_gflips - 0.1 * device.flip_energy_scale()).abs() < 1e-12);
+        assert!(f[0].cost_gflips < f[1].cost_gflips);
+    }
+}

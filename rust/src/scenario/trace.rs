@@ -1,0 +1,560 @@
+//! `pann-trace/v1` — replayable workload traces.
+//!
+//! A trace is a sorted list of arrival events, each carrying the full
+//! per-request QoS surface of [`InferRequest`]: arrival offset from
+//! trace start, optional target model, optional start-by deadline,
+//! optional per-request energy cap, scheduling priority, and an
+//! optional shard-affinity key. Offsets are virtual microseconds —
+//! nothing in a trace references the wall clock, and the seeded
+//! generators draw every value from [`crate::util::Rng`], so the same
+//! seed and parameters produce a byte-identical trace (the property
+//! `prop_trace_generator_deterministic_and_sorted` locks in).
+//!
+//! Four generator families cover the workload shapes the low-power
+//! serving literature says dominate realized energy:
+//!
+//! - [`TraceFamily::Diurnal`] — a two-peak sinusoidal day/night cycle.
+//! - [`TraceFamily::FlashCrowd`] — a uniform baseline with 60% of all
+//!   events compressed into a 10%-of-duration burst.
+//! - [`TraceFamily::DeadlineMix`] — an adversarial mix of tight-deadline
+//!   `Hi` traffic, default `Normal` traffic, and energy-capped
+//!   `BestEffort` traffic, all bunched into the first half of the
+//!   trace so queues actually fill.
+//! - [`TraceFamily::TenantSkew`] — one hot tenant sending 85% of the
+//!   traffic next to paced cold tenants, each with a stable affinity
+//!   key.
+
+use crate::coordinator::{InferRequest, Priority};
+use crate::util::{bench, Json, Rng};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+use std::time::Duration;
+
+/// Schema tag every trace file carries.
+pub const TRACE_SCHEMA: &str = "pann-trace/v1";
+
+/// Smallest admissible event deadline (µs): anything tighter than a
+/// millisecond is below the resolution the replay engine models.
+pub const MIN_DEADLINE_US: u64 = 1_000;
+
+/// Largest admissible event deadline (µs): ten seconds, far beyond any
+/// generated trace duration — effectively "no pressure".
+pub const MAX_DEADLINE_US: u64 = 10_000_000;
+
+/// Inverse of [`Priority::name`] for the trace schema.
+pub fn priority_from_name(name: &str) -> Option<Priority> {
+    Priority::ALL.into_iter().find(|p| p.name() == name)
+}
+
+/// The four seeded workload shapes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceFamily {
+    /// Two-peak day/night arrival cycle.
+    Diurnal,
+    /// Uniform baseline plus a dense burst.
+    FlashCrowd,
+    /// Adversarial deadline/priority mix under pressure.
+    DeadlineMix,
+    /// One hot tenant, several cold ones, keyed affinity.
+    TenantSkew,
+}
+
+impl TraceFamily {
+    /// Every family, in reporting order.
+    pub const ALL: [TraceFamily; 4] = [
+        TraceFamily::Diurnal,
+        TraceFamily::FlashCrowd,
+        TraceFamily::DeadlineMix,
+        TraceFamily::TenantSkew,
+    ];
+
+    /// Stable lower-case label (trace files, reports, CLI).
+    pub fn name(self) -> &'static str {
+        match self {
+            TraceFamily::Diurnal => "diurnal",
+            TraceFamily::FlashCrowd => "flash-crowd",
+            TraceFamily::DeadlineMix => "deadline-mix",
+            TraceFamily::TenantSkew => "tenant-skew",
+        }
+    }
+
+    /// Inverse of [`TraceFamily::name`].
+    pub fn from_name(name: &str) -> Option<TraceFamily> {
+        Self::ALL.into_iter().find(|f| f.name() == name)
+    }
+}
+
+/// Generator knobs shared by all families.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceParams {
+    /// PRNG seed — the only source of entropy.
+    pub seed: u64,
+    /// Number of events to generate.
+    pub events: usize,
+    /// Trace length in virtual microseconds.
+    pub duration_us: u64,
+    /// Number of distinct affinity keys (`tenant-0` … `tenant-N-1`).
+    pub tenants: usize,
+}
+
+impl Default for TraceParams {
+    fn default() -> TraceParams {
+        TraceParams { seed: 7, events: 512, duration_us: 2_000_000, tenants: 4 }
+    }
+}
+
+/// One arrival in a trace.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceEvent {
+    /// Arrival offset from trace start, virtual microseconds.
+    pub offset_us: u64,
+    /// Target registered model (fleet traces); `None` routes to the
+    /// only model.
+    pub model: Option<String>,
+    /// Start-by deadline relative to arrival, virtual microseconds.
+    pub deadline_us: Option<u64>,
+    /// Per-request energy cap, Giga bit flips per sample.
+    pub max_gflips: Option<f64>,
+    /// Scheduling class.
+    pub priority: Priority,
+    /// Shard-affinity key ([`crate::net::rendezvous_order`] placement).
+    pub affinity: Option<String>,
+}
+
+impl TraceEvent {
+    /// Map this event onto a live [`InferRequest`] carrying `input` —
+    /// the bridge from a replayable trace to the real
+    /// [`crate::coordinator::ServerBuilder`] /
+    /// [`crate::net::ShardRouter`] stack.
+    pub fn to_request(&self, input: Vec<f32>) -> InferRequest {
+        let mut req = InferRequest::new(input).priority(self.priority);
+        if let Some(m) = &self.model {
+            req = req.model(m.clone());
+        }
+        if let Some(d) = self.deadline_us {
+            req = req.deadline(Duration::from_micros(d));
+        }
+        if let Some(g) = self.max_gflips {
+            req = req.max_gflips(g);
+        }
+        if let Some(a) = &self.affinity {
+            req = req.affinity(a.clone());
+        }
+        req
+    }
+
+    /// JSON form; `None` fields are omitted.
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("offset_us", Json::Num(self.offset_us as f64)),
+            ("priority", Json::from(self.priority.name())),
+        ];
+        if let Some(m) = &self.model {
+            pairs.push(("model", Json::from(m.clone())));
+        }
+        if let Some(d) = self.deadline_us {
+            pairs.push(("deadline_us", Json::Num(d as f64)));
+        }
+        if let Some(g) = self.max_gflips {
+            pairs.push(("max_gflips", Json::Num(g)));
+        }
+        if let Some(a) = &self.affinity {
+            pairs.push(("affinity", Json::from(a.clone())));
+        }
+        Json::obj(pairs)
+    }
+
+    fn from_json(j: &Json, idx: usize) -> Result<TraceEvent> {
+        let offset_us = j
+            .req("offset_us")?
+            .as_f64()
+            .with_context(|| format!("event {idx}: offset_us must be a number"))?
+            as u64;
+        let priority_name = j
+            .req("priority")?
+            .as_str()
+            .with_context(|| format!("event {idx}: priority must be a string"))?;
+        let priority = priority_from_name(priority_name)
+            .with_context(|| format!("event {idx}: unknown priority '{priority_name}'"))?;
+        Ok(TraceEvent {
+            offset_us,
+            model: j.get("model").and_then(Json::as_str).map(str::to_string),
+            deadline_us: j.get("deadline_us").and_then(Json::as_f64).map(|d| d as u64),
+            max_gflips: j.get("max_gflips").and_then(Json::as_f64),
+            priority,
+            affinity: j.get("affinity").and_then(Json::as_str).map(str::to_string),
+        })
+    }
+}
+
+/// A named, seeded, sorted event stream.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Trace {
+    /// Trace name (defaults to `<family>-s<seed>`).
+    pub name: String,
+    /// Generator family this trace was drawn from.
+    pub family: TraceFamily,
+    /// Generator seed.
+    pub seed: u64,
+    /// Trace length in virtual microseconds.
+    pub duration_us: u64,
+    /// Events sorted by non-decreasing `offset_us`.
+    pub events: Vec<TraceEvent>,
+}
+
+impl Trace {
+    /// Generate a trace. Same `family` + `params` ⇒ identical result.
+    pub fn generate(family: TraceFamily, params: &TraceParams) -> Trace {
+        let mut rng = Rng::new(params.seed);
+        let events = match family {
+            TraceFamily::Diurnal => gen_diurnal(&mut rng, params),
+            TraceFamily::FlashCrowd => gen_flash_crowd(&mut rng, params),
+            TraceFamily::DeadlineMix => gen_deadline_mix(&mut rng, params),
+            TraceFamily::TenantSkew => gen_tenant_skew(&mut rng, params),
+        };
+        Trace {
+            name: format!("{}-s{}", family.name(), params.seed),
+            family,
+            seed: params.seed,
+            duration_us: params.duration_us,
+            events,
+        }
+    }
+
+    /// Check the schema invariants: sorted offsets within the trace
+    /// duration, deadlines within
+    /// [`MIN_DEADLINE_US`]`..=`[`MAX_DEADLINE_US`], finite positive
+    /// energy caps.
+    pub fn validate(&self) -> Result<()> {
+        let mut prev = 0u64;
+        for (i, e) in self.events.iter().enumerate() {
+            if e.offset_us < prev {
+                bail!("event {i}: offset {} < previous offset {prev} (unsorted)", e.offset_us);
+            }
+            if e.offset_us > self.duration_us {
+                bail!("event {i}: offset {} beyond duration {}", e.offset_us, self.duration_us);
+            }
+            if let Some(d) = e.deadline_us {
+                if !(MIN_DEADLINE_US..=MAX_DEADLINE_US).contains(&d) {
+                    bail!(
+                        "event {i}: deadline {d}µs outside \
+                         [{MIN_DEADLINE_US}, {MAX_DEADLINE_US}]"
+                    );
+                }
+            }
+            if let Some(g) = e.max_gflips {
+                if !(g.is_finite() && g > 0.0) {
+                    bail!("event {i}: max_gflips {g} must be finite and positive");
+                }
+            }
+            prev = e.offset_us;
+        }
+        Ok(())
+    }
+
+    /// Provenance-stamped `pann-trace/v1` document.
+    pub fn to_json(&self) -> Json {
+        bench::stamped(
+            TRACE_SCHEMA,
+            "seeded generator output; same seed and params regenerate this file byte-identically",
+            vec![
+                ("name", Json::from(self.name.clone())),
+                ("family", Json::from(self.family.name())),
+                ("seed", Json::Num(self.seed as f64)),
+                ("duration_us", Json::Num(self.duration_us as f64)),
+                ("events", Json::Arr(self.events.iter().map(TraceEvent::to_json).collect())),
+            ],
+        )
+    }
+
+    /// Parse and [`Trace::validate`] a `pann-trace/v1` document.
+    pub fn from_json(j: &Json) -> Result<Trace> {
+        let schema = j.req("schema")?.as_str().context("schema must be a string")?;
+        if schema != TRACE_SCHEMA {
+            bail!("unsupported trace schema '{schema}' (want '{TRACE_SCHEMA}')");
+        }
+        let family_name = j.req("family")?.as_str().context("family must be a string")?;
+        let family = TraceFamily::from_name(family_name)
+            .with_context(|| format!("unknown trace family '{family_name}'"))?;
+        let events_json = j.req("events")?.as_arr().context("events must be an array")?;
+        let mut events = Vec::with_capacity(events_json.len());
+        for (i, ej) in events_json.iter().enumerate() {
+            events.push(TraceEvent::from_json(ej, i)?);
+        }
+        let trace = Trace {
+            name: j
+                .get("name")
+                .and_then(Json::as_str)
+                .unwrap_or(family_name)
+                .to_string(),
+            family,
+            seed: j.req("seed")?.as_f64().context("seed must be a number")? as u64,
+            duration_us: j.req("duration_us")?.as_f64().context("duration_us")? as u64,
+            events,
+        };
+        trace.validate()?;
+        Ok(trace)
+    }
+
+    /// Save as a provenance-stamped JSON file.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        bench::write_json(&path.to_string_lossy(), &self.to_json())
+            .with_context(|| format!("write trace {}", path.display()))
+    }
+
+    /// Load and validate a trace file.
+    pub fn load(path: &Path) -> Result<Trace> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read trace {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        Trace::from_json(&j)
+    }
+}
+
+/// Deadline draw clamped into the schema bounds.
+fn clamp_deadline(x: f64) -> u64 {
+    x.max(MIN_DEADLINE_US as f64).min(MAX_DEADLINE_US as f64) as u64
+}
+
+/// Draw a priority from a `(hi, normal)` probability split; the
+/// remainder is `BestEffort`.
+fn pick_priority(rng: &mut Rng, hi: f64, normal: f64) -> Priority {
+    let u = rng.f64();
+    if u < hi {
+        Priority::Hi
+    } else if u < hi + normal {
+        Priority::Normal
+    } else {
+        Priority::BestEffort
+    }
+}
+
+fn tenant_key(idx: usize) -> String {
+    format!("tenant-{idx}")
+}
+
+/// Two-peak sinusoidal arrival intensity: events are apportioned over
+/// 16 equal time buckets with weight `1 + 0.85·sin(2·τ·k/16)`
+/// (cumulative rounding, so the bucket counts always sum to exactly
+/// `params.events`), uniform within each bucket.
+fn gen_diurnal(rng: &mut Rng, p: &TraceParams) -> Vec<TraceEvent> {
+    const BUCKETS: usize = 16;
+    let weights: Vec<f64> = (0..BUCKETS)
+        .map(|k| 1.0 + 0.85 * (std::f64::consts::TAU * 2.0 * k as f64 / BUCKETS as f64).sin())
+        .collect();
+    let total: f64 = weights.iter().sum();
+    let mut offsets = Vec::with_capacity(p.events);
+    let (mut assigned, mut cum) = (0usize, 0.0f64);
+    for (k, w) in weights.iter().enumerate() {
+        cum += w;
+        let upto = ((cum / total) * p.events as f64).round() as usize;
+        let lo = p.duration_us as f64 * k as f64 / BUCKETS as f64;
+        let hi = p.duration_us as f64 * (k + 1) as f64 / BUCKETS as f64;
+        for _ in 0..upto.saturating_sub(assigned) {
+            offsets.push((lo + rng.f64() * (hi - lo)) as u64);
+        }
+        assigned = upto.max(assigned);
+    }
+    offsets.sort_unstable();
+    offsets
+        .into_iter()
+        .map(|offset_us| TraceEvent {
+            offset_us,
+            model: None,
+            deadline_us: Some(clamp_deadline(rng.normal_ms(60_000.0, 15_000.0))),
+            max_gflips: None,
+            priority: pick_priority(rng, 0.2, 0.6),
+            affinity: Some(tenant_key(rng.below(p.tenants.max(1)))),
+        })
+        .collect()
+}
+
+/// Uniform baseline (40% of events over the whole duration) plus a
+/// flash crowd: 60% of events land uniformly inside
+/// `[0.45·T, 0.55·T)`.
+fn gen_flash_crowd(rng: &mut Rng, p: &TraceParams) -> Vec<TraceEvent> {
+    let n_burst = p.events * 3 / 5;
+    let t = p.duration_us as f64;
+    let mut offsets: Vec<u64> = Vec::with_capacity(p.events);
+    for _ in 0..p.events - n_burst {
+        offsets.push((rng.f64() * t) as u64);
+    }
+    for _ in 0..n_burst {
+        offsets.push((t * 0.45 + rng.f64() * t * 0.10) as u64);
+    }
+    offsets.sort_unstable();
+    offsets
+        .into_iter()
+        .map(|offset_us| TraceEvent {
+            offset_us,
+            model: None,
+            deadline_us: Some(clamp_deadline(rng.normal_ms(30_000.0, 8_000.0))),
+            max_gflips: None,
+            priority: pick_priority(rng, 0.2, 0.6),
+            affinity: Some(tenant_key(rng.below(p.tenants.max(1)))),
+        })
+        .collect()
+}
+
+/// Adversarial deadline mix bunched into the first half of the trace:
+/// 30% `Hi` with tight deadlines, 40% `Normal`, 30% `BestEffort` with
+/// generous deadlines, half of them energy-capped.
+fn gen_deadline_mix(rng: &mut Rng, p: &TraceParams) -> Vec<TraceEvent> {
+    let t_half = p.duration_us as f64 / 2.0;
+    let mut offsets: Vec<u64> = (0..p.events).map(|_| (rng.f64() * t_half) as u64).collect();
+    offsets.sort_unstable();
+    offsets
+        .into_iter()
+        .map(|offset_us| {
+            let priority = pick_priority(rng, 0.3, 0.4);
+            let deadline_us = Some(clamp_deadline(match priority {
+                Priority::Hi => rng.normal_ms(20_000.0, 5_000.0),
+                Priority::Normal => rng.normal_ms(60_000.0, 15_000.0),
+                Priority::BestEffort => rng.normal_ms(250_000.0, 50_000.0),
+            }));
+            let max_gflips = if priority == Priority::BestEffort && rng.f64() < 0.5 {
+                Some(0.1 + 0.4 * rng.f64())
+            } else {
+                None
+            };
+            TraceEvent {
+                offset_us,
+                model: None,
+                deadline_us,
+                max_gflips,
+                priority,
+                affinity: Some(tenant_key(rng.below(p.tenants.max(1)))),
+            }
+        })
+        .collect()
+}
+
+/// Multi-tenant skew: `tenant-0` sends 85% of all events; the
+/// remaining 15% spread over the cold tenants. All arrivals are
+/// uniform over the duration with generous deadlines — the pressure
+/// comes purely from the hot key's density.
+fn gen_tenant_skew(rng: &mut Rng, p: &TraceParams) -> Vec<TraceEvent> {
+    let tenants = p.tenants.max(2);
+    let t = p.duration_us as f64;
+    let mut offsets: Vec<u64> = (0..p.events).map(|_| (rng.f64() * t) as u64).collect();
+    offsets.sort_unstable();
+    offsets
+        .into_iter()
+        .map(|offset_us| {
+            let tenant =
+                if rng.f64() < 0.85 { 0 } else { 1 + rng.below(tenants - 1) };
+            TraceEvent {
+                offset_us,
+                model: None,
+                deadline_us: Some(clamp_deadline(rng.normal_ms(100_000.0, 20_000.0))),
+                max_gflips: None,
+                priority: Priority::Normal,
+                affinity: Some(tenant_key(tenant)),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generators_are_deterministic_and_valid() {
+        let params = TraceParams { seed: 42, events: 200, duration_us: 500_000, tenants: 3 };
+        for family in TraceFamily::ALL {
+            let a = Trace::generate(family, &params);
+            let b = Trace::generate(family, &params);
+            assert_eq!(a, b, "{} not deterministic", family.name());
+            a.validate().unwrap();
+            assert_eq!(a.events.len(), params.events, "{}", family.name());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = Trace::generate(TraceFamily::Diurnal, &TraceParams::default());
+        let b =
+            Trace::generate(TraceFamily::Diurnal, &TraceParams { seed: 8, ..Default::default() });
+        assert_ne!(a.events, b.events);
+    }
+
+    #[test]
+    fn json_roundtrip_is_lossless_and_byte_stable() {
+        for family in TraceFamily::ALL {
+            let t = Trace::generate(family, &TraceParams { events: 64, ..Default::default() });
+            let doc = t.to_json();
+            let back = Trace::from_json(&doc).unwrap();
+            assert_eq!(back, t);
+            assert_eq!(doc.to_string(), back.to_json().to_string());
+        }
+    }
+
+    #[test]
+    fn from_json_rejects_bad_documents() {
+        let t = Trace::generate(TraceFamily::FlashCrowd, &TraceParams::default());
+        // wrong schema tag
+        let mut doc = t.to_json();
+        if let Json::Obj(m) = &mut doc {
+            m.insert("schema".into(), Json::from("pann-trace/v0"));
+        }
+        assert!(Trace::from_json(&doc).is_err());
+        // unsorted events
+        let mut unsorted = t.clone();
+        unsorted.events.swap(0, 1);
+        if unsorted.events[0].offset_us != unsorted.events[1].offset_us {
+            assert!(Trace::from_json(&unsorted.to_json()).is_err());
+        }
+        // out-of-bounds deadline
+        let mut bad = t;
+        bad.events[0].deadline_us = Some(MAX_DEADLINE_US + 1);
+        assert!(Trace::from_json(&bad.to_json()).is_err());
+    }
+
+    #[test]
+    fn flash_crowd_is_burst_heavy() {
+        let p = TraceParams::default();
+        let t = Trace::generate(TraceFamily::FlashCrowd, &p);
+        let (lo, hi) = (p.duration_us * 45 / 100, p.duration_us * 55 / 100);
+        let in_burst =
+            t.events.iter().filter(|e| (lo..hi).contains(&e.offset_us)).count();
+        // 60% were placed there on purpose; the uniform 40% adds a bit
+        assert!(in_burst as f64 >= 0.55 * p.events as f64, "burst {in_burst}");
+    }
+
+    #[test]
+    fn tenant_skew_is_hot_on_tenant_zero() {
+        let p = TraceParams::default();
+        let t = Trace::generate(TraceFamily::TenantSkew, &p);
+        let hot = t
+            .events
+            .iter()
+            .filter(|e| e.affinity.as_deref() == Some("tenant-0"))
+            .count();
+        assert!(hot as f64 > 0.7 * p.events as f64, "hot {hot}");
+        assert!(hot < p.events, "cold tenants must exist");
+    }
+
+    #[test]
+    fn to_request_carries_the_full_qos_surface() {
+        let e = TraceEvent {
+            offset_us: 10,
+            model: Some("cnn-s".into()),
+            deadline_us: Some(5_000),
+            max_gflips: Some(0.25),
+            priority: Priority::Hi,
+            affinity: Some("tenant-1".into()),
+        };
+        let req = e.to_request(vec![0.0; 4]);
+        let dbg = format!("{req:?}");
+        assert!(dbg.contains("cnn-s") && dbg.contains("tenant-1") && dbg.contains("Hi"), "{dbg}");
+    }
+
+    #[test]
+    fn priority_names_roundtrip() {
+        for p in Priority::ALL {
+            assert_eq!(priority_from_name(p.name()), Some(p));
+        }
+        assert_eq!(priority_from_name("nope"), None);
+    }
+}

@@ -58,6 +58,19 @@ pub fn write_json(path: &str, v: &Json) -> std::io::Result<()> {
     std::fs::write(path, format!("{v}\n"))
 }
 
+/// Build a provenance-stamped artifact document: every versioned JSON
+/// file this crate commits (`BENCH_*.json`, traces, scenario reports)
+/// carries a `schema` tag and a human `provenance` string alongside
+/// its payload fields, so a reader can tell what produced the file and
+/// whether absolute numbers are comparable across machines. Keep the
+/// provenance text free of timestamps when the producer promises
+/// byte-identical output for identical inputs.
+pub fn stamped(schema: &str, provenance: &str, fields: Vec<(&str, Json)>) -> Json {
+    let mut pairs = vec![("schema", Json::from(schema)), ("provenance", Json::from(provenance))];
+    pairs.extend(fields);
+    Json::obj(pairs)
+}
+
 fn fmt_ns(ns: f64) -> String {
     if ns < 1e3 {
         format!("{ns:.1} ns")
@@ -121,6 +134,14 @@ pub fn run<F: FnMut()>(name: &str, f: F) -> BenchResult {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn stamped_puts_schema_and_provenance_first_class() {
+        let doc = stamped("x/v1", "hand-rolled", vec![("n", Json::from(3usize))]);
+        assert_eq!(doc.get("schema").and_then(Json::as_str), Some("x/v1"));
+        assert_eq!(doc.get("provenance").and_then(Json::as_str), Some("hand-rolled"));
+        assert_eq!(doc.get("n").and_then(Json::as_usize), Some(3));
+    }
 
     #[test]
     fn measures_something() {

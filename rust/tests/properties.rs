@@ -534,3 +534,50 @@ fn prop_admitted_narrow_wrapping_fold_equals_true_sum() {
     }
     assert_ne!(acc as i128, true_sum, "the rejected config does overflow");
 }
+
+#[test]
+fn prop_trace_generator_deterministic_and_sorted() {
+    // The scenario harness's foundation: every workload family, under
+    // random generator knobs, must (a) regenerate byte-identically
+    // from its seed, (b) emit offset-sorted events inside the trace
+    // duration, (c) keep deadlines and energy caps inside the schema
+    // bounds, and (d) actually depend on the seed.
+    use pann::coordinator::Priority;
+    use pann::scenario::trace::{MAX_DEADLINE_US, MIN_DEADLINE_US};
+    use pann::scenario::{Trace, TraceFamily, TraceParams};
+    let mut meta = Rng::new(907);
+    for _ in 0..24 {
+        let params = TraceParams {
+            seed: meta.next_u64(),
+            events: 1 + meta.below(300),
+            duration_us: 50_000 + meta.below(3_000_000) as u64,
+            tenants: 1 + meta.below(8),
+        };
+        for family in TraceFamily::ALL {
+            let a = Trace::generate(family, &params);
+            let b = Trace::generate(family, &params);
+            assert_eq!(a, b, "same seed must regenerate the identical trace");
+            assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+            assert_eq!(a.events.len(), params.events, "{family:?}");
+            a.validate().unwrap();
+            let mut prev = 0u64;
+            for e in &a.events {
+                assert!(e.offset_us >= prev, "{family:?}: offsets must be sorted");
+                assert!(e.offset_us <= a.duration_us);
+                prev = e.offset_us;
+                if let Some(d) = e.deadline_us {
+                    assert!((MIN_DEADLINE_US..=MAX_DEADLINE_US).contains(&d), "{family:?}: {d}");
+                }
+                if let Some(g) = e.max_gflips {
+                    assert!(g.is_finite() && g > 0.0, "{family:?}: cap {g}");
+                }
+                assert!(Priority::ALL.contains(&e.priority));
+            }
+            let reseeded = TraceParams { seed: params.seed ^ 0x9e37_79b9_7f4a_7c15, ..params };
+            let other = Trace::generate(family, &reseeded);
+            if params.events >= 8 {
+                assert_ne!(a.events, other.events, "{family:?} must depend on its seed");
+            }
+        }
+    }
+}
