@@ -144,6 +144,7 @@ fn main() {
         .expect("prepare")
         .into_iter()
         .map(|(bits, qm)| SharedPoint {
+            measured_gflips_per_sample: None,
             name: format!("pann-p{bits}"),
             giga_flips_per_sample: gf_per_sample(bits, &qm),
             engine: Arc::new(PlanEngine::new(qm.plan(), MAX_BATCH)),

@@ -1,13 +1,14 @@
 //! Menu-compiler benchmark: how long compiling + Pareto-pruning the
-//! full power–accuracy frontier takes, how long reloading it from the
-//! `menu.json` artifact takes, and how aggressively the frontier is
-//! pruned.
+//! power–accuracy frontier takes — uniform sweep vs the per-layer
+//! mixed-precision search — how long reloading the artifact takes, and
+//! how dense each frontier comes out.
 //!
-//! Emits `BENCH_menu.json` (schema `bench-menu/v1`: compile/reload
-//! wall-clock, candidates swept, points kept vs pruned, plus the
-//! frontier itself) so later PRs can track the menu-compilation
-//! trajectory without parsing stdout — the compile-time counterpart of
-//! `BENCH_engine.json` / `BENCH_coordinator.json`.
+//! Emits `BENCH_menu.json` (schema `bench-menu/v2`: uniform and mixed
+//! compile wall-clock, candidates swept, points kept vs pruned,
+//! frontier density, plus the mixed frontier itself) so later PRs can
+//! track the menu-compilation trajectory without parsing stdout — the
+//! compile-time counterpart of `BENCH_engine.json` /
+//! `BENCH_coordinator.json`.
 
 // The panic ban in clippy.toml targets the serving layer
 // (coordinator/, net/); CLI/test/bench crates may assert freely.
@@ -16,9 +17,9 @@
 use pann::data::{synth, Dataset};
 use pann::nn::eval::batch_tensor;
 use pann::nn::Model;
-use pann::pann::{compile_menu, MenuArtifact};
+use pann::pann::{compile_menu, compile_menu_per_layer, MenuArtifact, PerLayerSearch};
 use pann::quant::ActQuantMethod;
-use pann::util::bench::write_json;
+use pann::util::bench::{stamped, write_json};
 use pann::util::Json;
 use std::time::Instant;
 
@@ -30,59 +31,115 @@ fn main() {
     let val = ds.take(96);
     let budget_bits = [2u32, 4, 8];
 
-    // --- compile: sweep all curves, evaluate, prune ---
+    // --- uniform compile: sweep all curves, evaluate, prune ---
     let t0 = Instant::now();
-    let menu = compile_menu(&model, &budget_bits, ActQuantMethod::BnStats, None, &val, 2..=8)
-        .expect("compile menu");
-    let compile_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let uniform = compile_menu(&model, &budget_bits, ActQuantMethod::BnStats, None, &val, 2..=8)
+        .expect("compile uniform menu");
+    let uniform_ms = t0.elapsed().as_secs_f64() * 1e3;
     println!(
-        "compile-menu (bits {budget_bits:?}, {} val samples): {compile_ms:.1} ms — swept {}, \
-         kept {}, pruned {}",
+        "compile-menu uniform (bits {budget_bits:?}, {} val samples): {uniform_ms:.1} ms — \
+         swept {}, kept {}, pruned {}",
         val.len(),
-        menu.swept,
-        menu.points.len(),
-        menu.pruned()
+        uniform.swept,
+        uniform.points.len(),
+        uniform.pruned()
     );
-    for line in menu.frontier_lines() {
+
+    // --- mixed compile: same sweep + sensitivity-guided per-layer
+    // search, pruned over the candidate union ---
+    let t1 = Instant::now();
+    let mixed = compile_menu_per_layer(
+        &model,
+        &budget_bits,
+        ActQuantMethod::BnStats,
+        None,
+        &val,
+        2..=8,
+        PerLayerSearch::default(),
+    )
+    .expect("compile mixed menu");
+    let mixed_ms = t1.elapsed().as_secs_f64() * 1e3;
+    let mixed_points = mixed.points.iter().filter(|p| p.layer_bits.is_some()).count();
+    println!(
+        "compile-menu --per-layer: {mixed_ms:.1} ms — swept {}, kept {} ({} mixed), pruned {}",
+        mixed.swept,
+        mixed.points.len(),
+        mixed_points,
+        mixed.pruned()
+    );
+    for line in mixed.frontier_lines() {
         println!("  {line}");
     }
+    // the headline property the test battery proves, kept visible in
+    // the bench artifact: the mixed frontier is at least as dense
+    assert!(
+        mixed.points.len() >= uniform.points.len(),
+        "mixed frontier ({}) must be at least as dense as uniform ({})",
+        mixed.points.len(),
+        uniform.points.len()
+    );
 
-    // --- artifact round trip: save, load, recompile for serving ---
+    // --- artifact round trip: save, load, recompile for serving
+    // (through the per-layer path, since the menu carries mixed
+    // points) ---
     let dir = std::env::temp_dir().join("pann_bench_menu");
     std::fs::create_dir_all(&dir).expect("temp dir");
     let path = dir.join("menu.json");
-    menu.save(&path).expect("save menu");
-    let t1 = Instant::now();
+    mixed.save(&path).expect("save menu");
+    let t2 = Instant::now();
     let loaded = MenuArtifact::load(&path).expect("load menu");
     let points = loaded.shared_points(&model, None, 16).expect("recompile menu");
-    let reload_ms = t1.elapsed().as_secs_f64() * 1e3;
-    assert_eq!(points.len(), menu.points.len());
+    let reload_ms = t2.elapsed().as_secs_f64() * 1e3;
+    assert_eq!(points.len(), mixed.points.len());
     println!("reload + recompile from {}: {reload_ms:.1} ms", path.display());
 
-    let frontier: Vec<Json> = menu
+    let frontier: Vec<Json> = mixed
         .points
         .iter()
         .map(|p| {
-            Json::obj(vec![
+            let mut fields = vec![
                 ("name", Json::from(p.name.as_str())),
                 ("bx_tilde", Json::from(p.bx_tilde as usize)),
                 ("r", Json::Num(p.r)),
                 ("gflips_per_sample", Json::Num(p.gflips_per_sample)),
                 ("val_acc", Json::Num(p.val_acc)),
-            ])
+            ];
+            if let Some(bits) = &p.layer_bits {
+                fields.push((
+                    "layer_bits",
+                    Json::Arr(bits.iter().map(|&b| Json::from(b as usize)).collect()),
+                ));
+            }
+            Json::obj(fields)
         })
         .collect();
-    let doc = Json::obj(vec![
-        ("schema", Json::from("bench-menu/v1")),
-        ("budget_bits", Json::nums(budget_bits.iter().map(|&b| b as f64))),
-        ("val_samples", Json::from(val.len())),
-        ("compile_ms", Json::Num(compile_ms)),
-        ("reload_recompile_ms", Json::Num(reload_ms)),
-        ("swept", Json::from(menu.swept)),
-        ("kept", Json::from(menu.points.len())),
-        ("pruned", Json::from(menu.pruned())),
-        ("points", Json::Arr(frontier)),
-    ]);
+    let side = |menu: &MenuArtifact, compile_ms: f64| {
+        Json::obj(vec![
+            ("compile_ms", Json::Num(compile_ms)),
+            ("swept", Json::from(menu.swept)),
+            ("kept", Json::from(menu.points.len())),
+            ("pruned", Json::from(menu.pruned())),
+            (
+                "frontier_density",
+                Json::Num(menu.points.len() as f64 / menu.swept as f64),
+            ),
+        ])
+    };
+    let doc = stamped(
+        "bench-menu/v2",
+        "cargo bench --bench menu — reference_cnn(1), synth digits(256,2), 96 val samples; \
+         compile/reload wall times are machine-dependent, the swept/kept counts and the \
+         frontier itself are deterministic functions of the build",
+        vec![
+            ("budget_bits", Json::nums(budget_bits.iter().map(|&b| b as f64))),
+            ("val_samples", Json::from(val.len())),
+            ("uniform", side(&uniform, uniform_ms)),
+            ("mixed", side(&mixed, mixed_ms)),
+            ("mixed_points", Json::from(mixed_points)),
+            ("reload_recompile_ms", Json::Num(reload_ms)),
+            ("points", Json::Arr(frontier)),
+        ],
+    );
     write_json("BENCH_menu.json", &doc).expect("write BENCH_menu.json");
     println!("wrote BENCH_menu.json");
 }

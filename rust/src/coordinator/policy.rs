@@ -29,6 +29,16 @@ pub trait Costed {
     fn point_name(&self) -> &str;
     /// Energy per sample in Giga bit flips; `f64::INFINITY` for fp32.
     fn cost_gflips(&self) -> f64;
+    /// Serving-side *measured* energy per sample, when a calibration
+    /// pass recorded one (`pann-menu/v2`'s
+    /// `measured_gflips_per_sample`). Used only to break ties between
+    /// points with equal modeled cost — the frontier's Pareto
+    /// invariant is stated over the modeled cost, so the primary
+    /// ranking must stay on [`Costed::cost_gflips`]. Defaults to
+    /// `None` (rank by modeled cost alone).
+    fn measured_gflips(&self) -> Option<f64> {
+        None
+    }
 }
 
 /// One selectable operating point owning a boxed engine.
@@ -88,7 +98,24 @@ impl<P: Costed> PowerPolicy<P> {
                 bad.point_name()
             )));
         }
-        points.sort_by(|a, b| a.cost_gflips().total_cmp(&b.cost_gflips()));
+        // Primary order: modeled cost (the Pareto invariant's axis).
+        // Tie-break: among equal modeled costs, prefer the point whose
+        // *measured* cost is lower — `best_fitting_index` picks the
+        // highest-indexed fitting point, so the preferred point of an
+        // equal-cost group must sort last (descending measured cost).
+        // An unmeasured or NaN-measured point falls back to its
+        // modeled cost, leaving fully-uncalibrated menus ordered
+        // exactly as before.
+        let effective = |p: &P| {
+            p.measured_gflips()
+                .filter(|m| !m.is_nan())
+                .unwrap_or_else(|| p.cost_gflips())
+        };
+        points.sort_by(|a, b| {
+            a.cost_gflips()
+                .total_cmp(&b.cost_gflips())
+                .then_with(|| effective(b).total_cmp(&effective(a)))
+        });
         Ok(PowerPolicy { points })
     }
 
@@ -174,6 +201,47 @@ mod tests {
         assert_eq!(p.point(p.select(0.5).unwrap()).name, "p4");
         assert_eq!(p.point(p.select(2.0).unwrap()).name, "p8");
         assert_eq!(p.point(p.select(f64::INFINITY).unwrap()).name, "fp32");
+    }
+
+    struct Calibrated {
+        name: &'static str,
+        cost: f64,
+        measured: Option<f64>,
+    }
+
+    impl Costed for Calibrated {
+        fn point_name(&self) -> &str {
+            self.name
+        }
+        fn cost_gflips(&self) -> f64 {
+            self.cost
+        }
+        fn measured_gflips(&self) -> Option<f64> {
+            self.measured
+        }
+    }
+
+    #[test]
+    fn measured_cost_breaks_ties_between_equal_modeled_points() {
+        // Two points at the same modeled cost, one measured cheaper:
+        // a fitting budget must never pick the measured-dominated one.
+        let p = PowerPolicy::new(vec![
+            Calibrated { name: "measured-heavy", cost: 0.3, measured: Some(0.42) },
+            Calibrated { name: "measured-light", cost: 0.3, measured: Some(0.28) },
+            Calibrated { name: "cheap", cost: 0.1, measured: None },
+        ])
+        .unwrap();
+        assert_eq!(p.point(p.select(0.5).unwrap()).name, "measured-light");
+        // the tie-break stays *behind* the modeled-cost ranking: a
+        // cheaper modeled point still outranks any measured ordering
+        assert_eq!(p.point(p.select(0.2).unwrap()).name, "cheap");
+        // NaN measurements are ignored, not sorted
+        let p = PowerPolicy::new(vec![
+            Calibrated { name: "nan-measured", cost: 0.3, measured: Some(f64::NAN) },
+            Calibrated { name: "measured", cost: 0.3, measured: Some(0.25) },
+        ])
+        .unwrap();
+        assert_eq!(p.point(p.select(1.0).unwrap()).name, "measured");
     }
 
     #[test]

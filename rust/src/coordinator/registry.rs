@@ -370,6 +370,7 @@ mod tests {
 
     fn shared(name: &str, gf: f64, in_len: usize) -> SharedPoint {
         SharedPoint {
+            measured_gflips_per_sample: None,
             name: name.into(),
             giga_flips_per_sample: gf,
             engine: Arc::new(MockEngine::new(4, in_len, 2)),

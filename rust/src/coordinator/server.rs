@@ -106,6 +106,11 @@ pub struct SharedPoint {
     pub name: String,
     /// Energy per sample in Giga bit flips; `f64::INFINITY` for fp32.
     pub giga_flips_per_sample: f64,
+    /// Serving-side measured energy per sample, when the menu artifact
+    /// carries a `pann-menu/v2` calibration for this point. The policy
+    /// uses it only to break ties between equal modeled costs
+    /// ([`Costed::measured_gflips`]).
+    pub measured_gflips_per_sample: Option<f64>,
     /// The engine executing this point, shared across workers.
     pub engine: Arc<dyn BatchEngine>,
 }
@@ -116,6 +121,9 @@ impl Costed for SharedPoint {
     }
     fn cost_gflips(&self) -> f64 {
         self.giga_flips_per_sample
+    }
+    fn measured_gflips(&self) -> Option<f64> {
+        self.measured_gflips_per_sample
     }
 }
 
@@ -385,6 +393,7 @@ impl Menu {
 ///     .budget_gflips(1.0)
 ///     .serve(Menu::shared(vec![SharedPoint {
 ///         name: "p4".into(),
+///         measured_gflips_per_sample: None,
 ///         giga_flips_per_sample: 0.001,
 ///         engine: Arc::new(PlanEngine::new(qm.plan(), 8)),
 ///     }]))?;
@@ -1431,11 +1440,13 @@ mod tests {
     fn shared_points() -> Vec<SharedPoint> {
         vec![
             SharedPoint {
+                measured_gflips_per_sample: None,
                 name: "cheap".into(),
                 giga_flips_per_sample: 0.1,
                 engine: Arc::new(MockEngine::new(4, 3, 2)),
             },
             SharedPoint {
+                measured_gflips_per_sample: None,
                 name: "rich".into(),
                 giga_flips_per_sample: 0.9,
                 engine: Arc::new(MockEngine::new(4, 3, 2)),
@@ -1448,11 +1459,13 @@ mod tests {
     fn gated_points(gate: &Gate) -> Vec<SharedPoint> {
         vec![
             SharedPoint {
+                measured_gflips_per_sample: None,
                 name: "cheap".into(),
                 giga_flips_per_sample: 0.1,
                 engine: Arc::new(GateEngine::new(4, 3, 2, gate.clone())),
             },
             SharedPoint {
+                measured_gflips_per_sample: None,
                 name: "rich".into(),
                 giga_flips_per_sample: 0.9,
                 engine: Arc::new(GateEngine::new(4, 3, 2, gate.clone())),
@@ -1682,6 +1695,7 @@ mod tests {
     #[test]
     fn nan_cost_menu_is_startup_error() {
         let bad = vec![SharedPoint {
+            measured_gflips_per_sample: None,
             name: "nan".into(),
             giga_flips_per_sample: f64::NAN,
             engine: Arc::new(MockEngine::new(4, 3, 2)),
@@ -1936,11 +1950,13 @@ mod tests {
     fn fleet_regs() -> Vec<(String, Menu)> {
         let menu_a = Menu::shared(vec![
             SharedPoint {
+                measured_gflips_per_sample: None,
                 name: "cheap".into(),
                 giga_flips_per_sample: 0.1,
                 engine: Arc::new(MockEngine::new(4, 3, 2)),
             },
             SharedPoint {
+                measured_gflips_per_sample: None,
                 name: "rich".into(),
                 giga_flips_per_sample: 0.9,
                 engine: Arc::new(MockEngine::new(4, 3, 2)),
@@ -1948,11 +1964,13 @@ mod tests {
         ]);
         let menu_b = Menu::shared(vec![
             SharedPoint {
+                measured_gflips_per_sample: None,
                 name: "cheap".into(),
                 giga_flips_per_sample: 0.2,
                 engine: Arc::new(MockEngine::new(4, 5, 3)),
             },
             SharedPoint {
+                measured_gflips_per_sample: None,
                 name: "rich".into(),
                 giga_flips_per_sample: 2.0,
                 engine: Arc::new(MockEngine::new(4, 5, 3)),
@@ -2103,11 +2121,13 @@ mod tests {
         let menu = |cheap: f64, rich: f64, in_len: usize| {
             Menu::shared(vec![
                 SharedPoint {
+                    measured_gflips_per_sample: None,
                     name: "cheap".into(),
                     giga_flips_per_sample: cheap,
                     engine: Arc::new(MockEngine::new(8, in_len, 2)),
                 },
                 SharedPoint {
+                    measured_gflips_per_sample: None,
                     name: "rich".into(),
                     giga_flips_per_sample: rich,
                     engine: Arc::new(MockEngine::new(8, in_len, 2)),

@@ -4,6 +4,7 @@
 //! pann-cli experiment <id>|all [--quick] [--artifacts DIR]
 //! pann-cli power-report [--bits B] [--acc-bits B]
 //! pann-cli compile-menu --model NAME [--budget-bits 2,4,8] [--out menu.json] [--quick]
+//!                [--per-layer] [--sensitivity-samples N] [--max-mixed-points K]
 //! pann-cli serve --model NAME [--menu menu.json] [--requests N] [--budget GFLIPS]
 //!               [--queue-depth D] [--deadline-ms MS]
 //!               [--envelope-gflips RATE] [--governor-window-ms MS]
@@ -285,7 +286,19 @@ fn run() -> Result<()> {
                 .map(|s| s.trim().parse().context("parse --budget-bits"))
                 .collect::<Result<_>>()?;
             let out = args.get("out").map(str::to_string).unwrap_or_else(|| "menu.json".into());
-            compile_menu_cmd(&ctx, &model, &bits, &out)
+            let per_layer = if args.has("per-layer") {
+                let mut search = pann::pann::PerLayerSearch::default();
+                if let Some(s) = args.get("sensitivity-samples") {
+                    search.sensitivity_samples = s.parse().context("parse --sensitivity-samples")?;
+                }
+                if let Some(s) = args.get("max-mixed-points") {
+                    search.max_mixed_points = s.parse().context("parse --max-mixed-points")?;
+                }
+                Some(search)
+            } else {
+                None
+            };
+            compile_menu_cmd(&ctx, &model, &bits, &out, per_layer)
         }
         "sweep" => {
             let model = args.get("model").map(str::to_string).unwrap_or_else(|| "cnn-s".into());
@@ -336,7 +349,10 @@ fn run() -> Result<()> {
                  \x20 list                            list experiment ids\n\
                  \x20 power-report [--bits B]         per-MAC power model summary\n\
                  \x20 compile-menu --model M [--budget-bits 2,4,8] [--out menu.json]\n\
-                 \x20                                 compile + Pareto-prune the operating-point menu\n\
+                 \x20              [--per-layer] [--sensitivity-samples N] [--max-mixed-points K]\n\
+                 \x20                                 compile + Pareto-prune the operating-point menu;\n\
+                 \x20                                 --per-layer adds sensitivity-guided mixed-\n\
+                 \x20                                 precision candidates (pann-menu/v3)\n\
                  \x20 serve --model M [--menu menu.json] [--requests N] [--budget G]\n\
                  \x20       [--queue-depth D] [--deadline-ms MS]\n\
                  \x20       [--envelope-gflips RATE] [--governor-window-ms MS]\n\
@@ -519,29 +535,50 @@ fn replay(
 }
 
 /// Compile, Pareto-prune and persist the operating-point menu
-/// (`pann-cli compile-menu`).
-fn compile_menu_cmd(ctx: &Ctx, model_name: &str, bits: &[u32], out: &str) -> Result<()> {
+/// (`pann-cli compile-menu`). With `--per-layer`, the uniform sweep is
+/// augmented by the sensitivity-guided mixed-precision search
+/// ([`pann::pann::compile_menu_per_layer`]) before pruning.
+fn compile_menu_cmd(
+    ctx: &Ctx,
+    model_name: &str,
+    bits: &[u32],
+    out: &str,
+    per_layer: Option<pann::pann::PerLayerSearch>,
+) -> Result<()> {
     use pann::quant::ActQuantMethod;
     let (model, test) = ctx.load_model(model_name)?;
     let val = test.take(ctx.eval_n().min(128));
     let calib = pann::pann::convert::calib_tensor(&test, 32);
     let t0 = std::time::Instant::now();
-    let menu = pann::pann::compile_menu(
-        &model,
-        bits,
-        ActQuantMethod::BnStats,
-        Some(&calib),
-        &val,
-        2..=8,
-    )?;
+    let menu = match per_layer {
+        Some(search) => pann::pann::compile_menu_per_layer(
+            &model,
+            bits,
+            ActQuantMethod::BnStats,
+            Some(&calib),
+            &val,
+            2..=8,
+            search,
+        )?,
+        None => pann::pann::compile_menu(
+            &model,
+            bits,
+            ActQuantMethod::BnStats,
+            Some(&calib),
+            &val,
+            2..=8,
+        )?,
+    };
     let dt = t0.elapsed().as_secs_f64();
     menu.save(std::path::Path::new(out))?;
+    let mixed = menu.points.iter().filter(|p| p.layer_bits.is_some()).count();
     println!(
         "compiled menu for '{model_name}' in {dt:.2}s: swept {} candidates, kept {} frontier \
-         points ({} pruned) -> {out}",
+         points ({} pruned, {} mixed-precision) -> {out}",
         menu.swept,
         menu.points.len(),
-        menu.pruned()
+        menu.pruned(),
+        mixed
     );
     for line in menu.frontier_lines() {
         println!("  {line}");
@@ -631,7 +668,14 @@ fn verify_menu(ctx: &Ctx, menu_path: &str, model_name: Option<&str>) -> Result<(
             let calib = pann::pann::convert::calib_tensor(&test, 32);
             for p in &artifact.points {
                 let cfg = pann::nn::QuantConfig::pann(p.bx_tilde, p.r, p.quant_method);
-                let plan = match pann::nn::ExecutionPlan::compile(&model, cfg, Some(&calib)) {
+                // mixed (v3) points recompile through the per-layer
+                // path, facing exactly the same certificate prover
+                let plan = match pann::nn::ExecutionPlan::compile_with_layers(
+                    &model,
+                    cfg,
+                    p.layer_bits.as_deref(),
+                    Some(&calib),
+                ) {
                     Ok(plan) => plan,
                     Err(e) => {
                         report(

@@ -430,6 +430,7 @@ mod tests {
         let router = ShardRouter::builder()
             .build(n_shards, |_, _| {
                 let menu = Menu::shared(vec![SharedPoint {
+                    measured_gflips_per_sample: None,
                     name: "p".into(),
                     giga_flips_per_sample: 1.0,
                     engine: std::sync::Arc::new(MockEngine::new(4, 2, 1)),

@@ -343,6 +343,7 @@ mod tests {
 
     fn mock_shard(_i: usize, env: Option<EnergyEnvelope>) -> Result<Server> {
         let menu = Menu::shared(vec![SharedPoint {
+            measured_gflips_per_sample: None,
             name: "p".into(),
             giga_flips_per_sample: 1.0,
             engine: Arc::new(MockEngine::new(4, 2, 1)),
@@ -431,6 +432,7 @@ mod tests {
             .build(2, move |i, _| {
                 if i == 0 {
                     let menu = Menu::shared(vec![SharedPoint {
+                        measured_gflips_per_sample: None,
                         name: "p".into(),
                         giga_flips_per_sample: 1.0,
                         engine: Arc::new(GateEngine::new(1, 2, 1, g2.clone())),

@@ -173,7 +173,7 @@ impl ExecutionPlan {
         // activation quantizer (dynamic fits on the live batch)
         let qx = match &p.act {
             ActQ::Fixed(q) => *q,
-            ActQ::Dynamic => ruq::fit_unsigned(data, self.config.bx),
+            ActQ::Dynamic => ruq::fit_unsigned(data, p.bx),
         };
         let deq = p.weights.scale * qx.scale;
         let out = if let Some((ci, kh, kw, stride, pad, co)) = p.conv {
@@ -281,10 +281,12 @@ impl ExecutionPlan {
         let macs = out.sample_len() as u64 * p.depth as u64 * n as u64;
         match self.config.arithmetic {
             Arithmetic::Pann => {
-                meter.record_pann(p.meter, macs, p.weights.adds_per_element, self.config.bx);
+                // charge Eq. (13) at the layer's *effective* width, so
+                // mixed-precision plans meter each layer at its own b̃x
+                meter.record_pann(p.meter, macs, p.weights.adds_per_element, p.bx);
                 if self.config.count_readout_sub {
                     // one B≈2b̃x-bit subtraction per output element (Eq. 6)
-                    meter.record_readout_sub(p.meter, out.len() as u64, 2 * self.config.bx);
+                    meter.record_readout_sub(p.meter, out.len() as u64, 2 * p.bx);
                 }
             }
             _ => meter.record(p.meter, macs, p.flips_per_mac),

@@ -102,6 +102,11 @@ pub(crate) struct PlannedMac {
     /// Precomputed flips per MAC (non-PANN arithmetic; 0 for PANN,
     /// whose cost is charged through `record_pann`).
     pub flips_per_mac: f64,
+    /// Effective activation width `b̃x` of this layer — the config's
+    /// uniform width, or this layer's entry of the per-layer override
+    /// ([`ExecutionPlan::compile_with_layers`]). Execution quantizes
+    /// and meters against this, never `config.bx`.
+    pub bx: u32,
 }
 
 /// A model compiled under a [`QuantConfig`]: immutable weight banks,
@@ -132,6 +137,42 @@ impl ExecutionPlan {
     /// inputs for the methods that need them (ACIQ, Recon; Dynamic
     /// needs none; BN-stats and DFQ use the manifest statistics).
     pub fn compile(model: &Model, config: QuantConfig, calib: Option<&Tensor>) -> Result<ExecutionPlan> {
+        Self::compile_with_layers(model, config, None, calib)
+    }
+
+    /// Compile with an optional per-layer activation-width override:
+    /// `layer_bits[k]` replaces `config.bx` for the `k`-th MAC layer in
+    /// graph order (the order of [`ExecutionPlan::layer_certs`]). All
+    /// other configuration — weight quantizer, additions budget `R`,
+    /// arithmetic — stays uniform; kernel selection remains
+    /// certificate-driven per layer, so a mixed-precision plan goes
+    /// through exactly the same overflow prover as a uniform one.
+    ///
+    /// The override must name every MAC layer and every width must be
+    /// in `1..=31` (the i32 activation slab); anything else is a typed
+    /// compile error.
+    pub fn compile_with_layers(
+        model: &Model,
+        config: QuantConfig,
+        layer_bits: Option<&[u32]>,
+        calib: Option<&Tensor>,
+    ) -> Result<ExecutionPlan> {
+        if let Some(lb) = layer_bits {
+            let mac_layers =
+                model.nodes.iter().filter(|n| n.op.is_mac_layer()).count();
+            anyhow::ensure!(
+                lb.len() == mac_layers,
+                "per-layer widths name {} layers but the model has {mac_layers} MAC layers",
+                lb.len()
+            );
+            for (k, &b) in lb.iter().enumerate() {
+                anyhow::ensure!(
+                    (1..=31).contains(&b),
+                    "per-layer width b̃x = {b} for MAC layer {k} is outside 1..=31 \
+                     (the i32 activation slab)"
+                );
+            }
+        }
         let mut model = model.clone();
         if config.act_method == ActQuantMethod::Dfq {
             apply_dfq_equalization(&mut model)?;
@@ -147,15 +188,21 @@ impl ExecutionPlan {
         let mut meter_names = Vec::new();
         let mut max_cols = 0usize;
         let mut max_acc = 0usize;
+        let mut mac_idx = 0usize;
         for i in 0..model.nodes.len() {
             if !model.nodes[i].op.is_mac_layer() {
                 continue;
             }
+            // effective activation width of this layer: the per-layer
+            // override when given, the uniform config width otherwise
+            let bx = layer_bits.map_or(config.bx, |lb| lb[mac_idx]);
+            mac_idx += 1;
             let input_idx = model.nodes[i].input;
             // --- activation quantizer for this layer's input ---
             let act = fit_activation_quantizer(
                 &model,
                 &config,
+                bx,
                 input_idx,
                 calib.map(|c| (c, calib_outs.as_ref().unwrap().as_slice())),
             )?;
@@ -210,15 +257,14 @@ impl ExecutionPlan {
                 // Dynamic refits per batch; the static bound is the
                 // full unsigned b̃x code range, unclamped (the shift
                 // cap only guards the i128 shift itself).
-                ActQ::Dynamic => Interval::new(0, (1i128 << config.bx.min(126)) - 1),
+                ActQ::Dynamic => Interval::new(0, (1i128 << bx.min(126)) - 1),
             };
             if !act_iv.fits_i32() {
                 bail!(
-                    "node {i}: activation codes [{}, {}] (b̃x = {}) do not fit the i32 \
+                    "node {i}: activation codes [{}, {}] (b̃x = {bx}) do not fit the i32 \
                      activation slab",
                     act_iv.lo,
                     act_iv.hi,
-                    config.bx
                 );
             }
             let cert = KernelCert::certify(
@@ -266,7 +312,7 @@ impl ExecutionPlan {
             steps[i] = Some(PlannedMac {
                 node: i,
                 meter,
-                flips_per_mac: flips_per_mac(&config),
+                flips_per_mac: flips_per_mac(&config, bx),
                 weights,
                 bias,
                 act,
@@ -275,6 +321,7 @@ impl ExecutionPlan {
                 depth,
                 kernel,
                 cert,
+                bx,
             });
         }
         let macs_per_sample = shapes.iter().map(|(m, _)| m).sum();
@@ -342,6 +389,13 @@ impl ExecutionPlan {
             .collect()
     }
 
+    /// Effective activation width `b̃x` of every planned MAC layer in
+    /// graph order — uniform plans repeat `config.bx`; mixed plans
+    /// ([`ExecutionPlan::compile_with_layers`]) report their override.
+    pub fn layer_widths(&self) -> Vec<u32> {
+        self.steps.iter().flatten().map(|p| p.bx).collect()
+    }
+
     /// Scratch elements (`cols`, `acc`) needed to run a batch of `n`.
     pub fn scratch_hint(&self, n: usize) -> (usize, usize) {
         (self.max_cols_per_sample * n, self.max_acc_per_sample * n)
@@ -376,28 +430,32 @@ impl ExecutionPlan {
     }
 }
 
-/// Flips per MAC under `config`. PANN layers are charged through
+/// Flips per MAC under `config` at the layer's effective activation
+/// width `bx`. PANN layers are charged through
 /// [`PowerMeter::record_pann`] with their achieved additions budget
 /// instead, so they return 0 here.
-fn flips_per_mac(config: &QuantConfig) -> f64 {
+fn flips_per_mac(config: &QuantConfig, bx: u32) -> f64 {
     match config.arithmetic {
         Arithmetic::SignedMac { acc_bits } => {
-            crate::power::model::mult_power_mixed_signed(config.bw, config.bx)
+            crate::power::model::mult_power_mixed_signed(config.bw, bx)
                 + 0.5 * acc_bits as f64
-                + (config.bw + config.bx) as f64
+                + (config.bw + bx) as f64
         }
         Arithmetic::UnsignedMac => {
-            crate::power::model::mult_power_mixed_signed(config.bw, config.bx)
-                + 1.5 * (config.bw + config.bx) as f64
+            crate::power::model::mult_power_mixed_signed(config.bw, bx)
+                + 1.5 * (config.bw + bx) as f64
         }
         Arithmetic::Pann => 0.0,
     }
 }
 
-/// Fit the activation quantizer for the input of a MAC layer.
+/// Fit the activation quantizer for the input of a MAC layer at its
+/// effective width `bx` (uniform `config.bx`, or the layer's entry of
+/// a per-layer override).
 fn fit_activation_quantizer(
     model: &Model,
     config: &QuantConfig,
+    bx: u32,
     input_idx: isize,
     calib: Option<(&Tensor, &[Tensor])>,
 ) -> Result<ActQ> {
@@ -406,11 +464,10 @@ fn fit_activation_quantizer(
     // b̃x is bounded by what the fitters can represent; Dynamic defers
     // to the prover in `compile`, which rejects the same configs with
     // the certified range in the message.
-    if !matches!(config.act_method, Dynamic) && !(1..=31).contains(&config.bx) {
+    if !matches!(config.act_method, Dynamic) && !(1..=31).contains(&bx) {
         bail!(
-            "activation bit-width b̃x = {} unsupported: fitted activation codes must fit \
-             the i32 activation slab (1..=31 bits)",
-            config.bx
+            "activation bit-width b̃x = {bx} unsupported: fitted activation codes must fit \
+             the i32 activation slab (1..=31 bits)"
         );
     }
     Ok(match config.act_method {
@@ -418,19 +475,19 @@ fn fit_activation_quantizer(
         Aciq | Recon => {
             let (cx, couts) = calib.context("ACIQ/Recon need a calibration set")?;
             let data: &[f32] = if input_idx < 0 { &cx.data } else { &couts[input_idx as usize].data };
-            ActQ::Fixed(aciq::fit_relu_activations(data, config.bx))
+            ActQ::Fixed(aciq::fit_relu_activations(data, bx))
         }
         BnStats | Dfq => {
             if input_idx < 0 {
                 // model input: ranges are part of the data contract
                 // (inputs normalized to [0, 1] by the datasets).
-                ActQ::Fixed(ruq::fit_unsigned_clipped(1.0, config.bx))
+                ActQ::Fixed(ruq::fit_unsigned_clipped(1.0, bx))
             } else {
                 let stats = model
                     .act_stats
                     .get(&(input_idx as usize))
                     .context("manifest lacks act_stats for data-free quantization")?;
-                ActQ::Fixed(stats.fit_activations(config.bx))
+                ActQ::Fixed(stats.fit_activations(bx))
             }
         }
     })
@@ -876,6 +933,62 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn per_layer_widths_compile_and_are_certified() {
+        let mut model = Model::reference_cnn(46);
+        model.record_act_stats(&Tensor::zeros(vec![2, 1, 16, 16])).unwrap();
+        let cfg = QuantConfig::pann(8, 2.0, ActQuantMethod::BnStats);
+        let uniform = ExecutionPlan::compile(&model, cfg, None).unwrap();
+        let n_layers = uniform.layer_certs().len();
+        assert!(n_layers >= 2, "reference model must have several MAC layers");
+        assert_eq!(uniform.layer_widths(), vec![8; n_layers]);
+        // downgrade every layer but the first
+        let mut bits = vec![8u32; n_layers];
+        for b in bits.iter_mut().skip(1) {
+            *b = 2;
+        }
+        let mixed =
+            ExecutionPlan::compile_with_layers(&model, cfg, Some(&bits), None).unwrap();
+        assert_eq!(mixed.layer_widths(), bits);
+        // structure is preserved: same MAC layers, same MACs/sample,
+        // and every layer still carries a proven certificate
+        assert_eq!(mixed.layer_certs().len(), n_layers);
+        assert_eq!(mixed.macs_per_sample, uniform.macs_per_sample);
+        for (node, kernel, cert) in mixed.layer_certs() {
+            assert!(cert.i64_ok, "node {node}: mixed plans must prove wide");
+            let narrow = matches!(kernel, GemmKernel::Narrow | GemmKernel::SplitNarrow);
+            assert_eq!(narrow, cert.admits_narrow(), "node {node}");
+        }
+        // the downgraded layers quantize at the narrower width: the
+        // fitted quantizer's code range must shrink accordingly
+        for (p, &b) in mixed.steps.iter().flatten().zip(&bits) {
+            if let ActQ::Fixed(q) = &p.act {
+                assert!(q.qmax < (1i64 << b), "layer at b̃x={b} has qmax {}", q.qmax);
+            }
+            assert_eq!(p.bx, b);
+        }
+    }
+
+    #[test]
+    fn per_layer_width_overrides_are_validated() {
+        let mut model = Model::reference_cnn(47);
+        model.record_act_stats(&Tensor::zeros(vec![2, 1, 16, 16])).unwrap();
+        let cfg = QuantConfig::pann(8, 2.0, ActQuantMethod::BnStats);
+        let n = ExecutionPlan::compile(&model, cfg, None).unwrap().layer_certs().len();
+        // wrong arity
+        let e = ExecutionPlan::compile_with_layers(&model, cfg, Some(&vec![8; n + 1]), None)
+            .unwrap_err();
+        assert!(format!("{e:#}").contains("MAC layers"), "{e:#}");
+        // out-of-range width
+        let mut bad = vec![8u32; n];
+        bad[0] = 32;
+        let e = ExecutionPlan::compile_with_layers(&model, cfg, Some(&bad), None).unwrap_err();
+        assert!(format!("{e:#}").contains("1..=31"), "{e:#}");
+        bad[0] = 0;
+        let e = ExecutionPlan::compile_with_layers(&model, cfg, Some(&bad), None).unwrap_err();
+        assert!(format!("{e:#}").contains("1..=31"), "{e:#}");
     }
 
     #[test]

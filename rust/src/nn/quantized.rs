@@ -116,7 +116,23 @@ impl QuantizedModel {
     /// inputs for the methods that need them (ACIQ, Recon; Dynamic
     /// needs none; BN-stats and DFQ use the manifest statistics).
     pub fn prepare(model: &Model, config: QuantConfig, calib: Option<&Tensor>) -> Result<QuantizedModel> {
-        let plan = Arc::new(ExecutionPlan::compile(model, config, calib)?);
+        Self::prepare_with_layers(model, config, None, calib)
+    }
+
+    /// Freeze `model` under `config` with an optional per-layer
+    /// activation-width override (see
+    /// [`ExecutionPlan::compile_with_layers`]): `layer_bits[k]`
+    /// replaces `config.bx` for the `k`-th MAC layer in graph order.
+    /// This is how a mixed-precision menu point compiles into one
+    /// plan.
+    pub fn prepare_with_layers(
+        model: &Model,
+        config: QuantConfig,
+        layer_bits: Option<&[u32]>,
+        calib: Option<&Tensor>,
+    ) -> Result<QuantizedModel> {
+        let plan =
+            Arc::new(ExecutionPlan::compile_with_layers(model, config, layer_bits, calib)?);
         let macs_per_sample = plan.macs_per_sample;
         Ok(QuantizedModel { config, plan, macs_per_sample })
     }
@@ -243,6 +259,35 @@ mod tests {
         let bound_hi = macs * (2.2 + 0.5) * 6.0;
         let flips = meter.total_flips();
         assert!(flips > bound_lo && flips < bound_hi, "flips {flips}");
+    }
+
+    #[test]
+    fn mixed_precision_meters_between_the_uniform_extremes() {
+        // Per-layer Eq. (13): a plan with some layers at b̃x = 8 and
+        // some at 2 must consume strictly less energy than uniform-8
+        // and strictly more than uniform-2.
+        let mut model = Model::reference_cnn(23);
+        let x = test_input(2, 24);
+        model.record_act_stats(&x).unwrap();
+        let run = |bits: Option<&[u32]>, bx: u32| {
+            let cfg = QuantConfig::pann(bx, 2.0, ActQuantMethod::BnStats);
+            let qm = QuantizedModel::prepare_with_layers(&model, cfg, bits, None).unwrap();
+            let mut meter = qm.new_meter();
+            qm.forward(&x, &mut meter).unwrap();
+            meter.total_flips()
+        };
+        let n = {
+            let cfg = QuantConfig::pann(8, 2.0, ActQuantMethod::BnStats);
+            QuantizedModel::prepare(&model, cfg, None).unwrap().plan().layer_certs().len()
+        };
+        let hi = run(None, 8);
+        let lo = run(None, 2);
+        let mut bits = vec![8u32; n];
+        bits[n - 1] = 2;
+        let mixed = run(Some(&bits), 8);
+        assert!(lo < hi);
+        assert!(mixed < hi, "mixed {mixed} must undercut uniform hi {hi}");
+        assert!(mixed > lo, "mixed {mixed} must exceed uniform lo {lo}");
     }
 
     #[test]

@@ -29,7 +29,7 @@
 
 use crate::coordinator::{PlanEngine, SharedPoint};
 use crate::data::Dataset;
-use crate::nn::eval::eval_quantized;
+use crate::nn::eval::{batch_tensor, eval_quantized};
 use crate::nn::quantized::{QuantConfig, QuantizedModel};
 use crate::nn::{ExecutionPlan, Model, Tensor};
 use crate::power::budget::equal_power_r_usable;
@@ -40,19 +40,28 @@ use anyhow::{Context, Result};
 use std::path::Path;
 use std::sync::Arc;
 
-/// Version tag written to new `menu.json` artifacts. `v2` adds one
-/// *additive, optional* per-point field over `v1`:
-/// `measured_gflips_per_sample` — the energy the serving stack
-/// actually metered for the point (fed back via
-/// [`MenuArtifact::apply_calibration`], e.g. from
-/// `pann-cli serve --menu … --calibrate-out`), as opposed to the
-/// compile-time `gflips_per_sample` the policy ranks by. The loader
-/// accepts both versions; unknown schemas are rejected instead of
-/// misread.
-pub const MENU_SCHEMA: &str = "pann-menu/v2";
+/// Version tag written to new `menu.json` artifacts. The lineage is
+/// strictly additive:
+///
+/// - `v2` added the optional per-point `measured_gflips_per_sample`
+///   calibration (fed back via [`MenuArtifact::apply_calibration`],
+///   e.g. from `pann-cli serve --menu … --calibrate-out`);
+/// - `v3` adds the optional per-point `layer_bits: [b̃x, …]` — a
+///   mixed-precision point compiled with one activation width per MAC
+///   layer ([`compile_menu_per_layer`]). Points without the field are
+///   uniform, exactly as before, and consumers that only read cost and
+///   accuracy (server, governor, policy) need no changes.
+///
+/// The loader accepts all three versions; unknown schemas are rejected
+/// instead of misread.
+pub const MENU_SCHEMA: &str = "pann-menu/v3";
 
-/// The previous schema, still accepted on read (its points simply
-/// carry no calibration).
+/// The previous schema, still accepted on read (its points carry no
+/// per-layer widths).
+pub const MENU_SCHEMA_V2: &str = "pann-menu/v2";
+
+/// The original schema, still accepted on read (its points carry
+/// neither calibration nor per-layer widths).
 pub const MENU_SCHEMA_V1: &str = "pann-menu/v1";
 
 /// One evaluated candidate from an equal-power sweep.
@@ -172,6 +181,14 @@ pub struct MenuPointSpec {
     /// enforces; a calibration pass must not be able to reorder or
     /// invalidate the frontier.
     pub measured_gflips_per_sample: Option<f64>,
+    /// Mixed-precision points only (`pann-menu/v3`, additive): the
+    /// activation width of every MAC layer in graph order, each in
+    /// `1..=31`, with `bx_tilde` equal to the widest entry. `None`
+    /// means the point is uniform at `bx_tilde`. Recompilation routes
+    /// through [`ExecutionPlan::compile_with_layers`], so a mixed
+    /// point passes exactly the same per-layer certificate prover as a
+    /// uniform one.
+    pub layer_bits: Option<Vec<u32>>,
 }
 
 /// The versioned, serializable power–accuracy frontier of one model.
@@ -233,6 +250,159 @@ pub fn compile_menu(
     val: &Dataset,
     bx_range: std::ops::RangeInclusive<u32>,
 ) -> Result<MenuArtifact> {
+    let cands = uniform_candidates(model, budget_bits, act_method, calib, val, &bx_range)?;
+    anyhow::ensure!(
+        !cands.is_empty(),
+        "no usable operating point for budgets {budget_bits:?} over b̃x {bx_range:?}"
+    );
+    Ok(finish_menu(model, act_method, cands))
+}
+
+/// Budget knobs for the per-layer mixed-precision search
+/// ([`compile_menu_per_layer`]).
+#[derive(Clone, Copy, Debug)]
+pub struct PerLayerSearch {
+    /// Validation samples used by the per-layer sensitivity evals.
+    /// Every *emitted* candidate is still scored on the full `val`
+    /// set; only the cheap single-layer probes subsample.
+    pub sensitivity_samples: usize,
+    /// Cap on emitted mixed-precision candidates (the length of the
+    /// greedy downgrade ladder).
+    pub max_mixed_points: usize,
+}
+
+impl Default for PerLayerSearch {
+    fn default() -> Self {
+        PerLayerSearch { sensitivity_samples: 64, max_mixed_points: 8 }
+    }
+}
+
+/// [`compile_menu`] plus a sensitivity-guided per-layer search (Moons
+/// et al., *Minimum Energy Quantized Neural Networks*: automated
+/// per-layer bit-width assignment under an energy objective dominates
+/// uniform quantization).
+///
+/// On top of the uniform sweep, the search
+///
+/// 1. picks the best-accuracy uniform candidate as the *base* and the
+///    narrowest swept width as the downgrade target,
+/// 2. runs a **sensitivity pass**: one metered forward collects each
+///    layer's energy share (its slice of the per-layer Eq.-13
+///    [`crate::nn::PowerMeter`] tally), and one single-layer-downgrade
+///    eval per MAC layer measures its accuracy drop,
+/// 3. walks a **greedy downgrade ladder** in best
+///    Δaccuracy-per-ΔGflips order — cheapest accuracy loss per energy
+///    saved first — emitting one mixed-precision candidate per step,
+///    each compiled via [`ExecutionPlan::compile_with_layers`] and
+///    scored on the full `val` set,
+/// 4. merges uniform and mixed candidates through the same
+///    [`pareto_prune`].
+///
+/// Because the merged frontier is pruned over the *union* of
+/// candidates, every uniform frontier point is weakly dominated by
+/// some point of the result (≥ accuracy at ≤ GF/sample) — the
+/// property `tests/properties.rs` enforces.
+pub fn compile_menu_per_layer(
+    model: &Model,
+    budget_bits: &[u32],
+    act_method: ActQuantMethod,
+    calib: Option<&Tensor>,
+    val: &Dataset,
+    bx_range: std::ops::RangeInclusive<u32>,
+    search: PerLayerSearch,
+) -> Result<MenuArtifact> {
+    let mut cands = uniform_candidates(model, budget_bits, act_method, calib, val, &bx_range)?;
+    anyhow::ensure!(
+        !cands.is_empty(),
+        "no usable operating point for budgets {budget_bits:?} over b̃x {bx_range:?}"
+    );
+    // base: the best-accuracy uniform candidate (ties -> cheaper);
+    // target: the narrowest usable width the sweep produced
+    let base = cands
+        .iter()
+        .max_by(|a, b| {
+            a.val_acc
+                .total_cmp(&b.val_acc)
+                .then(b.gflips_per_sample.total_cmp(&a.gflips_per_sample))
+        })
+        .cloned()
+        .expect("non-empty candidates");
+    let lo = cands.iter().map(|c| c.bx_tilde).min().expect("non-empty candidates");
+    if lo < base.bx_tilde && search.max_mixed_points > 0 {
+        let cfg = QuantConfig::pann(base.bx_tilde, base.r, act_method);
+        let base_qm = QuantizedModel::prepare(model, cfg, calib)
+            .context("recompile per-layer search base point")?;
+        let n_layers = base_qm.plan().layer_certs().len();
+        let sens = val.take(search.sensitivity_samples.max(1).min(val.len()));
+        let base_sens_acc = eval_quantized(&base_qm, &sens)?.accuracy();
+        // energy shares: one metered forward, per-layer Eq.-13 tallies
+        let mut meter = base_qm.new_meter();
+        let probe = batch_tensor(&sens, 0, sens.len().min(8));
+        base_qm.forward(&probe, &mut meter)?;
+        let shares: Vec<f64> = meter.layers.iter().map(|l| l.flips).collect();
+        let total_share: f64 = shares.iter().sum::<f64>().max(f64::MIN_POSITIVE);
+        // sensitivity: accuracy drop of downgrading each layer alone,
+        // scored against the energy that downgrade frees (the layer's
+        // share scales linearly in b̃x under Eq. 13)
+        let mut scored: Vec<(usize, f64)> = Vec::with_capacity(n_layers);
+        for l in 0..n_layers {
+            let mut bits = vec![base.bx_tilde; n_layers];
+            bits[l] = lo;
+            let qm = QuantizedModel::prepare_with_layers(model, cfg, Some(&bits), calib)
+                .with_context(|| format!("sensitivity probe for MAC layer {l}"))?;
+            let drop = (base_sens_acc - eval_quantized(&qm, &sens)?.accuracy()).max(0.0);
+            let saved = (shares[l] / total_share)
+                * (1.0 - lo as f64 / base.bx_tilde as f64);
+            scored.push((l, drop / saved.max(1e-12)));
+        }
+        // cheapest accuracy-per-energy first; index breaks ties so the
+        // ladder (and the artifact) is deterministic
+        scored.sort_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)));
+        // greedy ladder: cumulative downgrades, one candidate per step
+        let mut bits = vec![base.bx_tilde; n_layers];
+        for &(l, _) in scored.iter().take(search.max_mixed_points) {
+            bits[l] = lo;
+            let qm = QuantizedModel::prepare_with_layers(model, cfg, Some(&bits), calib)
+                .with_context(|| format!("compile mixed candidate {bits:?}"))?;
+            let res = eval_quantized(&qm, val)?;
+            cands.push(Cand {
+                bx_tilde: *bits.iter().max().expect("non-empty layer widths"),
+                r: base.r,
+                gflips_per_sample: res.flips_per_sample / 1e9,
+                val_acc: res.accuracy(),
+                achieved_adds_per_element: qm.achieved_r(),
+                weight_code_bits: qm.weight_code_bits(),
+                layer_bits: Some(bits.clone()),
+            });
+        }
+    }
+    Ok(finish_menu(model, act_method, cands))
+}
+
+/// One menu candidate before pruning: a uniform sweep point, or a
+/// mixed-precision point from the per-layer search.
+#[derive(Clone)]
+struct Cand {
+    bx_tilde: u32,
+    r: f64,
+    gflips_per_sample: f64,
+    val_acc: f64,
+    achieved_adds_per_element: f64,
+    weight_code_bits: u32,
+    layer_bits: Option<Vec<u32>>,
+}
+
+/// The uniform candidate grid shared by [`compile_menu`] and
+/// [`compile_menu_per_layer`]: one equal-power sweep per deduplicated
+/// budget width.
+fn uniform_candidates(
+    model: &Model,
+    budget_bits: &[u32],
+    act_method: ActQuantMethod,
+    calib: Option<&Tensor>,
+    val: &Dataset,
+    bx_range: &std::ops::RangeInclusive<u32>,
+) -> Result<Vec<Cand>> {
     anyhow::ensure!(!budget_bits.is_empty(), "no budget bit widths given");
     // dedup the curve grid *before* sweeping: a repeated bit width
     // would re-run prepare + eval (the two expensive steps) only to
@@ -241,22 +411,31 @@ pub fn compile_menu(
     let mut bits: Vec<u32> = budget_bits.to_vec();
     bits.sort_unstable();
     bits.dedup();
-    let mut cands: Vec<SweepPoint> = Vec::new();
+    let mut cands: Vec<Cand> = Vec::new();
     for &b in &bits {
         let power = mac_power_unsigned_total(b);
-        cands.extend(sweep_equal_power(
-            model,
-            power,
-            act_method,
-            calib,
-            val,
-            bx_range.clone(),
-        )?);
+        cands.extend(
+            sweep_equal_power(model, power, act_method, calib, val, bx_range.clone())?
+                .into_iter()
+                .map(|sp| Cand {
+                    bx_tilde: sp.bx_tilde,
+                    r: sp.r,
+                    gflips_per_sample: sp.gflips_per_sample,
+                    val_acc: sp.val_acc,
+                    achieved_adds_per_element: sp.achieved_adds_per_element,
+                    weight_code_bits: sp.weight_code_bits,
+                    layer_bits: None,
+                }),
+        );
     }
-    anyhow::ensure!(
-        !cands.is_empty(),
-        "no usable operating point for budgets {budget_bits:?} over b̃x {bx_range:?}"
-    );
+    Ok(cands)
+}
+
+/// Pareto-prune the candidate union and assemble the artifact. Point
+/// names stay stable for uniform points (`ptNN-bxB-rR`); mixed points
+/// are labelled by their width vector (`ptNN-mx8.2.8-rR`, summarized
+/// for deep models).
+fn finish_menu(model: &Model, act_method: ActQuantMethod, cands: Vec<Cand>) -> MenuArtifact {
     let swept = cands.len();
     let kept = pareto_prune(cands, |p| p.gflips_per_sample, |p| p.val_acc);
     let points: Vec<MenuPointSpec> = kept
@@ -265,7 +444,23 @@ pub fn compile_menu(
         .map(|(i, sp)| MenuPointSpec {
             // index prefix keeps names unique even if two frontier
             // points share (b̃x, rounded R)
-            name: format!("pt{i:02}-bx{}-r{:.2}", sp.bx_tilde, sp.r),
+            name: match &sp.layer_bits {
+                None => format!("pt{i:02}-bx{}-r{:.2}", sp.bx_tilde, sp.r),
+                Some(bits) if bits.len() <= 8 => {
+                    let label: Vec<String> = bits.iter().map(u32::to_string).collect();
+                    format!("pt{i:02}-mx{}-r{:.2}", label.join("."), sp.r)
+                }
+                Some(bits) => {
+                    let narrow = bits.iter().min().expect("non-empty layer widths");
+                    format!(
+                        "pt{i:02}-mx{}to{}x{}-r{:.2}",
+                        sp.bx_tilde,
+                        narrow,
+                        bits.len(),
+                        sp.r
+                    )
+                }
+            },
             bx_tilde: sp.bx_tilde,
             r: sp.r,
             gflips_per_sample: sp.gflips_per_sample,
@@ -274,15 +469,16 @@ pub fn compile_menu(
             achieved_adds_per_element: sp.achieved_adds_per_element,
             weight_code_bits: sp.weight_code_bits,
             measured_gflips_per_sample: None,
+            layer_bits: sp.layer_bits,
         })
         .collect();
-    Ok(MenuArtifact {
+    MenuArtifact {
         model_name: model.name.clone(),
         model_fingerprint: model.fingerprint(),
         macs_per_sample: model.num_macs(),
         swept,
         points,
-    })
+    }
 }
 
 impl MenuArtifact {
@@ -360,6 +556,14 @@ impl MenuArtifact {
                 if let Some(m) = p.measured_gflips_per_sample {
                     fields.push(("measured_gflips_per_sample", Json::Num(m)));
                 }
+                // the v3 additive mixed-precision field, present only
+                // on per-layer points
+                if let Some(bits) = &p.layer_bits {
+                    fields.push((
+                        "layer_bits",
+                        Json::Arr(bits.iter().map(|&b| Json::from(b as usize)).collect()),
+                    ));
+                }
                 Json::obj(fields)
             })
             .collect();
@@ -378,13 +582,15 @@ impl MenuArtifact {
     }
 
     /// Parse the `menu.json` form, rejecting unknown schemas
-    /// (`pann-menu/v1` and `v2` are both readable; `v1` points simply
-    /// carry no measured-cost calibration).
+    /// (`pann-menu/v1`, `v2` and `v3` are all readable; older points
+    /// simply carry no measured-cost calibration and no per-layer
+    /// widths).
     pub fn from_json(j: &Json) -> Result<MenuArtifact> {
         let schema = j.req("schema")?.as_str().context("schema must be a string")?;
         anyhow::ensure!(
-            schema == MENU_SCHEMA || schema == MENU_SCHEMA_V1,
-            "unsupported menu schema '{schema}' (this build reads {MENU_SCHEMA_V1} and {MENU_SCHEMA})"
+            schema == MENU_SCHEMA || schema == MENU_SCHEMA_V2 || schema == MENU_SCHEMA_V1,
+            "unsupported menu schema '{schema}' (this build reads {MENU_SCHEMA_V1}, \
+             {MENU_SCHEMA_V2} and {MENU_SCHEMA})"
         );
         let fp_hex = j
             .req("model_fingerprint")?
@@ -394,6 +600,11 @@ impl MenuArtifact {
             u64::from_str_radix(fp_hex, 16).context("parse model_fingerprint")?;
         let mut points = Vec::new();
         let arr = j.req("points")?.as_arr().context("points must be an array")?;
+        // every mixed point in one artifact describes the same model,
+        // so their layer_bits vectors must agree on the layer count —
+        // a hand-edited length mismatch is rejected here, before the
+        // definitive per-model arity check at recompile time
+        let mut mixed_len: Option<usize> = None;
         for (i, pj) in arr.iter().enumerate() {
             let method_name = pj
                 .req("quant_method")?
@@ -401,13 +612,57 @@ impl MenuArtifact {
                 .context("quant_method must be a string")?;
             let quant_method = ActQuantMethod::from_name(method_name)
                 .with_context(|| format!("unknown quant_method '{method_name}'"))?;
+            let bx_tilde = pj.req("bx_tilde")?.as_usize().context("bx_tilde")? as u32;
+            let layer_bits = match pj.get("layer_bits") {
+                Some(v) => {
+                    anyhow::ensure!(
+                        schema == MENU_SCHEMA,
+                        "point {i}: layer_bits requires schema {MENU_SCHEMA}, artifact is \
+                         tagged '{schema}'"
+                    );
+                    let arr = v
+                        .as_arr()
+                        .with_context(|| format!("point {i}: layer_bits must be an array"))?;
+                    anyhow::ensure!(!arr.is_empty(), "point {i}: layer_bits is empty");
+                    let mut bits = Vec::with_capacity(arr.len());
+                    for (k, b) in arr.iter().enumerate() {
+                        let b = b
+                            .as_usize()
+                            .with_context(|| format!("point {i}: layer_bits[{k}]"))?;
+                        anyhow::ensure!(
+                            (1..=31).contains(&b),
+                            "point {i}: layer_bits[{k}] = {b} is outside 1..=31 (the i32 \
+                             activation slab)"
+                        );
+                        bits.push(b as u32);
+                    }
+                    match mixed_len {
+                        None => mixed_len = Some(bits.len()),
+                        Some(n) => anyhow::ensure!(
+                            bits.len() == n,
+                            "point {i}: layer_bits length {} does not match the {} layers \
+                             of earlier mixed points",
+                            bits.len(),
+                            n
+                        ),
+                    }
+                    let widest = *bits.iter().max().expect("non-empty layer_bits");
+                    anyhow::ensure!(
+                        widest == bx_tilde,
+                        "point {i}: bx_tilde {bx_tilde} must equal the widest layer_bits \
+                         entry {widest} (the width audit keys off bx_tilde)"
+                    );
+                    Some(bits)
+                }
+                None => None,
+            };
             points.push(MenuPointSpec {
                 name: pj
                     .req("name")?
                     .as_str()
                     .with_context(|| format!("point {i}: name must be a string"))?
                     .to_string(),
-                bx_tilde: pj.req("bx_tilde")?.as_usize().context("bx_tilde")? as u32,
+                bx_tilde,
                 r: pj.req("r")?.as_f64().context("r")?,
                 gflips_per_sample: pj
                     .req("gflips_per_sample")?
@@ -438,6 +693,7 @@ impl MenuArtifact {
                     }
                     None => None,
                 },
+                layer_bits,
             });
         }
         anyhow::ensure!(!points.is_empty(), "menu artifact has no points");
@@ -503,8 +759,12 @@ impl MenuArtifact {
         let mut out = Vec::with_capacity(self.points.len());
         for p in &self.points {
             let cfg = QuantConfig::pann(p.bx_tilde, p.r, p.quant_method);
-            let qm = QuantizedModel::prepare(model, cfg, calib)
-                .with_context(|| format!("recompile menu point '{}'", p.name))?;
+            // mixed points recompile through the per-layer path; the
+            // arity of layer_bits is validated against this model's
+            // actual MAC-layer count inside compile_with_layers
+            let qm =
+                QuantizedModel::prepare_with_layers(model, cfg, p.layer_bits.as_deref(), calib)
+                    .with_context(|| format!("recompile menu point '{}'", p.name))?;
             anyhow::ensure!(
                 qm.macs_per_sample == self.macs_per_sample,
                 "menu point '{}': plan has {} MACs/sample, artifact recorded {}",
@@ -530,6 +790,9 @@ impl MenuArtifact {
             .map(|(p, plan)| SharedPoint {
                 name: p.name,
                 giga_flips_per_sample: p.gflips_per_sample,
+                // calibration rides along so the policy can prefer
+                // measured-cheaper points among equal modeled costs
+                measured_gflips_per_sample: p.measured_gflips_per_sample,
                 engine: Arc::new(PlanEngine::new(plan, max_batch)),
             })
             .collect())
@@ -637,12 +900,14 @@ mod tests {
         let mut menu =
             compile_menu(&model, &[2], ActQuantMethod::BnStats, None, &ds, 2..=4).unwrap();
         assert!(menu.points.iter().all(|p| p.measured_gflips_per_sample.is_none()));
-        // a v1-tagged artifact (no calibration fields) still loads
-        let mut v1 = menu.to_json();
-        if let Json::Obj(m) = &mut v1 {
-            m.insert("schema".into(), Json::from(MENU_SCHEMA_V1));
+        // v1- and v2-tagged artifacts (no per-layer fields) still load
+        for old in [MENU_SCHEMA_V1, MENU_SCHEMA_V2] {
+            let mut j = menu.to_json();
+            if let Json::Obj(m) = &mut j {
+                m.insert("schema".into(), Json::from(old));
+            }
+            assert_eq!(MenuArtifact::from_json(&j).unwrap(), menu, "schema {old}");
         }
-        assert_eq!(MenuArtifact::from_json(&v1).unwrap(), menu);
         // apply a measured cost to the first point; bogus entries are
         // skipped without corrupting the artifact
         let first = menu.points[0].name.clone();
@@ -658,7 +923,7 @@ mod tests {
         let back = MenuArtifact::from_json(&menu.to_json()).unwrap();
         assert_eq!(back, menu);
         assert_eq!(back.points[0].measured_gflips_per_sample, Some(0.123));
-        assert!(menu.to_json().to_string().contains("pann-menu/v2"));
+        assert!(menu.to_json().to_string().contains("pann-menu/v3"));
         // a hand-edited artifact cannot smuggle in a calibration the
         // API refuses to write (same bar as apply_calibration)
         menu.points[0].measured_gflips_per_sample = Some(-1.0);
@@ -709,6 +974,7 @@ mod tests {
             achieved_adds_per_element: 2.0,
             weight_code_bits: 3,
             measured_gflips_per_sample: None,
+            layer_bits: None,
         };
         let art = MenuArtifact {
             model_name: "m".into(),
@@ -729,5 +995,125 @@ mod tests {
         let short = MenuArtifact { swept: 1, ..ok };
         let e = MenuArtifact::from_json(&short.to_json()).unwrap_err();
         assert!(e.to_string().contains("swept"), "{e}");
+    }
+
+    #[test]
+    fn per_layer_menu_compiles_recompiles_and_dominates_uniform() {
+        let (model, ds) = setup();
+        let search = PerLayerSearch { sensitivity_samples: 12, max_mixed_points: 2 };
+        let menu = compile_menu_per_layer(
+            &model,
+            &[2, 4],
+            ActQuantMethod::BnStats,
+            None,
+            &ds,
+            2..=6,
+            search,
+        )
+        .unwrap();
+        // the merged frontier keeps the artifact invariant
+        for w in menu.points.windows(2) {
+            assert!(w[1].gflips_per_sample > w[0].gflips_per_sample);
+            assert!(w[1].val_acc > w[0].val_acc);
+        }
+        // v3 JSON round trip (layer_bits included when present)
+        let back = MenuArtifact::from_json(&menu.to_json()).unwrap();
+        assert_eq!(back, menu);
+        // every point — uniform and mixed — recompiles, and a mixed
+        // point's plan realizes exactly its persisted widths
+        let pairs = menu.recompile(&model, None).unwrap();
+        assert_eq!(pairs.len(), menu.points.len());
+        for (p, plan) in &pairs {
+            match &p.layer_bits {
+                Some(bits) => {
+                    assert_eq!(&plan.layer_widths(), bits);
+                    assert_eq!(*bits.iter().max().unwrap(), p.bx_tilde);
+                    assert!(p.name.contains("-mx"), "{}", p.name);
+                }
+                None => assert!(plan.layer_widths().iter().all(|&b| b == p.bx_tilde)),
+            }
+        }
+        // headline claim on a real model: the mixed frontier weakly
+        // dominates the uniform frontier (pruning the candidate union
+        // can only improve any cost point)
+        let uni =
+            compile_menu(&model, &[2, 4], ActQuantMethod::BnStats, None, &ds, 2..=6).unwrap();
+        for u in &uni.points {
+            assert!(
+                menu.points.iter().any(|m| m.gflips_per_sample <= u.gflips_per_sample
+                    && m.val_acc >= u.val_acc),
+                "uniform point {} not weakly dominated by the mixed frontier",
+                u.name
+            );
+        }
+    }
+
+    #[test]
+    fn loader_validates_layer_bits() {
+        let point = |name: &str, gf: f64, acc: f64, bits: Option<Vec<u32>>| MenuPointSpec {
+            name: name.into(),
+            bx_tilde: bits
+                .as_ref()
+                .and_then(|b| b.iter().max().copied())
+                .unwrap_or(4),
+            r: 2.0,
+            gflips_per_sample: gf,
+            val_acc: acc,
+            quant_method: ActQuantMethod::BnStats,
+            achieved_adds_per_element: 2.0,
+            weight_code_bits: 3,
+            measured_gflips_per_sample: None,
+            layer_bits: bits,
+        };
+        let art = |points: Vec<MenuPointSpec>| MenuArtifact {
+            model_name: "m".into(),
+            model_fingerprint: 7,
+            macs_per_sample: 100,
+            swept: 4,
+            points,
+        };
+        // a well-formed mixed artifact round-trips with widths intact
+        let ok = art(vec![
+            point("u", 1.0, 0.8, None),
+            point("m1", 2.0, 0.9, Some(vec![2, 4, 4])),
+            point("m2", 3.0, 0.95, Some(vec![4, 2, 2])),
+        ]);
+        let back = MenuArtifact::from_json(&ok.to_json()).unwrap();
+        assert_eq!(back, ok);
+        assert_eq!(back.points[1].layer_bits.as_deref(), Some(&[2u32, 4, 4][..]));
+        // layer_bits is a v3 field: an artifact tagged v1/v2 cannot
+        // smuggle one in
+        for old in [MENU_SCHEMA_V1, MENU_SCHEMA_V2] {
+            let mut j = ok.to_json();
+            if let Json::Obj(m) = &mut j {
+                m.insert("schema".into(), Json::from(old));
+            }
+            let e = MenuArtifact::from_json(&j).unwrap_err();
+            assert!(e.to_string().contains("requires schema"), "{e}");
+        }
+        // a width outside the i32 activation slab is rejected, typed
+        let e = MenuArtifact::from_json(&art(vec![point("m", 1.0, 0.8, Some(vec![4, 32]))]).to_json())
+            .unwrap_err();
+        assert!(e.to_string().contains("1..=31"), "{e}");
+        // mixed points of one artifact must agree on the layer count
+        let e = MenuArtifact::from_json(
+            &art(vec![
+                point("m1", 1.0, 0.8, Some(vec![2, 4])),
+                point("m2", 2.0, 0.9, Some(vec![4, 2, 2])),
+            ])
+            .to_json(),
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("does not match"), "{e}");
+        // bx_tilde must stay the widest entry (the width audit keys
+        // off it)
+        let mut p = point("m", 1.0, 0.8, Some(vec![2, 2]));
+        p.bx_tilde = 4;
+        let e = MenuArtifact::from_json(&art(vec![p]).to_json()).unwrap_err();
+        assert!(e.to_string().contains("widest"), "{e}");
+        // an empty width vector describes no model
+        let e = MenuArtifact::from_json(&art(vec![point("m", 1.0, 0.8, Some(vec![]))]).to_json())
+            .unwrap_err();
+        assert!(e.to_string().contains("empty"), "{e}");
     }
 }

@@ -19,5 +19,8 @@ pub mod tradeoff;
 
 pub use algorithm1::{choose_operating_point, OperatingPoint};
 pub use convert::{pann_at_budget, ptq_baseline, unsigned_of};
-pub use menu::{compile_menu, pareto_prune, sweep_equal_power, MenuArtifact, MenuPointSpec};
+pub use menu::{
+    compile_menu, compile_menu_per_layer, pareto_prune, sweep_equal_power, MenuArtifact,
+    MenuPointSpec, PerLayerSearch,
+};
 pub use tradeoff::{budget_curve_table, TradeoffRow};

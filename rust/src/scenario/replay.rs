@@ -959,6 +959,7 @@ mod tests {
             achieved_adds_per_element: 1.0,
             weight_code_bits: 4,
             measured_gflips_per_sample: None,
+            layer_bits: None,
         };
         let menu = MenuArtifact {
             model_name: "m".into(),

@@ -242,6 +242,7 @@ fn worker_pool_serves_shared_plans() {
         let plan = qm.plan();
         plans.push((format!("p{bits}"), plan.clone()));
         points.push(SharedPoint {
+            measured_gflips_per_sample: None,
             name: format!("p{bits}"),
             giga_flips_per_sample: pann::power::model::mac_power_unsigned_total(bits)
                 * model.num_macs() as f64
@@ -319,6 +320,7 @@ fn qos_per_request_caps_and_deadline_on_one_server() {
         let gf = pann::power::model::mac_power_unsigned_total(bits) * model.num_macs() as f64 / 1e9;
         costs.push(gf);
         points.push(SharedPoint {
+            measured_gflips_per_sample: None,
             name: format!("p{bits}"),
             giga_flips_per_sample: gf,
             engine: Arc::new(PlanEngine::new(qm.plan(), 8)),
@@ -568,6 +570,7 @@ fn governor_load_ramp_walks_frontier_down_and_back() {
         costs
             .iter()
             .map(|&(name, gf)| SharedPoint {
+                measured_gflips_per_sample: None,
                 name: name.into(),
                 giga_flips_per_sample: gf,
                 engine: Arc::new(FixedEngine),
@@ -695,6 +698,7 @@ fn fleet_two_models_one_envelope_hot_degrades_cold_holds() {
             costs
                 .iter()
                 .map(|&(name, gf)| SharedPoint {
+                    measured_gflips_per_sample: None,
                     name: name.into(),
                     giga_flips_per_sample: gf,
                     engine: Arc::new(FixedEngine),
@@ -920,6 +924,7 @@ fn net_edge_serves_the_frontier_over_loopback() {
             let points = compiled
                 .iter()
                 .map(|(name, gf, plan)| SharedPoint {
+                    measured_gflips_per_sample: None,
                     name: name.clone(),
                     giga_flips_per_sample: *gf,
                     engine: Arc::new(PlanEngine::new(plan.clone(), 8)),
@@ -1042,4 +1047,21 @@ fn overflow_unsafe_fixture_parses_but_never_compiles() {
         msg.contains("i32") || msg.contains("32"),
         "rejection should cite the width: {msg}"
     );
+}
+
+#[test]
+fn mixed_unsafe_fixture_is_rejected_at_load() {
+    // unlike the v2 overflow fixture (which parses and is rejected by
+    // the static audit, exit 2), an out-of-range per-layer width is a
+    // malformed artifact: the v3 loader refuses it outright, so
+    // `pann-cli verify` exits 1 before any audit runs (CI asserts both
+    // the exit code and that the error names layer_bits)
+    let path = Path::new(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/tests/fixtures/menu-mixed-unsafe.json"
+    ));
+    let err = pann::pann::MenuArtifact::load(path).expect_err("fixture must not load");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("layer_bits"), "{msg}");
+    assert!(msg.contains("1..=31"), "{msg}");
 }

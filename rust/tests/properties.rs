@@ -536,6 +536,78 @@ fn prop_admitted_narrow_wrapping_fold_equals_true_sum() {
 }
 
 #[test]
+fn prop_mixed_frontier_dominates_uniform() {
+    // The pann-menu/v3 headline claim: because the mixed-precision
+    // search prunes the *union* of uniform and mixed candidates, the
+    // resulting frontier weakly dominates the uniform-only frontier —
+    // for every uniform frontier point there is a merged point with
+    // ≤ cost and ≥ accuracy — and the merged frontier stays strictly
+    // Pareto-monotone. First over random candidate clouds (the pure
+    // pruning logic), then on a real compiled model.
+    use pann::pann::pareto_prune;
+    let mut rng = Rng::new(108);
+    for _ in 0..CASES {
+        let nu = 1 + rng.below(30);
+        let nm = rng.below(30);
+        let uniform: Vec<(f64, f64)> = (0..nu).map(|_| (rng.f64() * 10.0, rng.f64())).collect();
+        let mixed: Vec<(f64, f64)> = (0..nm).map(|_| (rng.f64() * 10.0, rng.f64())).collect();
+        let uni_frontier = pareto_prune(uniform.clone(), |c| c.0, |c| c.1);
+        let mut union = uniform.clone();
+        union.extend(mixed.iter().copied());
+        let merged = pareto_prune(union, |c| c.0, |c| c.1);
+        for w in merged.windows(2) {
+            assert!(
+                w[1].0 > w[0].0 && w[1].1 > w[0].1,
+                "merged frontier not strictly monotone: {:?} then {:?}",
+                w[0],
+                w[1]
+            );
+        }
+        for u in &uni_frontier {
+            assert!(
+                merged.iter().any(|m| m.0 <= u.0 && m.1 >= u.1),
+                "uniform frontier point {u:?} not weakly dominated by the merged frontier"
+            );
+        }
+    }
+
+    // the same claim end-to-end on a real model: the per-layer search
+    // merges its mixed candidates into the very same pruning
+    use pann::data::{synth, Dataset};
+    use pann::nn::eval::batch_tensor;
+    use pann::nn::Model;
+    use pann::pann::{compile_menu, compile_menu_per_layer, PerLayerSearch};
+    use pann::quant::ActQuantMethod;
+    let mut model = Model::reference_cnn(53);
+    let ds = Dataset::from_synth(synth::digits(48, 54));
+    model.record_act_stats(&batch_tensor(&ds, 0, 24)).unwrap();
+    let uni = compile_menu(&model, &[2, 4], ActQuantMethod::BnStats, None, &ds, 2..=6).unwrap();
+    let mixed = compile_menu_per_layer(
+        &model,
+        &[2, 4],
+        ActQuantMethod::BnStats,
+        None,
+        &ds,
+        2..=6,
+        PerLayerSearch { sensitivity_samples: 12, max_mixed_points: 3 },
+    )
+    .unwrap();
+    for w in mixed.points.windows(2) {
+        assert!(w[1].gflips_per_sample > w[0].gflips_per_sample && w[1].val_acc > w[0].val_acc);
+    }
+    for u in &uni.points {
+        assert!(
+            mixed
+                .points
+                .iter()
+                .any(|m| m.gflips_per_sample <= u.gflips_per_sample && m.val_acc >= u.val_acc),
+            "uniform point {} not weakly dominated by the mixed frontier",
+            u.name
+        );
+    }
+}
+
+#[test]
 fn prop_trace_generator_deterministic_and_sorted() {
     // The scenario harness's foundation: every workload family, under
     // random generator knobs, must (a) regenerate byte-identically
